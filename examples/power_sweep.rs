@@ -1,0 +1,87 @@
+//! Regenerates the paper's evaluation artifacts: Table I and Figures
+//! 5, 6, 7, plus the area roll-up.  Writes CSVs next to the artifacts
+//! so the report tooling (python/tools/plot_figures.py) can render
+//! publication-style plots.
+//!
+//! Run:  cargo run --release --example power_sweep
+
+use ecmac::amul::metrics;
+use ecmac::coordinator::governor::AccuracyTable;
+use ecmac::power::{MultiplierEnergyProfile, PowerModel};
+use ecmac::report;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ecmac::runtime::default_artifacts_dir();
+
+    // Table I — exhaustive multiplier error statistics
+    let stats = metrics::full_table();
+    let summary = metrics::table_i(&stats);
+    println!("{}", report::table_i(&stats, &summary));
+
+    // power model calibrated on real operand traces when available
+    let pm = match trace_profile(&dir, 64) {
+        Some(profile) => PowerModel::calibrate(profile)?,
+        None => {
+            eprintln!("(artifacts missing; synthetic operand stream)");
+            PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(4000, 0xD1E5E1))?
+        }
+    };
+    let sweep = pm.sweep();
+    let acc = AccuracyTable::load(&dir.join("accuracy_sweep.json"))
+        .map(|t| t.accuracy)
+        .unwrap_or_else(|_| vec![f64::NAN; ecmac::amul::N_CONFIGS]);
+
+    println!("{}", report::fig5_power_improvement(&sweep));
+    println!("{}", report::fig6_power_accuracy(&sweep, &acc));
+    println!("{}", report::fig7_tradeoff(&sweep, &acc));
+    println!("{}", report::area_table());
+
+    // CSV outputs for plotting
+    if dir.exists() {
+        let mut t = report::TextTable::new(&["cfg", "er_pct", "mred_pct", "nmed_pct"]);
+        for s in &stats {
+            t.row(vec![
+                s.cfg.to_string(),
+                format!("{:.6}", s.er_pct),
+                format!("{:.6}", s.mred_pct),
+                format!("{:.6}", s.nmed_pct),
+            ]);
+        }
+        std::fs::write(dir.join("table1.csv"), t.to_csv())?;
+        std::fs::write(dir.join("power_sweep.csv"), report::sweep_csv(&sweep, &acc, &pm))?;
+        println!(
+            "wrote {} and {}",
+            dir.join("table1.csv").display(),
+            dir.join("power_sweep.csv").display()
+        );
+    }
+    Ok(())
+}
+
+/// Measure the multiplier energy profile on operand traces captured from
+/// the cycle-accurate datapath on real test images.
+fn trace_profile(
+    dir: &std::path::Path,
+    images: usize,
+) -> Option<MultiplierEnergyProfile> {
+    use ecmac::amul::Config;
+    use ecmac::datapath::{DatapathSim, MacObserver, Network};
+    let ds = ecmac::dataset::Dataset::load_test(dir).ok()?;
+    let net = Network::new(ecmac::weights::QuantWeights::load_artifacts(dir).ok()?);
+    struct Tracer {
+        traces: Vec<Vec<(u32, u32)>>,
+    }
+    impl MacObserver for Tracer {
+        fn on_mac(&mut self, neuron: usize, x: u8, w: u8) {
+            self.traces[neuron].push(((x & 0x7F) as u32, (w & 0x7F) as u32));
+        }
+    }
+    let mut tracer = Tracer {
+        traces: vec![Vec::new(); 10],
+    };
+    let mut sim = DatapathSim::new(&net, Config::ACCURATE);
+    for x in ds.features.iter().take(images) {
+        sim.run_image_observed(x, &mut tracer);
+    }
+    Some(MultiplierEnergyProfile::measure_traces(&tracer.traces))
+}

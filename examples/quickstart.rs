@@ -1,0 +1,75 @@
+//! Quickstart: load the artifacts, classify a handful of test images on
+//! every execution path, and show the power knob doing its job.
+//!
+//! Run:  cargo run --release --example quickstart
+//! (artifacts must exist: `make artifacts`)
+
+use ecmac::amul::Config;
+use ecmac::dataset::Dataset;
+use ecmac::datapath::{DatapathSim, Network};
+use ecmac::power::PowerModel;
+use ecmac::weights::QuantWeights;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ecmac::runtime::default_artifacts_dir();
+    println!("loading artifacts from {}", dir.display());
+    let ds = Dataset::load_test(&dir)?;
+    let net = Network::new(QuantWeights::load_artifacts(&dir)?);
+
+    // 1. classify a few images in accurate mode (native bit-exact model)
+    println!("\n-- native functional path (accurate mode) --");
+    for i in 0..5 {
+        let r = net.forward(&ds.features[i], Config::ACCURATE);
+        println!(
+            "image {i}: label {} -> pred {} {}",
+            ds.labels[i],
+            r.pred,
+            if r.pred == ds.labels[i] { "ok" } else { "WRONG" }
+        );
+    }
+
+    // 2. same image through the cycle-accurate datapath
+    println!("\n-- cycle-accurate datapath (5-state FSM, 10 physical neurons) --");
+    let mut sim = DatapathSim::new(&net, Config::ACCURATE);
+    let r = sim.run_image(&ds.features[0]);
+    println!(
+        "image 0: pred {} in {} cycles ({:.2} us at 100 MHz), {} MACs",
+        r.pred,
+        sim.stats.cycles,
+        sim.stats.cycles as f64 / 100.0,
+        sim.stats.mac_ops
+    );
+
+    // 3. the power knob: accuracy vs power across three configurations
+    println!("\n-- the dynamic power knob --");
+    let pm = PowerModel::calibrate_synthetic()?;
+    let n = 2000.min(ds.len());
+    for cfg_i in [0u32, 16, 32] {
+        let cfg = Config::new(cfg_i).unwrap();
+        let acc = net.accuracy(&ds.features[..n], &ds.labels[..n], cfg);
+        let b = pm.breakdown(cfg);
+        println!(
+            "{cfg:<16} accuracy {:.2}%   power {:.3} mW ({}{:.2}% vs accurate)",
+            acc * 100.0,
+            b.total_mw,
+            if b.network_saving_pct > 0.0 { "-" } else { "" },
+            b.network_saving_pct
+        );
+    }
+
+    // 4. the AOT JAX/Pallas executable via PJRT (if built)
+    println!("\n-- PJRT AOT path (JAX + Pallas lowered to HLO, loaded from rust) --");
+    match ecmac::runtime::Engine::load(&dir) {
+        Ok(engine) => {
+            let out = engine.execute(&ds.features[..5], Config::new(16).unwrap())?;
+            let native: Vec<u8> = ds.features[..5]
+                .iter()
+                .map(|x| net.forward(x, Config::new(16).unwrap()).pred)
+                .collect();
+            println!("pjrt preds   {:?}", out.preds);
+            println!("native preds {:?}  (bit-identical: {})", native, out.preds == native);
+        }
+        Err(e) => println!("engine unavailable: {e}"),
+    }
+    Ok(())
+}

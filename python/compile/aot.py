@@ -1,0 +1,319 @@
+"""AOT compile path: dataset -> training -> quantization -> HLO artifacts.
+
+Python runs exactly once (``make artifacts``); the rust coordinator is
+self-contained afterwards.  Interchange format is HLO *text*, not a
+serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit
+instruction ids which the xla crate's bundled XLA (xla_extension 0.5.1)
+rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts written to ``--outdir`` (default ../artifacts):
+
+  train-images.idx3 / train-labels.idx1      synthetic dataset (idx format)
+  test-images.idx3  / test-labels.idx1
+  feature-indices.txt                        the frozen 784 -> 62 wiring
+  weights_f32.json                           trained float parameters + history
+  weights_q.json                             sign-magnitude encoded parameters
+  model_approx_b{1,16,128}.hlo.txt           quantized approx fwd (Pallas inside)
+  model_ref_f32_b128.hlo.txt                 float reference fwd
+  golden_mul.json                            multiplier golden vectors (rust parity)
+  golden_mlp.json                            end-to-end MLP golden vectors
+  amul_metrics.json                          exhaustive ER/MRED/NMED per config
+  accuracy_sweep.json                        test accuracy for all 33 configs
+  manifest.json                              index of everything above
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset as ds
+from . import model
+from . import train as train_mod
+from .kernels import amul_spec as spec
+from .kernels import ref
+
+HLO_BATCH_SIZES = (1, 16, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_approx_hlo(outdir: str, batch: int) -> str:
+    """Lower the quantized approximate forward pass for one batch size."""
+
+    def fwd(x, w1, b1, w2, b2, cfg):
+        logits, hidden = model.forward_q_pallas(x, w1, b1, w2, b2, cfg[0])
+        return logits, hidden
+
+    i32 = jnp.int32
+    args = (
+        jax.ShapeDtypeStruct((batch, model.N_INPUTS), i32),
+        jax.ShapeDtypeStruct((model.N_INPUTS, model.N_HIDDEN), i32),
+        jax.ShapeDtypeStruct((model.N_HIDDEN,), i32),
+        jax.ShapeDtypeStruct((model.N_HIDDEN, model.N_OUTPUTS), i32),
+        jax.ShapeDtypeStruct((model.N_OUTPUTS,), i32),
+        jax.ShapeDtypeStruct((1,), i32),
+    )
+    text = to_hlo_text(jax.jit(fwd).lower(*args))
+    name = f"model_approx_b{batch}.hlo.txt"
+    with open(os.path.join(outdir, name), "w") as f:
+        f.write(text)
+    return name
+
+
+def export_ref_hlo(outdir: str, batch: int = 128) -> str:
+    """Lower the float reference forward pass."""
+
+    def fwd(x, w1, b1, w2, b2):
+        h = jnp.clip(x @ w1 + b1, 0.0, model.ACT_MAX)
+        return (h @ w2 + b2,)
+
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((batch, model.N_INPUTS), f32),
+        jax.ShapeDtypeStruct((model.N_INPUTS, model.N_HIDDEN), f32),
+        jax.ShapeDtypeStruct((model.N_HIDDEN,), f32),
+        jax.ShapeDtypeStruct((model.N_HIDDEN, model.N_OUTPUTS), f32),
+        jax.ShapeDtypeStruct((model.N_OUTPUTS,), f32),
+    )
+    text = to_hlo_text(jax.jit(fwd).lower(*args))
+    name = f"model_ref_f32_b{batch}.hlo.txt"
+    with open(os.path.join(outdir, name), "w") as f:
+        f.write(text)
+    return name
+
+
+def golden_multiplier_vectors(n_per_cfg: int = 256, seed: int = 7):
+    """Random (a, b, cfg, product) vectors from the scalar golden model."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for cfg in range(spec.N_CONFIGS):
+        a = rng.integers(0, 256, n_per_cfg)
+        b = rng.integers(0, 256, n_per_cfg)
+        prods = [
+            spec.mul8_sm_approx(int(x), int(w), cfg) for x, w in zip(a, b)
+        ]
+        out.append(
+            {
+                "cfg": cfg,
+                "a": a.tolist(),
+                "b": b.tolist(),
+                "product": prods,
+                "levels": spec.column_levels(cfg),
+            }
+        )
+    return out
+
+
+def golden_mlp_vectors(params_q, x_enc, labels, cfgs=(0, 1, 16, 32)):
+    """End-to-end integer pipeline vectors for the rust datapath simulator."""
+    vec = {"x": np.asarray(x_enc).tolist(), "labels": np.asarray(labels).tolist()}
+    cases = []
+    for cfg in cfgs:
+        logits, hidden = model.forward_q_ref(params_q, x_enc, cfg)
+        cases.append(
+            {
+                "cfg": int(cfg),
+                "logits": np.asarray(logits).tolist(),
+                "hidden": np.asarray(hidden).tolist(),
+                "pred": model.predict_q(logits).tolist(),
+            }
+        )
+    vec["cases"] = cases
+    return vec
+
+
+def amul_metric_table():
+    """Exhaustive ER/MRED/NMED for every configuration (Table I input)."""
+    rows = []
+    for cfg in range(spec.N_CONFIGS):
+        er, mred, nmed = spec.exhaustive_metrics(cfg)
+        rows.append(
+            {
+                "cfg": cfg,
+                "er_pct": er,
+                "mred_pct": mred,
+                "nmed_pct": nmed,
+                "levels": spec.column_levels(cfg),
+            }
+        )
+    return rows
+
+
+def accuracy_sweep(params_q, x_enc, labels, batch: int = 4096):
+    """Quantized test accuracy for all 33 configurations (jitted)."""
+
+    @jax.jit
+    def fwd(xb, cfg):
+        logits, _ = model.forward_q_ref(params_q, xb, cfg)
+        return jnp.argmax(logits, axis=-1)
+
+    n = len(x_enc)
+    x_enc = jnp.asarray(x_enc, dtype=jnp.int32)
+    labels = np.asarray(labels)
+    accs = []
+    for cfg in range(spec.N_CONFIGS):
+        correct = 0
+        for lo in range(0, n, batch):
+            pred = np.asarray(fwd(x_enc[lo : lo + batch], jnp.int32(cfg)))
+            correct += int(np.sum(pred == labels[lo : lo + batch]))
+        accs.append({"cfg": cfg, "accuracy": correct / n})
+    return accs
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias; ignored")
+    ap.add_argument("--epochs", type=int, default=25)
+    ap.add_argument("--n-train", type=int, default=60000)
+    ap.add_argument("--n-test", type=int, default=10000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-sweep", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    outdir = args.outdir
+    os.makedirs(outdir, exist_ok=True)
+
+    print("[aot] dataset ...")
+    tr_i, tr_l, te_i, te_l, feat = ds.build_cached(
+        outdir, args.n_train, args.n_test, force=args.force
+    )
+
+    wpath = os.path.join(outdir, "weights_f32.json")
+    if os.path.exists(wpath) and not args.force:
+        print("[aot] reusing trained weights")
+        with open(wpath) as f:
+            saved = json.load(f)
+        params = {
+            k: jnp.asarray(np.array(saved[k], dtype=np.float32))
+            for k in ("w1", "b1", "w2", "b2")
+        }
+        history = saved.get("history", [])
+    else:
+        print("[aot] training ...")
+        x_train, _ = train_mod.features_from_images(tr_i, feat)
+        x_test, _ = train_mod.features_from_images(te_i, feat)
+        params, history = train_mod.train(
+            x_train,
+            tr_l.astype(np.int32),
+            x_test,
+            te_l.astype(np.int32),
+            epochs=args.epochs,
+            seed=args.seed,
+        )
+        with open(wpath, "w") as f:
+            json.dump(
+                {
+                    "w1": np.asarray(params["w1"]).tolist(),
+                    "b1": np.asarray(params["b1"]).tolist(),
+                    "w2": np.asarray(params["w2"]).tolist(),
+                    "b2": np.asarray(params["b2"]).tolist(),
+                    "history": history,
+                },
+                f,
+            )
+
+    params_q = model.quantize_params(params)
+    _, test_mags = train_mod.features_from_images(te_i, feat)
+
+    print("[aot] quantized weights ...")
+    with open(os.path.join(outdir, "weights_q.json"), "w") as f:
+        json.dump(
+            {
+                "format": "sign-magnitude-8bit",
+                "scale": 128,
+                "n_inputs": model.N_INPUTS,
+                "n_hidden": model.N_HIDDEN,
+                "n_outputs": model.N_OUTPUTS,
+                "w1": params_q["w1"].tolist(),
+                "b1": params_q["b1"].tolist(),
+                "w2": params_q["w2"].tolist(),
+                "b2": params_q["b2"].tolist(),
+                "feature_indices": feat.tolist(),
+            },
+            f,
+        )
+
+    print("[aot] HLO exports ...")
+    hlo_files = [export_approx_hlo(outdir, b) for b in HLO_BATCH_SIZES]
+    hlo_files.append(export_ref_hlo(outdir))
+
+    print("[aot] golden vectors ...")
+    with open(os.path.join(outdir, "golden_mul.json"), "w") as f:
+        json.dump(golden_multiplier_vectors(), f)
+    with open(os.path.join(outdir, "golden_mlp.json"), "w") as f:
+        json.dump(
+            golden_mlp_vectors(params_q, test_mags[:32], te_l[:32]), f
+        )
+
+    print("[aot] multiplier metric table ...")
+    with open(os.path.join(outdir, "amul_metrics.json"), "w") as f:
+        json.dump(amul_metric_table(), f, indent=1)
+
+    if not args.skip_sweep:
+        print("[aot] accuracy sweep over 33 configs ...")
+        sweep = accuracy_sweep(params_q, test_mags, te_l)
+        with open(os.path.join(outdir, "accuracy_sweep.json"), "w") as f:
+            json.dump(sweep, f, indent=1)
+        acc0 = sweep[0]["accuracy"]
+        worst = min(s["accuracy"] for s in sweep[1:])
+        print(
+            f"[aot] accurate acc {acc0 * 100:.2f}%  worst approx {worst * 100:.2f}%"
+            f"  (paper: 89.67% / 88.75%)"
+        )
+
+    manifest = {
+        "network": {
+            "inputs": model.N_INPUTS,
+            "hidden": model.N_HIDDEN,
+            "outputs": model.N_OUTPUTS,
+            "physical_neurons": 10,
+            "configs": spec.N_CONFIGS,
+        },
+        "hlo": {
+            "approx": {str(b): f"model_approx_b{b}.hlo.txt" for b in HLO_BATCH_SIZES},
+            "ref_f32": "model_ref_f32_b128.hlo.txt",
+            "param_order_approx": ["x", "w1", "b1", "w2", "b2", "cfg"],
+            "param_order_ref": ["x", "w1", "b1", "w2", "b2"],
+            "outputs_approx": ["logits", "hidden"],
+        },
+        "dataset": {
+            "train_images": "train-images.idx3",
+            "train_labels": "train-labels.idx1",
+            "test_images": "test-images.idx3",
+            "test_labels": "test-labels.idx1",
+            "feature_indices": "feature-indices.txt",
+            "n_train": int(len(tr_i)),
+            "n_test": int(len(te_i)),
+        },
+        "weights": {"float": "weights_f32.json", "quantized": "weights_q.json"},
+        "golden": {"mul": "golden_mul.json", "mlp": "golden_mlp.json"},
+        "metrics": {
+            "amul": "amul_metrics.json",
+            "accuracy_sweep": "accuracy_sweep.json",
+        },
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("[aot] done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Frozen specification of the error-configurable approximate multiplier.
+
+This module is the single source of truth for the multiplier's bit-level
+behaviour.  Three independent implementations must agree with it exactly:
+
+  * ``ref.py``            — vectorized pure-jnp oracle (used by pytest)
+  * ``approx_mul.py``     — the Pallas kernel lowered into the AOT HLO
+  * ``rust/src/amul/``    — the bit-level rust model driving the
+                            cycle-accurate datapath simulator
+
+Design
+------
+The paper's MAC multiplies 8-bit sign-magnitude operands: 1 sign bit and
+N = 7 magnitude bits.  Signs are handled by a single XOR outside the
+array, so the array itself is a 7x7 *unsigned* multiplier with
+2N - 1 = 13 partial-product columns (weights 2^0 .. 2^12).
+
+A 6-bit error-control input selects configuration 0 (accurate) or one of
+32 approximate configurations (1..32).  Approximation is applied per
+partial-product column at one of three levels, in the spirit of the
+carry-disregarding / approximate-compressor designs the paper builds on
+(refs [14], [16], [17]):
+
+  level 0 — exact: full adder tree, carries propagate.
+  level 1 — pairwise-OR compressor: consecutive partial products are
+            OR-ed in pairs (a 2:1 approximate compressor); the reduced
+            set is then summed exactly.  Half the column's adder cells
+            are gated off.
+  level 2 — full-OR, carry-disregarding: the column collapses to a
+            single OR of all its partial products and injects no
+            carries.  All the column's adder cells are gated off.
+
+Configuration c >= 1 maps to the 5-bit mask m = c - 1.  The column
+levels are::
+
+    lv[1] = 2, lv[2] = 1                      (base, every approx cfg)
+    m bit 0  ->  lv[2] += 1
+    m bit 1  ->  lv[3] += 2
+    m bit 2  ->  lv[4] += 2
+    m bit 3  ->  lv[5] += 2
+    m bit 4  ->  lv[6] += 1, lv[7] += 1
+    (all levels saturate at 2)
+
+Higher mask bits gate more (and wider) columns, so the mask value tracks
+both the injected error and the saved power — this is the "dynamic power
+control" knob the paper exposes.
+
+Exhaustive error statistics of this scheme over all 128x128 operand
+pairs (computed by ``python/tools/tune_amul.py`` and locked in
+``tests/test_amul_spec.py``):
+
+    ER    min  9.375 %   max 63.84 %   avg 47.9 %    (paper:  9.96 / 61.83 / 43.56)
+    MRED  min  0.0425 %  max  2.99 %   avg  1.52 %   (paper:  0.055 / 3.68 / 2.13)
+    NMED  min  0.0023 %  max  0.427 %  avg  0.215 %  (paper:  0.0028 / 0.364 / 0.224)
+"""
+
+from __future__ import annotations
+
+N_BITS = 7  # magnitude bits per operand
+MAG_MAX = (1 << N_BITS) - 1  # 127
+N_COLS = 2 * N_BITS - 1  # 13 partial-product columns
+N_CONFIGS = 33  # accurate (0) + 32 approximate (1..32)
+
+# (column, increment) effects of each mask bit, and the always-on base.
+BASE_LEVELS = {1: 2, 2: 1}
+BIT_INCREMENTS = [
+    {2: 1},  # mask bit 0
+    {3: 2},  # mask bit 1
+    {4: 2},  # mask bit 2
+    {5: 2},  # mask bit 3
+    {6: 1, 7: 1},  # mask bit 4
+]
+LEVEL_MAX = 2
+
+# Partial products of column k, as (i, j) bit-index pairs with i + j = k,
+# ordered by ascending i.  The pairwise-OR compressor (level 1) pairs them
+# in this order: (pp0|pp1), (pp2|pp3), ..., with an odd leftover passed
+# through.  This ordering is part of the frozen spec.
+COLUMN_PPS = [
+    [(i, k - i) for i in range(N_BITS) if 0 <= k - i < N_BITS] for k in range(N_COLS)
+]
+
+
+def column_levels(cfg: int) -> list[int]:
+    """Per-column approximation level for configuration ``cfg`` (0..32)."""
+    if not 0 <= cfg < N_CONFIGS:
+        raise ValueError(f"cfg must be in [0, {N_CONFIGS}), got {cfg}")
+    levels = [0] * N_COLS
+    if cfg == 0:
+        return levels
+    for col, lv in BASE_LEVELS.items():
+        levels[col] = lv
+    mask = cfg - 1
+    for g, incs in enumerate(BIT_INCREMENTS):
+        if (mask >> g) & 1:
+            for col, d in incs.items():
+                levels[col] = min(LEVEL_MAX, levels[col] + d)
+    return levels
+
+
+def mul7_approx(a: int, b: int, cfg: int) -> int:
+    """Approximate 7x7 unsigned multiply (scalar golden model).
+
+    ``a`` and ``b`` are magnitudes in [0, 127]; result is a 14-bit
+    magnitude.  Exact for cfg == 0.
+    """
+    if not 0 <= a <= MAG_MAX or not 0 <= b <= MAG_MAX:
+        raise ValueError("operands must be 7-bit magnitudes")
+    levels = column_levels(cfg)
+    total = 0
+    for k in range(N_COLS):
+        pps = [((a >> i) & 1) & ((b >> j) & 1) for (i, j) in COLUMN_PPS[k]]
+        lv = levels[k]
+        if lv == 0:
+            contrib = sum(pps)
+        elif lv == 1:
+            contrib = 0
+            for p in range(0, len(pps) - 1, 2):
+                contrib += pps[p] | pps[p + 1]
+            if len(pps) % 2:
+                contrib += pps[-1]
+        else:
+            contrib = 0
+            for p in pps:
+                contrib |= p
+        total += contrib << k
+    return total
+
+
+def mul8_sm_approx(x: int, w: int, cfg: int) -> int:
+    """Approximate signed multiply of 8-bit sign-magnitude operands.
+
+    ``x`` and ``w`` are raw 8-bit encodings (MSB = sign, low 7 bits =
+    magnitude).  Returns the signed integer product (15-bit range).
+    The sign is the XOR of the operand signs; a zero magnitude always
+    yields +0, matching the hardware comparison logic.
+    """
+    sx, mx = (x >> 7) & 1, x & MAG_MAX
+    sw, mw = (w >> 7) & 1, w & MAG_MAX
+    mag = mul7_approx(mx, mw, cfg)
+    return -mag if (sx ^ sw) and mag != 0 else mag
+
+
+def encode_sm(v: int) -> int:
+    """Encode a signed integer in [-127, 127] as 8-bit sign-magnitude."""
+    if not -MAG_MAX <= v <= MAG_MAX:
+        raise ValueError(f"value {v} out of sign-magnitude range")
+    return (0x80 | -v) if v < 0 else v
+
+
+def decode_sm(enc: int) -> int:
+    """Decode an 8-bit sign-magnitude encoding to a signed integer."""
+    mag = enc & MAG_MAX
+    return -mag if (enc >> 7) & 1 else mag
+
+
+def exhaustive_metrics(cfg: int) -> tuple[float, float, float]:
+    """(ER %, MRED %, NMED %) over all 128x128 magnitude pairs."""
+    import numpy as np
+
+    a = np.arange(128, dtype=np.int64)[:, None]
+    b = np.arange(128, dtype=np.int64)[None, :]
+    exact = a * b
+    approx = mul7_approx_np(a, b, cfg)
+    err = np.abs(approx - exact)
+    er = float(np.mean(err != 0) * 100.0)
+    nz = exact != 0
+    mred = float(np.mean(err[nz] / exact[nz]) * 100.0)
+    nmed = float(np.mean(err) / (MAG_MAX * MAG_MAX) * 100.0)
+    return er, mred, nmed
+
+
+def mul7_approx_np(a, b, cfg: int):
+    """Vectorized numpy twin of :func:`mul7_approx` (broadcasts a, b)."""
+    import numpy as np
+
+    levels = column_levels(cfg)
+    total = np.zeros(np.broadcast_shapes(np.shape(a), np.shape(b)), dtype=np.int64)
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    for k in range(N_COLS):
+        pps = [((a >> i) & 1) * ((b >> j) & 1) for (i, j) in COLUMN_PPS[k]]
+        lv = levels[k]
+        if lv == 0:
+            contrib = sum(pps)
+        elif lv == 1:
+            contrib = np.zeros_like(total)
+            for p in range(0, len(pps) - 1, 2):
+                contrib = contrib + (pps[p] | pps[p + 1])
+            if len(pps) % 2:
+                contrib = contrib + pps[-1]
+        else:
+            contrib = np.zeros_like(total)
+            for p in pps:
+                contrib = contrib | p
+        total = total + (contrib << k)
+    return total

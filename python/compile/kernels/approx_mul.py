@@ -1,0 +1,132 @@
+"""Layer-1 Pallas kernel: error-configurable approximate MAC matmul.
+
+This is the compute hot-spot of the paper's system: every weighted sum
+in the MLP runs through the error-configurable approximate multiplier.
+The kernel computes one batch-tile of ``x_enc @ w_enc`` where each
+scalar multiply is the bit-level approximate multiplier from
+``amul_spec`` and the accumulation is exact, mirroring the hardware MAC
+(multiplier array -> sign XOR -> add/sub accumulator).
+
+Hardware adaptation (GPU/ASIC -> TPU thinking, see DESIGN.md):
+the paper's knob gates partial-product *columns* of a 7x7 array
+multiplier.  On a TPU the analogous structure is a bit-plane
+decomposition: the kernel materialises the 13 partial-product column
+planes as vector ops in VMEM and selects per-column exact/approximate
+compression with the runtime ``cfg`` scalar, so one compiled executable
+serves all 33 configurations — exactly like the taped-out circuit.
+
+The kernel is lowered with ``interpret=True`` so the AOT HLO contains
+plain vector ops executable by any PJRT backend (the rust CPU client);
+real-TPU Mosaic lowering is a compile-only target in this image.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import amul_spec as spec
+
+MAG_MAX = spec.MAG_MAX
+DEFAULT_BLOCK_B = 16
+
+
+def decode_levels(cfg):
+    """Per-column levels from the config scalar, in plain jnp bit ops.
+
+    This is the decoder ROM in front of the column-gating drivers.  It
+    runs *outside* the Pallas kernel: the xla_extension 0.5.1 runtime
+    the rust loader embeds mis-executes a dynamic scalar index into a
+    kernel operand ref (the lookup silently returns garbage), whereas
+    plain-HLO bit arithmetic round-trips exactly — see
+    DESIGN.md §AOT-gotchas.  Returns a (13,) int32 vector.
+    """
+    cfg = jnp.asarray(cfg, dtype=jnp.int32)
+    mask = jnp.maximum(cfg - 1, 0)
+    levels = []
+    for k in range(spec.N_COLS):
+        lv = jnp.int32(spec.BASE_LEVELS.get(k, 0))
+        for g, incs in enumerate(spec.BIT_INCREMENTS):
+            if k in incs:
+                lv = lv + ((mask >> g) & 1) * jnp.int32(incs[k])
+        lv = jnp.minimum(lv, spec.LEVEL_MAX)
+        levels.append(jnp.where(cfg == 0, jnp.int32(0), lv))
+    return jnp.stack(levels)
+
+
+def _approx_mul_planes(x, w, levels):
+    """Elementwise approximate multiply of magnitude planes.
+
+    x, w: int32 arrays (broadcastable), magnitudes in [0, 127].
+    levels: (13,) traced int32 column levels.
+    """
+    total = x * 0 + w * 0  # broadcast-shaped zero
+    for k in range(spec.N_COLS):
+        pps = [((x >> i) & 1) & ((w >> j) & 1) for (i, j) in spec.COLUMN_PPS[k]]
+        exact = functools.reduce(lambda u, v: u + v, pps)
+        pair = None
+        for p in range(0, len(pps) - 1, 2):
+            t = pps[p] | pps[p + 1]
+            pair = t if pair is None else pair + t
+        if len(pps) % 2:
+            pair = pps[-1] if pair is None else pair + pps[-1]
+        orall = functools.reduce(lambda u, v: u | v, pps)
+        lv = levels[k]
+        contrib = jnp.where(lv == 0, exact, jnp.where(lv == 1, pair, orall))
+        total = total + (contrib << k)
+    return total
+
+
+def _matmul_kernel(x_ref, w_ref, levels_ref, o_ref):
+    """Pallas kernel body: one batch tile of the approximate matmul."""
+    x = x_ref[...]  # (TB, I) int32 sign-magnitude
+    w = w_ref[...]  # (I, J) int32 sign-magnitude
+    levels = levels_ref[...]  # (13,) decoded column levels
+    xm = (x & MAG_MAX)[:, :, None]  # (TB, I, 1)
+    wm = (w & MAG_MAX)[None, :, :]  # (1, I, J)
+    sign = ((x >> 7)[:, :, None] ^ (w >> 7)[None, :, :]) & 1
+    mag = _approx_mul_planes(xm, wm, levels)  # (TB, I, J)
+    prod = jnp.where(sign == 1, -mag, mag)
+    o_ref[...] = jnp.sum(prod, axis=1, dtype=jnp.int32)
+
+
+def approx_matmul_pallas(x_enc, w_enc, cfg, *, block_b: int = DEFAULT_BLOCK_B):
+    """Approximate sign-magnitude matmul via the Pallas kernel.
+
+    Args:
+      x_enc: (B, I) int32 sign-magnitude inputs.
+      w_enc: (I, J) int32 sign-magnitude weights.
+      cfg: scalar int32 configuration in [0, 32].
+      block_b: batch tile size (B is padded to a multiple of it).
+
+    Returns: (B, J) int32 exact-accumulated approximate products.
+    """
+    x_enc = jnp.asarray(x_enc, dtype=jnp.int32)
+    w_enc = jnp.asarray(w_enc, dtype=jnp.int32)
+    b, i = x_enc.shape
+    i2, j = w_enc.shape
+    assert i == i2, f"inner dims mismatch: {i} vs {i2}"
+    levels = decode_levels(cfg)
+
+    tb = min(block_b, b) if b > 0 else 1
+    pad = (-b) % tb
+    if pad:
+        x_enc = jnp.pad(x_enc, ((0, pad), (0, 0)))
+    nb = x_enc.shape[0] // tb
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((tb, i), lambda g: (g, 0)),
+            pl.BlockSpec((i, j), lambda g: (0, 0)),
+            pl.BlockSpec((spec.N_COLS,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, j), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((x_enc.shape[0], j), jnp.int32),
+        interpret=True,
+    )(x_enc, w_enc, levels)
+    return out[:b]

@@ -1,0 +1,142 @@
+"""Pure-jnp oracle for the approximate multiplier and the quantized MLP.
+
+Everything here is reference semantics: straightforward, vectorized,
+and independent of the Pallas kernel in ``approx_mul.py``.  pytest
+asserts the Pallas kernel matches these functions bit-for-bit, and the
+rust datapath simulator is cross-checked against golden vectors
+generated from this module.
+
+Fixed-point convention (shared with the rust simulator)
+-------------------------------------------------------
+  value      encoding                         scale
+  --------   ------------------------------   -------
+  input x    8-bit sign-magnitude (sign = 0)  x = x_q / 128
+  weight w   8-bit sign-magnitude             w = dec(w_q) / 128
+  bias b     8-bit sign-magnitude             b = dec(b_q) / 128
+  product    15-bit signed                    x*w * 128^2
+  acc        21-bit signed                    pre-activation * 128^2
+  hidden h   8-bit, sign = 0 after ReLU       h = h_q / 128
+
+The bias is left-shifted 7 bits into the accumulator domain before the
+activation, and the saturation stage maps the 21-bit accumulator back to
+8 bits via an arithmetic right shift by 7 and a clamp to [0, 127]
+(ReLU folds into the clamp's lower bound).  Output-layer logits are the
+raw 21-bit accumulators; the argmax circuit operates on those directly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import amul_spec as spec
+
+MAG_MAX = spec.MAG_MAX
+
+
+def _column_levels_traced(cfg):
+    """Per-column approximation levels with ``cfg`` a traced int32 scalar."""
+    cfg = jnp.asarray(cfg, dtype=jnp.int32)
+    mask = jnp.maximum(cfg - 1, 0)
+    levels = []
+    for k in range(spec.N_COLS):
+        lv = jnp.int32(spec.BASE_LEVELS.get(k, 0))
+        for g, incs in enumerate(spec.BIT_INCREMENTS):
+            if k in incs:
+                bit = (mask >> g) & 1
+                lv = lv + bit * jnp.int32(incs[k])
+        lv = jnp.minimum(lv, spec.LEVEL_MAX)
+        # configuration 0 is exact everywhere
+        levels.append(jnp.where(cfg == 0, jnp.int32(0), lv))
+    return levels
+
+
+def mul7_approx(a, b, cfg):
+    """Vectorized approximate 7x7 unsigned multiply.
+
+    ``a``/``b``: int32 arrays of magnitudes in [0, 127] (broadcastable);
+    ``cfg``: scalar int32 configuration in [0, 32].  Returns int32.
+    """
+    a = jnp.asarray(a, dtype=jnp.int32)
+    b = jnp.asarray(b, dtype=jnp.int32)
+    levels = _column_levels_traced(cfg)
+    total = jnp.zeros(jnp.broadcast_shapes(a.shape, b.shape), dtype=jnp.int32)
+    for k in range(spec.N_COLS):
+        pps = [((a >> i) & 1) & ((b >> j) & 1) for (i, j) in spec.COLUMN_PPS[k]]
+        exact = sum(pps)
+        pair = jnp.zeros_like(total)
+        for p in range(0, len(pps) - 1, 2):
+            pair = pair + (pps[p] | pps[p + 1])
+        if len(pps) % 2:
+            pair = pair + pps[-1]
+        orall = jnp.zeros_like(total)
+        for p in pps:
+            orall = orall | p
+        lv = levels[k]
+        contrib = jnp.where(lv == 0, exact, jnp.where(lv == 1, pair, orall))
+        total = total + (contrib << k)
+    return total
+
+
+def mul8_sm_approx(x_enc, w_enc, cfg):
+    """Vectorized signed multiply of 8-bit sign-magnitude encodings."""
+    x_enc = jnp.asarray(x_enc, dtype=jnp.int32)
+    w_enc = jnp.asarray(w_enc, dtype=jnp.int32)
+    sign = ((x_enc >> 7) ^ (w_enc >> 7)) & 1
+    mag = mul7_approx(x_enc & MAG_MAX, w_enc & MAG_MAX, cfg)
+    return jnp.where(sign == 1, -mag, mag)
+
+
+def approx_matmul(x_enc, w_enc, cfg):
+    """Approximate sign-magnitude matmul: (B, I) x (I, J) -> (B, J) int32.
+
+    Every scalar product uses the error-configurable multiplier; the
+    accumulation is exact (the hardware accumulator adds/subtracts
+    full-width), matching the paper's MAC structure.
+    """
+    x_enc = jnp.asarray(x_enc, dtype=jnp.int32)[:, :, None]  # (B, I, 1)
+    w_enc = jnp.asarray(w_enc, dtype=jnp.int32)[None, :, :]  # (1, I, J)
+    prod = mul8_sm_approx(x_enc, w_enc, cfg)  # (B, I, J)
+    return jnp.sum(prod, axis=1, dtype=jnp.int32)
+
+
+def decode_sm(enc):
+    """Vectorized sign-magnitude decode."""
+    enc = jnp.asarray(enc, dtype=jnp.int32)
+    mag = enc & MAG_MAX
+    return jnp.where((enc >> 7) & 1 == 1, -mag, mag)
+
+
+def encode_sm(v):
+    """Vectorized sign-magnitude encode of signed ints in [-127, 127]."""
+    v = jnp.asarray(v, dtype=jnp.int32)
+    return jnp.where(v < 0, 0x80 | (-v), v)
+
+
+def saturate_activation(acc):
+    """ReLU + 21->8-bit saturation: clamp(acc >> 7, 0, 127)."""
+    return jnp.clip(jnp.asarray(acc, dtype=jnp.int32) >> 7, 0, MAG_MAX)
+
+
+def mlp_forward_q(x_enc, w1_enc, b1_enc, w2_enc, b2_enc, cfg):
+    """Quantized hardware-faithful MLP forward pass.
+
+    Args:
+      x_enc:  (B, 62) int32 sign-magnitude inputs (sign bit 0).
+      w1_enc: (62, 30), b1_enc: (30,) — hidden layer parameters.
+      w2_enc: (30, 10), b2_enc: (10,) — output layer parameters.
+      cfg: scalar int32 multiplier configuration in [0, 32].
+
+    Returns:
+      (logits, hidden): logits (B, 10) int32 21-bit accumulators,
+      hidden (B, 30) int32 8-bit saturated activations.
+    """
+    acc1 = approx_matmul(x_enc, w1_enc, cfg) + (decode_sm(b1_enc)[None, :] << 7)
+    hidden = saturate_activation(acc1)
+    acc2 = approx_matmul(hidden, w2_enc, cfg) + (decode_sm(b2_enc)[None, :] << 7)
+    return acc2, hidden
+
+
+def mlp_forward_f32(x, w1, b1, w2, b2):
+    """Float reference MLP (training-time semantics)."""
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return h @ w2 + b2, h

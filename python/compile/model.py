@@ -1,0 +1,119 @@
+"""Layer-2 JAX model: the paper's 62-30-10 MLP, float and quantized.
+
+The float model is the training-time surrogate: it mirrors the hardware
+pipeline's clipped-ReLU (the 8-bit saturation stage clamps hidden
+activations at 127/128) so post-training quantization to the sign-
+magnitude fixed-point format loses little accuracy.
+
+The quantized model is the bit-exact integer pipeline; its matmuls run
+through the Layer-1 Pallas kernel (``kernels.approx_mul``) so the whole
+forward pass — including the error-configurable multiplier — lowers into
+a single HLO module for the rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.approx_mul import approx_matmul_pallas
+
+N_INPUTS = 62
+N_HIDDEN = 30
+N_OUTPUTS = 10
+
+# hardware activation ceiling: saturation clamps at 127 / 128
+ACT_MAX = 127.0 / 128.0
+# weights/biases must encode into 8-bit sign-magnitude at scale 1/128
+W_MAX = 127.0 / 128.0
+
+
+def init_params(seed: int = 0):
+    """He-style init, scaled conservatively for the clipped range."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w1 = jax.random.normal(k1, (N_INPUTS, N_HIDDEN)) * np.sqrt(2.0 / N_INPUTS) * 0.5
+    w2 = jax.random.normal(k2, (N_HIDDEN, N_OUTPUTS)) * np.sqrt(2.0 / N_HIDDEN) * 0.5
+    return {
+        "w1": w1.astype(jnp.float32),
+        "b1": jnp.zeros((N_HIDDEN,), jnp.float32),
+        "w2": w2.astype(jnp.float32),
+        "b2": jnp.zeros((N_OUTPUTS,), jnp.float32),
+    }
+
+
+def clip_params(params):
+    """Project parameters into the representable sign-magnitude range."""
+    return {k: jnp.clip(v, -W_MAX, W_MAX) for k, v in params.items()}
+
+
+def forward_f32(params, x):
+    """Hardware-aware float forward: clipped ReLU at the saturation level.
+
+    ``x``: (B, 62) float in [0, 1).  Returns logits (B, 10).
+    """
+    h = jnp.clip(x @ params["w1"] + params["b1"], 0.0, ACT_MAX)
+    return h @ params["w2"] + params["b2"]
+
+
+def quantize_params(params):
+    """Float params -> sign-magnitude int32 encodings (scale 1/128)."""
+
+    def q(v):
+        s = np.clip(np.round(np.asarray(v) * 128.0), -127, 127).astype(np.int32)
+        return np.where(s < 0, 0x80 | (-s), s).astype(np.int32)
+
+    return {
+        "w1": q(params["w1"]),
+        "b1": q(params["b1"]),
+        "w2": q(params["w2"]),
+        "b2": q(params["b2"]),
+    }
+
+
+def forward_q_ref(params_q, x_enc, cfg):
+    """Quantized forward via the pure-jnp oracle (testing)."""
+    return ref.mlp_forward_q(
+        x_enc, params_q["w1"], params_q["b1"], params_q["w2"], params_q["b2"], cfg
+    )
+
+
+def forward_q_pallas(x_enc, w1, b1, w2, b2, cfg):
+    """Quantized forward via the Pallas kernel — the AOT entry point.
+
+    Flat-argument signature (no dicts) so ``jax.jit(...).lower()``
+    produces an HLO module with a stable parameter order for the rust
+    runtime: (x, w1, b1, w2, b2, cfg) -> (logits, hidden).
+    """
+    acc1 = approx_matmul_pallas(x_enc, w1, cfg) + (ref.decode_sm(b1)[None, :] << 7)
+    hidden = ref.saturate_activation(acc1)
+    acc2 = approx_matmul_pallas(hidden, w2, cfg) + (ref.decode_sm(b2)[None, :] << 7)
+    return acc2, hidden
+
+
+def predict_q(logits) -> np.ndarray:
+    """Argmax over 21-bit accumulators; ties resolve to the lowest index
+    (matching the hardware maximum-value comparator chain)."""
+    return np.asarray(jnp.argmax(jnp.asarray(logits), axis=-1))
+
+
+def accuracy_q(params_q, x_enc, labels, cfg, batch: int = 2048, use_pallas=False):
+    """Classification accuracy of the quantized pipeline."""
+    n = len(x_enc)
+    correct = 0
+    for lo in range(0, n, batch):
+        xb = x_enc[lo : lo + batch]
+        if use_pallas:
+            logits, _ = forward_q_pallas(
+                xb,
+                params_q["w1"],
+                params_q["b1"],
+                params_q["w2"],
+                params_q["b2"],
+                cfg,
+            )
+        else:
+            logits, _ = forward_q_ref(params_q, xb, cfg)
+        correct += int(np.sum(predict_q(logits) == np.asarray(labels[lo : lo + batch])))
+    return correct / n

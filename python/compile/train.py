@@ -1,0 +1,152 @@
+"""Training loop for the 62-30-10 MLP (build-time only, pure JAX).
+
+No optax in this environment, so Adam is implemented inline.  Training
+uses the hardware-aware float surrogate (clipped ReLU at the saturation
+ceiling, parameters projected into the sign-magnitude representable
+range after every step) so post-training quantization is nearly
+lossless.
+
+Run standalone:  python -m compile.train --outdir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset as ds
+from . import model
+
+
+def cross_entropy(params, x, y):
+    logits = model.forward_f32(params, x)
+    logz = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logz, y[:, None], axis=1))
+
+
+@jax.jit
+def _adam_step(params, m, v, t, x, y, lr):
+    beta1, beta2, eps = 0.9, 0.999, 1e-8
+    loss, grads = jax.value_and_grad(cross_entropy)(params, x, y)
+    new_params, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_m[k] = beta1 * m[k] + (1 - beta1) * grads[k]
+        new_v[k] = beta2 * v[k] + (1 - beta2) * grads[k] ** 2
+        mhat = new_m[k] / (1 - beta1**t)
+        vhat = new_v[k] / (1 - beta2**t)
+        new_params[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    new_params = model.clip_params(new_params)
+    return new_params, new_m, new_v, loss
+
+
+def train(
+    x_train,
+    y_train,
+    x_test,
+    y_test,
+    *,
+    epochs: int = 20,
+    batch: int = 256,
+    lr: float = 2e-3,
+    seed: int = 0,
+    log=print,
+):
+    """Train and return (params, history)."""
+    params = model.init_params(seed)
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in params.items()}
+    rng = np.random.default_rng(seed)
+    n = len(x_train)
+    x_train = jnp.asarray(x_train)
+    y_train = jnp.asarray(y_train)
+    history = []
+    t = 0
+    t0 = time.time()
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        epoch_loss = 0.0
+        steps = 0
+        for lo in range(0, n - batch + 1, batch):
+            idx = order[lo : lo + batch]
+            t += 1
+            params, m, v, loss = _adam_step(
+                params, m, v, float(t), x_train[idx], y_train[idx], lr
+            )
+            epoch_loss += float(loss)
+            steps += 1
+        acc = float(
+            np.mean(
+                model.predict_q(model.forward_f32(params, jnp.asarray(x_test)))
+                == np.asarray(y_test)
+            )
+        )
+        history.append(
+            {
+                "epoch": epoch,
+                "loss": epoch_loss / max(steps, 1),
+                "test_acc_f32": acc,
+                "elapsed_s": time.time() - t0,
+            }
+        )
+        log(
+            f"epoch {epoch:3d}  loss {history[-1]['loss']:.4f}  "
+            f"f32 test acc {acc * 100:.2f}%"
+        )
+    return params, history
+
+
+def features_from_images(images, feat_idx):
+    """28x28 uint8 -> float features in [0, 1) at 7-bit resolution.
+
+    The float value is exactly mag/128 with mag = pixel >> 1, so the
+    float surrogate sees precisely what the quantized pipeline sees.
+    """
+    feats = ds.reduce_features(images, feat_idx)
+    mags = ds.quantize_inputs(feats)
+    return mags.astype(np.float32) / 128.0, mags
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--n-train", type=int, default=60000)
+    ap.add_argument("--n-test", type=int, default=10000)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    tr_i, tr_l, te_i, te_l, feat = ds.build_cached(
+        args.outdir, args.n_train, args.n_test
+    )
+    x_train, _ = features_from_images(tr_i, feat)
+    x_test, test_mags = features_from_images(te_i, feat)
+    params, history = train(
+        x_train, tr_l.astype(np.int32), x_test, te_l.astype(np.int32),
+        epochs=args.epochs, seed=args.seed,
+    )
+    params_q = model.quantize_params(params)
+    acc_q = model.accuracy_q(params_q, test_mags, te_l, 0)
+    print(f"quantized accurate-mode test accuracy: {acc_q * 100:.2f}%")
+
+    os.makedirs(args.outdir, exist_ok=True)
+    out = {
+        "w1": np.asarray(params["w1"]).tolist(),
+        "b1": np.asarray(params["b1"]).tolist(),
+        "w2": np.asarray(params["w2"]).tolist(),
+        "b2": np.asarray(params["b2"]).tolist(),
+        "history": history,
+        "quantized_accurate_acc": acc_q,
+    }
+    with open(os.path.join(args.outdir, "weights_f32.json"), "w") as f:
+        json.dump(out, f)
+    print(f"wrote {args.outdir}/weights_f32.json")
+
+
+if __name__ == "__main__":
+    main()

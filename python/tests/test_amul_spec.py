@@ -1,0 +1,207 @@
+"""Tests freezing the approximate-multiplier specification.
+
+These tests lock the bit-level behaviour and the exhaustive error
+statistics of the scheme.  If any of them fail after an edit, the
+multiplier no longer matches the golden vectors shipped to the rust
+side — regenerate everything or revert.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import amul_spec as spec
+
+
+class TestColumnStructure:
+    def test_column_count(self):
+        assert spec.N_COLS == 13
+        assert len(spec.COLUMN_PPS) == 13
+
+    def test_pp_counts_are_triangular(self):
+        counts = [len(p) for p in spec.COLUMN_PPS]
+        assert counts == [1, 2, 3, 4, 5, 6, 7, 6, 5, 4, 3, 2, 1]
+
+    def test_pp_indices_valid(self):
+        for k, pps in enumerate(spec.COLUMN_PPS):
+            for i, j in pps:
+                assert i + j == k
+                assert 0 <= i < 7 and 0 <= j < 7
+
+    def test_pp_order_ascending_i(self):
+        for pps in spec.COLUMN_PPS:
+            assert [i for i, _ in pps] == sorted(i for i, _ in pps)
+
+
+class TestLevels:
+    def test_cfg0_all_exact(self):
+        assert spec.column_levels(0) == [0] * 13
+
+    def test_cfg1_base_only(self):
+        lv = spec.column_levels(1)
+        assert lv[1] == 2 and lv[2] == 1
+        assert all(lv[k] == 0 for k in range(13) if k not in (1, 2))
+
+    def test_cfg32_max_approx(self):
+        lv = spec.column_levels(32)
+        assert lv == [0, 2, 2, 2, 2, 2, 1, 1, 0, 0, 0, 0, 0]
+
+    def test_levels_bounded(self):
+        for cfg in range(spec.N_CONFIGS):
+            for l in spec.column_levels(cfg):
+                assert 0 <= l <= spec.LEVEL_MAX
+
+    def test_mask_bits_monotone_in_gated_columns(self):
+        """Setting a mask bit never reduces any column's level."""
+        for m in range(32):
+            for g in range(5):
+                if not (m >> g) & 1:
+                    lo = spec.column_levels(1 + m)
+                    hi = spec.column_levels(1 + (m | (1 << g)))
+                    assert all(a <= b for a, b in zip(lo, hi))
+
+    def test_invalid_cfg_raises(self):
+        with pytest.raises(ValueError):
+            spec.column_levels(33)
+        with pytest.raises(ValueError):
+            spec.column_levels(-1)
+
+
+class TestScalarMultiplier:
+    def test_cfg0_exact_exhaustive(self):
+        for a in range(0, 128, 7):
+            for b in range(128):
+                assert spec.mul7_approx(a, b, 0) == a * b
+
+    def test_zero_annihilates_all_configs(self):
+        for cfg in range(spec.N_CONFIGS):
+            for v in (0, 1, 64, 127):
+                assert spec.mul7_approx(0, v, cfg) == 0
+                assert spec.mul7_approx(v, 0, cfg) == 0
+
+    def test_approx_error_bounded(self):
+        """Approximation only loses carries/counts: result <= exact and
+        the deficit is bounded by the sum of approximated column widths."""
+        rng = np.random.default_rng(3)
+        for cfg in range(1, spec.N_CONFIGS):
+            levels = spec.column_levels(cfg)
+            bound = sum(
+                (len(spec.COLUMN_PPS[k]) - 1) << k
+                for k in range(13)
+                if levels[k] > 0
+            )
+            for _ in range(200):
+                a, b = rng.integers(0, 128, 2)
+                exact = int(a) * int(b)
+                approx = spec.mul7_approx(int(a), int(b), cfg)
+                assert approx <= exact
+                assert exact - approx <= bound
+
+    def test_commutative_accurate_mode(self):
+        rng = np.random.default_rng(4)
+        for _ in range(300):
+            a, b = map(int, rng.integers(0, 128, 2))
+            assert spec.mul7_approx(a, b, 0) == spec.mul7_approx(b, a, 0)
+
+    def test_pairwise_or_levels_not_commutative(self):
+        """Level-1 compressors pair partial products in i-order, so
+        odd-sized columns break operand symmetry — a documented hardware
+        property (operand roles are fixed: x = activation, w = weight).
+        Locked here so an accidental "fix" on one side of the stack gets
+        caught by the golden vectors."""
+        asym = sum(
+            spec.mul7_approx(a, b, 1) != spec.mul7_approx(b, a, 1)
+            for a in range(0, 128, 3)
+            for b in range(0, 128, 5)
+        )
+        assert asym > 0
+
+    @given(
+        a=st.integers(0, 127),
+        b=st.integers(0, 127),
+        cfg=st.integers(0, 32),
+    )
+    @settings(max_examples=300, deadline=None)
+    def test_scalar_matches_numpy_twin(self, a, b, cfg):
+        assert spec.mul7_approx(a, b, cfg) == int(spec.mul7_approx_np(a, b, cfg))
+
+
+class TestSignMagnitude:
+    @given(v=st.integers(-127, 127))
+    @settings(max_examples=300, deadline=None)
+    def test_encode_decode_roundtrip(self, v):
+        assert spec.decode_sm(spec.encode_sm(v)) == v
+
+    def test_encode_range_check(self):
+        with pytest.raises(ValueError):
+            spec.encode_sm(128)
+        with pytest.raises(ValueError):
+            spec.encode_sm(-128)
+
+    @given(
+        x=st.integers(-127, 127),
+        w=st.integers(-127, 127),
+    )
+    @settings(max_examples=300, deadline=None)
+    def test_signed_mul_cfg0_exact(self, x, w):
+        enc_x, enc_w = spec.encode_sm(x), spec.encode_sm(w)
+        assert spec.mul8_sm_approx(enc_x, enc_w, 0) == x * w
+
+    def test_sign_xor(self):
+        # (-a) * b == a * (-b) == -(a * b) for all configs
+        for cfg in (0, 5, 32):
+            p = spec.mul8_sm_approx(spec.encode_sm(100), spec.encode_sm(55), cfg)
+            n1 = spec.mul8_sm_approx(spec.encode_sm(-100), spec.encode_sm(55), cfg)
+            n2 = spec.mul8_sm_approx(spec.encode_sm(100), spec.encode_sm(-55), cfg)
+            pp = spec.mul8_sm_approx(spec.encode_sm(-100), spec.encode_sm(-55), cfg)
+            assert n1 == n2 == -p
+            assert pp == p
+
+    def test_negative_zero_normalised(self):
+        # 0x80 encodes -0; products with zero magnitude are +0
+        assert spec.mul8_sm_approx(0x80, spec.encode_sm(77), 0) == 0
+
+
+class TestExhaustiveMetrics:
+    """Lock the Table-I-shaped statistics of the frozen scheme."""
+
+    @pytest.fixture(scope="class")
+    def table(self):
+        return [spec.exhaustive_metrics(cfg) for cfg in range(spec.N_CONFIGS)]
+
+    def test_cfg0_no_error(self, table):
+        assert table[0] == (0.0, 0.0, 0.0)
+
+    def test_er_range(self, table):
+        ers = [r[0] for r in table[1:]]
+        assert min(ers) == pytest.approx(9.375, abs=0.01)
+        assert max(ers) == pytest.approx(63.84, abs=0.05)
+
+    def test_mred_range(self, table):
+        mreds = [r[1] for r in table[1:]]
+        assert min(mreds) == pytest.approx(0.0425, abs=0.001)
+        assert max(mreds) == pytest.approx(2.994, abs=0.01)
+
+    def test_nmed_range(self, table):
+        nmeds = [r[2] for r in table[1:]]
+        assert min(nmeds) == pytest.approx(0.00233, abs=0.0001)
+        assert max(nmeds) == pytest.approx(0.4268, abs=0.005)
+
+    def test_averages_near_paper(self, table):
+        """The averages must stay in the paper's ballpark (Table I)."""
+        ers = [r[0] for r in table[1:]]
+        mreds = [r[1] for r in table[1:]]
+        nmeds = [r[2] for r in table[1:]]
+        assert 40.0 < np.mean(ers) < 55.0  # paper: 43.556
+        assert 1.0 < np.mean(mreds) < 2.5  # paper: 2.125
+        assert 0.15 < np.mean(nmeds) < 0.30  # paper: 0.224
+
+    def test_nmed_weakly_increases_with_mask_weight(self, table):
+        """More gating bits -> at least as much average error (NMED)."""
+        by_weight = {}
+        for cfg in range(1, 33):
+            w = bin(cfg - 1).count("1")
+            by_weight.setdefault(w, []).append(table[cfg][2])
+        means = [np.mean(by_weight[w]) for w in sorted(by_weight)]
+        assert all(a < b for a, b in zip(means, means[1:]))

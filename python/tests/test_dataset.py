@@ -1,0 +1,107 @@
+"""Synthetic dataset generator + feature reduction + idx container."""
+
+import numpy as np
+import pytest
+
+from compile import dataset as ds
+
+
+class TestGenerator:
+    def test_shapes_and_dtypes(self):
+        imgs, labels = ds.generate(50, seed=1)
+        assert imgs.shape == (50, 28, 28)
+        assert imgs.dtype == np.uint8
+        assert labels.shape == (50,)
+        assert set(np.unique(labels)).issubset(set(range(10)))
+
+    def test_deterministic_given_seed(self):
+        a_i, a_l = ds.generate(20, seed=42)
+        b_i, b_l = ds.generate(20, seed=42)
+        np.testing.assert_array_equal(a_i, b_i)
+        np.testing.assert_array_equal(a_l, b_l)
+
+    def test_different_seeds_differ(self):
+        a_i, _ = ds.generate(20, seed=1)
+        b_i, _ = ds.generate(20, seed=2)
+        assert not np.array_equal(a_i, b_i)
+
+    def test_images_have_signal(self):
+        imgs, _ = ds.generate(30, seed=3)
+        # every image should have some bright pixels (a digit)
+        assert (imgs.reshape(30, -1).max(axis=1) > 100).all()
+
+    def test_digits_are_distinguishable(self):
+        """Mean images of distinct digits must differ substantially."""
+        imgs, labels = ds.generate(400, seed=4)
+        means = {}
+        for d in range(10):
+            sel = imgs[labels == d]
+            if len(sel):
+                means[d] = sel.mean(axis=0)
+        keys = list(means)
+        diffs = [
+            np.abs(means[a] - means[b]).mean()
+            for i, a in enumerate(keys)
+            for b in keys[i + 1 :]
+        ]
+        assert min(diffs) > 3.0
+
+
+class TestFeatureSelection:
+    @pytest.fixture(scope="class")
+    def images(self):
+        return ds.generate(500, seed=5)[0]
+
+    def test_selects_exactly_62_unique_sorted(self, images):
+        idx = ds.select_features(images)
+        assert len(idx) == 62
+        assert len(set(idx.tolist())) == 62
+        assert (np.diff(idx) > 0).all()
+        assert idx.min() >= 0 and idx.max() < 784
+
+    def test_declustering(self, images):
+        """No two selected pixels within Chebyshev distance 1."""
+        idx = ds.select_features(images)
+        coords = [(int(p) // 28, int(p) % 28) for p in idx]
+        for i, (r1, c1) in enumerate(coords):
+            for r2, c2 in coords[i + 1 :]:
+                assert max(abs(r1 - r2), abs(c1 - c2)) >= 2
+
+    def test_selected_pixels_carry_variance(self, images):
+        idx = ds.select_features(images)
+        flat = images.reshape(len(images), -1).astype(np.float32) / 255.0
+        var = flat.var(axis=0)
+        # selected pixels should be far more informative than average
+        assert var[idx].mean() > var.mean() * 1.5
+
+
+class TestQuantizeReduce:
+    def test_reduce_features_picks_columns(self):
+        imgs = np.arange(2 * 784, dtype=np.uint8).reshape(2, 28, 28)
+        idx = np.array([0, 10, 100], dtype=np.int32)
+        out = ds.reduce_features(imgs, idx)
+        assert out.shape == (2, 3)
+        assert out[0, 1] == imgs.reshape(2, -1)[0, 10]
+
+    def test_quantize_inputs_is_7bit(self):
+        feats = np.array([[0, 1, 2, 254, 255]], dtype=np.uint8)
+        q = ds.quantize_inputs(feats)
+        assert q.tolist() == [[0, 0, 1, 127, 127]]
+
+
+class TestIdxFormat:
+    def test_images_roundtrip(self, tmp_path):
+        imgs, labels = ds.generate(10, seed=6)
+        p_i = str(tmp_path / "i.idx3")
+        p_l = str(tmp_path / "l.idx1")
+        ds.write_idx_images(p_i, imgs)
+        ds.write_idx_labels(p_l, labels)
+        np.testing.assert_array_equal(ds.read_idx_images(p_i), imgs)
+        np.testing.assert_array_equal(ds.read_idx_labels(p_l), labels)
+
+    def test_build_cached_reuses(self, tmp_path):
+        out = str(tmp_path)
+        r1 = ds.build_cached(out, n_train=30, n_test=10, seed=9)
+        r2 = ds.build_cached(out, n_train=30, n_test=10, seed=9)
+        np.testing.assert_array_equal(r1[0], r2[0])
+        np.testing.assert_array_equal(r1[4], r2[4])

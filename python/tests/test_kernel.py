@@ -1,0 +1,133 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+The kernel must match ``ref.approx_matmul`` bit-for-bit for every
+configuration, shape, and padding situation; hypothesis sweeps the shape
+space.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import amul_spec as spec
+from compile.kernels import ref
+from compile.kernels.approx_mul import approx_matmul_pallas, decode_levels
+
+
+def rand_sm(rng, shape):
+    """Random sign-magnitude encodings (full 8-bit range)."""
+    return rng.integers(0, 256, shape).astype(np.int32)
+
+
+class TestDecodeLevels:
+    def test_matches_spec_for_all_configs(self):
+        for cfg in range(spec.N_CONFIGS):
+            got = np.asarray(decode_levels(cfg)).tolist()
+            assert got == spec.column_levels(cfg), cfg
+
+
+class TestKernelParity:
+    @pytest.mark.parametrize("cfg", [0, 1, 2, 9, 16, 17, 31, 32])
+    def test_matches_ref_fixed_shapes(self, cfg):
+        rng = np.random.default_rng(cfg)
+        x = rand_sm(rng, (5, 62))
+        w = rand_sm(rng, (62, 30))
+        got = np.asarray(approx_matmul_pallas(x, w, cfg))
+        want = np.asarray(ref.approx_matmul(x, w, cfg))
+        np.testing.assert_array_equal(got, want)
+
+    def test_cfg0_equals_exact_matmul(self):
+        rng = np.random.default_rng(7)
+        x = rand_sm(rng, (4, 62))
+        w = rand_sm(rng, (62, 30))
+        got = np.asarray(approx_matmul_pallas(x, w, 0))
+        xd = np.asarray(ref.decode_sm(x))
+        wd = np.asarray(ref.decode_sm(w))
+        np.testing.assert_array_equal(got, xd @ wd)
+
+    @given(
+        b=st.integers(1, 40),
+        i=st.integers(1, 70),
+        j=st.integers(1, 32),
+        cfg=st.integers(0, 32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_matches_ref_hypothesis_shapes(self, b, i, j, cfg, seed):
+        rng = np.random.default_rng(seed)
+        x = rand_sm(rng, (b, i))
+        w = rand_sm(rng, (i, j))
+        got = np.asarray(approx_matmul_pallas(x, w, cfg))
+        want = np.asarray(ref.approx_matmul(x, w, cfg))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("b", [1, 3, 15, 16, 17, 33])
+    def test_padding_boundaries(self, b):
+        """Batch sizes around the block boundary must round-trip."""
+        rng = np.random.default_rng(b)
+        x = rand_sm(rng, (b, 62))
+        w = rand_sm(rng, (62, 30))
+        got = np.asarray(approx_matmul_pallas(x, w, 17))
+        want = np.asarray(ref.approx_matmul(x, w, 17))
+        assert got.shape == (b, 30)
+        np.testing.assert_array_equal(got, want)
+
+    def test_block_size_invariance(self):
+        rng = np.random.default_rng(3)
+        x = rand_sm(rng, (10, 62))
+        w = rand_sm(rng, (62, 30))
+        a = np.asarray(approx_matmul_pallas(x, w, 5, block_b=4))
+        b = np.asarray(approx_matmul_pallas(x, w, 5, block_b=16))
+        np.testing.assert_array_equal(a, b)
+
+    def test_traced_cfg_under_jit(self):
+        """cfg must work as a runtime (traced) argument — the AOT path."""
+        import jax
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(11)
+        x = rand_sm(rng, (2, 62))
+        w = rand_sm(rng, (62, 30))
+
+        @jax.jit
+        def fwd(x, w, cfg):
+            return approx_matmul_pallas(x, w, cfg)
+
+        for cfg in [0, 13, 32]:
+            got = np.asarray(fwd(x, w, jnp.int32(cfg)))
+            want = np.asarray(ref.approx_matmul(x, w, cfg))
+            np.testing.assert_array_equal(got, want)
+
+
+class TestRefInternalConsistency:
+    """ref.py against the scalar spec (transitively validates the kernel)."""
+
+    @given(
+        cfg=st.integers(0, 32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_ref_matmul_matches_scalar_spec(self, cfg, seed):
+        rng = np.random.default_rng(seed)
+        x = rand_sm(rng, (2, 7))
+        w = rand_sm(rng, (7, 3))
+        got = np.asarray(ref.approx_matmul(x, w, cfg))
+        for b in range(2):
+            for o in range(3):
+                acc = sum(
+                    spec.mul8_sm_approx(int(x[b, i]), int(w[i, o]), cfg)
+                    for i in range(7)
+                )
+                assert got[b, o] == acc
+
+    def test_saturate_activation(self):
+        assert int(ref.saturate_activation(np.int32(-100))) == 0
+        assert int(ref.saturate_activation(np.int32(127 << 7))) == 127
+        assert int(ref.saturate_activation(np.int32(1 << 20))) == 127
+        assert int(ref.saturate_activation(np.int32((5 << 7) + 127))) == 5
+
+    @given(v=st.integers(-127, 127))
+    @settings(max_examples=200, deadline=None)
+    def test_encode_decode_vectorized(self, v):
+        assert int(ref.decode_sm(ref.encode_sm(np.int32(v)))) == v

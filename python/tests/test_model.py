@@ -1,0 +1,103 @@
+"""L2 model semantics: quantization, forward-pass parity, hardware limits."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w1": rng.uniform(-0.9, 0.9, (model.N_INPUTS, model.N_HIDDEN)).astype(np.float32),
+        "b1": rng.uniform(-0.5, 0.5, model.N_HIDDEN).astype(np.float32),
+        "w2": rng.uniform(-0.9, 0.9, (model.N_HIDDEN, model.N_OUTPUTS)).astype(np.float32),
+        "b2": rng.uniform(-0.5, 0.5, model.N_OUTPUTS).astype(np.float32),
+    }
+
+
+def rand_inputs(seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 128, (n, model.N_INPUTS)).astype(np.int32)
+
+
+class TestQuantization:
+    def test_encodings_are_valid_sign_magnitude(self):
+        q = model.quantize_params(rand_params())
+        for name, arr in q.items():
+            a = np.asarray(arr)
+            assert a.min() >= 0 and a.max() <= 255, name
+            mags = a & 0x7F
+            assert mags.max() <= 127, name
+
+    def test_quantization_roundtrip_error_bounded(self):
+        p = rand_params()
+        q = model.quantize_params(p)
+        w1_back = np.asarray(ref.decode_sm(q["w1"])) / 128.0
+        assert np.abs(w1_back - p["w1"]).max() <= 0.5 / 128.0 + 1e-7
+
+    @given(v=st.floats(-0.99, 0.99, allow_nan=False))
+    @settings(max_examples=200, deadline=None)
+    def test_scalar_quant_within_half_lsb(self, v):
+        q = model.quantize_params(
+            {
+                "w1": np.full((model.N_INPUTS, model.N_HIDDEN), v, np.float32),
+                "b1": np.zeros(model.N_HIDDEN, np.float32),
+                "w2": np.zeros((model.N_HIDDEN, model.N_OUTPUTS), np.float32),
+                "b2": np.zeros(model.N_OUTPUTS, np.float32),
+            }
+        )
+        back = float(np.asarray(ref.decode_sm(q["w1"][0][0]))) / 128.0
+        assert abs(back - v) <= 0.5 / 128.0 + 1e-7
+
+
+class TestForwardParity:
+    @pytest.mark.parametrize("cfg", [0, 9, 32])
+    def test_pallas_forward_matches_ref(self, cfg):
+        q = model.quantize_params(rand_params(3))
+        x = rand_inputs(4, 5)
+        ref_logits, ref_hidden = model.forward_q_ref(q, x, cfg)
+        pl_logits, pl_hidden = model.forward_q_pallas(
+            x, q["w1"], q["b1"], q["w2"], q["b2"], cfg
+        )
+        np.testing.assert_array_equal(np.asarray(ref_logits), np.asarray(pl_logits))
+        np.testing.assert_array_equal(np.asarray(ref_hidden), np.asarray(pl_hidden))
+
+    def test_hidden_respects_8bit_range(self):
+        q = model.quantize_params(rand_params(5))
+        x = rand_inputs(6, 16)
+        _, hidden = model.forward_q_ref(q, x, 0)
+        h = np.asarray(hidden)
+        assert h.min() >= 0 and h.max() <= 127
+
+    def test_logits_respect_21bit_range(self):
+        q = model.quantize_params(rand_params(6))
+        x = rand_inputs(7, 16)
+        logits, _ = model.forward_q_ref(q, x, 0)
+        l = np.asarray(logits)
+        assert np.abs(l).max() < (1 << 20)
+
+    def test_accuracy_helper_counts(self):
+        q = model.quantize_params(rand_params(8))
+        x = rand_inputs(9, 32)
+        logits, _ = model.forward_q_ref(q, x, 0)
+        labels = model.predict_q(logits)
+        assert model.accuracy_q(q, x, labels, 0) == 1.0
+
+    def test_float_surrogate_tracks_quantized(self):
+        """The clipped-ReLU float model and the integer pipeline must
+        agree closely (scale 1/128 quantization only)."""
+        p = rand_params(10)
+        q = model.quantize_params(p)
+        x_q = rand_inputs(11, 64)
+        x_f = x_q.astype(np.float32) / 128.0
+        f_logits = np.asarray(model.forward_f32(p, x_f))
+        q_logits = np.asarray(model.forward_q_ref(q, x_q, 0)[0]).astype(np.float64)
+        q_scaled = q_logits / (128.0 * 128.0)
+        # correlation must be extremely high even if absolute values
+        # differ by quantization noise
+        corr = np.corrcoef(f_logits.ravel(), q_scaled.ravel())[0, 1]
+        assert corr > 0.999, corr

@@ -1,0 +1,105 @@
+"""Training loop + AOT export machinery (small, fast configurations)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, dataset as ds, model, train as tr
+from compile.kernels import amul_spec as spec
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    imgs, labels = ds.generate(600, seed=20)
+    feat = ds.select_features(imgs)
+    x, mags = tr.features_from_images(imgs, feat)
+    return x, mags, labels.astype(np.int32)
+
+
+class TestTraining:
+    def test_loss_decreases(self, tiny_data):
+        x, _, y = tiny_data
+        params, hist = tr.train(
+            x[:500], y[:500], x[500:], y[500:], epochs=3, batch=64, log=lambda *_: None
+        )
+        assert hist[-1]["loss"] < hist[0]["loss"]
+
+    def test_params_stay_in_representable_range(self, tiny_data):
+        x, _, y = tiny_data
+        params, _ = tr.train(
+            x[:300], y[:300], x[300:400], y[300:400], epochs=2, batch=64,
+            log=lambda *_: None,
+        )
+        for k, v in params.items():
+            assert np.abs(np.asarray(v)).max() <= model.W_MAX + 1e-6, k
+
+    def test_accuracy_beats_chance(self, tiny_data):
+        x, mags, y = tiny_data
+        params, _ = tr.train(
+            x[:500], y[:500], x[500:], y[500:], epochs=4, batch=64,
+            log=lambda *_: None,
+        )
+        q = model.quantize_params(params)
+        acc = model.accuracy_q(q, mags[500:], y[500:], 0)
+        assert acc > 0.22  # far above the 10% chance floor even on 500 samples
+
+    def test_features_from_images_scale_contract(self, tiny_data):
+        x, mags, _ = tiny_data
+        # float features must be exactly mag / 128
+        np.testing.assert_allclose(x, mags.astype(np.float32) / 128.0)
+
+
+class TestAotHelpers:
+    def test_to_hlo_text_produces_module(self):
+        def fn(a, b):
+            return (a @ b,)
+
+        s = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+        text = aot.to_hlo_text(jax.jit(fn).lower(s, s))
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_golden_multiplier_vectors_match_spec(self):
+        vecs = aot.golden_multiplier_vectors(n_per_cfg=16, seed=1)
+        assert len(vecs) == spec.N_CONFIGS
+        for v in vecs:
+            assert v["levels"] == spec.column_levels(v["cfg"])
+            for a, b, p in zip(v["a"], v["b"], v["product"]):
+                assert spec.mul8_sm_approx(int(a), int(b), v["cfg"]) == p
+
+    def test_amul_metric_table_shape(self):
+        rows = aot.amul_metric_table()
+        assert len(rows) == spec.N_CONFIGS
+        assert rows[0]["er_pct"] == 0.0
+        assert rows[32]["er_pct"] > 60.0
+
+    def test_export_approx_hlo_writes_parseable_text(self, tmp_path):
+        name = aot.export_approx_hlo(str(tmp_path), batch=2)
+        text = open(os.path.join(str(tmp_path), name)).read()
+        assert text.startswith("HloModule")
+        # all six parameters must survive into the entry layout
+        header = text.splitlines()[0]
+        assert header.count("s32") >= 6
+
+    def test_golden_mlp_vectors_consistent(self, tiny_data):
+        _, mags, y = tiny_data
+        params, _ = tr.train(
+            jnp.asarray(mags[:200], jnp.float32) / 128.0,
+            y[:200],
+            jnp.asarray(mags[200:260], jnp.float32) / 128.0,
+            y[200:260],
+            epochs=1,
+            batch=32,
+            log=lambda *_: None,
+        )
+        q = model.quantize_params(params)
+        g = aot.golden_mlp_vectors(q, mags[:4], y[:4], cfgs=(0, 32))
+        assert len(g["cases"]) == 2
+        for case in g["cases"]:
+            logits, hidden = model.forward_q_ref(q, mags[:4], case["cfg"])
+            np.testing.assert_array_equal(np.asarray(logits), np.array(case["logits"]))
+            np.testing.assert_array_equal(np.asarray(hidden), np.array(case["hidden"]))

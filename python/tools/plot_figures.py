@@ -1,0 +1,99 @@
+"""Render publication-style PNGs of the paper's figures from the CSVs
+written by `cargo run --release --example power_sweep`.
+
+Usage:  python python/tools/plot_figures.py [--artifacts DIR] [--out DIR]
+Outputs fig5.png, fig6.png, fig7.png, table1_er.png in --out.
+"""
+
+import argparse
+import csv
+import os
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt
+
+
+def load_csv(path):
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="artifacts")
+    ap.add_argument("--out", default="artifacts")
+    args = ap.parse_args()
+
+    sweep_path = os.path.join(args.artifacts, "power_sweep.csv")
+    table1_path = os.path.join(args.artifacts, "table1.csv")
+    if not os.path.exists(sweep_path):
+        raise SystemExit(
+            f"{sweep_path} missing — run `cargo run --release --example power_sweep`"
+        )
+    sweep = load_csv(sweep_path)
+    cfgs = [int(r["cfg"]) for r in sweep]
+    power = [float(r["total_mw"]) for r in sweep]
+    saving = [float(r["network_saving_pct"]) for r in sweep]
+    acc = [float(r["accuracy"]) * 100 for r in sweep]
+    os.makedirs(args.out, exist_ok=True)
+
+    # Fig. 5 — improvement per configuration
+    fig, ax = plt.subplots(figsize=(9, 3.2))
+    ax.bar(cfgs[1:], saving[1:], color="#2b6cb0")
+    ax.axhline(13.33, ls="--", c="crimson", lw=1, label="paper max 13.33%")
+    ax.set_xlabel("MAC configuration")
+    ax.set_ylabel("overall power improvement [%]")
+    ax.set_title("Fig. 5 — power improvement per configuration")
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(args.out, "fig5.png"), dpi=150)
+
+    # Fig. 6 — power + accuracy per configuration
+    fig, ax1 = plt.subplots(figsize=(9, 3.6))
+    ax1.plot(cfgs, power, "o-", c="#2b6cb0", label="power [mW]")
+    ax1.axhline(5.55, ls=":", c="#2b6cb0", lw=1)
+    ax1.axhline(4.81, ls=":", c="#2b6cb0", lw=1)
+    ax1.set_xlabel("MAC configuration")
+    ax1.set_ylabel("network power [mW]", color="#2b6cb0")
+    ax2 = ax1.twinx()
+    ax2.plot(cfgs, acc, "s--", c="#c05621", label="accuracy [%]")
+    ax2.set_ylabel("test accuracy [%]", color="#c05621")
+    ax1.set_title("Fig. 6 — power and accuracy per configuration")
+    fig.tight_layout()
+    fig.savefig(os.path.join(args.out, "fig6.png"), dpi=150)
+
+    # Fig. 7 — trade-off scatter
+    fig, ax = plt.subplots(figsize=(5.2, 4))
+    ax.scatter(power[1:], acc[1:], c="#2b6cb0", label="approximate configs")
+    ax.scatter(power[:1], acc[:1], c="crimson", marker="*", s=160, label="accurate")
+    ax.set_xlabel("network power [mW]")
+    ax.set_ylabel("test accuracy [%]")
+    ax.set_title("Fig. 7 — accuracy vs power trade-off")
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(args.out, "fig7.png"), dpi=150)
+
+    # Table I visual — ER/MRED per config
+    if os.path.exists(table1_path):
+        t1 = load_csv(table1_path)
+        c = [int(r["cfg"]) for r in t1]
+        er = [float(r["er_pct"]) for r in t1]
+        mred = [float(r["mred_pct"]) for r in t1]
+        fig, ax1 = plt.subplots(figsize=(9, 3.2))
+        ax1.bar(c[1:], er[1:], color="#4a5568", label="ER [%]")
+        ax1.set_ylabel("ER [%]")
+        ax1.set_xlabel("MAC configuration")
+        ax2 = ax1.twinx()
+        ax2.plot(c[1:], mred[1:], "o-", c="#c05621", label="MRED [%]")
+        ax2.set_ylabel("MRED [%]", color="#c05621")
+        ax1.set_title("Table I — multiplier error statistics per configuration")
+        fig.tight_layout()
+        fig.savefig(os.path.join(args.out, "table1_er.png"), dpi=150)
+
+    print(f"wrote figures to {args.out}/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,229 @@
+//! Benchmark suite (custom harness — criterion is unavailable offline).
+//!
+//! One section per paper table/figure plus the perf-critical hot paths:
+//!
+//!   table1/*      — exhaustive error-metric computation (Table I)
+//!   fig5-7/*      — netlist switching-activity profiling (the data
+//!                   behind Figures 5, 6 and 7)
+//!   l1/*          — multiplier hot path (bit-level vs table-driven)
+//!   datapath/*    — functional + cycle-accurate image classification
+//!   runtime/*     — PJRT AOT executable throughput per batch size
+//!   coordinator/* — end-to-end serving throughput under the governor
+//!
+//! Run:  cargo bench            (all)
+//!       cargo bench -- --filter datapath --quick
+//!       cargo bench -- --json bench.json
+
+use ecmac::amul::{metrics, mul7_approx, Config, MulTable};
+use ecmac::coordinator::governor::{AccuracyTable, Governor, Policy};
+use ecmac::coordinator::{Backend, Coordinator, CoordinatorConfig, NativeBackend};
+use ecmac::dataset::Dataset;
+use ecmac::datapath::{DatapathSim, Network};
+use ecmac::netlist::multiplier::MultiplierNet;
+use ecmac::netlist::Sim;
+use ecmac::power::{MultiplierEnergyProfile, PowerModel};
+use ecmac::testkit::bench::{BenchConfig, Bencher};
+use ecmac::util::rng::Pcg32;
+use ecmac::weights::QuantWeights;
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let cfg = BenchConfig::from_args();
+    let mut b = Bencher::new(cfg);
+
+    bench_table1(&mut b);
+    bench_netlist(&mut b);
+    bench_l1(&mut b);
+    bench_datapath(&mut b);
+    bench_runtime(&mut b);
+    bench_coordinator(&mut b);
+
+    b.finish();
+}
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = ecmac::runtime::default_artifacts_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn test_network() -> Network {
+    match artifacts().and_then(|d| QuantWeights::load_artifacts(&d).ok()) {
+        Some(w) => Network::new(w),
+        None => {
+            let mut rng = Pcg32::new(7);
+            let mut gen = |n: usize| -> Vec<u8> {
+                (0..n).map(|_| (rng.below(255)) as u8).collect()
+            };
+            Network::new(QuantWeights {
+                w1: gen(62 * 30),
+                b1: gen(30),
+                w2: gen(30 * 10),
+                b2: gen(10),
+            })
+        }
+    }
+}
+
+fn test_inputs(n: usize) -> Vec<[u8; 62]> {
+    match artifacts().and_then(|d| Dataset::load_test(&d).ok()) {
+        Some(ds) => (0..n).map(|i| ds.features[i % ds.len()]).collect(),
+        None => {
+            let mut rng = Pcg32::new(3);
+            (0..n)
+                .map(|_| {
+                    let mut x = [0u8; 62];
+                    for v in x.iter_mut() {
+                        *v = rng.below(128) as u8;
+                    }
+                    x
+                })
+                .collect()
+        }
+    }
+}
+
+/// Table I: exhaustive ER/MRED/NMED for one config (16384 multiplies).
+fn bench_table1(b: &mut Bencher) {
+    b.throughput(128 * 128)
+        .bench("table1/exhaustive_metrics_cfg32", || {
+            black_box(metrics::exhaustive(Config::MAX_APPROX));
+        });
+    b.throughput(33 * 128 * 128)
+        .bench("table1/full_table_33_configs", || {
+            black_box(metrics::full_table());
+        });
+}
+
+/// Figures 5-7: gate-level switching-activity measurement.
+fn bench_netlist(b: &mut Bencher) {
+    let m = MultiplierNet::build();
+    let mut rng = Pcg32::new(11);
+    let stream: Vec<(u32, u32)> = (0..256).map(|_| (rng.below(128), rng.below(128))).collect();
+    for cfg_i in [0u32, 32] {
+        let cfg = Config::new(cfg_i).unwrap();
+        let mut sim = Sim::new(&m.nl);
+        m.apply_config(&mut sim, cfg);
+        b.throughput(stream.len() as u64)
+            .bench(&format!("fig5-7/netlist_activity_cfg{cfg_i}"), || {
+                for &(a, bb) in &stream {
+                    black_box(m.run(&mut sim, a, bb));
+                }
+            });
+    }
+    b.bench("fig5-7/netlist_build", || {
+        black_box(MultiplierNet::build());
+    });
+    b.throughput(33).bench("fig5-7/full_energy_profile_33cfg", || {
+        black_box(MultiplierEnergyProfile::measure_synthetic(64, 5));
+    });
+}
+
+/// L1 hot path: one approximate multiply.
+fn bench_l1(b: &mut Bencher) {
+    let mut rng = Pcg32::new(13);
+    let pairs: Vec<(u32, u32)> = (0..1024).map(|_| (rng.below(128), rng.below(128))).collect();
+    let cfg = Config::new(17).unwrap();
+    b.throughput(pairs.len() as u64)
+        .bench("l1/mul7_approx_bitlevel", || {
+            for &(x, w) in &pairs {
+                black_box(mul7_approx(x, w, cfg));
+            }
+        });
+    let table = MulTable::build(cfg);
+    b.throughput(pairs.len() as u64)
+        .bench("l1/mul7_table_lookup", || {
+            for &(x, w) in &pairs {
+                black_box(table.mul7(x, w));
+            }
+        });
+    b.bench("l1/table_build_one_config", || {
+        black_box(MulTable::build(cfg));
+    });
+}
+
+/// Datapath: images/second through both execution paths.
+fn bench_datapath(b: &mut Bencher) {
+    let net = test_network();
+    let xs = test_inputs(64);
+    for cfg_i in [0u32, 32] {
+        let cfg = Config::new(cfg_i).unwrap();
+        let mut i = 0;
+        b.throughput(1).bench(&format!("datapath/forward_cfg{cfg_i}"), || {
+            let x = &xs[i % xs.len()];
+            i += 1;
+            black_box(net.forward(x, cfg));
+        });
+    }
+    let mut sim = DatapathSim::new(&net, Config::ACCURATE);
+    let mut i = 0;
+    b.throughput(1).bench("datapath/cycle_accurate_image", || {
+        let x = &xs[i % xs.len()];
+        i += 1;
+        black_box(sim.run_image(x));
+    });
+    // batch-64 accuracy-style sweep chunk
+    b.throughput(64).bench("datapath/forward_batch64", || {
+        for x in &xs {
+            black_box(net.forward(x, Config::MAX_APPROX));
+        }
+    });
+}
+
+/// PJRT runtime throughput (skipped without artifacts).
+fn bench_runtime(b: &mut Bencher) {
+    let Some(dir) = artifacts() else {
+        eprintln!("runtime/*: skipped (no artifacts)");
+        return;
+    };
+    let Ok(engine) = ecmac::runtime::Engine::load(&dir) else {
+        eprintln!("runtime/*: skipped (engine load failed)");
+        return;
+    };
+    let cfg = Config::new(16).unwrap();
+    for &batch in &[1usize, 16, 128] {
+        let xs = test_inputs(batch);
+        b.throughput(batch as u64)
+            .bench(&format!("runtime/pjrt_execute_b{batch}"), || {
+                black_box(engine.execute(&xs, cfg).unwrap());
+            });
+    }
+}
+
+/// Coordinator end-to-end serving throughput.
+fn bench_coordinator(b: &mut Bencher) {
+    let xs = test_inputs(256);
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(400, 5)).unwrap();
+    let acc = AccuracyTable::new(vec![0.88; ecmac::amul::N_CONFIGS]);
+    for (name, max_batch) in [("b1", 1usize), ("b32", 32)] {
+        let gov = Governor::new(Policy::Fixed(Config::new(9).unwrap()), &pm, &acc);
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                max_batch,
+                max_wait: Duration::from_micros(50),
+                queue_capacity: 8192,
+                workers: 2,
+            },
+            Arc::new(NativeBackend {
+                network: test_network(),
+            }) as Arc<dyn Backend>,
+            gov,
+            pm.clone(),
+        );
+        let mut i = 0;
+        b.throughput(64)
+            .bench(&format!("coordinator/serve_64req_{name}"), || {
+                let replies: Vec<_> = (0..64)
+                    .filter_map(|k| {
+                        i += 1;
+                        coord.try_submit(xs[(i + k) % xs.len()])
+                    })
+                    .collect();
+                for r in replies {
+                    black_box(r.recv());
+                }
+            });
+        drop(coord.shutdown());
+    }
+}

@@ -1,0 +1,165 @@
+//! Error metrics for approximate arithmetic circuits (Table I).
+//!
+//! Definitions follow the approximate-computing literature the paper
+//! cites (Strollo et al., Yin et al.):
+//!
+//! * **ER** — error rate: fraction of input pairs whose output differs
+//!   from the exact product.
+//! * **MRED** — mean relative error distance: mean of |err| / exact over
+//!   pairs with a non-zero exact product.
+//! * **NMED** — normalized mean error distance: mean |err| divided by
+//!   the maximum exact output (127 * 127).
+//!
+//! All three are computed *exhaustively* over the full 128x128 operand
+//! space — the multiplier is small enough that sampling would be
+//! malpractice.
+
+use super::{column_levels, mul7_approx_with_levels, Config, MAG_MAX};
+
+/// Exhaustive error statistics of one configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorStats {
+    pub cfg: u32,
+    pub er_pct: f64,
+    pub mred_pct: f64,
+    pub nmed_pct: f64,
+    /// Worst-case absolute error distance over the operand space.
+    pub max_ed: u32,
+    /// Mean absolute error distance.
+    pub mean_ed: f64,
+}
+
+/// Compute exhaustive stats for `cfg`.
+pub fn exhaustive(cfg: Config) -> ErrorStats {
+    let mut n_err = 0u64;
+    let mut sum_ed = 0u64;
+    let mut sum_red = 0.0f64;
+    let mut n_nonzero = 0u64;
+    let mut max_ed = 0u32;
+    let levels = column_levels(cfg);
+    for a in 0..=MAG_MAX {
+        for b in 0..=MAG_MAX {
+            let exact = a * b;
+            let approx = mul7_approx_with_levels(a, b, &levels);
+            let ed = exact - approx; // approximation only loses value
+            if ed != 0 {
+                n_err += 1;
+            }
+            sum_ed += ed as u64;
+            max_ed = max_ed.max(ed);
+            if exact != 0 {
+                sum_red += ed as f64 / exact as f64;
+                n_nonzero += 1;
+            }
+        }
+    }
+    let n = 128u64 * 128;
+    ErrorStats {
+        cfg: cfg.index() as u32,
+        er_pct: n_err as f64 / n as f64 * 100.0,
+        mred_pct: sum_red / n_nonzero as f64 * 100.0,
+        nmed_pct: sum_ed as f64 / n as f64 / (MAG_MAX * MAG_MAX) as f64 * 100.0,
+        max_ed,
+        mean_ed: sum_ed as f64 / n as f64,
+    }
+}
+
+/// Stats for every configuration (accurate first), in parallel.
+pub fn full_table() -> Vec<ErrorStats> {
+    let configs: Vec<Config> = Config::all().collect();
+    crate::util::threadpool::par_map(&configs, |_, &cfg| exhaustive(cfg))
+}
+
+/// Aggregate min/max/avg over the 32 approximate configurations —
+/// the exact shape of the paper's Table I.
+#[derive(Debug, Clone, Copy)]
+pub struct TableISummary {
+    pub er_min: f64,
+    pub er_max: f64,
+    pub er_avg: f64,
+    pub mred_min: f64,
+    pub mred_max: f64,
+    pub mred_avg: f64,
+    pub nmed_min: f64,
+    pub nmed_max: f64,
+    pub nmed_avg: f64,
+}
+
+pub fn table_i(stats: &[ErrorStats]) -> TableISummary {
+    let approx: Vec<&ErrorStats> = stats.iter().filter(|s| s.cfg != 0).collect();
+    assert!(!approx.is_empty());
+    let n = approx.len() as f64;
+    let agg = |f: &dyn Fn(&ErrorStats) -> f64| {
+        let vals: Vec<f64> = approx.iter().map(|s| f(s)).collect();
+        (
+            vals.iter().cloned().fold(f64::INFINITY, f64::min),
+            vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            vals.iter().sum::<f64>() / n,
+        )
+    };
+    let (er_min, er_max, er_avg) = agg(&|s| s.er_pct);
+    let (mred_min, mred_max, mred_avg) = agg(&|s| s.mred_pct);
+    let (nmed_min, nmed_max, nmed_avg) = agg(&|s| s.nmed_pct);
+    TableISummary {
+        er_min,
+        er_max,
+        er_avg,
+        mred_min,
+        mred_max,
+        mred_avg,
+        nmed_min,
+        nmed_max,
+        nmed_avg,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accurate_config_has_zero_error() {
+        let s = exhaustive(Config::ACCURATE);
+        assert_eq!(s.er_pct, 0.0);
+        assert_eq!(s.mred_pct, 0.0);
+        assert_eq!(s.nmed_pct, 0.0);
+        assert_eq!(s.max_ed, 0);
+    }
+
+    #[test]
+    fn min_config_stats_frozen() {
+        // cfg 1 (mask 0): col1 full-OR + col2 pairwise-OR
+        let s = exhaustive(Config::new(1).unwrap());
+        assert!((s.er_pct - 9.375).abs() < 1e-9, "{}", s.er_pct);
+        assert!((s.mred_pct - 0.04252).abs() < 1e-4, "{}", s.mred_pct);
+    }
+
+    #[test]
+    fn max_config_stats_frozen() {
+        let s = exhaustive(Config::MAX_APPROX);
+        assert!((s.er_pct - 63.843).abs() < 0.01, "{}", s.er_pct);
+        assert!((s.mred_pct - 2.9938).abs() < 0.01, "{}", s.mred_pct);
+        assert!((s.nmed_pct - 0.4268).abs() < 0.001, "{}", s.nmed_pct);
+    }
+
+    #[test]
+    fn table_i_shape_matches_paper() {
+        let stats = full_table();
+        let t = table_i(&stats);
+        // paper Table I: ER 9.9609/61.8255/43.556, MRED 0.0548/3.684/2.125,
+        // NMED 0.0028/0.3643/0.224.  Our scheme's locked values:
+        assert!((t.er_min - 9.375).abs() < 0.01);
+        assert!((t.er_max - 63.843).abs() < 0.05);
+        assert!(t.er_avg > 40.0 && t.er_avg < 55.0);
+        assert!((t.mred_min - 0.0425).abs() < 0.001);
+        assert!((t.mred_max - 2.994).abs() < 0.01);
+        assert!(t.nmed_avg > 0.15 && t.nmed_avg < 0.30);
+    }
+
+    #[test]
+    fn mean_ed_consistent_with_nmed() {
+        let s = exhaustive(Config::new(17).unwrap());
+        let nmed_from_mean = s.mean_ed / (MAG_MAX * MAG_MAX) as f64 * 100.0;
+        assert!((nmed_from_mean - s.nmed_pct).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,398 @@
+//! The dynamic power governor: decides which multiplier configuration
+//! the accelerator runs, from a policy plus live feedback.
+//!
+//! Policies mirror how a deployment would actually use the paper's
+//! knob:
+//!
+//! * [`Policy::Fixed`] — pin one configuration (the paper's static
+//!   evaluation mode).
+//! * [`Policy::PowerBudget`] — stay under a milliwatt budget while
+//!   maximizing accuracy: picks the *most accurate* configuration whose
+//!   modeled power fits.
+//! * [`Policy::AccuracyFloor`] — save as much power as possible while
+//!   keeping measured accuracy at or above a floor.
+//! * [`Policy::EnergyBudget`] — a battery-style feedback loop: given a
+//!   total energy budget over a horizon, tracks cumulative consumption
+//!   and walks the accuracy/power frontier so the budget lasts the
+//!   horizon (the truly *dynamic* mode).
+
+use crate::amul::Config;
+use crate::power::PowerModel;
+
+/// Accuracy table: measured classification accuracy per configuration
+/// (from the artifact sweep or an on-line evaluation).
+#[derive(Debug, Clone)]
+pub struct AccuracyTable {
+    /// accuracy[cfg] in [0, 1]
+    pub accuracy: Vec<f64>,
+}
+
+impl AccuracyTable {
+    pub fn new(accuracy: Vec<f64>) -> AccuracyTable {
+        assert_eq!(accuracy.len(), crate::amul::N_CONFIGS);
+        AccuracyTable { accuracy }
+    }
+
+    /// Load from `artifacts/accuracy_sweep.json`.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<AccuracyTable> {
+        let j = crate::util::json::Json::from_file(path)?;
+        let mut accuracy = vec![0.0; crate::amul::N_CONFIGS];
+        for row in j.as_arr().ok_or_else(|| anyhow::anyhow!("sweep must be an array"))? {
+            let cfg = row.req("cfg")?.as_i64().unwrap_or(-1);
+            let acc = row.req("accuracy")?.as_f64().unwrap_or(0.0);
+            anyhow::ensure!(
+                (0..crate::amul::N_CONFIGS as i64).contains(&cfg),
+                "bad cfg {cfg}"
+            );
+            accuracy[cfg as usize] = acc;
+        }
+        Ok(AccuracyTable::new(accuracy))
+    }
+
+    pub fn get(&self, cfg: Config) -> f64 {
+        self.accuracy[cfg.index()]
+    }
+}
+
+/// Governor policy.
+#[derive(Debug, Clone)]
+pub enum Policy {
+    /// Pin a configuration.
+    Fixed(Config),
+    /// Most accurate configuration with modeled power <= budget (mW).
+    PowerBudget { budget_mw: f64 },
+    /// Most power-saving configuration with accuracy >= floor.
+    AccuracyFloor { min_accuracy: f64 },
+    /// Energy budget (mJ) to be spread over a horizon of images;
+    /// feedback walks the frontier as consumption deviates from plan.
+    EnergyBudget {
+        budget_mj: f64,
+        horizon_images: u64,
+    },
+}
+
+/// A point on the accuracy/power frontier.
+#[derive(Debug, Clone, Copy)]
+pub struct FrontierPoint {
+    pub cfg: Config,
+    pub total_mw: f64,
+    pub accuracy: f64,
+}
+
+/// The governor: policy + models + feedback state.
+pub struct Governor {
+    policy: Policy,
+    /// All configurations sorted by descending accuracy.
+    by_accuracy: Vec<FrontierPoint>,
+    /// Pareto frontier sorted by ascending power.
+    frontier: Vec<FrontierPoint>,
+    /// Cumulative energy drawn (mJ) and images served (feedback state).
+    energy_mj: f64,
+    images: u64,
+    /// Decision log: (images-at-decision, chosen config).
+    pub decisions: Vec<(u64, Config)>,
+    current: Config,
+}
+
+impl Governor {
+    pub fn new(policy: Policy, power: &PowerModel, accuracy: &AccuracyTable) -> Governor {
+        let mut points: Vec<FrontierPoint> = Config::all()
+            .map(|cfg| FrontierPoint {
+                cfg,
+                total_mw: power.breakdown(cfg).total_mw,
+                // NaN accuracy (sweep not built) degrades to 0 so the
+                // ordering stays total and budget policies still work
+                accuracy: {
+                    let a = accuracy.get(cfg);
+                    if a.is_nan() {
+                        0.0
+                    } else {
+                        a
+                    }
+                },
+            })
+            .collect();
+        let mut by_accuracy = points.clone();
+        by_accuracy.sort_by(|a, b| {
+            b.accuracy
+                .partial_cmp(&a.accuracy)
+                .unwrap()
+                .then(a.total_mw.partial_cmp(&b.total_mw).unwrap())
+        });
+        // Pareto frontier: ascending power, strictly increasing accuracy
+        points.sort_by(|a, b| a.total_mw.partial_cmp(&b.total_mw).unwrap());
+        let mut frontier: Vec<FrontierPoint> = Vec::new();
+        for p in points {
+            if frontier.last().map_or(true, |l| p.accuracy > l.accuracy) {
+                frontier.push(p);
+            }
+        }
+        let mut g = Governor {
+            policy,
+            by_accuracy,
+            frontier,
+            energy_mj: 0.0,
+            images: 0,
+            decisions: Vec::new(),
+            current: Config::ACCURATE,
+        };
+        g.current = g.decide();
+        g.decisions.push((0, g.current));
+        g
+    }
+
+    /// The Pareto frontier (for reports).
+    pub fn frontier(&self) -> &[FrontierPoint] {
+        &self.frontier
+    }
+
+    pub fn current(&self) -> Config {
+        self.current
+    }
+
+    /// Record a served batch: image count and consumed energy (mJ).
+    /// Returns the configuration for the *next* batch.
+    pub fn feedback(&mut self, images: u64, energy_mj: f64) -> Config {
+        self.images += images;
+        self.energy_mj += energy_mj;
+        let next = self.decide();
+        if next != self.current {
+            self.current = next;
+            self.decisions.push((self.images, next));
+        }
+        next
+    }
+
+    /// Pure decision from current state.
+    fn decide(&self) -> Config {
+        match &self.policy {
+            Policy::Fixed(cfg) => *cfg,
+            Policy::PowerBudget { budget_mw } => self
+                .by_accuracy
+                .iter()
+                .find(|p| p.total_mw <= *budget_mw)
+                .map(|p| p.cfg)
+                // nothing fits: fall back to the cheapest point
+                .unwrap_or_else(|| {
+                    self.frontier
+                        .first()
+                        .map(|p| p.cfg)
+                        .unwrap_or(Config::MAX_APPROX)
+                }),
+            Policy::AccuracyFloor { min_accuracy } => {
+                // cheapest frontier point meeting the floor; if none,
+                // the most accurate available
+                self.frontier
+                    .iter()
+                    .find(|p| p.accuracy >= *min_accuracy)
+                    .map(|p| p.cfg)
+                    .unwrap_or_else(|| self.by_accuracy[0].cfg)
+            }
+            Policy::EnergyBudget {
+                budget_mj,
+                horizon_images,
+            } => {
+                // plan: spend budget evenly across the horizon.  If we
+                // are ahead of plan (spent more than images/horizon of
+                // the budget), pick cheaper configs; if behind, afford
+                // accuracy.
+                let remaining_images = horizon_images.saturating_sub(self.images).max(1);
+                let remaining_mj = (budget_mj - self.energy_mj).max(0.0);
+                let per_image_mj = remaining_mj / remaining_images as f64;
+                // energy per image at cfg = P * t_image; t fixed, so
+                // allowed power = per_image_mj / t_image
+                let t_image_s = crate::datapath::controller::CYCLES_PER_IMAGE as f64
+                    / crate::power::anchors::FREQ_HZ;
+                let allowed_mw = per_image_mj * 1e-3 / t_image_s * 1e3; // mJ->J, W->mW
+                self.by_accuracy
+                    .iter()
+                    .find(|p| p.total_mw <= allowed_mw)
+                    .map(|p| p.cfg)
+                    .unwrap_or_else(|| {
+                        self.frontier
+                            .first()
+                            .map(|p| p.cfg)
+                            .unwrap_or(Config::MAX_APPROX)
+                    })
+            }
+        }
+    }
+
+    /// Cumulative energy drawn, mJ.
+    pub fn energy_mj(&self) -> f64 {
+        self.energy_mj
+    }
+
+    /// Images served so far.
+    pub fn images(&self) -> u64 {
+        self.images
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::{MultiplierEnergyProfile, PowerModel};
+
+    fn setup() -> (PowerModel, AccuracyTable) {
+        let pm =
+            PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(800, 3)).unwrap();
+        // synthetic accuracy: accurate best, decreasing with (roughly)
+        // saving fraction
+        let acc: Vec<f64> = (0..crate::amul::N_CONFIGS)
+            .map(|c| {
+                if c == 0 {
+                    0.8884
+                } else {
+                    0.8884 - 0.012 * pm.saving_fraction(Config::new(c as u32).unwrap())
+                }
+            })
+            .collect();
+        (pm, AccuracyTable::new(acc))
+    }
+
+    #[test]
+    fn fixed_policy_pins() {
+        let (pm, at) = setup();
+        let g = Governor::new(Policy::Fixed(Config::new(7).unwrap()), &pm, &at);
+        assert_eq!(g.current(), Config::new(7).unwrap());
+    }
+
+    #[test]
+    fn generous_budget_selects_accurate() {
+        let (pm, at) = setup();
+        let g = Governor::new(Policy::PowerBudget { budget_mw: 10.0 }, &pm, &at);
+        assert_eq!(g.current(), Config::ACCURATE);
+    }
+
+    #[test]
+    fn tight_budget_selects_low_power() {
+        let (pm, at) = setup();
+        let g = Governor::new(Policy::PowerBudget { budget_mw: 4.9 }, &pm, &at);
+        let chosen = g.current();
+        assert!(!chosen.is_accurate());
+        assert!(pm.breakdown(chosen).total_mw <= 4.9);
+        // and it is the most accurate of the fitting ones
+        for cfg in Config::all() {
+            if pm.breakdown(cfg).total_mw <= 4.9 {
+                assert!(at.get(chosen) >= at.get(cfg));
+            }
+        }
+    }
+
+    #[test]
+    fn impossible_budget_falls_back_to_cheapest() {
+        let (pm, at) = setup();
+        let g = Governor::new(Policy::PowerBudget { budget_mw: 0.1 }, &pm, &at);
+        let cheapest = Config::all()
+            .min_by(|&a, &b| {
+                pm.breakdown(a)
+                    .total_mw
+                    .partial_cmp(&pm.breakdown(b).total_mw)
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(g.current(), cheapest);
+    }
+
+    #[test]
+    fn accuracy_floor_saves_power() {
+        let (pm, at) = setup();
+        let floor = at.get(Config::ACCURATE) - 0.008;
+        let g = Governor::new(Policy::AccuracyFloor { min_accuracy: floor }, &pm, &at);
+        let chosen = g.current();
+        assert!(at.get(chosen) >= floor);
+        assert!(pm.breakdown(chosen).total_mw < pm.breakdown(Config::ACCURATE).total_mw);
+    }
+
+    #[test]
+    fn budget_monotonicity() {
+        // a larger budget never yields a less accurate choice
+        let (pm, at) = setup();
+        let mut last_acc = -1.0;
+        for budget in [4.8, 4.9, 5.0, 5.1, 5.2, 5.3, 5.4, 5.5, 5.6] {
+            let g = Governor::new(Policy::PowerBudget { budget_mw: budget }, &pm, &at);
+            let acc = at.get(g.current());
+            assert!(
+                acc >= last_acc - 1e-12,
+                "budget {budget}: accuracy {acc} < previous {last_acc}"
+            );
+            last_acc = acc;
+        }
+    }
+
+    #[test]
+    fn energy_budget_feedback_degrades_when_overspending() {
+        let (pm, at) = setup();
+        let t_image_s =
+            crate::datapath::controller::CYCLES_PER_IMAGE as f64 / crate::power::anchors::FREQ_HZ;
+        // budget exactly at worst-config power for the horizon: must pick
+        // a low-power config
+        let horizon = 100_000u64;
+        let worst_mw = pm.breakdown(Config::MAX_APPROX).total_mw;
+        let budget_mj = worst_mw * 1e-3 * t_image_s * horizon as f64 * 1e3;
+        let mut g = Governor::new(
+            Policy::EnergyBudget {
+                budget_mj,
+                horizon_images: horizon,
+            },
+            &pm,
+            &at,
+        );
+        let first = g.current();
+        assert!(pm.breakdown(first).total_mw <= worst_mw * 1.001);
+        // now pretend we overspent massively: governor must stay cheap
+        let next = g.feedback(1000, budget_mj * 0.5);
+        assert!(pm.breakdown(next).total_mw <= pm.breakdown(first).total_mw * 1.001);
+    }
+
+    #[test]
+    fn energy_budget_affords_accuracy_when_underspending() {
+        let (pm, at) = setup();
+        let t_image_s =
+            crate::datapath::controller::CYCLES_PER_IMAGE as f64 / crate::power::anchors::FREQ_HZ;
+        // generous budget: 2x accurate power
+        let horizon = 10_000u64;
+        let budget_mj =
+            2.0 * pm.breakdown(Config::ACCURATE).total_mw * 1e-3 * t_image_s * horizon as f64 * 1e3;
+        let g = Governor::new(
+            Policy::EnergyBudget {
+                budget_mj,
+                horizon_images: horizon,
+            },
+            &pm,
+            &at,
+        );
+        assert_eq!(g.current(), Config::ACCURATE);
+    }
+
+    #[test]
+    fn frontier_is_pareto() {
+        let (pm, at) = setup();
+        let g = Governor::new(Policy::Fixed(Config::ACCURATE), &pm, &at);
+        let f = g.frontier();
+        assert!(!f.is_empty());
+        for w in f.windows(2) {
+            assert!(w[0].total_mw <= w[1].total_mw);
+            assert!(w[0].accuracy < w[1].accuracy);
+        }
+    }
+
+    #[test]
+    fn decisions_are_logged() {
+        let (pm, at) = setup();
+        let mut g = Governor::new(
+            Policy::EnergyBudget {
+                budget_mj: 1.0,
+                horizon_images: 1000,
+            },
+            &pm,
+            &at,
+        );
+        let initial_decisions = g.decisions.len();
+        // drain the budget to force a decision change
+        g.feedback(10, 0.99);
+        assert!(g.decisions.len() >= initial_decisions);
+        assert_eq!(g.images(), 10);
+    }
+}

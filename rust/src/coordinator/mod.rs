@@ -1,0 +1,26 @@
+//! Layer-3 coordinator: the paper's *dynamic power control* turned into
+//! a serving runtime.
+//!
+//! The hardware exposes one knob — the MAC error configuration — and the
+//! paper's contribution is that flipping it at runtime trades accuracy
+//! for power.  This module is the system around that knob:
+//!
+//! * [`governor`] — the power governor: policies that map a power
+//!   budget, an accuracy floor, or a feedback signal to a configuration,
+//!   re-evaluated as conditions change (the DVFS-style control loop).
+//! * [`server`] — the request router/batcher: classification requests
+//!   arrive on a bounded queue (backpressure), a batcher groups them
+//!   under a latency deadline, worker threads execute batches on a
+//!   pluggable [`server::Backend`] (PJRT AOT executable, native
+//!   functional model, or the cycle-accurate simulator), and the
+//!   governor's current configuration is applied per batch.
+//! * [`request`] — request/response types and the metrics the governor
+//!   feeds on (latency histograms, per-config energy accounting).
+
+pub mod governor;
+pub mod request;
+pub mod server;
+
+pub use governor::{Governor, Policy};
+pub use request::{ClassifyRequest, ClassifyResponse, MetricsSnapshot};
+pub use server::{Backend, Coordinator, CoordinatorConfig, NativeBackend, PjrtBackend};

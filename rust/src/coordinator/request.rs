@@ -1,0 +1,113 @@
+//! Request/response types and serving metrics.
+
+use crate::amul::Config;
+use crate::dataset::N_FEATURES;
+use crate::util::stats::LatencyHistogram;
+use crate::util::threadpool::Channel;
+use std::time::Instant;
+
+/// A classification request entering the coordinator.
+pub struct ClassifyRequest {
+    pub id: u64,
+    pub features: [u8; N_FEATURES],
+    pub enqueued: Instant,
+    /// Single-use reply channel.
+    pub reply: Channel<ClassifyResponse>,
+}
+
+/// The response delivered to the requester.
+#[derive(Debug, Clone)]
+pub struct ClassifyResponse {
+    pub id: u64,
+    pub pred: u8,
+    pub logits: [i32; crate::weights::N_OUTPUTS],
+    /// Configuration the request was served under.
+    pub cfg: Config,
+    /// Queueing + batching + execution latency.
+    pub latency_us: u64,
+    /// Batch size this request was grouped into.
+    pub batch_size: usize,
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    pub latency: LatencyHistogram,
+    pub batch_latency: LatencyHistogram,
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    /// Requests served per configuration.
+    pub per_cfg: Vec<u64>,
+    /// Modeled accelerator energy consumed, mJ.
+    pub energy_mj: f64,
+    pub batch_size_sum: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            latency: LatencyHistogram::new(),
+            batch_latency: LatencyHistogram::new(),
+            requests: 0,
+            batches: 0,
+            rejected: 0,
+            per_cfg: vec![0; crate::amul::N_CONFIGS],
+            energy_mj: 0.0,
+            batch_size_sum: 0,
+        }
+    }
+}
+
+/// A point-in-time copy handed to callers.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+    pub mean_batch_size: f64,
+    pub per_cfg: Vec<u64>,
+    pub energy_mj: f64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests,
+            batches: self.batches,
+            rejected: self.rejected,
+            mean_latency_us: self.latency.mean_us(),
+            p50_latency_us: self.latency.percentile_us(50.0),
+            p99_latency_us: self.latency.percentile_us(99.0),
+            mean_batch_size: if self.batches == 0 {
+                0.0
+            } else {
+                self.batch_size_sum as f64 / self.batches as f64
+            },
+            per_cfg: self.per_cfg.clone(),
+            energy_mj: self.energy_mj,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_snapshot_math() {
+        let mut m = Metrics::default();
+        m.requests = 10;
+        m.batches = 4;
+        m.batch_size_sum = 10;
+        m.latency.record_us(100);
+        m.latency.record_us(300);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 10);
+        assert!((s.mean_batch_size - 2.5).abs() < 1e-9);
+        assert!((s.mean_latency_us - 200.0).abs() < 1e-9);
+    }
+}

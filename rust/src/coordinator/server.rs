@@ -1,0 +1,551 @@
+//! The request router/batcher serving classification requests over the
+//! error-configurable accelerator.
+//!
+//! Architecture (vLLM-router-like, scaled to this accelerator):
+//!
+//! ```text
+//!  submit() ──> bounded queue ──> batcher thread ──> batch queue ──> workers
+//!                (backpressure)    (deadline-based     (channel)      │
+//!                                   grouping)                         ▼
+//!                                                   governor ──> backend.execute(batch, cfg)
+//!                                                      ▲              │
+//!                                                      └── energy ────┘ (feedback)
+//! ```
+//!
+//! The governor picks the configuration per batch; the energy model
+//! charges each batch and feeds consumption back, closing the paper's
+//! dynamic-power-control loop.
+
+use super::governor::Governor;
+use super::request::{ClassifyRequest, ClassifyResponse, Metrics, MetricsSnapshot};
+use crate::amul::Config;
+use crate::dataset::N_FEATURES;
+use crate::power::PowerModel;
+use crate::util::threadpool::Channel;
+use crate::weights::N_OUTPUTS;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Pluggable inference backend.
+pub trait Backend: Send + Sync {
+    /// Execute a batch; returns (logits, pred) per input.
+    fn execute(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        cfg: Config,
+    ) -> anyhow::Result<Vec<([i32; N_OUTPUTS], u8)>>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Functional bit-exact backend (table-driven rust model).
+pub struct NativeBackend {
+    pub network: crate::datapath::Network,
+}
+
+impl Backend for NativeBackend {
+    fn execute(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        cfg: Config,
+    ) -> anyhow::Result<Vec<([i32; N_OUTPUTS], u8)>> {
+        Ok(xs
+            .iter()
+            .map(|x| {
+                let r = self.network.forward(x, cfg);
+                (r.logits, r.pred)
+            })
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT backend executing the AOT-compiled JAX/Pallas model.
+///
+/// The `xla` crate's client types are `Rc`-based (not `Send`), so the
+/// engine lives on a dedicated actor thread that owns it; `execute`
+/// ships batches over a channel and waits for results.  PJRT executes
+/// the batch on its own thread pool, so this single entry point is not
+/// a throughput bottleneck.
+pub struct PjrtBackend {
+    tx: Channel<PjrtJob>,
+    _actor: std::thread::JoinHandle<()>,
+}
+
+struct PjrtJob {
+    xs: Vec<[u8; N_FEATURES]>,
+    cfg: Config,
+    reply: Channel<anyhow::Result<Vec<([i32; N_OUTPUTS], u8)>>>,
+}
+
+impl PjrtBackend {
+    /// Spawn the actor thread; engine construction errors are reported
+    /// through the returned channel before this function returns.
+    pub fn spawn(artifacts: std::path::PathBuf) -> anyhow::Result<PjrtBackend> {
+        let tx: Channel<PjrtJob> = Channel::new(0);
+        let rx = tx.clone();
+        let ready: Channel<anyhow::Result<()>> = Channel::new(1);
+        let ready_tx = ready.clone();
+        let actor = std::thread::Builder::new()
+            .name("ecmac-pjrt".into())
+            .spawn(move || {
+                let engine = match crate::runtime::Engine::load(&artifacts) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Some(job) = rx.recv() {
+                    let result = engine.execute(&job.xs, job.cfg).map(|out| {
+                        out.logits.into_iter().zip(out.preds).collect()
+                    });
+                    let _ = job.reply.send(result);
+                }
+            })
+            .expect("spawn pjrt actor");
+        match ready.recv() {
+            Some(Ok(())) => Ok(PjrtBackend { tx, _actor: actor }),
+            Some(Err(e)) => Err(e),
+            None => anyhow::bail!("pjrt actor died during startup"),
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn execute(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        cfg: Config,
+    ) -> anyhow::Result<Vec<([i32; N_OUTPUTS], u8)>> {
+        let reply = Channel::new(1);
+        self.tx
+            .send(PjrtJob {
+                xs: xs.to_vec(),
+                cfg,
+                reply: reply.clone(),
+            })
+            .map_err(|_| anyhow::anyhow!("pjrt actor stopped"))?;
+        reply
+            .recv()
+            .ok_or_else(|| anyhow::anyhow!("pjrt actor dropped the batch"))?
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Coordinator tuning knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Maximum batch size handed to the backend.
+    pub max_batch: usize,
+    /// Maximum time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    /// Bounded request-queue capacity (backpressure).
+    pub queue_capacity: usize,
+    /// Number of executor worker threads.
+    pub workers: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(500),
+            queue_capacity: 1024,
+            workers: 2,
+        }
+    }
+}
+
+struct Batch {
+    requests: Vec<ClassifyRequest>,
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    queue: Channel<ClassifyRequest>,
+    metrics: Arc<Mutex<Metrics>>,
+    governor: Arc<Mutex<Governor>>,
+    next_id: AtomicU64,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    batch_queue: Channel<Batch>,
+}
+
+impl Coordinator {
+    /// Start the batcher + worker threads.
+    pub fn start(
+        cfg: CoordinatorConfig,
+        backend: Arc<dyn Backend>,
+        governor: Governor,
+        power: PowerModel,
+    ) -> Coordinator {
+        let queue: Channel<ClassifyRequest> = Channel::new(cfg.queue_capacity);
+        let batch_queue: Channel<Batch> = Channel::new(cfg.workers * 2);
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let governor = Arc::new(Mutex::new(governor));
+        let mut threads = Vec::new();
+
+        // batcher thread
+        {
+            let queue = queue.clone();
+            let batch_queue = batch_queue.clone();
+            let max_batch = cfg.max_batch;
+            let max_wait = cfg.max_wait;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("ecmac-batcher".into())
+                    .spawn(move || {
+                        loop {
+                            // block for the first request
+                            let Some(first) = queue.recv() else {
+                                break; // queue closed
+                            };
+                            let mut requests = vec![first];
+                            let deadline = Instant::now() + max_wait;
+                            while requests.len() < max_batch {
+                                let now = Instant::now();
+                                if now >= deadline {
+                                    break;
+                                }
+                                match queue.recv_timeout(deadline - now) {
+                                    Ok(Some(r)) => requests.push(r),
+                                    Ok(None) => break, // deadline
+                                    Err(()) => break,  // closed: flush what we have
+                                }
+                            }
+                            if batch_queue.send(Batch { requests }).is_err() {
+                                break;
+                            }
+                        }
+                        batch_queue.close();
+                    })
+                    .expect("spawn batcher"),
+            );
+        }
+
+        // worker threads
+        for i in 0..cfg.workers.max(1) {
+            let batch_queue = batch_queue.clone();
+            let backend = Arc::clone(&backend);
+            let metrics = Arc::clone(&metrics);
+            let governor = Arc::clone(&governor);
+            let power = power.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("ecmac-exec-{i}"))
+                    .spawn(move || {
+                        while let Some(batch) = batch_queue.recv() {
+                            Self::serve_batch(batch, &*backend, &metrics, &governor, &power);
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        Coordinator {
+            queue,
+            metrics,
+            governor,
+            next_id: AtomicU64::new(1),
+            threads,
+            batch_queue,
+        }
+    }
+
+    fn serve_batch(
+        batch: Batch,
+        backend: &dyn Backend,
+        metrics: &Mutex<Metrics>,
+        governor: &Mutex<Governor>,
+        power: &PowerModel,
+    ) {
+        let cfg = governor.lock().unwrap().current();
+        let xs: Vec<[u8; N_FEATURES]> = batch.requests.iter().map(|r| r.features).collect();
+        let t0 = Instant::now();
+        let results = backend.execute(&xs, cfg);
+        let exec_us = t0.elapsed().as_micros() as u64;
+        let n = batch.requests.len();
+        // modeled accelerator energy for this batch
+        let energy_mj = power.energy_per_image_nj(cfg) * n as f64 * 1e-6;
+        governor.lock().unwrap().feedback(n as u64, energy_mj);
+        {
+            let mut m = metrics.lock().unwrap();
+            m.batches += 1;
+            m.batch_size_sum += n as u64;
+            m.batch_latency.record_us(exec_us.max(1));
+            m.per_cfg[cfg.index()] += n as u64;
+            m.energy_mj += energy_mj;
+            m.requests += n as u64;
+        }
+        match results {
+            Ok(outs) => {
+                debug_assert_eq!(outs.len(), n);
+                for (req, (logits, pred)) in batch.requests.into_iter().zip(outs) {
+                    let latency_us = req.enqueued.elapsed().as_micros() as u64;
+                    metrics
+                        .lock()
+                        .unwrap()
+                        .latency
+                        .record_us(latency_us.max(1));
+                    let _ = req.reply.send(ClassifyResponse {
+                        id: req.id,
+                        pred,
+                        logits,
+                        cfg,
+                        latency_us,
+                        batch_size: n,
+                    });
+                }
+            }
+            Err(e) => {
+                log::error!("backend {} failed: {e}", backend.name());
+                // drop the requests' reply channels: receivers see closure
+                for req in batch.requests {
+                    req.reply.close();
+                }
+            }
+        }
+    }
+
+    /// Submit a request; returns the reply channel, or `None` if the
+    /// queue is full (backpressure) or closed.
+    pub fn try_submit(&self, features: [u8; N_FEATURES]) -> Option<Channel<ClassifyResponse>> {
+        let reply: Channel<ClassifyResponse> = Channel::new(1);
+        let req = ClassifyRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            features,
+            enqueued: Instant::now(),
+            reply: reply.clone(),
+        };
+        match self.queue.try_send(req) {
+            Ok(true) => Some(reply),
+            Ok(false) => {
+                self.metrics.lock().unwrap().rejected += 1;
+                None
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Blocking submit + wait.
+    pub fn classify(&self, features: [u8; N_FEATURES]) -> Option<ClassifyResponse> {
+        let reply: Channel<ClassifyResponse> = Channel::new(1);
+        let req = ClassifyRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            features,
+            enqueued: Instant::now(),
+            reply: reply.clone(),
+        };
+        self.queue.send(req).ok()?;
+        reply.recv()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.lock().unwrap().snapshot()
+    }
+
+    /// Current governor configuration.
+    pub fn current_config(&self) -> Config {
+        self.governor.lock().unwrap().current()
+    }
+
+    /// Governor decision log.
+    pub fn decisions(&self) -> Vec<(u64, Config)> {
+        self.governor.lock().unwrap().decisions.clone()
+    }
+
+    /// Drain and stop. Pending requests are flushed first.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.queue.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        self.batch_queue.close();
+        let snap = self.metrics.lock().unwrap().snapshot();
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::governor::{AccuracyTable, Policy};
+    use crate::power::{MultiplierEnergyProfile, PowerModel};
+    use crate::util::rng::Pcg32;
+    use crate::weights::QuantWeights;
+
+    fn test_backend() -> Arc<NativeBackend> {
+        let mut rng = Pcg32::new(77);
+        let mut gen = |n: usize| -> Vec<u8> {
+            (0..n)
+                .map(|_| {
+                    let mag = rng.below(128) as u8;
+                    if mag == 0 {
+                        0
+                    } else {
+                        ((rng.below(2) as u8) << 7) | mag
+                    }
+                })
+                .collect()
+        };
+        Arc::new(NativeBackend {
+            network: crate::datapath::Network::new(QuantWeights {
+                w1: gen(62 * 30),
+                b1: gen(30),
+                w2: gen(30 * 10),
+                b2: gen(10),
+            }),
+        })
+    }
+
+    fn test_governor(policy: Policy) -> (Governor, PowerModel) {
+        let pm =
+            PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(500, 3)).unwrap();
+        let acc = AccuracyTable::new(vec![0.9; crate::amul::N_CONFIGS]);
+        (Governor::new(policy, &pm, &acc), pm)
+    }
+
+    fn start(policy: Policy, cfg: CoordinatorConfig) -> (Coordinator, Arc<NativeBackend>) {
+        let backend = test_backend();
+        let (gov, pm) = test_governor(policy);
+        (
+            Coordinator::start(cfg, backend.clone() as Arc<dyn Backend>, gov, pm),
+            backend,
+        )
+    }
+
+    #[test]
+    fn serves_requests_and_matches_functional() {
+        let (coord, backend) = start(
+            Policy::Fixed(Config::new(5).unwrap()),
+            CoordinatorConfig::default(),
+        );
+        let mut rng = Pcg32::new(9);
+        for _ in 0..40 {
+            let mut x = [0u8; N_FEATURES];
+            for v in x.iter_mut() {
+                *v = rng.below(128) as u8;
+            }
+            let resp = coord.classify(x).expect("response");
+            let want = backend.network.forward(&x, Config::new(5).unwrap());
+            assert_eq!(resp.pred, want.pred);
+            assert_eq!(resp.logits, want.logits);
+            assert_eq!(resp.cfg, Config::new(5).unwrap());
+            assert!(resp.latency_us > 0);
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.requests, 40);
+        assert!(m.batches >= 1);
+        assert!(m.energy_mj > 0.0);
+    }
+
+    #[test]
+    fn batches_group_under_load() {
+        let (coord, _) = start(
+            Policy::Fixed(Config::ACCURATE),
+            CoordinatorConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(20),
+                queue_capacity: 256,
+                workers: 1,
+            },
+        );
+        // submit a burst, then collect
+        let mut replies = Vec::new();
+        for i in 0..32u8 {
+            let x = [i; N_FEATURES];
+            replies.push(coord.try_submit(x).expect("queued"));
+        }
+        for r in replies {
+            assert!(r.recv().is_some());
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.requests, 32);
+        assert!(
+            m.mean_batch_size > 1.5,
+            "burst should batch: mean {}",
+            m.mean_batch_size
+        );
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // tiny queue, slow consumption: fill it synchronously before
+        // workers drain (workers=1, queue=2 and we submit fast)
+        let (coord, _) = start(
+            Policy::Fixed(Config::ACCURATE),
+            CoordinatorConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(1),
+                queue_capacity: 2,
+                workers: 1,
+            },
+        );
+        let mut accepted = 0;
+        let mut rejected = 0;
+        let mut replies = Vec::new();
+        for i in 0..2000u32 {
+            let x = [(i % 128) as u8; N_FEATURES];
+            match coord.try_submit(x) {
+                Some(r) => {
+                    accepted += 1;
+                    replies.push(r);
+                }
+                None => rejected += 1,
+            }
+        }
+        // all accepted requests complete
+        for r in replies {
+            assert!(r.recv().is_some());
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.requests, accepted);
+        assert_eq!(m.rejected, rejected);
+        assert!(rejected > 0, "expected backpressure rejections");
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let (coord, _) = start(
+            Policy::Fixed(Config::ACCURATE),
+            CoordinatorConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(5),
+                queue_capacity: 512,
+                workers: 2,
+            },
+        );
+        let replies: Vec<_> = (0..100u8)
+            .map(|i| coord.try_submit([i % 128; N_FEATURES]).unwrap())
+            .collect();
+        let m = coord.shutdown();
+        assert_eq!(m.requests, 100);
+        for r in replies {
+            assert!(r.recv().is_some(), "pending request lost at shutdown");
+        }
+    }
+
+    #[test]
+    fn per_cfg_accounting() {
+        let (coord, _) = start(
+            Policy::Fixed(Config::new(12).unwrap()),
+            CoordinatorConfig::default(),
+        );
+        for i in 0..10u8 {
+            coord.classify([i; N_FEATURES]).unwrap();
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.per_cfg[12], 10);
+        assert_eq!(m.per_cfg.iter().sum::<u64>(), 10);
+    }
+}

@@ -1,0 +1,240 @@
+//! The 5-state finite-state machine controlling the multi-cycle datapath
+//! (paper §III-D).
+//!
+//! * States 0..2 — hidden layer, one state per group of 10 physical
+//!   neurons: stream the 62 inputs from memory (one MAC per neuron per
+//!   cycle), then one cycle for bias + ReLU + saturation + register
+//!   store.
+//! * State 3 — output layer: stream the 30 hidden registers, then the
+//!   max-circuit cycle produces the predicted label and bumps the image
+//!   counter; loops to state 0 while images remain.
+//! * State 4 — done: asserts the completion signal.
+
+/// FSM states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum State {
+    /// Hidden-layer pass `g` (0..=2): neurons `10g .. 10g+9`.
+    Hidden(u8),
+    /// Output layer + max circuit.
+    Output,
+    /// All images classified.
+    Done,
+}
+
+/// Control signals decoded from the current state+cycle (paper Fig. 4's
+/// mux selects).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Signals {
+    /// Weight/bias bank select: 0..=2 hidden groups, 3 output layer.
+    pub wsel: u8,
+    /// Input mux: false = external inputs, true = hidden registers.
+    pub input_from_hidden: bool,
+    /// MAC enable (streaming phase).
+    pub mac_en: bool,
+    /// Bias-add + activation + register-store cycle.
+    pub store_en: bool,
+    /// Max-circuit enable (prediction cycle).
+    pub max_en: bool,
+    /// Completion signal.
+    pub done: bool,
+}
+
+/// Cycle counts per streaming phase.
+pub const HIDDEN_MAC_CYCLES: u32 = 62;
+pub const OUTPUT_MAC_CYCLES: u32 = 30;
+/// One trailing cycle per state for bias/activation/store (or max).
+pub const EPILOGUE_CYCLES: u32 = 1;
+
+/// Total cycles to classify one image.
+pub const CYCLES_PER_IMAGE: u32 =
+    3 * (HIDDEN_MAC_CYCLES + EPILOGUE_CYCLES) + OUTPUT_MAC_CYCLES + EPILOGUE_CYCLES;
+
+/// The controller: tracks state, intra-state cycle, and images remaining.
+#[derive(Debug, Clone)]
+pub struct Controller {
+    state: State,
+    cycle_in_state: u32,
+    images_done: u32,
+    images_total: u32,
+}
+
+impl Controller {
+    pub fn new(images_total: u32) -> Controller {
+        Controller {
+            state: if images_total == 0 {
+                State::Done
+            } else {
+                State::Hidden(0)
+            },
+            cycle_in_state: 0,
+            images_done: 0,
+            images_total,
+        }
+    }
+
+    pub fn state(&self) -> State {
+        self.state
+    }
+
+    pub fn cycle_in_state(&self) -> u32 {
+        self.cycle_in_state
+    }
+
+    pub fn images_done(&self) -> u32 {
+        self.images_done
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state == State::Done
+    }
+
+    /// Decode the control signals for the *current* cycle.
+    pub fn signals(&self) -> Signals {
+        match self.state {
+            State::Hidden(g) => Signals {
+                wsel: g,
+                input_from_hidden: false,
+                mac_en: self.cycle_in_state < HIDDEN_MAC_CYCLES,
+                store_en: self.cycle_in_state == HIDDEN_MAC_CYCLES,
+                max_en: false,
+                done: false,
+            },
+            State::Output => Signals {
+                wsel: 3,
+                input_from_hidden: true,
+                mac_en: self.cycle_in_state < OUTPUT_MAC_CYCLES,
+                store_en: false,
+                max_en: self.cycle_in_state == OUTPUT_MAC_CYCLES,
+                done: false,
+            },
+            State::Done => Signals {
+                wsel: 3,
+                input_from_hidden: false,
+                mac_en: false,
+                store_en: false,
+                max_en: false,
+                done: true,
+            },
+        }
+    }
+
+    /// Advance one clock cycle.
+    pub fn tick(&mut self) {
+        match self.state {
+            State::Hidden(g) => {
+                if self.cycle_in_state == HIDDEN_MAC_CYCLES {
+                    self.cycle_in_state = 0;
+                    self.state = if g < 2 {
+                        State::Hidden(g + 1)
+                    } else {
+                        State::Output
+                    };
+                } else {
+                    self.cycle_in_state += 1;
+                }
+            }
+            State::Output => {
+                if self.cycle_in_state == OUTPUT_MAC_CYCLES {
+                    self.cycle_in_state = 0;
+                    self.images_done += 1;
+                    self.state = if self.images_done < self.images_total {
+                        State::Hidden(0)
+                    } else {
+                        State::Done
+                    };
+                } else {
+                    self.cycle_in_state += 1;
+                }
+            }
+            State::Done => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_per_image_constant() {
+        assert_eq!(CYCLES_PER_IMAGE, 3 * 63 + 31);
+    }
+
+    #[test]
+    fn walks_states_in_order() {
+        let mut c = Controller::new(1);
+        let mut seen = Vec::new();
+        let mut cycles = 0;
+        while !c.is_done() {
+            if seen.last() != Some(&c.state()) {
+                seen.push(c.state());
+            }
+            c.tick();
+            cycles += 1;
+            assert!(cycles < 10_000, "controller stuck");
+        }
+        assert_eq!(
+            seen,
+            vec![
+                State::Hidden(0),
+                State::Hidden(1),
+                State::Hidden(2),
+                State::Output
+            ]
+        );
+        assert_eq!(cycles, CYCLES_PER_IMAGE);
+    }
+
+    #[test]
+    fn loops_back_for_multiple_images() {
+        let mut c = Controller::new(3);
+        let mut cycles = 0u32;
+        while !c.is_done() {
+            c.tick();
+            cycles += 1;
+        }
+        assert_eq!(cycles, 3 * CYCLES_PER_IMAGE);
+        assert_eq!(c.images_done(), 3);
+        assert!(c.signals().done);
+    }
+
+    #[test]
+    fn signal_decode_hidden_phase() {
+        let c = Controller::new(1);
+        let s = c.signals();
+        assert_eq!(s.wsel, 0);
+        assert!(s.mac_en && !s.store_en && !s.max_en && !s.input_from_hidden);
+    }
+
+    #[test]
+    fn store_cycle_is_last_of_hidden_state() {
+        let mut c = Controller::new(1);
+        for _ in 0..HIDDEN_MAC_CYCLES {
+            assert!(c.signals().mac_en);
+            c.tick();
+        }
+        let s = c.signals();
+        assert!(!s.mac_en && s.store_en);
+        c.tick();
+        assert_eq!(c.state(), State::Hidden(1));
+    }
+
+    #[test]
+    fn output_state_uses_hidden_registers_and_bank_3() {
+        let mut c = Controller::new(1);
+        for _ in 0..3 * (HIDDEN_MAC_CYCLES + 1) {
+            c.tick();
+        }
+        assert_eq!(c.state(), State::Output);
+        let s = c.signals();
+        assert_eq!(s.wsel, 3);
+        assert!(s.input_from_hidden && s.mac_en);
+    }
+
+    #[test]
+    fn zero_images_is_immediately_done() {
+        let c = Controller::new(0);
+        assert!(c.is_done());
+        assert!(c.signals().done);
+    }
+}

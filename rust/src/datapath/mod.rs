@@ -1,0 +1,516 @@
+//! Cycle-accurate simulator of the paper's MLP accelerator datapath.
+//!
+//! Two execution paths over the same arithmetic:
+//!
+//! * [`Network::forward`] — the fast functional path (table-driven MACs,
+//!   no cycle bookkeeping).  Used by the coordinator's software fallback
+//!   and the accuracy sweeps.
+//! * [`DatapathSim`] — the cycle-accurate path: a [`Controller`] walks
+//!   the paper's 5-state FSM, 10 physical [`Neuron`]s execute one MAC
+//!   per cycle each, hidden activations land in the 10x8-bit register
+//!   banks, and the max circuit produces the label.  Produces per-cycle
+//!   activity statistics that the power model consumes, and is asserted
+//!   bit-identical to `Network::forward` (and, transitively, to the JAX
+//!   oracle via the golden vectors).
+
+pub mod controller;
+pub mod neuron;
+
+use crate::amul::{Config, MulTables};
+use crate::dataset::N_FEATURES;
+use crate::weights::{QuantWeights, N_HIDDEN, N_OUTPUTS, N_PHYSICAL};
+use controller::{Controller, State};
+use neuron::{argmax, Neuron};
+
+/// Result of classifying one image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageResult {
+    pub pred: u8,
+    pub logits: [i32; N_OUTPUTS],
+    pub hidden: [u8; N_HIDDEN],
+}
+
+/// Aggregate switching-activity statistics from a cycle-accurate run.
+#[derive(Debug, Clone, Default)]
+pub struct ActivityStats {
+    pub cycles: u64,
+    pub mac_ops: u64,
+    /// Accumulator register bit toggles (all neurons).
+    pub acc_toggles: u64,
+    /// Hidden-register write bit toggles.
+    pub reg_toggles: u64,
+    /// Input/weight operand bus bit toggles (memory + mux activity).
+    pub bus_toggles: u64,
+    /// Images classified.
+    pub images: u64,
+}
+
+/// The trained network bound to the multiplier tables.
+pub struct Network {
+    pub weights: QuantWeights,
+    pub tables: MulTables,
+}
+
+impl Network {
+    pub fn new(weights: QuantWeights) -> Network {
+        Network {
+            weights,
+            tables: MulTables::build(),
+        }
+    }
+
+    /// Functional forward pass (bit-exact, no cycle model).
+    ///
+    /// Hot-path layout (see EXPERIMENTS.md §Perf): the input index is the
+    /// outer loop so weight-matrix reads are contiguous (row-major
+    /// `w[i*N + j]`), and the left operand's table row is hoisted out of
+    /// the inner loop (`MulTable::row`), amortizing the sign/magnitude
+    /// decode over the whole weight row.
+    pub fn forward(&self, x: &[u8; N_FEATURES], cfg: Config) -> ImageResult {
+        let t = self.tables.get(cfg);
+        let w = &self.weights;
+        let mut acc1 = [0i32; N_HIDDEN];
+        for (i, &xi) in x.iter().enumerate() {
+            let row = t.row(xi);
+            let wrow = &w.w1[i * N_HIDDEN..(i + 1) * N_HIDDEN];
+            for (a, &wv) in acc1.iter_mut().zip(wrow) {
+                *a += row.mul8_sm(wv);
+            }
+        }
+        let mut hidden = [0u8; N_HIDDEN];
+        for (j, h) in hidden.iter_mut().enumerate() {
+            let acc = acc1[j] + (crate::amul::sm::decode(w.b1[j]) << 7);
+            *h = neuron::saturate_activation(acc);
+        }
+        let mut logits = [0i32; N_OUTPUTS];
+        for (j, &hj) in hidden.iter().enumerate() {
+            let row = t.row(hj);
+            let wrow = &w.w2[j * N_OUTPUTS..(j + 1) * N_OUTPUTS];
+            for (l, &wv) in logits.iter_mut().zip(wrow) {
+                *l += row.mul8_sm(wv);
+            }
+        }
+        for (o, l) in logits.iter_mut().enumerate() {
+            *l += crate::amul::sm::decode(w.b2[o]) << 7;
+        }
+        ImageResult {
+            pred: argmax(&logits) as u8,
+            logits,
+            hidden,
+        }
+    }
+
+    /// Heterogeneous forward pass: each *physical neuron* `p` runs its
+    /// own multiplier configuration `cfgs[p]` (hidden neuron `j` maps to
+    /// physical neuron `j % 10`, matching the datapath's multiplexing).
+    ///
+    /// This is the per-neuron knob the paper hints at ("testing each
+    /// configuration across every set of 10 neurons"): e.g. keep the
+    /// output layer accurate while approximating the hidden passes.
+    pub fn forward_hetero(
+        &self,
+        x: &[u8; N_FEATURES],
+        cfgs: &[Config; N_PHYSICAL],
+    ) -> ImageResult {
+        let w = &self.weights;
+        let mut acc1 = [0i32; N_HIDDEN];
+        for (i, &xi) in x.iter().enumerate() {
+            let wrow = &w.w1[i * N_HIDDEN..(i + 1) * N_HIDDEN];
+            for (j, (a, &wv)) in acc1.iter_mut().zip(wrow).enumerate() {
+                let t = self.tables.get(cfgs[j % N_PHYSICAL]);
+                *a += t.mul8_sm(xi, wv);
+            }
+        }
+        let mut hidden = [0u8; N_HIDDEN];
+        for (j, h) in hidden.iter_mut().enumerate() {
+            let acc = acc1[j] + (crate::amul::sm::decode(w.b1[j]) << 7);
+            *h = neuron::saturate_activation(acc);
+        }
+        let mut logits = [0i32; N_OUTPUTS];
+        for (j, &hj) in hidden.iter().enumerate() {
+            let wrow = &w.w2[j * N_OUTPUTS..(j + 1) * N_OUTPUTS];
+            for (o, (l, &wv)) in logits.iter_mut().zip(wrow).enumerate() {
+                let t = self.tables.get(cfgs[o % N_PHYSICAL]);
+                *l += t.mul8_sm(hj, wv);
+            }
+        }
+        for (o, l) in logits.iter_mut().enumerate() {
+            *l += crate::amul::sm::decode(w.b2[o]) << 7;
+        }
+        ImageResult {
+            pred: argmax(&logits) as u8,
+            logits,
+            hidden,
+        }
+    }
+
+    /// Accuracy of the heterogeneous configuration assignment.
+    pub fn accuracy_hetero(
+        &self,
+        features: &[[u8; N_FEATURES]],
+        labels: &[u8],
+        cfgs: &[Config; N_PHYSICAL],
+    ) -> f64 {
+        let correct = features
+            .iter()
+            .zip(labels)
+            .filter(|(x, &y)| self.forward_hetero(x, cfgs).pred == y)
+            .count();
+        correct as f64 / labels.len() as f64
+    }
+
+    /// Classification accuracy of the functional path over a slice of
+    /// (features, label) pairs.
+    pub fn accuracy(&self, features: &[[u8; N_FEATURES]], labels: &[u8], cfg: Config) -> f64 {
+        assert_eq!(features.len(), labels.len());
+        let correct = features
+            .iter()
+            .zip(labels)
+            .filter(|(x, &y)| self.forward(x, cfg).pred == y)
+            .count();
+        correct as f64 / labels.len() as f64
+    }
+}
+
+/// Observer hook for per-MAC activity (the power model's netlist probes
+/// implement this; the null impl costs nothing).
+pub trait MacObserver {
+    /// Called for every MAC issued: physical neuron index, operands.
+    fn on_mac(&mut self, neuron: usize, x: u8, w: u8);
+}
+
+/// No-op observer.
+pub struct NullObserver;
+
+impl MacObserver for NullObserver {
+    #[inline(always)]
+    fn on_mac(&mut self, _: usize, _: u8, _: u8) {}
+}
+
+/// The cycle-accurate datapath.
+pub struct DatapathSim<'w> {
+    weights: &'w QuantWeights,
+    tables: &'w MulTables,
+    cfg: Config,
+    /// Per-physical-neuron configuration override (heterogeneous mode).
+    neuron_cfgs: Option<[Config; N_PHYSICAL]>,
+    neurons: Vec<Neuron>,
+    hidden_regs: [u8; N_HIDDEN],
+    prev_x_bus: u8,
+    prev_w_bus: [u8; N_PHYSICAL],
+    pub stats: ActivityStats,
+}
+
+impl<'w> DatapathSim<'w> {
+    pub fn new(net: &'w Network, cfg: Config) -> DatapathSim<'w> {
+        DatapathSim {
+            weights: &net.weights,
+            tables: &net.tables,
+            cfg,
+            neuron_cfgs: None,
+            neurons: (0..N_PHYSICAL).map(|_| Neuron::new()).collect(),
+            hidden_regs: [0; N_HIDDEN],
+            prev_x_bus: 0,
+            prev_w_bus: [0; N_PHYSICAL],
+            stats: ActivityStats::default(),
+        }
+    }
+
+    /// Change the error configuration (the dynamic power control knob).
+    /// Takes effect on the next MAC — in hardware this is a config
+    /// register driving the column-gating drivers.
+    pub fn set_config(&mut self, cfg: Config) {
+        self.cfg = cfg;
+        self.neuron_cfgs = None;
+    }
+
+    /// Heterogeneous mode: per-physical-neuron configurations.
+    pub fn set_neuron_configs(&mut self, cfgs: [Config; N_PHYSICAL]) {
+        self.neuron_cfgs = Some(cfgs);
+    }
+
+    pub fn config(&self) -> Config {
+        self.cfg
+    }
+
+    /// Run one image through the full 5-state FSM; returns the result
+    /// after `CYCLES_PER_IMAGE` simulated cycles.
+    pub fn run_image(&mut self, x: &[u8; N_FEATURES]) -> ImageResult {
+        self.run_image_observed(x, &mut NullObserver)
+    }
+
+    /// `run_image` with an activity observer on every MAC.
+    pub fn run_image_observed(
+        &mut self,
+        x: &[u8; N_FEATURES],
+        obs: &mut dyn MacObserver,
+    ) -> ImageResult {
+        let tables: Vec<&crate::amul::MulTable> = (0..N_PHYSICAL)
+            .map(|p| {
+                self.tables.get(match &self.neuron_cfgs {
+                    Some(cfgs) => cfgs[p],
+                    None => self.cfg,
+                })
+            })
+            .collect();
+        let mut ctrl = Controller::new(1);
+        let mut logits = [0i32; N_OUTPUTS];
+
+        while !ctrl.is_done() {
+            let sig = ctrl.signals();
+            let cyc = ctrl.cycle_in_state() as usize;
+            match ctrl.state() {
+                State::Hidden(g) => {
+                    if sig.mac_en {
+                        // one input element broadcast to all 10 neurons
+                        let xi = x[cyc];
+                        self.track_bus(xi, |w, n| w.w1_at(cyc, g as usize * N_PHYSICAL + n));
+                        for (p, neuron) in self.neurons.iter_mut().enumerate() {
+                            let wv = self.weights.w1_at(cyc, g as usize * N_PHYSICAL + p);
+                            obs.on_mac(p, xi, wv);
+                            neuron.mac(xi, wv, tables[p]);
+                        }
+                        self.stats.mac_ops += N_PHYSICAL as u64;
+                    } else if sig.store_en {
+                        for p in 0..N_PHYSICAL {
+                            let j = g as usize * N_PHYSICAL + p;
+                            self.neurons[p].add_bias(self.weights.b1[j]);
+                            let h = self.neurons[p].activate();
+                            self.stats.reg_toggles +=
+                                (self.hidden_regs[j] ^ h).count_ones() as u64;
+                            self.hidden_regs[j] = h;
+                            self.neurons[p].clear();
+                        }
+                    }
+                }
+                State::Output => {
+                    if sig.mac_en {
+                        let hj = self.hidden_regs[cyc];
+                        self.track_bus(hj, |w, n| w.w2_at(cyc, n));
+                        for (p, neuron) in self.neurons.iter_mut().enumerate() {
+                            let wv = self.weights.w2_at(cyc, p);
+                            obs.on_mac(p, hj, wv);
+                            neuron.mac(hj, wv, tables[p]);
+                        }
+                        self.stats.mac_ops += N_PHYSICAL as u64;
+                    } else if sig.max_en {
+                        for (p, logit) in logits.iter_mut().enumerate() {
+                            self.neurons[p].add_bias(self.weights.b2[p]);
+                            *logit = self.neurons[p].acc();
+                            self.neurons[p].clear();
+                        }
+                    }
+                }
+                State::Done => {}
+            }
+            ctrl.tick();
+            self.stats.cycles += 1;
+        }
+
+        self.stats.images += 1;
+        self.stats.acc_toggles = self.neurons.iter().map(|n| n.acc_toggles).sum();
+        ImageResult {
+            pred: argmax(&logits) as u8,
+            logits,
+            hidden: self.hidden_regs,
+        }
+    }
+
+    /// Track operand-bus switching (input broadcast bus + 10 weight buses).
+    #[inline]
+    fn track_bus(&mut self, x_bus: u8, weight_of: impl Fn(&QuantWeights, usize) -> u8) {
+        self.stats.bus_toggles += (self.prev_x_bus ^ x_bus).count_ones() as u64;
+        self.prev_x_bus = x_bus;
+        for n in 0..N_PHYSICAL {
+            let wv = weight_of(self.weights, n);
+            self.stats.bus_toggles += (self.prev_w_bus[n] ^ wv).count_ones() as u64;
+            self.prev_w_bus[n] = wv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn test_network() -> Network {
+        // deterministic pseudo-random weights (valid sign-magnitude)
+        let mut rng = Pcg32::new(1234);
+        let mut gen = |n: usize| -> Vec<u8> {
+            (0..n)
+                .map(|_| {
+                    let mag = rng.below(128) as u8;
+                    let sign = (rng.below(2) as u8) << 7;
+                    if mag == 0 {
+                        0
+                    } else {
+                        sign | mag
+                    }
+                })
+                .collect()
+        };
+        Network::new(QuantWeights {
+            w1: gen(62 * 30),
+            b1: gen(30),
+            w2: gen(30 * 10),
+            b2: gen(10),
+        })
+    }
+
+    fn random_input(rng: &mut Pcg32) -> [u8; N_FEATURES] {
+        let mut x = [0u8; N_FEATURES];
+        for v in x.iter_mut() {
+            *v = rng.below(128) as u8;
+        }
+        x
+    }
+
+    #[test]
+    fn cycle_accurate_matches_functional_all_key_configs() {
+        let net = test_network();
+        let mut rng = Pcg32::new(5);
+        for cfg in [0u32, 1, 9, 17, 32] {
+            let cfg = Config::new(cfg).unwrap();
+            for _ in 0..20 {
+                let x = random_input(&mut rng);
+                let fast = net.forward(&x, cfg);
+                let mut sim = DatapathSim::new(&net, cfg);
+                let slow = sim.run_image(&x);
+                assert_eq!(fast, slow, "{cfg}");
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_count_matches_controller_constant() {
+        let net = test_network();
+        let mut sim = DatapathSim::new(&net, Config::ACCURATE);
+        let x = [5u8; N_FEATURES];
+        sim.run_image(&x);
+        assert_eq!(sim.stats.cycles, controller::CYCLES_PER_IMAGE as u64);
+        // 62 inputs * 10 neurons * 3 states + 30 * 10 = 2160
+        assert_eq!(sim.stats.mac_ops, 2160);
+    }
+
+    #[test]
+    fn hidden_register_contents_match_functional_hidden() {
+        let net = test_network();
+        let mut rng = Pcg32::new(77);
+        let x = random_input(&mut rng);
+        let fast = net.forward(&x, Config::MAX_APPROX);
+        let mut sim = DatapathSim::new(&net, Config::MAX_APPROX);
+        let slow = sim.run_image(&x);
+        assert_eq!(fast.hidden, slow.hidden);
+    }
+
+    #[test]
+    fn observer_sees_every_mac() {
+        struct Counter(u64);
+        impl MacObserver for Counter {
+            fn on_mac(&mut self, _: usize, _: u8, _: u8) {
+                self.0 += 1;
+            }
+        }
+        let net = test_network();
+        let mut sim = DatapathSim::new(&net, Config::ACCURATE);
+        let mut obs = Counter(0);
+        sim.run_image_observed(&[1u8; N_FEATURES], &mut obs);
+        assert_eq!(obs.0, 2160);
+    }
+
+    #[test]
+    fn config_switch_between_images_changes_result() {
+        let net = test_network();
+        let mut rng = Pcg32::new(31);
+        // find an input where accurate and max-approx disagree in logits
+        let mut found = false;
+        let mut sim = DatapathSim::new(&net, Config::ACCURATE);
+        for _ in 0..50 {
+            let x = random_input(&mut rng);
+            let r0 = sim.run_image(&x);
+            sim.set_config(Config::MAX_APPROX);
+            let r32 = sim.run_image(&x);
+            sim.set_config(Config::ACCURATE);
+            if r0.logits != r32.logits {
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "approximation should perturb logits on some input");
+    }
+
+    #[test]
+    fn hetero_uniform_equals_homogeneous() {
+        let net = test_network();
+        let mut rng = Pcg32::new(41);
+        for cfg_i in [0u32, 9, 32] {
+            let cfg = Config::new(cfg_i).unwrap();
+            let cfgs = [cfg; 10];
+            for _ in 0..10 {
+                let x = random_input(&mut rng);
+                assert_eq!(net.forward_hetero(&x, &cfgs), net.forward(&x, cfg));
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_cycle_accurate_matches_functional() {
+        let net = test_network();
+        let mut rng = Pcg32::new(43);
+        // alternating assignment: even neurons accurate, odd worst
+        let mut cfgs = [Config::ACCURATE; 10];
+        for (p, c) in cfgs.iter_mut().enumerate() {
+            if p % 2 == 1 {
+                *c = Config::MAX_APPROX;
+            }
+        }
+        let mut sim = DatapathSim::new(&net, Config::ACCURATE);
+        sim.set_neuron_configs(cfgs);
+        for _ in 0..10 {
+            let x = random_input(&mut rng);
+            assert_eq!(sim.run_image(&x), net.forward_hetero(&x, &cfgs));
+        }
+        // switching back to homogeneous clears the override
+        sim.set_config(Config::MAX_APPROX);
+        let x = random_input(&mut rng);
+        assert_eq!(sim.run_image(&x), net.forward(&x, Config::MAX_APPROX));
+    }
+
+    #[test]
+    fn hetero_differs_from_both_extremes_on_some_input() {
+        let net = test_network();
+        let mut rng = Pcg32::new(47);
+        let mut cfgs = [Config::ACCURATE; 10];
+        for (p, c) in cfgs.iter_mut().enumerate() {
+            if p >= 5 {
+                *c = Config::MAX_APPROX;
+            }
+        }
+        let mut differs = false;
+        for _ in 0..50 {
+            let x = random_input(&mut rng);
+            let h = net.forward_hetero(&x, &cfgs);
+            let a = net.forward(&x, Config::ACCURATE);
+            let w = net.forward(&x, Config::MAX_APPROX);
+            if h.logits != a.logits && h.logits != w.logits {
+                differs = true;
+                break;
+            }
+        }
+        assert!(differs, "hetero assignment should be a distinct operating point");
+    }
+
+    #[test]
+    fn accuracy_helper_counts_correct() {
+        let net = test_network();
+        let mut rng = Pcg32::new(3);
+        let xs: Vec<[u8; N_FEATURES]> = (0..16).map(|_| random_input(&mut rng)).collect();
+        // label everything with the network's own prediction -> accuracy 1.0
+        let labels: Vec<u8> = xs
+            .iter()
+            .map(|x| net.forward(x, Config::ACCURATE).pred)
+            .collect();
+        assert_eq!(net.accuracy(&xs, &labels, Config::ACCURATE), 1.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! The hardware neuron (paper Fig. 3): error-configurable MAC, bias
+//! adder, ReLU, and the 21-bit -> 8-bit saturation stage.
+//!
+//! Fixed-point contract (matches `python/compile/kernels/ref.py`):
+//! products are at scale 1/128^2, the bias is shifted left 7 bits into
+//! the accumulator domain, the activation is `clamp(acc >> 7, 0, 127)`.
+
+use crate::amul::{sm, MulTable};
+
+/// Saturating activation: ReLU folded into the clamp's lower bound.
+#[inline]
+pub fn saturate_activation(acc: i32) -> u8 {
+    (acc >> 7).clamp(0, 127) as u8
+}
+
+/// One physical neuron: a 21-bit signed accumulator fed by the
+/// error-configurable multiplier.
+#[derive(Debug, Clone, Default)]
+pub struct Neuron {
+    acc: i32,
+    /// Bit-toggle count of the accumulator register (activity probe).
+    pub acc_toggles: u64,
+    /// Number of MAC operations issued.
+    pub mac_ops: u64,
+}
+
+impl Neuron {
+    pub fn new() -> Neuron {
+        Neuron::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.bump_toggles(0);
+        self.acc = 0;
+    }
+
+    #[inline]
+    fn bump_toggles(&mut self, new_acc: i32) {
+        // Hamming distance between consecutive accumulator values — the
+        // register-level switching activity the power model consumes.
+        self.acc_toggles += ((self.acc ^ new_acc) as u32 & 0x1F_FFFF).count_ones() as u64;
+    }
+
+    /// One MAC: acc += approx(x * w), sign handled by XOR.
+    #[inline]
+    pub fn mac(&mut self, x: u8, w: u8, table: &MulTable) {
+        let prod = table.mul8_sm(x, w);
+        let new = self.acc + prod;
+        self.bump_toggles(new);
+        self.acc = new;
+        self.mac_ops += 1;
+    }
+
+    /// Bias add (8-bit sign-magnitude bias, shifted into acc domain).
+    #[inline]
+    pub fn add_bias(&mut self, bias: u8) {
+        let new = self.acc + (sm::decode(bias) << 7);
+        self.bump_toggles(new);
+        self.acc = new;
+    }
+
+    /// Raw 21-bit accumulator (the output-layer logit).
+    pub fn acc(&self) -> i32 {
+        self.acc
+    }
+
+    /// Activation output for the hidden layer.
+    pub fn activate(&self) -> u8 {
+        saturate_activation(self.acc)
+    }
+}
+
+/// The max circuit (paper Fig. 4): comparator chain over the output
+/// accumulators; ties resolve to the lowest index.
+pub fn argmax(logits: &[i32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in logits.iter().enumerate().skip(1) {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amul::{Config, MulTable};
+
+    #[test]
+    fn saturation_clamps_and_shifts() {
+        assert_eq!(saturate_activation(0), 0);
+        assert_eq!(saturate_activation(-5000), 0); // ReLU
+        assert_eq!(saturate_activation(127 << 7), 127);
+        assert_eq!(saturate_activation((127 << 7) + 127), 127);
+        assert_eq!(saturate_activation(1 << 20), 127); // saturates
+        assert_eq!(saturate_activation(5 << 7), 5);
+        assert_eq!(saturate_activation((5 << 7) + 100), 5); // floor division
+    }
+
+    #[test]
+    fn mac_accumulates_exact_products_cfg0() {
+        let t = MulTable::build(Config::ACCURATE);
+        let mut n = Neuron::new();
+        n.mac(sm::encode(10), sm::encode(20), &t);
+        n.mac(sm::encode(-5), sm::encode(7), &t);
+        n.mac(sm::encode(3), sm::encode(-3), &t);
+        assert_eq!(n.acc(), 200 - 35 - 9);
+        assert_eq!(n.mac_ops, 3);
+    }
+
+    #[test]
+    fn bias_is_shifted_into_acc_domain() {
+        let mut n = Neuron::new();
+        n.add_bias(sm::encode(-3));
+        assert_eq!(n.acc(), -3 << 7);
+        n.add_bias(sm::encode(5));
+        assert_eq!(n.acc(), 2 << 7);
+    }
+
+    #[test]
+    fn clear_resets_acc_but_counts_activity() {
+        let t = MulTable::build(Config::ACCURATE);
+        let mut n = Neuron::new();
+        n.mac(sm::encode(100), sm::encode(100), &t);
+        assert_ne!(n.acc(), 0);
+        let toggles_before = n.acc_toggles;
+        n.clear();
+        assert_eq!(n.acc(), 0);
+        assert!(n.acc_toggles > toggles_before);
+    }
+
+    #[test]
+    fn argmax_ties_resolve_low() {
+        assert_eq!(argmax(&[1, 5, 5, 2]), 1);
+        assert_eq!(argmax(&[-10, -3, -3]), 1);
+        assert_eq!(argmax(&[7]), 0);
+        assert_eq!(argmax(&[0, 0, 0, 0, 0, 0, 0, 0, 0, 1]), 9);
+    }
+
+    #[test]
+    fn acc_stays_in_21_bits_for_worst_case() {
+        // 62 products of +/-16129 plus bias: |acc| <= 62*16129 + 127*128
+        // = 1_016_254 < 2^20, so a 21-bit signed accumulator never
+        // overflows — the paper's width claim, verified.
+        let max = 62 * 127 * 127 + 127 * 128;
+        assert!(max < (1 << 20), "max {max}");
+    }
+}

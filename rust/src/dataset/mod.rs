@@ -1,0 +1,131 @@
+//! Dataset loading + the hardware input pipeline (feature reduction and
+//! 7-bit quantization), matching the build-time python exactly.
+
+use crate::util::idx;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Number of reduced input features (the paper's 62-node input layer).
+pub const N_FEATURES: usize = 62;
+
+/// A loaded, reduced, quantized evaluation set.
+pub struct Dataset {
+    /// Sign-magnitude encoded features, sign bit always 0: (n, 62).
+    pub features: Vec<[u8; N_FEATURES]>,
+    pub labels: Vec<u8>,
+    /// The frozen 784 -> 62 pixel wiring.
+    pub feature_indices: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Load the test set from an artifacts directory.
+    pub fn load_test(artifacts: &Path) -> Result<Dataset> {
+        Self::load(
+            &artifacts.join("test-images.idx3"),
+            &artifacts.join("test-labels.idx1"),
+            &artifacts.join("feature-indices.txt"),
+        )
+    }
+
+    /// Load the training set from an artifacts directory.
+    pub fn load_train(artifacts: &Path) -> Result<Dataset> {
+        Self::load(
+            &artifacts.join("train-images.idx3"),
+            &artifacts.join("train-labels.idx1"),
+            &artifacts.join("feature-indices.txt"),
+        )
+    }
+
+    pub fn load(images: &Path, labels: &Path, feat_idx: &Path) -> Result<Dataset> {
+        let images = idx::read_images(images).context("loading images")?;
+        let labels = idx::read_labels(labels).context("loading labels")?;
+        anyhow::ensure!(
+            images.n == labels.len(),
+            "image/label count mismatch: {} vs {}",
+            images.n,
+            labels.len()
+        );
+        let feature_indices = load_feature_indices(feat_idx)?;
+        let features = (0..images.n)
+            .map(|i| reduce_and_quantize(images.image(i), &feature_indices))
+            .collect();
+        Ok(Dataset {
+            features,
+            labels,
+            feature_indices,
+        })
+    }
+}
+
+/// Parse `feature-indices.txt` (one index per line).
+pub fn load_feature_indices(path: &Path) -> Result<Vec<usize>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let idxs: Vec<usize> = text
+        .split_whitespace()
+        .map(|t| t.parse::<usize>().context("bad feature index"))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(
+        idxs.len() == N_FEATURES,
+        "expected {N_FEATURES} feature indices, got {}",
+        idxs.len()
+    );
+    Ok(idxs)
+}
+
+/// The hardware input stage: select the 62 wired pixels and quantize each
+/// uint8 pixel to a 7-bit magnitude (pixel >> 1), sign bit 0.
+pub fn reduce_and_quantize(image: &[u8], indices: &[usize]) -> [u8; N_FEATURES] {
+    let mut out = [0u8; N_FEATURES];
+    for (slot, &pix) in indices.iter().enumerate() {
+        out[slot] = image[pix] >> 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_and_quantize_picks_and_shifts() {
+        let mut img = vec![0u8; 784];
+        img[10] = 255;
+        img[20] = 128;
+        img[30] = 1;
+        let mut indices = vec![0usize; N_FEATURES];
+        indices[0] = 10;
+        indices[1] = 20;
+        indices[2] = 30;
+        let out = reduce_and_quantize(&img, &indices);
+        assert_eq!(out[0], 127);
+        assert_eq!(out[1], 64);
+        assert_eq!(out[2], 0);
+        assert_eq!(out[3], 0);
+        // sign bit never set
+        assert!(out.iter().all(|&v| v < 0x80));
+    }
+
+    #[test]
+    fn feature_indices_parse_and_validate() {
+        let dir = std::env::temp_dir().join("ecmac_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("feat.txt");
+        let body: String = (0..N_FEATURES).map(|i| format!("{i}\n")).collect();
+        std::fs::write(&p, body).unwrap();
+        let idxs = load_feature_indices(&p).unwrap();
+        assert_eq!(idxs.len(), N_FEATURES);
+        assert_eq!(idxs[5], 5);
+
+        std::fs::write(&p, "1 2 3").unwrap();
+        assert!(load_feature_indices(&p).is_err());
+    }
+}

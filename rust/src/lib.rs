@@ -1,0 +1,36 @@
+//! # ecmac — dynamic power control in a hardware MLP with error-configurable MAC units
+//!
+//! Full-system reproduction of the CS.AR 2024 paper: a 45nm hardware MLP
+//! accelerator (62-30-10, 10 physical neurons, 5-state FSM controller)
+//! whose MAC units embed an error-configurable approximate multiplier
+//! with 32 approximate configurations plus an accurate mode; changing
+//! the configuration at runtime trades classification accuracy for
+//! power — the paper's "dynamic power control".
+//!
+//! The stack has three layers:
+//!
+//! * **Layer 1 (build-time python)** — the approximate multiplier as a
+//!   Pallas kernel, checked bit-for-bit against a pure-jnp oracle.
+//! * **Layer 2 (build-time python)** — the quantized 62-30-10 MLP in JAX,
+//!   trained and AOT-lowered to HLO text artifacts.
+//! * **Layer 3 (this crate)** — everything at runtime: the bit-exact
+//!   multiplier model ([`amul`]), the gate-level netlist and 45nm power
+//!   model ([`netlist`], [`power`]), the cycle-accurate datapath
+//!   simulator ([`datapath`]), the PJRT runtime that executes the AOT
+//!   artifacts ([`runtime`]), and the dynamic-power-control coordinator
+//!   ([`coordinator`]).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod amul;
+pub mod coordinator;
+pub mod datapath;
+pub mod dataset;
+pub mod netlist;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+pub mod weights;

@@ -1,0 +1,638 @@
+//! ecmac CLI — the leader entrypoint for the reproduction.
+//!
+//! Subcommands map to the paper's experiments (see DESIGN.md):
+//!   info       artifact + model + area summary
+//!   table1     Table I (multiplier error statistics)
+//!   power      power sweep: Fig. 5 + Fig. 6 + Fig. 7 + CSV
+//!   area       area roll-up vs the paper's 26084 um^2
+//!   accuracy   test-set accuracy per configuration (native or PJRT)
+//!   classify   one image through native + cycle-accurate + PJRT backends
+//!   serve      synthetic-load serving demo with a governor policy
+
+use anyhow::{Context, Result};
+use ecmac::amul::{metrics, Config};
+use ecmac::coordinator::governor::{AccuracyTable, Policy};
+use ecmac::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, Governor, NativeBackend, PjrtBackend,
+};
+use ecmac::dataset::Dataset;
+use ecmac::datapath::{DatapathSim, Network};
+use ecmac::power::{MultiplierEnergyProfile, PowerModel};
+use ecmac::report;
+use ecmac::util::cli::{Args, OptSpec};
+use ecmac::weights::QuantWeights;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print_global_usage();
+        std::process::exit(2);
+    };
+    let rest = &argv[1..];
+    let result = match cmd {
+        "info" => cmd_info(rest),
+        "table1" => cmd_table1(rest),
+        "power" => cmd_power(rest),
+        "area" => cmd_area(rest),
+        "accuracy" => cmd_accuracy(rest),
+        "classify" => cmd_classify(rest),
+        "serve" => cmd_serve(rest),
+        "ablation" => cmd_ablation(rest),
+        "verilog" => cmd_verilog(rest),
+        "--help" | "-h" | "help" => {
+            print_global_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_global_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_global_usage() {
+    println!(
+        "ecmac — dynamic power control in a hardware MLP with error-configurable MAC units\n\n\
+         commands:\n\
+         \x20 info       artifact + model + area summary\n\
+         \x20 table1     Table I: multiplier error statistics\n\
+         \x20 power      power sweep (Fig. 5/6/7 + CSV)\n\
+         \x20 area       area roll-up\n\
+         \x20 accuracy   per-configuration test accuracy\n\
+         \x20 classify   one image through all backends\n\
+         \x20 serve      serving demo with a governor policy\n\
+         \x20 ablation   heterogeneous per-neuron configuration study\n\
+         \x20 verilog    export the EC multiplier as synthesizable Verilog\n"
+    );
+}
+
+fn common_opts() -> Vec<OptSpec> {
+    vec![OptSpec {
+        name: "artifacts",
+        help: "artifacts directory (default: $ECMAC_ARTIFACTS or ./artifacts)",
+        takes_value: true,
+        default: None,
+    }]
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(ecmac::runtime::default_artifacts_dir)
+}
+
+/// Build the calibrated power model; uses real operand traces from the
+/// test set when `trace_images > 0`, synthetic streams otherwise.
+fn power_model(artifacts: &PathBuf, trace_images: usize) -> Result<PowerModel> {
+    let profile = if trace_images > 0 {
+        let ds = Dataset::load_test(artifacts)?;
+        let weights = QuantWeights::load_artifacts(artifacts)?;
+        let net = Network::new(weights);
+        let n = trace_images.min(ds.len());
+        // capture per-neuron operand traces with the cycle-accurate sim
+        struct Tracer {
+            traces: Vec<Vec<(u32, u32)>>,
+        }
+        impl ecmac::datapath::MacObserver for Tracer {
+            fn on_mac(&mut self, neuron: usize, x: u8, w: u8) {
+                self.traces[neuron].push(((x & 0x7F) as u32, (w & 0x7F) as u32));
+            }
+        }
+        let mut tracer = Tracer {
+            traces: vec![Vec::new(); 10],
+        };
+        let mut sim = DatapathSim::new(&net, Config::ACCURATE);
+        for i in 0..n {
+            sim.run_image_observed(&ds.features[i], &mut tracer);
+        }
+        MultiplierEnergyProfile::measure_traces(&tracer.traces)
+    } else {
+        MultiplierEnergyProfile::measure_synthetic(4000, 0xD1E5E1)
+    };
+    Ok(PowerModel::calibrate(profile)?)
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let spec = common_opts();
+    let args = Args::parse(argv, &spec)?;
+    let dir = artifacts_dir(&args);
+    println!("artifacts: {}", dir.display());
+    let weights = QuantWeights::load_artifacts(&dir)?;
+    println!(
+        "network: 62-30-10 MLP, {} hidden weights, {} output weights, 10 physical neurons",
+        weights.w1.len(),
+        weights.w2.len()
+    );
+    let ds = Dataset::load_test(&dir)?;
+    println!("test set: {} images, 62 features each", ds.len());
+    println!(
+        "cycles/image: {} ({:.2} us at 100 MHz)",
+        ecmac::datapath::controller::CYCLES_PER_IMAGE,
+        ecmac::datapath::controller::CYCLES_PER_IMAGE as f64 / 100.0
+    );
+    println!(
+        "area: {:.0} um2 (paper: {:.0} um2)",
+        ecmac::power::area::total_area_um2(),
+        ecmac::power::area::PAPER_AREA_UM2
+    );
+    println!(
+        "timing: MAC critical path {:.2} ns -> fmax {:.0} MHz (paper: 100-330 MHz)",
+        ecmac::power::area::timing::mac_critical_path_ps() / 1000.0,
+        ecmac::power::area::timing::fmax_mhz()
+    );
+    match ecmac::runtime::Engine::load(&dir) {
+        Ok(engine) => println!("pjrt: compiled batch sizes {:?}", engine.batch_sizes()),
+        Err(e) => println!("pjrt: not available ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_table1(argv: &[String]) -> Result<()> {
+    let mut spec = common_opts();
+    spec.push(OptSpec {
+        name: "csv",
+        help: "write per-config CSV to this path",
+        takes_value: true,
+        default: None,
+    });
+    let args = Args::parse(argv, &spec)?;
+    let stats = metrics::full_table();
+    let summary = metrics::table_i(&stats);
+    println!("{}", report::table_i(&stats, &summary));
+    if let Some(path) = args.get("csv") {
+        let mut t = report::TextTable::new(&["cfg", "er_pct", "mred_pct", "nmed_pct", "max_ed"]);
+        for s in &stats {
+            t.row(vec![
+                s.cfg.to_string(),
+                format!("{:.6}", s.er_pct),
+                format!("{:.6}", s.mred_pct),
+                format!("{:.6}", s.nmed_pct),
+                s.max_ed.to_string(),
+            ]);
+        }
+        std::fs::write(path, t.to_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_power(argv: &[String]) -> Result<()> {
+    let mut spec = common_opts();
+    spec.push(OptSpec {
+        name: "trace-images",
+        help: "calibrate on operand traces from N test images (0 = synthetic stream)",
+        takes_value: true,
+        default: Some("64"),
+    });
+    spec.push(OptSpec {
+        name: "csv",
+        help: "write the sweep CSV to this path",
+        takes_value: true,
+        default: None,
+    });
+    let args = Args::parse(argv, &spec)?;
+    let dir = artifacts_dir(&args);
+    let trace_images: usize = args.get_or("trace-images", 64)?;
+    let pm = power_model(&dir, trace_images)?;
+    let sweep = pm.sweep();
+    let acc = AccuracyTable::load(&dir.join("accuracy_sweep.json"))
+        .map(|t| t.accuracy)
+        .unwrap_or_else(|_| vec![f64::NAN; ecmac::amul::N_CONFIGS]);
+    println!("{}", report::fig5_power_improvement(&sweep));
+    println!("{}", report::fig6_power_accuracy(&sweep, &acc));
+    println!("{}", report::fig7_tradeoff(&sweep, &acc));
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, report::sweep_csv(&sweep, &acc, &pm))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_area(argv: &[String]) -> Result<()> {
+    let spec = common_opts();
+    let _ = Args::parse(argv, &spec)?;
+    println!("{}", report::area_table());
+    Ok(())
+}
+
+fn cmd_accuracy(argv: &[String]) -> Result<()> {
+    let mut spec = common_opts();
+    spec.push(OptSpec {
+        name: "backend",
+        help: "native | pjrt | cycle",
+        takes_value: true,
+        default: Some("native"),
+    });
+    spec.push(OptSpec {
+        name: "configs",
+        help: "'all' or comma-separated config list",
+        takes_value: true,
+        default: Some("all"),
+    });
+    spec.push(OptSpec {
+        name: "limit",
+        help: "evaluate at most N test images (0 = all)",
+        takes_value: true,
+        default: Some("0"),
+    });
+    let args = Args::parse(argv, &spec)?;
+    let dir = artifacts_dir(&args);
+    let ds = Dataset::load_test(&dir)?;
+    let limit: usize = args.get_or("limit", 0)?;
+    let n = if limit == 0 { ds.len() } else { limit.min(ds.len()) };
+    let configs: Vec<Config> = match args.get("configs") {
+        Some("all") | None => Config::all().collect(),
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u32>()
+                    .ok()
+                    .and_then(Config::new)
+                    .with_context(|| format!("bad config '{s}'"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    let backend = args.get("backend").unwrap_or("native").to_string();
+    let features = &ds.features[..n];
+    let labels = &ds.labels[..n];
+
+    let mut t = report::TextTable::new(&["cfg", "accuracy %", "correct", "images"]);
+    match backend.as_str() {
+        "native" => {
+            let net = Network::new(QuantWeights::load_artifacts(&dir)?);
+            // parallel over configs
+            let accs = ecmac::util::threadpool::par_map(&configs, |_, &cfg| {
+                net.accuracy(features, labels, cfg)
+            });
+            for (cfg, acc) in configs.iter().zip(accs) {
+                t.row(vec![
+                    cfg.index().to_string(),
+                    format!("{:.2}", acc * 100.0),
+                    format!("{:.0}", acc * n as f64),
+                    n.to_string(),
+                ]);
+            }
+        }
+        "pjrt" => {
+            let engine = ecmac::runtime::Engine::load(&dir)?;
+            for &cfg in &configs {
+                let out = engine.execute(features, cfg)?;
+                let correct = out
+                    .preds
+                    .iter()
+                    .zip(labels)
+                    .filter(|(p, l)| p == l)
+                    .count();
+                t.row(vec![
+                    cfg.index().to_string(),
+                    format!("{:.2}", correct as f64 / n as f64 * 100.0),
+                    correct.to_string(),
+                    n.to_string(),
+                ]);
+            }
+        }
+        "cycle" => {
+            let net = Network::new(QuantWeights::load_artifacts(&dir)?);
+            for &cfg in &configs {
+                let mut sim = DatapathSim::new(&net, cfg);
+                let correct = features
+                    .iter()
+                    .zip(labels)
+                    .filter(|(x, &l)| sim.run_image(x).pred == l)
+                    .count();
+                t.row(vec![
+                    cfg.index().to_string(),
+                    format!("{:.2}", correct as f64 / n as f64 * 100.0),
+                    correct.to_string(),
+                    n.to_string(),
+                ]);
+            }
+        }
+        other => anyhow::bail!("unknown backend '{other}'"),
+    }
+    println!(
+        "accuracy on {n} test images via {backend} backend\n\
+         (paper: 89.67% accurate, 88.75% worst, 89.11% avg)\n"
+    );
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_classify(argv: &[String]) -> Result<()> {
+    let mut spec = common_opts();
+    spec.push(OptSpec {
+        name: "index",
+        help: "test-set image index",
+        takes_value: true,
+        default: Some("0"),
+    });
+    spec.push(OptSpec {
+        name: "cfg",
+        help: "multiplier configuration (0..32)",
+        takes_value: true,
+        default: Some("0"),
+    });
+    let args = Args::parse(argv, &spec)?;
+    let dir = artifacts_dir(&args);
+    let idx: usize = args.get_or("index", 0)?;
+    let cfg = Config::new(args.get_or("cfg", 0u32)?).context("cfg must be 0..=32")?;
+    let ds = Dataset::load_test(&dir)?;
+    anyhow::ensure!(idx < ds.len(), "index {idx} out of range ({})", ds.len());
+    let x = &ds.features[idx];
+    let label = ds.labels[idx];
+    let net = Network::new(QuantWeights::load_artifacts(&dir)?);
+
+    let fast = net.forward(x, cfg);
+    println!("image {idx} (label {label}), {cfg}");
+    println!("  native:          pred {}  logits {:?}", fast.pred, fast.logits);
+    let mut sim = DatapathSim::new(&net, cfg);
+    let slow = sim.run_image(x);
+    println!(
+        "  cycle-accurate:  pred {}  ({} cycles)  match={}",
+        slow.pred,
+        sim.stats.cycles,
+        slow == fast
+    );
+    match ecmac::runtime::Engine::load(&dir) {
+        Ok(engine) => {
+            let out = engine.execute(std::slice::from_ref(x), cfg)?;
+            println!(
+                "  pjrt (AOT jax):  pred {}  logits {:?}  match={}",
+                out.preds[0],
+                out.logits[0],
+                out.logits[0] == fast.logits
+            );
+        }
+        Err(e) => println!("  pjrt: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let mut spec = common_opts();
+    spec.push(OptSpec {
+        name: "policy",
+        help: "fixed:<cfg> | budget:<mw> | floor:<accuracy> | energy:<mj>:<images>",
+        takes_value: true,
+        default: Some("budget:5.0"),
+    });
+    spec.push(OptSpec {
+        name: "requests",
+        help: "number of synthetic requests",
+        takes_value: true,
+        default: Some("2000"),
+    });
+    spec.push(OptSpec {
+        name: "rate",
+        help: "arrival rate, requests/second (poisson)",
+        takes_value: true,
+        default: Some("20000"),
+    });
+    spec.push(OptSpec {
+        name: "backend",
+        help: "native | pjrt",
+        takes_value: true,
+        default: Some("native"),
+    });
+    spec.push(OptSpec {
+        name: "max-batch",
+        help: "maximum batch size",
+        takes_value: true,
+        default: Some("16"),
+    });
+    let args = Args::parse(argv, &spec)?;
+    let dir = artifacts_dir(&args);
+    let n_requests: usize = args.get_or("requests", 2000)?;
+    let rate: f64 = args.get_or("rate", 20000.0)?;
+    let max_batch: usize = args.get_or("max-batch", 16)?;
+
+    let pm = power_model(&dir, 32)?;
+    let acc_table = AccuracyTable::load(&dir.join("accuracy_sweep.json"))?;
+    let policy = parse_policy(args.get("policy").unwrap_or("budget:5.0"))?;
+    let governor = Governor::new(policy.clone(), &pm, &acc_table);
+
+    let backend: Arc<dyn Backend> = match args.get("backend").unwrap_or("native") {
+        "native" => Arc::new(NativeBackend {
+            network: Network::new(QuantWeights::load_artifacts(&dir)?),
+        }),
+        "pjrt" => Arc::new(PjrtBackend::spawn(dir.clone())?),
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+    let backend_name = backend.name();
+
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            max_batch,
+            max_wait: Duration::from_micros(300),
+            queue_capacity: 4096,
+            workers: 2,
+        },
+        backend,
+        governor,
+        pm.clone(),
+    );
+
+    let ds = Dataset::load_test(&dir)?;
+    let mut rng = ecmac::util::rng::Pcg32::new(7);
+    println!(
+        "serving {n_requests} requests at ~{rate:.0}/s via {backend_name} backend, policy {policy:?}"
+    );
+    let t0 = std::time::Instant::now();
+    let mut replies = Vec::with_capacity(n_requests);
+    let mut true_labels = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        let i = rng.below(ds.len() as u32) as usize;
+        true_labels.push(ds.labels[i]);
+        // poisson arrivals
+        let gap = rng.exponential(rate);
+        if gap > 1e-6 {
+            std::thread::sleep(Duration::from_secs_f64(gap.min(0.01)));
+        }
+        match coord.try_submit(ds.features[i]) {
+            Some(r) => replies.push(Some(r)),
+            None => replies.push(None),
+        }
+    }
+    let mut correct = 0u64;
+    let mut answered = 0u64;
+    for (r, label) in replies.into_iter().zip(true_labels) {
+        if let Some(r) = r {
+            if let Some(resp) = r.recv() {
+                answered += 1;
+                if resp.pred == label {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    let decisions = coord.decisions();
+    let m = coord.shutdown();
+    println!("\n=== serving summary ===");
+    println!("wall time          {:.3} s", wall.as_secs_f64());
+    println!(
+        "answered           {answered} / {n_requests} (rejected {})",
+        m.rejected
+    );
+    println!(
+        "accuracy           {:.2}%",
+        correct as f64 / answered.max(1) as f64 * 100.0
+    );
+    println!(
+        "throughput         {:.0} img/s",
+        answered as f64 / wall.as_secs_f64()
+    );
+    println!("latency mean       {:.0} us", m.mean_latency_us);
+    println!(
+        "latency p50/p99    {} / {} us",
+        m.p50_latency_us, m.p99_latency_us
+    );
+    println!("mean batch         {:.2}", m.mean_batch_size);
+    println!("modeled energy     {:.3} mJ", m.energy_mj);
+    let used: Vec<(usize, u64)> = m
+        .per_cfg
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(i, &c)| (i, c))
+        .collect();
+    println!("configs used       {used:?}");
+    println!("governor decisions {decisions:?}");
+    Ok(())
+}
+
+fn parse_policy(s: &str) -> Result<Policy> {
+    let parts: Vec<&str> = s.split(':').collect();
+    match parts.as_slice() {
+        ["fixed", cfg] => Ok(Policy::Fixed(
+            Config::new(cfg.parse()?).context("cfg out of range")?,
+        )),
+        ["budget", mw] => Ok(Policy::PowerBudget {
+            budget_mw: mw.parse()?,
+        }),
+        ["floor", acc] => Ok(Policy::AccuracyFloor {
+            min_accuracy: acc.parse()?,
+        }),
+        ["energy", mj, imgs] => Ok(Policy::EnergyBudget {
+            budget_mj: mj.parse()?,
+            horizon_images: imgs.parse()?,
+        }),
+        _ => anyhow::bail!(
+            "bad policy '{s}' (fixed:<cfg> | budget:<mw> | floor:<acc> | energy:<mj>:<images>)"
+        ),
+    }
+}
+
+fn cmd_ablation(argv: &[String]) -> Result<()> {
+    let mut spec = common_opts();
+    spec.push(OptSpec {
+        name: "limit",
+        help: "test images to evaluate (0 = all)",
+        takes_value: true,
+        default: Some("4000"),
+    });
+    let args = Args::parse(argv, &spec)?;
+    let dir = artifacts_dir(&args);
+    let ds = Dataset::load_test(&dir)?;
+    let limit: usize = args.get_or("limit", 4000)?;
+    let n = if limit == 0 { ds.len() } else { limit.min(ds.len()) };
+    let net = Network::new(QuantWeights::load_artifacts(&dir)?);
+    let pm = power_model(&dir, 32)?;
+
+    // named heterogeneous assignments over the 10 physical neurons
+    let worst = Config::MAX_APPROX;
+    let acc0 = Config::ACCURATE;
+    let mut half = [acc0; 10];
+    for (p, c) in half.iter_mut().enumerate() {
+        if p % 2 == 1 {
+            *c = worst;
+        }
+    }
+    let mut three_quarters = [worst; 10];
+    for c in three_quarters.iter_mut().take(3) {
+        *c = acc0;
+    }
+    let mid = Config::new(16).unwrap();
+    let assignments: Vec<(&str, [Config; 10])> = vec![
+        ("all-accurate", [acc0; 10]),
+        ("all-mid(16)", [mid; 10]),
+        ("all-worst(32)", [worst; 10]),
+        ("alternating acc/worst", half),
+        ("3 accurate + 7 worst", three_quarters),
+    ];
+
+    println!(
+        "heterogeneous per-neuron configuration ablation ({n} test images)\n\
+         (extends the paper: per-MAC config is a finer knob than the global one)\n"
+    );
+    let mut t = ecmac::report::TextTable::new(&[
+        "assignment",
+        "accuracy %",
+        "power mW",
+        "saving %",
+    ]);
+    let p0 = pm.breakdown(Config::ACCURATE).total_mw;
+    for (name, cfgs) in &assignments {
+        let acc = net.accuracy_hetero(&ds.features[..n], &ds.labels[..n], cfgs);
+        let p = pm.total_hetero_mw(cfgs);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", acc * 100.0),
+            format!("{:.3}", p),
+            format!("{:.2}", (p0 - p) / p0 * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "note: intermediate assignments open operating points between the\n\
+         paper's global configurations — e.g. output-critical neurons can\n\
+         stay accurate while the rest save power."
+    );
+    Ok(())
+}
+
+fn cmd_verilog(argv: &[String]) -> Result<()> {
+    let mut spec = common_opts();
+    spec.push(OptSpec {
+        name: "out",
+        help: "output file for the module (default: stdout)",
+        takes_value: true,
+        default: None,
+    });
+    spec.push(OptSpec {
+        name: "testbench",
+        help: "also write a self-checking testbench for this config",
+        takes_value: true,
+        default: None,
+    });
+    let args = Args::parse(argv, &spec)?;
+    let m = ecmac::netlist::multiplier::MultiplierNet::build();
+    let v = ecmac::netlist::verilog::multiplier_verilog(&m);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &v)?;
+            println!("wrote {path} ({} lines)", v.lines().count());
+        }
+        None => print!("{v}"),
+    }
+    if let Some(cfg_s) = args.get("testbench") {
+        let cfg = Config::new(cfg_s.parse()?).context("cfg must be 0..=32")?;
+        let mut rng = ecmac::util::rng::Pcg32::new(2024);
+        let vectors: Vec<(u32, u32)> =
+            (0..64).map(|_| (rng.below(128), rng.below(128))).collect();
+        let tb = ecmac::netlist::verilog::multiplier_testbench(cfg, &vectors);
+        let path = format!("tb_approx_mul_cfg{}.v", cfg.index());
+        std::fs::write(&path, tb)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

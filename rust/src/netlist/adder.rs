@@ -1,0 +1,157 @@
+//! Ripple-carry arithmetic netlist builders: adders, subtractors,
+//! comparators — the accumulator, bias and max-circuit substrate.
+
+use super::{DomainId, NetId, Netlist};
+
+/// Ripple-carry adder over two equal-width buses; returns (sum, carry_out).
+pub fn ripple_add(
+    nl: &mut Netlist,
+    a: &[NetId],
+    b: &[NetId],
+    cin: NetId,
+    dom: DomainId,
+) -> (Vec<NetId>, NetId) {
+    assert_eq!(a.len(), b.len());
+    let mut sum = Vec::with_capacity(a.len());
+    let mut carry = cin;
+    for (&ai, &bi) in a.iter().zip(b) {
+        let (s, c) = nl.fa(ai, bi, carry, dom);
+        sum.push(s);
+        carry = c;
+    }
+    (sum, carry)
+}
+
+/// Ripple subtractor `a - b` (two's complement): returns (diff, borrow_free)
+/// where `borrow_free = 1` means `a >= b`.
+pub fn ripple_sub(
+    nl: &mut Netlist,
+    a: &[NetId],
+    b: &[NetId],
+    dom: DomainId,
+) -> (Vec<NetId>, NetId) {
+    assert_eq!(a.len(), b.len());
+    let nb: Vec<NetId> = b.iter().map(|&x| nl.inv(x, dom)).collect();
+    let one = nl.one();
+    ripple_add(nl, a, &nb, one, dom)
+}
+
+/// Unsigned comparator: net is 1 when `a > b`.
+pub fn gt(nl: &mut Netlist, a: &[NetId], b: &[NetId], dom: DomainId) -> NetId {
+    // a > b  <=>  b - a borrows  <=>  !(b >= a)
+    let (_, b_ge_a) = ripple_sub(nl, b, a, dom);
+    nl.inv(b_ge_a, dom)
+}
+
+/// Zero-extend a bus to `width` using the constant-zero net.
+pub fn zext(nl: &Netlist, bus: &[NetId], width: usize) -> Vec<NetId> {
+    assert!(width >= bus.len());
+    let mut out = bus.to_vec();
+    out.resize(width, nl.zero());
+    out
+}
+
+/// Mux two equal-width buses: `sel ? b : a`.
+pub fn mux_bus(
+    nl: &mut Netlist,
+    sel: NetId,
+    a: &[NetId],
+    b: &[NetId],
+    dom: DomainId,
+) -> Vec<NetId> {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| nl.mux2(sel, x, y, dom))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::{Sim, DOMAIN_ON};
+
+    fn fresh_bus(nl: &mut Netlist, w: usize) -> Vec<NetId> {
+        (0..w).map(|_| nl.fresh_net()).collect()
+    }
+
+    #[test]
+    fn adder_exhaustive_6bit() {
+        let mut nl = Netlist::new();
+        let a = fresh_bus(&mut nl, 6);
+        let b = fresh_bus(&mut nl, 6);
+        let zero = nl.zero();
+        let (sum, cout) = ripple_add(&mut nl, &a, &b, zero, DOMAIN_ON);
+        let mut sim = Sim::new(&nl);
+        for va in (0..64).step_by(3) {
+            for vb in (0..64).step_by(5) {
+                sim.set_bus(&a, va);
+                sim.set_bus(&b, vb);
+                sim.step();
+                let got = sim.get_bus(&sum) | ((sim.get(cout) as u64) << 6);
+                assert_eq!(got, va + vb);
+            }
+        }
+    }
+
+    #[test]
+    fn subtractor_and_borrow() {
+        let mut nl = Netlist::new();
+        let a = fresh_bus(&mut nl, 8);
+        let b = fresh_bus(&mut nl, 8);
+        let (diff, no_borrow) = ripple_sub(&mut nl, &a, &b, DOMAIN_ON);
+        let mut sim = Sim::new(&nl);
+        for (va, vb) in [(200u64, 13u64), (13, 200), (77, 77), (255, 0), (0, 255)] {
+            sim.set_bus(&a, va);
+            sim.set_bus(&b, vb);
+            sim.step();
+            let got = sim.get_bus(&diff);
+            assert_eq!(got, va.wrapping_sub(vb) & 0xFF);
+            assert_eq!(sim.get(no_borrow), va >= vb);
+        }
+    }
+
+    #[test]
+    fn comparator() {
+        let mut nl = Netlist::new();
+        let a = fresh_bus(&mut nl, 7);
+        let b = fresh_bus(&mut nl, 7);
+        let a_gt_b = gt(&mut nl, &a, &b, DOMAIN_ON);
+        let mut sim = Sim::new(&nl);
+        for (va, vb) in [(5u64, 3u64), (3, 5), (100, 100), (127, 0), (0, 127), (64, 63)] {
+            sim.set_bus(&a, va);
+            sim.set_bus(&b, vb);
+            sim.step();
+            assert_eq!(sim.get(a_gt_b), va > vb, "{va} > {vb}");
+        }
+    }
+
+    #[test]
+    fn mux_bus_selects() {
+        let mut nl = Netlist::new();
+        let sel = nl.fresh_net();
+        let a = fresh_bus(&mut nl, 4);
+        let b = fresh_bus(&mut nl, 4);
+        let out = mux_bus(&mut nl, sel, &a, &b, DOMAIN_ON);
+        let mut sim = Sim::new(&nl);
+        sim.set_bus(&a, 0x3);
+        sim.set_bus(&b, 0xC);
+        sim.set_input(sel, false);
+        sim.step();
+        assert_eq!(sim.get_bus(&out), 0x3);
+        sim.set_input(sel, true);
+        sim.step();
+        assert_eq!(sim.get_bus(&out), 0xC);
+    }
+
+    #[test]
+    fn zext_pads_with_zero() {
+        let mut nl = Netlist::new();
+        let a = fresh_bus(&mut nl, 3);
+        let wide = zext(&nl, &a, 8);
+        let mut sim = Sim::new(&nl);
+        sim.set_bus(&a, 0b101);
+        sim.step();
+        assert_eq!(sim.get_bus(&wide), 0b101);
+    }
+}

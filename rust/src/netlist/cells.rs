@@ -1,0 +1,155 @@
+//! 45nm standard-cell library model.
+//!
+//! Numbers are representative of an open 45nm library (NanGate-class
+//! typical corner, 1.1V): per-cell area, leakage power, and internal +
+//! output switching energy per output toggle.  Absolute accuracy is not
+//! the goal — the power model calibrates one global scale factor against
+//! the paper's reported 5.55 mW accurate-mode figure (see
+//! `power::PowerModel`) — but the *relative* costs between cell types
+//! are what make the per-configuration savings realistic.
+
+/// Cell types used by the generated netlists.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CellKind {
+    /// Partial-product AND2.
+    And2,
+    /// OR2 (approximate compressors, OR trees).
+    Or2,
+    /// XOR2 (sign logic).
+    Xor2,
+    /// Inverter / buffer.
+    Inv,
+    /// Half adder (2 in, sum+carry).
+    HalfAdder,
+    /// Full adder (3 in, sum+carry).
+    FullAdder,
+    /// 2:1 mux.
+    Mux2,
+    /// D flip-flop (registers; toggles counted on Q changes).
+    Dff,
+}
+
+/// Static library data for one cell type.
+#[derive(Debug, Clone, Copy)]
+pub struct CellSpec {
+    /// Layout area in um^2.
+    pub area_um2: f64,
+    /// Leakage power in nW at 1.1V, typical corner.
+    pub leakage_nw: f64,
+    /// Energy per output toggle in fJ (internal + load).
+    pub toggle_fj: f64,
+    /// Propagation delay in ps (typical corner, nominal load).
+    pub delay_ps: f64,
+}
+
+impl CellKind {
+    pub fn spec(self) -> CellSpec {
+        match self {
+            CellKind::And2 => CellSpec {
+                area_um2: 0.798,
+                leakage_nw: 18.0,
+                toggle_fj: 1.0,
+                delay_ps: 42.0,
+            },
+            CellKind::Or2 => CellSpec {
+                area_um2: 0.798,
+                leakage_nw: 18.0,
+                toggle_fj: 1.0,
+                delay_ps: 44.0,
+            },
+            CellKind::Xor2 => CellSpec {
+                area_um2: 1.596,
+                leakage_nw: 30.0,
+                toggle_fj: 2.1,
+                delay_ps: 72.0,
+            },
+            CellKind::Inv => CellSpec {
+                area_um2: 0.532,
+                leakage_nw: 10.0,
+                toggle_fj: 0.5,
+                delay_ps: 28.0,
+            },
+            CellKind::HalfAdder => CellSpec {
+                area_um2: 3.192,
+                leakage_nw: 45.0,
+                toggle_fj: 3.2,
+                delay_ps: 85.0,
+            },
+            CellKind::FullAdder => CellSpec {
+                area_um2: 4.522,
+                leakage_nw: 62.0,
+                toggle_fj: 5.1,
+                delay_ps: 120.0,
+            },
+            CellKind::Mux2 => CellSpec {
+                area_um2: 1.862,
+                leakage_nw: 22.0,
+                toggle_fj: 1.4,
+                delay_ps: 60.0,
+            },
+            CellKind::Dff => CellSpec {
+                area_um2: 4.522,
+                leakage_nw: 75.0,
+                toggle_fj: 5.8,
+                delay_ps: 110.0,
+            },
+        }
+    }
+
+    /// Number of logic inputs.
+    pub fn n_inputs(self) -> usize {
+        match self {
+            CellKind::Inv | CellKind::Dff => 1,
+            CellKind::And2 | CellKind::Or2 | CellKind::Xor2 | CellKind::HalfAdder => 2,
+            CellKind::FullAdder | CellKind::Mux2 => 3,
+        }
+    }
+
+    /// Number of outputs (adders have sum + carry).
+    pub fn n_outputs(self) -> usize {
+        match self {
+            CellKind::HalfAdder | CellKind::FullAdder => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// Leakage retained when a power domain is gated off (footer-switch
+/// retention factor; the paper's dynamic saving is switching-dominated).
+pub const GATED_LEAKAGE_FACTOR: f64 = 0.12;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_sane() {
+        for k in [
+            CellKind::And2,
+            CellKind::Or2,
+            CellKind::Xor2,
+            CellKind::Inv,
+            CellKind::HalfAdder,
+            CellKind::FullAdder,
+            CellKind::Mux2,
+            CellKind::Dff,
+        ] {
+            let s = k.spec();
+            assert!(s.area_um2 > 0.0 && s.leakage_nw > 0.0 && s.toggle_fj > 0.0);
+        }
+    }
+
+    #[test]
+    fn full_adder_costs_more_than_half() {
+        assert!(CellKind::FullAdder.spec().area_um2 > CellKind::HalfAdder.spec().area_um2);
+        assert!(CellKind::FullAdder.spec().toggle_fj > CellKind::Or2.spec().toggle_fj);
+    }
+
+    #[test]
+    fn io_counts() {
+        assert_eq!(CellKind::FullAdder.n_inputs(), 3);
+        assert_eq!(CellKind::FullAdder.n_outputs(), 2);
+        assert_eq!(CellKind::Mux2.n_inputs(), 3);
+        assert_eq!(CellKind::Dff.n_outputs(), 1);
+    }
+}

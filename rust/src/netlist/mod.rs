@@ -1,0 +1,469 @@
+//! Structural gate-level netlist with switching-activity simulation.
+//!
+//! The hardware substrate the paper's power numbers rest on: netlists
+//! are built cell by cell (the same granularity a synthesis tool
+//! reports), evaluated in topological order, and the simulator counts
+//! energy-weighted output toggles between consecutive input vectors —
+//! the standard switching-activity power estimation flow (the paper's
+//! "related switching activity files" in Synopsys terms).
+//!
+//! Cells belong to *power domains*; a domain can be gated off for a
+//! given multiplier configuration (operand isolation + clock gating),
+//! which freezes its cells (no toggles) and reduces its leakage by the
+//! retention factor.  This is exactly how the error-configurable
+//! multiplier turns configuration bits into saved power.
+
+pub mod adder;
+pub mod cells;
+pub mod multiplier;
+pub mod verilog;
+
+use cells::{CellKind, GATED_LEAKAGE_FACTOR};
+
+/// Index of a net (wire) in a netlist.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NetId(pub u32);
+
+/// Index of a power domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DomainId(pub u32);
+
+/// Always-on domain (never gated).
+pub const DOMAIN_ON: DomainId = DomainId(0);
+
+#[derive(Debug, Clone)]
+struct Gate {
+    kind: CellKind,
+    ins: [NetId; 3],
+    outs: [NetId; 2],
+    domain: DomainId,
+    /// cached `kind.spec().toggle_fj` (hot-loop, see EXPERIMENTS.md §Perf)
+    toggle_fj: f64,
+}
+
+/// A structural netlist.  Gates are stored in creation order, which the
+/// builders guarantee is topological (inputs before users).
+pub struct Netlist {
+    n_nets: u32,
+    gates: Vec<Gate>,
+    n_domains: u32,
+    /// constant-0 and constant-1 nets
+    zero: NetId,
+    one: NetId,
+}
+
+impl Default for Netlist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Netlist {
+    pub fn new() -> Netlist {
+        let mut nl = Netlist {
+            n_nets: 0,
+            gates: Vec::new(),
+            n_domains: 1, // DOMAIN_ON
+            zero: NetId(0),
+            one: NetId(0),
+        };
+        nl.zero = nl.fresh_net();
+        nl.one = nl.fresh_net();
+        nl
+    }
+
+    pub fn fresh_net(&mut self) -> NetId {
+        let id = NetId(self.n_nets);
+        self.n_nets += 1;
+        id
+    }
+
+    pub fn zero(&self) -> NetId {
+        self.zero
+    }
+
+    pub fn one(&self) -> NetId {
+        self.one
+    }
+
+    /// Allocate a new power domain.
+    pub fn new_domain(&mut self) -> DomainId {
+        let id = DomainId(self.n_domains);
+        self.n_domains += 1;
+        id
+    }
+
+    pub fn n_domains(&self) -> usize {
+        self.n_domains as usize
+    }
+
+    pub fn n_gates(&self) -> usize {
+        self.gates.len()
+    }
+
+    pub fn n_nets(&self) -> usize {
+        self.n_nets as usize
+    }
+
+    fn push_gate(&mut self, kind: CellKind, ins: [NetId; 3], domain: DomainId) -> [NetId; 2] {
+        let o0 = self.fresh_net();
+        let o1 = if kind.n_outputs() == 2 {
+            self.fresh_net()
+        } else {
+            o0
+        };
+        self.gates.push(Gate {
+            kind,
+            ins,
+            outs: [o0, o1],
+            domain,
+            toggle_fj: kind.spec().toggle_fj,
+        });
+        [o0, o1]
+    }
+
+    pub fn and2(&mut self, a: NetId, b: NetId, d: DomainId) -> NetId {
+        self.push_gate(CellKind::And2, [a, b, self.zero], d)[0]
+    }
+
+    pub fn or2(&mut self, a: NetId, b: NetId, d: DomainId) -> NetId {
+        self.push_gate(CellKind::Or2, [a, b, self.zero], d)[0]
+    }
+
+    pub fn xor2(&mut self, a: NetId, b: NetId, d: DomainId) -> NetId {
+        self.push_gate(CellKind::Xor2, [a, b, self.zero], d)[0]
+    }
+
+    pub fn inv(&mut self, a: NetId, d: DomainId) -> NetId {
+        self.push_gate(CellKind::Inv, [a, a, self.zero], d)[0]
+    }
+
+    /// Half adder: returns (sum, carry).
+    pub fn ha(&mut self, a: NetId, b: NetId, d: DomainId) -> (NetId, NetId) {
+        let o = self.push_gate(CellKind::HalfAdder, [a, b, self.zero], d);
+        (o[0], o[1])
+    }
+
+    /// Full adder: returns (sum, carry).
+    pub fn fa(&mut self, a: NetId, b: NetId, c: NetId, d: DomainId) -> (NetId, NetId) {
+        let o = self.push_gate(CellKind::FullAdder, [a, b, c], d);
+        (o[0], o[1])
+    }
+
+    /// 2:1 mux: `sel ? b : a`.
+    pub fn mux2(&mut self, sel: NetId, a: NetId, b: NetId, d: DomainId) -> NetId {
+        self.push_gate(CellKind::Mux2, [sel, a, b], d)[0]
+    }
+
+    /// D flip-flop modelled combinationally for activity purposes: the
+    /// simulator latches D into Q at `step` boundaries.
+    pub fn dff(&mut self, d_in: NetId, dom: DomainId) -> NetId {
+        self.push_gate(CellKind::Dff, [d_in, d_in, self.zero], dom)[0]
+    }
+
+    /// Total cell area of the netlist in um^2 (all domains — gated
+    /// domains still occupy silicon, matching the paper's fixed area).
+    pub fn area_um2(&self) -> f64 {
+        self.gates.iter().map(|g| g.kind.spec().area_um2).sum()
+    }
+
+    /// Total leakage in nW given the domain-enable vector.
+    pub fn leakage_nw(&self, enabled: &[bool]) -> f64 {
+        self.gates
+            .iter()
+            .map(|g| {
+                let l = g.kind.spec().leakage_nw;
+                if enabled[g.domain.0 as usize] {
+                    l
+                } else {
+                    l * GATED_LEAKAGE_FACTOR
+                }
+            })
+            .sum()
+    }
+
+    /// Static timing: longest combinational path in ps (topological
+    /// relaxation over arrival times; gates are stored in topological
+    /// order).  This is the number a synthesis tool reports as the
+    /// critical path — used to check the paper's 100-330 MHz claim.
+    pub fn critical_path_ps(&self) -> f64 {
+        let mut arrival = vec![0.0f64; self.n_nets as usize];
+        let mut worst = 0.0f64;
+        for g in &self.gates {
+            let t_in = g
+                .ins
+                .iter()
+                .map(|n| arrival[n.0 as usize])
+                .fold(0.0, f64::max);
+            let t_out = t_in + g.kind.spec().delay_ps;
+            for o in &g.outs {
+                arrival[o.0 as usize] = arrival[o.0 as usize].max(t_out);
+            }
+            worst = worst.max(t_out);
+        }
+        worst
+    }
+
+    /// Iterate gates as (kind, inputs, outputs, domain) for export.
+    pub fn gates_for_export(
+        &self,
+    ) -> impl Iterator<Item = (CellKind, [NetId; 3], [NetId; 2], DomainId)> + '_ {
+        self.gates.iter().map(|g| (g.kind, g.ins, g.outs, g.domain))
+    }
+
+    /// Per-cell-kind gate counts (for DESIGN.md inventory / area audit).
+    pub fn census(&self) -> Vec<(CellKind, usize)> {
+        let kinds = [
+            CellKind::And2,
+            CellKind::Or2,
+            CellKind::Xor2,
+            CellKind::Inv,
+            CellKind::HalfAdder,
+            CellKind::FullAdder,
+            CellKind::Mux2,
+            CellKind::Dff,
+        ];
+        kinds
+            .iter()
+            .map(|&k| (k, self.gates.iter().filter(|g| g.kind == k).count()))
+            .collect()
+    }
+}
+
+/// Simulation state + switching-activity accounting for one netlist.
+pub struct Sim<'a> {
+    nl: &'a Netlist,
+    values: Vec<bool>,
+    /// per-domain enable
+    enabled: Vec<bool>,
+    /// accumulated switching energy in fJ
+    pub energy_fj: f64,
+    /// per-domain switching energy in fJ
+    pub domain_energy_fj: Vec<f64>,
+    /// total output toggles counted
+    pub toggles: u64,
+    /// number of evaluation steps
+    pub steps: u64,
+    first_step_done: bool,
+}
+
+impl<'a> Sim<'a> {
+    pub fn new(nl: &'a Netlist) -> Sim<'a> {
+        let mut values = vec![false; nl.n_nets as usize];
+        values[nl.one.0 as usize] = true;
+        Sim {
+            nl,
+            values,
+            enabled: vec![true; nl.n_domains()],
+            energy_fj: 0.0,
+            domain_energy_fj: vec![0.0; nl.n_domains()],
+            toggles: 0,
+            steps: 0,
+            first_step_done: false,
+        }
+    }
+
+    /// Enable/disable a power domain (operand isolation + clock gating).
+    pub fn set_domain(&mut self, d: DomainId, on: bool) {
+        self.enabled[d.0 as usize] = on;
+    }
+
+    pub fn set_input(&mut self, n: NetId, v: bool) {
+        self.values[n.0 as usize] = v;
+    }
+
+    /// Drive a bus of input nets from an integer, LSB first.
+    pub fn set_bus(&mut self, bus: &[NetId], value: u64) {
+        for (i, &n) in bus.iter().enumerate() {
+            self.set_input(n, (value >> i) & 1 == 1);
+        }
+    }
+
+    pub fn get(&self, n: NetId) -> bool {
+        self.values[n.0 as usize]
+    }
+
+    /// Read a bus as an integer, LSB first.
+    pub fn get_bus(&self, bus: &[NetId]) -> u64 {
+        bus.iter()
+            .enumerate()
+            .map(|(i, &n)| (self.get(n) as u64) << i)
+            .sum()
+    }
+
+    /// Evaluate all gates in topological order, accumulating toggle
+    /// energy for enabled domains.  Gated domains hold their outputs
+    /// (operand isolation), so they contribute no switching.
+    pub fn step(&mut self) {
+        let count_energy = self.first_step_done;
+        for g in &self.nl.gates {
+            if !self.enabled[g.domain.0 as usize] {
+                continue; // frozen: outputs hold last value
+            }
+            let a = self.values[g.ins[0].0 as usize];
+            let b = self.values[g.ins[1].0 as usize];
+            let c = self.values[g.ins[2].0 as usize];
+            let (o0, o1) = match g.kind {
+                CellKind::And2 => (a & b, false),
+                CellKind::Or2 => (a | b, false),
+                CellKind::Xor2 => (a ^ b, false),
+                CellKind::Inv => (!a, false),
+                CellKind::HalfAdder => (a ^ b, a & b),
+                CellKind::FullAdder => (a ^ b ^ c, (a & b) | (c & (a ^ b))),
+                CellKind::Mux2 => (if a { c } else { b }, false),
+                CellKind::Dff => (a, false),
+            };
+            let slot0 = g.outs[0].0 as usize;
+            if self.values[slot0] != o0 {
+                self.values[slot0] = o0;
+                if count_energy {
+                    self.energy_fj += g.toggle_fj;
+                    self.domain_energy_fj[g.domain.0 as usize] += g.toggle_fj;
+                    self.toggles += 1;
+                }
+            }
+            let slot1 = g.outs[1].0 as usize;
+            if slot1 != slot0 && self.values[slot1] != o1 {
+                self.values[slot1] = o1;
+                if count_energy {
+                    self.energy_fj += g.toggle_fj;
+                    self.domain_energy_fj[g.domain.0 as usize] += g.toggle_fj;
+                    self.toggles += 1;
+                }
+            }
+        }
+        if self.first_step_done {
+            self.steps += 1;
+        }
+        self.first_step_done = true;
+    }
+
+    /// Reset activity counters (keeps current state as baseline).
+    pub fn reset_counters(&mut self) {
+        self.energy_fj = 0.0;
+        self.domain_energy_fj.iter_mut().for_each(|e| *e = 0.0);
+        self.toggles = 0;
+        self.steps = 0;
+    }
+
+    /// Average switching energy per step, in fJ.
+    pub fn energy_per_step_fj(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.energy_fj / self.steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_gates_evaluate() {
+        let mut nl = Netlist::new();
+        let a = nl.fresh_net();
+        let b = nl.fresh_net();
+        let and = nl.and2(a, b, DOMAIN_ON);
+        let or = nl.or2(a, b, DOMAIN_ON);
+        let xor = nl.xor2(a, b, DOMAIN_ON);
+        let inv = nl.inv(a, DOMAIN_ON);
+        let mut sim = Sim::new(&nl);
+        for (va, vb) in [(false, false), (false, true), (true, false), (true, true)] {
+            sim.set_input(a, va);
+            sim.set_input(b, vb);
+            sim.step();
+            assert_eq!(sim.get(and), va & vb);
+            assert_eq!(sim.get(or), va | vb);
+            assert_eq!(sim.get(xor), va ^ vb);
+            assert_eq!(sim.get(inv), !va);
+        }
+    }
+
+    #[test]
+    fn adder_cells() {
+        let mut nl = Netlist::new();
+        let a = nl.fresh_net();
+        let b = nl.fresh_net();
+        let c = nl.fresh_net();
+        let (s_ha, c_ha) = nl.ha(a, b, DOMAIN_ON);
+        let (s_fa, c_fa) = nl.fa(a, b, c, DOMAIN_ON);
+        let mut sim = Sim::new(&nl);
+        for bits in 0..8u32 {
+            let (va, vb, vc) = (bits & 1 == 1, bits & 2 != 0, bits & 4 != 0);
+            sim.set_input(a, va);
+            sim.set_input(b, vb);
+            sim.set_input(c, vc);
+            sim.step();
+            let ha_total = va as u32 + vb as u32;
+            assert_eq!(sim.get(s_ha) as u32, ha_total & 1);
+            assert_eq!(sim.get(c_ha) as u32, ha_total >> 1);
+            let fa_total = va as u32 + vb as u32 + vc as u32;
+            assert_eq!(sim.get(s_fa) as u32, fa_total & 1);
+            assert_eq!(sim.get(c_fa) as u32, fa_total >> 1);
+        }
+    }
+
+    #[test]
+    fn first_step_charges_no_energy() {
+        let mut nl = Netlist::new();
+        let a = nl.fresh_net();
+        let x = nl.inv(a, DOMAIN_ON);
+        let _ = x;
+        let mut sim = Sim::new(&nl);
+        sim.set_input(a, false);
+        sim.step();
+        assert_eq!(sim.energy_fj, 0.0); // establishing step
+        sim.set_input(a, true);
+        sim.step();
+        assert!(sim.energy_fj > 0.0);
+    }
+
+    #[test]
+    fn gated_domain_freezes_and_saves() {
+        let mut nl = Netlist::new();
+        let a = nl.fresh_net();
+        let dom = nl.new_domain();
+        let out = nl.inv(a, dom);
+        let mut sim = Sim::new(&nl);
+        sim.set_input(a, false);
+        sim.step();
+        let v0 = sim.get(out);
+        sim.set_domain(dom, false);
+        sim.set_input(a, true);
+        sim.step();
+        assert_eq!(sim.get(out), v0, "gated gate must hold its output");
+        assert_eq!(sim.energy_fj, 0.0);
+        // leakage reduced
+        let full = nl.leakage_nw(&[true, true]);
+        let gated = nl.leakage_nw(&[true, false]);
+        assert!(gated < full);
+    }
+
+    #[test]
+    fn bus_helpers_roundtrip() {
+        let mut nl = Netlist::new();
+        let bus: Vec<NetId> = (0..8).map(|_| nl.fresh_net()).collect();
+        let mut sim = Sim::new(&nl);
+        sim.set_bus(&bus, 0xA5);
+        assert_eq!(sim.get_bus(&bus), 0xA5);
+    }
+
+    #[test]
+    fn area_and_census() {
+        let mut nl = Netlist::new();
+        let a = nl.fresh_net();
+        let b = nl.fresh_net();
+        nl.and2(a, b, DOMAIN_ON);
+        nl.fa(a, b, a, DOMAIN_ON);
+        assert!(nl.area_um2() > 5.0);
+        let census = nl.census();
+        let and_count = census
+            .iter()
+            .find(|(k, _)| *k == CellKind::And2)
+            .unwrap()
+            .1;
+        assert_eq!(and_count, 1);
+    }
+}

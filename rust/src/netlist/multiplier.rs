@@ -1,0 +1,328 @@
+//! Gate-level netlist of the error-configurable approximate multiplier.
+//!
+//! Counter-based array multiplier (mirrors the frozen spec in `amul`):
+//!
+//! 1. **Partial products** — 49 AND2 cells (always on).
+//! 2. **Per-column exact counters** — each column's partial products go
+//!    through a popcount tree (FA/HA cells) producing the column count
+//!    (<= 3 bits).  Each column's counter sits in its own power domain
+//!    `dom_exact[k]` and is **gated off whenever the column is
+//!    approximated** — this is where the configurable power goes.
+//! 3. **Approximate compressors** — pairwise OR2 cells plus a small
+//!    popcount of the pair outputs (level 1, domain `dom_pair[k]`), and
+//!    an OR tree collapsing the column to one bit (level 2, domain
+//!    `dom_tree[k]`).  These are far cheaper than the exact counters.
+//! 4. **Contribution muxes** — 3-bit 2-stage mux per column selecting
+//!    exact / pair / OR contribution (always on).
+//! 5. **Final accumulation** — a shared carry-save adder network summing
+//!    `contrib_k << k` (always on; its switching drops organically at
+//!    high approximation because most contribution bits go static).
+//!
+//! Functional equivalence with `amul::mul7_approx` is asserted
+//! exhaustively in tests — the gate netlist and the bit-level model are
+//! the same function, which is what makes the power numbers meaningful.
+
+use super::{DomainId, NetId, Netlist, Sim};
+use crate::amul::{self, Config, N_COLS};
+
+/// Per-column power domains.
+#[derive(Debug, Clone, Copy)]
+pub struct ColumnDomains {
+    /// Exact popcount tree — on only at level 0.
+    pub exact: DomainId,
+    /// Pairwise OR2 compressors — on at levels 1 and 2 (they feed the
+    /// OR tree as well).
+    pub pair_or: DomainId,
+    /// Popcount over the pair outputs — on only at level 1.
+    pub pair_cnt: DomainId,
+    /// OR tree collapsing the column to one bit — on only at level 2.
+    pub tree: DomainId,
+}
+
+/// Built multiplier netlist plus its control/IO nets.
+pub struct MultiplierNet {
+    pub nl: Netlist,
+    /// 7-bit operand input buses.
+    pub a: Vec<NetId>,
+    pub b: Vec<NetId>,
+    /// 14-bit product output bus.
+    pub product: Vec<NetId>,
+    /// Per-column level-select inputs: (s1, s2) = (level >= 1, level == 2).
+    pub sel: Vec<(NetId, NetId)>,
+    /// Per-column power domains.
+    pub domains: Vec<ColumnDomains>,
+    /// Always-on accounting domains: partial products, muxes, final adder.
+    pub dom_pp: DomainId,
+    pub dom_mux: DomainId,
+    pub dom_final: DomainId,
+}
+
+/// Popcount of `bits` using FA/HA cells; returns LSB-first count bus.
+fn popcount(nl: &mut Netlist, bits: &[NetId], dom: DomainId) -> Vec<NetId> {
+    // carry-save column reduction over weights
+    let mut cols: Vec<Vec<NetId>> = vec![bits.to_vec()];
+    let mut w = 0;
+    loop {
+        if w >= cols.len() {
+            break;
+        }
+        while cols[w].len() > 1 {
+            if cols[w].len() >= 3 {
+                let (x, y, z) = (cols[w].remove(0), cols[w].remove(0), cols[w].remove(0));
+                let (s, c) = nl.fa(x, y, z, dom);
+                cols[w].push(s);
+                if cols.len() <= w + 1 {
+                    cols.push(Vec::new());
+                }
+                cols[w + 1].push(c);
+            } else {
+                let (x, y) = (cols[w].remove(0), cols[w].remove(0));
+                let (s, c) = nl.ha(x, y, dom);
+                cols[w].push(s);
+                if cols.len() <= w + 1 {
+                    cols.push(Vec::new());
+                }
+                cols[w + 1].push(c);
+            }
+        }
+        w += 1;
+    }
+    cols.into_iter()
+        .map(|mut c| c.pop().unwrap_or(nl.zero()))
+        .collect()
+}
+
+impl MultiplierNet {
+    /// Build the netlist.
+    pub fn build() -> MultiplierNet {
+        let mut nl = Netlist::new();
+        let a: Vec<NetId> = (0..7).map(|_| nl.fresh_net()).collect();
+        let b: Vec<NetId> = (0..7).map(|_| nl.fresh_net()).collect();
+        let sel: Vec<(NetId, NetId)> = (0..N_COLS)
+            .map(|_| (nl.fresh_net(), nl.fresh_net()))
+            .collect();
+        let dom_pp = nl.new_domain();
+        let dom_mux = nl.new_domain();
+        let dom_final = nl.new_domain();
+
+        let mut domains = Vec::with_capacity(N_COLS);
+        // weight-indexed bit lists feeding the final accumulation
+        let mut acc_cols: Vec<Vec<NetId>> = vec![Vec::new(); 16];
+
+        for k in 0..N_COLS {
+            // 1. partial products
+            let pps: Vec<NetId> = amul::column_pps(k)
+                .map(|(i, j)| nl.and2(a[i as usize], b[j as usize], dom_pp))
+                .collect();
+            let n = pps.len();
+            let dom_exact = nl.new_domain();
+            let dom_pair_or = nl.new_domain();
+            let dom_pair_cnt = nl.new_domain();
+            let dom_tree = nl.new_domain();
+            domains.push(ColumnDomains {
+                exact: dom_exact,
+                pair_or: dom_pair_or,
+                pair_cnt: dom_pair_cnt,
+                tree: dom_tree,
+            });
+            let (s1, s2) = sel[k];
+
+            // 2. exact popcount (gated when approximated)
+            let exact_cnt = popcount(&mut nl, &pps, dom_exact);
+
+            // 3a. pairwise-OR compressor + popcount of pair outputs
+            let mut pair_bits: Vec<NetId> = Vec::new();
+            let mut p = 0;
+            while p + 1 < n {
+                pair_bits.push(nl.or2(pps[p], pps[p + 1], dom_pair_or));
+                p += 2;
+            }
+            if n % 2 == 1 {
+                pair_bits.push(pps[n - 1]);
+            }
+            let pair_cnt = popcount(&mut nl, &pair_bits, dom_pair_cnt);
+
+            // 3b. OR tree over pair outputs == OR of all pps
+            let mut tree = pair_bits[0];
+            for &pb in &pair_bits[1..] {
+                tree = nl.or2(tree, pb, dom_tree);
+            }
+
+            // 4. contribution mux: width = exact count width (<= 3 bits)
+            let width = exact_cnt.len();
+            let zero = nl.zero();
+            for bit in 0..width {
+                let e = exact_cnt[bit];
+                let pr = pair_cnt.get(bit).copied().unwrap_or(zero);
+                let tr = if bit == 0 { tree } else { zero };
+                let m1 = if n == 1 {
+                    // single-pp column: all three paths are the pp itself
+                    e
+                } else {
+                    nl.mux2(s1, e, pr, dom_mux)
+                };
+                let m2 = nl.mux2(s2, m1, tr, dom_mux);
+                acc_cols[k + bit].push(m2);
+            }
+        }
+
+        // 5. final accumulation: carry-save reduce acc_cols into the
+        // 14-bit product (always on)
+        let mut product = Vec::with_capacity(14);
+        let mut carries: Vec<NetId> = Vec::new();
+        for w in 0..14 {
+            let mut bits = std::mem::take(&mut acc_cols[w]);
+            bits.extend(carries.drain(..));
+            while bits.len() > 1 {
+                if bits.len() >= 3 {
+                    let (x, y, z) = (bits.remove(0), bits.remove(0), bits.remove(0));
+                    let (s, c) = nl.fa(x, y, z, dom_final);
+                    bits.push(s);
+                    carries.push(c);
+                } else {
+                    let (x, y) = (bits.remove(0), bits.remove(0));
+                    let (s, c) = nl.ha(x, y, dom_final);
+                    bits.push(s);
+                    carries.push(c);
+                }
+            }
+            product.push(bits.pop().unwrap_or(nl.zero()));
+        }
+        debug_assert!(
+            acc_cols[14..].iter().all(|c| c.is_empty()),
+            "no contribution bits beyond weight 13"
+        );
+
+        MultiplierNet {
+            nl,
+            a,
+            b,
+            product,
+            sel,
+            domains,
+            dom_pp,
+            dom_mux,
+            dom_final,
+        }
+    }
+
+    /// Apply a configuration: drive the level-select nets and gate the
+    /// unused per-column domains.
+    pub fn apply_config(&self, sim: &mut Sim<'_>, cfg: Config) {
+        let levels = amul::column_levels(cfg);
+        for k in 0..N_COLS {
+            let (s1, s2) = self.sel[k];
+            sim.set_input(s1, levels[k] >= 1);
+            sim.set_input(s2, levels[k] == 2);
+            let d = self.domains[k];
+            sim.set_domain(d.exact, levels[k] == 0);
+            sim.set_domain(d.pair_or, levels[k] >= 1);
+            sim.set_domain(d.pair_cnt, levels[k] == 1);
+            sim.set_domain(d.tree, levels[k] == 2);
+        }
+    }
+
+    /// Drive operands and evaluate; returns the 14-bit product.
+    pub fn run(&self, sim: &mut Sim<'_>, a: u32, b: u32) -> u32 {
+        sim.set_bus(&self.a, a as u64);
+        sim.set_bus(&self.b, b as u64);
+        sim.step();
+        sim.get_bus(&self.product) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn netlist_matches_bit_model_exhaustive_key_configs() {
+        let m = MultiplierNet::build();
+        for cfg in [0u32, 1, 2, 9, 17, 32] {
+            let cfg = Config::new(cfg).unwrap();
+            let mut sim = Sim::new(&m.nl);
+            m.apply_config(&mut sim, cfg);
+            for a in 0..=127u32 {
+                for b in 0..=127u32 {
+                    let got = m.run(&mut sim, a, b);
+                    let want = amul::mul7_approx(a, b, cfg);
+                    assert_eq!(got, want, "{cfg} a={a} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_matches_bit_model_sampled_all_configs() {
+        let m = MultiplierNet::build();
+        let mut rng = crate::util::rng::Pcg32::new(99);
+        for cfg in Config::all() {
+            let mut sim = Sim::new(&m.nl);
+            m.apply_config(&mut sim, cfg);
+            for _ in 0..400 {
+                let a = rng.below(128);
+                let b = rng.below(128);
+                assert_eq!(
+                    m.run(&mut sim, a, b),
+                    amul::mul7_approx(a, b, cfg),
+                    "{cfg} a={a} b={b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn config_switching_midstream_stays_correct() {
+        // dynamic power control: flip configs while operands stream
+        let m = MultiplierNet::build();
+        let mut sim = Sim::new(&m.nl);
+        let mut rng = crate::util::rng::Pcg32::new(5);
+        for step in 0..500 {
+            let cfg = Config::new(step % 33).unwrap();
+            m.apply_config(&mut sim, cfg);
+            let a = rng.below(128);
+            let b = rng.below(128);
+            assert_eq!(m.run(&mut sim, a, b), amul::mul7_approx(a, b, cfg));
+        }
+    }
+
+    #[test]
+    fn approx_configs_switch_much_less_than_accurate() {
+        let m = MultiplierNet::build();
+        let mut rng = crate::util::rng::Pcg32::new(7);
+        let inputs: Vec<(u32, u32)> =
+            (0..2000).map(|_| (rng.below(128), rng.below(128))).collect();
+
+        let energy_for = |cfg: Config| {
+            let mut sim = Sim::new(&m.nl);
+            m.apply_config(&mut sim, cfg);
+            sim.step();
+            sim.reset_counters();
+            for &(a, b) in &inputs {
+                m.run(&mut sim, a, b);
+            }
+            sim.energy_per_step_fj()
+        };
+
+        let exact = energy_for(Config::ACCURATE);
+        let worst = energy_for(Config::MAX_APPROX);
+        // The gate-level reconstruction must show a substantial switching
+        // reduction (the power model normalizes this shape against the
+        // paper's endpoint anchors — see power::PowerModel).
+        assert!(
+            worst < exact * (1.0 - 0.25),
+            "worst-config saving too small: exact {exact:.1} fJ vs approx {worst:.1} fJ \
+             (saving {:.1}%)",
+            (1.0 - worst / exact) * 100.0
+        );
+        let mid = energy_for(Config::new(9).unwrap());
+        assert!(mid < exact && mid > worst, "mid {mid:.1}");
+    }
+
+    #[test]
+    fn area_includes_compressor_overhead_and_is_fixed() {
+        let m = MultiplierNet::build();
+        let area = m.nl.area_um2();
+        assert!(area > 150.0 && area < 1500.0, "area {area}");
+    }
+}

@@ -1,0 +1,377 @@
+//! Power model: netlist switching activity -> milliwatts, calibrated to
+//! the paper's absolute anchors.
+//!
+//! What is *measured*: the error-configurable multiplier's switching
+//! energy per operation, per configuration, from the gate-level netlist
+//! (`netlist::multiplier`) driven by real operand streams.  This gives
+//! the shape of the power-vs-configuration curve — which domains stop
+//! toggling as mask bits gate more columns.
+//!
+//! What is *calibrated*: the paper reports, for its 45nm 1.1V 100MHz
+//! implementation, an accurate-mode total of 5.55 mW and worst-config
+//! savings of 44.36% per MAC / 24.78% per neuron / 13.33% network-wide.
+//! Those anchors pin the two endpoints of the power-vs-configuration
+//! curve and the component budgets (MAC, neuron, uncore); the measured
+//! netlist profile supplies the *relative* saving of every intermediate
+//! configuration:
+//!
+//! ```text
+//! frac(cfg)     = S_netlist(cfg) / S_netlist(worst)
+//! saving_X(cfg) = anchor_X * frac(cfg)      for X in {mac, neuron, network}
+//! ```
+//!
+//! The raw netlist-level multiplier saving is reported alongside
+//! (EXPERIMENTS.md) — our gate-level reconstruction reaches ~30-40%
+//! switching reduction at the worst configuration, whereas the paper's
+//! component ratios imply >= 44.36% inside the MAC; the anchored
+//! interpolation keeps the reproduction faithful to the paper's headline
+//! numbers while the netlist keeps the curve's shape honest.  See
+//! DESIGN.md §Power-Model for the derivation.
+
+pub mod area;
+
+use crate::amul::{Config, N_CONFIGS};
+use crate::netlist::multiplier::MultiplierNet;
+use crate::netlist::Sim;
+use crate::util::rng::Pcg32;
+use crate::weights::N_PHYSICAL;
+
+/// Paper anchors (45nm, 1.1V, 100 MHz).
+pub mod anchors {
+    /// Total network power in accurate mode.
+    pub const TOTAL_ACCURATE_MW: f64 = 5.55;
+    /// Worst-configuration power saving inside one MAC unit.
+    pub const MAC_SAVING_MAX: f64 = 0.4436;
+    /// Worst-configuration power saving per neuron.
+    pub const NEURON_SAVING_MAX: f64 = 0.2478;
+    /// Worst-configuration network-wide power saving.
+    pub const NETWORK_SAVING_MAX: f64 = 0.1333;
+    /// Clock frequency used for all power figures.
+    pub const FREQ_HZ: f64 = 100.0e6;
+}
+
+/// Measured multiplier switching energy for every configuration.
+#[derive(Debug, Clone)]
+pub struct MultiplierEnergyProfile {
+    /// Average switching energy per multiply, in fJ, indexed by config.
+    pub energy_fj: [f64; N_CONFIGS],
+    /// Operations measured per config.
+    pub ops: u64,
+}
+
+impl MultiplierEnergyProfile {
+    /// Measure on a synthetic operand stream drawn from a seeded PRNG.
+    /// `ops` multiplies per configuration.
+    pub fn measure_synthetic(ops: u64, seed: u64) -> MultiplierEnergyProfile {
+        let m = MultiplierNet::build();
+        let mut rng = Pcg32::new(seed);
+        let stream: Vec<(u32, u32)> = (0..ops).map(|_| (rng.below(128), rng.below(128))).collect();
+        Self::measure_stream(&m, &stream)
+    }
+
+    /// Measure on an explicit operand stream (magnitudes), same stream
+    /// replayed for every configuration.
+    pub fn measure_stream(m: &MultiplierNet, stream: &[(u32, u32)]) -> MultiplierEnergyProfile {
+        assert!(!stream.is_empty());
+        let mut energy_fj = [0.0f64; N_CONFIGS];
+        for cfg in Config::all() {
+            let mut sim = Sim::new(&m.nl);
+            m.apply_config(&mut sim, cfg);
+            // establish state before counting
+            m.run(&mut sim, stream[0].0, stream[0].1);
+            sim.reset_counters();
+            for &(a, b) in &stream[1..] {
+                m.run(&mut sim, a, b);
+            }
+            energy_fj[cfg.index()] = sim.energy_per_step_fj();
+        }
+        MultiplierEnergyProfile {
+            energy_fj,
+            ops: stream.len() as u64 - 1,
+        }
+    }
+
+    /// Measure on operand traces captured from the datapath (one trace
+    /// per physical neuron; energies averaged across neurons).
+    pub fn measure_traces(traces: &[Vec<(u32, u32)>]) -> MultiplierEnergyProfile {
+        let m = MultiplierNet::build();
+        let non_empty: Vec<&Vec<(u32, u32)>> =
+            traces.iter().filter(|t| t.len() > 1).collect();
+        assert!(!non_empty.is_empty(), "need at least one non-trivial trace");
+        let profiles: Vec<MultiplierEnergyProfile> = crate::util::threadpool::par_map(
+            &non_empty,
+            |_, t| Self::measure_stream(&m, t),
+        );
+        let mut energy_fj = [0.0f64; N_CONFIGS];
+        let mut ops = 0;
+        for p in &profiles {
+            for (acc, e) in energy_fj.iter_mut().zip(&p.energy_fj) {
+                *acc += e / profiles.len() as f64;
+            }
+            ops += p.ops;
+        }
+        MultiplierEnergyProfile { energy_fj, ops }
+    }
+
+    /// Fractional switching saving vs accurate mode for `cfg`.
+    pub fn saving(&self, cfg: Config) -> f64 {
+        1.0 - self.energy_fj[cfg.index()] / self.energy_fj[0]
+    }
+
+    /// The configuration with the maximum saving (the paper's "lowest
+    /// accuracy mode").
+    pub fn max_saving_config(&self) -> Config {
+        Config::approximate()
+            .max_by(|&a, &b| {
+                self.saving(a)
+                    .partial_cmp(&self.saving(b))
+                    .unwrap()
+            })
+            .unwrap()
+    }
+}
+
+/// Power breakdown for one configuration, in mW.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerBreakdown {
+    pub cfg: u32,
+    /// One error-configurable multiplier.
+    pub multiplier_mw: f64,
+    /// One MAC unit (multiplier + accumulator add/sub + sign logic).
+    pub mac_mw: f64,
+    /// One neuron (MAC + bias adder + activation + saturation + local regs).
+    pub neuron_mw: f64,
+    /// Whole network (10 neurons + uncore).
+    pub total_mw: f64,
+    /// Improvement vs accurate mode, percent of network power.
+    pub network_saving_pct: f64,
+    /// Improvement vs accurate mode, percent of per-neuron power.
+    pub neuron_saving_pct: f64,
+    /// Improvement vs accurate mode, percent of per-MAC power.
+    pub mac_saving_pct: f64,
+}
+
+/// The calibrated power model.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    profile: MultiplierEnergyProfile,
+    /// Accurate-mode MAC power, mW (from the paper's component ratios).
+    p_mac0_mw: f64,
+    /// Accurate-mode per-neuron power, mW.
+    p_neuron0_mw: f64,
+    /// Fixed uncore power (controller, memories, muxes, clock), mW.
+    p_uncore_mw: f64,
+    /// Worst-config per-neuron power drop, mW (the paper's 74 uW).
+    dp_neuron_mw: f64,
+    /// Netlist saving at the worst configuration (for normalization).
+    s_worst: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum PowerModelError {
+    #[error("netlist profile shows no saving at any configuration; cannot normalize")]
+    NoSaving,
+    #[error("component budget went negative during calibration: {0}")]
+    NegativeBudget(String),
+}
+
+impl PowerModel {
+    /// Calibrate from a measured multiplier profile using the paper anchors.
+    pub fn calibrate(profile: MultiplierEnergyProfile) -> Result<PowerModel, PowerModelError> {
+        use anchors::*;
+        let worst = profile.max_saving_config();
+        let s_worst = profile.saving(worst);
+        if !(s_worst > 0.0) {
+            return Err(PowerModelError::NoSaving);
+        }
+        // Paper component budgets (accurate mode):
+        //   dP_neuron = total * network_saving / 10  (= 74 uW)
+        //   P_mac0    = dP_neuron / mac_saving       (= 166.8 uW)
+        //   P_neuron0 = dP_neuron / neuron_saving    (= 298.6 uW)
+        //   P_uncore  = total - 10 * P_neuron0       (= 2.564 mW)
+        let dp_neuron_mw = TOTAL_ACCURATE_MW * NETWORK_SAVING_MAX / N_PHYSICAL as f64;
+        let p_mac0_mw = dp_neuron_mw / MAC_SAVING_MAX;
+        let p_neuron0_mw = dp_neuron_mw / NEURON_SAVING_MAX;
+        let p_uncore_mw = TOTAL_ACCURATE_MW - N_PHYSICAL as f64 * p_neuron0_mw;
+        for (name, v) in [
+            ("mac", p_mac0_mw),
+            ("neuron-other", p_neuron0_mw - p_mac0_mw),
+            ("uncore", p_uncore_mw),
+        ] {
+            if v < 0.0 {
+                return Err(PowerModelError::NegativeBudget(format!("{name} = {v:.4} mW")));
+            }
+        }
+        Ok(PowerModel {
+            profile,
+            p_mac0_mw,
+            p_neuron0_mw,
+            p_uncore_mw,
+            dp_neuron_mw,
+            s_worst,
+        })
+    }
+
+    /// Convenience: calibrate from a synthetic uniform operand stream.
+    pub fn calibrate_synthetic() -> Result<PowerModel, PowerModelError> {
+        Self::calibrate(MultiplierEnergyProfile::measure_synthetic(4000, 0xD1E5E1))
+    }
+
+    pub fn profile(&self) -> &MultiplierEnergyProfile {
+        &self.profile
+    }
+
+    /// Normalized saving fraction of `cfg` (1.0 at the worst config).
+    pub fn saving_fraction(&self, cfg: Config) -> f64 {
+        (self.profile.saving(cfg) / self.s_worst).max(0.0)
+    }
+
+    /// Full breakdown for one configuration.
+    pub fn breakdown(&self, cfg: Config) -> PowerBreakdown {
+        use anchors::*;
+        let frac = self.saving_fraction(cfg);
+        let dp = self.dp_neuron_mw * frac;
+        let p_mac = self.p_mac0_mw - dp;
+        let p_neuron = self.p_neuron0_mw - dp;
+        let total = N_PHYSICAL as f64 * p_neuron + self.p_uncore_mw;
+        // Multiplier share inside the MAC: all of the configurable power
+        // plus a fixed floor.  The paper's ratios imply the configurable
+        // part is MAC_SAVING_MAX of the MAC at the worst config; we keep
+        // the multiplier's accurate-mode share at 70% of the MAC (array
+        // multipliers dominate MAC power) and let the whole delta land
+        // on it.
+        let p_mult = 0.70 * self.p_mac0_mw - dp;
+        PowerBreakdown {
+            cfg: cfg.index() as u32,
+            multiplier_mw: p_mult,
+            mac_mw: p_mac,
+            neuron_mw: p_neuron,
+            total_mw: total,
+            network_saving_pct: NETWORK_SAVING_MAX * frac * 100.0,
+            neuron_saving_pct: dp / self.p_neuron0_mw * 100.0,
+            mac_saving_pct: dp / self.p_mac0_mw * 100.0,
+        }
+    }
+
+    /// Total network power for a heterogeneous per-neuron assignment:
+    /// each physical neuron contributes its own configuration's neuron
+    /// power; uncore is shared.
+    pub fn total_hetero_mw(&self, cfgs: &[Config; N_PHYSICAL]) -> f64 {
+        let neurons: f64 = cfgs
+            .iter()
+            .map(|&c| self.p_neuron0_mw - self.dp_neuron_mw * self.saving_fraction(c))
+            .sum();
+        neurons + self.p_uncore_mw
+    }
+
+    /// Breakdown table for all configurations.
+    pub fn sweep(&self) -> Vec<PowerBreakdown> {
+        Config::all().map(|c| self.breakdown(c)).collect()
+    }
+
+    /// Uncore power (exposed for reports).
+    pub fn uncore_mw(&self) -> f64 {
+        self.p_uncore_mw
+    }
+
+    /// Estimated energy per classified image in nJ for a configuration
+    /// (power x cycles / f).
+    pub fn energy_per_image_nj(&self, cfg: Config) -> f64 {
+        let cycles = crate::datapath::controller::CYCLES_PER_IMAGE as f64;
+        self.breakdown(cfg).total_mw * 1e-3 * cycles / anchors::FREQ_HZ * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> PowerModel {
+        PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(1500, 42)).unwrap()
+    }
+
+    #[test]
+    fn accurate_mode_hits_total_anchor() {
+        let m = model();
+        let b = m.breakdown(Config::ACCURATE);
+        assert!((b.total_mw - anchors::TOTAL_ACCURATE_MW).abs() < 1e-9);
+        assert_eq!(b.network_saving_pct, 0.0);
+    }
+
+    #[test]
+    fn worst_config_hits_saving_anchors() {
+        let m = model();
+        let worst = m.profile().max_saving_config();
+        let b = m.breakdown(worst);
+        assert!((b.mac_saving_pct - 44.36).abs() < 0.01, "{}", b.mac_saving_pct);
+        assert!(
+            (b.neuron_saving_pct - 24.78).abs() < 0.01,
+            "{}",
+            b.neuron_saving_pct
+        );
+        assert!(
+            (b.network_saving_pct - 13.33).abs() < 0.01,
+            "{}",
+            b.network_saving_pct
+        );
+        // paper: 5.55 -> 4.81 mW
+        assert!((b.total_mw - 4.81).abs() < 0.01, "{}", b.total_mw);
+    }
+
+    #[test]
+    fn savings_monotone_in_components() {
+        let m = model();
+        for cfg in Config::approximate() {
+            let b = m.breakdown(cfg);
+            // MAC saving >= neuron saving >= network saving (fixed
+            // budgets dilute the configurable multiplier power)
+            assert!(b.mac_saving_pct >= b.neuron_saving_pct - 1e-9);
+            assert!(b.neuron_saving_pct >= b.network_saving_pct - 1e-9);
+            assert!(b.total_mw < anchors::TOTAL_ACCURATE_MW);
+            assert!(b.multiplier_mw > 0.0, "multiplier power must stay positive");
+        }
+    }
+
+    #[test]
+    fn saving_fraction_normalized() {
+        let m = model();
+        let worst = m.profile().max_saving_config();
+        assert!((m.saving_fraction(worst) - 1.0).abs() < 1e-12);
+        assert_eq!(m.saving_fraction(Config::ACCURATE), 0.0);
+        for cfg in Config::approximate() {
+            let f = m.saving_fraction(cfg);
+            assert!(f > 0.0 && f <= 1.0, "{cfg}: {f}");
+        }
+    }
+
+    #[test]
+    fn profile_savings_positive_and_bounded() {
+        let p = MultiplierEnergyProfile::measure_synthetic(1000, 7);
+        for cfg in Config::approximate() {
+            let s = p.saving(cfg);
+            assert!(s > 0.0 && s < 1.0, "{cfg}: {s}");
+        }
+    }
+
+    #[test]
+    fn energy_per_image_scales_with_power() {
+        let m = model();
+        let e0 = m.energy_per_image_nj(Config::ACCURATE);
+        let e32 = m.energy_per_image_nj(Config::MAX_APPROX);
+        assert!(e32 < e0);
+        // 5.55 mW * 2.2 us = 12.2 nJ
+        assert!((e0 - 12.26).abs() < 0.2, "{e0}");
+    }
+
+    #[test]
+    fn calibration_rejects_flat_profile() {
+        let profile = MultiplierEnergyProfile {
+            energy_fj: [100.0; N_CONFIGS],
+            ops: 1,
+        };
+        assert!(matches!(
+            PowerModel::calibrate(profile),
+            Err(PowerModelError::NoSaving)
+        ));
+    }
+}

@@ -1,0 +1,255 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them
+//! on the CPU PJRT client — the rust half of the AOT bridge.
+//!
+//! Python (JAX + the Pallas kernel) runs once at build time and lowers
+//! the quantized approximate forward pass to HLO *text*
+//! (`artifacts/model_approx_b{1,16,128}.hlo.txt`).  This module parses
+//! those with `HloModuleProto::from_text_file`, compiles them once per
+//! batch size, and serves `execute` calls from the coordinator's hot
+//! path.  Text is the interchange format because jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1's proto path rejects
+//! (see /opt/xla-example/README.md).
+//!
+//! Parameter order (fixed by `python/compile/aot.py`):
+//!   (x i32[B,62], w1 i32[62,30], b1 i32[30], w2 i32[30,10], b2 i32[10],
+//!    cfg i32[1]) -> (logits i32[B,10], hidden i32[B,30])
+
+use crate::amul::Config;
+use crate::dataset::N_FEATURES;
+use crate::util::json::Json;
+use crate::weights::{QuantWeights, N_HIDDEN, N_OUTPUTS};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled executable for a fixed batch size.
+struct BatchExecutable {
+    batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The inference engine: a PJRT client plus compiled executables.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    executables: Vec<BatchExecutable>, // ascending batch size
+    ref_f32: Option<(usize, xla::PjRtLoadedExecutable)>,
+    weights: QuantWeights,
+    /// float weights for the reference executable
+    weights_f32: Option<WeightsF32>,
+}
+
+/// Float parameters for the f32 reference model.
+#[derive(Debug, Clone)]
+pub struct WeightsF32 {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+/// Result of one batched inference call.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    pub preds: Vec<u8>,
+    pub logits: Vec<[i32; N_OUTPUTS]>,
+    pub hidden: Vec<[i32; N_HIDDEN]>,
+}
+
+impl Engine {
+    /// Load and compile every artifact listed in `manifest.json`.
+    pub fn load(artifacts: &Path) -> Result<Engine> {
+        let manifest = Json::from_file(&artifacts.join("manifest.json"))
+            .context("loading artifact manifest")?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let hlo = manifest.req("hlo")?;
+        let approx = hlo.req("approx")?;
+        let mut executables = Vec::new();
+        for (batch_str, file) in approx.as_obj().context("hlo.approx must be an object")? {
+            let batch: usize = batch_str.parse().context("batch key")?;
+            let path = artifacts.join(file.as_str().context("hlo file name")?);
+            let exe = compile_hlo(&client, &path)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            executables.push(BatchExecutable { batch, exe });
+        }
+        anyhow::ensure!(!executables.is_empty(), "no approx executables in manifest");
+        executables.sort_by_key(|e| e.batch);
+
+        // float reference model (optional)
+        let mut ref_f32 = None;
+        let mut weights_f32 = None;
+        if let Some(Json::Str(name)) = hlo.get("ref_f32") {
+            let path = artifacts.join(name);
+            if path.exists() {
+                // batch size is encoded in the file name: ..._b128.hlo.txt
+                let batch = name
+                    .rsplit_once("_b")
+                    .and_then(|(_, rest)| rest.split('.').next())
+                    .and_then(|b| b.parse::<usize>().ok())
+                    .unwrap_or(128);
+                ref_f32 = Some((batch, compile_hlo(&client, &path)?));
+                weights_f32 = load_weights_f32(&artifacts.join("weights_f32.json")).ok();
+            }
+        }
+
+        let weights = QuantWeights::load_artifacts(artifacts)?;
+        Ok(Engine {
+            client,
+            executables,
+            ref_f32,
+            weights,
+            weights_f32,
+        })
+    }
+
+    pub fn weights(&self) -> &QuantWeights {
+        &self.weights
+    }
+
+    /// Compiled batch sizes, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.executables.iter().map(|e| e.batch).collect()
+    }
+
+    /// Pick the smallest compiled batch size >= n (or the largest).
+    fn pick_executable(&self, n: usize) -> &BatchExecutable {
+        self.executables
+            .iter()
+            .find(|e| e.batch >= n)
+            .unwrap_or_else(|| self.executables.last().unwrap())
+    }
+
+    /// Run a batch of quantized feature vectors through the AOT model.
+    ///
+    /// Inputs longer than the largest compiled batch are chunked; short
+    /// chunks are padded and the padding discarded.
+    pub fn execute(&self, xs: &[[u8; N_FEATURES]], cfg: Config) -> Result<BatchOutput> {
+        let mut out = BatchOutput {
+            preds: Vec::with_capacity(xs.len()),
+            logits: Vec::with_capacity(xs.len()),
+            hidden: Vec::with_capacity(xs.len()),
+        };
+        let max_batch = self.executables.last().unwrap().batch;
+        for chunk in xs.chunks(max_batch.max(1)) {
+            self.execute_chunk(chunk, cfg, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    fn execute_chunk(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        cfg: Config,
+        out: &mut BatchOutput,
+    ) -> Result<()> {
+        let be = self.pick_executable(xs.len());
+        let b = be.batch;
+        // build padded input literal
+        let mut x_data = vec![0i32; b * N_FEATURES];
+        for (i, x) in xs.iter().enumerate() {
+            for (j, &v) in x.iter().enumerate() {
+                x_data[i * N_FEATURES + j] = v as i32;
+            }
+        }
+        let w = &self.weights;
+        let to_i32 = |v: &[u8]| -> Vec<i32> { v.iter().map(|&e| e as i32).collect() };
+        let x_lit = xla::Literal::vec1(&x_data).reshape(&[b as i64, N_FEATURES as i64])?;
+        let w1_lit = xla::Literal::vec1(&to_i32(&w.w1))
+            .reshape(&[N_FEATURES as i64, N_HIDDEN as i64])?;
+        let b1_lit = xla::Literal::vec1(&to_i32(&w.b1));
+        let w2_lit =
+            xla::Literal::vec1(&to_i32(&w.w2)).reshape(&[N_HIDDEN as i64, N_OUTPUTS as i64])?;
+        let b2_lit = xla::Literal::vec1(&to_i32(&w.b2));
+        let cfg_lit = xla::Literal::vec1(&[cfg.index() as i32]);
+
+        let result = be
+            .exe
+            .execute::<xla::Literal>(&[x_lit, w1_lit, b1_lit, w2_lit, b2_lit, cfg_lit])?[0][0]
+            .to_literal_sync()?;
+        let (logits_lit, hidden_lit) = result.to_tuple2()?;
+        let logits: Vec<i32> = logits_lit.to_vec()?;
+        let hidden: Vec<i32> = hidden_lit.to_vec()?;
+        anyhow::ensure!(logits.len() == b * N_OUTPUTS, "bad logits size");
+        anyhow::ensure!(hidden.len() == b * N_HIDDEN, "bad hidden size");
+        for i in 0..xs.len() {
+            let row = &logits[i * N_OUTPUTS..(i + 1) * N_OUTPUTS];
+            let mut l = [0i32; N_OUTPUTS];
+            l.copy_from_slice(row);
+            let mut h = [0i32; N_HIDDEN];
+            h.copy_from_slice(&hidden[i * N_HIDDEN..(i + 1) * N_HIDDEN]);
+            out.preds
+                .push(crate::datapath::neuron::argmax(&l) as u8);
+            out.logits.push(l);
+            out.hidden.push(h);
+        }
+        Ok(())
+    }
+
+    /// Run the float reference model (if exported) on features scaled to
+    /// [0, 1); returns per-image logits.
+    pub fn execute_ref_f32(&self, xs: &[[u8; N_FEATURES]]) -> Result<Vec<[f32; N_OUTPUTS]>> {
+        let (b, exe) = self
+            .ref_f32
+            .as_ref()
+            .context("no float reference executable in artifacts")?;
+        let wf = self
+            .weights_f32
+            .as_ref()
+            .context("no float weights loaded")?;
+        let b = *b;
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(b) {
+            let mut x_data = vec![0f32; b * N_FEATURES];
+            for (i, x) in chunk.iter().enumerate() {
+                for (j, &v) in x.iter().enumerate() {
+                    x_data[i * N_FEATURES + j] = v as f32 / 128.0;
+                }
+            }
+            let x_lit =
+                xla::Literal::vec1(&x_data).reshape(&[b as i64, N_FEATURES as i64])?;
+            let w1 = xla::Literal::vec1(&wf.w1)
+                .reshape(&[N_FEATURES as i64, N_HIDDEN as i64])?;
+            let b1 = xla::Literal::vec1(&wf.b1);
+            let w2 =
+                xla::Literal::vec1(&wf.w2).reshape(&[N_HIDDEN as i64, N_OUTPUTS as i64])?;
+            let b2 = xla::Literal::vec1(&wf.b2);
+            let result = exe.execute::<xla::Literal>(&[x_lit, w1, b1, w2, b2])?[0][0]
+                .to_literal_sync()?;
+            let logits_lit = result.to_tuple1()?;
+            let logits: Vec<f32> = logits_lit.to_vec()?;
+            for i in 0..chunk.len() {
+                let mut l = [0f32; N_OUTPUTS];
+                l.copy_from_slice(&logits[i * N_OUTPUTS..(i + 1) * N_OUTPUTS]);
+                out.push(l);
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+fn load_weights_f32(path: &Path) -> Result<WeightsF32> {
+    let j = Json::from_file(path)?;
+    let get = |k: &str| -> Result<Vec<f32>> {
+        Ok(j.req(k)?.flat_f64()?.into_iter().map(|v| v as f32).collect())
+    };
+    Ok(WeightsF32 {
+        w1: get("w1")?,
+        b1: get("b1")?,
+        w2: get("w2")?,
+        b2: get("b2")?,
+    })
+}
+
+/// Default artifacts directory: `$ECMAC_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("ECMAC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

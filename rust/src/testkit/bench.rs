@@ -1,0 +1,313 @@
+//! Criterion-style benchmark harness (no `criterion` offline).
+//!
+//! Benches register closures; the harness warms up, picks an iteration
+//! count targeting a fixed measurement time, runs sample batches, and
+//! reports mean/stddev/median/p95 per iteration plus derived throughput.
+//! Output goes to stdout (human table) and optionally a JSON file for
+//! the report tooling.  A `--filter substring` argument narrows the run,
+//! `--quick` shortens measurement for smoke runs.
+
+use crate::util::stats::{percentile, Welford};
+use std::time::{Duration, Instant};
+
+/// One benchmark's measurement summary (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Optional user-set throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / (self.mean_ns / 1e9))
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub samples: usize,
+    pub filter: Option<String>,
+    pub json_out: Option<String>,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            samples: 20,
+            filter: None,
+            json_out: None,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Parse harness args (`--filter`, `--quick`, `--json PATH`); ignores
+    /// cargo-bench's extra flags like `--bench`.
+    pub fn from_args() -> Self {
+        let mut cfg = BenchConfig::default();
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--quick" => {
+                    cfg.warmup = Duration::from_millis(50);
+                    cfg.measure = Duration::from_millis(250);
+                    cfg.samples = 8;
+                }
+                "--filter" => {
+                    if let Some(v) = args.get(i + 1) {
+                        cfg.filter = Some(v.clone());
+                        i += 1;
+                    }
+                }
+                "--json" => {
+                    if let Some(v) = args.get(i + 1) {
+                        cfg.json_out = Some(v.clone());
+                        i += 1;
+                    }
+                }
+                "--bench" | "--test" => {} // cargo artefacts of `cargo bench`
+                s if !s.starts_with('-') && cfg.filter.is_none() => {
+                    // bare positional filter, like criterion
+                    cfg.filter = Some(s.to_string());
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        cfg
+    }
+}
+
+/// The bench registry/runner.
+pub struct Bencher {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+    current_elements: Option<u64>,
+}
+
+impl Bencher {
+    pub fn new(cfg: BenchConfig) -> Self {
+        println!(
+            "ecmac bench harness: warmup {:?}, measure {:?}, {} samples{}",
+            cfg.warmup,
+            cfg.measure,
+            cfg.samples,
+            cfg.filter
+                .as_deref()
+                .map(|f| format!(", filter '{f}'"))
+                .unwrap_or_default()
+        );
+        println!();
+        Self {
+            cfg,
+            results: Vec::new(),
+            current_elements: None,
+        }
+    }
+
+    /// Set the per-iteration element count for throughput on the next bench.
+    pub fn throughput(&mut self, elements: u64) -> &mut Self {
+        self.current_elements = Some(elements);
+        self
+    }
+
+    /// Register and immediately run one benchmark.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        let elements = self.current_elements.take();
+        if let Some(filter) = &self.cfg.filter {
+            if !name.contains(filter.as_str()) {
+                return;
+            }
+        }
+        // Warmup and iteration-count calibration.
+        let mut iters: u64 = 1;
+        let warmup_end = Instant::now() + self.cfg.warmup;
+        let mut one_iter_ns = f64::MAX;
+        while Instant::now() < warmup_end {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let ns = t.elapsed().as_nanos() as f64 / iters as f64;
+            one_iter_ns = one_iter_ns.min(ns.max(0.1));
+            iters = (iters * 2).min(1 << 20);
+        }
+        let per_sample_ns = self.cfg.measure.as_nanos() as f64 / self.cfg.samples as f64;
+        let iters_per_sample = ((per_sample_ns / one_iter_ns).ceil() as u64).clamp(1, 1 << 24);
+
+        let mut w = Welford::new();
+        let mut samples_ns = Vec::with_capacity(self.cfg.samples);
+        for _ in 0..self.cfg.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            let ns = t.elapsed().as_nanos() as f64 / iters_per_sample as f64;
+            w.push(ns);
+            samples_ns.push(ns);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            name: name.to_string(),
+            iters_per_sample,
+            samples: self.cfg.samples,
+            mean_ns: w.mean(),
+            stddev_ns: w.stddev(),
+            median_ns: percentile(&samples_ns, 50.0),
+            p95_ns: percentile(&samples_ns, 95.0),
+            min_ns: w.min(),
+            max_ns: w.max(),
+            elements,
+        };
+        print_result(&res);
+        self.results.push(res);
+    }
+
+    /// Print the summary table and write JSON if configured.
+    pub fn finish(self) {
+        println!("\n{:-<100}", "");
+        println!(
+            "{:<52} {:>12} {:>12} {:>10} {:>10}",
+            "benchmark", "mean", "median", "stddev", "thrpt/s"
+        );
+        for r in &self.results {
+            println!(
+                "{:<52} {:>12} {:>12} {:>10} {:>10}",
+                r.name,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.median_ns),
+                fmt_ns(r.stddev_ns),
+                r.throughput_per_sec()
+                    .map(fmt_count)
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        if let Some(path) = &self.cfg.json_out {
+            let mut rows = Vec::new();
+            for r in &self.results {
+                rows.push(crate::json_obj! {
+                    "name" => r.name.clone(),
+                    "mean_ns" => r.mean_ns,
+                    "median_ns" => r.median_ns,
+                    "stddev_ns" => r.stddev_ns,
+                    "p95_ns" => r.p95_ns,
+                    "min_ns" => r.min_ns,
+                    "max_ns" => r.max_ns,
+                    "iters_per_sample" => r.iters_per_sample as usize,
+                    "throughput_per_sec" => r.throughput_per_sec().unwrap_or(-1.0),
+                });
+            }
+            let doc = crate::util::json::Json::Arr(rows);
+            if let Err(e) = std::fs::write(path, doc.to_string()) {
+                eprintln!("warning: cannot write bench json {path}: {e}");
+            } else {
+                println!("\nwrote {path}");
+            }
+        }
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    println!(
+        "{:<52} mean {:>10}  median {:>10}  ±{:>9}  [{} iters x {} samples]{}",
+        r.name,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.median_ns),
+        fmt_ns(r.stddev_ns),
+        r.iters_per_sample,
+        r.samples,
+        r.throughput_per_sec()
+            .map(|t| format!("  {}/s", fmt_count(t)))
+            .unwrap_or_default(),
+    );
+}
+
+/// Human-format nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Human-format a count (throughput).
+pub fn fmt_count(c: f64) -> String {
+    if c >= 1e9 {
+        format!("{:.2}G", c / 1e9)
+    } else if c >= 1e6 {
+        format!("{:.2}M", c / 1e6)
+    } else if c >= 1e3 {
+        format!("{:.2}k", c / 1e3)
+    } else {
+        format!("{c:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_bench_runs() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            samples: 4,
+            filter: None,
+            json_out: None,
+        };
+        let mut b = Bencher::new(cfg);
+        let mut x = 0u64;
+        b.throughput(1).bench("noop-ish", || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert_eq!(b.results.len(), 1);
+        let r = &b.results[0];
+        assert!(r.mean_ns > 0.0);
+        assert!(r.throughput_per_sec().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            samples: 2,
+            filter: Some("nomatch".into()),
+            json_out: None,
+        };
+        let mut b = Bencher::new(cfg);
+        b.bench("something-else", || {});
+        assert!(b.results.is_empty());
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(500.0), "500.0ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_count(5_000_000.0), "5.00M");
+    }
+}

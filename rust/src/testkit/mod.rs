@@ -1,0 +1,10 @@
+//! Test & benchmark substrate (no `proptest`/`criterion` offline).
+//!
+//! * [`prop`] — a small property-based testing framework with value
+//!   generators and greedy shrinking, used by the invariant tests on the
+//!   coordinator (routing, batching, state) and the arithmetic models.
+//! * [`bench`] — a criterion-style benchmark harness (warmup, adaptive
+//!   iteration count, mean/stddev/percentiles) driving `cargo bench`.
+
+pub mod bench;
+pub mod prop;

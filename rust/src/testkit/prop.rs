@@ -1,0 +1,242 @@
+//! Property-based testing with generators and greedy shrinking.
+//!
+//! Usage:
+//! ```no_run
+//! use ecmac::testkit::prop::*;
+//! check("addition commutes", 200, gen_tuple2(gen_i64(0, 100), gen_i64(0, 100)),
+//!       |&(a, b)| a + b == b + a);
+//! ```
+//!
+//! On failure the framework greedily shrinks the counterexample using the
+//! generator's `shrink` and panics with the minimal failing input, the
+//! seed, and the case number — enough to reproduce deterministically.
+
+use crate::util::rng::Pcg32;
+use std::fmt::Debug;
+
+/// A generator produces values from randomness and knows how to shrink them.
+pub struct Gen<T> {
+    #[allow(clippy::type_complexity)]
+    pub generate: Box<dyn Fn(&mut Pcg32) -> T>,
+    #[allow(clippy::type_complexity)]
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+/// Run a property over `cases` generated inputs; panics on failure with a
+/// shrunk counterexample.
+pub fn check<T: Debug + Clone>(name: &str, cases: usize, gen: Gen<T>, prop: impl Fn(&T) -> bool) {
+    check_seeded(name, cases, 0xEC2024, gen, prop)
+}
+
+/// `check` with an explicit base seed (for reproducing failures).
+pub fn check_seeded<T: Debug + Clone>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    for case in 0..cases {
+        let mut rng = Pcg32::new(seed.wrapping_add(case as u64));
+        let value = (gen.generate)(&mut rng);
+        if !prop(&value) {
+            let minimal = shrink_failure(&gen, &prop, value.clone());
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}):\n  \
+                 original: {value:?}\n  shrunk:   {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_failure<T: Clone>(gen: &Gen<T>, prop: &impl Fn(&T) -> bool, mut failing: T) -> T {
+    // Greedy descent: repeatedly take the first shrink candidate that
+    // still fails, until none fail (bounded to avoid pathological loops).
+    for _ in 0..10_000 {
+        let mut advanced = false;
+        for cand in (gen.shrink)(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+// ---------------------------------------------------------------------------
+// generator combinators
+// ---------------------------------------------------------------------------
+
+/// Uniform i64 in [lo, hi]; shrinks toward `lo`.
+pub fn gen_i64(lo: i64, hi: i64) -> Gen<i64> {
+    assert!(lo <= hi);
+    Gen {
+        generate: Box::new(move |rng| rng.range_i64(lo, hi)),
+        shrink: Box::new(move |&v| {
+            let mut out = Vec::new();
+            if v != lo {
+                out.push(lo);
+                let mid = lo + (v - lo) / 2;
+                if mid != v && mid != lo {
+                    out.push(mid);
+                }
+                if v - 1 >= lo {
+                    out.push(v - 1);
+                }
+            }
+            out
+        }),
+    }
+}
+
+/// Uniform u32 in [0, hi]; shrinks toward 0.
+pub fn gen_u32(hi: u32) -> Gen<u32> {
+    let g = gen_i64(0, hi as i64);
+    map(g, |v| v as u32, |&v| v as i64)
+}
+
+/// Map a generator through `f`, shrinking via the inverse image `back`.
+pub fn map<A: 'static, B: Clone + 'static>(
+    gen: Gen<A>,
+    f: impl Fn(A) -> B + Copy + 'static,
+    back: impl Fn(&B) -> A + 'static,
+) -> Gen<B> {
+    let shrink_a = gen.shrink;
+    let gen_a = gen.generate;
+    Gen {
+        generate: Box::new(move |rng| f(gen_a(rng))),
+        shrink: Box::new(move |b| shrink_a(&back(b)).into_iter().map(f).collect()),
+    }
+}
+
+/// Vec generator with length in [0, max_len]; shrinks by halving length
+/// and shrinking elements.
+pub fn gen_vec<T: Clone + 'static>(elem: Gen<T>, max_len: usize) -> Gen<Vec<T>> {
+    let elem = std::rc::Rc::new(elem);
+    let e1 = elem.clone();
+    let e2 = elem;
+    Gen {
+        generate: Box::new(move |rng| {
+            let len = rng.below(max_len as u32 + 1) as usize;
+            (0..len).map(|_| (e1.generate)(rng)).collect()
+        }),
+        shrink: Box::new(move |v: &Vec<T>| {
+            let mut out = Vec::new();
+            if !v.is_empty() {
+                out.push(Vec::new());
+                out.push(v[..v.len() / 2].to_vec());
+                let mut minus_first = v.clone();
+                minus_first.remove(0);
+                out.push(minus_first);
+                let mut minus_last = v.clone();
+                minus_last.pop();
+                out.push(minus_last);
+                // shrink the first element
+                for cand in (e2.shrink)(&v[0]) {
+                    let mut w = v.clone();
+                    w[0] = cand;
+                    out.push(w);
+                }
+            }
+            out
+        }),
+    }
+}
+
+/// Pair generator; shrinks each component independently.
+pub fn gen_tuple2<A: Clone + 'static, B: Clone + 'static>(ga: Gen<A>, gb: Gen<B>) -> Gen<(A, B)> {
+    let ga = std::rc::Rc::new(ga);
+    let gb = std::rc::Rc::new(gb);
+    let (ga1, gb1) = (ga.clone(), gb.clone());
+    Gen {
+        generate: Box::new(move |rng| ((ga1.generate)(rng), (gb1.generate)(rng))),
+        shrink: Box::new(move |(a, b)| {
+            let mut out: Vec<(A, B)> = Vec::new();
+            for ca in (ga.shrink)(a) {
+                out.push((ca, b.clone()));
+            }
+            for cb in (gb.shrink)(b) {
+                out.push((a.clone(), cb));
+            }
+            out
+        }),
+    }
+}
+
+/// Choose uniformly from a fixed set; shrinks toward the first element.
+pub fn gen_choice<T: Clone + PartialEq + 'static>(choices: Vec<T>) -> Gen<T> {
+    assert!(!choices.is_empty());
+    let c2 = choices.clone();
+    Gen {
+        generate: Box::new(move |rng| rng.choose(&choices).clone()),
+        shrink: Box::new(move |v| {
+            if *v != c2[0] {
+                vec![c2[0].clone()]
+            } else {
+                Vec::new()
+            }
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum symmetric", 100, gen_tuple2(gen_i64(0, 50), gen_i64(0, 50)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk")]
+    fn failing_property_shrinks() {
+        check("all values below 10", 500, gen_i64(0, 1000), |&v| v < 10);
+    }
+
+    #[test]
+    fn shrinker_finds_minimal() {
+        // shrink from a known failure: property v < 10 fails minimally at 10
+        let gen = gen_i64(0, 1000);
+        let minimal = shrink_failure(&gen, &|&v: &i64| v < 10, 777);
+        assert_eq!(minimal, 10);
+    }
+
+    #[test]
+    fn vec_generator_respects_max_len() {
+        let gen = gen_vec(gen_i64(0, 5), 8);
+        let mut rng = Pcg32::new(1);
+        for _ in 0..100 {
+            let v = (gen.generate)(&mut rng);
+            assert!(v.len() <= 8);
+            assert!(v.iter().all(|&x| (0..=5).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn vec_shrinker_minimises_length() {
+        let gen = gen_vec(gen_i64(0, 100), 32);
+        // property: no vector contains a value >= 50
+        let failing = vec![3, 77, 12, 50];
+        let minimal = shrink_failure(&gen, &|v: &Vec<i64>| v.iter().all(|&x| x < 50), failing);
+        assert_eq!(minimal.len(), 1);
+        assert!(minimal[0] >= 50);
+    }
+
+    #[test]
+    fn choice_generator_only_picks_choices() {
+        let gen = gen_choice(vec!["a", "b", "c"]);
+        let mut rng = Pcg32::new(5);
+        for _ in 0..50 {
+            let v = (gen.generate)(&mut rng);
+            assert!(["a", "b", "c"].contains(&v));
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with typed accessors and a generated usage
+//! string.  Strict: unknown options are errors, so typos fail fast.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for usage output and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{name}: {value} ({why})")]
+    BadValue {
+        name: String,
+        value: String,
+        why: String,
+    },
+}
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand name) against a spec.
+    pub fn parse(argv: &[String], spec: &[OptSpec]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        for s in spec {
+            if let Some(d) = s.default {
+                out.values.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let Some(s) = spec.iter().find(|s| s.name == name) else {
+                    return Err(CliError::UnknownOption(name));
+                };
+                if s.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    out.values.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError::BadValue {
+                            name,
+                            value: inline_val.unwrap(),
+                            why: "flag takes no value".into(),
+                        });
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|e| CliError::BadValue {
+                name: name.to_string(),
+                value: v.to_string(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
+    /// Typed getter with a non-spec default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(name)?.unwrap_or(default))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage block for a subcommand.
+pub fn usage(cmd: &str, about: &str, spec: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for o in spec {
+        let val = if o.takes_value { " <value>" } else { "" };
+        let def = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{val}\n      {}{def}\n", o.name, o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec {
+                name: "count",
+                help: "how many",
+                takes_value: true,
+                default: Some("10"),
+            },
+            OptSpec {
+                name: "verbose",
+                help: "chatty",
+                takes_value: false,
+                default: None,
+            },
+            OptSpec {
+                name: "path",
+                help: "a path",
+                takes_value: true,
+                default: None,
+            },
+        ]
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &spec()).unwrap();
+        assert_eq!(a.get_or::<u32>("count", 0).unwrap(), 10);
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.get("path"), None);
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = Args::parse(&sv(&["--count", "5", "--verbose", "pos1"]), &spec()).unwrap();
+        assert_eq!(a.get_or::<u32>("count", 0).unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&sv(&["--count=7"]), &spec()).unwrap();
+        assert_eq!(a.get_or::<u32>("count", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--nope"]), &spec()),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--path"]), &spec()),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let a = Args::parse(&sv(&["--count", "abc"]), &spec()).unwrap();
+        assert!(a.get_or::<u32>("count", 0).is_err());
+    }
+
+    #[test]
+    fn usage_contains_options() {
+        let u = usage("demo", "test command", &spec());
+        assert!(u.contains("--count"));
+        assert!(u.contains("[default: 10]"));
+    }
+}

@@ -1,0 +1,138 @@
+//! Loader for idx-format image/label files (the MNIST container format).
+//!
+//! The build-time python pipeline writes the synthetic dataset in this
+//! format, so this loader also works unchanged with a real MNIST
+//! download if one is available.
+
+use byteorder::{BigEndian, ReadBytesExt};
+use std::io::Read;
+use std::path::Path;
+
+/// A set of images: `n` flattened `rows x cols` u8 images.
+#[derive(Debug, Clone)]
+pub struct Images {
+    pub n: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u8>, // n * rows * cols
+}
+
+impl Images {
+    pub fn image(&self, i: usize) -> &[u8] {
+        let sz = self.rows * self.cols;
+        &self.data[i * sz..(i + 1) * sz]
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum IdxError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad idx magic {0:#010x} (expected {1:#010x})")]
+    BadMagic(u32, u32),
+    #[error("truncated idx file: expected {expected} bytes, got {got}")]
+    Truncated { expected: usize, got: usize },
+}
+
+const IMAGES_MAGIC: u32 = 0x0000_0803;
+const LABELS_MAGIC: u32 = 0x0000_0801;
+
+/// Read an idx3 image file.
+pub fn read_images(path: &Path) -> Result<Images, IdxError> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let magic = f.read_u32::<BigEndian>()?;
+    if magic != IMAGES_MAGIC {
+        return Err(IdxError::BadMagic(magic, IMAGES_MAGIC));
+    }
+    let n = f.read_u32::<BigEndian>()? as usize;
+    let rows = f.read_u32::<BigEndian>()? as usize;
+    let cols = f.read_u32::<BigEndian>()? as usize;
+    let mut data = Vec::with_capacity(n * rows * cols);
+    f.read_to_end(&mut data)?;
+    if data.len() < n * rows * cols {
+        return Err(IdxError::Truncated {
+            expected: n * rows * cols,
+            got: data.len(),
+        });
+    }
+    data.truncate(n * rows * cols);
+    Ok(Images { n, rows, cols, data })
+}
+
+/// Read an idx1 label file.
+pub fn read_labels(path: &Path) -> Result<Vec<u8>, IdxError> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let magic = f.read_u32::<BigEndian>()?;
+    if magic != LABELS_MAGIC {
+        return Err(IdxError::BadMagic(magic, LABELS_MAGIC));
+    }
+    let n = f.read_u32::<BigEndian>()? as usize;
+    let mut data = Vec::with_capacity(n);
+    f.read_to_end(&mut data)?;
+    if data.len() < n {
+        return Err(IdxError::Truncated {
+            expected: n,
+            got: data.len(),
+        });
+    }
+    data.truncate(n);
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_images(path: &Path, n: u32, rows: u32, cols: u32, data: &[u8]) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(&IMAGES_MAGIC.to_be_bytes()).unwrap();
+        f.write_all(&n.to_be_bytes()).unwrap();
+        f.write_all(&rows.to_be_bytes()).unwrap();
+        f.write_all(&cols.to_be_bytes()).unwrap();
+        f.write_all(data).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_images() {
+        let dir = std::env::temp_dir().join("ecmac_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("imgs.idx3");
+        let data: Vec<u8> = (0..2 * 3 * 4).map(|i| i as u8).collect();
+        write_images(&p, 2, 3, 4, &data);
+        let im = read_images(&p).unwrap();
+        assert_eq!((im.n, im.rows, im.cols), (2, 3, 4));
+        assert_eq!(im.image(1), &data[12..24]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("ecmac_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.idx3");
+        std::fs::write(&p, [0u8; 16]).unwrap();
+        assert!(matches!(read_images(&p), Err(IdxError::BadMagic(..))));
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("ecmac_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trunc.idx3");
+        write_images(&p, 10, 28, 28, &[0u8; 100]); // claims 7840 bytes
+        assert!(matches!(read_images(&p), Err(IdxError::Truncated { .. })));
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        let dir = std::env::temp_dir().join("ecmac_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("labels.idx1");
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(&LABELS_MAGIC.to_be_bytes()).unwrap();
+        f.write_all(&5u32.to_be_bytes()).unwrap();
+        f.write_all(&[1, 2, 3, 4, 5]).unwrap();
+        drop(f);
+        assert_eq!(read_labels(&p).unwrap(), vec![1, 2, 3, 4, 5]);
+    }
+}

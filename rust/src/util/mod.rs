@@ -1,0 +1,10 @@
+//! Shared substrate utilities built from scratch for the offline crate
+//! set: JSON, PRNGs, CLI parsing, thread pool/channels, statistics and
+//! the idx dataset container.
+
+pub mod cli;
+pub mod idx;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

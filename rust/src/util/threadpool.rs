@@ -1,0 +1,405 @@
+//! Fixed-size thread pool with a simple MPMC channel (no tokio offline).
+//!
+//! The coordinator's event loop and the benchmark harness both run on
+//! this pool.  It provides:
+//!   * `ThreadPool::execute` — fire-and-forget jobs
+//!   * `scope_map` — parallel map over a slice with result collection
+//!   * `Channel` — a small blocking MPMC queue with close semantics and
+//!     bounded capacity (the coordinator's backpressure primitive)
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Blocking MPMC channel with optional capacity bound.
+pub struct Channel<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+struct ChannelInner<T> {
+    queue: Mutex<ChannelState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct ChannelState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SendError<T> {
+    Closed(T),
+}
+
+impl<T> Channel<T> {
+    /// `capacity = 0` means unbounded.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Arc::new(ChannelInner {
+                queue: Mutex::new(ChannelState {
+                    items: VecDeque::new(),
+                    closed: false,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                capacity,
+            }),
+        }
+    }
+
+    /// Blocking send; returns the value back if the channel is closed.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError::Closed(value));
+            }
+            if self.inner.capacity == 0 || st.items.len() < self.inner.capacity {
+                st.items.push_back(value);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send attempt; `Ok(false)` when full.
+    pub fn try_send(&self, value: T) -> Result<bool, SendError<T>> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if st.closed {
+            return Err(SendError::Closed(value));
+        }
+        if self.inner.capacity != 0 && st.items.len() >= self.inner.capacity {
+            return Ok(false);
+        }
+        st.items.push_back(value);
+        self.inner.not_empty.notify_one();
+        Ok(true)
+    }
+
+    /// Blocking receive; `None` when the channel is closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(v) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(v);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with a timeout; `Ok(None)` on timeout.
+    pub fn recv_timeout(&self, dur: std::time::Duration) -> Result<Option<T>, ()> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(v) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Ok(Some(v));
+            }
+            if st.closed {
+                return Err(());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, res) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+            if res.timed_out() && st.items.is_empty() {
+                if st.closed {
+                    return Err(());
+                }
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Drain everything currently queued without blocking.
+    pub fn drain(&self) -> Vec<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        let out = st.items.drain(..).collect();
+        self.inner.not_full.notify_all();
+        out
+    }
+
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    jobs: Channel<Job>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(n_threads: usize) -> Self {
+        let jobs: Channel<Job> = Channel::new(0);
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n_threads.max(1))
+            .map(|i| {
+                let jobs = jobs.clone();
+                let in_flight = Arc::clone(&in_flight);
+                std::thread::Builder::new()
+                    .name(format!("ecmac-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = jobs.recv() {
+                            job();
+                            in_flight.fetch_sub(1, Ordering::Release);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            jobs,
+            workers,
+            in_flight,
+        }
+    }
+
+    /// Number of logical CPUs (fallback 4).
+    pub fn default_parallelism() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::Acquire);
+        self.jobs
+            .send(Box::new(f))
+            .unwrap_or_else(|_| panic!("pool closed"));
+    }
+
+    /// Busy-wait (with yield) until all submitted jobs finished.
+    pub fn wait_idle(&self) {
+        while self.in_flight.load(Ordering::Acquire) != 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.jobs.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel map over indexed chunks: applies `f(index, &item)` on `pool`,
+/// returning results in input order.
+pub fn scope_map<T, R, F>(pool: &ThreadPool, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + 'static,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let results: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
+    // SAFETY-free approach: use crossbeam-style scoped threads via std.
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let n_workers = ThreadPool::default_parallelism().min(items.len().max(1));
+        let next = &next;
+        let f = &f;
+        let results = &results;
+        for _ in 0..n_workers {
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    let _ = pool; // pool retained in the signature for future work-stealing use
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
+/// Parallel map without an explicit pool (scoped threads).
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let results: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let n_workers = ThreadPool::default_parallelism().min(items.len().max(1));
+        let next = &next;
+        let f = &f;
+        let results = &results;
+        for _ in 0..n_workers {
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn channel_fifo() {
+        let ch = Channel::new(0);
+        for i in 0..10 {
+            ch.send(i).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(ch.recv(), Some(i));
+        }
+    }
+
+    #[test]
+    fn channel_close_drains_then_none() {
+        let ch = Channel::new(0);
+        ch.send(1).unwrap();
+        ch.close();
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), None);
+        assert!(ch.send(2).is_err());
+    }
+
+    #[test]
+    fn bounded_channel_backpressure() {
+        let ch = Channel::new(2);
+        assert!(ch.try_send(1).unwrap());
+        assert!(ch.try_send(2).unwrap());
+        assert!(!ch.try_send(3).unwrap()); // full
+        assert_eq!(ch.recv(), Some(1));
+        assert!(ch.try_send(3).unwrap());
+    }
+
+    #[test]
+    fn bounded_send_blocks_until_recv() {
+        let ch = Channel::new(1);
+        ch.send(1).unwrap();
+        let ch2 = ch.clone();
+        let t = std::thread::spawn(move || ch2.send(2).unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(ch.recv(), Some(1));
+        t.join().unwrap();
+        assert_eq!(ch.recv(), Some(2));
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let ch: Channel<u32> = Channel::new(0);
+        let r = ch.recv_timeout(std::time::Duration::from_millis(10));
+        assert_eq!(r, Ok(None));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..500).collect();
+        let out = par_map(&items, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * 2
+        });
+        assert_eq!(out, (0..500).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn channel_mpmc_many_producers_consumers() {
+        let ch = Channel::new(16);
+        let total = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for p in 0..4 {
+                let ch = ch.clone();
+                s.spawn(move || {
+                    for i in 0..100u64 {
+                        ch.send(p * 100 + i).unwrap();
+                    }
+                });
+            }
+            let consumers: Vec<_> = (0..3)
+                .map(|_| {
+                    let ch = ch.clone();
+                    let total = Arc::clone(&total);
+                    s.spawn(move || {
+                        while let Some(v) = ch.recv() {
+                            total.fetch_add(v, Ordering::Relaxed);
+                        }
+                    })
+                })
+                .collect();
+            // close after producers are done
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            ch.close();
+            for c in consumers {
+                c.join().unwrap();
+            }
+        });
+        let expect: u64 = (0..4u64).map(|p| (0..100).map(|i| p * 100 + i).sum::<u64>()).sum();
+        assert_eq!(total.load(Ordering::Relaxed), expect);
+    }
+}

@@ -1,0 +1,114 @@
+//! Quantized model parameters (`weights_q.json` from the AOT pipeline).
+//!
+//! All values are 8-bit sign-magnitude encodings at scale 1/128, exactly
+//! what the hardware's weight/bias memories hold.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub const N_INPUTS: usize = 62;
+pub const N_HIDDEN: usize = 30;
+pub const N_OUTPUTS: usize = 10;
+/// Physical neurons on the die; hidden layer runs in 3 passes, output in 1.
+pub const N_PHYSICAL: usize = 10;
+
+/// Quantized network parameters.
+#[derive(Debug, Clone)]
+pub struct QuantWeights {
+    /// Hidden weights, row-major (62, 30).
+    pub w1: Vec<u8>,
+    /// Hidden biases (30).
+    pub b1: Vec<u8>,
+    /// Output weights, row-major (30, 10).
+    pub w2: Vec<u8>,
+    /// Output biases (10).
+    pub b2: Vec<u8>,
+}
+
+impl QuantWeights {
+    pub fn load(path: &Path) -> Result<QuantWeights> {
+        let j = Json::from_file(path).context("loading quantized weights")?;
+        let field = |name: &str, want_len: usize| -> Result<Vec<u8>> {
+            let v = j.req(name)?.flat_i32()?;
+            anyhow::ensure!(
+                v.len() == want_len,
+                "{name}: expected {want_len} values, got {}",
+                v.len()
+            );
+            v.iter()
+                .map(|&x| {
+                    anyhow::ensure!((0..=255).contains(&x), "{name}: value {x} out of u8");
+                    Ok(x as u8)
+                })
+                .collect()
+        };
+        let w = QuantWeights {
+            w1: field("w1", N_INPUTS * N_HIDDEN)?,
+            b1: field("b1", N_HIDDEN)?,
+            w2: field("w2", N_HIDDEN * N_OUTPUTS)?,
+            b2: field("b2", N_OUTPUTS)?,
+        };
+        Ok(w)
+    }
+
+    /// Load from the conventional artifacts location.
+    pub fn load_artifacts(artifacts: &Path) -> Result<QuantWeights> {
+        Self::load(&artifacts.join("weights_q.json"))
+    }
+
+    /// Hidden weight w1[input][hidden].
+    #[inline]
+    pub fn w1_at(&self, input: usize, hidden: usize) -> u8 {
+        self.w1[input * N_HIDDEN + hidden]
+    }
+
+    /// Output weight w2[hidden][output].
+    #[inline]
+    pub fn w2_at(&self, hidden: usize, output: usize) -> u8 {
+        self.w2[hidden * N_OUTPUTS + output]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_weights_json() -> String {
+        let arr = |n: usize| {
+            format!(
+                "[{}]",
+                (0..n).map(|i| (i % 200).to_string()).collect::<Vec<_>>().join(",")
+            )
+        };
+        format!(
+            r#"{{"w1":{},"b1":{},"w2":{},"b2":{}}}"#,
+            arr(N_INPUTS * N_HIDDEN),
+            arr(N_HIDDEN),
+            arr(N_HIDDEN * N_OUTPUTS),
+            arr(N_OUTPUTS)
+        )
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("ecmac_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.json");
+        std::fs::write(&p, fake_weights_json()).unwrap();
+        let w = QuantWeights::load(&p).unwrap();
+        assert_eq!(w.w1.len(), N_INPUTS * N_HIDDEN);
+        assert_eq!(w.w1_at(0, 5), 5);
+        assert_eq!(w.w1_at(1, 0), (N_HIDDEN % 200) as u8);
+        assert_eq!(w.w2_at(1, 1), ((N_OUTPUTS + 1) % 200) as u8);
+    }
+
+    #[test]
+    fn rejects_wrong_shapes() {
+        let dir = std::env::temp_dir().join("ecmac_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, r#"{"w1":[1,2],"b1":[],"w2":[],"b2":[]}"#).unwrap();
+        assert!(QuantWeights::load(&p).is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! Failure injection: corrupted artifacts, bad configuration, and
+//! mid-flight shutdown must fail loudly and cleanly — never silently
+//! misclassify.
+
+use ecmac::amul::Config;
+use ecmac::coordinator::governor::{AccuracyTable, Governor, Policy};
+use ecmac::coordinator::{Backend, Coordinator, CoordinatorConfig, NativeBackend};
+use ecmac::dataset::Dataset;
+use ecmac::power::{MultiplierEnergyProfile, PowerModel};
+use ecmac::util::rng::Pcg32;
+use ecmac::weights::QuantWeights;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ecmac_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn corrupted_weights_json_rejected() {
+    let dir = tmpdir("weights");
+    // truncated json
+    std::fs::write(dir.join("weights_q.json"), r#"{"w1": [1, 2, 3"#).unwrap();
+    assert!(QuantWeights::load_artifacts(&dir).is_err());
+    // wrong shapes
+    std::fs::write(
+        dir.join("weights_q.json"),
+        r#"{"w1":[1],"b1":[1],"w2":[1],"b2":[1]}"#,
+    )
+    .unwrap();
+    assert!(QuantWeights::load_artifacts(&dir).is_err());
+    // out-of-range values
+    let arr = |n: usize, v: i64| -> String {
+        format!("[{}]", vec![v.to_string(); n].join(","))
+    };
+    std::fs::write(
+        dir.join("weights_q.json"),
+        format!(
+            r#"{{"w1":{},"b1":{},"w2":{},"b2":{}}}"#,
+            arr(62 * 30, 300), // 300 > u8
+            arr(30, 0),
+            arr(30 * 10, 0),
+            arr(10, 0)
+        ),
+    )
+    .unwrap();
+    assert!(QuantWeights::load_artifacts(&dir).is_err());
+}
+
+#[test]
+fn truncated_idx_dataset_rejected() {
+    let dir = tmpdir("idx");
+    // header claims 100 images, body has 10 bytes
+    let mut bytes = Vec::new();
+    bytes.extend(0x0000_0803u32.to_be_bytes());
+    bytes.extend(100u32.to_be_bytes());
+    bytes.extend(28u32.to_be_bytes());
+    bytes.extend(28u32.to_be_bytes());
+    bytes.extend([0u8; 10]);
+    std::fs::write(dir.join("test-images.idx3"), bytes).unwrap();
+    std::fs::write(dir.join("test-labels.idx1"), [0u8; 8]).unwrap();
+    std::fs::write(dir.join("feature-indices.txt"), "1 2 3").unwrap();
+    assert!(Dataset::load_test(&dir).is_err());
+}
+
+#[test]
+fn label_count_mismatch_rejected() {
+    let dir = tmpdir("mismatch");
+    // 2 images
+    let mut imgs = Vec::new();
+    imgs.extend(0x0000_0803u32.to_be_bytes());
+    imgs.extend(2u32.to_be_bytes());
+    imgs.extend(28u32.to_be_bytes());
+    imgs.extend(28u32.to_be_bytes());
+    imgs.extend(vec![0u8; 2 * 784]);
+    std::fs::write(dir.join("test-images.idx3"), imgs).unwrap();
+    // 3 labels
+    let mut lbls = Vec::new();
+    lbls.extend(0x0000_0801u32.to_be_bytes());
+    lbls.extend(3u32.to_be_bytes());
+    lbls.extend([0u8; 3]);
+    std::fs::write(dir.join("test-labels.idx1"), lbls).unwrap();
+    let feat: String = (0..62).map(|i| format!("{i}\n")).collect();
+    std::fs::write(dir.join("feature-indices.txt"), feat).unwrap();
+    assert!(Dataset::load_test(&dir).is_err());
+}
+
+#[test]
+fn engine_load_fails_cleanly_without_artifacts() {
+    let dir = tmpdir("noartifacts");
+    let err = match ecmac::runtime::Engine::load(&dir) {
+        Ok(_) => panic!("engine must not load from an empty directory"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn engine_load_fails_on_bad_hlo_reference() {
+    let dir = tmpdir("badhlo");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"hlo":{"approx":{"1":"missing.hlo.txt"}}}"#,
+    )
+    .unwrap();
+    assert!(ecmac::runtime::Engine::load(&dir).is_err());
+}
+
+#[test]
+fn invalid_config_values_rejected_everywhere() {
+    assert!(Config::new(33).is_none());
+    assert!(Config::new(u32::MAX).is_none());
+    // accuracy table with wrong length panics in the constructor
+    let r = std::panic::catch_unwind(|| AccuracyTable::new(vec![0.5; 5]));
+    assert!(r.is_err());
+}
+
+#[test]
+fn backend_failure_closes_reply_channels_instead_of_hanging() {
+    struct FailingBackend;
+    impl Backend for FailingBackend {
+        fn execute(
+            &self,
+            _: &[[u8; 62]],
+            _: Config,
+        ) -> anyhow::Result<Vec<([i32; 10], u8)>> {
+            anyhow::bail!("injected backend failure")
+        }
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+    }
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(200, 1)).unwrap();
+    let acc = AccuracyTable::new(vec![0.9; ecmac::amul::N_CONFIGS]);
+    let gov = Governor::new(Policy::Fixed(Config::ACCURATE), &pm, &acc);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(50),
+            queue_capacity: 64,
+            workers: 1,
+        },
+        Arc::new(FailingBackend) as Arc<dyn Backend>,
+        gov,
+        pm,
+    );
+    let mut rng = Pcg32::new(5);
+    let mut replies = Vec::new();
+    for _ in 0..16 {
+        let mut x = [0u8; 62];
+        for v in x.iter_mut() {
+            *v = rng.below(128) as u8;
+        }
+        if let Some(r) = coord.try_submit(x) {
+            replies.push(r);
+        }
+    }
+    // every reply channel must resolve (closed), not hang
+    for r in replies {
+        let got = r.recv_timeout(Duration::from_secs(5));
+        assert!(
+            matches!(got, Err(())),
+            "expected closed channel on backend failure, got {got:?}"
+        );
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.requests, 16); // accounted even though they failed
+}
+
+#[test]
+fn governor_handles_nan_accuracy_rows() {
+    // a sweep file with NaN accuracy (e.g. artifacts built with
+    // --skip-sweep) must not break budget policies
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(200, 2)).unwrap();
+    let acc = AccuracyTable::new(vec![f64::NAN; ecmac::amul::N_CONFIGS]);
+    let g = Governor::new(Policy::PowerBudget { budget_mw: 5.0 }, &pm, &acc);
+    // must pick *something* in range
+    assert!(g.current().index() <= 32);
+}
+
+#[test]
+fn submit_after_shutdown_returns_none() {
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(200, 3)).unwrap();
+    let acc = AccuracyTable::new(vec![0.9; ecmac::amul::N_CONFIGS]);
+    let gov = Governor::new(Policy::Fixed(Config::ACCURATE), &pm, &acc);
+    let mut rng = Pcg32::new(5);
+    let mut gen = |n: usize| -> Vec<u8> { (0..n).map(|_| rng.below(255) as u8).collect() };
+    let net = ecmac::datapath::Network::new(QuantWeights {
+        w1: gen(62 * 30),
+        b1: gen(30),
+        w2: gen(30 * 10),
+        b2: gen(10),
+    });
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        Arc::new(NativeBackend { network: net }) as Arc<dyn Backend>,
+        gov,
+        pm,
+    );
+    // hold a clone of the internal queue by submitting once first
+    assert!(coord.try_submit([0u8; 62]).is_some());
+    let coord2 = coord; // move
+    let _ = coord2.shutdown();
+    // Coordinator consumed by shutdown: API prevents use-after-shutdown
+    // at compile time; this test documents the ownership contract.
+}

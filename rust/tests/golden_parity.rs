@@ -1,0 +1,152 @@
+//! Cross-language golden-vector parity: the rust bit-level models must
+//! match the python-generated vectors exactly.  This is the contract
+//! that ties Layer 3 to Layers 1/2.
+//!
+//! Requires `make artifacts` (skips cleanly when artifacts are absent,
+//! e.g. in a fresh checkout).
+
+use ecmac::amul::{self, Config};
+use ecmac::datapath::{DatapathSim, Network};
+use ecmac::util::json::Json;
+use ecmac::weights::QuantWeights;
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = ecmac::runtime::default_artifacts_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn multiplier_matches_python_golden_vectors() {
+    let dir = require_artifacts!();
+    let j = Json::from_file(&dir.join("golden_mul.json")).expect("golden_mul.json");
+    let cases = j.as_arr().expect("array of configs");
+    assert_eq!(cases.len(), amul::N_CONFIGS);
+    let mut checked = 0usize;
+    for case in cases {
+        let cfg = Config::new(case.req("cfg").unwrap().as_i64().unwrap() as u32).unwrap();
+        // decoder ROM parity
+        let levels: Vec<i64> = case
+            .req("levels")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        let rust_levels: Vec<i64> = amul::column_levels(cfg).iter().map(|&l| l as i64).collect();
+        assert_eq!(levels, rust_levels, "{cfg} decoder mismatch");
+        // product parity
+        let a = case.req("a").unwrap().flat_i32().unwrap();
+        let b = case.req("b").unwrap().flat_i32().unwrap();
+        let p = case.req("product").unwrap().flat_i32().unwrap();
+        for ((&av, &bv), &pv) in a.iter().zip(&b).zip(&p) {
+            let got = amul::mul8_sm_approx(av as u8, bv as u8, cfg);
+            assert_eq!(got, pv, "{cfg}: a={av:#04x} b={bv:#04x}");
+            checked += 1;
+        }
+    }
+    assert!(checked >= 33 * 256, "checked {checked} vectors");
+}
+
+#[test]
+fn datapath_matches_python_mlp_golden_vectors() {
+    let dir = require_artifacts!();
+    let weights = QuantWeights::load_artifacts(&dir).expect("weights");
+    let net = Network::new(weights);
+    let j = Json::from_file(&dir.join("golden_mlp.json")).expect("golden_mlp.json");
+    let xs_flat = j.req("x").unwrap().flat_i32().unwrap();
+    let n = xs_flat.len() / 62;
+    assert!(n >= 8, "need at least 8 golden images");
+    let xs: Vec<[u8; 62]> = (0..n)
+        .map(|i| {
+            let mut arr = [0u8; 62];
+            for (k, slot) in arr.iter_mut().enumerate() {
+                *slot = xs_flat[i * 62 + k] as u8;
+            }
+            arr
+        })
+        .collect();
+    for case in j.req("cases").unwrap().as_arr().unwrap() {
+        let cfg = Config::new(case.req("cfg").unwrap().as_i64().unwrap() as u32).unwrap();
+        let logits = case.req("logits").unwrap().flat_i32().unwrap();
+        let hidden = case.req("hidden").unwrap().flat_i32().unwrap();
+        let preds = case.req("pred").unwrap().flat_i32().unwrap();
+        let mut sim = DatapathSim::new(&net, cfg);
+        for (i, x) in xs.iter().enumerate() {
+            // functional path
+            let fast = net.forward(x, cfg);
+            for o in 0..10 {
+                assert_eq!(fast.logits[o], logits[i * 10 + o], "{cfg} img {i} logit {o}");
+            }
+            for h in 0..30 {
+                assert_eq!(
+                    fast.hidden[h] as i32,
+                    hidden[i * 30 + h],
+                    "{cfg} img {i} hidden {h}"
+                );
+            }
+            assert_eq!(fast.pred as i32, preds[i], "{cfg} img {i} pred");
+            // cycle-accurate path
+            let slow = sim.run_image(x);
+            assert_eq!(slow, fast, "{cfg} img {i} cycle-accurate divergence");
+        }
+    }
+}
+
+#[test]
+fn error_metrics_match_python_table() {
+    let dir = require_artifacts!();
+    let j = Json::from_file(&dir.join("amul_metrics.json")).expect("amul_metrics.json");
+    for row in j.as_arr().unwrap() {
+        let cfg = Config::new(row.req("cfg").unwrap().as_i64().unwrap() as u32).unwrap();
+        let stats = ecmac::amul::metrics::exhaustive(cfg);
+        let er = row.req("er_pct").unwrap().as_f64().unwrap();
+        let mred = row.req("mred_pct").unwrap().as_f64().unwrap();
+        let nmed = row.req("nmed_pct").unwrap().as_f64().unwrap();
+        assert!((stats.er_pct - er).abs() < 1e-9, "{cfg} ER {} vs {er}", stats.er_pct);
+        assert!(
+            (stats.mred_pct - mred).abs() < 1e-9,
+            "{cfg} MRED {} vs {mred}",
+            stats.mred_pct
+        );
+        assert!(
+            (stats.nmed_pct - nmed).abs() < 1e-9,
+            "{cfg} NMED {} vs {nmed}",
+            stats.nmed_pct
+        );
+    }
+}
+
+#[test]
+fn netlist_multiplier_matches_golden_vectors() {
+    let dir = require_artifacts!();
+    let j = Json::from_file(&dir.join("golden_mul.json")).expect("golden_mul.json");
+    let m = ecmac::netlist::multiplier::MultiplierNet::build();
+    for case in j.as_arr().unwrap().iter().step_by(4) {
+        let cfg = Config::new(case.req("cfg").unwrap().as_i64().unwrap() as u32).unwrap();
+        let mut sim = ecmac::netlist::Sim::new(&m.nl);
+        m.apply_config(&mut sim, cfg);
+        let a = case.req("a").unwrap().flat_i32().unwrap();
+        let b = case.req("b").unwrap().flat_i32().unwrap();
+        let p = case.req("product").unwrap().flat_i32().unwrap();
+        for ((&av, &bv), &pv) in a.iter().zip(&b).zip(&p) {
+            let mag = m.run(&mut sim, (av & 0x7F) as u32, (bv & 0x7F) as u32) as i32;
+            let sign_neg = ((av ^ bv) & 0x80) != 0 && mag != 0;
+            let got = if sign_neg { -mag } else { mag };
+            assert_eq!(got, pv, "{cfg}: gate-level a={av:#04x} b={bv:#04x}");
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! Property-based invariant tests (testkit::prop) over the arithmetic
+//! models and the coordinator: the rust analogue of the python
+//! hypothesis suite.
+
+use ecmac::amul::{self, sm, Config};
+use ecmac::coordinator::governor::{AccuracyTable, Governor, Policy};
+use ecmac::coordinator::{Backend, Coordinator, CoordinatorConfig, NativeBackend};
+use ecmac::datapath::{neuron, Network};
+use ecmac::power::{MultiplierEnergyProfile, PowerModel};
+use ecmac::testkit::prop::*;
+use ecmac::util::rng::Pcg32;
+use ecmac::weights::QuantWeights;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// arithmetic invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_approx_never_exceeds_exact() {
+    check(
+        "approx product <= exact product",
+        3000,
+        gen_tuple2(
+            gen_tuple2(gen_i64(0, 127), gen_i64(0, 127)),
+            gen_i64(0, 32),
+        ),
+        |&((a, b), cfg)| {
+            let cfg = Config::new(cfg as u32).unwrap();
+            amul::mul7_approx(a as u32, b as u32, cfg) <= (a * b) as u32
+        },
+    );
+}
+
+#[test]
+fn prop_error_bounded_by_gated_columns() {
+    check(
+        "error bounded by sum of approximated column capacities",
+        2000,
+        gen_tuple2(
+            gen_tuple2(gen_i64(0, 127), gen_i64(0, 127)),
+            gen_i64(1, 32),
+        ),
+        |&((a, b), cfg)| {
+            let cfg = Config::new(cfg as u32).unwrap();
+            let levels = amul::column_levels(cfg);
+            let bound: u32 = (0..13)
+                .filter(|&k| levels[k] > 0)
+                .map(|k| ((amul::column_pps(k).count() as u32) - 1) << k)
+                .sum();
+            let exact = (a * b) as u32;
+            let approx = amul::mul7_approx(a as u32, b as u32, cfg);
+            exact - approx <= bound
+        },
+    );
+}
+
+#[test]
+fn prop_sign_magnitude_roundtrip() {
+    check("sm encode/decode roundtrip", 500, gen_i64(-127, 127), |&v| {
+        sm::decode(sm::encode(v as i32)) == v as i32
+    });
+}
+
+#[test]
+fn prop_signed_mul_sign_rules() {
+    check(
+        "sign of product = XOR of operand signs",
+        2000,
+        gen_tuple2(
+            gen_tuple2(gen_i64(-127, 127), gen_i64(-127, 127)),
+            gen_i64(0, 32),
+        ),
+        |&((x, w), cfg)| {
+            let cfg = Config::new(cfg as u32).unwrap();
+            let p = amul::mul8_sm_approx(sm::encode(x as i32), sm::encode(w as i32), cfg);
+            if p == 0 {
+                true
+            } else {
+                (p > 0) == ((x > 0) == (w > 0))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_saturation_range_and_monotonicity() {
+    check(
+        "saturation stays in [0,127] and is monotone",
+        2000,
+        gen_tuple2(gen_i64(-(1 << 20), 1 << 20), gen_i64(0, 1 << 10)),
+        |&(acc, delta)| {
+            let a = neuron::saturate_activation(acc as i32);
+            let b = neuron::saturate_activation((acc + delta) as i32);
+            a <= 127 && b <= 127 && a <= b
+        },
+    );
+}
+
+#[test]
+fn prop_argmax_returns_maximum() {
+    check(
+        "argmax picks a maximal element with lowest index",
+        1000,
+        gen_vec(gen_i64(-100_000, 100_000), 10),
+        |v| {
+            if v.is_empty() {
+                return true;
+            }
+            let v32: Vec<i32> = v.iter().map(|&x| x as i32).collect();
+            let idx = neuron::argmax(&v32);
+            let max = *v32.iter().max().unwrap();
+            v32[idx] == max && v32[..idx].iter().all(|&x| x < max)
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// datapath invariants
+// ---------------------------------------------------------------------------
+
+fn random_network(seed: u64) -> Network {
+    let mut rng = Pcg32::new(seed);
+    let mut gen = |n: usize| -> Vec<u8> {
+        (0..n)
+            .map(|_| {
+                let mag = rng.below(128) as u8;
+                if mag == 0 {
+                    0
+                } else {
+                    ((rng.below(2) as u8) << 7) | mag
+                }
+            })
+            .collect()
+    };
+    Network::new(QuantWeights {
+        w1: gen(62 * 30),
+        b1: gen(30),
+        w2: gen(30 * 10),
+        b2: gen(10),
+    })
+}
+
+#[test]
+fn prop_forward_deterministic_and_bounded() {
+    let net = random_network(11);
+    check(
+        "forward pass deterministic, hidden in [0,127], logits in 21 bits",
+        300,
+        gen_tuple2(gen_vec(gen_i64(0, 127), 62), gen_i64(0, 32)),
+        |(xs, cfg)| {
+            let mut x = [0u8; 62];
+            for (i, &v) in xs.iter().enumerate().take(62) {
+                x[i] = v as u8;
+            }
+            let cfg = Config::new(*cfg as u32).unwrap();
+            let a = net.forward(&x, cfg);
+            let b = net.forward(&x, cfg);
+            a == b
+                && a.hidden.iter().all(|&h| h <= 127)
+                && a.logits.iter().all(|&l| l.unsigned_abs() < (1 << 20))
+        },
+    );
+}
+
+#[test]
+fn prop_accurate_config_dominates_logit_values() {
+    // approximation only removes magnitude from products; per-MAC the
+    // magnitude shrinks, so the accumulated |logit| cannot grow by more
+    // than the per-product bound times the MAC count.
+    let net = random_network(13);
+    check(
+        "approx logits stay within the analytic envelope of exact logits",
+        200,
+        gen_vec(gen_i64(0, 127), 62),
+        |xs| {
+            let mut x = [0u8; 62];
+            for (i, &v) in xs.iter().enumerate().take(62) {
+                x[i] = v as u8;
+            }
+            let exact = net.forward(&x, Config::ACCURATE);
+            let approx = net.forward(&x, Config::MAX_APPROX);
+            // max per-product deficit at cfg32 (measured max_ed) times 62
+            let bound = ecmac::amul::metrics::exhaustive(Config::MAX_APPROX).max_ed as i64;
+            exact
+                .logits
+                .iter()
+                .zip(&approx.logits)
+                .all(|(&e, &a)| (e as i64 - a as i64).abs() <= bound * 92)
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_coordinator_answers_every_accepted_request_once() {
+    // randomized load patterns: every accepted request gets exactly one
+    // response, no cross-talk between request ids
+    let scenarios = gen_tuple2(gen_i64(1, 64), gen_i64(1, 200));
+    check_seeded(
+        "router: exactly-once responses",
+        12,
+        0xC0FFEE,
+        scenarios,
+        |&(max_batch, n_req)| {
+            let net = random_network(17);
+            let pm =
+                PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(300, 1)).unwrap();
+            let acc = AccuracyTable::new(vec![0.9; ecmac::amul::N_CONFIGS]);
+            let gov = Governor::new(Policy::Fixed(Config::new(3).unwrap()), &pm, &acc);
+            let coord = Coordinator::start(
+                CoordinatorConfig {
+                    max_batch: max_batch as usize,
+                    max_wait: Duration::from_micros(100),
+                    queue_capacity: 4096,
+                    workers: 2,
+                },
+                Arc::new(NativeBackend { network: net }) as Arc<dyn Backend>,
+                gov,
+                pm,
+            );
+            let mut rng = Pcg32::new(n_req as u64);
+            let mut expected = Vec::new();
+            let mut replies = Vec::new();
+            for _ in 0..n_req {
+                let mut x = [0u8; 62];
+                for v in x.iter_mut() {
+                    *v = rng.below(128) as u8;
+                }
+                expected.push(x);
+                match coord.try_submit(x) {
+                    Some(r) => replies.push(Some(r)),
+                    None => replies.push(None),
+                }
+            }
+            let net2 = random_network(17); // identical weights (same seed)
+            let mut ok = true;
+            let mut answered = 0u64;
+            for (x, r) in expected.iter().zip(replies) {
+                if let Some(r) = r {
+                    match r.recv() {
+                        Some(resp) => {
+                            answered += 1;
+                            // response must be for THIS request's features
+                            let want = net2.forward(x, Config::new(3).unwrap());
+                            ok &= resp.pred == want.pred && resp.logits == want.logits;
+                            // exactly-once: no second response arrives
+                            ok &= matches!(
+                                r.recv_timeout(Duration::from_millis(5)),
+                                Ok(None)
+                            );
+                        }
+                        None => ok = false,
+                    }
+                }
+            }
+            let m = coord.shutdown();
+            ok && m.requests == answered
+        },
+    );
+}
+
+#[test]
+fn prop_governor_budget_monotone() {
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(400, 9)).unwrap();
+    let accs: Vec<f64> = (0..ecmac::amul::N_CONFIGS)
+        .map(|c| 0.9 - 0.001 * c as f64)
+        .collect();
+    let table = AccuracyTable::new(accs.clone());
+    check(
+        "larger power budget never selects a less accurate config",
+        200,
+        gen_tuple2(gen_i64(4700, 5600), gen_i64(1, 400)),
+        |&(lo_mw_x1000, delta)| {
+            let lo = lo_mw_x1000 as f64 / 1000.0;
+            let hi = lo + delta as f64 / 1000.0;
+            let g_lo = Governor::new(Policy::PowerBudget { budget_mw: lo }, &pm, &table);
+            let g_hi = Governor::new(Policy::PowerBudget { budget_mw: hi }, &pm, &table);
+            accs[g_hi.current().index()] >= accs[g_lo.current().index()]
+        },
+    );
+}
+
+#[test]
+fn prop_channel_preserves_order_single_consumer() {
+    use ecmac::util::threadpool::Channel;
+    check(
+        "bounded channel is FIFO under a single producer/consumer",
+        50,
+        gen_tuple2(gen_i64(1, 32), gen_vec(gen_i64(0, 1000), 64)),
+        |(cap, items)| {
+            let ch = Channel::new(*cap as usize);
+            let items2 = items.clone();
+            let ch2 = ch.clone();
+            let producer = std::thread::spawn(move || {
+                for v in items2 {
+                    ch2.send(v).unwrap();
+                }
+                ch2.close();
+            });
+            let mut got = Vec::new();
+            while let Some(v) = ch.recv() {
+                got.push(v);
+            }
+            producer.join().unwrap();
+            got == *items
+        },
+    );
+}

@@ -1,0 +1,110 @@
+//! PJRT runtime integration: the AOT-compiled JAX/Pallas HLO must match
+//! the native rust model bit-for-bit across configurations and batch
+//! shapes — the end-to-end proof that all three layers compute the same
+//! function.
+
+use ecmac::amul::Config;
+use ecmac::dataset::Dataset;
+use ecmac::datapath::Network;
+use ecmac::runtime::Engine;
+use ecmac::weights::QuantWeights;
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = ecmac::runtime::default_artifacts_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn pjrt_matches_native_across_configs_and_batches() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).expect("engine");
+    let ds = Dataset::load_test(&dir).expect("dataset");
+    let net = Network::new(QuantWeights::load_artifacts(&dir).unwrap());
+
+    for &n in &[1usize, 3, 16, 20, 129] {
+        let xs = &ds.features[..n];
+        for cfg_i in [0u32, 1, 17, 32] {
+            let cfg = Config::new(cfg_i).unwrap();
+            let out = engine.execute(xs, cfg).expect("execute");
+            assert_eq!(out.preds.len(), n);
+            for (i, x) in xs.iter().enumerate() {
+                let want = net.forward(x, cfg);
+                assert_eq!(out.logits[i], want.logits, "batch {n} cfg {cfg_i} img {i}");
+                assert_eq!(out.preds[i], want.pred);
+                for h in 0..30 {
+                    assert_eq!(out.hidden[i][h], want.hidden[h] as i32);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_ref_f32_close_to_quantized() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).expect("engine");
+    let ds = Dataset::load_test(&dir).expect("dataset");
+    let net = Network::new(QuantWeights::load_artifacts(&dir).unwrap());
+    let xs = &ds.features[..64];
+    let f_logits = engine.execute_ref_f32(xs).expect("ref f32");
+    let mut agree = 0;
+    for (i, x) in xs.iter().enumerate() {
+        let q = net.forward(x, Config::ACCURATE);
+        let f_pred = f_logits[i]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as u8;
+        if f_pred == q.pred {
+            agree += 1;
+        }
+    }
+    // float and quantized predictions agree on the vast majority
+    assert!(agree >= 58, "only {agree}/64 agreed");
+}
+
+#[test]
+fn pjrt_accuracy_matches_artifact_sweep() {
+    let dir = require_artifacts!();
+    let sweep_path = dir.join("accuracy_sweep.json");
+    if !sweep_path.exists() {
+        eprintln!("skipping: no accuracy_sweep.json");
+        return;
+    }
+    let engine = Engine::load(&dir).expect("engine");
+    let ds = Dataset::load_test(&dir).expect("dataset");
+    let sweep = ecmac::coordinator::governor::AccuracyTable::load(&sweep_path).unwrap();
+    // spot-check two configs on a 1000-image subset: the PJRT accuracy
+    // must land within sampling distance of the python-side full-set sweep
+    for cfg_i in [0u32, 32] {
+        let cfg = Config::new(cfg_i).unwrap();
+        let n = 1000;
+        let out = engine.execute(&ds.features[..n], cfg).unwrap();
+        let correct = out
+            .preds
+            .iter()
+            .zip(&ds.labels[..n])
+            .filter(|(p, l)| p == l)
+            .count();
+        let sub_acc = correct as f64 / n as f64;
+        let full_acc = sweep.get(cfg);
+        assert!(
+            (sub_acc - full_acc).abs() < 0.04,
+            "cfg {cfg_i}: subset {sub_acc} vs sweep {full_acc}"
+        );
+    }
+}
