@@ -1,4 +1,4 @@
-//! End-to-end validation driver (EXPERIMENTS.md §End-to-end).
+//! End-to-end validation driver (DESIGN.md §Experiment-Index).
 //!
 //! Exercises the full system on the real workload and reports every
 //! paper-vs-measured number in one run:
@@ -139,7 +139,7 @@ fn main() -> anyhow::Result<()> {
         bw.network_saving_pct, bw.neuron_saving_pct, bw.mac_saving_pct
     );
     println!(
-        "    avg network saving over 32 configs: {:.2}% (paper reports 5.84%; see EXPERIMENTS.md)",
+        "    avg network saving over 32 configs: {:.2}% (paper reports 5.84%; see DESIGN.md §Paper-Deltas)",
         avg_saving
     );
     println!(

@@ -4,7 +4,7 @@
 //! Run:  cargo run --release --example quickstart
 //! (artifacts must exist: `make artifacts`)
 
-use ecmac::amul::Config;
+use ecmac::amul::{Config, ConfigSchedule};
 use ecmac::dataset::Dataset;
 use ecmac::datapath::{DatapathSim, Network};
 use ecmac::power::PowerModel;
@@ -57,7 +57,24 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 4. the AOT JAX/Pallas executable via PJRT (if built)
+    // 4. per-layer schedules through the batched layer-major path: keep
+    // the output layer accurate, approximate the cycle-dominant hidden
+    // layer (see `ecmac topo` for arbitrary topologies)
+    println!("\n-- per-layer schedule (batched layer-major path) --");
+    let sched = ConfigSchedule::per_layer(vec![Config::MAX_APPROX, Config::ACCURATE]);
+    let results = net.forward_batch(&ds.features[..n], &sched);
+    let correct = results
+        .iter()
+        .zip(&ds.labels[..n])
+        .filter(|(r, &y)| r.pred == y)
+        .count();
+    println!(
+        "{sched:<16} accuracy {:.2}%   power {:.3} mW (time-weighted)",
+        correct as f64 / n as f64 * 100.0,
+        pm.schedule_power_mw(net.topology(), &sched)
+    );
+
+    // 5. the AOT JAX/Pallas executable via PJRT (if built)
     println!("\n-- PJRT AOT path (JAX + Pallas lowered to HLO, loaded from rust) --");
     match ecmac::runtime::Engine::load(&dir) {
         Ok(engine) => {

@@ -14,7 +14,7 @@
 //!       cargo bench -- --filter datapath --quick
 //!       cargo bench -- --json bench.json
 
-use ecmac::amul::{metrics, mul7_approx, Config, MulTable};
+use ecmac::amul::{metrics, mul7_approx, Config, ConfigSchedule, MulTable};
 use ecmac::coordinator::governor::{AccuracyTable, Governor, Policy};
 use ecmac::coordinator::{Backend, Coordinator, CoordinatorConfig, NativeBackend};
 use ecmac::dataset::Dataset;
@@ -56,12 +56,12 @@ fn test_network() -> Network {
             let mut gen = |n: usize| -> Vec<u8> {
                 (0..n).map(|_| (rng.below(255)) as u8).collect()
             };
-            Network::new(QuantWeights {
-                w1: gen(62 * 30),
-                b1: gen(30),
-                w2: gen(30 * 10),
-                b2: gen(10),
-            })
+            Network::new(QuantWeights::two_layer(
+                gen(62 * 30),
+                gen(30),
+                gen(30 * 10),
+                gen(10),
+            ))
         }
     }
 }
@@ -163,11 +163,32 @@ fn bench_datapath(b: &mut Bencher) {
         i += 1;
         black_box(sim.run_image(x));
     });
-    // batch-64 accuracy-style sweep chunk
-    b.throughput(64).bench("datapath/forward_batch64", || {
+    // per-image vs batched layer-major over the same 64-image batch —
+    // the acceptance comparison for the topology-parametric refactor
+    b.throughput(64).bench("datapath/forward_per_image_b64", || {
         for x in &xs {
             black_box(net.forward(x, Config::MAX_APPROX));
         }
+    });
+    let uni = ConfigSchedule::uniform(Config::MAX_APPROX);
+    b.throughput(64).bench("datapath/forward_batch_b64", || {
+        black_box(net.forward_batch(&xs, &uni));
+    });
+    b.report_speedup(
+        "datapath/forward_per_image_b64",
+        "datapath/forward_batch_b64",
+    );
+    // a per-layer schedule costs the same as uniform on the batched path
+    let sched = ConfigSchedule::per_layer(vec![Config::MAX_APPROX, Config::ACCURATE]);
+    b.throughput(64)
+        .bench("datapath/forward_batch_b64_per_layer_sched", || {
+            black_box(net.forward_batch(&xs, &sched));
+        });
+    // a deeper non-seed topology through the same batched hot path
+    let deep_topo = ecmac::weights::Topology::parse("62,20,20,10").unwrap();
+    let deep = Network::new(QuantWeights::random(&deep_topo, 11));
+    b.throughput(64).bench("datapath/forward_batch_b64_deep_62_20_20_10", || {
+        black_box(deep.forward_batch(&xs, &uni));
     });
 }
 

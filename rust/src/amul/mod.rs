@@ -71,6 +71,126 @@ impl std::fmt::Display for Config {
     }
 }
 
+/// A per-layer assignment of multiplier configurations — the schedule
+/// the hardware's config register walks as the FSM advances through the
+/// layers of one image.
+///
+/// `Uniform` is the paper's global knob (one configuration for the whole
+/// network) and is the fast path everywhere: the functional forward pass
+/// hoists a single product table, the PJRT backend can ship the batch to
+/// the AOT executable, and the golden vectors stay bit-identical.
+/// `PerLayer` is the finer knob from the related work (per-layer
+/// approximation tuning): layer `l` runs `cfgs[l]`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ConfigSchedule {
+    /// One configuration for every layer.
+    Uniform(Config),
+    /// One configuration per layer (index = layer).
+    PerLayer(Vec<Config>),
+}
+
+impl ConfigSchedule {
+    /// Uniform schedule over `cfg`.
+    pub fn uniform(cfg: Config) -> ConfigSchedule {
+        ConfigSchedule::Uniform(cfg)
+    }
+
+    /// Per-layer schedule.  The declared layer count is preserved even
+    /// when every entry is equal, so [`ConfigSchedule::validate`] can
+    /// still catch a length mismatch; the fast paths see through
+    /// trivially-uniform schedules via [`ConfigSchedule::as_uniform`].
+    pub fn per_layer(cfgs: Vec<Config>) -> ConfigSchedule {
+        assert!(!cfgs.is_empty(), "schedule needs at least one layer");
+        ConfigSchedule::PerLayer(cfgs)
+    }
+
+    /// The configuration layer `l` runs.  Per-layer schedules clamp to
+    /// their last entry so a schedule built for a shallower prefix still
+    /// yields a defined configuration (validated separately).
+    #[inline]
+    pub fn layer(&self, l: usize) -> Config {
+        match self {
+            ConfigSchedule::Uniform(c) => *c,
+            ConfigSchedule::PerLayer(v) => v[l.min(v.len() - 1)],
+        }
+    }
+
+    /// `Some(cfg)` when every layer runs the same configuration —
+    /// including a `PerLayer` schedule whose entries are all equal, so
+    /// the uniform fast paths (single product table, PJRT executable,
+    /// per-config metrics) apply whenever they semantically can.
+    pub fn as_uniform(&self) -> Option<Config> {
+        match self {
+            ConfigSchedule::Uniform(c) => Some(*c),
+            ConfigSchedule::PerLayer(v) => {
+                let c = v[0];
+                v.iter().all(|&x| x == c).then_some(c)
+            }
+        }
+    }
+
+    /// Number of layers the schedule names explicitly (None = uniform).
+    pub fn n_layers(&self) -> Option<usize> {
+        match self {
+            ConfigSchedule::Uniform(_) => None,
+            ConfigSchedule::PerLayer(v) => Some(v.len()),
+        }
+    }
+
+    /// Check the schedule fits a network with `n_layers` weight layers.
+    pub fn validate(&self, n_layers: usize) -> anyhow::Result<()> {
+        if let ConfigSchedule::PerLayer(v) = self {
+            anyhow::ensure!(
+                v.len() == n_layers,
+                "schedule names {} layers but the network has {n_layers}",
+                v.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Parse `"9"` (uniform) or `"0,9,17"` (per-layer) — the CLI's
+    /// `--schedule` syntax.  A multi-entry spec stays `PerLayer` even
+    /// when all entries are equal, so `validate` still catches a layer
+    /// count that does not match the network.
+    pub fn parse(s: &str) -> anyhow::Result<ConfigSchedule> {
+        let cfgs: Vec<Config> = s
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<u32>()
+                    .ok()
+                    .and_then(Config::new)
+                    .ok_or_else(|| anyhow::anyhow!("bad config '{t}' (want 0..=32)"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(!cfgs.is_empty(), "empty schedule");
+        Ok(if cfgs.len() == 1 {
+            ConfigSchedule::Uniform(cfgs[0])
+        } else {
+            ConfigSchedule::PerLayer(cfgs)
+        })
+    }
+}
+
+impl std::fmt::Display for ConfigSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigSchedule::Uniform(c) => write!(f, "{c}"),
+            ConfigSchedule::PerLayer(v) => {
+                write!(f, "cfg[")?;
+                for (i, c) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{}", c.index())?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
 /// Per-column approximation level for a configuration — the decoder ROM.
 ///
 /// Frozen spec (must match `amul_spec.column_levels`):
@@ -124,7 +244,7 @@ pub fn mul7_approx(a: u32, b: u32, cfg: Config) -> u32 {
 }
 
 /// `mul7_approx` with the decoder output hoisted — callers that sweep an
-/// operand space decode the configuration once (EXPERIMENTS.md §Perf).
+/// operand space decode the configuration once (DESIGN.md §Perf).
 pub fn mul7_approx_with_levels(a: u32, b: u32, levels: &[u8; N_COLS]) -> u32 {
     debug_assert!(a <= MAG_MAX && b <= MAG_MAX);
     let mut total = 0u32;
@@ -157,39 +277,10 @@ pub fn mul7_approx_with_levels(a: u32, b: u32, levels: &[u8; N_COLS]) -> u32 {
 }
 
 /// Sign-magnitude helpers (MSB = sign, low 7 bits = magnitude).
-pub mod sm {
-    use super::MAG_MAX;
-
-    /// Encode a signed integer in [-127, 127].
-    pub fn encode(v: i32) -> u8 {
-        debug_assert!(v.unsigned_abs() <= MAG_MAX);
-        if v < 0 {
-            (0x80 | (-v)) as u8
-        } else {
-            v as u8
-        }
-    }
-
-    /// Decode an 8-bit sign-magnitude value.
-    pub fn decode(enc: u8) -> i32 {
-        let mag = (enc & 0x7F) as i32;
-        if enc & 0x80 != 0 {
-            -mag
-        } else {
-            mag
-        }
-    }
-
-    /// Sign bit.
-    pub fn sign(enc: u8) -> u32 {
-        (enc >> 7) as u32
-    }
-
-    /// Magnitude bits.
-    pub fn mag(enc: u8) -> u32 {
-        (enc & 0x7F) as u32
-    }
-}
+///
+/// Re-exported from [`crate::util::signmag`], the single home of the
+/// encoding logic shared across the stack.
+pub use crate::util::signmag as sm;
 
 /// Approximate signed multiply of 8-bit sign-magnitude encodings.
 ///
@@ -197,11 +288,7 @@ pub mod sm {
 /// zero magnitudes always produce +0.
 pub fn mul8_sm_approx(x: u8, w: u8, cfg: Config) -> i32 {
     let mag = mul7_approx(sm::mag(x), sm::mag(w), cfg) as i32;
-    if (sm::sign(x) ^ sm::sign(w)) != 0 && mag != 0 {
-        -mag
-    } else {
-        mag
-    }
+    sm::apply_sign(mag, x, w)
 }
 
 /// Precomputed 128x128 product table for one configuration.
@@ -235,11 +322,7 @@ impl MulTable {
     #[inline(always)]
     pub fn mul8_sm(&self, x: u8, w: u8) -> i32 {
         let mag = self.mul7(sm::mag(x), sm::mag(w)) as i32;
-        if ((x ^ w) & 0x80) != 0 && mag != 0 {
-            -mag
-        } else {
-            mag
-        }
+        sm::apply_sign(mag, x, w)
     }
 
     /// Row view for a fixed first operand: amortizes the operand decode
@@ -263,14 +346,12 @@ pub struct MulRow<'t> {
 impl MulRow<'_> {
     /// Signed multiply of the captured operand with `w`.
     ///
-    /// Branchless: `neg` is 0 or -1; `(mag ^ neg) - neg` negates exactly
-    /// when `neg == -1`, and a zero magnitude stays +0 either way — the
-    /// sign-XOR semantics without a data-dependent branch.
+    /// Branchless via [`sm::apply_sign`]: a zero magnitude stays +0 and
+    /// the sign-XOR semantics hold without a data-dependent branch.
     #[inline(always)]
     pub fn mul8_sm(&self, w: u8) -> i32 {
         let mag = self.row[(w & 0x7F) as usize] as i32;
-        let neg = -((((self.x_sign ^ w) >> 7) & 1) as i32);
-        (mag ^ neg) - neg
+        sm::apply_sign(mag, self.x_sign, w)
     }
 }
 
@@ -447,6 +528,52 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn schedule_uniform_semantics_and_lookup() {
+        let c9 = Config::new(9).unwrap();
+        let c17 = Config::new(17).unwrap();
+        // a trivially-uniform per-layer schedule keeps its layer count
+        // (validate still works) but exposes the uniform fast path
+        let triv = ConfigSchedule::per_layer(vec![c9, c9, c9]);
+        assert_eq!(triv.as_uniform(), Some(c9));
+        assert_eq!(triv.n_layers(), Some(3));
+        assert!(triv.validate(3).is_ok());
+        assert!(triv.validate(2).is_err(), "wrong layer count must not be hidden");
+        let s = ConfigSchedule::per_layer(vec![Config::ACCURATE, c9, c17]);
+        assert_eq!(s.as_uniform(), None);
+        assert_eq!(s.layer(0), Config::ACCURATE);
+        assert_eq!(s.layer(1), c9);
+        assert_eq!(s.layer(2), c17);
+        // clamps past the end
+        assert_eq!(s.layer(9), c17);
+        assert!(s.validate(3).is_ok());
+        assert!(s.validate(2).is_err());
+        // uniform validates against any depth
+        assert!(ConfigSchedule::uniform(c9).validate(7).is_ok());
+    }
+
+    #[test]
+    fn schedule_parse_roundtrip() {
+        assert_eq!(
+            ConfigSchedule::parse("9").unwrap(),
+            ConfigSchedule::uniform(Config::new(9).unwrap())
+        );
+        let s = ConfigSchedule::parse("0, 9,17").unwrap();
+        assert_eq!(s.n_layers(), Some(3));
+        assert!(ConfigSchedule::parse("33").is_err());
+        assert!(ConfigSchedule::parse("x").is_err());
+        assert_eq!(format!("{s}"), "cfg[0,9,17]");
+        assert_eq!(
+            format!("{}", ConfigSchedule::uniform(Config::ACCURATE)),
+            "cfg0(accurate)"
+        );
+        // an all-equal multi-entry spec keeps its length for validation
+        let same = ConfigSchedule::parse("5,5,5").unwrap();
+        assert_eq!(same.n_layers(), Some(3));
+        assert_eq!(same.as_uniform(), Some(Config::new(5).unwrap()));
+        assert!(same.validate(2).is_err());
     }
 
     #[test]

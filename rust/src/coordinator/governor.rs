@@ -1,11 +1,15 @@
 //! The dynamic power governor: decides which multiplier configuration
-//! the accelerator runs, from a policy plus live feedback.
+//! schedule the accelerator runs, from a policy plus live feedback.
 //!
 //! Policies mirror how a deployment would actually use the paper's
 //! knob:
 //!
-//! * [`Policy::Fixed`] — pin one configuration (the paper's static
-//!   evaluation mode).
+//! * [`Policy::Fixed`] — pin one uniform configuration (the paper's
+//!   static evaluation mode).
+//! * [`Policy::FixedSchedule`] — pin a per-layer schedule: the finer
+//!   knob from the related work (per-layer approximation tuning), e.g.
+//!   approximate the cycle-dominant hidden layer while the output layer
+//!   stays accurate.
 //! * [`Policy::PowerBudget`] — stay under a milliwatt budget while
 //!   maximizing accuracy: picks the *most accurate* configuration whose
 //!   modeled power fits.
@@ -15,8 +19,13 @@
 //!   total energy budget over a horizon, tracks cumulative consumption
 //!   and walks the accuracy/power frontier so the budget lasts the
 //!   horizon (the truly *dynamic* mode).
+//!
+//! Budget/floor policies pick points on the *uniform* frontier (their
+//! accuracy table is measured per configuration); `FixedSchedule` is how
+//! per-layer operating points are expressed today, and a per-layer
+//! frontier search is the natural next step (see ROADMAP.md).
 
-use crate::amul::Config;
+use crate::amul::{Config, ConfigSchedule};
 use crate::power::PowerModel;
 
 /// Accuracy table: measured classification accuracy per configuration
@@ -57,8 +66,10 @@ impl AccuracyTable {
 /// Governor policy.
 #[derive(Debug, Clone)]
 pub enum Policy {
-    /// Pin a configuration.
+    /// Pin a uniform configuration.
     Fixed(Config),
+    /// Pin a per-layer schedule.
+    FixedSchedule(ConfigSchedule),
     /// Most accurate configuration with modeled power <= budget (mW).
     PowerBudget { budget_mw: f64 },
     /// Most power-saving configuration with accuracy >= floor.
@@ -89,13 +100,43 @@ pub struct Governor {
     /// Cumulative energy drawn (mJ) and images served (feedback state).
     energy_mj: f64,
     images: u64,
-    /// Decision log: (images-at-decision, chosen config).
-    pub decisions: Vec<(u64, Config)>,
-    current: Config,
+    /// Cycles per classified image of the served topology (drives the
+    /// energy-budget -> allowed-power conversion).
+    cycles_per_image: f64,
+    /// Decision log: (images-at-decision, chosen schedule).
+    pub decisions: Vec<(u64, ConfigSchedule)>,
+    current: ConfigSchedule,
 }
 
 impl Governor {
+    /// Governor for the seed 62-30-10 network (220 cycles/image).  Use
+    /// [`Governor::for_topology`] when serving any other topology so the
+    /// energy-budget policy plans with the real image time.
     pub fn new(policy: Policy, power: &PowerModel, accuracy: &AccuracyTable) -> Governor {
+        Self::with_cycles_per_image(
+            policy,
+            power,
+            accuracy,
+            crate::datapath::controller::CYCLES_PER_IMAGE as f64,
+        )
+    }
+
+    /// Governor whose timing model matches the served topology.
+    pub fn for_topology(
+        policy: Policy,
+        power: &PowerModel,
+        accuracy: &AccuracyTable,
+        topo: &crate::weights::Topology,
+    ) -> Governor {
+        Self::with_cycles_per_image(policy, power, accuracy, topo.cycles_per_image() as f64)
+    }
+
+    fn with_cycles_per_image(
+        policy: Policy,
+        power: &PowerModel,
+        accuracy: &AccuracyTable,
+        cycles_per_image: f64,
+    ) -> Governor {
         let mut points: Vec<FrontierPoint> = Config::all()
             .map(|cfg| FrontierPoint {
                 cfg,
@@ -133,11 +174,12 @@ impl Governor {
             frontier,
             energy_mj: 0.0,
             images: 0,
+            cycles_per_image,
             decisions: Vec::new(),
-            current: Config::ACCURATE,
+            current: ConfigSchedule::Uniform(Config::ACCURATE),
         };
         g.current = g.decide();
-        g.decisions.push((0, g.current));
+        g.decisions.push((0, g.current.clone()));
         g
     }
 
@@ -146,47 +188,59 @@ impl Governor {
         &self.frontier
     }
 
-    pub fn current(&self) -> Config {
-        self.current
+    /// The schedule the next batch runs under.
+    pub fn current(&self) -> ConfigSchedule {
+        self.current.clone()
+    }
+
+    /// Convenience: the current configuration when the schedule is
+    /// uniform (always the case for the budget/floor policies).
+    pub fn current_uniform(&self) -> Option<Config> {
+        self.current.as_uniform()
     }
 
     /// Record a served batch: image count and consumed energy (mJ).
-    /// Returns the configuration for the *next* batch.
-    pub fn feedback(&mut self, images: u64, energy_mj: f64) -> Config {
+    /// Returns the schedule for the *next* batch.
+    pub fn feedback(&mut self, images: u64, energy_mj: f64) -> ConfigSchedule {
         self.images += images;
         self.energy_mj += energy_mj;
         let next = self.decide();
         if next != self.current {
-            self.current = next;
-            self.decisions.push((self.images, next));
+            self.current = next.clone();
+            self.decisions.push((self.images, next.clone()));
         }
         next
     }
 
     /// Pure decision from current state.
-    fn decide(&self) -> Config {
+    fn decide(&self) -> ConfigSchedule {
+        let uniform = ConfigSchedule::Uniform;
         match &self.policy {
-            Policy::Fixed(cfg) => *cfg,
-            Policy::PowerBudget { budget_mw } => self
-                .by_accuracy
-                .iter()
-                .find(|p| p.total_mw <= *budget_mw)
-                .map(|p| p.cfg)
-                // nothing fits: fall back to the cheapest point
-                .unwrap_or_else(|| {
-                    self.frontier
-                        .first()
-                        .map(|p| p.cfg)
-                        .unwrap_or(Config::MAX_APPROX)
-                }),
+            Policy::Fixed(cfg) => uniform(*cfg),
+            Policy::FixedSchedule(sched) => sched.clone(),
+            Policy::PowerBudget { budget_mw } => uniform(
+                self.by_accuracy
+                    .iter()
+                    .find(|p| p.total_mw <= *budget_mw)
+                    .map(|p| p.cfg)
+                    // nothing fits: fall back to the cheapest point
+                    .unwrap_or_else(|| {
+                        self.frontier
+                            .first()
+                            .map(|p| p.cfg)
+                            .unwrap_or(Config::MAX_APPROX)
+                    }),
+            ),
             Policy::AccuracyFloor { min_accuracy } => {
                 // cheapest frontier point meeting the floor; if none,
                 // the most accurate available
-                self.frontier
-                    .iter()
-                    .find(|p| p.accuracy >= *min_accuracy)
-                    .map(|p| p.cfg)
-                    .unwrap_or_else(|| self.by_accuracy[0].cfg)
+                uniform(
+                    self.frontier
+                        .iter()
+                        .find(|p| p.accuracy >= *min_accuracy)
+                        .map(|p| p.cfg)
+                        .unwrap_or_else(|| self.by_accuracy[0].cfg),
+                )
             }
             Policy::EnergyBudget {
                 budget_mj,
@@ -199,21 +253,22 @@ impl Governor {
                 let remaining_images = horizon_images.saturating_sub(self.images).max(1);
                 let remaining_mj = (budget_mj - self.energy_mj).max(0.0);
                 let per_image_mj = remaining_mj / remaining_images as f64;
-                // energy per image at cfg = P * t_image; t fixed, so
-                // allowed power = per_image_mj / t_image
-                let t_image_s = crate::datapath::controller::CYCLES_PER_IMAGE as f64
-                    / crate::power::anchors::FREQ_HZ;
+                // energy per image at cfg = P * t_image; t fixed per
+                // topology, so allowed power = per_image_mj / t_image
+                let t_image_s = self.cycles_per_image / crate::power::anchors::FREQ_HZ;
                 let allowed_mw = per_image_mj * 1e-3 / t_image_s * 1e3; // mJ->J, W->mW
-                self.by_accuracy
-                    .iter()
-                    .find(|p| p.total_mw <= allowed_mw)
-                    .map(|p| p.cfg)
-                    .unwrap_or_else(|| {
-                        self.frontier
-                            .first()
-                            .map(|p| p.cfg)
-                            .unwrap_or(Config::MAX_APPROX)
-                    })
+                uniform(
+                    self.by_accuracy
+                        .iter()
+                        .find(|p| p.total_mw <= allowed_mw)
+                        .map(|p| p.cfg)
+                        .unwrap_or_else(|| {
+                            self.frontier
+                                .first()
+                                .map(|p| p.cfg)
+                                .unwrap_or(Config::MAX_APPROX)
+                        }),
+                )
             }
         }
     }
@@ -255,21 +310,34 @@ mod tests {
     fn fixed_policy_pins() {
         let (pm, at) = setup();
         let g = Governor::new(Policy::Fixed(Config::new(7).unwrap()), &pm, &at);
-        assert_eq!(g.current(), Config::new(7).unwrap());
+        assert_eq!(g.current_uniform(), Some(Config::new(7).unwrap()));
+    }
+
+    #[test]
+    fn fixed_schedule_policy_pins_per_layer() {
+        let (pm, at) = setup();
+        let sched =
+            ConfigSchedule::per_layer(vec![Config::MAX_APPROX, Config::ACCURATE]);
+        let mut g = Governor::new(Policy::FixedSchedule(sched.clone()), &pm, &at);
+        assert_eq!(g.current(), sched);
+        assert_eq!(g.current_uniform(), None);
+        // feedback never moves a pinned schedule
+        assert_eq!(g.feedback(100, 1.0), sched);
+        assert_eq!(g.decisions.len(), 1);
     }
 
     #[test]
     fn generous_budget_selects_accurate() {
         let (pm, at) = setup();
         let g = Governor::new(Policy::PowerBudget { budget_mw: 10.0 }, &pm, &at);
-        assert_eq!(g.current(), Config::ACCURATE);
+        assert_eq!(g.current_uniform(), Some(Config::ACCURATE));
     }
 
     #[test]
     fn tight_budget_selects_low_power() {
         let (pm, at) = setup();
         let g = Governor::new(Policy::PowerBudget { budget_mw: 4.9 }, &pm, &at);
-        let chosen = g.current();
+        let chosen = g.current_uniform().expect("budget policies are uniform");
         assert!(!chosen.is_accurate());
         assert!(pm.breakdown(chosen).total_mw <= 4.9);
         // and it is the most accurate of the fitting ones
@@ -292,7 +360,7 @@ mod tests {
                     .unwrap()
             })
             .unwrap();
-        assert_eq!(g.current(), cheapest);
+        assert_eq!(g.current_uniform(), Some(cheapest));
     }
 
     #[test]
@@ -300,7 +368,7 @@ mod tests {
         let (pm, at) = setup();
         let floor = at.get(Config::ACCURATE) - 0.008;
         let g = Governor::new(Policy::AccuracyFloor { min_accuracy: floor }, &pm, &at);
-        let chosen = g.current();
+        let chosen = g.current_uniform().unwrap();
         assert!(at.get(chosen) >= floor);
         assert!(pm.breakdown(chosen).total_mw < pm.breakdown(Config::ACCURATE).total_mw);
     }
@@ -312,7 +380,7 @@ mod tests {
         let mut last_acc = -1.0;
         for budget in [4.8, 4.9, 5.0, 5.1, 5.2, 5.3, 5.4, 5.5, 5.6] {
             let g = Governor::new(Policy::PowerBudget { budget_mw: budget }, &pm, &at);
-            let acc = at.get(g.current());
+            let acc = at.get(g.current_uniform().unwrap());
             assert!(
                 acc >= last_acc - 1e-12,
                 "budget {budget}: accuracy {acc} < previous {last_acc}"
@@ -339,10 +407,10 @@ mod tests {
             &pm,
             &at,
         );
-        let first = g.current();
+        let first = g.current_uniform().unwrap();
         assert!(pm.breakdown(first).total_mw <= worst_mw * 1.001);
         // now pretend we overspent massively: governor must stay cheap
-        let next = g.feedback(1000, budget_mj * 0.5);
+        let next = g.feedback(1000, budget_mj * 0.5).as_uniform().unwrap();
         assert!(pm.breakdown(next).total_mw <= pm.breakdown(first).total_mw * 1.001);
     }
 
@@ -363,7 +431,40 @@ mod tests {
             &pm,
             &at,
         );
-        assert_eq!(g.current(), Config::ACCURATE);
+        assert_eq!(g.current_uniform(), Some(Config::ACCURATE));
+    }
+
+    #[test]
+    fn energy_budget_uses_the_served_topologys_image_time() {
+        let (pm, at) = setup();
+        let t_seed_s =
+            crate::datapath::controller::CYCLES_PER_IMAGE as f64 / crate::power::anchors::FREQ_HZ;
+        let horizon = 10_000u64;
+        // budget: 1.2x what accurate mode needs at *seed* image time —
+        // generous on the seed, but not at 293-cycle images (5.55 mW
+        // * 1.2 * 220/293 = 5.00 mW < 5.55, while the cheapest config
+        // at 4.81 mW still fits)
+        let budget_mj =
+            1.2 * pm.breakdown(Config::ACCURATE).total_mw * 1e-3 * t_seed_s * horizon as f64 * 1e3;
+        let policy = Policy::EnergyBudget {
+            budget_mj,
+            horizon_images: horizon,
+        };
+        let g_seed = Governor::new(policy.clone(), &pm, &at);
+        assert_eq!(g_seed.current_uniform(), Some(Config::ACCURATE));
+        // a deeper topology (62-40-10: 4 passes * 63 + 1 * 41 = 293
+        // cycles/image) makes each image slower, so the same budget can
+        // no longer afford accurate mode
+        let topo = crate::weights::Topology::parse("62,40,10").unwrap();
+        assert_eq!(topo.cycles_per_image(), 293);
+        let g_deep = Governor::for_topology(policy, &pm, &at, &topo);
+        let chosen = g_deep.current_uniform().unwrap();
+        assert!(!chosen.is_accurate(), "293-cycle images must force approximation");
+        // chosen power must fit the per-image budget at 293-cycle images
+        // (mJ per image / seconds per image = mW)
+        let allowed_mw =
+            budget_mj / horizon as f64 / (293.0 / crate::power::anchors::FREQ_HZ);
+        assert!(pm.breakdown(chosen).total_mw <= allowed_mw + 1e-9);
     }
 
     #[test]

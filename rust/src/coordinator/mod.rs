@@ -6,14 +6,16 @@
 //! for power.  This module is the system around that knob:
 //!
 //! * [`governor`] — the power governor: policies that map a power
-//!   budget, an accuracy floor, or a feedback signal to a configuration,
-//!   re-evaluated as conditions change (the DVFS-style control loop).
+//!   budget, an accuracy floor, or a feedback signal to a configuration
+//!   *schedule* (uniform, or per-layer since the topology-parametric
+//!   refactor), re-evaluated as conditions change (the DVFS-style
+//!   control loop).
 //! * [`server`] — the request router/batcher: classification requests
 //!   arrive on a bounded queue (backpressure), a batcher groups them
 //!   under a latency deadline, worker threads execute batches on a
 //!   pluggable [`server::Backend`] (PJRT AOT executable, native
 //!   functional model, or the cycle-accurate simulator), and the
-//!   governor's current configuration is applied per batch.
+//!   governor's current schedule is applied per batch.
 //! * [`request`] — request/response types and the metrics the governor
 //!   feeds on (latency histograms, per-config energy accounting).
 

@@ -1,6 +1,6 @@
 //! Request/response types and serving metrics.
 
-use crate::amul::Config;
+use crate::amul::ConfigSchedule;
 use crate::dataset::N_FEATURES;
 use crate::util::stats::LatencyHistogram;
 use crate::util::threadpool::Channel;
@@ -20,9 +20,10 @@ pub struct ClassifyRequest {
 pub struct ClassifyResponse {
     pub id: u64,
     pub pred: u8,
-    pub logits: [i32; crate::weights::N_OUTPUTS],
-    /// Configuration the request was served under.
-    pub cfg: Config,
+    /// Raw output logits (`topology.outputs()` long).
+    pub logits: Vec<i32>,
+    /// Schedule the request was served under.
+    pub sched: ConfigSchedule,
     /// Queueing + batching + execution latency.
     pub latency_us: u64,
     /// Batch size this request was grouped into.
@@ -37,8 +38,10 @@ pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
     pub rejected: u64,
-    /// Requests served per configuration.
+    /// Requests served per *uniform* configuration.
     pub per_cfg: Vec<u64>,
+    /// Requests served under non-uniform (per-layer) schedules.
+    pub mixed: u64,
     /// Modeled accelerator energy consumed, mJ.
     pub energy_mj: f64,
     pub batch_size_sum: u64,
@@ -53,6 +56,7 @@ impl Default for Metrics {
             batches: 0,
             rejected: 0,
             per_cfg: vec![0; crate::amul::N_CONFIGS],
+            mixed: 0,
             energy_mj: 0.0,
             batch_size_sum: 0,
         }
@@ -70,6 +74,7 @@ pub struct MetricsSnapshot {
     pub p99_latency_us: u64,
     pub mean_batch_size: f64,
     pub per_cfg: Vec<u64>,
+    pub mixed: u64,
     pub energy_mj: f64,
 }
 
@@ -88,6 +93,7 @@ impl Metrics {
                 self.batch_size_sum as f64 / self.batches as f64
             },
             per_cfg: self.per_cfg.clone(),
+            mixed: self.mixed,
             energy_mj: self.energy_mj,
         }
     }
@@ -107,6 +113,7 @@ mod tests {
         m.latency.record_us(300);
         let s = m.snapshot();
         assert_eq!(s.requests, 10);
+        assert_eq!(s.mixed, 0);
         assert!((s.mean_batch_size - 2.5).abs() < 1e-9);
         assert!((s.mean_latency_us - 200.0).abs() < 1e-9);
     }

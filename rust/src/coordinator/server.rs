@@ -7,39 +7,46 @@
 //!  submit() ──> bounded queue ──> batcher thread ──> batch queue ──> workers
 //!                (backpressure)    (deadline-based     (channel)      │
 //!                                   grouping)                         ▼
-//!                                                   governor ──> backend.execute(batch, cfg)
+//!                                                   governor ──> backend.execute(batch, sched)
 //!                                                      ▲              │
 //!                                                      └── energy ────┘ (feedback)
 //! ```
 //!
-//! The governor picks the configuration per batch; the energy model
-//! charges each batch and feeds consumption back, closing the paper's
-//! dynamic-power-control loop.
+//! The governor picks the configuration *schedule* per batch (uniform or
+//! per-layer); the energy model charges each batch layer-by-layer and
+//! feeds consumption back, closing the paper's dynamic-power-control
+//! loop.
 
 use super::governor::Governor;
 use super::request::{ClassifyRequest, ClassifyResponse, Metrics, MetricsSnapshot};
-use crate::amul::Config;
+use crate::amul::{Config, ConfigSchedule};
 use crate::dataset::N_FEATURES;
 use crate::power::PowerModel;
 use crate::util::threadpool::Channel;
-use crate::weights::N_OUTPUTS;
+use crate::weights::Topology;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Pluggable inference backend.
 pub trait Backend: Send + Sync {
-    /// Execute a batch; returns (logits, pred) per input.
+    /// Execute a batch under a schedule; returns (logits, pred) per
+    /// input.
     fn execute(
         &self,
         xs: &[[u8; N_FEATURES]],
-        cfg: Config,
-    ) -> anyhow::Result<Vec<([i32; N_OUTPUTS], u8)>>;
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>>;
 
     fn name(&self) -> &'static str;
+
+    /// Topology of the model this backend serves (drives the per-layer
+    /// energy accounting).
+    fn topology(&self) -> &Topology;
 }
 
-/// Functional bit-exact backend (table-driven rust model).
+/// Functional bit-exact backend (table-driven rust model, batched
+/// layer-major hot path).
 pub struct NativeBackend {
     pub network: crate::datapath::Network,
 }
@@ -48,19 +55,22 @@ impl Backend for NativeBackend {
     fn execute(
         &self,
         xs: &[[u8; N_FEATURES]],
-        cfg: Config,
-    ) -> anyhow::Result<Vec<([i32; N_OUTPUTS], u8)>> {
-        Ok(xs
-            .iter()
-            .map(|x| {
-                let r = self.network.forward(x, cfg);
-                (r.logits, r.pred)
-            })
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        Ok(self
+            .network
+            .forward_batch(xs, sched)
+            .into_iter()
+            .map(|r| (r.logits, r.pred))
             .collect())
     }
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn topology(&self) -> &Topology {
+        self.network.topology()
     }
 }
 
@@ -71,21 +81,30 @@ impl Backend for NativeBackend {
 /// ships batches over a channel and waits for results.  PJRT executes
 /// the batch on its own thread pool, so this single entry point is not
 /// a throughput bottleneck.
+///
+/// The AOT executables bake in the seed topology and take one uniform
+/// `cfg` scalar, so per-layer schedules fall back to the bit-exact
+/// native model (same arithmetic, no HLO round-trip).
 pub struct PjrtBackend {
     tx: Channel<PjrtJob>,
     _actor: std::thread::JoinHandle<()>,
+    weights: crate::weights::QuantWeights,
+    /// Native twin for non-uniform schedules, built on first use (the
+    /// 33 product tables are dead weight for uniform-only serving).
+    fallback: std::sync::OnceLock<crate::datapath::Network>,
 }
 
 struct PjrtJob {
     xs: Vec<[u8; N_FEATURES]>,
     cfg: Config,
-    reply: Channel<anyhow::Result<Vec<([i32; N_OUTPUTS], u8)>>>,
+    reply: Channel<anyhow::Result<Vec<(Vec<i32>, u8)>>>,
 }
 
 impl PjrtBackend {
     /// Spawn the actor thread; engine construction errors are reported
     /// through the returned channel before this function returns.
     pub fn spawn(artifacts: std::path::PathBuf) -> anyhow::Result<PjrtBackend> {
+        let weights = crate::weights::QuantWeights::load_artifacts(&artifacts)?;
         let tx: Channel<PjrtJob> = Channel::new(0);
         let rx = tx.clone();
         let ready: Channel<anyhow::Result<()>> = Channel::new(1);
@@ -112,10 +131,20 @@ impl PjrtBackend {
             })
             .expect("spawn pjrt actor");
         match ready.recv() {
-            Some(Ok(())) => Ok(PjrtBackend { tx, _actor: actor }),
+            Some(Ok(())) => Ok(PjrtBackend {
+                tx,
+                _actor: actor,
+                weights,
+                fallback: std::sync::OnceLock::new(),
+            }),
             Some(Err(e)) => Err(e),
             None => anyhow::bail!("pjrt actor died during startup"),
         }
+    }
+
+    fn fallback_net(&self) -> &crate::datapath::Network {
+        self.fallback
+            .get_or_init(|| crate::datapath::Network::new(self.weights.clone()))
     }
 }
 
@@ -123,8 +152,18 @@ impl Backend for PjrtBackend {
     fn execute(
         &self,
         xs: &[[u8; N_FEATURES]],
-        cfg: Config,
-    ) -> anyhow::Result<Vec<([i32; N_OUTPUTS], u8)>> {
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        let Some(cfg) = sched.as_uniform() else {
+            // per-layer schedule: the AOT executable only takes a
+            // uniform cfg scalar — serve bit-exactly from the native twin
+            return Ok(self
+                .fallback_net()
+                .forward_batch(xs, sched)
+                .into_iter()
+                .map(|r| (r.logits, r.pred))
+                .collect());
+        };
         let reply = Channel::new(1);
         self.tx
             .send(PjrtJob {
@@ -140,6 +179,10 @@ impl Backend for PjrtBackend {
 
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+
+    fn topology(&self) -> &Topology {
+        &self.weights.topology
     }
 }
 
@@ -183,12 +226,23 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Start the batcher + worker threads.
+    ///
+    /// Panics (fail-loud at startup, instead of a dead worker thread
+    /// later) when the backend's input width does not match the
+    /// fixed-size request features.
     pub fn start(
         cfg: CoordinatorConfig,
         backend: Arc<dyn Backend>,
         governor: Governor,
         power: PowerModel,
     ) -> Coordinator {
+        assert_eq!(
+            backend.topology().inputs(),
+            N_FEATURES,
+            "backend '{}' serves a {}-input topology but requests carry {N_FEATURES} features",
+            backend.name(),
+            backend.topology().inputs(),
+        );
         let queue: Channel<ClassifyRequest> = Channel::new(cfg.queue_capacity);
         let batch_queue: Channel<Batch> = Channel::new(cfg.workers * 2);
         let metrics = Arc::new(Mutex::new(Metrics::default()));
@@ -269,21 +323,25 @@ impl Coordinator {
         governor: &Mutex<Governor>,
         power: &PowerModel,
     ) {
-        let cfg = governor.lock().unwrap().current();
+        let sched = governor.lock().unwrap().current();
         let xs: Vec<[u8; N_FEATURES]> = batch.requests.iter().map(|r| r.features).collect();
         let t0 = Instant::now();
-        let results = backend.execute(&xs, cfg);
+        let results = backend.execute(&xs, &sched);
         let exec_us = t0.elapsed().as_micros() as u64;
         let n = batch.requests.len();
-        // modeled accelerator energy for this batch
-        let energy_mj = power.energy_per_image_nj(cfg) * n as f64 * 1e-6;
+        // modeled accelerator energy for this batch, layer by layer
+        let energy_mj =
+            power.energy_per_image_nj_sched(backend.topology(), &sched) * n as f64 * 1e-6;
         governor.lock().unwrap().feedback(n as u64, energy_mj);
         {
             let mut m = metrics.lock().unwrap();
             m.batches += 1;
             m.batch_size_sum += n as u64;
             m.batch_latency.record_us(exec_us.max(1));
-            m.per_cfg[cfg.index()] += n as u64;
+            match sched.as_uniform() {
+                Some(cfg) => m.per_cfg[cfg.index()] += n as u64,
+                None => m.mixed += n as u64,
+            }
             m.energy_mj += energy_mj;
             m.requests += n as u64;
         }
@@ -301,7 +359,7 @@ impl Coordinator {
                         id: req.id,
                         pred,
                         logits,
-                        cfg,
+                        sched: sched.clone(),
                         latency_us,
                         batch_size: n,
                     });
@@ -354,13 +412,13 @@ impl Coordinator {
         self.metrics.lock().unwrap().snapshot()
     }
 
-    /// Current governor configuration.
-    pub fn current_config(&self) -> Config {
+    /// Current governor schedule.
+    pub fn current_schedule(&self) -> ConfigSchedule {
         self.governor.lock().unwrap().current()
     }
 
     /// Governor decision log.
-    pub fn decisions(&self) -> Vec<(u64, Config)> {
+    pub fn decisions(&self) -> Vec<(u64, ConfigSchedule)> {
         self.governor.lock().unwrap().decisions.clone()
     }
 
@@ -399,12 +457,12 @@ mod tests {
                 .collect()
         };
         Arc::new(NativeBackend {
-            network: crate::datapath::Network::new(QuantWeights {
-                w1: gen(62 * 30),
-                b1: gen(30),
-                w2: gen(30 * 10),
-                b2: gen(10),
-            }),
+            network: crate::datapath::Network::new(QuantWeights::two_layer(
+                gen(62 * 30),
+                gen(30),
+                gen(30 * 10),
+                gen(10),
+            )),
         })
     }
 
@@ -440,13 +498,60 @@ mod tests {
             let want = backend.network.forward(&x, Config::new(5).unwrap());
             assert_eq!(resp.pred, want.pred);
             assert_eq!(resp.logits, want.logits);
-            assert_eq!(resp.cfg, Config::new(5).unwrap());
+            assert_eq!(resp.sched, ConfigSchedule::uniform(Config::new(5).unwrap()));
             assert!(resp.latency_us > 0);
         }
         let m = coord.shutdown();
         assert_eq!(m.requests, 40);
         assert!(m.batches >= 1);
         assert!(m.energy_mj > 0.0);
+    }
+
+    #[test]
+    fn serves_per_layer_schedules_natively() {
+        let sched = ConfigSchedule::per_layer(vec![Config::MAX_APPROX, Config::ACCURATE]);
+        let (coord, backend) = start(
+            Policy::FixedSchedule(sched.clone()),
+            CoordinatorConfig::default(),
+        );
+        let mut rng = Pcg32::new(13);
+        for _ in 0..20 {
+            let mut x = [0u8; N_FEATURES];
+            for v in x.iter_mut() {
+                *v = rng.below(128) as u8;
+            }
+            let resp = coord.classify(x).expect("response");
+            let want = backend.network.forward_sched(&x, &sched);
+            assert_eq!(resp.pred, want.pred);
+            assert_eq!(resp.logits, want.logits);
+            assert_eq!(resp.sched, sched);
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.requests, 20);
+        // non-uniform schedules land in the mixed counter
+        assert_eq!(m.mixed, 20);
+        assert_eq!(m.per_cfg.iter().sum::<u64>(), 0);
+        assert!(m.energy_mj > 0.0);
+    }
+
+    #[test]
+    fn start_rejects_backend_with_wrong_input_width() {
+        // a 4-input network can never serve the fixed 62-feature
+        // requests; this must fail at startup, not hang a worker
+        let topo = crate::weights::Topology::parse("4,4,3").unwrap();
+        let backend = Arc::new(NativeBackend {
+            network: crate::datapath::Network::new(QuantWeights::random(&topo, 1)),
+        });
+        let (gov, pm) = test_governor(Policy::Fixed(Config::ACCURATE));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            Coordinator::start(
+                CoordinatorConfig::default(),
+                backend as Arc<dyn Backend>,
+                gov,
+                pm,
+            )
+        }));
+        assert!(r.is_err(), "mismatched input width must fail at startup");
     }
 
     #[test]
@@ -547,5 +652,6 @@ mod tests {
         let m = coord.shutdown();
         assert_eq!(m.per_cfg[12], 10);
         assert_eq!(m.per_cfg.iter().sum::<u64>(), 10);
+        assert_eq!(m.mixed, 0);
     }
 }

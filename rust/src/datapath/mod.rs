@@ -1,24 +1,32 @@
-//! Cycle-accurate simulator of the paper's MLP accelerator datapath.
+//! Cycle-accurate simulator of the paper's MLP accelerator datapath,
+//! generalized over arbitrary [`Topology`]s and per-layer
+//! [`ConfigSchedule`]s.
 //!
-//! Two execution paths over the same arithmetic:
+//! Three execution paths over the same arithmetic:
 //!
-//! * [`Network::forward`] — the fast functional path (table-driven MACs,
-//!   no cycle bookkeeping).  Used by the coordinator's software fallback
+//! * [`Network::forward`] / [`Network::forward_sched`] — the fast
+//!   functional path (table-driven MACs, no cycle bookkeeping), a loop
+//!   over weight layers.  Used by the coordinator's software fallback
 //!   and the accuracy sweeps.
+//! * [`Network::forward_batch`] — the batched layer-major variant: the
+//!   whole batch advances one layer at a time, so each weight row and
+//!   the layer's product table stay hot across the batch and the
+//!   accumulator buffers are allocated once per layer instead of once
+//!   per image.  Bit-identical to `forward`.
 //! * [`DatapathSim`] — the cycle-accurate path: a [`Controller`] walks
-//!   the paper's 5-state FSM, 10 physical [`Neuron`]s execute one MAC
-//!   per cycle each, hidden activations land in the 10x8-bit register
-//!   banks, and the max circuit produces the label.  Produces per-cycle
-//!   activity statistics that the power model consumes, and is asserted
-//!   bit-identical to `Network::forward` (and, transitively, to the JAX
-//!   oracle via the golden vectors).
+//!   the generalized FSM (ceil(width/10) passes per layer over the 10
+//!   physical [`Neuron`]s), activations land in the per-layer 8-bit
+//!   register banks, and the max circuit produces the label.  Produces
+//!   per-cycle activity statistics that the power model consumes, and
+//!   is asserted bit-identical to the functional paths (and,
+//!   transitively, to the JAX oracle via the golden vectors on the seed
+//!   62-30-10 network).
 
 pub mod controller;
 pub mod neuron;
 
-use crate::amul::{Config, MulTables};
-use crate::dataset::N_FEATURES;
-use crate::weights::{QuantWeights, N_HIDDEN, N_OUTPUTS, N_PHYSICAL};
+use crate::amul::{sm, Config, ConfigSchedule, MulTable, MulTables};
+use crate::weights::{Activation, QuantWeights, Topology, N_PHYSICAL};
 use controller::{Controller, State};
 use neuron::{argmax, Neuron};
 
@@ -26,8 +34,12 @@ use neuron::{argmax, Neuron};
 #[derive(Debug, Clone, PartialEq)]
 pub struct ImageResult {
     pub pred: u8,
-    pub logits: [i32; N_OUTPUTS],
-    pub hidden: [u8; N_HIDDEN],
+    /// Raw output-layer accumulators, `topology.outputs()` long.
+    pub logits: Vec<i32>,
+    /// Activations of every hidden layer, concatenated in layer order
+    /// (`topology.hidden_units()` long; the seed network's 30 hidden
+    /// activations).
+    pub hidden: Vec<u8>,
 }
 
 /// Aggregate switching-activity statistics from a cycle-accurate run.
@@ -37,7 +49,7 @@ pub struct ActivityStats {
     pub mac_ops: u64,
     /// Accumulator register bit toggles (all neurons).
     pub acc_toggles: u64,
-    /// Hidden-register write bit toggles.
+    /// Activation-register write bit toggles.
     pub reg_toggles: u64,
     /// Input/weight operand bus bit toggles (memory + mux activity).
     pub bus_toggles: u64,
@@ -59,39 +71,49 @@ impl Network {
         }
     }
 
-    /// Functional forward pass (bit-exact, no cycle model).
+    /// The network's topology.
+    pub fn topology(&self) -> &Topology {
+        &self.weights.topology
+    }
+
+    /// Functional forward pass with a uniform configuration (bit-exact,
+    /// no cycle model).
+    pub fn forward(&self, x: &[u8], cfg: Config) -> ImageResult {
+        self.forward_sched(x, &ConfigSchedule::Uniform(cfg))
+    }
+
+    /// Functional forward pass under a per-layer schedule.
     ///
-    /// Hot-path layout (see EXPERIMENTS.md §Perf): the input index is the
-    /// outer loop so weight-matrix reads are contiguous (row-major
-    /// `w[i*N + j]`), and the left operand's table row is hoisted out of
-    /// the inner loop (`MulTable::row`), amortizing the sign/magnitude
-    /// decode over the whole weight row.
-    pub fn forward(&self, x: &[u8; N_FEATURES], cfg: Config) -> ImageResult {
-        let t = self.tables.get(cfg);
-        let w = &self.weights;
-        let mut acc1 = [0i32; N_HIDDEN];
-        for (i, &xi) in x.iter().enumerate() {
-            let row = t.row(xi);
-            let wrow = &w.w1[i * N_HIDDEN..(i + 1) * N_HIDDEN];
-            for (a, &wv) in acc1.iter_mut().zip(wrow) {
-                *a += row.mul8_sm(wv);
+    /// Hot-path layout (see DESIGN.md §Perf): within each layer the
+    /// input index is the outer loop so weight-matrix reads are
+    /// contiguous (row-major `w[i * n_out + j]`), and the left operand's
+    /// table row is hoisted out of the inner loop (`MulTable::row`),
+    /// amortizing the sign/magnitude decode over the whole weight row.
+    pub fn forward_sched(&self, x: &[u8], sched: &ConfigSchedule) -> ImageResult {
+        let topo = &self.weights.topology;
+        assert_eq!(x.len(), topo.inputs(), "input width mismatch for topology {topo}");
+        let mut hidden: Vec<u8> = Vec::with_capacity(topo.hidden_units());
+        let mut cur: Vec<u8> = x.to_vec();
+        let mut logits: Vec<i32> = Vec::new();
+        for (l, lw) in self.weights.layers.iter().enumerate() {
+            let t = self.tables.get(sched.layer(l));
+            let mut acc = vec![0i32; lw.n_out];
+            for (i, &xi) in cur.iter().enumerate() {
+                let row = t.row(xi);
+                for (a, &wv) in acc.iter_mut().zip(lw.w_row(i)) {
+                    *a += row.mul8_sm(wv);
+                }
             }
-        }
-        let mut hidden = [0u8; N_HIDDEN];
-        for (j, h) in hidden.iter_mut().enumerate() {
-            let acc = acc1[j] + (crate::amul::sm::decode(w.b1[j]) << 7);
-            *h = neuron::saturate_activation(acc);
-        }
-        let mut logits = [0i32; N_OUTPUTS];
-        for (j, &hj) in hidden.iter().enumerate() {
-            let row = t.row(hj);
-            let wrow = &w.w2[j * N_OUTPUTS..(j + 1) * N_OUTPUTS];
-            for (l, &wv) in logits.iter_mut().zip(wrow) {
-                *l += row.mul8_sm(wv);
+            for (a, &bv) in acc.iter_mut().zip(&lw.b) {
+                *a += sm::decode(bv) << 7;
             }
-        }
-        for (o, l) in logits.iter_mut().enumerate() {
-            *l += crate::amul::sm::decode(w.b2[o]) << 7;
+            match topo.activation(l) {
+                Activation::Identity => logits = acc,
+                Activation::ReluSat => {
+                    cur = acc.iter().map(|&a| neuron::saturate_activation(a)).collect();
+                    hidden.extend_from_slice(&cur);
+                }
+            }
         }
         ImageResult {
             pred: argmax(&logits) as u8,
@@ -100,42 +122,114 @@ impl Network {
         }
     }
 
+    /// Batched layer-major forward pass: every image in `xs` advances
+    /// one layer at a time.  The weight row of each input index is
+    /// loaded once per layer and reused across the whole batch, the
+    /// layer's product table stays hot, and accumulators live in one
+    /// flat buffer per layer.  Bit-identical to [`Network::forward_sched`]
+    /// image by image.
+    pub fn forward_batch<X: AsRef<[u8]>>(
+        &self,
+        xs: &[X],
+        sched: &ConfigSchedule,
+    ) -> Vec<ImageResult> {
+        let topo = &self.weights.topology;
+        let b = xs.len();
+        if b == 0 {
+            return Vec::new();
+        }
+        let n_in0 = topo.inputs();
+        let mut cur: Vec<u8> = Vec::with_capacity(b * n_in0);
+        for x in xs {
+            let x = x.as_ref();
+            assert_eq!(x.len(), n_in0, "input width mismatch for topology {topo}");
+            cur.extend_from_slice(x);
+        }
+        let mut hidden: Vec<Vec<u8>> =
+            (0..b).map(|_| Vec::with_capacity(topo.hidden_units())).collect();
+        let mut logits: Vec<Vec<i32>> = Vec::new();
+        for (l, lw) in self.weights.layers.iter().enumerate() {
+            let t = self.tables.get(sched.layer(l));
+            let (n_in, n_out) = (lw.n_in, lw.n_out);
+            let mut acc = vec![0i32; b * n_out];
+            for i in 0..n_in {
+                let wrow = lw.w_row(i);
+                for img in 0..b {
+                    let row = t.row(cur[img * n_in + i]);
+                    let dst = &mut acc[img * n_out..(img + 1) * n_out];
+                    for (a, &wv) in dst.iter_mut().zip(wrow) {
+                        *a += row.mul8_sm(wv);
+                    }
+                }
+            }
+            match topo.activation(l) {
+                Activation::Identity => {
+                    logits = (0..b)
+                        .map(|img| {
+                            let mut v = acc[img * n_out..(img + 1) * n_out].to_vec();
+                            for (a, &bv) in v.iter_mut().zip(&lw.b) {
+                                *a += sm::decode(bv) << 7;
+                            }
+                            v
+                        })
+                        .collect();
+                }
+                Activation::ReluSat => {
+                    let mut next = vec![0u8; b * n_out];
+                    for img in 0..b {
+                        for j in 0..n_out {
+                            let a = acc[img * n_out + j] + (sm::decode(lw.b[j]) << 7);
+                            next[img * n_out + j] = neuron::saturate_activation(a);
+                        }
+                        hidden[img].extend_from_slice(&next[img * n_out..(img + 1) * n_out]);
+                    }
+                    cur = next;
+                }
+            }
+        }
+        hidden
+            .into_iter()
+            .zip(logits)
+            .map(|(h, lg)| ImageResult {
+                pred: argmax(&lg) as u8,
+                logits: lg,
+                hidden: h,
+            })
+            .collect()
+    }
+
     /// Heterogeneous forward pass: each *physical neuron* `p` runs its
-    /// own multiplier configuration `cfgs[p]` (hidden neuron `j` maps to
-    /// physical neuron `j % 10`, matching the datapath's multiplexing).
+    /// own multiplier configuration `cfgs[p]` (output unit `j` of every
+    /// layer maps to physical neuron `j % 10`, matching the datapath's
+    /// pass multiplexing).
     ///
     /// This is the per-neuron knob the paper hints at ("testing each
-    /// configuration across every set of 10 neurons"): e.g. keep the
-    /// output layer accurate while approximating the hidden passes.
-    pub fn forward_hetero(
-        &self,
-        x: &[u8; N_FEATURES],
-        cfgs: &[Config; N_PHYSICAL],
-    ) -> ImageResult {
-        let w = &self.weights;
-        let mut acc1 = [0i32; N_HIDDEN];
-        for (i, &xi) in x.iter().enumerate() {
-            let wrow = &w.w1[i * N_HIDDEN..(i + 1) * N_HIDDEN];
-            for (j, (a, &wv)) in acc1.iter_mut().zip(wrow).enumerate() {
-                let t = self.tables.get(cfgs[j % N_PHYSICAL]);
-                *a += t.mul8_sm(xi, wv);
+    /// configuration across every set of 10 neurons"): e.g. keep some
+    /// neurons accurate while the rest save power.
+    pub fn forward_hetero(&self, x: &[u8], cfgs: &[Config; N_PHYSICAL]) -> ImageResult {
+        let topo = &self.weights.topology;
+        assert_eq!(x.len(), topo.inputs(), "input width mismatch for topology {topo}");
+        let mut hidden: Vec<u8> = Vec::with_capacity(topo.hidden_units());
+        let mut cur: Vec<u8> = x.to_vec();
+        let mut logits: Vec<i32> = Vec::new();
+        for (l, lw) in self.weights.layers.iter().enumerate() {
+            let mut acc = vec![0i32; lw.n_out];
+            for (i, &xi) in cur.iter().enumerate() {
+                for (j, (a, &wv)) in acc.iter_mut().zip(lw.w_row(i)).enumerate() {
+                    let t = self.tables.get(cfgs[j % N_PHYSICAL]);
+                    *a += t.mul8_sm(xi, wv);
+                }
             }
-        }
-        let mut hidden = [0u8; N_HIDDEN];
-        for (j, h) in hidden.iter_mut().enumerate() {
-            let acc = acc1[j] + (crate::amul::sm::decode(w.b1[j]) << 7);
-            *h = neuron::saturate_activation(acc);
-        }
-        let mut logits = [0i32; N_OUTPUTS];
-        for (j, &hj) in hidden.iter().enumerate() {
-            let wrow = &w.w2[j * N_OUTPUTS..(j + 1) * N_OUTPUTS];
-            for (o, (l, &wv)) in logits.iter_mut().zip(wrow).enumerate() {
-                let t = self.tables.get(cfgs[o % N_PHYSICAL]);
-                *l += t.mul8_sm(hj, wv);
+            for (a, &bv) in acc.iter_mut().zip(&lw.b) {
+                *a += sm::decode(bv) << 7;
             }
-        }
-        for (o, l) in logits.iter_mut().enumerate() {
-            *l += crate::amul::sm::decode(w.b2[o]) << 7;
+            match topo.activation(l) {
+                Activation::Identity => logits = acc,
+                Activation::ReluSat => {
+                    cur = acc.iter().map(|&a| neuron::saturate_activation(a)).collect();
+                    hidden.extend_from_slice(&cur);
+                }
+            }
         }
         ImageResult {
             pred: argmax(&logits) as u8,
@@ -145,29 +239,39 @@ impl Network {
     }
 
     /// Accuracy of the heterogeneous configuration assignment.
-    pub fn accuracy_hetero(
+    pub fn accuracy_hetero<X: AsRef<[u8]>>(
         &self,
-        features: &[[u8; N_FEATURES]],
+        features: &[X],
         labels: &[u8],
         cfgs: &[Config; N_PHYSICAL],
     ) -> f64 {
         let correct = features
             .iter()
             .zip(labels)
-            .filter(|(x, &y)| self.forward_hetero(x, cfgs).pred == y)
+            .filter(|(x, &y)| self.forward_hetero(x.as_ref(), cfgs).pred == y)
             .count();
         correct as f64 / labels.len() as f64
     }
 
-    /// Classification accuracy of the functional path over a slice of
-    /// (features, label) pairs.
-    pub fn accuracy(&self, features: &[[u8; N_FEATURES]], labels: &[u8], cfg: Config) -> f64 {
+    /// Classification accuracy of the (batched) functional path over a
+    /// slice of (features, label) pairs.
+    pub fn accuracy<X: AsRef<[u8]>>(&self, features: &[X], labels: &[u8], cfg: Config) -> f64 {
+        self.accuracy_sched(features, labels, &ConfigSchedule::Uniform(cfg))
+    }
+
+    /// `accuracy` under a per-layer schedule.
+    pub fn accuracy_sched<X: AsRef<[u8]>>(
+        &self,
+        features: &[X],
+        labels: &[u8],
+        sched: &ConfigSchedule,
+    ) -> f64 {
         assert_eq!(features.len(), labels.len());
-        let correct = features
-            .iter()
-            .zip(labels)
-            .filter(|(x, &y)| self.forward(x, cfg).pred == y)
-            .count();
+        let mut correct = 0usize;
+        for (xs, ys) in features.chunks(128).zip(labels.chunks(128)) {
+            let rs = self.forward_batch(xs, sched);
+            correct += rs.iter().zip(ys).filter(|(r, &y)| r.pred == y).count();
+        }
         correct as f64 / labels.len() as f64
     }
 }
@@ -191,36 +295,51 @@ impl MacObserver for NullObserver {
 pub struct DatapathSim<'w> {
     weights: &'w QuantWeights,
     tables: &'w MulTables,
-    cfg: Config,
+    sched: ConfigSchedule,
     /// Per-physical-neuron configuration override (heterogeneous mode).
     neuron_cfgs: Option<[Config; N_PHYSICAL]>,
     neurons: Vec<Neuron>,
-    hidden_regs: [u8; N_HIDDEN],
+    /// Persistent activation-register banks, one per hidden layer.
+    act_regs: Vec<Vec<u8>>,
     prev_x_bus: u8,
     prev_w_bus: [u8; N_PHYSICAL],
     pub stats: ActivityStats,
 }
 
 impl<'w> DatapathSim<'w> {
+    /// Simulator with a uniform configuration.
     pub fn new(net: &'w Network, cfg: Config) -> DatapathSim<'w> {
+        Self::new_scheduled(net, ConfigSchedule::Uniform(cfg))
+    }
+
+    /// Simulator with a per-layer schedule.
+    pub fn new_scheduled(net: &'w Network, sched: ConfigSchedule) -> DatapathSim<'w> {
+        let topo = &net.weights.topology;
         DatapathSim {
             weights: &net.weights,
             tables: &net.tables,
-            cfg,
+            sched,
             neuron_cfgs: None,
             neurons: (0..N_PHYSICAL).map(|_| Neuron::new()).collect(),
-            hidden_regs: [0; N_HIDDEN],
+            act_regs: (0..topo.n_layers() - 1)
+                .map(|l| vec![0u8; topo.layer_out(l)])
+                .collect(),
             prev_x_bus: 0,
             prev_w_bus: [0; N_PHYSICAL],
             stats: ActivityStats::default(),
         }
     }
 
-    /// Change the error configuration (the dynamic power control knob).
-    /// Takes effect on the next MAC — in hardware this is a config
-    /// register driving the column-gating drivers.
+    /// Change to a uniform error configuration (the dynamic power
+    /// control knob).  Takes effect on the next MAC — in hardware this
+    /// is a config register driving the column-gating drivers.
     pub fn set_config(&mut self, cfg: Config) {
-        self.cfg = cfg;
+        self.set_schedule(ConfigSchedule::Uniform(cfg));
+    }
+
+    /// Change the per-layer schedule; clears any per-neuron override.
+    pub fn set_schedule(&mut self, sched: ConfigSchedule) {
+        self.sched = sched;
         self.neuron_cfgs = None;
     }
 
@@ -229,79 +348,75 @@ impl<'w> DatapathSim<'w> {
         self.neuron_cfgs = Some(cfgs);
     }
 
-    pub fn config(&self) -> Config {
-        self.cfg
+    pub fn schedule(&self) -> &ConfigSchedule {
+        &self.sched
     }
 
-    /// Run one image through the full 5-state FSM; returns the result
-    /// after `CYCLES_PER_IMAGE` simulated cycles.
-    pub fn run_image(&mut self, x: &[u8; N_FEATURES]) -> ImageResult {
+    /// Run one image through the full FSM; returns the result after
+    /// `topology.cycles_per_image()` simulated cycles.
+    pub fn run_image(&mut self, x: &[u8]) -> ImageResult {
         self.run_image_observed(x, &mut NullObserver)
     }
 
     /// `run_image` with an activity observer on every MAC.
-    pub fn run_image_observed(
-        &mut self,
-        x: &[u8; N_FEATURES],
-        obs: &mut dyn MacObserver,
-    ) -> ImageResult {
-        let tables: Vec<&crate::amul::MulTable> = (0..N_PHYSICAL)
-            .map(|p| {
-                self.tables.get(match &self.neuron_cfgs {
-                    Some(cfgs) => cfgs[p],
-                    None => self.cfg,
-                })
+    pub fn run_image_observed(&mut self, x: &[u8], obs: &mut dyn MacObserver) -> ImageResult {
+        let w = self.weights;
+        let tabs = self.tables;
+        let topo = &w.topology;
+        assert_eq!(x.len(), topo.inputs(), "input width mismatch for topology {topo}");
+        let n_layers = topo.n_layers();
+        // per-(layer, physical-neuron) table selection
+        let tables: Vec<Vec<&MulTable>> = (0..n_layers)
+            .map(|l| {
+                (0..N_PHYSICAL)
+                    .map(|p| {
+                        tabs.get(match &self.neuron_cfgs {
+                            Some(cfgs) => cfgs[p],
+                            None => self.sched.layer(l),
+                        })
+                    })
+                    .collect()
             })
             .collect();
-        let mut ctrl = Controller::new(1);
-        let mut logits = [0i32; N_OUTPUTS];
+        let mut ctrl = Controller::for_topology(topo, 1);
+        let mut logits = vec![0i32; topo.outputs()];
 
         while !ctrl.is_done() {
             let sig = ctrl.signals();
             let cyc = ctrl.cycle_in_state() as usize;
-            match ctrl.state() {
-                State::Hidden(g) => {
-                    if sig.mac_en {
-                        // one input element broadcast to all 10 neurons
-                        let xi = x[cyc];
-                        self.track_bus(xi, |w, n| w.w1_at(cyc, g as usize * N_PHYSICAL + n));
-                        for (p, neuron) in self.neurons.iter_mut().enumerate() {
-                            let wv = self.weights.w1_at(cyc, g as usize * N_PHYSICAL + p);
-                            obs.on_mac(p, xi, wv);
-                            neuron.mac(xi, wv, tables[p]);
-                        }
-                        self.stats.mac_ops += N_PHYSICAL as u64;
-                    } else if sig.store_en {
-                        for p in 0..N_PHYSICAL {
-                            let j = g as usize * N_PHYSICAL + p;
-                            self.neurons[p].add_bias(self.weights.b1[j]);
-                            let h = self.neurons[p].activate();
-                            self.stats.reg_toggles +=
-                                (self.hidden_regs[j] ^ h).count_ones() as u64;
-                            self.hidden_regs[j] = h;
-                            self.neurons[p].clear();
-                        }
+            if let State::Layer { layer, pass } = ctrl.state() {
+                let l = layer as usize;
+                let lw = &w.layers[l];
+                let base = pass as usize * N_PHYSICAL;
+                let active = (lw.n_out - base).min(N_PHYSICAL);
+                if sig.mac_en {
+                    // one input element broadcast to the active neurons
+                    let xi = if l == 0 { x[cyc] } else { self.act_regs[l - 1][cyc] };
+                    self.track_bus(xi, active, |n| lw.w_at(cyc, base + n));
+                    for (p, neuron) in self.neurons.iter_mut().take(active).enumerate() {
+                        let wv = lw.w_at(cyc, base + p);
+                        obs.on_mac(p, xi, wv);
+                        neuron.mac(xi, wv, tables[l][p]);
+                    }
+                    self.stats.mac_ops += active as u64;
+                } else if sig.store_en {
+                    for p in 0..active {
+                        let j = base + p;
+                        self.neurons[p].add_bias(lw.b[j]);
+                        let h = self.neurons[p].activate();
+                        self.stats.reg_toggles +=
+                            (self.act_regs[l][j] ^ h).count_ones() as u64;
+                        self.act_regs[l][j] = h;
+                        self.neurons[p].clear();
+                    }
+                } else if sig.max_en {
+                    for p in 0..active {
+                        let j = base + p;
+                        self.neurons[p].add_bias(lw.b[j]);
+                        logits[j] = self.neurons[p].acc();
+                        self.neurons[p].clear();
                     }
                 }
-                State::Output => {
-                    if sig.mac_en {
-                        let hj = self.hidden_regs[cyc];
-                        self.track_bus(hj, |w, n| w.w2_at(cyc, n));
-                        for (p, neuron) in self.neurons.iter_mut().enumerate() {
-                            let wv = self.weights.w2_at(cyc, p);
-                            obs.on_mac(p, hj, wv);
-                            neuron.mac(hj, wv, tables[p]);
-                        }
-                        self.stats.mac_ops += N_PHYSICAL as u64;
-                    } else if sig.max_en {
-                        for (p, logit) in logits.iter_mut().enumerate() {
-                            self.neurons[p].add_bias(self.weights.b2[p]);
-                            *logit = self.neurons[p].acc();
-                            self.neurons[p].clear();
-                        }
-                    }
-                }
-                State::Done => {}
             }
             ctrl.tick();
             self.stats.cycles += 1;
@@ -312,17 +427,18 @@ impl<'w> DatapathSim<'w> {
         ImageResult {
             pred: argmax(&logits) as u8,
             logits,
-            hidden: self.hidden_regs,
+            hidden: self.act_regs.iter().flatten().copied().collect(),
         }
     }
 
-    /// Track operand-bus switching (input broadcast bus + 10 weight buses).
+    /// Track operand-bus switching (input broadcast bus + the active
+    /// weight buses; idle buses hold their previous value).
     #[inline]
-    fn track_bus(&mut self, x_bus: u8, weight_of: impl Fn(&QuantWeights, usize) -> u8) {
+    fn track_bus(&mut self, x_bus: u8, active: usize, weight_of: impl Fn(usize) -> u8) {
         self.stats.bus_toggles += (self.prev_x_bus ^ x_bus).count_ones() as u64;
         self.prev_x_bus = x_bus;
-        for n in 0..N_PHYSICAL {
-            let wv = weight_of(self.weights, n);
+        for n in 0..active {
+            let wv = weight_of(n);
             self.stats.bus_toggles += (self.prev_w_bus[n] ^ wv).count_ones() as u64;
             self.prev_w_bus[n] = wv;
         }
@@ -332,6 +448,7 @@ impl<'w> DatapathSim<'w> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dataset::N_FEATURES;
     use crate::util::rng::Pcg32;
 
     fn test_network() -> Network {
@@ -350,12 +467,12 @@ mod tests {
                 })
                 .collect()
         };
-        Network::new(QuantWeights {
-            w1: gen(62 * 30),
-            b1: gen(30),
-            w2: gen(30 * 10),
-            b2: gen(10),
-        })
+        Network::new(QuantWeights::two_layer(
+            gen(62 * 30),
+            gen(30),
+            gen(30 * 10),
+            gen(10),
+        ))
     }
 
     fn random_input(rng: &mut Pcg32) -> [u8; N_FEATURES] {
@@ -364,6 +481,73 @@ mod tests {
             *v = rng.below(128) as u8;
         }
         x
+    }
+
+    fn random_inputs_for(topo: &Topology, rng: &mut Pcg32, n: usize) -> Vec<Vec<u8>> {
+        (0..n)
+            .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
+            .collect()
+    }
+
+    fn random_schedule(topo: &Topology, rng: &mut Pcg32) -> ConfigSchedule {
+        ConfigSchedule::PerLayer(
+            (0..topo.n_layers())
+                .map(|_| Config::new(rng.below(33)).unwrap())
+                .collect(),
+        )
+    }
+
+    /// The pre-refactor hardcoded 62-30-10 forward pass, kept verbatim
+    /// as a regression oracle: the topology-parametric loop must produce
+    /// bit-identical logits on the seed topology.
+    fn seed_reference_forward(net: &Network, x: &[u8; 62], cfg: Config) -> (Vec<i32>, Vec<u8>) {
+        let t = net.tables.get(cfg);
+        let w1 = &net.weights.layer(0).w;
+        let b1 = &net.weights.layer(0).b;
+        let w2 = &net.weights.layer(1).w;
+        let b2 = &net.weights.layer(1).b;
+        let mut acc1 = [0i32; 30];
+        for (i, &xi) in x.iter().enumerate() {
+            let row = t.row(xi);
+            let wrow = &w1[i * 30..(i + 1) * 30];
+            for (a, &wv) in acc1.iter_mut().zip(wrow) {
+                *a += row.mul8_sm(wv);
+            }
+        }
+        let mut hidden = [0u8; 30];
+        for (j, h) in hidden.iter_mut().enumerate() {
+            let acc = acc1[j] + (sm::decode(b1[j]) << 7);
+            *h = neuron::saturate_activation(acc);
+        }
+        let mut logits = [0i32; 10];
+        for (j, &hj) in hidden.iter().enumerate() {
+            let row = t.row(hj);
+            let wrow = &w2[j * 10..(j + 1) * 10];
+            for (l, &wv) in logits.iter_mut().zip(wrow) {
+                *l += row.mul8_sm(wv);
+            }
+        }
+        for (o, l) in logits.iter_mut().enumerate() {
+            *l += sm::decode(b2[o]) << 7;
+        }
+        (logits.to_vec(), hidden.to_vec())
+    }
+
+    #[test]
+    fn uniform_schedule_reproduces_seed_reference_exactly() {
+        let net = test_network();
+        let mut rng = Pcg32::new(99);
+        for cfg_i in [0u32, 1, 9, 17, 32] {
+            let cfg = Config::new(cfg_i).unwrap();
+            for _ in 0..25 {
+                let x = random_input(&mut rng);
+                let (logits, hidden) = seed_reference_forward(&net, &x, cfg);
+                let r = net.forward(&x, cfg);
+                assert_eq!(r.logits, logits, "cfg {cfg_i}");
+                assert_eq!(r.hidden, hidden, "cfg {cfg_i}");
+                assert_eq!(r.pred as usize, argmax(&logits), "cfg {cfg_i}");
+            }
+        }
     }
 
     #[test]
@@ -383,14 +567,97 @@ mod tests {
     }
 
     #[test]
+    fn batch_matches_per_image_on_seed() {
+        let net = test_network();
+        let mut rng = Pcg32::new(7);
+        let xs: Vec<[u8; N_FEATURES]> = (0..33).map(|_| random_input(&mut rng)).collect();
+        for cfg_i in [0u32, 16, 32] {
+            let sched = ConfigSchedule::uniform(Config::new(cfg_i).unwrap());
+            let batch = net.forward_batch(&xs, &sched);
+            assert_eq!(batch.len(), xs.len());
+            for (x, r) in xs.iter().zip(&batch) {
+                assert_eq!(*r, net.forward_sched(x, &sched), "cfg {cfg_i}");
+            }
+        }
+        assert!(net.forward_batch(&[] as &[[u8; N_FEATURES]], &ConfigSchedule::uniform(Config::ACCURATE)).is_empty());
+    }
+
+    #[test]
+    fn per_layer_schedule_three_path_parity_on_seed() {
+        let net = test_network();
+        let mut rng = Pcg32::new(11);
+        for trial in 0..8 {
+            let sched = random_schedule(net.topology(), &mut rng);
+            let xs: Vec<[u8; N_FEATURES]> = (0..6).map(|_| random_input(&mut rng)).collect();
+            let batch = net.forward_batch(&xs, &sched);
+            let mut sim = DatapathSim::new_scheduled(&net, sched.clone());
+            for (x, r) in xs.iter().zip(&batch) {
+                assert_eq!(*r, net.forward_sched(x, &sched), "trial {trial} {sched}");
+                assert_eq!(*r, sim.run_image(x), "trial {trial} {sched}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_seed_topologies_three_path_parity() {
+        for spec in ["62,20,20,10", "4,4,3", "8,23,5"] {
+            let topo = Topology::parse(spec).unwrap();
+            let net = Network::new(QuantWeights::random(&topo, 0xBEEF));
+            let mut rng = Pcg32::new(3);
+            for trial in 0..6 {
+                let sched = random_schedule(&topo, &mut rng);
+                let xs = random_inputs_for(&topo, &mut rng, 5);
+                let batch = net.forward_batch(&xs, &sched);
+                let mut sim = DatapathSim::new_scheduled(&net, sched.clone());
+                for (x, r) in xs.iter().zip(&batch) {
+                    assert_eq!(r.logits.len(), topo.outputs());
+                    assert_eq!(r.hidden.len(), topo.hidden_units());
+                    assert_eq!(*r, net.forward_sched(x, &sched), "{spec} trial {trial}");
+                    assert_eq!(*r, sim.run_image(x), "{spec} trial {trial}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_layer_schedule_is_a_distinct_operating_point() {
+        let net = test_network();
+        let mut rng = Pcg32::new(23);
+        let sched = ConfigSchedule::per_layer(vec![Config::MAX_APPROX, Config::ACCURATE]);
+        let mut differs = false;
+        for _ in 0..50 {
+            let x = random_input(&mut rng);
+            let s = net.forward_sched(&x, &sched);
+            let a = net.forward(&x, Config::ACCURATE);
+            let w = net.forward(&x, Config::MAX_APPROX);
+            if s.logits != a.logits && s.logits != w.logits {
+                differs = true;
+                break;
+            }
+        }
+        assert!(differs, "per-layer schedule should open a new operating point");
+    }
+
+    #[test]
     fn cycle_count_matches_controller_constant() {
         let net = test_network();
         let mut sim = DatapathSim::new(&net, Config::ACCURATE);
         let x = [5u8; N_FEATURES];
         sim.run_image(&x);
         assert_eq!(sim.stats.cycles, controller::CYCLES_PER_IMAGE as u64);
-        // 62 inputs * 10 neurons * 3 states + 30 * 10 = 2160
+        // 62 inputs * 10 neurons * 3 passes + 30 * 10 = 2160
         assert_eq!(sim.stats.mac_ops, 2160);
+    }
+
+    #[test]
+    fn cycle_count_and_macs_for_partial_pass_topology() {
+        let topo = Topology::parse("4,4,3").unwrap();
+        let net = Network::new(QuantWeights::random(&topo, 1));
+        let mut sim = DatapathSim::new(&net, Config::ACCURATE);
+        sim.run_image(&[1u8, 2, 3, 4]);
+        assert_eq!(sim.stats.cycles, topo.cycles_per_image());
+        // layer 0: 4 inputs x 4 active neurons; layer 1: 4 x 3
+        assert_eq!(sim.stats.mac_ops, 16 + 12);
     }
 
     #[test]

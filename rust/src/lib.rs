@@ -1,11 +1,21 @@
 //! # ecmac — dynamic power control in a hardware MLP with error-configurable MAC units
 //!
 //! Full-system reproduction of the CS.AR 2024 paper: a 45nm hardware MLP
-//! accelerator (62-30-10, 10 physical neurons, 5-state FSM controller)
-//! whose MAC units embed an error-configurable approximate multiplier
-//! with 32 approximate configurations plus an accurate mode; changing
-//! the configuration at runtime trades classification accuracy for
-//! power — the paper's "dynamic power control".
+//! accelerator (10 physical neurons, FSM controller) whose MAC units
+//! embed an error-configurable approximate multiplier with 32
+//! approximate configurations plus an accurate mode; changing the
+//! configuration at runtime trades classification accuracy for power —
+//! the paper's "dynamic power control".
+//!
+//! Since the topology-parametric refactor the core is no longer
+//! hardwired to the paper's 62-30-10 network: [`weights::Topology`]
+//! describes arbitrary MLP layer stacks (scheduled onto the 10 physical
+//! neurons in ceil(width/10) passes), and [`amul::ConfigSchedule`]
+//! assigns one multiplier configuration *per layer* — the finer
+//! approximation knob explored in the related per-layer-tuning work.
+//! The seed 62-30-10 topology with a uniform schedule remains the
+//! default, and all golden vectors, HLO artifacts and paper-comparison
+//! numbers are bit-identical to the pre-refactor pipeline.
 //!
 //! The stack has three layers:
 //!
@@ -15,13 +25,16 @@
 //!   trained and AOT-lowered to HLO text artifacts.
 //! * **Layer 3 (this crate)** — everything at runtime: the bit-exact
 //!   multiplier model ([`amul`]), the gate-level netlist and 45nm power
-//!   model ([`netlist`], [`power`]), the cycle-accurate datapath
-//!   simulator ([`datapath`]), the PJRT runtime that executes the AOT
-//!   artifacts ([`runtime`]), and the dynamic-power-control coordinator
-//!   ([`coordinator`]).
+//!   model ([`netlist`], [`power`]), the topology-parametric
+//!   cycle-accurate datapath simulator with functional and batched
+//!   layer-major twins ([`datapath`]), the PJRT runtime that executes
+//!   the AOT artifacts ([`runtime`], feature-gated behind `pjrt`), and
+//!   the dynamic-power-control coordinator whose governor hands each
+//!   batch a configuration schedule ([`coordinator`]).
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! See DESIGN.md at the repository root for the system inventory, the
+//! topology/schedule architecture, the module map, and the
+//! paper-vs-measured notes.
 
 pub mod amul;
 pub mod coordinator;

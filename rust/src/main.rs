@@ -8,9 +8,10 @@
 //!   accuracy   test-set accuracy per configuration (native or PJRT)
 //!   classify   one image through native + cycle-accurate + PJRT backends
 //!   serve      synthetic-load serving demo with a governor policy
+//!   topo       topology-parametric demo: arbitrary MLP + per-layer schedule
 
 use anyhow::{Context, Result};
-use ecmac::amul::{metrics, Config};
+use ecmac::amul::{metrics, Config, ConfigSchedule};
 use ecmac::coordinator::governor::{AccuracyTable, Policy};
 use ecmac::coordinator::{
     Backend, Coordinator, CoordinatorConfig, Governor, NativeBackend, PjrtBackend,
@@ -20,7 +21,7 @@ use ecmac::datapath::{DatapathSim, Network};
 use ecmac::power::{MultiplierEnergyProfile, PowerModel};
 use ecmac::report;
 use ecmac::util::cli::{Args, OptSpec};
-use ecmac::weights::QuantWeights;
+use ecmac::weights::{QuantWeights, Topology};
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
@@ -40,6 +41,7 @@ fn main() {
         "accuracy" => cmd_accuracy(rest),
         "classify" => cmd_classify(rest),
         "serve" => cmd_serve(rest),
+        "topo" => cmd_topo(rest),
         "ablation" => cmd_ablation(rest),
         "verilog" => cmd_verilog(rest),
         "--help" | "-h" | "help" => {
@@ -69,6 +71,7 @@ fn print_global_usage() {
          \x20 accuracy   per-configuration test accuracy\n\
          \x20 classify   one image through all backends\n\
          \x20 serve      serving demo with a governor policy\n\
+         \x20 topo       arbitrary-topology demo with a per-layer schedule\n\
          \x20 ablation   heterogeneous per-neuron configuration study\n\
          \x20 verilog    export the EC multiplier as synthesizable Verilog\n"
     );
@@ -126,17 +129,22 @@ fn cmd_info(argv: &[String]) -> Result<()> {
     let dir = artifacts_dir(&args);
     println!("artifacts: {}", dir.display());
     let weights = QuantWeights::load_artifacts(&dir)?;
+    let topo = weights.topology.clone();
     println!(
-        "network: 62-30-10 MLP, {} hidden weights, {} output weights, 10 physical neurons",
-        weights.w1.len(),
-        weights.w2.len()
+        "network: {topo} MLP ({} weight layers, {} parameters), 10 physical neurons",
+        topo.n_layers(),
+        weights
+            .layers
+            .iter()
+            .map(|l| l.w.len() + l.b.len())
+            .sum::<usize>()
     );
     let ds = Dataset::load_test(&dir)?;
-    println!("test set: {} images, 62 features each", ds.len());
+    println!("test set: {} images, {} features each", ds.len(), topo.inputs());
     println!(
         "cycles/image: {} ({:.2} us at 100 MHz)",
-        ecmac::datapath::controller::CYCLES_PER_IMAGE,
-        ecmac::datapath::controller::CYCLES_PER_IMAGE as f64 / 100.0
+        topo.cycles_per_image(),
+        topo.cycles_per_image() as f64 / 100.0
     );
     println!(
         "area: {:.0} um2 (paper: {:.0} um2)",
@@ -341,20 +349,32 @@ fn cmd_classify(argv: &[String]) -> Result<()> {
         takes_value: true,
         default: Some("0"),
     });
+    spec.push(OptSpec {
+        name: "schedule",
+        help: "per-layer schedule, e.g. '32,0' (overrides --cfg)",
+        takes_value: true,
+        default: None,
+    });
     let args = Args::parse(argv, &spec)?;
     let dir = artifacts_dir(&args);
     let idx: usize = args.get_or("index", 0)?;
-    let cfg = Config::new(args.get_or("cfg", 0u32)?).context("cfg must be 0..=32")?;
+    let sched = match args.get("schedule") {
+        Some(s) => ConfigSchedule::parse(s)?,
+        None => ConfigSchedule::uniform(
+            Config::new(args.get_or("cfg", 0u32)?).context("cfg must be 0..=32")?,
+        ),
+    };
     let ds = Dataset::load_test(&dir)?;
     anyhow::ensure!(idx < ds.len(), "index {idx} out of range ({})", ds.len());
     let x = &ds.features[idx];
     let label = ds.labels[idx];
     let net = Network::new(QuantWeights::load_artifacts(&dir)?);
+    sched.validate(net.topology().n_layers())?;
 
-    let fast = net.forward(x, cfg);
-    println!("image {idx} (label {label}), {cfg}");
+    let fast = net.forward_sched(x, &sched);
+    println!("image {idx} (label {label}), {sched}");
     println!("  native:          pred {}  logits {:?}", fast.pred, fast.logits);
-    let mut sim = DatapathSim::new(&net, cfg);
+    let mut sim = DatapathSim::new_scheduled(&net, sched.clone());
     let slow = sim.run_image(x);
     println!(
         "  cycle-accurate:  pred {}  ({} cycles)  match={}",
@@ -362,17 +382,20 @@ fn cmd_classify(argv: &[String]) -> Result<()> {
         sim.stats.cycles,
         slow == fast
     );
-    match ecmac::runtime::Engine::load(&dir) {
-        Ok(engine) => {
-            let out = engine.execute(std::slice::from_ref(x), cfg)?;
-            println!(
-                "  pjrt (AOT jax):  pred {}  logits {:?}  match={}",
-                out.preds[0],
-                out.logits[0],
-                out.logits[0] == fast.logits
-            );
-        }
-        Err(e) => println!("  pjrt: unavailable ({e})"),
+    match sched.as_uniform() {
+        Some(cfg) => match ecmac::runtime::Engine::load(&dir) {
+            Ok(engine) => {
+                let out = engine.execute(std::slice::from_ref(x), cfg)?;
+                println!(
+                    "  pjrt (AOT jax):  pred {}  logits {:?}  match={}",
+                    out.preds[0],
+                    out.logits[0],
+                    out.logits[0] == fast.logits
+                );
+            }
+            Err(e) => println!("  pjrt: unavailable ({e})"),
+        },
+        None => println!("  pjrt: skipped (per-layer schedules run on the native fallback)"),
     }
     Ok(())
 }
@@ -381,7 +404,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let mut spec = common_opts();
     spec.push(OptSpec {
         name: "policy",
-        help: "fixed:<cfg> | budget:<mw> | floor:<accuracy> | energy:<mj>:<images>",
+        help: "fixed:<cfg> | sched:<cfg,cfg,..> | budget:<mw> | floor:<accuracy> | energy:<mj>:<images>",
         takes_value: true,
         default: Some("budget:5.0"),
     });
@@ -418,7 +441,6 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let pm = power_model(&dir, 32)?;
     let acc_table = AccuracyTable::load(&dir.join("accuracy_sweep.json"))?;
     let policy = parse_policy(args.get("policy").unwrap_or("budget:5.0"))?;
-    let governor = Governor::new(policy.clone(), &pm, &acc_table);
 
     let backend: Arc<dyn Backend> = match args.get("backend").unwrap_or("native") {
         "native" => Arc::new(NativeBackend {
@@ -428,6 +450,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         other => anyhow::bail!("unknown backend '{other}'"),
     };
     let backend_name = backend.name();
+    if let Policy::FixedSchedule(s) = &policy {
+        s.validate(backend.topology().n_layers())?;
+    }
+    let governor = Governor::for_topology(policy.clone(), &pm, &acc_table, backend.topology());
 
     let coord = Coordinator::start(
         CoordinatorConfig {
@@ -506,7 +532,97 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .map(|(i, &c)| (i, c))
         .collect();
     println!("configs used       {used:?}");
-    println!("governor decisions {decisions:?}");
+    if m.mixed > 0 {
+        println!("per-layer served   {} requests", m.mixed);
+    }
+    let decided: Vec<String> = decisions
+        .iter()
+        .map(|(at, s)| format!("@{at}->{s}"))
+        .collect();
+    println!("governor decisions {decided:?}");
+    Ok(())
+}
+
+/// Topology-parametric demo: build a pseudo-random network of an
+/// arbitrary topology, prove the three execution paths agree under a
+/// per-layer schedule, and report the schedule's cycle/power split plus
+/// the batched-vs-per-image throughput win.
+fn cmd_topo(argv: &[String]) -> Result<()> {
+    let spec = vec![
+        OptSpec {
+            name: "topology",
+            help: "comma-separated layer sizes, e.g. 62,20,20,10",
+            takes_value: true,
+            default: Some("62,30,10"),
+        },
+        OptSpec {
+            name: "schedule",
+            help: "uniform cfg ('9') or per-layer list ('32,16,0')",
+            takes_value: true,
+            default: Some("0"),
+        },
+        OptSpec {
+            name: "images",
+            help: "random images to run",
+            takes_value: true,
+            default: Some("512"),
+        },
+        OptSpec {
+            name: "seed",
+            help: "weight/input PRNG seed",
+            takes_value: true,
+            default: Some("7"),
+        },
+    ];
+    let args = Args::parse(argv, &spec)?;
+    let topo = Topology::parse(args.get("topology").unwrap_or("62,30,10"))?;
+    let sched = ConfigSchedule::parse(args.get("schedule").unwrap_or("0"))?;
+    sched.validate(topo.n_layers())?;
+    let n: usize = args.get_or("images", 512)?;
+    let seed: u64 = args.get_or("seed", 7)?;
+
+    let net = Network::new(QuantWeights::random(&topo, seed));
+    let mut rng = ecmac::util::rng::Pcg32::new(seed ^ 0x5EED);
+    let xs: Vec<Vec<u8>> = (0..n.max(1))
+        .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
+        .collect();
+
+    println!("topology {topo}: {} weight layers, {} cycles/image, schedule {sched}\n",
+        topo.n_layers(),
+        topo.cycles_per_image()
+    );
+
+    // three-path parity on a subset
+    let batch = net.forward_batch(&xs, &sched);
+    let mut sim = DatapathSim::new_scheduled(&net, sched.clone());
+    let check_n = xs.len().min(16);
+    let mut parity = true;
+    for (x, r) in xs.iter().zip(&batch).take(check_n) {
+        parity &= *r == net.forward_sched(x, &sched) && *r == sim.run_image(x);
+    }
+    println!("functional / batched / cycle-accurate parity on {check_n} images: {parity}");
+    anyhow::ensure!(parity, "execution paths diverged");
+
+    // per-image vs batched layer-major throughput
+    let t0 = std::time::Instant::now();
+    for x in &xs {
+        std::hint::black_box(net.forward_sched(x, &sched));
+    }
+    let per_image = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    std::hint::black_box(net.forward_batch(&xs, &sched));
+    let batched = t0.elapsed();
+    println!(
+        "throughput ({} images): per-image {:.0} img/s, batched layer-major {:.0} img/s \
+         ({:.2}x)\n",
+        xs.len(),
+        xs.len() as f64 / per_image.as_secs_f64(),
+        xs.len() as f64 / batched.as_secs_f64(),
+        per_image.as_secs_f64() / batched.as_secs_f64()
+    );
+
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(2000, 0xD1E5E1))?;
+    println!("{}", report::schedule_summary(&topo, &sched, &pm));
     Ok(())
 }
 
@@ -516,6 +632,7 @@ fn parse_policy(s: &str) -> Result<Policy> {
         ["fixed", cfg] => Ok(Policy::Fixed(
             Config::new(cfg.parse()?).context("cfg out of range")?,
         )),
+        ["sched", list] => Ok(Policy::FixedSchedule(ConfigSchedule::parse(list)?)),
         ["budget", mw] => Ok(Policy::PowerBudget {
             budget_mw: mw.parse()?,
         }),
@@ -527,7 +644,8 @@ fn parse_policy(s: &str) -> Result<Policy> {
             horizon_images: imgs.parse()?,
         }),
         _ => anyhow::bail!(
-            "bad policy '{s}' (fixed:<cfg> | budget:<mw> | floor:<acc> | energy:<mj>:<images>)"
+            "bad policy '{s}' (fixed:<cfg> | sched:<cfg,..> | budget:<mw> | floor:<acc> | \
+             energy:<mj>:<images>)"
         ),
     }
 }

@@ -37,7 +37,7 @@ struct Gate {
     ins: [NetId; 3],
     outs: [NetId; 2],
     domain: DomainId,
-    /// cached `kind.spec().toggle_fj` (hot-loop, see EXPERIMENTS.md §Perf)
+    /// cached `kind.spec().toggle_fj` (hot-loop, see DESIGN.md §Perf)
     toggle_fj: f64,
 }
 

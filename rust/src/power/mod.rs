@@ -21,7 +21,7 @@
 //! ```
 //!
 //! The raw netlist-level multiplier saving is reported alongside
-//! (EXPERIMENTS.md) — our gate-level reconstruction reaches ~30-40%
+//! (DESIGN.md §Power-Model) — our gate-level reconstruction reaches ~30-40%
 //! switching reduction at the worst configuration, whereas the paper's
 //! component ratios imply >= 44.36% inside the MAC; the anchored
 //! interpolation keeps the reproduction faithful to the paper's headline
@@ -280,6 +280,41 @@ impl PowerModel {
         let cycles = crate::datapath::controller::CYCLES_PER_IMAGE as f64;
         self.breakdown(cfg).total_mw * 1e-3 * cycles / anchors::FREQ_HZ * 1e9
     }
+
+    /// Energy per image in nJ under a per-layer schedule: layer `l`
+    /// draws its configuration's network power for the cycles the FSM
+    /// spends on that layer.  Collapses to [`Self::energy_per_image_nj`]
+    /// for uniform schedules on the seed topology.
+    ///
+    /// This is what lets a governor spend the error budget where the
+    /// power model says it pays: a layer that dominates the cycle count
+    /// (large fan-in x many passes) buys proportionally more energy per
+    /// config step than a small one.
+    pub fn energy_per_image_nj_sched(
+        &self,
+        topo: &crate::weights::Topology,
+        sched: &crate::amul::ConfigSchedule,
+    ) -> f64 {
+        (0..topo.n_layers())
+            .map(|l| {
+                self.breakdown(sched.layer(l)).total_mw * 1e-3 * topo.layer_cycles(l) as f64
+                    / anchors::FREQ_HZ
+                    * 1e9
+            })
+            .sum()
+    }
+
+    /// Time-weighted average network power (mW) of a per-layer schedule.
+    pub fn schedule_power_mw(
+        &self,
+        topo: &crate::weights::Topology,
+        sched: &crate::amul::ConfigSchedule,
+    ) -> f64 {
+        let total = topo.cycles_per_image() as f64;
+        (0..topo.n_layers())
+            .map(|l| self.breakdown(sched.layer(l)).total_mw * topo.layer_cycles(l) as f64 / total)
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -361,6 +396,41 @@ mod tests {
         assert!(e32 < e0);
         // 5.55 mW * 2.2 us = 12.2 nJ
         assert!((e0 - 12.26).abs() < 0.2, "{e0}");
+    }
+
+    #[test]
+    fn schedule_energy_collapses_to_uniform_on_seed() {
+        use crate::amul::ConfigSchedule;
+        use crate::weights::Topology;
+        let m = model();
+        let topo = Topology::seed();
+        for cfg in [Config::ACCURATE, Config::new(9).unwrap(), Config::MAX_APPROX] {
+            let sched = ConfigSchedule::uniform(cfg);
+            let a = m.energy_per_image_nj(cfg);
+            let b = m.energy_per_image_nj_sched(&topo, &sched);
+            assert!((a - b).abs() < 1e-9, "{cfg}: {a} vs {b}");
+            assert!((m.schedule_power_mw(&topo, &sched) - m.breakdown(cfg).total_mw).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn schedule_energy_weights_layers_by_cycles() {
+        use crate::amul::ConfigSchedule;
+        use crate::weights::Topology;
+        let m = model();
+        let topo = Topology::seed();
+        // approximating only the hidden layer (189 of 220 cycles) saves
+        // more than approximating only the output layer (31 cycles)
+        let hid = ConfigSchedule::per_layer(vec![Config::MAX_APPROX, Config::ACCURATE]);
+        let out = ConfigSchedule::per_layer(vec![Config::ACCURATE, Config::MAX_APPROX]);
+        let e_acc = m.energy_per_image_nj(Config::ACCURATE);
+        let e_hid = m.energy_per_image_nj_sched(&topo, &hid);
+        let e_out = m.energy_per_image_nj_sched(&topo, &out);
+        assert!(e_hid < e_out, "hidden-layer saving {e_hid} must beat output {e_out}");
+        assert!(e_out < e_acc);
+        // both bracketed by the uniform extremes
+        let e_worst = m.energy_per_image_nj(Config::MAX_APPROX);
+        assert!(e_hid > e_worst && e_out < e_acc);
     }
 
     #[test]

@@ -149,7 +149,7 @@ pub fn fig5_power_improvement(sweep: &[PowerBreakdown]) -> String {
         .collect();
     let mut out = bar_chart(
         "Fig. 5 — improvement in overall power consumption per configuration [%]\n\
-         (paper: max 13.33%, avg 5.84%*; * see EXPERIMENTS.md on the paper's internal inconsistency)",
+         (paper: max 13.33%, avg 5.84%*; * see DESIGN.md §Paper-Deltas on the paper's internal inconsistency)",
         &labels,
         &values,
         48,
@@ -249,6 +249,50 @@ pub fn area_table() -> String {
     out
 }
 
+/// Per-layer schedule summary: where the cycles go and what each
+/// layer's configuration costs — the view a governor uses to spend the
+/// error budget where the power model says it pays.
+pub fn schedule_summary(
+    topo: &crate::weights::Topology,
+    sched: &crate::amul::ConfigSchedule,
+    pm: &PowerModel,
+) -> String {
+    let mut t = TextTable::new(&["layer", "shape", "passes", "cycles", "cfg", "power mW", "energy nJ"]);
+    let total_cycles = topo.cycles_per_image() as f64;
+    for l in 0..topo.n_layers() {
+        let cfg = sched.layer(l);
+        let cycles = topo.layer_cycles(l);
+        let p = pm.breakdown(cfg).total_mw;
+        let e = p * 1e-3 * cycles as f64 / crate::power::anchors::FREQ_HZ * 1e9;
+        t.row(vec![
+            l.to_string(),
+            format!("{}x{}", topo.layer_in(l), topo.layer_out(l)),
+            topo.passes(l).to_string(),
+            format!("{cycles} ({:.0}%)", cycles as f64 / total_cycles * 100.0),
+            cfg.index().to_string(),
+            format!("{:.3}", p),
+            format!("{:.3}", e),
+        ]);
+    }
+    let mut out = format!("schedule {sched} on topology {topo}\n\n");
+    out.push_str(&t.render());
+    let e_sched = pm.energy_per_image_nj_sched(topo, sched);
+    let e_acc = pm.energy_per_image_nj_sched(
+        topo,
+        &crate::amul::ConfigSchedule::uniform(Config::ACCURATE),
+    );
+    let _ = writeln!(
+        out,
+        "\ntotal {} cycles/image, avg power {:.3} mW, energy {:.3} nJ/image \
+         ({:.2}% vs uniform accurate)",
+        topo.cycles_per_image(),
+        pm.schedule_power_mw(topo, sched),
+        e_sched,
+        (e_acc - e_sched) / e_acc * 100.0
+    );
+    out
+}
+
 /// CSV for the power/accuracy sweep (the data behind Figs 5-7).
 pub fn sweep_csv(sweep: &[PowerBreakdown], accuracy: &[f64], model: &PowerModel) -> String {
     let mut t = TextTable::new(&[
@@ -325,6 +369,27 @@ mod tests {
         assert!(out.contains("ER [%]"));
         // 33 config rows + headers
         assert!(out.lines().count() > 40);
+    }
+
+    #[test]
+    fn schedule_summary_renders_and_accounts_cycles() {
+        use crate::amul::ConfigSchedule;
+        use crate::weights::Topology;
+        let pm = crate::power::PowerModel::calibrate(
+            crate::power::MultiplierEnergyProfile::measure_synthetic(400, 5),
+        )
+        .unwrap();
+        let topo = Topology::seed();
+        let sched = ConfigSchedule::per_layer(vec![
+            Config::MAX_APPROX,
+            Config::ACCURATE,
+        ]);
+        let out = schedule_summary(&topo, &sched, &pm);
+        assert!(out.contains("62x30"));
+        assert!(out.contains("30x10"));
+        assert!(out.contains("220 cycles/image"));
+        // hidden layer dominates the cycle count: 189/220 = 86%
+        assert!(out.contains("(86%)"));
     }
 
     #[test]

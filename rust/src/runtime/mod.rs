@@ -10,6 +10,17 @@
 //! 64-bit instruction ids that xla_extension 0.5.1's proto path rejects
 //! (see /opt/xla-example/README.md).
 //!
+//! The whole module is gated behind the `pjrt` cargo feature (the `xla`
+//! bindings are only present on machines with the local XLA toolchain).
+//! Without the feature [`Engine::load`] fails with a clear message and
+//! every caller falls back to the bit-exact native model; check
+//! [`pjrt_enabled`] to skip PJRT-only tests.
+//!
+//! The AOT executables are lowered for the seed 62-30-10 topology and a
+//! *uniform* configuration (the `cfg` scalar parameter); non-seed
+//! topologies and per-layer schedules are rejected at load/execute time
+//! and served by the native fallback in `coordinator::server`.
+//!
 //! Parameter order (fixed by `python/compile/aot.py`):
 //!   (x i32[B,62], w1 i32[62,30], b1 i32[30], w2 i32[30,10], b2 i32[10],
 //!    cfg i32[1]) -> (logits i32[B,10], hidden i32[B,30])
@@ -17,25 +28,15 @@
 use crate::amul::Config;
 use crate::dataset::N_FEATURES;
 use crate::util::json::Json;
-use crate::weights::{QuantWeights, N_HIDDEN, N_OUTPUTS};
+#[cfg(feature = "pjrt")]
+use crate::weights::N_HIDDEN;
+use crate::weights::{QuantWeights, N_OUTPUTS};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
-/// One compiled executable for a fixed batch size.
-struct BatchExecutable {
-    batch: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The inference engine: a PJRT client plus compiled executables.
-pub struct Engine {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    executables: Vec<BatchExecutable>, // ascending batch size
-    ref_f32: Option<(usize, xla::PjRtLoadedExecutable)>,
-    weights: QuantWeights,
-    /// float weights for the reference executable
-    weights_f32: Option<WeightsF32>,
+/// Whether PJRT support is compiled into this build.
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
 }
 
 /// Float parameters for the f32 reference model.
@@ -51,10 +52,32 @@ pub struct WeightsF32 {
 #[derive(Debug, Clone)]
 pub struct BatchOutput {
     pub preds: Vec<u8>,
-    pub logits: Vec<[i32; N_OUTPUTS]>,
-    pub hidden: Vec<[i32; N_HIDDEN]>,
+    /// Per-image output logits (`N_OUTPUTS` each on the seed model).
+    pub logits: Vec<Vec<i32>>,
+    /// Per-image hidden activations (`N_HIDDEN` each on the seed model).
+    pub hidden: Vec<Vec<i32>>,
 }
 
+/// One compiled executable for a fixed batch size.
+#[cfg(feature = "pjrt")]
+struct BatchExecutable {
+    batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The inference engine: a PJRT client plus compiled executables.
+#[cfg(feature = "pjrt")]
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    executables: Vec<BatchExecutable>, // ascending batch size
+    ref_f32: Option<(usize, xla::PjRtLoadedExecutable)>,
+    weights: QuantWeights,
+    /// float weights for the reference executable
+    weights_f32: Option<WeightsF32>,
+}
+
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load and compile every artifact listed in `manifest.json`.
     pub fn load(artifacts: &Path) -> Result<Engine> {
@@ -92,6 +115,11 @@ impl Engine {
         }
 
         let weights = QuantWeights::load_artifacts(artifacts)?;
+        anyhow::ensure!(
+            weights.topology.is_seed(),
+            "PJRT artifacts are lowered for the seed 62-30-10 topology, got {}",
+            weights.topology
+        );
         Ok(Engine {
             client,
             executables,
@@ -118,7 +146,8 @@ impl Engine {
             .unwrap_or_else(|| self.executables.last().unwrap())
     }
 
-    /// Run a batch of quantized feature vectors through the AOT model.
+    /// Run a batch of quantized feature vectors through the AOT model
+    /// under a *uniform* configuration.
     ///
     /// Inputs longer than the largest compiled batch are chunked; short
     /// chunks are padded and the padding discarded.
@@ -150,15 +179,16 @@ impl Engine {
                 x_data[i * N_FEATURES + j] = v as i32;
             }
         }
-        let w = &self.weights;
+        let l0 = self.weights.layer(0);
+        let l1 = self.weights.layer(1);
         let to_i32 = |v: &[u8]| -> Vec<i32> { v.iter().map(|&e| e as i32).collect() };
         let x_lit = xla::Literal::vec1(&x_data).reshape(&[b as i64, N_FEATURES as i64])?;
-        let w1_lit = xla::Literal::vec1(&to_i32(&w.w1))
+        let w1_lit = xla::Literal::vec1(&to_i32(&l0.w))
             .reshape(&[N_FEATURES as i64, N_HIDDEN as i64])?;
-        let b1_lit = xla::Literal::vec1(&to_i32(&w.b1));
+        let b1_lit = xla::Literal::vec1(&to_i32(&l0.b));
         let w2_lit =
-            xla::Literal::vec1(&to_i32(&w.w2)).reshape(&[N_HIDDEN as i64, N_OUTPUTS as i64])?;
-        let b2_lit = xla::Literal::vec1(&to_i32(&w.b2));
+            xla::Literal::vec1(&to_i32(&l1.w)).reshape(&[N_HIDDEN as i64, N_OUTPUTS as i64])?;
+        let b2_lit = xla::Literal::vec1(&to_i32(&l1.b));
         let cfg_lit = xla::Literal::vec1(&[cfg.index() as i32]);
 
         let result = be
@@ -171,13 +201,9 @@ impl Engine {
         anyhow::ensure!(logits.len() == b * N_OUTPUTS, "bad logits size");
         anyhow::ensure!(hidden.len() == b * N_HIDDEN, "bad hidden size");
         for i in 0..xs.len() {
-            let row = &logits[i * N_OUTPUTS..(i + 1) * N_OUTPUTS];
-            let mut l = [0i32; N_OUTPUTS];
-            l.copy_from_slice(row);
-            let mut h = [0i32; N_HIDDEN];
-            h.copy_from_slice(&hidden[i * N_HIDDEN..(i + 1) * N_HIDDEN]);
-            out.preds
-                .push(crate::datapath::neuron::argmax(&l) as u8);
+            let l = logits[i * N_OUTPUTS..(i + 1) * N_OUTPUTS].to_vec();
+            let h = hidden[i * N_HIDDEN..(i + 1) * N_HIDDEN].to_vec();
+            out.preds.push(crate::datapath::neuron::argmax(&l) as u8);
             out.logits.push(l);
             out.hidden.push(h);
         }
@@ -226,6 +252,7 @@ impl Engine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
     let proto = xla::HloModuleProto::from_text_file(
         path.to_str().context("non-utf8 artifact path")?,
@@ -234,6 +261,7 @@ fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedE
     Ok(client.compile(&comp)?)
 }
 
+#[cfg(feature = "pjrt")]
 fn load_weights_f32(path: &Path) -> Result<WeightsF32> {
     let j = Json::from_file(path)?;
     let get = |k: &str| -> Result<Vec<f32>> {
@@ -245,6 +273,43 @@ fn load_weights_f32(path: &Path) -> Result<WeightsF32> {
         w2: get("w2")?,
         b2: get("b2")?,
     })
+}
+
+/// Stub engine compiled when the `pjrt` feature is off: `load` always
+/// fails with an actionable message (after the same manifest check, so
+/// error-path behavior matches the real engine), and the type cannot be
+/// constructed, which keeps every downstream signature identical.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    never: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    pub fn load(artifacts: &Path) -> Result<Engine> {
+        Json::from_file(&artifacts.join("manifest.json"))
+            .context("loading artifact manifest")?;
+        anyhow::bail!(
+            "pjrt support not compiled into this build (enable the `pjrt` cargo feature to \
+             execute the AOT HLO artifacts; the native backend serves the same model bit-exactly)"
+        )
+    }
+
+    pub fn weights(&self) -> &QuantWeights {
+        match self.never {}
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        match self.never {}
+    }
+
+    pub fn execute(&self, _xs: &[[u8; N_FEATURES]], _cfg: Config) -> Result<BatchOutput> {
+        match self.never {}
+    }
+
+    pub fn execute_ref_f32(&self, _xs: &[[u8; N_FEATURES]]) -> Result<Vec<[f32; N_OUTPUTS]>> {
+        match self.never {}
+    }
 }
 
 /// Default artifacts directory: `$ECMAC_ARTIFACTS` or `./artifacts`.

@@ -179,6 +179,24 @@ impl Bencher {
         self.results.push(res);
     }
 
+    /// Look up a completed result by exact name.
+    pub fn result(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Mean-time speedup of `new` relative to `base` (> 1 means `new`
+    /// is faster).  `None` when either bench was filtered out.
+    pub fn speedup(&self, base: &str, new: &str) -> Option<f64> {
+        Some(self.result(base)?.mean_ns / self.result(new)?.mean_ns)
+    }
+
+    /// Print a speedup comparison line (no-op when filtered out).
+    pub fn report_speedup(&self, base: &str, new: &str) {
+        if let Some(s) = self.speedup(base, new) {
+            println!("  -> {new} is {s:.2}x vs {base}");
+        }
+    }
+
     /// Print the summary table and write JSON if configured.
     pub fn finish(self) {
         println!("\n{:-<100}", "");

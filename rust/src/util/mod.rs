@@ -1,10 +1,11 @@
 //! Shared substrate utilities built from scratch for the offline crate
-//! set: JSON, PRNGs, CLI parsing, thread pool/channels, statistics and
-//! the idx dataset container.
+//! set: JSON, PRNGs, CLI parsing, thread pool/channels, statistics, the
+//! idx dataset container, and the sign-magnitude encoding helpers.
 
 pub mod cli;
 pub mod idx;
 pub mod json;
 pub mod rng;
+pub mod signmag;
 pub mod stats;
 pub mod threadpool;

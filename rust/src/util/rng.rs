@@ -3,7 +3,7 @@
 //! SplitMix64 seeds PCG32; PCG32 is the workhorse for workload
 //! generation, the property-testing framework, and the benchmark
 //! harness.  Everything downstream of a seed is fully deterministic, so
-//! experiments in EXPERIMENTS.md are exactly reproducible.
+//! experiments in DESIGN.md are exactly reproducible.
 
 /// SplitMix64 — tiny, solid seeder (Steele et al., "Fast Splittable PRNGs").
 #[derive(Debug, Clone)]

@@ -1,0 +1,128 @@
+//! Sign-magnitude (MSB = sign, low 7 bits = magnitude) encoding helpers.
+//!
+//! This is the *single* home of the encoding logic: the multiplier model
+//! (`amul`), the datapath, the weights loader and the report emitters all
+//! decode the same 8-bit format, and before this module each grew its own
+//! copy of the bit-twiddling.  `amul::sm` re-exports this module so the
+//! historical `sm::decode` call sites keep working.
+
+/// Maximum magnitude representable (7 bits).
+pub const MAG_MAX: u32 = 127;
+
+/// Encode a signed integer in [-127, 127].
+#[inline]
+pub fn encode(v: i32) -> u8 {
+    debug_assert!(v.unsigned_abs() <= MAG_MAX);
+    if v < 0 {
+        (0x80 | (-v)) as u8
+    } else {
+        v as u8
+    }
+}
+
+/// Decode an 8-bit sign-magnitude value (0x80, "negative zero", decodes
+/// to 0).
+#[inline]
+pub fn decode(enc: u8) -> i32 {
+    let mag = (enc & 0x7F) as i32;
+    if enc & 0x80 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Sign bit (0 or 1).
+#[inline]
+pub fn sign(enc: u8) -> u32 {
+    (enc >> 7) as u32
+}
+
+/// Magnitude bits.
+#[inline]
+pub fn mag(enc: u8) -> u32 {
+    (enc & 0x7F) as u32
+}
+
+/// Apply the product sign to an unsigned magnitude: the result is
+/// negative exactly when the operand signs differ and the magnitude is
+/// non-zero (the MAC's XOR sign logic; zero never becomes -0).
+///
+/// Branchless: `neg` is 0 or -1, `(mag ^ neg) - neg` negates exactly
+/// when `neg == -1`.  This is the one implementation shared by the
+/// bit-level model, the product tables and the table-row hot path.
+#[inline(always)]
+pub fn apply_sign(product_mag: i32, x: u8, w: u8) -> i32 {
+    let neg = -((((x ^ w) >> 7) & 1) as i32);
+    (product_mag ^ neg) - neg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{check, gen_i64, gen_tuple2};
+
+    #[test]
+    fn roundtrip_exhaustive() {
+        for v in -127..=127 {
+            assert_eq!(decode(encode(v)), v);
+        }
+    }
+
+    #[test]
+    fn negative_zero_decodes_to_zero() {
+        assert_eq!(decode(0x80), 0);
+        // and the canonical encoding of 0 is +0
+        assert_eq!(encode(0), 0);
+    }
+
+    #[test]
+    fn sign_and_mag_split_the_byte() {
+        for enc in 0..=255u8 {
+            assert_eq!((sign(enc) << 7) | mag(enc), enc as u32);
+            assert_eq!(decode(enc), if sign(enc) == 1 { -(mag(enc) as i32) } else { mag(enc) as i32 });
+        }
+    }
+
+    #[test]
+    fn apply_sign_matches_branchy_reference_exhaustively() {
+        // exhaustive over both sign bits and a magnitude sweep
+        for x in [0u8, 1, 0x7F, 0x80, 0x81, 0xFF] {
+            for w in [0u8, 1, 0x7F, 0x80, 0x81, 0xFF] {
+                for m in [0i32, 1, 500, 16129] {
+                    let want = if (sign(x) ^ sign(w)) != 0 && m != 0 { -m } else { m };
+                    assert_eq!(apply_sign(m, x, w), want, "x={x:#x} w={w:#x} m={m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        check("signmag roundtrip", 500, gen_i64(-127, 127), |&v| {
+            decode(encode(v as i32)) == v as i32
+        });
+    }
+
+    #[test]
+    fn prop_apply_sign_is_sign_xor() {
+        check(
+            "apply_sign = XOR of operand signs",
+            2000,
+            gen_tuple2(
+                gen_tuple2(gen_i64(-127, 127), gen_i64(-127, 127)),
+                gen_i64(0, 16129),
+            ),
+            |&((x, w), m)| {
+                let xe = encode(x as i32);
+                let we = encode(w as i32);
+                let p = apply_sign(m as i32, xe, we);
+                if m == 0 {
+                    p == 0
+                } else {
+                    (p < 0) == ((x < 0) != (w < 0))
+                }
+            },
+        );
+    }
+}

@@ -1,36 +1,331 @@
-//! Quantized model parameters (`weights_q.json` from the AOT pipeline).
+//! Quantized model parameters and the network topology.
 //!
 //! All values are 8-bit sign-magnitude encodings at scale 1/128, exactly
-//! what the hardware's weight/bias memories hold.
+//! what the hardware's weight/bias memories hold.  Since the
+//! topology-parametric refactor (see DESIGN.md §Topology) the parameters
+//! are stored per layer: [`QuantWeights::layers`] is a vector of
+//! [`LayerWeights`], one per weight matrix, and [`Topology`] describes
+//! the layer sizes and activations.  The paper's fixed 62-30-10 network
+//! is [`Topology::seed`] and remains the default everywhere — golden
+//! vectors, HLO artifacts and the paper-comparison numbers are all
+//! bit-identical to the pre-refactor pipeline.
 
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::path::Path;
 
+/// Seed input layer width (the paper's 62 reduced features).
 pub const N_INPUTS: usize = 62;
+/// Seed hidden layer width.
 pub const N_HIDDEN: usize = 30;
+/// Seed output layer width.
 pub const N_OUTPUTS: usize = 10;
-/// Physical neurons on the die; hidden layer runs in 3 passes, output in 1.
+/// Physical neurons on the die; a layer of width W runs in
+/// ceil(W / N_PHYSICAL) passes.
 pub const N_PHYSICAL: usize = 10;
 
-/// Quantized network parameters.
+/// Per-layer activation function.
+///
+/// The hardware's inter-layer register banks are 8-bit, so every
+/// non-final layer must produce a saturated 7-bit activation
+/// ([`Activation::ReluSat`]); only the final layer may emit raw 21-bit
+/// accumulator values ([`Activation::Identity`], the logits feeding the
+/// max circuit).  [`Topology::new`] enforces this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    /// ReLU folded into the `clamp(acc >> 7, 0, 127)` saturation stage.
+    ReluSat,
+    /// Raw accumulator output (logits).
+    Identity,
+}
+
+/// An MLP topology: layer sizes plus the activation after each weight
+/// layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    sizes: Vec<usize>,
+    activations: Vec<Activation>,
+}
+
+impl Topology {
+    /// Build a topology from layer sizes (`[inputs, hidden..., outputs]`)
+    /// with the hardware-default activations: `ReluSat` after every
+    /// hidden layer, `Identity` on the output layer.
+    pub fn new(sizes: Vec<usize>) -> Result<Topology> {
+        let n_layers = sizes.len().saturating_sub(1);
+        let mut activations = vec![Activation::ReluSat; n_layers];
+        if let Some(last) = activations.last_mut() {
+            *last = Activation::Identity;
+        }
+        Self::with_activations(sizes, activations)
+    }
+
+    /// Build a topology with explicit activations (one per weight layer).
+    pub fn with_activations(sizes: Vec<usize>, activations: Vec<Activation>) -> Result<Topology> {
+        anyhow::ensure!(
+            sizes.len() >= 2,
+            "topology needs at least input and output sizes, got {:?}",
+            sizes
+        );
+        anyhow::ensure!(
+            sizes.iter().all(|&s| s > 0),
+            "topology sizes must be positive, got {:?}",
+            sizes
+        );
+        // i32 accumulator headroom: fan_in * 127 * 127 + bias << 7 must
+        // never overflow (65536 * 16129 + 16256 < 2^31).
+        anyhow::ensure!(
+            sizes.iter().all(|&s| s <= 65536),
+            "layer sizes above 65536 overflow the i32 accumulator model, got {:?}",
+            sizes
+        );
+        // The controller's pass counter and weight-bank select (wsel)
+        // are 8-bit, matching the hardware's config registers.
+        let total_passes: usize = sizes[1..].iter().map(|&w| w.div_ceil(N_PHYSICAL)).sum();
+        anyhow::ensure!(
+            total_passes <= 255,
+            "topology needs {total_passes} neuron-array passes; the 8-bit \
+             pass/bank-select registers support at most 255"
+        );
+        anyhow::ensure!(
+            activations.len() == sizes.len() - 1,
+            "need {} activations for {} sizes, got {}",
+            sizes.len() - 1,
+            sizes.len(),
+            activations.len()
+        );
+        // 8-bit inter-layer registers: every hidden layer must saturate,
+        // and the max circuit compares raw accumulators, so the final
+        // layer must be Identity.
+        for (l, act) in activations.iter().enumerate() {
+            if l + 1 < activations.len() {
+                anyhow::ensure!(
+                    *act == Activation::ReluSat,
+                    "layer {l} must use ReluSat (8-bit inter-layer registers)"
+                );
+            } else {
+                anyhow::ensure!(
+                    *act == Activation::Identity,
+                    "the final layer must be Identity (raw logits feed the max circuit)"
+                );
+            }
+        }
+        Ok(Topology { sizes, activations })
+    }
+
+    /// The paper's 62-30-10 network.
+    pub fn seed() -> Topology {
+        Topology::new(vec![N_INPUTS, N_HIDDEN, N_OUTPUTS]).expect("seed topology is valid")
+    }
+
+    /// Parse a `--topology`-style spec: `"62,30,10"`.
+    pub fn parse(s: &str) -> Result<Topology> {
+        let sizes: Vec<usize> = s
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .with_context(|| format!("bad layer size '{t}'"))
+            })
+            .collect::<Result<_>>()?;
+        Topology::new(sizes)
+    }
+
+    /// Layer sizes, `[inputs, hidden..., outputs]`.
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Number of weight layers.
+    pub fn n_layers(&self) -> usize {
+        self.sizes.len() - 1
+    }
+
+    /// Input width.
+    pub fn inputs(&self) -> usize {
+        self.sizes[0]
+    }
+
+    /// Output width.
+    pub fn outputs(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Fan-in of weight layer `l`.
+    pub fn layer_in(&self, l: usize) -> usize {
+        self.sizes[l]
+    }
+
+    /// Fan-out (width) of weight layer `l`.
+    pub fn layer_out(&self, l: usize) -> usize {
+        self.sizes[l + 1]
+    }
+
+    /// Activation after weight layer `l`.
+    pub fn activation(&self, l: usize) -> Activation {
+        self.activations[l]
+    }
+
+    /// Total hidden units (outputs of all non-final layers) — the size
+    /// of the concatenated activation-register banks.
+    pub fn hidden_units(&self) -> usize {
+        self.sizes[1..self.sizes.len() - 1].iter().sum()
+    }
+
+    /// Passes needed to run layer `l` on the physical neuron array.
+    pub fn passes(&self, l: usize) -> usize {
+        self.layer_out(l).div_ceil(N_PHYSICAL)
+    }
+
+    /// Cycles the FSM spends on layer `l`: each pass streams the fan-in
+    /// plus one epilogue cycle (bias/activation/store, or the max-circuit
+    /// cycle on the final layer).
+    pub fn layer_cycles(&self, l: usize) -> u64 {
+        self.passes(l) as u64 * (self.layer_in(l) as u64 + 1)
+    }
+
+    /// Total cycles to classify one image (220 for the seed topology).
+    pub fn cycles_per_image(&self) -> u64 {
+        (0..self.n_layers()).map(|l| self.layer_cycles(l)).sum()
+    }
+
+    /// Whether this is the paper's seed 62-30-10 network.
+    pub fn is_seed(&self) -> bool {
+        self.sizes == [N_INPUTS, N_HIDDEN, N_OUTPUTS]
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s: Vec<String> = self.sizes.iter().map(|v| v.to_string()).collect();
+        write!(f, "{}", s.join("-"))
+    }
+}
+
+/// One weight layer: a row-major `(n_in, n_out)` matrix plus `n_out`
+/// biases, all 8-bit sign-magnitude.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Row-major weights: `w[i * n_out + j]` connects input `i` to
+    /// output `j` (input-major so the forward pass reads contiguously).
+    pub w: Vec<u8>,
+    /// Biases, one per output.
+    pub b: Vec<u8>,
+}
+
+impl LayerWeights {
+    pub fn new(n_in: usize, n_out: usize, w: Vec<u8>, b: Vec<u8>) -> Result<LayerWeights> {
+        anyhow::ensure!(
+            w.len() == n_in * n_out,
+            "weight matrix: expected {}x{}={} values, got {}",
+            n_in,
+            n_out,
+            n_in * n_out,
+            w.len()
+        );
+        anyhow::ensure!(b.len() == n_out, "biases: expected {n_out}, got {}", b.len());
+        Ok(LayerWeights { n_in, n_out, w, b })
+    }
+
+    /// Weight from input `i` to output `j`.
+    #[inline]
+    pub fn w_at(&self, i: usize, j: usize) -> u8 {
+        self.w[i * self.n_out + j]
+    }
+
+    /// The weight row of input `i` (all outputs).
+    #[inline]
+    pub fn w_row(&self, i: usize) -> &[u8] {
+        &self.w[i * self.n_out..(i + 1) * self.n_out]
+    }
+}
+
+/// Quantized network parameters for an arbitrary [`Topology`].
 #[derive(Debug, Clone)]
 pub struct QuantWeights {
-    /// Hidden weights, row-major (62, 30).
-    pub w1: Vec<u8>,
-    /// Hidden biases (30).
-    pub b1: Vec<u8>,
-    /// Output weights, row-major (30, 10).
-    pub w2: Vec<u8>,
-    /// Output biases (10).
-    pub b2: Vec<u8>,
+    pub topology: Topology,
+    /// One entry per weight layer, input side first.
+    pub layers: Vec<LayerWeights>,
 }
 
 impl QuantWeights {
+    /// Assemble from per-layer parts, shape-checked against `topology`.
+    pub fn new(topology: Topology, layers: Vec<LayerWeights>) -> Result<QuantWeights> {
+        anyhow::ensure!(
+            layers.len() == topology.n_layers(),
+            "{} weight layers for topology {topology}",
+            layers.len()
+        );
+        for (l, lw) in layers.iter().enumerate() {
+            anyhow::ensure!(
+                lw.n_in == topology.layer_in(l) && lw.n_out == topology.layer_out(l),
+                "layer {l}: shape ({}, {}) does not match topology {topology}",
+                lw.n_in,
+                lw.n_out
+            );
+        }
+        Ok(QuantWeights { topology, layers })
+    }
+
+    /// Seed-shaped (62-30-10) network from the classic four tensors.
+    pub fn two_layer(w1: Vec<u8>, b1: Vec<u8>, w2: Vec<u8>, b2: Vec<u8>) -> QuantWeights {
+        let topo = Topology::seed();
+        QuantWeights::new(
+            topo,
+            vec![
+                LayerWeights::new(N_INPUTS, N_HIDDEN, w1, b1).expect("w1/b1 shape"),
+                LayerWeights::new(N_HIDDEN, N_OUTPUTS, w2, b2).expect("w2/b2 shape"),
+            ],
+        )
+        .expect("seed shapes")
+    }
+
+    /// Deterministic pseudo-random network for a topology (valid
+    /// sign-magnitude values, no negative zero) — test/demo workloads
+    /// for topologies without trained artifacts.
+    pub fn random(topology: &Topology, seed: u64) -> QuantWeights {
+        let mut rng = crate::util::rng::Pcg32::new(seed);
+        let mut gen = |n: usize| -> Vec<u8> {
+            (0..n)
+                .map(|_| {
+                    let mag = rng.below(128) as u8;
+                    if mag == 0 {
+                        0
+                    } else {
+                        ((rng.below(2) as u8) << 7) | mag
+                    }
+                })
+                .collect()
+        };
+        let layers = (0..topology.n_layers())
+            .map(|l| {
+                let (n_in, n_out) = (topology.layer_in(l), topology.layer_out(l));
+                LayerWeights {
+                    n_in,
+                    n_out,
+                    w: gen(n_in * n_out),
+                    b: gen(n_out),
+                }
+            })
+            .collect();
+        QuantWeights {
+            topology: topology.clone(),
+            layers,
+        }
+    }
+
+    /// Load from JSON.  Two formats are accepted:
+    ///
+    /// * the seed artifact format `{"w1":..,"b1":..,"w2":..,"b2":..}`
+    ///   (fixed 62-30-10), emitted by `python/compile/aot.py`;
+    /// * the general format
+    ///   `{"topology":[62,30,10],"layers":[{"w":..,"b":..},..]}`.
     pub fn load(path: &Path) -> Result<QuantWeights> {
         let j = Json::from_file(path).context("loading quantized weights")?;
-        let field = |name: &str, want_len: usize| -> Result<Vec<u8>> {
-            let v = j.req(name)?.flat_i32()?;
+        let to_u8 = |j: &Json, name: &str, want_len: usize| -> Result<Vec<u8>> {
+            let v = j.flat_i32()?;
             anyhow::ensure!(
                 v.len() == want_len,
                 "{name}: expected {want_len} values, got {}",
@@ -43,13 +338,42 @@ impl QuantWeights {
                 })
                 .collect()
         };
-        let w = QuantWeights {
-            w1: field("w1", N_INPUTS * N_HIDDEN)?,
-            b1: field("b1", N_HIDDEN)?,
-            w2: field("w2", N_HIDDEN * N_OUTPUTS)?,
-            b2: field("b2", N_OUTPUTS)?,
-        };
-        Ok(w)
+        if j.get("layers").is_some() {
+            let sizes: Vec<usize> = j
+                .req("topology")?
+                .flat_i32()?
+                .into_iter()
+                .map(|v| v as usize)
+                .collect();
+            let topo = Topology::new(sizes)?;
+            let arr = j
+                .req("layers")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'layers' must be an array"))?;
+            anyhow::ensure!(
+                arr.len() == topo.n_layers(),
+                "{} layer entries for topology {topo}",
+                arr.len()
+            );
+            let mut layers = Vec::with_capacity(arr.len());
+            for (l, lj) in arr.iter().enumerate() {
+                let (n_in, n_out) = (topo.layer_in(l), topo.layer_out(l));
+                layers.push(LayerWeights {
+                    n_in,
+                    n_out,
+                    w: to_u8(lj.req("w")?, "w", n_in * n_out)?,
+                    b: to_u8(lj.req("b")?, "b", n_out)?,
+                });
+            }
+            QuantWeights::new(topo, layers)
+        } else {
+            Ok(QuantWeights::two_layer(
+                to_u8(j.req("w1")?, "w1", N_INPUTS * N_HIDDEN)?,
+                to_u8(j.req("b1")?, "b1", N_HIDDEN)?,
+                to_u8(j.req("w2")?, "w2", N_HIDDEN * N_OUTPUTS)?,
+                to_u8(j.req("b2")?, "b2", N_OUTPUTS)?,
+            ))
+        }
     }
 
     /// Load from the conventional artifacts location.
@@ -57,16 +381,10 @@ impl QuantWeights {
         Self::load(&artifacts.join("weights_q.json"))
     }
 
-    /// Hidden weight w1[input][hidden].
+    /// Weight layer `l`.
     #[inline]
-    pub fn w1_at(&self, input: usize, hidden: usize) -> u8 {
-        self.w1[input * N_HIDDEN + hidden]
-    }
-
-    /// Output weight w2[hidden][output].
-    #[inline]
-    pub fn w2_at(&self, hidden: usize, output: usize) -> u8 {
-        self.w2[hidden * N_OUTPUTS + output]
+    pub fn layer(&self, l: usize) -> &LayerWeights {
+        &self.layers[l]
     }
 }
 
@@ -91,16 +409,43 @@ mod tests {
     }
 
     #[test]
-    fn loads_and_indexes() {
+    fn loads_seed_format_and_indexes() {
         let dir = std::env::temp_dir().join("ecmac_weights_test");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("w.json");
         std::fs::write(&p, fake_weights_json()).unwrap();
         let w = QuantWeights::load(&p).unwrap();
-        assert_eq!(w.w1.len(), N_INPUTS * N_HIDDEN);
-        assert_eq!(w.w1_at(0, 5), 5);
-        assert_eq!(w.w1_at(1, 0), (N_HIDDEN % 200) as u8);
-        assert_eq!(w.w2_at(1, 1), ((N_OUTPUTS + 1) % 200) as u8);
+        assert!(w.topology.is_seed());
+        assert_eq!(w.layers.len(), 2);
+        assert_eq!(w.layer(0).w.len(), N_INPUTS * N_HIDDEN);
+        assert_eq!(w.layer(0).w_at(0, 5), 5);
+        assert_eq!(w.layer(0).w_at(1, 0), (N_HIDDEN % 200) as u8);
+        assert_eq!(w.layer(1).w_at(1, 1), ((N_OUTPUTS + 1) % 200) as u8);
+    }
+
+    #[test]
+    fn loads_general_layer_format() {
+        let dir = std::env::temp_dir().join("ecmac_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("deep.json");
+        let arr = |n: usize| {
+            format!(
+                "[{}]",
+                (0..n).map(|i| (i % 100).to_string()).collect::<Vec<_>>().join(",")
+            )
+        };
+        let body = format!(
+            r#"{{"topology":[4,4,3],"layers":[{{"w":{},"b":{}}},{{"w":{},"b":{}}}]}}"#,
+            arr(16),
+            arr(4),
+            arr(12),
+            arr(3)
+        );
+        std::fs::write(&p, body).unwrap();
+        let w = QuantWeights::load(&p).unwrap();
+        assert_eq!(w.topology.sizes(), &[4, 4, 3]);
+        assert_eq!(w.layer(1).n_out, 3);
+        assert_eq!(w.layer(0).w_row(1), &[4, 5, 6, 7]);
     }
 
     #[test]
@@ -110,5 +455,77 @@ mod tests {
         let p = dir.join("bad.json");
         std::fs::write(&p, r#"{"w1":[1,2],"b1":[],"w2":[],"b2":[]}"#).unwrap();
         assert!(QuantWeights::load(&p).is_err());
+        let p2 = dir.join("bad2.json");
+        std::fs::write(
+            &p2,
+            r#"{"topology":[4,3],"layers":[{"w":[1,2,3],"b":[0,0,0]}]}"#,
+        )
+        .unwrap();
+        assert!(QuantWeights::load(&p2).is_err());
+    }
+
+    #[test]
+    fn topology_accounting() {
+        let t = Topology::seed();
+        assert_eq!(t.n_layers(), 2);
+        assert_eq!(t.inputs(), 62);
+        assert_eq!(t.outputs(), 10);
+        assert_eq!(t.hidden_units(), 30);
+        assert_eq!(t.passes(0), 3);
+        assert_eq!(t.passes(1), 1);
+        // 3 * (62 + 1) + 1 * (30 + 1) = 220, the paper's cycle count
+        assert_eq!(t.cycles_per_image(), 220);
+        assert_eq!(t.to_string(), "62-30-10");
+        assert!(t.is_seed());
+
+        let deep = Topology::parse("62,20,20,10").unwrap();
+        assert_eq!(deep.n_layers(), 3);
+        assert_eq!(deep.hidden_units(), 40);
+        assert_eq!(deep.passes(0), 2);
+        // 2*(62+1) + 2*(20+1) + 1*(20+1) = 126 + 42 + 21 = 189
+        assert_eq!(deep.cycles_per_image(), 189);
+        assert_eq!(deep.activation(0), Activation::ReluSat);
+        assert_eq!(deep.activation(2), Activation::Identity);
+        assert!(!deep.is_seed());
+
+        let iris = Topology::parse("4,4,3").unwrap();
+        assert_eq!(iris.cycles_per_image(), 10);
+        assert_eq!(iris.passes(0), 1);
+    }
+
+    #[test]
+    fn topology_rejects_degenerate() {
+        assert!(Topology::new(vec![62]).is_err());
+        assert!(Topology::new(vec![62, 0, 10]).is_err());
+        assert!(Topology::parse("62,x,10").is_err());
+        // 8-bit pass/bank-select bound: 2600-wide layer needs 260 passes
+        assert!(Topology::parse("62,2600,10").is_err());
+        // ...and the bound is on total passes across layers
+        assert!(Topology::parse("62,1300,1300,10").is_err());
+        assert!(Topology::parse("62,1280,1260,10").is_ok());
+        // accumulator headroom bound on any size (including inputs)
+        assert!(Topology::new(vec![70000, 10]).is_err());
+        assert!(Topology::new(vec![65536, 10]).is_ok());
+        // identity activation on a hidden layer violates the 8-bit regs
+        assert!(Topology::with_activations(
+            vec![4, 4, 3],
+            vec![Activation::Identity, Activation::Identity]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn random_weights_are_valid_signmag() {
+        let t = Topology::parse("62,20,20,10").unwrap();
+        let w = QuantWeights::random(&t, 42);
+        assert_eq!(w.layers.len(), 3);
+        for lw in &w.layers {
+            assert_eq!(lw.w.len(), lw.n_in * lw.n_out);
+            // no negative zero
+            assert!(lw.w.iter().chain(&lw.b).all(|&v| v != 0x80));
+        }
+        // deterministic
+        let w2 = QuantWeights::random(&t, 42);
+        assert_eq!(w.layer(1).w, w2.layer(1).w);
     }
 }

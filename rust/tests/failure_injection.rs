@@ -122,17 +122,22 @@ fn invalid_config_values_rejected_everywhere() {
 
 #[test]
 fn backend_failure_closes_reply_channels_instead_of_hanging() {
-    struct FailingBackend;
+    struct FailingBackend {
+        topo: ecmac::weights::Topology,
+    }
     impl Backend for FailingBackend {
         fn execute(
             &self,
             _: &[[u8; 62]],
-            _: Config,
-        ) -> anyhow::Result<Vec<([i32; 10], u8)>> {
+            _: &ecmac::amul::ConfigSchedule,
+        ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
             anyhow::bail!("injected backend failure")
         }
         fn name(&self) -> &'static str {
             "failing"
+        }
+        fn topology(&self) -> &ecmac::weights::Topology {
+            &self.topo
         }
     }
     let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(200, 1)).unwrap();
@@ -145,7 +150,9 @@ fn backend_failure_closes_reply_channels_instead_of_hanging() {
             queue_capacity: 64,
             workers: 1,
         },
-        Arc::new(FailingBackend) as Arc<dyn Backend>,
+        Arc::new(FailingBackend {
+            topo: ecmac::weights::Topology::seed(),
+        }) as Arc<dyn Backend>,
         gov,
         pm,
     );
@@ -180,7 +187,7 @@ fn governor_handles_nan_accuracy_rows() {
     let acc = AccuracyTable::new(vec![f64::NAN; ecmac::amul::N_CONFIGS]);
     let g = Governor::new(Policy::PowerBudget { budget_mw: 5.0 }, &pm, &acc);
     // must pick *something* in range
-    assert!(g.current().index() <= 32);
+    assert!(g.current_uniform().expect("budget policy is uniform").index() <= 32);
 }
 
 #[test]
@@ -190,12 +197,12 @@ fn submit_after_shutdown_returns_none() {
     let gov = Governor::new(Policy::Fixed(Config::ACCURATE), &pm, &acc);
     let mut rng = Pcg32::new(5);
     let mut gen = |n: usize| -> Vec<u8> { (0..n).map(|_| rng.below(255) as u8).collect() };
-    let net = ecmac::datapath::Network::new(QuantWeights {
-        w1: gen(62 * 30),
-        b1: gen(30),
-        w2: gen(30 * 10),
-        b2: gen(10),
-    });
+    let net = ecmac::datapath::Network::new(QuantWeights::two_layer(
+        gen(62 * 30),
+        gen(30),
+        gen(30 * 10),
+        gen(10),
+    ));
     let coord = Coordinator::start(
         CoordinatorConfig::default(),
         Arc::new(NativeBackend { network: net }) as Arc<dyn Backend>,

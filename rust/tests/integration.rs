@@ -122,7 +122,8 @@ fn coordinator_end_to_end_with_real_model() {
     let acc = AccuracyTable::load(&dir.join("accuracy_sweep.json")).unwrap();
     let gov = Governor::new(Policy::PowerBudget { budget_mw: 5.2 }, &pm, &acc);
     let chosen = gov.current();
-    assert!(!chosen.is_accurate(), "5.2 mW budget forces approximation");
+    let chosen_cfg = chosen.as_uniform().expect("budget policies pick uniform schedules");
+    assert!(!chosen_cfg.is_accurate(), "5.2 mW budget forces approximation");
 
     let coord = Coordinator::start(
         CoordinatorConfig {
@@ -143,7 +144,7 @@ fn coordinator_end_to_end_with_real_model() {
     }
     for (i, r) in replies.into_iter().enumerate() {
         let resp = r.recv().expect("response");
-        assert_eq!(resp.cfg, chosen);
+        assert_eq!(resp.sched, chosen);
         if resp.pred == ds.labels[i] {
             correct += 1;
         }

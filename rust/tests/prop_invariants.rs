@@ -134,12 +134,12 @@ fn random_network(seed: u64) -> Network {
             })
             .collect()
     };
-    Network::new(QuantWeights {
-        w1: gen(62 * 30),
-        b1: gen(30),
-        w2: gen(30 * 10),
-        b2: gen(10),
-    })
+    Network::new(QuantWeights::two_layer(
+        gen(62 * 30),
+        gen(30),
+        gen(30 * 10),
+        gen(10),
+    ))
 }
 
 #[test]
@@ -280,7 +280,8 @@ fn prop_governor_budget_monotone() {
             let hi = lo + delta as f64 / 1000.0;
             let g_lo = Governor::new(Policy::PowerBudget { budget_mw: lo }, &pm, &table);
             let g_hi = Governor::new(Policy::PowerBudget { budget_mw: hi }, &pm, &table);
-            accs[g_hi.current().index()] >= accs[g_lo.current().index()]
+            accs[g_hi.current_uniform().unwrap().index()]
+                >= accs[g_lo.current_uniform().unwrap().index()]
         },
     );
 }

@@ -1,0 +1,135 @@
+//! Topology-parametric integration tests: the public API must serve
+//! non-seed topologies and per-layer schedules end to end, with the
+//! three execution paths in bit-exact agreement.  No artifacts needed —
+//! weights are deterministic pseudo-random.
+
+use ecmac::amul::{Config, ConfigSchedule};
+use ecmac::coordinator::governor::{AccuracyTable, Governor, Policy};
+use ecmac::coordinator::{Backend, Coordinator, CoordinatorConfig, NativeBackend};
+use ecmac::datapath::{DatapathSim, Network};
+use ecmac::power::{MultiplierEnergyProfile, PowerModel};
+use ecmac::util::rng::Pcg32;
+use ecmac::weights::{QuantWeights, Topology};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn inputs_for(topo: &Topology, seed: u64, n: usize) -> Vec<Vec<u8>> {
+    let mut rng = Pcg32::new(seed);
+    (0..n)
+        .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
+        .collect()
+}
+
+#[test]
+fn deep_topology_three_paths_agree_under_per_layer_schedule() {
+    let topo = Topology::parse("62,20,20,10").unwrap();
+    let net = Network::new(QuantWeights::random(&topo, 0xA11CE));
+    let sched = ConfigSchedule::per_layer(vec![
+        Config::MAX_APPROX,
+        Config::new(16).unwrap(),
+        Config::ACCURATE,
+    ]);
+    let xs = inputs_for(&topo, 9, 32);
+    let batch = net.forward_batch(&xs, &sched);
+    let mut sim = DatapathSim::new_scheduled(&net, sched.clone());
+    for (x, r) in xs.iter().zip(&batch) {
+        assert_eq!(*r, net.forward_sched(x, &sched));
+        assert_eq!(*r, sim.run_image(x));
+    }
+    assert_eq!(sim.stats.cycles, 32 * topo.cycles_per_image());
+}
+
+#[test]
+fn coordinator_serves_deep_topology_natively() {
+    // a 62-input deep network slots into the serving path unchanged
+    let topo = Topology::parse("62,20,20,10").unwrap();
+    let backend = Arc::new(NativeBackend {
+        network: Network::new(QuantWeights::random(&topo, 77)),
+    });
+    let sched = ConfigSchedule::per_layer(vec![
+        Config::MAX_APPROX,
+        Config::MAX_APPROX,
+        Config::ACCURATE,
+    ]);
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(300, 2)).unwrap();
+    let acc = AccuracyTable::new(vec![0.9; ecmac::amul::N_CONFIGS]);
+    let gov = Governor::new(Policy::FixedSchedule(sched.clone()), &pm, &acc);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+            queue_capacity: 256,
+            workers: 2,
+        },
+        backend.clone() as Arc<dyn Backend>,
+        gov,
+        pm.clone(),
+    );
+    let mut rng = Pcg32::new(5);
+    let mut replies = Vec::new();
+    let mut expected = Vec::new();
+    for _ in 0..48 {
+        let mut x = [0u8; 62];
+        for v in x.iter_mut() {
+            *v = rng.below(128) as u8;
+        }
+        expected.push(backend.network.forward_sched(&x, &sched));
+        replies.push(coord.try_submit(x).expect("queue space"));
+    }
+    for (want, r) in expected.iter().zip(replies) {
+        let resp = r.recv().expect("response");
+        assert_eq!(resp.pred, want.pred);
+        assert_eq!(resp.logits, want.logits);
+        assert_eq!(resp.sched, sched);
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.requests, 48);
+    assert_eq!(m.mixed, 48);
+    // per-layer energy accounting: 48 images at the schedule's rate
+    let want_mj = pm.energy_per_image_nj_sched(&topo, &sched) * 48.0 * 1e-6;
+    assert!((m.energy_mj - want_mj).abs() < 1e-9, "{} vs {want_mj}", m.energy_mj);
+}
+
+#[test]
+fn accuracy_sched_self_labels_at_one() {
+    let topo = Topology::parse("4,4,3").unwrap();
+    let net = Network::new(QuantWeights::random(&topo, 3));
+    let sched = ConfigSchedule::per_layer(vec![Config::new(9).unwrap(), Config::ACCURATE]);
+    let xs = inputs_for(&topo, 31, 40);
+    let labels: Vec<u8> = xs.iter().map(|x| net.forward_sched(x, &sched).pred).collect();
+    assert_eq!(net.accuracy_sched(&xs, &labels, &sched), 1.0);
+}
+
+#[test]
+fn general_weights_json_roundtrips_through_network() {
+    // write a general-format weights file, load it, and run it
+    let topo = Topology::parse("6,5,4").unwrap();
+    let w = QuantWeights::random(&topo, 123);
+    let layer_json = |l: &ecmac::weights::LayerWeights| {
+        format!(
+            r#"{{"w":[{}],"b":[{}]}}"#,
+            l.w.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(","),
+            l.b.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+        )
+    };
+    let body = format!(
+        r#"{{"topology":[6,5,4],"layers":[{},{}]}}"#,
+        layer_json(w.layer(0)),
+        layer_json(w.layer(1))
+    );
+    let dir = std::env::temp_dir().join("ecmac_topo_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("weights_q.json");
+    std::fs::write(&path, body).unwrap();
+    let loaded = QuantWeights::load(&path).unwrap();
+    assert_eq!(loaded.topology, topo);
+    let a = Network::new(w);
+    let b = Network::new(loaded);
+    let xs = inputs_for(&topo, 8, 10);
+    for x in &xs {
+        assert_eq!(
+            a.forward(x, Config::new(21).unwrap()),
+            b.forward(x, Config::new(21).unwrap())
+        );
+    }
+}
