@@ -20,6 +20,8 @@ Artifacts written to ``--outdir`` (default ../artifacts):
   golden_mlp.json                            end-to-end MLP golden vectors
   amul_metrics.json                          exhaustive ER/MRED/NMED per config
   accuracy_sweep.json                        test accuracy for all 33 configs
+  schedule_sweep.json                        per-layer sensitivity sweep (versioned;
+                                             same schema as `ecmac sweep --per-layer`)
   manifest.json                              index of everything above
 
 Usage:  cd python && python -m compile.aot --outdir ../artifacts
@@ -156,6 +158,72 @@ def amul_metric_table():
     return rows
 
 
+SCHEDULE_SWEEP_SCHEMA = "ecmac-schedule-sweep"
+SCHEDULE_SWEEP_SCHEMA_VERSION = 1
+
+
+def _batched_accuracy(fwd, x_enc, labels, batch, *cfgs):
+    """Accuracy of a jitted argmax forward over the set, in batches.
+
+    ``fwd(xb, *cfgs)`` must return predicted labels; the shared scaffold
+    behind both the uniform and the per-layer sweeps.
+    """
+    n = len(x_enc)
+    correct = 0
+    for lo in range(0, n, batch):
+        pred = np.asarray(fwd(x_enc[lo : lo + batch], *(jnp.int32(c) for c in cfgs)))
+        correct += int(np.sum(pred == labels[lo : lo + batch]))
+    return correct / n
+
+
+def schedule_sweep(params_q, x_enc, labels, batch: int = 4096, baseline=None):
+    """Per-layer sensitivity sweep: test accuracy with one layer
+    approximated at a time (the other layer accurate), emitted in the
+    same versioned schema the native harness writes (``ecmac sweep
+    --per-layer`` -> ``schedule_sweep.json``).  The rust
+    ``SensitivityModel`` loads either producer's file.
+
+    ``baseline`` skips re-measuring the all-accurate accuracy when the
+    caller already has it (``accuracy_sweep``'s cfg-0 row is measured
+    through the identical forward pass).
+    """
+
+    @jax.jit
+    def fwd(xb, cfg_l0, cfg_l1):
+        logits, _ = ref.mlp_forward_q_sched(
+            xb,
+            params_q["w1"],
+            params_q["b1"],
+            params_q["w2"],
+            params_q["b2"],
+            cfg_l0,
+            cfg_l1,
+        )
+        return jnp.argmax(logits, axis=-1)
+
+    n = len(x_enc)
+    x_enc = jnp.asarray(x_enc, dtype=jnp.int32)
+    labels = np.asarray(labels)
+    if baseline is None:
+        baseline = _batched_accuracy(fwd, x_enc, labels, batch, 0, 0)
+    layers = []
+    for layer in range(2):
+        drop = [0.0]
+        for cfg in range(1, spec.N_CONFIGS):
+            cfgs = (cfg, 0) if layer == 0 else (0, cfg)
+            acc = _batched_accuracy(fwd, x_enc, labels, batch, *cfgs)
+            drop.append(baseline - acc)
+        layers.append({"layer": layer, "drop": drop})
+    return {
+        "schema": SCHEDULE_SWEEP_SCHEMA,
+        "schema_version": SCHEDULE_SWEEP_SCHEMA_VERSION,
+        "topology": [model.N_INPUTS, model.N_HIDDEN, model.N_OUTPUTS],
+        "images": n,
+        "baseline_accuracy": baseline,
+        "layers": layers,
+    }
+
+
 def accuracy_sweep(params_q, x_enc, labels, batch: int = 4096):
     """Quantized test accuracy for all 33 configurations (jitted)."""
 
@@ -164,17 +232,12 @@ def accuracy_sweep(params_q, x_enc, labels, batch: int = 4096):
         logits, _ = model.forward_q_ref(params_q, xb, cfg)
         return jnp.argmax(logits, axis=-1)
 
-    n = len(x_enc)
     x_enc = jnp.asarray(x_enc, dtype=jnp.int32)
     labels = np.asarray(labels)
-    accs = []
-    for cfg in range(spec.N_CONFIGS):
-        correct = 0
-        for lo in range(0, n, batch):
-            pred = np.asarray(fwd(x_enc[lo : lo + batch], jnp.int32(cfg)))
-            correct += int(np.sum(pred == labels[lo : lo + batch]))
-        accs.append({"cfg": cfg, "accuracy": correct / n})
-    return accs
+    return [
+        {"cfg": cfg, "accuracy": _batched_accuracy(fwd, x_enc, labels, batch, cfg)}
+        for cfg in range(spec.N_CONFIGS)
+    ]
 
 
 def main():
@@ -278,6 +341,16 @@ def main():
             f"[aot] accurate acc {acc0 * 100:.2f}%  worst approx {worst * 100:.2f}%"
             f"  (paper: 89.67% / 88.75%)"
         )
+        print("[aot] per-layer schedule sweep ...")
+        sched_sweep = schedule_sweep(params_q, test_mags, te_l, baseline=acc0)
+        with open(os.path.join(outdir, "schedule_sweep.json"), "w") as f:
+            json.dump(sched_sweep, f, indent=1)
+        worst_l0 = max(sched_sweep["layers"][0]["drop"])
+        worst_l1 = max(sched_sweep["layers"][1]["drop"])
+        print(
+            f"[aot] per-layer worst drop: hidden {worst_l0 * 100:.2f}pp"
+            f"  output {worst_l1 * 100:.2f}pp"
+        )
 
     manifest = {
         "network": {
@@ -308,6 +381,7 @@ def main():
         "metrics": {
             "amul": "amul_metrics.json",
             "accuracy_sweep": "accuracy_sweep.json",
+            "schedule_sweep": "schedule_sweep.json",
         },
     }
     with open(os.path.join(outdir, "manifest.json"), "w") as f:

@@ -117,8 +117,23 @@ def saturate_activation(acc):
     return jnp.clip(jnp.asarray(acc, dtype=jnp.int32) >> 7, 0, MAG_MAX)
 
 
+def mlp_forward_q_sched(x_enc, w1_enc, b1_enc, w2_enc, b2_enc, cfg_l0, cfg_l1):
+    """Quantized MLP forward with a per-layer configuration schedule.
+
+    Layer 0 (hidden) runs ``cfg_l0``, layer 1 (output) runs ``cfg_l1``
+    — the python twin of the rust ``ConfigSchedule::PerLayer`` path.
+    ``mlp_forward_q`` is the uniform special case; the per-layer
+    schedule sweep in ``compile.aot`` uses this directly so both sweeps
+    share one forward-pass definition.
+    """
+    acc1 = approx_matmul(x_enc, w1_enc, cfg_l0) + (decode_sm(b1_enc)[None, :] << 7)
+    hidden = saturate_activation(acc1)
+    acc2 = approx_matmul(hidden, w2_enc, cfg_l1) + (decode_sm(b2_enc)[None, :] << 7)
+    return acc2, hidden
+
+
 def mlp_forward_q(x_enc, w1_enc, b1_enc, w2_enc, b2_enc, cfg):
-    """Quantized hardware-faithful MLP forward pass.
+    """Quantized hardware-faithful MLP forward pass (uniform config).
 
     Args:
       x_enc:  (B, 62) int32 sign-magnitude inputs (sign bit 0).
@@ -130,10 +145,7 @@ def mlp_forward_q(x_enc, w1_enc, b1_enc, w2_enc, b2_enc, cfg):
       (logits, hidden): logits (B, 10) int32 21-bit accumulators,
       hidden (B, 30) int32 8-bit saturated activations.
     """
-    acc1 = approx_matmul(x_enc, w1_enc, cfg) + (decode_sm(b1_enc)[None, :] << 7)
-    hidden = saturate_activation(acc1)
-    acc2 = approx_matmul(hidden, w2_enc, cfg) + (decode_sm(b2_enc)[None, :] << 7)
-    return acc2, hidden
+    return mlp_forward_q_sched(x_enc, w1_enc, b1_enc, w2_enc, b2_enc, cfg, cfg)
 
 
 def mlp_forward_f32(x, w1, b1, w2, b2):

@@ -15,7 +15,9 @@
 //!       cargo bench -- --json bench.json
 
 use ecmac::amul::{metrics, mul7_approx, Config, ConfigSchedule, MulTable};
+use ecmac::coordinator::frontier::ScheduleFrontier;
 use ecmac::coordinator::governor::{AccuracyTable, Governor, Policy};
+use ecmac::coordinator::sensitivity::SensitivityModel;
 use ecmac::coordinator::{Backend, Coordinator, CoordinatorConfig, NativeBackend};
 use ecmac::dataset::Dataset;
 use ecmac::datapath::{DatapathSim, Network};
@@ -37,6 +39,7 @@ fn main() {
     bench_netlist(&mut b);
     bench_l1(&mut b);
     bench_datapath(&mut b);
+    bench_frontier(&mut b);
     bench_runtime(&mut b);
     bench_coordinator(&mut b);
 
@@ -189,6 +192,38 @@ fn bench_datapath(b: &mut Bencher) {
     let deep = Network::new(QuantWeights::random(&deep_topo, 11));
     b.throughput(64).bench("datapath/forward_batch_b64_deep_62_20_20_10", || {
         black_box(deep.forward_batch(&xs, &uni));
+    });
+}
+
+/// Schedule-space frontier: the sensitivity sweep harness and the
+/// pruned per-layer search (the governor pays the search once per
+/// sensitivity model, so both must stay cheap).
+fn bench_frontier(b: &mut Bencher) {
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(400, 5)).unwrap();
+    let topo = ecmac::weights::Topology::seed();
+    let net = Network::new(QuantWeights::random(&topo, 3));
+    let (xs, labels) = ecmac::testkit::accurate_labeled_set(&net, 32, 3);
+    // 64 per-layer accuracy evaluations over 32 images per iteration
+    b.throughput(64 * 32).bench("frontier/sensitivity_sweep_32img", || {
+        black_box(SensitivityModel::measure(&net, &xs, &labels));
+    });
+    let sens = SensitivityModel::measure(&net, &xs, &labels);
+    b.bench("frontier/search_seed_beam128", || {
+        black_box(ScheduleFrontier::search(&pm, &sens, &topo, 128));
+    });
+    // a deeper stack exercises the beam cap (synthetic sensitivities)
+    let deep = ecmac::weights::Topology::parse("62,20,20,20,10").unwrap();
+    let drop: Vec<Vec<f64>> = (0..deep.n_layers())
+        .map(|l| {
+            Config::all()
+                .map(|c| 1e-3 * (l + 1) as f64 * pm.saving_fraction(c))
+                .collect()
+        })
+        .collect();
+    let sens_deep =
+        SensitivityModel::new(deep.sizes().to_vec(), 0.9, 1000, drop).unwrap();
+    b.bench("frontier/search_deep4_beam128", || {
+        black_box(ScheduleFrontier::search(&pm, &sens_deep, &deep, 128));
     });
 }
 

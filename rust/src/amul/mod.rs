@@ -129,6 +129,14 @@ impl ConfigSchedule {
         }
     }
 
+    /// Explicit per-layer configuration vector for a network with
+    /// `n_layers` weight layers (uniform schedules fan out, per-layer
+    /// schedules clamp like [`ConfigSchedule::layer`]).  The frontier
+    /// search and reports use this to compare schedules element-wise.
+    pub fn resolve(&self, n_layers: usize) -> Vec<Config> {
+        (0..n_layers).map(|l| self.layer(l)).collect()
+    }
+
     /// Number of layers the schedule names explicitly (None = uniform).
     pub fn n_layers(&self) -> Option<usize> {
         match self {
@@ -552,6 +560,9 @@ mod tests {
         assert!(s.validate(2).is_err());
         // uniform validates against any depth
         assert!(ConfigSchedule::uniform(c9).validate(7).is_ok());
+        // resolve fans uniform out and echoes per-layer vectors
+        assert_eq!(ConfigSchedule::uniform(c9).resolve(3), vec![c9, c9, c9]);
+        assert_eq!(s.resolve(3), vec![Config::ACCURATE, c9, c17]);
     }
 
     #[test]

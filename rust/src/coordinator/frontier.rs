@@ -1,0 +1,396 @@
+//! Schedule-space frontier: a pruned search over the 33^L per-layer
+//! configuration space, yielding the Pareto set of [`ConfigSchedule`]s
+//! ranked by modeled energy per image against predicted accuracy.
+//!
+//! Both objectives decompose additively over layers — energy because
+//! the FSM spends `layer_cycles(l)` at layer `l`'s power
+//! ([`PowerModel::layer_energy_nj`]), accuracy under the
+//! [`SensitivityModel`]'s additive-degradation assumption.  The search
+//! exploits that structure:
+//!
+//! 1. **Layer-local prune** — each layer's 33 options collapse to their
+//!    local Pareto set (an option dominated within its own layer can
+//!    never appear in a globally Pareto-optimal schedule, because
+//!    swapping in its dominator improves any schedule containing it).
+//! 2. **Stage-wise beam** — partial schedules grow one layer at a time;
+//!    after each layer the partial set is Pareto-pruned on
+//!    (energy-so-far, degradation-so-far) and capped at a beam width.
+//!    The Pareto prune alone is exact (a prefix of a Pareto-optimal
+//!    schedule is prefix-Pareto-optimal); the cap only matters for deep
+//!    networks where the exact frontier outgrows the beam.
+//! 3. **Uniform injection** — all 33 uniform schedules are always added
+//!    as candidates before the final prune, so no returned point is
+//!    ever dominated by the paper's global knob (locked by property
+//!    tests).
+//!
+//! On the seed 62-30-10 network the hidden layer owns ~86% of the
+//! cycles, so the frontier is where "approximate the big layer, keep
+//! the output exact" style schedules surface as operating points the
+//! uniform knob cannot reach.
+
+use crate::amul::{Config, ConfigSchedule, N_CONFIGS};
+use crate::coordinator::governor::AccuracyTable;
+use crate::coordinator::sensitivity::SensitivityModel;
+use crate::power::PowerModel;
+use crate::weights::Topology;
+
+/// Default beam width of the stage-wise search.  Wide enough to keep
+/// the search exact for shallow networks (the seed's exact frontier has
+/// far fewer points) while bounding deep-network cost.
+pub const DEFAULT_BEAM_WIDTH: usize = 128;
+
+/// One operating point on the schedule frontier.
+#[derive(Debug, Clone)]
+pub struct SchedulePoint {
+    pub sched: ConfigSchedule,
+    /// Time-weighted average network power, mW.
+    pub power_mw: f64,
+    /// Modeled energy per classified image, nJ.
+    pub energy_nj: f64,
+    /// Predicted accuracy (sensitivity model) — measured accuracy for
+    /// frontiers built from the uniform [`AccuracyTable`].
+    pub accuracy: f64,
+}
+
+/// The Pareto frontier over configuration schedules: ascending energy,
+/// strictly increasing accuracy (no dominated points).
+#[derive(Debug, Clone)]
+pub struct ScheduleFrontier {
+    points: Vec<SchedulePoint>,
+}
+
+impl ScheduleFrontier {
+    /// Frontier over the 33 uniform configurations only (the paper's
+    /// global knob), scored with measured accuracies.
+    pub fn uniform(power: &PowerModel, table: &AccuracyTable, topo: &Topology) -> ScheduleFrontier {
+        let candidates = Config::all()
+            .map(|cfg| {
+                let sched = ConfigSchedule::uniform(cfg);
+                SchedulePoint {
+                    power_mw: power.schedule_power_mw(topo, &sched),
+                    energy_nj: power.energy_per_image_nj_sched(topo, &sched),
+                    accuracy: {
+                        let a = table.get(cfg);
+                        if a.is_nan() {
+                            0.0
+                        } else {
+                            a
+                        }
+                    },
+                    sched,
+                }
+            })
+            .collect();
+        ScheduleFrontier {
+            points: pareto(candidates),
+        }
+    }
+
+    /// Pruned search over the per-layer schedule space (see the module
+    /// docs for the algorithm).  `beam_width` bounds the partial-set
+    /// size per stage; it is clamped to at least the 33 configurations.
+    pub fn search(
+        power: &PowerModel,
+        sens: &SensitivityModel,
+        topo: &Topology,
+        beam_width: usize,
+    ) -> ScheduleFrontier {
+        assert!(
+            sens.matches(topo),
+            "sensitivity model swept {:?} but the frontier targets topology {topo}",
+            sens.sizes()
+        );
+        let width = beam_width.max(N_CONFIGS);
+        let n_layers = topo.n_layers();
+
+        #[derive(Clone)]
+        struct Partial {
+            cfgs: Vec<Config>,
+            energy_nj: f64,
+            drop: f64,
+        }
+        let mut beam = vec![Partial {
+            cfgs: Vec::new(),
+            energy_nj: 0.0,
+            drop: 0.0,
+        }];
+        for l in 0..n_layers {
+            // layer-local options, pruned to the layer's own Pareto set:
+            // ascending energy, strictly decreasing degradation
+            let mut opts: Vec<(Config, f64, f64)> = Config::all()
+                .map(|c| (c, power.layer_energy_nj(topo, l, c), sens.drop(l, c)))
+                .collect();
+            opts.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.2.partial_cmp(&b.2).unwrap()));
+            let mut local: Vec<(Config, f64, f64)> = Vec::new();
+            for o in opts {
+                if local.last().map_or(true, |p| o.2 < p.2) {
+                    local.push(o);
+                }
+            }
+            // extend every partial by every surviving option
+            let mut next: Vec<Partial> = Vec::with_capacity(beam.len() * local.len());
+            for p in &beam {
+                for &(c, e, d) in &local {
+                    let mut cfgs = p.cfgs.clone();
+                    cfgs.push(c);
+                    next.push(Partial {
+                        cfgs,
+                        energy_nj: p.energy_nj + e,
+                        drop: p.drop + d,
+                    });
+                }
+            }
+            // stage Pareto prune on (energy, degradation) + beam cap
+            next.sort_by(|a, b| {
+                a.energy_nj
+                    .partial_cmp(&b.energy_nj)
+                    .unwrap()
+                    .then(a.drop.partial_cmp(&b.drop).unwrap())
+            });
+            let mut kept: Vec<Partial> = Vec::new();
+            for p in next {
+                if kept.last().map_or(true, |k| p.drop < k.drop) {
+                    kept.push(p);
+                }
+            }
+            if kept.len() > width {
+                // keep both endpoints and an even spread between them
+                let last = kept.len() - 1;
+                let mut sampled: Vec<Partial> = (0..width)
+                    .map(|i| kept[i * last / (width - 1)].clone())
+                    .collect();
+                sampled.dedup_by(|a, b| a.cfgs == b.cfgs);
+                kept = sampled;
+            }
+            beam = kept;
+        }
+
+        let mut candidates: Vec<SchedulePoint> = beam
+            .into_iter()
+            .map(|p| {
+                // collapse trivially-uniform combinations so the uniform
+                // fast paths (single product table, PJRT) stay reachable
+                let uniform = p.cfgs.iter().all(|&c| c == p.cfgs[0]);
+                let sched = if uniform {
+                    ConfigSchedule::uniform(p.cfgs[0])
+                } else {
+                    ConfigSchedule::per_layer(p.cfgs)
+                };
+                Self::point(power, sens, topo, sched)
+            })
+            .collect();
+        for cfg in Config::all() {
+            candidates.push(Self::point(power, sens, topo, ConfigSchedule::uniform(cfg)));
+        }
+        ScheduleFrontier {
+            points: pareto(candidates),
+        }
+    }
+
+    fn point(
+        power: &PowerModel,
+        sens: &SensitivityModel,
+        topo: &Topology,
+        sched: ConfigSchedule,
+    ) -> SchedulePoint {
+        SchedulePoint {
+            power_mw: power.schedule_power_mw(topo, &sched),
+            energy_nj: power.energy_per_image_nj_sched(topo, &sched),
+            accuracy: sens.predict(&sched),
+            sched,
+        }
+    }
+
+    /// The frontier, cheapest first.
+    pub fn points(&self) -> &[SchedulePoint] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Cheapest point overall.
+    pub fn cheapest(&self) -> Option<&SchedulePoint> {
+        self.points.first()
+    }
+
+    /// Most accurate point overall.
+    pub fn most_accurate(&self) -> Option<&SchedulePoint> {
+        self.points.last()
+    }
+
+    /// Most accurate point with average power within `budget_mw`.
+    pub fn best_under_power(&self, budget_mw: f64) -> Option<&SchedulePoint> {
+        self.points.iter().rev().find(|p| p.power_mw <= budget_mw)
+    }
+
+    /// Most accurate point with per-image energy within `budget_nj`.
+    pub fn best_under_energy(&self, budget_nj: f64) -> Option<&SchedulePoint> {
+        self.points.iter().rev().find(|p| p.energy_nj <= budget_nj)
+    }
+
+    /// Cheapest point whose accuracy meets `floor`.
+    pub fn cheapest_meeting(&self, floor: f64) -> Option<&SchedulePoint> {
+        self.points.iter().find(|p| p.accuracy >= floor)
+    }
+}
+
+/// Pareto-prune to ascending energy with strictly increasing accuracy;
+/// energy ties keep the most accurate point.
+fn pareto(mut points: Vec<SchedulePoint>) -> Vec<SchedulePoint> {
+    points.sort_by(|a, b| {
+        a.energy_nj
+            .partial_cmp(&b.energy_nj)
+            .unwrap()
+            .then(b.accuracy.partial_cmp(&a.accuracy).unwrap())
+    });
+    let mut out: Vec<SchedulePoint> = Vec::new();
+    for p in points {
+        if out.last().map_or(true, |l| p.accuracy > l.accuracy) {
+            out.push(p);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::MultiplierEnergyProfile;
+
+    fn model() -> PowerModel {
+        PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(800, 3)).unwrap()
+    }
+
+    /// Synthetic sensitivity: degradation grows with the configuration's
+    /// power saving, scaled per layer.
+    fn synthetic_sens(pm: &PowerModel, scale: &[f64], sizes: Vec<usize>) -> SensitivityModel {
+        let n_layers = sizes.len() - 1;
+        assert_eq!(scale.len(), n_layers);
+        let drop: Vec<Vec<f64>> = (0..n_layers)
+            .map(|l| {
+                Config::all()
+                    .map(|c| scale[l] * pm.saving_fraction(c))
+                    .collect()
+            })
+            .collect();
+        SensitivityModel::new(sizes, 0.92, 1000, drop).unwrap()
+    }
+
+    fn assert_frontier_invariants(f: &ScheduleFrontier) {
+        assert!(!f.is_empty());
+        for w in f.points().windows(2) {
+            assert!(w[0].energy_nj <= w[1].energy_nj);
+            assert!(w[0].power_mw <= w[1].power_mw + 1e-12);
+            assert!(
+                w[0].accuracy < w[1].accuracy,
+                "accuracy must strictly increase along the frontier"
+            );
+        }
+    }
+
+    #[test]
+    fn search_matches_exhaustive_enumeration_on_two_layers() {
+        let pm = model();
+        let topo = Topology::seed();
+        let sens = synthetic_sens(&pm, &[0.004, 0.021], vec![62, 30, 10]);
+        let f = ScheduleFrontier::search(&pm, &sens, &topo, 4096);
+        assert_frontier_invariants(&f);
+        // brute force over all 33^2 schedules
+        let mut all: Vec<SchedulePoint> = Vec::new();
+        for c0 in Config::all() {
+            for c1 in Config::all() {
+                let sched = if c0 == c1 {
+                    ConfigSchedule::uniform(c0)
+                } else {
+                    ConfigSchedule::per_layer(vec![c0, c1])
+                };
+                all.push(ScheduleFrontier::point(&pm, &sens, &topo, sched));
+            }
+        }
+        let want = pareto(all);
+        assert_eq!(f.len(), want.len(), "pruned search missed frontier points");
+        for (got, want) in f.points().iter().zip(&want) {
+            assert!((got.energy_nj - want.energy_nj).abs() < 1e-9);
+            assert!((got.accuracy - want.accuracy).abs() < 1e-12);
+        }
+        // the frontier must contain non-uniform schedules: the hidden
+        // layer dominates the cycle count, so mixed points open up
+        assert!(
+            f.points().iter().any(|p| p.sched.as_uniform().is_none()),
+            "expected per-layer operating points on the frontier"
+        );
+    }
+
+    #[test]
+    fn no_point_dominated_by_a_uniform_schedule() {
+        let pm = model();
+        let topo = Topology::seed();
+        // output layer maximally sensitive, hidden layer free: the
+        // regime where per-layer schedules beat the uniform knob hardest
+        let sens = synthetic_sens(&pm, &[0.0005, 0.04], vec![62, 30, 10]);
+        let f = ScheduleFrontier::search(&pm, &sens, &topo, DEFAULT_BEAM_WIDTH);
+        assert_frontier_invariants(&f);
+        for p in f.points() {
+            for cfg in Config::all() {
+                let u = ConfigSchedule::uniform(cfg);
+                let ue = pm.energy_per_image_nj_sched(&topo, &u);
+                let ua = sens.predict(&u);
+                let dominates = (ue < p.energy_nj && ua >= p.accuracy)
+                    || (ue <= p.energy_nj && ua > p.accuracy);
+                assert!(!dominates, "{u} dominates frontier point {}", p.sched);
+            }
+        }
+    }
+
+    #[test]
+    fn deeper_topologies_search_within_the_beam() {
+        let pm = model();
+        let topo = Topology::parse("62,20,20,10").unwrap();
+        let sens = synthetic_sens(&pm, &[0.002, 0.008, 0.03], vec![62, 20, 20, 10]);
+        let f = ScheduleFrontier::search(&pm, &sens, &topo, 64);
+        assert_frontier_invariants(&f);
+        // frontier spans the full energy range
+        let e_acc = pm.energy_per_image_nj_sched(
+            &topo,
+            &ConfigSchedule::uniform(Config::ACCURATE),
+        );
+        assert!((f.most_accurate().unwrap().energy_nj - e_acc).abs() < 1e-9);
+        assert!(f.cheapest().unwrap().energy_nj < e_acc);
+        // every returned schedule names the right number of layers
+        for p in f.points() {
+            assert!(p.sched.validate(topo.n_layers()).is_ok());
+        }
+    }
+
+    #[test]
+    fn uniform_frontier_mirrors_governor_semantics() {
+        let pm = model();
+        let topo = Topology::seed();
+        let acc: Vec<f64> = (0..N_CONFIGS)
+            .map(|c| {
+                if c == 0 {
+                    0.8884
+                } else {
+                    0.8884 - 0.012 * pm.saving_fraction(Config::new(c as u32).unwrap())
+                }
+            })
+            .collect();
+        let table = AccuracyTable::new(acc);
+        let f = ScheduleFrontier::uniform(&pm, &table, &topo);
+        assert_frontier_invariants(&f);
+        assert!(f.points().iter().all(|p| p.sched.as_uniform().is_some()));
+        // query semantics
+        let best = f.best_under_power(10.0).unwrap();
+        assert_eq!(best.sched.as_uniform(), Some(Config::ACCURATE));
+        let cheap = f.cheapest_meeting(0.0).unwrap();
+        assert_eq!(cheap.energy_nj, f.cheapest().unwrap().energy_nj);
+        assert!(f.best_under_power(0.1).is_none());
+        assert!(f.cheapest_meeting(2.0).is_none());
+    }
+}

@@ -20,12 +20,16 @@
 //!   and walks the accuracy/power frontier so the budget lasts the
 //!   horizon (the truly *dynamic* mode).
 //!
-//! Budget/floor policies pick points on the *uniform* frontier (their
-//! accuracy table is measured per configuration); `FixedSchedule` is how
-//! per-layer operating points are expressed today, and a per-layer
-//! frontier search is the natural next step (see ROADMAP.md).
+//! Budget/floor policies walk a frontier.  Without a sensitivity model
+//! that is the *uniform* frontier (accuracy measured per configuration);
+//! with one ([`Governor::with_sensitivity`]) it is the per-layer
+//! [`ScheduleFrontier`], and the same policies pick schedule points —
+//! e.g. "hidden layer approximate, output layer exact" — that the
+//! uniform knob cannot reach.
 
 use crate::amul::{Config, ConfigSchedule};
+use crate::coordinator::frontier::ScheduleFrontier;
+use crate::coordinator::sensitivity::SensitivityModel;
 use crate::power::PowerModel;
 
 /// Accuracy table: measured classification accuracy per configuration
@@ -37,23 +41,53 @@ pub struct AccuracyTable {
 }
 
 impl AccuracyTable {
+    /// Wrap a full per-configuration table (callers constructing tables
+    /// programmatically must supply all 33 entries; artifact input goes
+    /// through the validating [`AccuracyTable::load`]).
     pub fn new(accuracy: Vec<f64>) -> AccuracyTable {
         assert_eq!(accuracy.len(), crate::amul::N_CONFIGS);
         AccuracyTable { accuracy }
     }
 
-    /// Load from `artifacts/accuracy_sweep.json`.
+    /// Load from `artifacts/accuracy_sweep.json`: a JSON array with one
+    /// `{"cfg": n, "accuracy": a}` row per configuration.  Strict — a
+    /// malformed document, a missing, duplicate or out-of-range `cfg`,
+    /// or a non-numeric/out-of-range accuracy is an error, never a
+    /// panic or a silently zeroed entry.
     pub fn load(path: &std::path::Path) -> anyhow::Result<AccuracyTable> {
         let j = crate::util::json::Json::from_file(path)?;
-        let mut accuracy = vec![0.0; crate::amul::N_CONFIGS];
-        for row in j.as_arr().ok_or_else(|| anyhow::anyhow!("sweep must be an array"))? {
-            let cfg = row.req("cfg")?.as_i64().unwrap_or(-1);
-            let acc = row.req("accuracy")?.as_f64().unwrap_or(0.0);
+        let rows = j.as_arr().ok_or_else(|| {
+            anyhow::anyhow!("accuracy sweep must be a JSON array of {{cfg, accuracy}} rows")
+        })?;
+        anyhow::ensure!(
+            rows.len() == crate::amul::N_CONFIGS,
+            "accuracy sweep has {} rows; expected one per configuration ({})",
+            rows.len(),
+            crate::amul::N_CONFIGS
+        );
+        let mut accuracy = vec![f64::NAN; crate::amul::N_CONFIGS];
+        let mut seen = vec![false; crate::amul::N_CONFIGS];
+        for row in rows {
+            let cfg = row
+                .req("cfg")?
+                .as_i64()
+                .ok_or_else(|| anyhow::anyhow!("'cfg' must be a number"))?;
             anyhow::ensure!(
                 (0..crate::amul::N_CONFIGS as i64).contains(&cfg),
-                "bad cfg {cfg}"
+                "cfg {cfg} out of range 0..=32"
             );
-            accuracy[cfg as usize] = acc;
+            let cfg = cfg as usize;
+            anyhow::ensure!(!seen[cfg], "duplicate sweep row for cfg {cfg}");
+            seen[cfg] = true;
+            let acc = row
+                .req("accuracy")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("cfg {cfg}: 'accuracy' must be a number"))?;
+            anyhow::ensure!(
+                acc.is_finite() && (0.0..=1.0).contains(&acc),
+                "cfg {cfg}: accuracy {acc} outside [0, 1]"
+            );
+            accuracy[cfg] = acc;
         }
         Ok(AccuracyTable::new(accuracy))
     }
@@ -103,6 +137,9 @@ pub struct Governor {
     /// Cycles per classified image of the served topology (drives the
     /// energy-budget -> allowed-power conversion).
     cycles_per_image: f64,
+    /// Per-layer schedule frontier; when present the budget/floor/energy
+    /// policies walk it instead of the uniform frontier.
+    schedule_frontier: Option<ScheduleFrontier>,
     /// Decision log: (images-at-decision, chosen schedule).
     pub decisions: Vec<(u64, ConfigSchedule)>,
     current: ConfigSchedule,
@@ -129,6 +166,42 @@ impl Governor {
         topo: &crate::weights::Topology,
     ) -> Governor {
         Self::with_cycles_per_image(policy, power, accuracy, topo.cycles_per_image() as f64)
+    }
+
+    /// Governor driven by a per-layer sensitivity model: builds the
+    /// [`ScheduleFrontier`] for the served topology, and the budget,
+    /// floor and energy policies pick points on it — per-layer
+    /// schedules when those dominate, uniform configurations otherwise.
+    ///
+    /// Errors when the sweep was measured on a different topology than
+    /// the one being served (a stale `schedule_sweep.json`), so callers
+    /// get a clear message instead of a downstream panic.
+    pub fn with_sensitivity(
+        policy: Policy,
+        power: &PowerModel,
+        accuracy: &AccuracyTable,
+        sens: &SensitivityModel,
+        topo: &crate::weights::Topology,
+    ) -> anyhow::Result<Governor> {
+        anyhow::ensure!(
+            sens.matches(topo),
+            "schedule sweep covers topology {:?} but the served network is {topo} \
+             (re-run `ecmac sweep --per-layer`)",
+            sens.sizes()
+        );
+        let mut g =
+            Self::with_cycles_per_image(policy, power, accuracy, topo.cycles_per_image() as f64);
+        g.schedule_frontier = Some(ScheduleFrontier::search(
+            power,
+            sens,
+            topo,
+            crate::coordinator::frontier::DEFAULT_BEAM_WIDTH,
+        ));
+        // re-decide now that the schedule frontier exists
+        g.current = g.decide();
+        g.decisions.clear();
+        g.decisions.push((0, g.current.clone()));
+        Ok(g)
     }
 
     fn with_cycles_per_image(
@@ -175,6 +248,7 @@ impl Governor {
             energy_mj: 0.0,
             images: 0,
             cycles_per_image,
+            schedule_frontier: None,
             decisions: Vec::new(),
             current: ConfigSchedule::Uniform(Config::ACCURATE),
         };
@@ -183,9 +257,14 @@ impl Governor {
         g
     }
 
-    /// The Pareto frontier (for reports).
+    /// The uniform Pareto frontier (for reports).
     pub fn frontier(&self) -> &[FrontierPoint] {
         &self.frontier
+    }
+
+    /// The per-layer schedule frontier, when sensitivity-driven.
+    pub fn schedule_frontier(&self) -> Option<&ScheduleFrontier> {
+        self.schedule_frontier.as_ref()
     }
 
     /// The schedule the next batch runs under.
@@ -218,20 +297,40 @@ impl Governor {
         match &self.policy {
             Policy::Fixed(cfg) => uniform(*cfg),
             Policy::FixedSchedule(sched) => sched.clone(),
-            Policy::PowerBudget { budget_mw } => uniform(
-                self.by_accuracy
-                    .iter()
-                    .find(|p| p.total_mw <= *budget_mw)
-                    .map(|p| p.cfg)
-                    // nothing fits: fall back to the cheapest point
-                    .unwrap_or_else(|| {
-                        self.frontier
-                            .first()
-                            .map(|p| p.cfg)
-                            .unwrap_or(Config::MAX_APPROX)
-                    }),
-            ),
+            Policy::PowerBudget { budget_mw } => {
+                if let Some(f) = &self.schedule_frontier {
+                    // most accurate schedule point fitting the budget;
+                    // nothing fits: the cheapest point
+                    return f
+                        .best_under_power(*budget_mw)
+                        .or_else(|| f.cheapest())
+                        .map(|p| p.sched.clone())
+                        .unwrap_or_else(|| uniform(Config::MAX_APPROX));
+                }
+                uniform(
+                    self.by_accuracy
+                        .iter()
+                        .find(|p| p.total_mw <= *budget_mw)
+                        .map(|p| p.cfg)
+                        // nothing fits: fall back to the cheapest point
+                        .unwrap_or_else(|| {
+                            self.frontier
+                                .first()
+                                .map(|p| p.cfg)
+                                .unwrap_or(Config::MAX_APPROX)
+                        }),
+                )
+            }
             Policy::AccuracyFloor { min_accuracy } => {
+                if let Some(f) = &self.schedule_frontier {
+                    // cheapest schedule point meeting the floor; if
+                    // none, the most accurate available
+                    return f
+                        .cheapest_meeting(*min_accuracy)
+                        .or_else(|| f.most_accurate())
+                        .map(|p| p.sched.clone())
+                        .unwrap_or_else(|| uniform(Config::ACCURATE));
+                }
                 // cheapest frontier point meeting the floor; if none,
                 // the most accurate available
                 uniform(
@@ -253,6 +352,17 @@ impl Governor {
                 let remaining_images = horizon_images.saturating_sub(self.images).max(1);
                 let remaining_mj = (budget_mj - self.energy_mj).max(0.0);
                 let per_image_mj = remaining_mj / remaining_images as f64;
+                if let Some(f) = &self.schedule_frontier {
+                    // pick against per-image energy directly (cycles are
+                    // schedule-independent, so this matches the uniform
+                    // path's allowed-power conversion)
+                    let allowed_nj = per_image_mj * 1e6;
+                    return f
+                        .best_under_energy(allowed_nj)
+                        .or_else(|| f.cheapest())
+                        .map(|p| p.sched.clone())
+                        .unwrap_or_else(|| uniform(Config::MAX_APPROX));
+                }
                 // energy per image at cfg = P * t_image; t fixed per
                 // topology, so allowed power = per_image_mj / t_image
                 let t_image_s = self.cycles_per_image / crate::power::anchors::FREQ_HZ;

@@ -18,11 +18,20 @@
 //!   governor's current schedule is applied per batch.
 //! * [`request`] — request/response types and the metrics the governor
 //!   feeds on (latency histograms, per-config energy accounting).
+//! * [`sensitivity`] — the per-layer accuracy sweep harness and the
+//!   additive degradation model behind `schedule_sweep.json`.
+//! * [`frontier`] — the pruned search over the 33^L per-layer schedule
+//!   space, yielding the Pareto frontier the budget/floor/energy
+//!   policies walk when a sensitivity model is available.
 
+pub mod frontier;
 pub mod governor;
 pub mod request;
+pub mod sensitivity;
 pub mod server;
 
+pub use frontier::{SchedulePoint, ScheduleFrontier};
 pub use governor::{Governor, Policy};
 pub use request::{ClassifyRequest, ClassifyResponse, MetricsSnapshot};
+pub use sensitivity::SensitivityModel;
 pub use server::{Backend, Coordinator, CoordinatorConfig, NativeBackend, PjrtBackend};

@@ -1,0 +1,452 @@
+//! Per-layer accuracy sensitivity: the measured cost of approximating
+//! one layer at a time, and the additive model that predicts a full
+//! schedule's accuracy from those per-layer deltas.
+//!
+//! The paper sweeps the *uniform* knob (one configuration for the whole
+//! network, `accuracy_sweep.json`).  The per-layer knob needs a second
+//! measurement: how much accuracy each layer costs when it alone is
+//! approximated.  [`SensitivityModel::measure`] is that sweep harness —
+//! it runs the bit-exact batched forward pass over an evaluation set
+//! with layer `l` pinned to configuration `c` and every other layer
+//! accurate, for all `(l, c)` pairs, and records the degradation
+//!
+//! ```text
+//! drop[l][c] = accuracy(all accurate) - accuracy(layer l at c)
+//! ```
+//!
+//! [`SensitivityModel::predict`] then scores an arbitrary
+//! [`ConfigSchedule`] under the **additive-degradation assumption**:
+//! per-layer degradations compose by summation,
+//!
+//! ```text
+//! predict(sched) = baseline - sum_l drop[l][sched.layer(l)]
+//! ```
+//!
+//! which is exact for single-layer schedules by construction and a
+//! first-order approximation elsewhere (error interactions between
+//! layers are second-order; DESIGN.md §Sensitivity discusses the
+//! validation).  The [`crate::coordinator::frontier::ScheduleFrontier`]
+//! search consumes this model.
+//!
+//! The sweep is persisted as a versioned `schedule_sweep.json` artifact;
+//! the python pipeline (`python/compile/aot.py`) emits the identical
+//! schema from the JAX oracle, and `ecmac sweep --per-layer` produces it
+//! natively without python.
+
+use crate::amul::{Config, ConfigSchedule, N_CONFIGS};
+use crate::datapath::Network;
+use crate::util::json::Json;
+use crate::weights::Topology;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Schema identifier of `schedule_sweep.json`.
+pub const SWEEP_SCHEMA: &str = "ecmac-schedule-sweep";
+/// Schema version this build reads and writes.
+pub const SWEEP_SCHEMA_VERSION: i64 = 1;
+
+/// Measured per-layer accuracy-degradation deltas for one topology.
+#[derive(Debug, Clone)]
+pub struct SensitivityModel {
+    /// Layer sizes of the swept network (`[inputs, hidden..., outputs]`).
+    sizes: Vec<usize>,
+    /// All-accurate baseline accuracy in [0, 1].
+    baseline: f64,
+    /// Evaluation-set size behind every measurement.
+    images: u64,
+    /// `drop[l][c]`: baseline minus the accuracy measured with layer `l`
+    /// at configuration `c` and every other layer accurate.  `drop[l][0]`
+    /// is 0 by construction; entries may be slightly negative when an
+    /// approximation happens to help on the evaluation set.
+    drop: Vec<Vec<f64>>,
+}
+
+impl SensitivityModel {
+    /// Assemble from parts (shape- and value-checked).
+    pub fn new(
+        sizes: Vec<usize>,
+        baseline: f64,
+        images: u64,
+        drop: Vec<Vec<f64>>,
+    ) -> Result<SensitivityModel> {
+        anyhow::ensure!(
+            sizes.len() >= 2,
+            "sensitivity topology needs at least input and output sizes, got {sizes:?}"
+        );
+        anyhow::ensure!(
+            baseline.is_finite() && (0.0..=1.0).contains(&baseline),
+            "baseline accuracy {baseline} outside [0, 1]"
+        );
+        anyhow::ensure!(
+            drop.len() == sizes.len() - 1,
+            "{} drop rows for a {}-layer topology",
+            drop.len(),
+            sizes.len() - 1
+        );
+        for (l, d) in drop.iter().enumerate() {
+            anyhow::ensure!(
+                d.len() == N_CONFIGS,
+                "layer {l}: expected {N_CONFIGS} drop values, got {}",
+                d.len()
+            );
+            anyhow::ensure!(
+                d.iter().all(|v| v.is_finite() && v.abs() <= 1.0),
+                "layer {l}: drop values must be finite accuracy deltas in [-1, 1]"
+            );
+        }
+        Ok(SensitivityModel {
+            sizes,
+            baseline,
+            images,
+            drop,
+        })
+    }
+
+    /// The sweep harness: measure per-layer sensitivity of `net` on an
+    /// evaluation set, one `(layer, config)` point at a time, through
+    /// the bit-exact batched forward pass.  Measurements run in
+    /// parallel across the `(layer, config)` grid.
+    pub fn measure<X: AsRef<[u8]> + Sync>(
+        net: &Network,
+        features: &[X],
+        labels: &[u8],
+    ) -> SensitivityModel {
+        assert_eq!(features.len(), labels.len());
+        assert!(!features.is_empty(), "sensitivity sweep needs images");
+        let topo = net.topology();
+        let n_layers = topo.n_layers();
+        let baseline = net.accuracy(features, labels, Config::ACCURATE);
+        let jobs: Vec<(usize, Config)> = (0..n_layers)
+            .flat_map(|l| Config::approximate().map(move |c| (l, c)))
+            .collect();
+        let accs = crate::util::threadpool::par_map(&jobs, |_, &(l, cfg)| {
+            let mut cfgs = vec![Config::ACCURATE; n_layers];
+            cfgs[l] = cfg;
+            net.accuracy_sched(features, labels, &ConfigSchedule::per_layer(cfgs))
+        });
+        let mut drop = vec![vec![0.0; N_CONFIGS]; n_layers];
+        for (&(l, cfg), acc) in jobs.iter().zip(accs) {
+            drop[l][cfg.index()] = baseline - acc;
+        }
+        SensitivityModel {
+            sizes: topo.sizes().to_vec(),
+            baseline,
+            images: labels.len() as u64,
+            drop,
+        }
+    }
+
+    /// Layer sizes of the swept topology.
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Number of weight layers.
+    pub fn n_layers(&self) -> usize {
+        self.sizes.len() - 1
+    }
+
+    /// All-accurate baseline accuracy.
+    pub fn baseline(&self) -> f64 {
+        self.baseline
+    }
+
+    /// Evaluation-set size behind the measurements.
+    pub fn images(&self) -> u64 {
+        self.images
+    }
+
+    /// Measured degradation of layer `l` at `cfg` (others accurate).
+    pub fn drop(&self, l: usize, cfg: Config) -> f64 {
+        self.drop[l][cfg.index()]
+    }
+
+    /// Whether the model was swept on `topo`'s exact layer stack.
+    pub fn matches(&self, topo: &Topology) -> bool {
+        self.sizes == topo.sizes()
+    }
+
+    /// Predicted accuracy of `sched` under the additive-degradation
+    /// assumption, clamped to [0, 1].
+    pub fn predict(&self, sched: &ConfigSchedule) -> f64 {
+        let total: f64 = (0..self.n_layers())
+            .map(|l| self.drop[l][sched.layer(l).index()])
+            .sum();
+        (self.baseline - total).clamp(0.0, 1.0)
+    }
+
+    /// Serialize to the versioned `schedule_sweep.json` document.
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .drop
+            .iter()
+            .enumerate()
+            .map(|(l, d)| {
+                crate::json_obj! {
+                    "layer" => l,
+                    "drop" => d.clone(),
+                }
+            })
+            .collect();
+        crate::json_obj! {
+            "schema" => SWEEP_SCHEMA,
+            "schema_version" => SWEEP_SCHEMA_VERSION,
+            "topology" => self.sizes.iter().map(|&s| s as i64).collect::<Vec<i64>>(),
+            "images" => self.images as i64,
+            "baseline_accuracy" => self.baseline,
+            "layers" => layers,
+        }
+    }
+
+    /// Write `schedule_sweep.json`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load `schedule_sweep.json` (strict: schema version, layer count,
+    /// row lengths and value ranges are all checked with clear errors).
+    pub fn load(path: &Path) -> Result<SensitivityModel> {
+        let j = Json::from_file(path).context("loading schedule sweep")?;
+        Self::from_json(&j).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse the `schedule_sweep.json` document.
+    pub fn from_json(j: &Json) -> Result<SensitivityModel> {
+        let schema = j
+            .req("schema")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("'schema' must be a string"))?;
+        anyhow::ensure!(
+            schema == SWEEP_SCHEMA,
+            "not a schedule sweep: schema '{schema}' (expected '{SWEEP_SCHEMA}')"
+        );
+        let version = j
+            .req("schema_version")?
+            .as_i64()
+            .ok_or_else(|| anyhow::anyhow!("'schema_version' must be a number"))?;
+        anyhow::ensure!(
+            version == SWEEP_SCHEMA_VERSION,
+            "unsupported schedule-sweep schema_version {version} \
+             (this build reads version {SWEEP_SCHEMA_VERSION})"
+        );
+        let raw_sizes = j
+            .req("topology")?
+            .flat_i32()
+            .context("'topology' must be an array of layer sizes")?;
+        anyhow::ensure!(
+            raw_sizes.iter().all(|&v| v > 0),
+            "'topology' sizes must be positive, got {raw_sizes:?}"
+        );
+        let sizes: Vec<usize> = raw_sizes.into_iter().map(|v| v as usize).collect();
+        let baseline = j
+            .req("baseline_accuracy")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("'baseline_accuracy' must be a number"))?;
+        let images = j
+            .req("images")?
+            .as_i64()
+            .ok_or_else(|| anyhow::anyhow!("'images' must be a number"))?;
+        anyhow::ensure!(images >= 0, "'images' must be non-negative, got {images}");
+        let images = images as u64;
+        let arr = j
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'layers' must be an array"))?;
+        let n_layers = sizes.len().saturating_sub(1);
+        anyhow::ensure!(
+            arr.len() == n_layers,
+            "sweep has {} layer entries but topology {sizes:?} has {n_layers} weight layers",
+            arr.len()
+        );
+        let mut drop = vec![Vec::new(); n_layers];
+        let mut seen = vec![false; n_layers];
+        for entry in arr {
+            let l = entry
+                .req("layer")?
+                .as_i64()
+                .ok_or_else(|| anyhow::anyhow!("'layer' must be a number"))?;
+            anyhow::ensure!(
+                (0..n_layers as i64).contains(&l),
+                "layer index {l} out of range (network has {n_layers} weight layers)"
+            );
+            let l = l as usize;
+            anyhow::ensure!(!seen[l], "duplicate sweep entry for layer {l}");
+            seen[l] = true;
+            let d = entry
+                .req("drop")?
+                .flat_f64()
+                .with_context(|| format!("layer {l}: 'drop' must be a numeric array"))?;
+            drop[l] = d;
+        }
+        Self::new(sizes, baseline, images, drop)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::weights::QuantWeights;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ecmac_sensitivity_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn synthetic(drop_l0: f64, drop_l1: f64) -> SensitivityModel {
+        let mut drop = vec![vec![0.0; N_CONFIGS]; 2];
+        for c in 1..N_CONFIGS {
+            drop[0][c] = drop_l0 * c as f64 / 32.0;
+            drop[1][c] = drop_l1 * c as f64 / 32.0;
+        }
+        SensitivityModel::new(vec![62, 30, 10], 0.9, 1000, drop).unwrap()
+    }
+
+    #[test]
+    fn predict_is_additive_and_clamped() {
+        let s = synthetic(0.02, 0.05);
+        let c16 = Config::new(16).unwrap();
+        assert_eq!(s.predict(&ConfigSchedule::uniform(Config::ACCURATE)), 0.9);
+        let sched = ConfigSchedule::per_layer(vec![c16, Config::MAX_APPROX]);
+        let want = 0.9 - 0.02 * 16.0 / 32.0 - 0.05;
+        assert!((s.predict(&sched) - want).abs() < 1e-12);
+        // uniform fans out to every layer
+        let uni = s.predict(&ConfigSchedule::uniform(Config::MAX_APPROX));
+        assert!((uni - (0.9 - 0.02 - 0.05)).abs() < 1e-12);
+        // clamped when degradations exceed the baseline
+        let huge = synthetic(0.8, 0.8);
+        assert_eq!(huge.predict(&ConfigSchedule::uniform(Config::MAX_APPROX)), 0.0);
+    }
+
+    #[test]
+    fn measure_matches_single_layer_schedules() {
+        let topo = Topology::seed();
+        let net = Network::new(QuantWeights::random(&topo, 5));
+        let (xs, labels) = crate::testkit::accurate_labeled_set(&net, 64, 17);
+        let s = SensitivityModel::measure(&net, &xs, &labels);
+        assert_eq!(s.sizes(), topo.sizes());
+        assert_eq!(s.images(), 64);
+        // labels are the accurate predictions, so the baseline is exact
+        assert_eq!(s.baseline(), 1.0);
+        assert_eq!(s.drop(0, Config::ACCURATE), 0.0);
+        // single-layer predictions are exact by construction
+        for (l, cfg_i) in [(0usize, 9u32), (1, 32)] {
+            let cfg = Config::new(cfg_i).unwrap();
+            let mut cfgs = vec![Config::ACCURATE; 2];
+            cfgs[l] = cfg;
+            let sched = ConfigSchedule::per_layer(cfgs);
+            let measured = net.accuracy_sched(&xs, &labels, &sched);
+            assert!((s.predict(&sched) - measured).abs() < 1e-12, "layer {l} cfg {cfg_i}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_predictions() {
+        let s = synthetic(0.011, 0.033);
+        let p = tmp("roundtrip.json");
+        s.save(&p).unwrap();
+        let back = SensitivityModel::load(&p).unwrap();
+        assert_eq!(back.sizes(), s.sizes());
+        assert_eq!(back.images(), s.images());
+        for sched in [
+            ConfigSchedule::uniform(Config::new(7).unwrap()),
+            ConfigSchedule::per_layer(vec![Config::MAX_APPROX, Config::ACCURATE]),
+        ] {
+            assert!((back.predict(&sched) - s.predict(&sched)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn load_rejects_wrong_schema_version() {
+        let p = tmp("badver.json");
+        let mut doc = synthetic(0.01, 0.01).to_json().to_string();
+        doc = doc.replace("\"schema_version\":1", "\"schema_version\":99");
+        std::fs::write(&p, doc).unwrap();
+        let err = SensitivityModel::load(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("schema_version"), "{err:#}");
+    }
+
+    #[test]
+    fn load_rejects_malformed_documents() {
+        // not JSON at all
+        let p = tmp("garbage.json");
+        std::fs::write(&p, "not json {").unwrap();
+        assert!(SensitivityModel::load(&p).is_err());
+        // wrong drop-row length
+        let p2 = tmp("shortdrop.json");
+        std::fs::write(
+            &p2,
+            r#"{"schema":"ecmac-schedule-sweep","schema_version":1,
+                "topology":[62,30,10],"images":10,"baseline_accuracy":0.9,
+                "layers":[{"layer":0,"drop":[0,0.1]},{"layer":1,"drop":[0,0.1]}]}"#,
+        )
+        .unwrap();
+        let err = SensitivityModel::load(&p2).unwrap_err();
+        assert!(format!("{err:#}").contains("drop values"), "{err:#}");
+        // layer count does not match the topology
+        let p3 = tmp("missinglayer.json");
+        std::fs::write(
+            &p3,
+            r#"{"schema":"ecmac-schedule-sweep","schema_version":1,
+                "topology":[62,30,10],"images":10,"baseline_accuracy":0.9,
+                "layers":[]}"#,
+        )
+        .unwrap();
+        assert!(SensitivityModel::load(&p3).is_err());
+        // duplicate layer entry
+        let zeros: String = vec!["0"; N_CONFIGS].join(",");
+        let p4 = tmp("duplayer.json");
+        std::fs::write(
+            &p4,
+            format!(
+                r#"{{"schema":"ecmac-schedule-sweep","schema_version":1,
+                    "topology":[62,30,10],"images":10,"baseline_accuracy":0.9,
+                    "layers":[{{"layer":0,"drop":[{zeros}]}},{{"layer":0,"drop":[{zeros}]}}]}}"#
+            ),
+        )
+        .unwrap();
+        let err = SensitivityModel::load(&p4).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+        // wrong schema string (schema_version alone is not enough)
+        let p6 = tmp("wrongschema.json");
+        std::fs::write(
+            &p6,
+            format!(
+                r#"{{"schema":"some-other-artifact","schema_version":1,
+                    "topology":[62,30,10],"images":10,"baseline_accuracy":0.9,
+                    "layers":[{{"layer":0,"drop":[{zeros}]}},{{"layer":1,"drop":[{zeros}]}}]}}"#
+            ),
+        )
+        .unwrap();
+        let err = SensitivityModel::load(&p6).unwrap_err();
+        assert!(format!("{err:#}").contains("not a schedule sweep"), "{err:#}");
+        // drop values outside the [-1, 1] accuracy-delta range
+        let mut big = vec!["0"; N_CONFIGS];
+        big[3] = "5.0";
+        let bigs = big.join(",");
+        let p7 = tmp("bigdrop.json");
+        std::fs::write(
+            &p7,
+            format!(
+                r#"{{"schema":"ecmac-schedule-sweep","schema_version":1,
+                    "topology":[62,30,10],"images":10,"baseline_accuracy":0.9,
+                    "layers":[{{"layer":0,"drop":[{bigs}]}},{{"layer":1,"drop":[{zeros}]}}]}}"#
+            ),
+        )
+        .unwrap();
+        assert!(SensitivityModel::load(&p7).is_err());
+        // baseline out of range
+        let p5 = tmp("badbaseline.json");
+        std::fs::write(
+            &p5,
+            format!(
+                r#"{{"schema":"ecmac-schedule-sweep","schema_version":1,
+                    "topology":[62,30,10],"images":10,"baseline_accuracy":1.5,
+                    "layers":[{{"layer":0,"drop":[{zeros}]}},{{"layer":1,"drop":[{zeros}]}}]}}"#
+            ),
+        )
+        .unwrap();
+        assert!(SensitivityModel::load(&p5).is_err());
+    }
+}

@@ -333,6 +333,15 @@ impl Coordinator {
         let energy_mj =
             power.energy_per_image_nj_sched(backend.topology(), &sched) * n as f64 * 1e-6;
         governor.lock().unwrap().feedback(n as u64, energy_mj);
+        // per-request latencies, measured before the single metrics
+        // lock below: one acquisition per batch, not one per request
+        let latencies: Option<Vec<u64>> = results.is_ok().then(|| {
+            batch
+                .requests
+                .iter()
+                .map(|r| (r.enqueued.elapsed().as_micros() as u64).max(1))
+                .collect()
+        });
         {
             let mut m = metrics.lock().unwrap();
             m.batches += 1;
@@ -344,17 +353,19 @@ impl Coordinator {
             }
             m.energy_mj += energy_mj;
             m.requests += n as u64;
+            if let Some(ls) = &latencies {
+                for &l in ls {
+                    m.latency.record_us(l);
+                }
+            }
         }
         match results {
             Ok(outs) => {
                 debug_assert_eq!(outs.len(), n);
-                for (req, (logits, pred)) in batch.requests.into_iter().zip(outs) {
-                    let latency_us = req.enqueued.elapsed().as_micros() as u64;
-                    metrics
-                        .lock()
-                        .unwrap()
-                        .latency
-                        .record_us(latency_us.max(1));
+                let latencies = latencies.unwrap_or_default();
+                for ((req, (logits, pred)), latency_us) in
+                    batch.requests.into_iter().zip(outs).zip(latencies)
+                {
                     let _ = req.reply.send(ClassifyResponse {
                         id: req.id,
                         pred,

@@ -8,6 +8,8 @@
 //!   accuracy   test-set accuracy per configuration (native or PJRT)
 //!   classify   one image through native + cycle-accurate + PJRT backends
 //!   serve      synthetic-load serving demo with a governor policy
+//!   sweep      native accuracy sweep: uniform configs or per-layer sensitivity
+//!   frontier   per-layer schedule frontier from the sensitivity model
 //!   topo       topology-parametric demo: arbitrary MLP + per-layer schedule
 
 use anyhow::{Context, Result};
@@ -15,6 +17,7 @@ use ecmac::amul::{metrics, Config, ConfigSchedule};
 use ecmac::coordinator::governor::{AccuracyTable, Policy};
 use ecmac::coordinator::{
     Backend, Coordinator, CoordinatorConfig, Governor, NativeBackend, PjrtBackend,
+    ScheduleFrontier, SensitivityModel,
 };
 use ecmac::dataset::Dataset;
 use ecmac::datapath::{DatapathSim, Network};
@@ -41,6 +44,8 @@ fn main() {
         "accuracy" => cmd_accuracy(rest),
         "classify" => cmd_classify(rest),
         "serve" => cmd_serve(rest),
+        "sweep" => cmd_sweep(rest),
+        "frontier" => cmd_frontier(rest),
         "topo" => cmd_topo(rest),
         "ablation" => cmd_ablation(rest),
         "verilog" => cmd_verilog(rest),
@@ -71,6 +76,8 @@ fn print_global_usage() {
          \x20 accuracy   per-configuration test accuracy\n\
          \x20 classify   one image through all backends\n\
          \x20 serve      serving demo with a governor policy\n\
+         \x20 sweep      native accuracy sweep (uniform, or --per-layer sensitivity)\n\
+         \x20 frontier   per-layer schedule frontier (Pareto energy vs accuracy)\n\
          \x20 topo       arbitrary-topology demo with a per-layer schedule\n\
          \x20 ablation   heterogeneous per-neuron configuration study\n\
          \x20 verilog    export the EC multiplier as synthesizable Verilog\n"
@@ -251,11 +258,47 @@ fn cmd_accuracy(argv: &[String]) -> Result<()> {
         takes_value: true,
         default: Some("0"),
     });
+    spec.push(OptSpec {
+        name: "schedule",
+        help: "measure one per-layer schedule instead (e.g. '32,0'); prints the \
+               sensitivity model's prediction when schedule_sweep.json exists",
+        takes_value: true,
+        default: None,
+    });
     let args = Args::parse(argv, &spec)?;
     let dir = artifacts_dir(&args);
     let ds = Dataset::load_test(&dir)?;
     let limit: usize = args.get_or("limit", 0)?;
     let n = if limit == 0 { ds.len() } else { limit.min(ds.len()) };
+    if let Some(s) = args.get("schedule") {
+        let sched = ConfigSchedule::parse(s)?;
+        let net = Network::new(QuantWeights::load_artifacts(&dir)?);
+        sched.validate(net.topology().n_layers())?;
+        let acc = net.accuracy_sched(&ds.features[..n], &ds.labels[..n], &sched);
+        println!(
+            "schedule {sched} on {n} test images: measured accuracy {:.2}%",
+            acc * 100.0
+        );
+        let sweep = dir.join("schedule_sweep.json");
+        if sweep.exists() {
+            match SensitivityModel::load(&sweep) {
+                Ok(sens) if sens.matches(net.topology()) => println!(
+                    "predicted (additive sensitivity model): {:.2}%  (delta {:+.3} pp)",
+                    sens.predict(&sched) * 100.0,
+                    (sens.predict(&sched) - acc) * 100.0
+                ),
+                Ok(sens) => println!(
+                    "(schedule_sweep.json covers topology {:?}, not this network — \
+                     re-run `ecmac sweep --per-layer`)",
+                    sens.sizes()
+                ),
+                Err(e) => eprintln!("warning: cannot read {}: {e:#}", sweep.display()),
+            }
+        } else {
+            println!("(no schedule_sweep.json for a prediction)");
+        }
+        return Ok(());
+    }
     let configs: Vec<Config> = match args.get("configs") {
         Some("all") | None => Config::all().collect(),
         Some(list) => list
@@ -432,6 +475,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         takes_value: true,
         default: Some("16"),
     });
+    spec.push(OptSpec {
+        name: "sweep",
+        help: "schedule_sweep.json enabling the per-layer schedule frontier \
+               (default: <artifacts>/schedule_sweep.json when present; 'none' disables)",
+        takes_value: true,
+        default: None,
+    });
     let args = Args::parse(argv, &spec)?;
     let dir = artifacts_dir(&args);
     let n_requests: usize = args.get_or("requests", 2000)?;
@@ -453,7 +503,46 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if let Policy::FixedSchedule(s) = &policy {
         s.validate(backend.topology().n_layers())?;
     }
-    let governor = Governor::for_topology(policy.clone(), &pm, &acc_table, backend.topology());
+    // an explicitly named sweep must load; an auto-discovered one that
+    // is stale or malformed only costs the frontier, not serving
+    let (sweep_path, sweep_explicit) = match args.get("sweep") {
+        Some("none") => (None, false),
+        Some(p) => (Some(PathBuf::from(p)), true),
+        None => {
+            let p = dir.join("schedule_sweep.json");
+            (p.exists().then_some(p), false)
+        }
+    };
+    let uniform_governor =
+        |policy: &Policy| Governor::for_topology(policy.clone(), &pm, &acc_table, backend.topology());
+    let governor = match sweep_path {
+        Some(p) => {
+            let sensitivity_governor = SensitivityModel::load(&p).and_then(|sens| {
+                Governor::with_sensitivity(
+                    policy.clone(),
+                    &pm,
+                    &acc_table,
+                    &sens,
+                    backend.topology(),
+                )
+            });
+            match sensitivity_governor {
+                Ok(g) => {
+                    println!("schedule frontier: enabled from {}", p.display());
+                    g
+                }
+                Err(e) if !sweep_explicit => {
+                    eprintln!(
+                        "warning: ignoring {} ({e:#}); serving with the uniform frontier",
+                        p.display()
+                    );
+                    uniform_governor(&policy)
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        None => uniform_governor(&policy),
+    };
 
     let coord = Coordinator::start(
         CoordinatorConfig {
@@ -540,6 +629,234 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .map(|(at, s)| format!("@{at}->{s}"))
         .collect();
     println!("governor decisions {decided:?}");
+    Ok(())
+}
+
+/// Native accuracy sweep over the test set.  Default: the uniform
+/// 33-configuration sweep (the python pipeline's `accuracy_sweep.json`,
+/// regenerated without python).  With `--per-layer`: the sensitivity
+/// sweep — one layer approximated at a time — written as the versioned
+/// `schedule_sweep.json` the frontier search and `serve` consume.
+fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let mut spec = common_opts();
+    spec.push(OptSpec {
+        name: "per-layer",
+        help: "sweep one layer at a time into schedule_sweep.json \
+               (default: uniform sweep into accuracy_sweep.json)",
+        takes_value: false,
+        default: None,
+    });
+    spec.push(OptSpec {
+        name: "limit",
+        help: "evaluate at most N test images (0 = all)",
+        takes_value: true,
+        default: Some("0"),
+    });
+    spec.push(OptSpec {
+        name: "out",
+        help: "output path (default: <artifacts>/schedule_sweep.json or accuracy_sweep.json)",
+        takes_value: true,
+        default: None,
+    });
+    let args = Args::parse(argv, &spec)?;
+    let dir = artifacts_dir(&args);
+    let ds = Dataset::load_test(&dir)?;
+    let limit: usize = args.get_or("limit", 0)?;
+    let n = if limit == 0 { ds.len() } else { limit.min(ds.len()) };
+    let net = Network::new(QuantWeights::load_artifacts(&dir)?);
+    let features = &ds.features[..n];
+    let labels = &ds.labels[..n];
+    if args.flag("per-layer") {
+        let sens = SensitivityModel::measure(&net, features, labels);
+        let out = args
+            .get("out")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| dir.join("schedule_sweep.json"));
+        sens.save(&out)?;
+        println!("{}", report::sensitivity_table(net.topology(), &sens));
+        println!("wrote {}", out.display());
+    } else {
+        let configs: Vec<Config> = Config::all().collect();
+        let accs = ecmac::util::threadpool::par_map(&configs, |_, &cfg| {
+            net.accuracy(features, labels, cfg)
+        });
+        let rows: Vec<ecmac::util::json::Json> = configs
+            .iter()
+            .zip(&accs)
+            .map(|(cfg, &acc)| ecmac::json_obj! { "cfg" => cfg.index(), "accuracy" => acc })
+            .collect();
+        let out = args
+            .get("out")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| dir.join("accuracy_sweep.json"));
+        std::fs::write(&out, ecmac::util::json::Json::from(rows).to_string())?;
+        let worst = accs[1..].iter().cloned().fold(f64::MAX, f64::min);
+        println!(
+            "uniform accuracy sweep over {n} images: accurate {:.2}%, worst approx {:.2}%",
+            accs[0] * 100.0,
+            worst * 100.0
+        );
+        println!("wrote {}", out.display());
+    }
+    Ok(())
+}
+
+/// Build and print the per-layer schedule frontier: Pareto-optimal
+/// `ConfigSchedule`s ranked by modeled energy per image vs predicted
+/// accuracy, from a `schedule_sweep.json` artifact (or an on-the-fly
+/// sensitivity sweep when the artifact is absent).
+fn cmd_frontier(argv: &[String]) -> Result<()> {
+    let mut spec = common_opts();
+    spec.push(OptSpec {
+        name: "sweep",
+        help: "schedule_sweep.json path (default: <artifacts>/schedule_sweep.json; \
+               measured on the fly when absent; 'none' forces measurement)",
+        takes_value: true,
+        default: None,
+    });
+    spec.push(OptSpec {
+        name: "limit",
+        help: "images for an on-the-fly sensitivity sweep (0 = all)",
+        takes_value: true,
+        default: Some("2000"),
+    });
+    spec.push(OptSpec {
+        name: "beam",
+        help: "beam width of the pruned frontier search",
+        takes_value: true,
+        default: Some("128"),
+    });
+    spec.push(OptSpec {
+        name: "budget",
+        help: "also print the frontier point a power budget (mW) selects",
+        takes_value: true,
+        default: None,
+    });
+    spec.push(OptSpec {
+        name: "floor",
+        help: "also print the frontier point an accuracy floor selects, \
+               next to the cheapest uniform config meeting it",
+        takes_value: true,
+        default: None,
+    });
+    spec.push(OptSpec {
+        name: "csv",
+        help: "write the frontier as CSV to this path",
+        takes_value: true,
+        default: None,
+    });
+    let args = Args::parse(argv, &spec)?;
+    let dir = artifacts_dir(&args);
+    let weights = QuantWeights::load_artifacts(&dir)?;
+    let topo = weights.topology.clone();
+    // an explicitly named sweep must exist; 'none' (as in `serve`)
+    // forces the on-the-fly measurement, and only the default artifacts
+    // path falls back to it when absent
+    let forced_measure = args.get("sweep") == Some("none");
+    let explicit = match args.get("sweep") {
+        None | Some("none") => None,
+        Some(p) => Some(PathBuf::from(p)),
+    };
+    let sweep_path = explicit
+        .clone()
+        .unwrap_or_else(|| dir.join("schedule_sweep.json"));
+    let sens = if explicit.is_some() || (!forced_measure && sweep_path.exists()) {
+        let s = SensitivityModel::load(&sweep_path)?;
+        println!(
+            "sensitivity: {} ({} images)\n",
+            sweep_path.display(),
+            s.images()
+        );
+        s
+    } else {
+        let ds = Dataset::load_test(&dir)?;
+        let limit: usize = args.get_or("limit", 2000)?;
+        let n = if limit == 0 { ds.len() } else { limit.min(ds.len()) };
+        println!(
+            "sensitivity: no {} — measuring on {n} test images\n",
+            sweep_path.display()
+        );
+        let net = Network::new(weights.clone());
+        SensitivityModel::measure(&net, &ds.features[..n], &ds.labels[..n])
+    };
+    anyhow::ensure!(
+        sens.matches(&topo),
+        "schedule sweep covers topology {:?} but the artifacts serve {topo} \
+         (re-run `ecmac sweep --per-layer`)",
+        sens.sizes()
+    );
+    let pm = power_model(&dir, 32)?;
+    let beam: usize = args.get_or("beam", 128)?;
+    let frontier = ScheduleFrontier::search(&pm, &sens, &topo, beam);
+    println!("{}", report::sensitivity_table(&topo, &sens));
+    println!("{}", report::frontier_table(&frontier));
+    // the uniform knob's frontier (measured accuracies), for contrast;
+    // a missing sweep skips quietly, a malformed one is worth a warning
+    let acc_sweep = dir.join("accuracy_sweep.json");
+    if acc_sweep.exists() {
+        match AccuracyTable::load(&acc_sweep) {
+            Ok(table) => {
+                let uni = ScheduleFrontier::uniform(&pm, &table, &topo);
+                println!(
+                    "uniform frontier (measured accuracy_sweep.json): {} of 33 configs are Pareto",
+                    uni.len()
+                );
+                println!("{}", report::frontier_table(&uni));
+            }
+            Err(e) => eprintln!("warning: skipping uniform contrast ({e:#})"),
+        }
+    }
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, report::frontier_csv(&frontier))?;
+        println!("wrote {path}");
+    }
+    if let Some(b) = args.get("budget") {
+        let budget: f64 = b.parse().context("--budget must be a number (mW)")?;
+        match frontier.best_under_power(budget) {
+            Some(p) => println!(
+                "power budget {budget} mW -> {} ({:.3} mW, {:.3} nJ/img, predicted {:.2}%)",
+                p.sched,
+                p.power_mw,
+                p.energy_nj,
+                p.accuracy * 100.0
+            ),
+            None => println!("power budget {budget} mW -> no frontier point fits"),
+        }
+    }
+    if let Some(fl) = args.get("floor") {
+        let floor: f64 = fl.parse().context("--floor must be a number in [0, 1]")?;
+        match frontier.cheapest_meeting(floor) {
+            Some(p) => {
+                println!(
+                    "accuracy floor {floor} -> {} ({:.3} nJ/img, predicted {:.2}%)",
+                    p.sched,
+                    p.energy_nj,
+                    p.accuracy * 100.0
+                );
+                // the uniform knob's answer to the same floor, for contrast
+                let uni = Config::all()
+                    .map(ConfigSchedule::uniform)
+                    .filter(|s| sens.predict(s) >= floor)
+                    .min_by(|a, b| {
+                        pm.energy_per_image_nj_sched(&topo, a)
+                            .partial_cmp(&pm.energy_per_image_nj_sched(&topo, b))
+                            .unwrap()
+                    });
+                match uni {
+                    Some(u) => {
+                        let e = pm.energy_per_image_nj_sched(&topo, &u);
+                        println!(
+                            "  cheapest uniform meeting the floor: {u} ({e:.3} nJ/img, \
+                             schedule saves {:.2}%)",
+                            (e - p.energy_nj) / e * 100.0
+                        );
+                    }
+                    None => println!("  no uniform configuration meets the floor"),
+                }
+            }
+            None => println!("accuracy floor {floor} -> unreachable on this frontier"),
+        }
+    }
     Ok(())
 }
 

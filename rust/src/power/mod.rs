@@ -281,10 +281,25 @@ impl PowerModel {
         self.breakdown(cfg).total_mw * 1e-3 * cycles / anchors::FREQ_HZ * 1e9
     }
 
-    /// Energy per image in nJ under a per-layer schedule: layer `l`
-    /// draws its configuration's network power for the cycles the FSM
-    /// spends on that layer.  Collapses to [`Self::energy_per_image_nj`]
-    /// for uniform schedules on the seed topology.
+    /// Energy weight layer `l` contributes to one classified image at
+    /// `cfg`, in nJ: the network draws `cfg`'s power for the cycles the
+    /// FSM spends on that layer.  The per-layer additive term behind
+    /// [`Self::energy_per_image_nj_sched`] — and the cost axis of the
+    /// schedule-frontier search, which exploits the additivity to prune
+    /// per layer.
+    pub fn layer_energy_nj(
+        &self,
+        topo: &crate::weights::Topology,
+        l: usize,
+        cfg: Config,
+    ) -> f64 {
+        self.breakdown(cfg).total_mw * 1e-3 * topo.layer_cycles(l) as f64 / anchors::FREQ_HZ * 1e9
+    }
+
+    /// Energy per image in nJ under a per-layer schedule: the sum of
+    /// [`Self::layer_energy_nj`] over the layers.  Collapses to
+    /// [`Self::energy_per_image_nj`] for uniform schedules on the seed
+    /// topology.
     ///
     /// This is what lets a governor spend the error budget where the
     /// power model says it pays: a layer that dominates the cycle count
@@ -296,11 +311,7 @@ impl PowerModel {
         sched: &crate::amul::ConfigSchedule,
     ) -> f64 {
         (0..topo.n_layers())
-            .map(|l| {
-                self.breakdown(sched.layer(l)).total_mw * 1e-3 * topo.layer_cycles(l) as f64
-                    / anchors::FREQ_HZ
-                    * 1e9
-            })
+            .map(|l| self.layer_energy_nj(topo, l, sched.layer(l)))
             .sum()
     }
 
@@ -410,6 +421,25 @@ mod tests {
             let b = m.energy_per_image_nj_sched(&topo, &sched);
             assert!((a - b).abs() < 1e-9, "{cfg}: {a} vs {b}");
             assert!((m.schedule_power_mw(&topo, &sched) - m.breakdown(cfg).total_mw).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn layer_energy_is_the_additive_term() {
+        use crate::amul::ConfigSchedule;
+        use crate::weights::Topology;
+        let m = model();
+        for spec in ["62,30,10", "62,20,20,10"] {
+            let topo = Topology::parse(spec).unwrap();
+            let sched = ConfigSchedule::per_layer(
+                (0..topo.n_layers())
+                    .map(|l| Config::new((l as u32 * 13) % 33).unwrap())
+                    .collect(),
+            );
+            let sum: f64 = (0..topo.n_layers())
+                .map(|l| m.layer_energy_nj(&topo, l, sched.layer(l)))
+                .sum();
+            assert!((sum - m.energy_per_image_nj_sched(&topo, &sched)).abs() < 1e-12);
         }
     }
 

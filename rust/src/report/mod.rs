@@ -293,6 +293,90 @@ pub fn schedule_summary(
     out
 }
 
+/// Per-layer sensitivity table: the measured accuracy cost of
+/// approximating each layer alone, next to the layer's cycle share —
+/// the two quantities the schedule-frontier search trades against each
+/// other.
+pub fn sensitivity_table(
+    topo: &crate::weights::Topology,
+    sens: &crate::coordinator::sensitivity::SensitivityModel,
+) -> String {
+    let mut t = TextTable::new(&[
+        "layer",
+        "shape",
+        "cycle %",
+        "drop@16 pp",
+        "drop@32 pp",
+        "worst pp",
+    ]);
+    for l in 0..topo.n_layers() {
+        let worst = Config::approximate()
+            .map(|c| sens.drop(l, c))
+            .fold(f64::MIN, f64::max);
+        t.row(vec![
+            l.to_string(),
+            format!("{}x{}", topo.layer_in(l), topo.layer_out(l)),
+            format!("{:.1}", topo.layer_cycle_share(l) * 100.0),
+            format!("{:+.3}", sens.drop(l, Config::new(16).unwrap()) * 100.0),
+            format!("{:+.3}", sens.drop(l, Config::MAX_APPROX) * 100.0),
+            format!("{:+.3}", worst * 100.0),
+        ]);
+    }
+    let mut out = format!(
+        "per-layer sensitivity on topology {topo} \
+         (baseline {:.2}% over {} images; drops in accuracy percentage points)\n\n",
+        sens.baseline() * 100.0,
+        sens.images()
+    );
+    out.push_str(&t.render());
+    out
+}
+
+/// The schedule frontier: Pareto points from cheapest to most accurate.
+pub fn frontier_table(f: &crate::coordinator::frontier::ScheduleFrontier) -> String {
+    let mut t = TextTable::new(&[
+        "#",
+        "schedule",
+        "power mW",
+        "energy nJ/img",
+        "pred acc %",
+        "kind",
+    ]);
+    for (i, p) in f.points().iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            p.sched.to_string(),
+            format!("{:.3}", p.power_mw),
+            format!("{:.3}", p.energy_nj),
+            format!("{:.2}", p.accuracy * 100.0),
+            if p.sched.as_uniform().is_some() {
+                "uniform".into()
+            } else {
+                "per-layer".into()
+            },
+        ]);
+    }
+    let mut out = String::from(
+        "schedule frontier (Pareto: ascending energy, strictly increasing predicted accuracy)\n\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
+/// CSV for a schedule frontier.
+pub fn frontier_csv(f: &crate::coordinator::frontier::ScheduleFrontier) -> String {
+    let mut t = TextTable::new(&["schedule", "power_mw", "energy_nj", "pred_accuracy"]);
+    for p in f.points() {
+        t.row(vec![
+            format!("{}", p.sched).replace(',', ";"),
+            format!("{:.6}", p.power_mw),
+            format!("{:.6}", p.energy_nj),
+            format!("{:.6}", p.accuracy),
+        ]);
+    }
+    t.to_csv()
+}
+
 /// CSV for the power/accuracy sweep (the data behind Figs 5-7).
 pub fn sweep_csv(sweep: &[PowerBreakdown], accuracy: &[f64], model: &PowerModel) -> String {
     let mut t = TextTable::new(&[
@@ -390,6 +474,39 @@ mod tests {
         assert!(out.contains("220 cycles/image"));
         // hidden layer dominates the cycle count: 189/220 = 86%
         assert!(out.contains("(86%)"));
+    }
+
+    #[test]
+    fn sensitivity_and_frontier_tables_render() {
+        use crate::amul::N_CONFIGS;
+        use crate::coordinator::frontier::ScheduleFrontier;
+        use crate::coordinator::sensitivity::SensitivityModel;
+        use crate::weights::Topology;
+        let pm = crate::power::PowerModel::calibrate(
+            crate::power::MultiplierEnergyProfile::measure_synthetic(400, 5),
+        )
+        .unwrap();
+        let topo = Topology::seed();
+        let drop: Vec<Vec<f64>> = (0..2)
+            .map(|l| {
+                (0..N_CONFIGS)
+                    .map(|c| 0.01 * (l + 1) as f64 * c as f64 / 32.0)
+                    .collect()
+            })
+            .collect();
+        let sens = SensitivityModel::new(vec![62, 30, 10], 0.89, 500, drop).unwrap();
+        let st = sensitivity_table(&topo, &sens);
+        assert!(st.contains("62x30"));
+        assert!(st.contains("85.9")); // hidden layer cycle share
+        assert!(st.contains("500 images"));
+        let f = ScheduleFrontier::search(&pm, &sens, &topo, 64);
+        let ft = frontier_table(&f);
+        assert!(ft.contains("schedule frontier"));
+        assert!(ft.contains("uniform"));
+        let csv = frontier_csv(&f);
+        assert_eq!(csv.lines().count(), f.len() + 1);
+        // per-layer schedules must not break the CSV column count
+        assert!(csv.lines().all(|l| l.matches(',').count() == 3));
     }
 
     #[test]

@@ -5,6 +5,31 @@
 //!   coordinator (routing, batching, state) and the arithmetic models.
 //! * [`bench`] — a criterion-style benchmark harness (warmup, adaptive
 //!   iteration count, mean/stddev/percentiles) driving `cargo bench`.
+//! * [`accurate_labeled_set`] — the shared synthetic-evaluation
+//!   scaffold for frontier/sensitivity tests and benches.
 
 pub mod bench;
 pub mod prop;
+
+use crate::amul::Config;
+use crate::datapath::Network;
+use crate::util::rng::Pcg32;
+
+/// Random evaluation set labeled with the network's own accurate-mode
+/// predictions, so "accuracy" measures agreement with the exact
+/// hardware — the yardstick the paper's accuracy-vs-power sweep uses.
+/// One definition serves the sensitivity unit tests, the frontier
+/// integration/regression tests and the bench harness; changing the
+/// labeling rule here changes all of them together.
+pub fn accurate_labeled_set(net: &Network, n: usize, seed: u64) -> (Vec<Vec<u8>>, Vec<u8>) {
+    let mut rng = Pcg32::new(seed);
+    let inputs = net.topology().inputs();
+    let xs: Vec<Vec<u8>> = (0..n)
+        .map(|_| (0..inputs).map(|_| rng.below(128) as u8).collect())
+        .collect();
+    let labels = xs
+        .iter()
+        .map(|x| net.forward(x, Config::ACCURATE).pred)
+        .collect();
+    (xs, labels)
+}

@@ -189,6 +189,13 @@ impl Topology {
         (0..self.n_layers()).map(|l| self.layer_cycles(l)).sum()
     }
 
+    /// Fraction of an image's cycles spent in weight layer `l` — the
+    /// weight the energy model (and hence the schedule-frontier search)
+    /// gives that layer's configuration choice.
+    pub fn layer_cycle_share(&self, l: usize) -> f64 {
+        self.layer_cycles(l) as f64 / self.cycles_per_image() as f64
+    }
+
     /// Whether this is the paper's seed 62-30-10 network.
     pub fn is_seed(&self) -> bool {
         self.sizes == [N_INPUTS, N_HIDDEN, N_OUTPUTS]
@@ -475,6 +482,9 @@ mod tests {
         assert_eq!(t.passes(1), 1);
         // 3 * (62 + 1) + 1 * (30 + 1) = 220, the paper's cycle count
         assert_eq!(t.cycles_per_image(), 220);
+        // the hidden layer owns 189/220 ≈ 86% of the cycles
+        assert!((t.layer_cycle_share(0) - 189.0 / 220.0).abs() < 1e-12);
+        assert!((t.layer_cycle_share(0) + t.layer_cycle_share(1) - 1.0).abs() < 1e-12);
         assert_eq!(t.to_string(), "62-30-10");
         assert!(t.is_seed());
 

@@ -1,0 +1,275 @@
+//! Schedule-frontier integration: the native sensitivity sweep plus the
+//! pruned search must open non-uniform operating points that beat the
+//! paper's uniform knob, the governor must pick them, and the artifact
+//! loaders must reject malformed input with errors, never panics.
+//!
+//! Everything here runs on synthetic networks/evaluation sets — no
+//! `make artifacts` required.
+
+use ecmac::amul::{Config, ConfigSchedule, N_CONFIGS};
+use ecmac::coordinator::frontier::ScheduleFrontier;
+use ecmac::coordinator::governor::{AccuracyTable, Governor, Policy};
+use ecmac::coordinator::sensitivity::SensitivityModel;
+use ecmac::datapath::Network;
+use ecmac::power::{MultiplierEnergyProfile, PowerModel};
+use ecmac::testkit::accurate_labeled_set;
+use ecmac::weights::{QuantWeights, Topology};
+
+fn power_model() -> PowerModel {
+    PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(800, 3)).unwrap()
+}
+
+/// The acceptance regression: on the synthetic eval setup the frontier
+/// search finds a non-uniform schedule with lower modeled energy per
+/// image than the best uniform configuration of equal-or-better
+/// *measured* accuracy.
+#[test]
+fn frontier_beats_best_uniform_at_equal_or_better_measured_accuracy() {
+    let pm = power_model();
+    let topo = Topology::seed();
+    let mut wins = 0usize;
+    for seed in [7u64, 21, 42] {
+        let net = Network::new(QuantWeights::random(&topo, seed));
+        let (xs, labels) = accurate_labeled_set(&net, 400, seed ^ 0xE7A1);
+        let sens = SensitivityModel::measure(&net, &xs, &labels);
+        let frontier = ScheduleFrontier::search(&pm, &sens, &topo, 128);
+        // measured accuracy and energy of every uniform configuration
+        let uni: Vec<(f64, f64)> = Config::all()
+            .map(|c| {
+                (
+                    net.accuracy(&xs, &labels, c),
+                    pm.energy_per_image_nj_sched(&topo, &ConfigSchedule::uniform(c)),
+                )
+            })
+            .collect();
+        for p in frontier.points() {
+            if p.sched.as_uniform().is_some() {
+                continue;
+            }
+            let measured = net.accuracy_sched(&xs, &labels, &p.sched);
+            // cheapest uniform whose measured accuracy matches this schedule
+            let best_uniform_nj = uni
+                .iter()
+                .filter(|(acc, _)| *acc >= measured)
+                .map(|(_, e)| *e)
+                .fold(f64::MAX, f64::min);
+            if best_uniform_nj > p.energy_nj + 1e-9 {
+                wins += 1;
+                break;
+            }
+        }
+    }
+    assert!(
+        wins > 0,
+        "no non-uniform frontier point beat the uniform knob on any seed"
+    );
+}
+
+#[test]
+fn measured_frontier_is_pareto_and_mixes_schedules() {
+    let pm = power_model();
+    let topo = Topology::seed();
+    let net = Network::new(QuantWeights::random(&topo, 11));
+    let (xs, labels) = accurate_labeled_set(&net, 256, 0xBEA7);
+    let sens = SensitivityModel::measure(&net, &xs, &labels);
+    let f = ScheduleFrontier::search(&pm, &sens, &topo, 128);
+    assert!(!f.is_empty());
+    for w in f.points().windows(2) {
+        assert!(w[0].energy_nj <= w[1].energy_nj);
+        assert!(w[0].accuracy < w[1].accuracy, "dominated point on frontier");
+    }
+    // schedules validate against the served depth and the endpoints span
+    // the energy range
+    for p in f.points() {
+        assert!(p.sched.validate(topo.n_layers()).is_ok());
+    }
+    // the measured sensitivity must surface per-layer operating points,
+    // not just the 33 injected uniforms
+    assert!(
+        f.points().iter().any(|p| p.sched.as_uniform().is_none()),
+        "expected non-uniform schedules on the measured frontier"
+    );
+    let e_acc = pm.energy_per_image_nj_sched(&topo, &ConfigSchedule::uniform(Config::ACCURATE));
+    // the cheapest uniform energy (the max-saving config is whatever the
+    // netlist profile says it is, not necessarily cfg 32)
+    let e_min = Config::all()
+        .map(|c| pm.energy_per_image_nj_sched(&topo, &ConfigSchedule::uniform(c)))
+        .fold(f64::MAX, f64::min);
+    assert!(f.cheapest().unwrap().energy_nj <= e_acc);
+    assert!(f.most_accurate().unwrap().energy_nj <= e_acc + 1e-9);
+    assert!(f.cheapest().unwrap().energy_nj >= e_min - 1e-9);
+}
+
+/// A sensitivity-driven governor beats the uniform-only governor: same
+/// accuracy floor, strictly less energy, by approximating the
+/// cycle-dominant hidden layer while the floor pins the output layer.
+#[test]
+fn governor_with_sensitivity_picks_dominating_per_layer_schedules() {
+    let pm = power_model();
+    let topo = Topology::seed();
+    // synthetic regime: the hidden layer is nearly free to approximate,
+    // the output layer is expensive — per-layer schedules must win
+    let drop: Vec<Vec<f64>> = (0..2)
+        .map(|l| {
+            Config::all()
+                .map(|c| {
+                    let scale = if l == 0 { 0.0005 } else { 0.05 };
+                    scale * pm.saving_fraction(c)
+                })
+                .collect()
+        })
+        .collect();
+    let sens = SensitivityModel::new(vec![62, 30, 10], 0.92, 1000, drop).unwrap();
+    // a uniform accuracy table consistent with the additive model
+    let table = AccuracyTable::new(
+        Config::all()
+            .map(|c| sens.predict(&ConfigSchedule::uniform(c)))
+            .collect(),
+    );
+    let floor = 0.918; // tight: uniform configs lose too much in the output layer
+    let policy = Policy::AccuracyFloor { min_accuracy: floor };
+    let g_uni = Governor::for_topology(policy.clone(), &pm, &table, &topo);
+    let g_sched = Governor::with_sensitivity(policy, &pm, &table, &sens, &topo).unwrap();
+    assert!(g_sched.schedule_frontier().is_some());
+    // a mismatched topology is an error, not a panic
+    let wrong = Topology::parse("62,20,20,10").unwrap();
+    assert!(Governor::with_sensitivity(
+        Policy::AccuracyFloor { min_accuracy: floor },
+        &pm,
+        &table,
+        &sens,
+        &wrong
+    )
+    .is_err());
+    let chosen = g_sched.current();
+    let uni_chosen = g_uni.current();
+    assert!(
+        sens.predict(&chosen) >= floor,
+        "chosen schedule misses the floor"
+    );
+    let e_sched = pm.energy_per_image_nj_sched(&topo, &chosen);
+    let e_uni = pm.energy_per_image_nj_sched(&topo, &uni_chosen);
+    assert!(
+        e_sched < e_uni,
+        "schedule governor ({chosen}: {e_sched:.3} nJ) must undercut the uniform \
+         governor ({uni_chosen}: {e_uni:.3} nJ)"
+    );
+    // and the winning schedule is genuinely per-layer
+    assert!(
+        chosen.as_uniform().is_none(),
+        "expected a per-layer schedule, got {chosen}"
+    );
+}
+
+#[test]
+fn governor_power_budget_walks_the_schedule_frontier() {
+    let pm = power_model();
+    let topo = Topology::seed();
+    let drop: Vec<Vec<f64>> = (0..2)
+        .map(|l| {
+            Config::all()
+                .map(|c| (if l == 0 { 0.001 } else { 0.04 }) * pm.saving_fraction(c))
+                .collect()
+        })
+        .collect();
+    let sens = SensitivityModel::new(vec![62, 30, 10], 0.92, 1000, drop).unwrap();
+    let table = AccuracyTable::new(
+        Config::all()
+            .map(|c| sens.predict(&ConfigSchedule::uniform(c)))
+            .collect(),
+    );
+    // a budget between the accurate and worst uniform power: both
+    // governors fit it, the schedule governor with more accuracy
+    let budget = 5.2;
+    let g_uni = Governor::for_topology(Policy::PowerBudget { budget_mw: budget }, &pm, &table, &topo);
+    let g_sched =
+        Governor::with_sensitivity(Policy::PowerBudget { budget_mw: budget }, &pm, &table, &sens, &topo)
+            .unwrap();
+    let chosen = g_sched.current();
+    assert!(pm.schedule_power_mw(&topo, &chosen) <= budget + 1e-9);
+    let acc_sched = sens.predict(&chosen);
+    let acc_uni = sens.predict(&g_uni.current());
+    assert!(
+        acc_sched >= acc_uni,
+        "schedule governor ({chosen}: {acc_sched:.4}) must be at least as accurate \
+         as the uniform governor under the same budget ({acc_uni:.4})"
+    );
+    // feedback on a pinned budget never worsens the invariant
+    let mut g = g_sched;
+    let next = g.feedback(100, 0.01);
+    assert!(pm.schedule_power_mw(&topo, &next) <= budget + 1e-9);
+}
+
+#[test]
+fn accuracy_table_load_rejects_malformed_documents() {
+    let dir = std::env::temp_dir().join("ecmac_frontier_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let write = |name: &str, body: &str| {
+        let p = dir.join(name);
+        std::fs::write(&p, body).unwrap();
+        p
+    };
+    // well-formed baseline: all 33 rows present
+    let good: Vec<String> = (0..N_CONFIGS)
+        .map(|c| format!(r#"{{"cfg":{c},"accuracy":0.88}}"#))
+        .collect();
+    let p = write("good.json", &format!("[{}]", good.join(",")));
+    assert!(AccuracyTable::load(&p).is_ok());
+    // not an array
+    let p = write("notarray.json", r#"{"cfg":0,"accuracy":0.9}"#);
+    let err = AccuracyTable::load(&p).unwrap_err();
+    assert!(format!("{err:#}").contains("array"), "{err:#}");
+    // wrong length
+    let p = write("short.json", r#"[{"cfg":0,"accuracy":0.9}]"#);
+    let err = AccuracyTable::load(&p).unwrap_err();
+    assert!(format!("{err:#}").contains("rows"), "{err:#}");
+    // duplicate cfg (33 rows, cfg 0 twice)
+    let mut dup = good.clone();
+    dup[1] = r#"{"cfg":0,"accuracy":0.9}"#.into();
+    let p = write("dup.json", &format!("[{}]", dup.join(",")));
+    let err = AccuracyTable::load(&p).unwrap_err();
+    assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+    // out-of-range cfg
+    let mut oob = good.clone();
+    oob[32] = r#"{"cfg":33,"accuracy":0.9}"#.into();
+    let p = write("oob.json", &format!("[{}]", oob.join(",")));
+    assert!(AccuracyTable::load(&p).is_err());
+    // non-numeric accuracy
+    let mut nan = good.clone();
+    nan[5] = r#"{"cfg":5,"accuracy":"high"}"#.into();
+    let p = write("nonnum.json", &format!("[{}]", nan.join(",")));
+    let err = AccuracyTable::load(&p).unwrap_err();
+    assert!(format!("{err:#}").contains("number"), "{err:#}");
+    // accuracy out of [0, 1]
+    let mut big = good.clone();
+    big[5] = r#"{"cfg":5,"accuracy":1.5}"#.into();
+    let p = write("range.json", &format!("[{}]", big.join(",")));
+    assert!(AccuracyTable::load(&p).is_err());
+    // invalid JSON
+    let p = write("broken.json", "[{");
+    assert!(AccuracyTable::load(&p).is_err());
+}
+
+#[test]
+fn schedule_sweep_artifact_roundtrips_through_disk() {
+    let pm = power_model();
+    let topo = Topology::seed();
+    let net = Network::new(QuantWeights::random(&topo, 23));
+    let (xs, labels) = accurate_labeled_set(&net, 128, 5);
+    let sens = SensitivityModel::measure(&net, &xs, &labels);
+    let dir = std::env::temp_dir().join("ecmac_frontier_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("schedule_sweep.json");
+    sens.save(&p).unwrap();
+    let back = SensitivityModel::load(&p).unwrap();
+    assert_eq!(back.sizes(), sens.sizes());
+    assert_eq!(back.images(), sens.images());
+    // frontiers built from the persisted and in-memory models agree
+    let f1 = ScheduleFrontier::search(&pm, &sens, &topo, 64);
+    let f2 = ScheduleFrontier::search(&pm, &back, &topo, 64);
+    assert_eq!(f1.len(), f2.len());
+    for (a, b) in f1.points().iter().zip(f2.points()) {
+        assert_eq!(a.sched.resolve(2), b.sched.resolve(2));
+        assert!((a.accuracy - b.accuracy).abs() < 1e-12);
+    }
+}

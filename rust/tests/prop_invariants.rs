@@ -286,6 +286,85 @@ fn prop_governor_budget_monotone() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// schedule-frontier invariants
+// ---------------------------------------------------------------------------
+
+/// Random (but valid) sensitivity model over the seed topology: drops in
+/// [0, 0.1] accuracy, zero at the accurate configuration.  Shorter raw
+/// vectors cycle instead of zero-filling so even heavily-shrunk inputs
+/// exercise non-degenerate models (an empty vector falls back to a
+/// deterministic non-zero pattern).
+fn sens_from_raw(raw: &[i64]) -> ecmac::coordinator::sensitivity::SensitivityModel {
+    let n = ecmac::amul::N_CONFIGS;
+    let mut drop = vec![vec![0.0; n]; 2];
+    for l in 0..2 {
+        for c in 1..n {
+            let i = l * n + c;
+            let v = if raw.is_empty() {
+                (i as i64 * 37) % 1000
+            } else {
+                raw[i % raw.len()]
+            };
+            drop[l][c] = v as f64 * 1e-4;
+        }
+    }
+    ecmac::coordinator::sensitivity::SensitivityModel::new(vec![62, 30, 10], 0.9, 100, drop)
+        .unwrap()
+}
+
+#[test]
+fn prop_schedule_frontier_strictly_pareto() {
+    use ecmac::coordinator::frontier::ScheduleFrontier;
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(400, 9)).unwrap();
+    let topo = ecmac::weights::Topology::seed();
+    check(
+        "schedule frontier: power strictly decreasing => accuracy non-increasing, \
+         no dominated points",
+        30,
+        gen_vec(gen_i64(0, 1000), 66),
+        |raw| {
+            let sens = sens_from_raw(raw);
+            let f = ScheduleFrontier::search(&pm, &sens, &topo, 64);
+            if f.is_empty() {
+                return false;
+            }
+            f.points().windows(2).all(|w| {
+                w[0].energy_nj <= w[1].energy_nj
+                    && w[0].power_mw <= w[1].power_mw + 1e-12
+                    && w[0].accuracy < w[1].accuracy
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_schedule_search_never_dominated_by_uniform() {
+    use ecmac::amul::ConfigSchedule;
+    use ecmac::coordinator::frontier::ScheduleFrontier;
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(400, 9)).unwrap();
+    let topo = ecmac::weights::Topology::seed();
+    check(
+        "no frontier schedule is dominated by a uniform configuration",
+        30,
+        gen_vec(gen_i64(0, 1000), 66),
+        |raw| {
+            let sens = sens_from_raw(raw);
+            let f = ScheduleFrontier::search(&pm, &sens, &topo, 64);
+            f.points().iter().all(|p| {
+                Config::all().all(|cfg| {
+                    let u = ConfigSchedule::uniform(cfg);
+                    let ue = pm.energy_per_image_nj_sched(&topo, &u);
+                    let ua = sens.predict(&u);
+                    // uniform must not strictly dominate the point
+                    !((ue < p.energy_nj && ua >= p.accuracy)
+                        || (ue <= p.energy_nj && ua > p.accuracy))
+                })
+            })
+        },
+    );
+}
+
 #[test]
 fn prop_channel_preserves_order_single_consumer() {
     use ecmac::util::threadpool::Channel;
