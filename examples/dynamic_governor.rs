@@ -29,7 +29,8 @@ fn main() -> anyhow::Result<()> {
     let acc_table = AccuracyTable::load(&dir.join("accuracy_sweep.json"))?;
 
     // budget: 94% of what accurate mode would need for the workload
-    let e_accurate_mj = pm.energy_per_image_nj(Config::ACCURATE) * 1e-6;
+    let topo = QuantWeights::load_artifacts(&dir)?.topology;
+    let e_accurate_mj = pm.energy_per_image_nj(&topo, Config::ACCURATE) * 1e-6;
     let budget_mj = e_accurate_mj * WORKLOAD as f64 * 0.94;
     println!(
         "workload: {WORKLOAD} images; budget {budget_mj:.3} mJ \
@@ -97,6 +98,7 @@ fn run(
             max_wait: Duration::from_micros(100),
             queue_capacity: 8192,
             workers: 2,
+            shards: 2,
         },
         Arc::new(NativeBackend { network: net }) as Arc<dyn Backend>,
         gov,

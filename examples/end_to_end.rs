@@ -166,6 +166,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_micros(200),
             queue_capacity: 8192,
             workers: 2,
+            shards: 2,
         },
         Arc::new(NativeBackend {
             network: Network::new(QuantWeights::load_artifacts(&dir)?),

@@ -39,6 +39,7 @@ fn main() {
     bench_netlist(&mut b);
     bench_l1(&mut b);
     bench_datapath(&mut b);
+    bench_cycle_batch(&mut b);
     bench_frontier(&mut b);
     bench_runtime(&mut b);
     bench_coordinator(&mut b);
@@ -195,6 +196,19 @@ fn bench_datapath(b: &mut Bencher) {
     });
 }
 
+/// Interleaved cycle-accurate batch vs the per-image FSM: the batch
+/// schedule shares partial passes between images, so it must win wall
+/// time (and modeled cycles) on any topology with a partial pass.
+/// Registration is shared with `ecmac bench --cycle-batch` so the CI
+/// artifact and this suite measure the same thing.
+fn bench_cycle_batch(b: &mut Bencher) {
+    let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
+    for spec in ["62,30,10", "8,23,5"] {
+        let topo = ecmac::weights::Topology::parse(spec).unwrap();
+        ecmac::testkit::bench_cycle_batch_pair(b, &topo, 16, &sched);
+    }
+}
+
 /// Schedule-space frontier: the sensitivity sweep harness and the
 /// pruned per-layer search (the governor pays the search once per
 /// sensitivity model, so both must stay cheap).
@@ -260,6 +274,7 @@ fn bench_coordinator(b: &mut Bencher) {
                 max_wait: Duration::from_micros(50),
                 queue_capacity: 8192,
                 workers: 2,
+                shards: 2,
             },
             Arc::new(NativeBackend {
                 network: test_network(),

@@ -38,6 +38,9 @@ pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
     pub rejected: u64,
+    /// Logical batches the backend failed to serve (execution error or
+    /// a result-length mismatch); their requests saw channel closure.
+    pub backend_errors: u64,
     /// Requests served per *uniform* configuration.
     pub per_cfg: Vec<u64>,
     /// Requests served under non-uniform (per-layer) schedules.
@@ -55,6 +58,7 @@ impl Default for Metrics {
             requests: 0,
             batches: 0,
             rejected: 0,
+            backend_errors: 0,
             per_cfg: vec![0; crate::amul::N_CONFIGS],
             mixed: 0,
             energy_mj: 0.0,
@@ -69,6 +73,7 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub rejected: u64,
+    pub backend_errors: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
     pub p99_latency_us: u64,
@@ -84,6 +89,7 @@ impl Metrics {
             requests: self.requests,
             batches: self.batches,
             rejected: self.rejected,
+            backend_errors: self.backend_errors,
             mean_latency_us: self.latency.mean_us(),
             p50_latency_us: self.latency.percentile_us(50.0),
             p99_latency_us: self.latency.percentile_us(99.0),

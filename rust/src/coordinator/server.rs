@@ -22,7 +22,7 @@ use super::request::{ClassifyRequest, ClassifyResponse, Metrics, MetricsSnapshot
 use crate::amul::{Config, ConfigSchedule};
 use crate::dataset::N_FEATURES;
 use crate::power::PowerModel;
-use crate::util::threadpool::Channel;
+use crate::util::threadpool::{Channel, ThreadPool};
 use crate::weights::Topology;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -195,8 +195,14 @@ pub struct CoordinatorConfig {
     pub max_wait: Duration,
     /// Bounded request-queue capacity (backpressure).
     pub queue_capacity: usize,
-    /// Number of executor worker threads.
+    /// Number of executor worker threads (also the shard-pool width).
     pub workers: usize,
+    /// Sub-batches one logical batch is split into on the shared
+    /// [`ThreadPool`], so several pool threads execute one batch
+    /// cooperatively.  `1` executes inline on the worker thread; the
+    /// shard results fold back into a single metrics + governor
+    /// feedback per logical batch either way.
+    pub shards: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -206,6 +212,7 @@ impl Default for CoordinatorConfig {
             max_wait: Duration::from_micros(500),
             queue_capacity: 1024,
             workers: 2,
+            shards: 2,
         }
     }
 }
@@ -287,6 +294,13 @@ impl Coordinator {
             );
         }
 
+        // shared shard pool (only when sharding is on): one thread per
+        // worker, so sharding a batch never reduces parallelism —
+        // shards from concurrent workers queue cooperatively.  The
+        // workers hold the only references; the pool shuts down with
+        // the last exiting worker.
+        let pool = (cfg.shards > 1).then(|| Arc::new(ThreadPool::new(cfg.workers.max(1))));
+
         // worker threads
         for i in 0..cfg.workers.max(1) {
             let batch_queue = batch_queue.clone();
@@ -294,12 +308,22 @@ impl Coordinator {
             let metrics = Arc::clone(&metrics);
             let governor = Arc::clone(&governor);
             let power = power.clone();
+            let pool = pool.clone();
+            let shards = cfg.shards;
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("ecmac-exec-{i}"))
                     .spawn(move || {
                         while let Some(batch) = batch_queue.recv() {
-                            Self::serve_batch(batch, &*backend, &metrics, &governor, &power);
+                            Self::serve_batch(
+                                batch,
+                                &backend,
+                                pool.as_deref(),
+                                shards,
+                                &metrics,
+                                &governor,
+                                &power,
+                            );
                         }
                     })
                     .expect("spawn worker"),
@@ -316,23 +340,93 @@ impl Coordinator {
         }
     }
 
+    /// Execute one logical batch, split into up to `shards` sub-batches
+    /// running cooperatively on the shard pool.  Shard results fold
+    /// back in submission order; the first shard error fails the whole
+    /// batch.
+    fn execute_sharded(
+        backend: &Arc<dyn Backend>,
+        pool: Option<&ThreadPool>,
+        shards: usize,
+        xs: &[[u8; N_FEATURES]],
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        let n = xs.len();
+        let n_shards = shards.clamp(1, n.max(1));
+        let Some(pool) = pool else {
+            return backend.execute(xs, sched);
+        };
+        if n_shards <= 1 {
+            return backend.execute(xs, sched);
+        }
+        let chunk = n.div_ceil(n_shards);
+        let jobs: Vec<_> = xs
+            .chunks(chunk)
+            .map(|shard| {
+                let shard = shard.to_vec();
+                let backend = Arc::clone(backend);
+                let sched = sched.clone();
+                move || {
+                    // a panicking backend must fail the batch (the
+                    // caller's error path closes the reply channels),
+                    // not unwind through the scatter collector and
+                    // strand the batch's requesters
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        backend.execute(&shard, &sched)
+                    }))
+                    .unwrap_or_else(|_| {
+                        Err(anyhow::anyhow!(
+                            "backend '{}' panicked on a {}-image shard",
+                            backend.name(),
+                            shard.len()
+                        ))
+                    })
+                }
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n);
+        for shard in pool.scatter(jobs) {
+            out.extend(shard?);
+        }
+        Ok(out)
+    }
+
     fn serve_batch(
         batch: Batch,
-        backend: &dyn Backend,
+        backend: &Arc<dyn Backend>,
+        pool: Option<&ThreadPool>,
+        shards: usize,
         metrics: &Mutex<Metrics>,
         governor: &Mutex<Governor>,
         power: &PowerModel,
     ) {
         let sched = governor.lock().unwrap().current();
         let xs: Vec<[u8; N_FEATURES]> = batch.requests.iter().map(|r| r.features).collect();
-        let t0 = Instant::now();
-        let results = backend.execute(&xs, &sched);
-        let exec_us = t0.elapsed().as_micros() as u64;
         let n = batch.requests.len();
-        // modeled accelerator energy for this batch, layer by layer
-        let energy_mj =
-            power.energy_per_image_nj_sched(backend.topology(), &sched) * n as f64 * 1e-6;
-        governor.lock().unwrap().feedback(n as u64, energy_mj);
+        let t0 = Instant::now();
+        let results = Self::execute_sharded(backend, pool, shards, &xs, &sched);
+        let exec_us = t0.elapsed().as_micros() as u64;
+        // a short/long result would silently truncate the reply zip
+        // below and leave requesters hanging on open channels — treat
+        // any length mismatch as a backend failure
+        let results = results.and_then(|outs| {
+            anyhow::ensure!(
+                outs.len() == n,
+                "backend '{}' returned {} outputs for a batch of {n}",
+                backend.name(),
+                outs.len()
+            );
+            Ok(outs)
+        });
+        // modeled accelerator energy for the *interleaved* batch (partial
+        // passes shared between images), charged and fed back to the
+        // governor once per logical batch — never per shard, and never
+        // for a failed batch
+        let mut energy_mj = 0.0;
+        if results.is_ok() {
+            energy_mj = power.batch_energy_nj(backend.topology(), &sched, n as u64) * 1e-6;
+            governor.lock().unwrap().feedback(n as u64, energy_mj);
+        }
         // per-request latencies, measured before the single metrics
         // lock below: one acquisition per batch, not one per request
         let latencies: Option<Vec<u64>> = results.is_ok().then(|| {
@@ -347,21 +441,24 @@ impl Coordinator {
             m.batches += 1;
             m.batch_size_sum += n as u64;
             m.batch_latency.record_us(exec_us.max(1));
-            match sched.as_uniform() {
-                Some(cfg) => m.per_cfg[cfg.index()] += n as u64,
-                None => m.mixed += n as u64,
-            }
-            m.energy_mj += energy_mj;
+            // requests counts execution attempts (a failed batch's
+            // requesters still saw their submission accepted)
             m.requests += n as u64;
             if let Some(ls) = &latencies {
+                match sched.as_uniform() {
+                    Some(cfg) => m.per_cfg[cfg.index()] += n as u64,
+                    None => m.mixed += n as u64,
+                }
+                m.energy_mj += energy_mj;
                 for &l in ls {
                     m.latency.record_us(l);
                 }
+            } else {
+                m.backend_errors += 1;
             }
         }
         match results {
             Ok(outs) => {
-                debug_assert_eq!(outs.len(), n);
                 let latencies = latencies.unwrap_or_default();
                 for ((req, (logits, pred)), latency_us) in
                     batch.requests.into_iter().zip(outs).zip(latencies)
@@ -387,7 +484,8 @@ impl Coordinator {
     }
 
     /// Submit a request; returns the reply channel, or `None` if the
-    /// queue is full (backpressure) or closed.
+    /// queue is full (backpressure) or closed.  Every failed submission
+    /// — full *or* closed — is counted in [`MetricsSnapshot::rejected`].
     pub fn try_submit(&self, features: [u8; N_FEATURES]) -> Option<Channel<ClassifyResponse>> {
         let reply: Channel<ClassifyResponse> = Channel::new(1);
         let req = ClassifyRequest {
@@ -398,15 +496,15 @@ impl Coordinator {
         };
         match self.queue.try_send(req) {
             Ok(true) => Some(reply),
-            Ok(false) => {
+            Ok(false) | Err(_) => {
                 self.metrics.lock().unwrap().rejected += 1;
                 None
             }
-            Err(_) => None,
         }
     }
 
-    /// Blocking submit + wait.
+    /// Blocking submit + wait.  A submission into a closed intake is
+    /// rejected (and counted) like any other failed submission.
     pub fn classify(&self, features: [u8; N_FEATURES]) -> Option<ClassifyResponse> {
         let reply: Channel<ClassifyResponse> = Channel::new(1);
         let req = ClassifyRequest {
@@ -415,8 +513,18 @@ impl Coordinator {
             enqueued: Instant::now(),
             reply: reply.clone(),
         };
-        self.queue.send(req).ok()?;
+        if self.queue.send(req).is_err() {
+            self.metrics.lock().unwrap().rejected += 1;
+            return None;
+        }
         reply.recv()
+    }
+
+    /// Stop accepting new requests (the graceful-shutdown first phase);
+    /// already-queued requests still drain through the workers.
+    /// Subsequent submissions are rejected and counted.
+    pub fn close_intake(&self) {
+        self.queue.close();
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -574,6 +682,7 @@ mod tests {
                 max_wait: Duration::from_millis(20),
                 queue_capacity: 256,
                 workers: 1,
+                shards: 2,
             },
         );
         // submit a burst, then collect
@@ -605,6 +714,7 @@ mod tests {
                 max_wait: Duration::from_micros(1),
                 queue_capacity: 2,
                 workers: 1,
+                shards: 1,
             },
         );
         let mut accepted = 0;
@@ -639,6 +749,7 @@ mod tests {
                 max_wait: Duration::from_millis(5),
                 queue_capacity: 512,
                 workers: 2,
+                shards: 3,
             },
         );
         let replies: Vec<_> = (0..100u8)
@@ -649,6 +760,142 @@ mod tests {
         for r in replies {
             assert!(r.recv().is_some(), "pending request lost at shutdown");
         }
+    }
+
+    /// A backend that drops the last output of every batch — the
+    /// release-mode hazard the length-mismatch guard must catch.
+    struct TruncatingBackend {
+        inner: NativeBackend,
+    }
+
+    impl Backend for TruncatingBackend {
+        fn execute(
+            &self,
+            xs: &[[u8; N_FEATURES]],
+            sched: &ConfigSchedule,
+        ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+            let mut outs = self.inner.execute(xs, sched)?;
+            outs.pop();
+            Ok(outs)
+        }
+
+        fn name(&self) -> &'static str {
+            "truncating"
+        }
+
+        fn topology(&self) -> &Topology {
+            self.inner.topology()
+        }
+    }
+
+    #[test]
+    fn short_backend_result_fails_the_batch_instead_of_hanging() {
+        let inner = test_backend();
+        let backend = Arc::new(TruncatingBackend {
+            inner: NativeBackend {
+                network: crate::datapath::Network::new(inner.network.weights.clone()),
+            },
+        });
+        let (gov, pm) = test_governor(Policy::Fixed(Config::ACCURATE));
+        let coord = Coordinator::start(
+            CoordinatorConfig::default(),
+            backend as Arc<dyn Backend>,
+            gov,
+            pm,
+        );
+        let replies: Vec<_> = (0..8u8)
+            .map(|i| coord.try_submit([i; N_FEATURES]).expect("queued"))
+            .collect();
+        for r in replies {
+            // the guard must close the reply channel, never leave the
+            // requester hanging or silently drop only the tail request
+            assert!(r.recv().is_none(), "mismatched batch must fail whole");
+        }
+        let m = coord.shutdown();
+        assert!(m.backend_errors >= 1, "mismatch must be counted");
+        assert_eq!(m.requests, 8, "attempts stay accounted");
+        assert_eq!(m.energy_mj, 0.0, "failed batches draw no modeled energy");
+        assert_eq!(m.per_cfg.iter().sum::<u64>(), 0, "nothing was served");
+    }
+
+    #[test]
+    fn panicking_shard_becomes_a_backend_error() {
+        struct PanickingBackend {
+            topo: Topology,
+        }
+        impl Backend for PanickingBackend {
+            fn execute(
+                &self,
+                _: &[[u8; N_FEATURES]],
+                _: &ConfigSchedule,
+            ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+                panic!("injected backend panic")
+            }
+            fn name(&self) -> &'static str {
+                "panicking"
+            }
+            fn topology(&self) -> &Topology {
+                &self.topo
+            }
+        }
+        let backend: Arc<dyn Backend> = Arc::new(PanickingBackend {
+            topo: Topology::seed(),
+        });
+        let pool = ThreadPool::new(2);
+        let xs = [[0u8; N_FEATURES]; 4];
+        let sched = ConfigSchedule::uniform(Config::ACCURATE);
+        let err = Coordinator::execute_sharded(&backend, Some(&pool), 2, &xs, &sched)
+            .expect_err("panicking shard must surface as an error, not unwind");
+        assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+        // the shard pool survives for the next batch
+        assert_eq!(pool.scatter(vec![|| 1u32]), vec![1]);
+    }
+
+    #[test]
+    fn closed_intake_rejections_are_counted() {
+        let (coord, _) = start(
+            Policy::Fixed(Config::ACCURATE),
+            CoordinatorConfig::default(),
+        );
+        assert!(coord.classify([1; N_FEATURES]).is_some());
+        coord.close_intake();
+        assert!(coord.try_submit([2; N_FEATURES]).is_none());
+        assert!(coord.classify([3; N_FEATURES]).is_none());
+        let m = coord.shutdown();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.rejected, 2, "closed-intake submissions must be counted");
+    }
+
+    #[test]
+    fn sharded_batches_fold_into_one_logical_batch() {
+        let (coord, backend) = start(
+            Policy::Fixed(Config::new(5).unwrap()),
+            CoordinatorConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(20),
+                queue_capacity: 256,
+                workers: 1,
+                shards: 4,
+            },
+        );
+        let mut replies = Vec::new();
+        for i in 0..32u8 {
+            replies.push((i, coord.try_submit([i; N_FEATURES]).expect("queued")));
+        }
+        for (i, r) in replies {
+            let resp = r.recv().expect("reply");
+            let want = backend.network.forward(&[i; N_FEATURES], Config::new(5).unwrap());
+            assert_eq!(resp.pred, want.pred);
+            assert_eq!(resp.logits, want.logits, "shard fold must preserve order");
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.requests, 32);
+        assert_eq!(m.backend_errors, 0);
+        assert!(
+            m.mean_batch_size > 1.5,
+            "sharding must not split the logical batch metrics: {}",
+            m.mean_batch_size
+        );
     }
 
     #[test]

@@ -77,6 +77,124 @@ pub fn layer_plans(topo: &Topology) -> Vec<LayerPlan> {
         .collect()
 }
 
+/// One lane's work assignment inside an interleaved batch pass-group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneSlot {
+    /// Batch index of the image this lane accumulates for.
+    pub image: u32,
+    /// Absolute output-unit index within the pass-group's layer.
+    pub unit: u32,
+}
+
+/// One pass-group of the interleaved batch schedule: the array streams
+/// the layer's fan-in once (plus one epilogue cycle) while each active
+/// lane accumulates one `(image, unit)` pair.
+///
+/// Full passes keep the per-image FSM's lane mapping (lane `p` computes
+/// unit `base + p` of a single image).  Partial passes — the last pass
+/// of a layer whose width does not divide the array — are packed
+/// image-major: the idle lanes of one image's partial pass carry the
+/// partial-pass units of the following images, so a batch retires
+/// `ceil(batch * partial_width / N_PHYSICAL)` partial pass-groups
+/// instead of `batch`.  The cost is the extra weight-bank muxing
+/// ([`PassGroup::extra_wsel`]): every lane group beyond the first reads
+/// the same weight bank through one additional `wsel` routing line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PassGroup {
+    /// Weight layer the group executes.
+    pub layer: u8,
+    /// Weight/bias bank select (the global pass index, as in
+    /// [`Signals::wsel`]; shared by every lane of the group).
+    pub wsel: u8,
+    /// Work per physical neuron; `lanes[p]` drives lane `p`, trailing
+    /// idle lanes are omitted (`lanes.len() <= N_PHYSICAL`).
+    pub lanes: Vec<LaneSlot>,
+    /// Additional weight-bank mux lines asserted: the number of images
+    /// interleaved into the group beyond the first (0 for every
+    /// non-interleaved pass).
+    pub extra_wsel: u32,
+}
+
+/// Build the interleaved batch schedule for `batch` images (layer-major:
+/// every image finishes layer `l` before any image starts layer `l+1`,
+/// so activation registers are always ready).  Within a layer the full
+/// passes run pass-major — the weight bank stays selected while the
+/// whole batch streams through it — and the partial passes are packed
+/// image-major into shared pass-groups.
+///
+/// With `batch == 1` the schedule is exactly the per-image FSM's pass
+/// sequence; the packing only wins (and only asserts `extra_wsel`
+/// lines) when a layer has a partial pass and the batch is deep enough
+/// to share it.
+pub fn batch_pass_groups(topo: &Topology, batch: u32) -> Vec<PassGroup> {
+    let plans = layer_plans(topo);
+    let mut groups = Vec::new();
+    let mut wsel_base = 0u32;
+    for (l, plan) in plans.iter().enumerate() {
+        let r = topo.partial_pass_width(l);
+        let full_passes = if r == 0 { plan.passes } else { plan.passes - 1 };
+        for p in 0..full_passes {
+            let base = p as usize * N_PHYSICAL;
+            for img in 0..batch {
+                groups.push(PassGroup {
+                    layer: l as u8,
+                    wsel: (wsel_base + p) as u8,
+                    lanes: (0..N_PHYSICAL)
+                        .map(|n| LaneSlot {
+                            image: img,
+                            unit: (base + n) as u32,
+                        })
+                        .collect(),
+                    extra_wsel: 0,
+                });
+            }
+        }
+        if r > 0 {
+            let base = full_passes as usize * N_PHYSICAL;
+            let wsel = (wsel_base + full_passes) as u8;
+            let mut lanes: Vec<LaneSlot> = Vec::with_capacity(N_PHYSICAL);
+            for img in 0..batch {
+                for j in 0..r {
+                    lanes.push(LaneSlot {
+                        image: img,
+                        unit: (base + j) as u32,
+                    });
+                    if lanes.len() == N_PHYSICAL {
+                        let extra_wsel = count_extra_images(&lanes);
+                        groups.push(PassGroup {
+                            layer: l as u8,
+                            wsel,
+                            lanes: std::mem::take(&mut lanes),
+                            extra_wsel,
+                        });
+                    }
+                }
+            }
+            if !lanes.is_empty() {
+                let extra_wsel = count_extra_images(&lanes);
+                groups.push(PassGroup {
+                    layer: l as u8,
+                    wsel,
+                    lanes,
+                    extra_wsel,
+                });
+            }
+        }
+        wsel_base += plan.passes;
+    }
+    groups
+}
+
+fn count_extra_images(lanes: &[LaneSlot]) -> u32 {
+    let mut extra = 0u32;
+    for w in lanes.windows(2) {
+        if w[0].image != w[1].image {
+            extra += 1;
+        }
+    }
+    extra
+}
+
 /// Seed-network cycle counts (kept for the paper-comparison paths).
 pub const HIDDEN_MAC_CYCLES: u32 = 62;
 pub const OUTPUT_MAC_CYCLES: u32 = 30;
@@ -333,6 +451,66 @@ mod tests {
         assert_eq!(plans[0].active(1), 10);
         assert_eq!(plans[0].active(2), 3);
         assert_eq!(plans[1].active(0), 5);
+    }
+
+    #[test]
+    fn batch_pass_groups_match_topology_accounting() {
+        for (spec, b) in [("62,30,10", 4u32), ("8,23,5", 5), ("4,4,3", 7), ("62,20,20,10", 3)] {
+            let topo = Topology::parse(spec).unwrap();
+            let groups = batch_pass_groups(&topo, b);
+            for l in 0..topo.n_layers() {
+                let layer_groups: Vec<_> =
+                    groups.iter().filter(|g| g.layer as usize == l).collect();
+                assert_eq!(
+                    layer_groups.len() as u64,
+                    topo.batch_layer_passes(l, b as u64),
+                    "{spec} layer {l}"
+                );
+                // every (image, unit) of the layer retired exactly once
+                let mut seen = std::collections::HashSet::new();
+                for g in &layer_groups {
+                    assert!(g.lanes.len() <= N_PHYSICAL);
+                    for s in &g.lanes {
+                        assert!((s.unit as usize) < topo.layer_out(l), "{spec}");
+                        assert!(s.image < b, "{spec}");
+                        assert!(seen.insert((s.image, s.unit)), "{spec}: duplicate slot");
+                    }
+                }
+                assert_eq!(seen.len(), b as usize * topo.layer_out(l), "{spec} layer {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_of_one_is_the_per_image_schedule() {
+        let topo = Topology::parse("8,23,5").unwrap();
+        let groups = batch_pass_groups(&topo, 1);
+        let wsels: Vec<u8> = groups.iter().map(|g| g.wsel).collect();
+        assert_eq!(wsels, vec![0, 1, 2, 3]);
+        assert!(groups.iter().all(|g| g.extra_wsel == 0));
+        assert_eq!(topo.batch_cycles(1), topo.cycles_per_image());
+        assert!(batch_pass_groups(&topo, 0).is_empty());
+    }
+
+    #[test]
+    fn interleaved_partial_passes_share_lanes() {
+        // 4-4-3: both layers are pure partial passes
+        let topo = Topology::parse("4,4,3").unwrap();
+        let groups = batch_pass_groups(&topo, 5);
+        // layer 0: 5 images x 4 units = 20 unit-slots -> 2 pass-groups
+        assert_eq!(groups.iter().filter(|g| g.layer == 0).count(), 2);
+        // layer 1: 5 images x 3 units = 15 unit-slots -> 2 pass-groups
+        assert_eq!(groups.iter().filter(|g| g.layer == 1).count(), 2);
+        let g0 = &groups[0];
+        assert_eq!(g0.lanes.len(), N_PHYSICAL);
+        // images 0 and 1 in full, image 2 split across the boundary
+        let distinct: std::collections::HashSet<u32> =
+            g0.lanes.iter().map(|s| s.image).collect();
+        assert_eq!(distinct.len(), 3);
+        assert_eq!(g0.extra_wsel, 2);
+        // 4 pass-groups x (4 + 1) cycles, vs 5 sequential images x 10
+        assert_eq!(topo.batch_cycles(5), 20);
+        assert_eq!(5 * topo.cycles_per_image(), 50);
     }
 
     #[test]

@@ -57,6 +57,37 @@ pub struct ActivityStats {
     pub images: u64,
 }
 
+/// Result of a cycle-accurate interleaved batch run
+/// ([`Network::batch_forward_cycle_accurate`]).
+#[derive(Debug, Clone)]
+pub struct BatchCycleResult {
+    /// Per-image classification results, in submission order —
+    /// bit-exact with [`DatapathSim::run_image`] image by image.
+    pub results: Vec<ImageResult>,
+    /// Exact simulated cycles for the whole batch
+    /// (`topology.batch_cycles(b)`; `b * cycles_per_image()` when no
+    /// layer has a partial pass).
+    pub cycles: u64,
+    /// Total MACs issued across the batch.
+    pub mac_ops: u64,
+    /// MACs per multiplier configuration — the per-config tally the
+    /// power model charges (a per-layer schedule lands each layer's
+    /// MACs on that layer's configuration).
+    pub mac_ops_per_cfg: [u64; crate::amul::N_CONFIGS],
+    /// MACs issued per image (identical to the per-image FSM's tally).
+    pub per_image_mac_ops: Vec<u64>,
+    /// Extra weight-bank mux lines asserted, summed over interleaved
+    /// pass-groups — the muxing cost of sharing partial passes.
+    pub extra_wsel_asserts: u64,
+}
+
+impl BatchCycleResult {
+    /// Cycles the per-image FSM would need for the same batch.
+    pub fn sequential_cycles(&self, topo: &Topology) -> u64 {
+        self.results.len() as u64 * topo.cycles_per_image()
+    }
+}
+
 /// The trained network bound to the multiplier tables.
 pub struct Network {
     pub weights: QuantWeights,
@@ -196,6 +227,105 @@ impl Network {
                 hidden: h,
             })
             .collect()
+    }
+
+    /// Cycle-accurate *interleaved* batch execution: the whole batch
+    /// walks the pass-group schedule from
+    /// [`controller::batch_pass_groups`] on the 10 physical neurons,
+    /// layer-major.  Full passes run exactly like the per-image FSM;
+    /// partial passes pack several images onto the lanes the per-image
+    /// FSM would leave idle, at the cost of the extra weight-bank mux
+    /// lines tallied in [`BatchCycleResult::extra_wsel_asserts`].
+    ///
+    /// Bit-exact with [`DatapathSim::run_image`] image by image (same
+    /// logits, same hidden registers, same per-image MAC counts), and
+    /// strictly cheaper in total cycles than `b` sequential images
+    /// whenever a layer has a partial pass and the batch is deep enough
+    /// to share it (`topology.batch_cycles(b)` is the exact count).
+    ///
+    /// Heterogeneous per-neuron configurations are not supported here:
+    /// interleaving remaps units across lanes, which would silently
+    /// change which configuration a unit runs under.  Schedules are
+    /// per-layer, as everywhere else.
+    pub fn batch_forward_cycle_accurate<X: AsRef<[u8]>>(
+        &self,
+        xs: &[X],
+        sched: &ConfigSchedule,
+    ) -> BatchCycleResult {
+        let topo = &self.weights.topology;
+        let b = xs.len();
+        for x in xs {
+            assert_eq!(
+                x.as_ref().len(),
+                topo.inputs(),
+                "input width mismatch for topology {topo}"
+            );
+        }
+        let n_layers = topo.n_layers();
+        let tables: Vec<&MulTable> =
+            (0..n_layers).map(|l| self.tables.get(sched.layer(l))).collect();
+        let groups = controller::batch_pass_groups(topo, b as u32);
+        let mut neurons: Vec<Neuron> = (0..N_PHYSICAL).map(|_| Neuron::new()).collect();
+        let mut act_regs: Vec<Vec<Vec<u8>>> = (0..b)
+            .map(|_| (0..n_layers - 1).map(|l| vec![0u8; topo.layer_out(l)]).collect())
+            .collect();
+        let mut logits: Vec<Vec<i32>> = (0..b).map(|_| vec![0i32; topo.outputs()]).collect();
+        let mut cycles = 0u64;
+        let mut mac_ops = 0u64;
+        let mut mac_ops_per_cfg = [0u64; crate::amul::N_CONFIGS];
+        let mut per_image_mac_ops = vec![0u64; b];
+        let mut extra_wsel_asserts = 0u64;
+        for g in &groups {
+            let l = g.layer as usize;
+            let lw = &self.weights.layers[l];
+            let table = tables[l];
+            let last_layer = l + 1 == n_layers;
+            // streaming phase: one fan-in element per cycle; each lane
+            // MACs its own image's element against its unit's weight
+            for c in 0..lw.n_in {
+                for (p, slot) in g.lanes.iter().enumerate() {
+                    let img = slot.image as usize;
+                    let xi = if l == 0 { xs[img].as_ref()[c] } else { act_regs[img][l - 1][c] };
+                    neurons[p].mac(xi, lw.w_at(c, slot.unit as usize), table);
+                }
+                cycles += 1;
+            }
+            let group_macs = lw.n_in as u64 * g.lanes.len() as u64;
+            mac_ops += group_macs;
+            mac_ops_per_cfg[sched.layer(l).index()] += group_macs;
+            for slot in &g.lanes {
+                per_image_mac_ops[slot.image as usize] += lw.n_in as u64;
+            }
+            extra_wsel_asserts += g.extra_wsel as u64;
+            // epilogue cycle: bias + activation + register store on
+            // hidden layers, raw logits on the final layer
+            for (p, slot) in g.lanes.iter().enumerate() {
+                let (img, j) = (slot.image as usize, slot.unit as usize);
+                if last_layer {
+                    logits[img][j] = neurons[p].retire_logit(lw.b[j]);
+                } else {
+                    act_regs[img][l][j] = neurons[p].retire_hidden(lw.b[j]);
+                }
+            }
+            cycles += 1;
+        }
+        let results = act_regs
+            .into_iter()
+            .zip(logits)
+            .map(|(regs, lg)| ImageResult {
+                pred: argmax(&lg) as u8,
+                logits: lg,
+                hidden: regs.into_iter().flatten().collect(),
+            })
+            .collect();
+        BatchCycleResult {
+            results,
+            cycles,
+            mac_ops,
+            mac_ops_per_cfg,
+            per_image_mac_ops,
+            extra_wsel_asserts,
+        }
     }
 
     /// Heterogeneous forward pass: each *physical neuron* `p` runs its
@@ -402,19 +532,15 @@ impl<'w> DatapathSim<'w> {
                 } else if sig.store_en {
                     for p in 0..active {
                         let j = base + p;
-                        self.neurons[p].add_bias(lw.b[j]);
-                        let h = self.neurons[p].activate();
+                        let h = self.neurons[p].retire_hidden(lw.b[j]);
                         self.stats.reg_toggles +=
                             (self.act_regs[l][j] ^ h).count_ones() as u64;
                         self.act_regs[l][j] = h;
-                        self.neurons[p].clear();
                     }
                 } else if sig.max_en {
                     for p in 0..active {
                         let j = base + p;
-                        self.neurons[p].add_bias(lw.b[j]);
-                        logits[j] = self.neurons[p].acc();
-                        self.neurons[p].clear();
+                        logits[j] = self.neurons[p].retire_logit(lw.b[j]);
                     }
                 }
             }
@@ -658,6 +784,77 @@ mod tests {
         assert_eq!(sim.stats.cycles, topo.cycles_per_image());
         // layer 0: 4 inputs x 4 active neurons; layer 1: 4 x 3
         assert_eq!(sim.stats.mac_ops, 16 + 12);
+    }
+
+    #[test]
+    fn cycle_batch_bit_exact_and_faster_on_partial_pass_topology() {
+        let topo = Topology::parse("8,23,5").unwrap();
+        let net = Network::new(QuantWeights::random(&topo, 0xAB));
+        let mut rng = Pcg32::new(9);
+        for trial in 0..4 {
+            let sched = random_schedule(&topo, &mut rng);
+            let xs = random_inputs_for(&topo, &mut rng, 12);
+            let batch = net.batch_forward_cycle_accurate(&xs, &sched);
+            assert_eq!(batch.results.len(), 12);
+            let mut seq_macs = 0u64;
+            for (i, x) in xs.iter().enumerate() {
+                let mut sim = DatapathSim::new_scheduled(&net, sched.clone());
+                let r = sim.run_image(x);
+                assert_eq!(batch.results[i], r, "trial {trial} image {i}");
+                assert_eq!(batch.per_image_mac_ops[i], sim.stats.mac_ops, "trial {trial}");
+                seq_macs += sim.stats.mac_ops;
+            }
+            assert_eq!(batch.mac_ops, seq_macs);
+            assert_eq!(batch.mac_ops_per_cfg.iter().sum::<u64>(), batch.mac_ops);
+            assert_eq!(batch.cycles, topo.batch_cycles(12));
+            assert!(batch.cycles < batch.sequential_cycles(&topo));
+            assert!(batch.extra_wsel_asserts > 0);
+        }
+    }
+
+    #[test]
+    fn cycle_batch_on_seed_matches_sequential_cycles_exactly() {
+        let net = test_network();
+        let mut rng = Pcg32::new(21);
+        let xs: Vec<[u8; N_FEATURES]> = (0..6).map(|_| random_input(&mut rng)).collect();
+        let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
+        let batch = net.batch_forward_cycle_accurate(&xs, &sched);
+        // the seed network has no partial pass: no interleave, no muxing
+        assert_eq!(batch.cycles, 6 * controller::CYCLES_PER_IMAGE as u64);
+        assert_eq!(batch.extra_wsel_asserts, 0);
+        let mut sim = DatapathSim::new_scheduled(&net, sched.clone());
+        for (x, r) in xs.iter().zip(&batch.results) {
+            assert_eq!(*r, sim.run_image(x));
+        }
+        assert_eq!(batch.mac_ops_per_cfg[9], batch.mac_ops);
+        assert_eq!(batch.mac_ops, 6 * 2160);
+    }
+
+    #[test]
+    fn cycle_batch_per_cfg_tally_follows_layer_schedule() {
+        let topo = Topology::parse("4,4,3").unwrap();
+        let net = Network::new(QuantWeights::random(&topo, 3));
+        let sched = ConfigSchedule::per_layer(vec![Config::MAX_APPROX, Config::ACCURATE]);
+        let xs = vec![vec![1u8, 2, 3, 4]; 5];
+        let b = net.batch_forward_cycle_accurate(&xs, &sched);
+        // layer 0: 5 images x 4 units x 4 fan-in = 80 MACs at cfg 32
+        assert_eq!(b.mac_ops_per_cfg[32], 80);
+        // layer 1: 5 images x 3 units x 4 fan-in = 60 MACs at cfg 0
+        assert_eq!(b.mac_ops_per_cfg[0], 60);
+        assert_eq!(b.mac_ops, 140);
+        assert_eq!(b.cycles, topo.batch_cycles(5));
+    }
+
+    #[test]
+    fn cycle_batch_empty_batch_is_free() {
+        let net = test_network();
+        let r = net.batch_forward_cycle_accurate(
+            &[] as &[[u8; N_FEATURES]],
+            &ConfigSchedule::uniform(Config::ACCURATE),
+        );
+        assert!(r.results.is_empty());
+        assert_eq!(r.cycles, 0);
+        assert_eq!(r.mac_ops, 0);
     }
 
     #[test]

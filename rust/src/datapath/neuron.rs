@@ -68,6 +68,27 @@ impl Neuron {
     pub fn activate(&self) -> u8 {
         saturate_activation(self.acc)
     }
+
+    /// Hidden-pass epilogue: bias-add, activate, clear — the retire
+    /// step shared by the per-image FSM and the interleaved batch
+    /// schedule.  Returns the 7-bit activation headed for the layer's
+    /// register bank.
+    #[inline]
+    pub fn retire_hidden(&mut self, bias: u8) -> u8 {
+        self.add_bias(bias);
+        let h = self.activate();
+        self.clear();
+        h
+    }
+
+    /// Final-layer epilogue: bias-add, read the raw logit, clear.
+    #[inline]
+    pub fn retire_logit(&mut self, bias: u8) -> i32 {
+        self.add_bias(bias);
+        let logit = self.acc;
+        self.clear();
+        logit
+    }
 }
 
 /// The max circuit (paper Fig. 4): comparator chain over the output
@@ -128,6 +149,25 @@ mod tests {
         n.clear();
         assert_eq!(n.acc(), 0);
         assert!(n.acc_toggles > toggles_before);
+    }
+
+    #[test]
+    fn retire_helpers_match_manual_epilogue() {
+        let t = MulTable::build(Config::ACCURATE);
+        let mut a = Neuron::new();
+        let mut b = Neuron::new();
+        a.mac(sm::encode(40), sm::encode(90), &t);
+        b.mac(sm::encode(40), sm::encode(90), &t);
+        let bias = sm::encode(5);
+        b.add_bias(bias);
+        let expect = b.activate();
+        b.clear();
+        assert_eq!(a.retire_hidden(bias), expect);
+        assert_eq!(a.acc(), 0);
+        a.mac(sm::encode(-7), sm::encode(3), &t);
+        let before = a.acc();
+        assert_eq!(a.retire_logit(sm::encode(-2)), before - (2 << 7));
+        assert_eq!(a.acc(), 0);
     }
 
     #[test]

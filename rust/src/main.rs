@@ -11,6 +11,7 @@
 //!   sweep      native accuracy sweep: uniform configs or per-layer sensitivity
 //!   frontier   per-layer schedule frontier from the sensitivity model
 //!   topo       topology-parametric demo: arbitrary MLP + per-layer schedule
+//!   bench      in-process benchmarks (--cycle-batch writes BENCH_cycle_batch.json)
 
 use anyhow::{Context, Result};
 use ecmac::amul::{metrics, Config, ConfigSchedule};
@@ -47,6 +48,7 @@ fn main() {
         "sweep" => cmd_sweep(rest),
         "frontier" => cmd_frontier(rest),
         "topo" => cmd_topo(rest),
+        "bench" => cmd_bench(rest),
         "ablation" => cmd_ablation(rest),
         "verilog" => cmd_verilog(rest),
         "--help" | "-h" | "help" => {
@@ -79,6 +81,7 @@ fn print_global_usage() {
          \x20 sweep      native accuracy sweep (uniform, or --per-layer sensitivity)\n\
          \x20 frontier   per-layer schedule frontier (Pareto energy vs accuracy)\n\
          \x20 topo       arbitrary-topology demo with a per-layer schedule\n\
+         \x20 bench      in-process benchmarks (--cycle-batch: per-image vs interleaved)\n\
          \x20 ablation   heterogeneous per-neuron configuration study\n\
          \x20 verilog    export the EC multiplier as synthesizable Verilog\n"
     );
@@ -476,6 +479,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         default: Some("16"),
     });
     spec.push(OptSpec {
+        name: "shards",
+        help: "sub-batches per logical batch on the worker shard pool",
+        takes_value: true,
+        default: Some("2"),
+    });
+    spec.push(OptSpec {
         name: "sweep",
         help: "schedule_sweep.json enabling the per-layer schedule frontier \
                (default: <artifacts>/schedule_sweep.json when present; 'none' disables)",
@@ -487,6 +496,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let n_requests: usize = args.get_or("requests", 2000)?;
     let rate: f64 = args.get_or("rate", 20000.0)?;
     let max_batch: usize = args.get_or("max-batch", 16)?;
+    let shards: usize = args.get_or("shards", 2)?;
 
     let pm = power_model(&dir, 32)?;
     let acc_table = AccuracyTable::load(&dir.join("accuracy_sweep.json"))?;
@@ -550,6 +560,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             max_wait: Duration::from_micros(300),
             queue_capacity: 4096,
             workers: 2,
+            shards,
         },
         backend,
         governor,
@@ -598,6 +609,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "answered           {answered} / {n_requests} (rejected {})",
         m.rejected
     );
+    if m.backend_errors > 0 {
+        println!("backend errors     {} batches", m.backend_errors);
+    }
     println!(
         "accuracy           {:.2}%",
         correct as f64 / answered.max(1) as f64 * 100.0
@@ -940,6 +954,142 @@ fn cmd_topo(argv: &[String]) -> Result<()> {
 
     let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(2000, 0xD1E5E1))?;
     println!("{}", report::schedule_summary(&topo, &sched, &pm));
+    Ok(())
+}
+
+/// In-process benchmark driver.  `--cycle-batch` compares the per-image
+/// cycle-accurate FSM against the interleaved batch schedule across a
+/// set of topologies — verifying bit-exactness, then measuring wall
+/// throughput and the modeled cycle counts — and writes the
+/// `BENCH_cycle_batch.json` artifact CI records for the perf
+/// trajectory.
+fn cmd_bench(argv: &[String]) -> Result<()> {
+    let spec = vec![
+        OptSpec {
+            name: "cycle-batch",
+            help: "per-image vs interleaved cycle-accurate batch comparison",
+            takes_value: false,
+            default: None,
+        },
+        OptSpec {
+            name: "batch",
+            help: "images per batch",
+            takes_value: true,
+            default: Some("64"),
+        },
+        OptSpec {
+            name: "topologies",
+            help: "semicolon-separated topology specs to compare",
+            takes_value: true,
+            default: Some("62,30,10;8,23,5;4,4,3;62,33,10"),
+        },
+        OptSpec {
+            name: "json",
+            help: "write the comparison artifact to this path",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
+            name: "quick",
+            help: "shorter measurement for smoke runs",
+            takes_value: false,
+            default: None,
+        },
+    ];
+    let args = Args::parse(argv, &spec)?;
+    anyhow::ensure!(
+        args.flag("cycle-batch"),
+        "nothing to run: pass --cycle-batch (the full suite lives in `cargo bench`)"
+    );
+    let batch: usize = args.get_or("batch", 64)?;
+    anyhow::ensure!(batch >= 1, "--batch must be at least 1");
+    let specs: Vec<&str> = args
+        .get("topologies")
+        .expect("topologies has a spec default")
+        .split(';')
+        .filter(|s| !s.is_empty())
+        .collect();
+
+    use ecmac::testkit::bench::{BenchConfig, Bencher};
+    let quick = args.flag("quick");
+    let bench_cfg = BenchConfig {
+        warmup: Duration::from_millis(if quick { 20 } else { 100 }),
+        measure: Duration::from_millis(if quick { 120 } else { 600 }),
+        samples: if quick { 4 } else { 10 },
+        filter: None,
+        json_out: None,
+    };
+    let mut b = Bencher::new(bench_cfg);
+    let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
+    let mut rows: Vec<ecmac::util::json::Json> = Vec::new();
+    let mut table_rows: Vec<report::CycleBatchRow> = Vec::new();
+    for spec_s in &specs {
+        let topo = Topology::parse(spec_s)?;
+        // registers the timed pair and asserts bit-exactness first:
+        // the comparison is meaningless otherwise
+        let interleaved = ecmac::testkit::bench_cycle_batch_pair(&mut b, &topo, batch, &sched);
+        let per_image_name = format!("cycle_batch/per_image_{topo}");
+        let interleaved_name = format!("cycle_batch/interleaved_{topo}");
+
+        let sequential_cycles = batch as u64 * topo.cycles_per_image();
+        let batch_cycles = topo.batch_cycles(batch as u64);
+        anyhow::ensure!(
+            interleaved.cycles == batch_cycles,
+            "{topo}: simulated cycles {} diverge from the cycle model {batch_cycles}",
+            interleaved.cycles
+        );
+        let per_image_ns = b.result(&per_image_name).map(|r| r.mean_ns).unwrap_or(-1.0);
+        let interleaved_ns = b.result(&interleaved_name).map(|r| r.mean_ns).unwrap_or(-1.0);
+        rows.push(ecmac::json_obj! {
+            "topology" => topo.to_string(),
+            "cycles_per_image" => topo.cycles_per_image() as f64,
+            "sequential_cycles" => sequential_cycles as f64,
+            "batch_cycles" => batch_cycles as f64,
+            "cycle_speedup" => sequential_cycles as f64 / batch_cycles as f64,
+            "has_partial_pass" => topo.has_partial_pass(),
+            "extra_wsel_asserts" => interleaved.extra_wsel_asserts as f64,
+            "per_image_mean_ns" => per_image_ns,
+            "interleaved_mean_ns" => interleaved_ns,
+            "wall_speedup" => per_image_ns / interleaved_ns.max(1e-9),
+            "bit_exact" => true,
+        });
+        table_rows.push(report::CycleBatchRow {
+            topology: topo.to_string(),
+            batch: batch as u64,
+            sequential_cycles,
+            batch_cycles,
+            extra_wsel: interleaved.extra_wsel_asserts,
+        });
+    }
+    // full harness stats for every registered bench, alongside the
+    // per-topology comparison rows
+    let harness_rows: Vec<ecmac::util::json::Json> = b
+        .results()
+        .iter()
+        .map(|r| {
+            ecmac::json_obj! {
+                "name" => r.name.clone(),
+                "mean_ns" => r.mean_ns,
+                "median_ns" => r.median_ns,
+                "p95_ns" => r.p95_ns,
+                "throughput_per_sec" => r.throughput_per_sec().unwrap_or(-1.0),
+            }
+        })
+        .collect();
+    b.finish();
+    println!("\ncycle model (per-image FSM x batch vs interleaved batch schedule):");
+    println!("{}", report::cycle_batch_table(&table_rows));
+    if let Some(path) = args.get("json") {
+        let doc = ecmac::json_obj! {
+            "schema_version" => 1usize,
+            "bench" => "cycle_batch",
+            "batch" => batch,
+            "rows" => rows,
+            "harness" => harness_rows,
+        };
+        std::fs::write(path, doc.to_string())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

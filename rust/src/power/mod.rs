@@ -274,10 +274,15 @@ impl PowerModel {
         self.p_uncore_mw
     }
 
-    /// Estimated energy per classified image in nJ for a configuration
-    /// (power x cycles / f).
-    pub fn energy_per_image_nj(&self, cfg: Config) -> f64 {
-        let cycles = crate::datapath::controller::CYCLES_PER_IMAGE as f64;
+    /// Estimated energy per classified image in nJ for a uniform
+    /// configuration on `topo` (power x cycles / f).
+    ///
+    /// The cycle count comes from the topology's FSM walk
+    /// ([`crate::weights::Topology::cycles_per_image`]); an earlier
+    /// revision hardcoded the seed network's 220 cycles, which silently
+    /// mis-charged every other topology.
+    pub fn energy_per_image_nj(&self, topo: &crate::weights::Topology, cfg: Config) -> f64 {
+        let cycles = topo.cycles_per_image() as f64;
         self.breakdown(cfg).total_mw * 1e-3 * cycles / anchors::FREQ_HZ * 1e9
     }
 
@@ -298,7 +303,7 @@ impl PowerModel {
 
     /// Energy per image in nJ under a per-layer schedule: the sum of
     /// [`Self::layer_energy_nj`] over the layers.  Collapses to
-    /// [`Self::energy_per_image_nj`] for uniform schedules on the seed
+    /// [`Self::energy_per_image_nj`] for uniform schedules on any
     /// topology.
     ///
     /// This is what lets a governor spend the error budget where the
@@ -312,6 +317,30 @@ impl PowerModel {
     ) -> f64 {
         (0..topo.n_layers())
             .map(|l| self.layer_energy_nj(topo, l, sched.layer(l)))
+            .sum()
+    }
+
+    /// Energy in nJ to classify `batch` images under the *interleaved*
+    /// cycle-accurate batch schedule: layer `l` draws its
+    /// configuration's power for
+    /// [`crate::weights::Topology::batch_layer_cycles`] cycles — the
+    /// actual active-lane pass-groups, with partial passes shared
+    /// between images.  Equals `batch x energy_per_image_nj_sched` when
+    /// no layer has a partial pass, and is strictly cheaper once
+    /// interleaving shares one.
+    pub fn batch_energy_nj(
+        &self,
+        topo: &crate::weights::Topology,
+        sched: &crate::amul::ConfigSchedule,
+        batch: u64,
+    ) -> f64 {
+        (0..topo.n_layers())
+            .map(|l| {
+                self.breakdown(sched.layer(l)).total_mw * 1e-3
+                    * topo.batch_layer_cycles(l, batch) as f64
+                    / anchors::FREQ_HZ
+                    * 1e9
+            })
             .sum()
     }
 
@@ -402,11 +431,53 @@ mod tests {
     #[test]
     fn energy_per_image_scales_with_power() {
         let m = model();
-        let e0 = m.energy_per_image_nj(Config::ACCURATE);
-        let e32 = m.energy_per_image_nj(Config::MAX_APPROX);
+        let seed = crate::weights::Topology::seed();
+        let e0 = m.energy_per_image_nj(&seed, Config::ACCURATE);
+        let e32 = m.energy_per_image_nj(&seed, Config::MAX_APPROX);
         assert!(e32 < e0);
         // 5.55 mW * 2.2 us = 12.2 nJ
         assert!((e0 - 12.26).abs() < 0.2, "{e0}");
+    }
+
+    #[test]
+    fn uniform_energy_uses_the_served_topologys_cycles() {
+        // regression: the uniform path used to hardcode the seed's 220
+        // cycles, mis-charging every other topology
+        use crate::amul::ConfigSchedule;
+        use crate::weights::Topology;
+        let m = model();
+        let iris = Topology::parse("4,4,3").unwrap();
+        for cfg in [Config::ACCURATE, Config::new(9).unwrap(), Config::MAX_APPROX] {
+            let uniform = m.energy_per_image_nj(&iris, cfg);
+            let sched = m.energy_per_image_nj_sched(&iris, &ConfigSchedule::uniform(cfg));
+            assert!((uniform - sched).abs() < 1e-12, "{cfg}: {uniform} vs {sched}");
+        }
+        // 10 cycles vs 220: the iris image must cost 22x less
+        let seed = Topology::seed();
+        let ratio = m.energy_per_image_nj(&seed, Config::ACCURATE)
+            / m.energy_per_image_nj(&iris, Config::ACCURATE);
+        assert!((ratio - 22.0).abs() < 1e-9, "{ratio}");
+    }
+
+    #[test]
+    fn batch_energy_rewards_interleaved_partial_passes() {
+        use crate::amul::ConfigSchedule;
+        use crate::weights::Topology;
+        let m = model();
+        let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
+        // seed: no partial pass, batch energy is exactly linear
+        let seed = Topology::seed();
+        let per_image = m.energy_per_image_nj_sched(&seed, &sched);
+        assert!((m.batch_energy_nj(&seed, &sched, 16) - 16.0 * per_image).abs() < 1e-9);
+        // partial passes shared: the batch is strictly cheaper
+        let t = Topology::parse("8,23,5").unwrap();
+        let e_batch = m.batch_energy_nj(&t, &sched, 12);
+        let e_seq = 12.0 * m.energy_per_image_nj_sched(&t, &sched);
+        assert!(e_batch < e_seq, "{e_batch} vs {e_seq}");
+        // and consistent with the cycle model
+        let ratio = e_batch / e_seq;
+        let cycle_ratio = t.batch_cycles(12) as f64 / (12 * t.cycles_per_image()) as f64;
+        assert!((ratio - cycle_ratio).abs() < 1e-9, "{ratio} vs {cycle_ratio}");
     }
 
     #[test]
@@ -417,7 +488,7 @@ mod tests {
         let topo = Topology::seed();
         for cfg in [Config::ACCURATE, Config::new(9).unwrap(), Config::MAX_APPROX] {
             let sched = ConfigSchedule::uniform(cfg);
-            let a = m.energy_per_image_nj(cfg);
+            let a = m.energy_per_image_nj(&topo, cfg);
             let b = m.energy_per_image_nj_sched(&topo, &sched);
             assert!((a - b).abs() < 1e-9, "{cfg}: {a} vs {b}");
             assert!((m.schedule_power_mw(&topo, &sched) - m.breakdown(cfg).total_mw).abs() < 1e-9);
@@ -453,13 +524,13 @@ mod tests {
         // more than approximating only the output layer (31 cycles)
         let hid = ConfigSchedule::per_layer(vec![Config::MAX_APPROX, Config::ACCURATE]);
         let out = ConfigSchedule::per_layer(vec![Config::ACCURATE, Config::MAX_APPROX]);
-        let e_acc = m.energy_per_image_nj(Config::ACCURATE);
+        let e_acc = m.energy_per_image_nj(&topo, Config::ACCURATE);
         let e_hid = m.energy_per_image_nj_sched(&topo, &hid);
         let e_out = m.energy_per_image_nj_sched(&topo, &out);
         assert!(e_hid < e_out, "hidden-layer saving {e_hid} must beat output {e_out}");
         assert!(e_out < e_acc);
         // both bracketed by the uniform extremes
-        let e_worst = m.energy_per_image_nj(Config::MAX_APPROX);
+        let e_worst = m.energy_per_image_nj(&topo, Config::MAX_APPROX);
         assert!(e_hid > e_worst && e_out < e_acc);
     }
 

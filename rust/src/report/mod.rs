@@ -377,6 +377,44 @@ pub fn frontier_csv(f: &crate::coordinator::frontier::ScheduleFrontier) -> Strin
     t.to_csv()
 }
 
+/// One topology's interleaved-batch vs sequential cycle comparison
+/// (the rows behind `ecmac bench --cycle-batch` and its
+/// `BENCH_cycle_batch.json` artifact).
+#[derive(Debug, Clone)]
+pub struct CycleBatchRow {
+    pub topology: String,
+    pub batch: u64,
+    pub sequential_cycles: u64,
+    pub batch_cycles: u64,
+    /// Extra weight-bank mux lines asserted by interleaved pass-groups.
+    pub extra_wsel: u64,
+}
+
+/// Render the cycle-model comparison: per-image FSM x batch vs the
+/// interleaved batch schedule.  Topologies without a partial pass show
+/// a 1.000x speedup by construction — there is nothing to share.
+pub fn cycle_batch_table(rows: &[CycleBatchRow]) -> String {
+    let mut t = TextTable::new(&[
+        "topology",
+        "batch",
+        "sequential cyc",
+        "interleaved cyc",
+        "speedup",
+        "extra wsel",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.topology.clone(),
+            r.batch.to_string(),
+            r.sequential_cycles.to_string(),
+            r.batch_cycles.to_string(),
+            format!("{:.3}x", r.sequential_cycles as f64 / r.batch_cycles.max(1) as f64),
+            r.extra_wsel.to_string(),
+        ]);
+    }
+    t.render()
+}
+
 /// CSV for the power/accuracy sweep (the data behind Figs 5-7).
 pub fn sweep_csv(sweep: &[PowerBreakdown], accuracy: &[f64], model: &PowerModel) -> String {
     let mut t = TextTable::new(&[
@@ -424,6 +462,29 @@ mod tests {
         let lines: Vec<&str> = r.lines().collect();
         assert_eq!(lines.len(), 4);
         assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn cycle_batch_table_renders_speedup() {
+        let rows = vec![
+            CycleBatchRow {
+                topology: "8-23-5".into(),
+                batch: 12,
+                sequential_cycles: 612,
+                batch_cycles: 396,
+                extra_wsel: 9,
+            },
+            CycleBatchRow {
+                topology: "62-30-10".into(),
+                batch: 12,
+                sequential_cycles: 2640,
+                batch_cycles: 2640,
+                extra_wsel: 0,
+            },
+        ];
+        let s = cycle_batch_table(&rows);
+        assert!(s.contains("1.545x"), "{s}");
+        assert!(s.contains("1.000x"), "{s}");
     }
 
     #[test]

@@ -184,6 +184,13 @@ impl Bencher {
         self.results.iter().find(|r| r.name == name)
     }
 
+    /// All completed results, in registration order — for callers that
+    /// assemble their own artifact (e.g. `ecmac bench --cycle-batch`)
+    /// instead of the harness's flat JSON.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
     /// Mean-time speedup of `new` relative to `base` (> 1 means `new`
     /// is faster).  `None` when either bench was filtered out.
     pub fn speedup(&self, base: &str, new: &str) -> Option<f64> {

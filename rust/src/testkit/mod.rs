@@ -7,13 +7,17 @@
 //!   iteration count, mean/stddev/percentiles) driving `cargo bench`.
 //! * [`accurate_labeled_set`] — the shared synthetic-evaluation
 //!   scaffold for frontier/sensitivity tests and benches.
+//! * [`bench_cycle_batch_pair`] — the shared per-image-FSM vs
+//!   interleaved-batch comparison registration, so `cargo bench` and
+//!   `ecmac bench --cycle-batch` measure the same thing.
 
 pub mod bench;
 pub mod prop;
 
-use crate::amul::Config;
-use crate::datapath::Network;
+use crate::amul::{Config, ConfigSchedule};
+use crate::datapath::{BatchCycleResult, DatapathSim, Network};
 use crate::util::rng::Pcg32;
+use crate::weights::{QuantWeights, Topology};
 
 /// Random evaluation set labeled with the network's own accurate-mode
 /// predictions, so "accuracy" measures agreement with the exact
@@ -32,4 +36,48 @@ pub fn accurate_labeled_set(net: &Network, n: usize, seed: u64) -> (Vec<Vec<u8>>
         .map(|x| net.forward(x, Config::ACCURATE).pred)
         .collect();
     (xs, labels)
+}
+
+/// Register the per-image-FSM vs interleaved-batch cycle-sim benches
+/// for one topology (names `cycle_batch/per_image_<topo>` and
+/// `cycle_batch/interleaved_<topo>`) on a deterministic random network
+/// and input set, asserting bit-exactness first.  Returns the
+/// interleaved run for cycle accounting.  One definition serves both
+/// `cargo bench` and `ecmac bench --cycle-batch`, so the CI artifact
+/// and the bench suite can never silently measure different things.
+pub fn bench_cycle_batch_pair(
+    b: &mut bench::Bencher,
+    topo: &Topology,
+    batch: usize,
+    sched: &ConfigSchedule,
+) -> BatchCycleResult {
+    let net = Network::new(QuantWeights::random(topo, 7));
+    let mut rng = Pcg32::new(0xBA7C4);
+    let xs: Vec<Vec<u8>> = (0..batch)
+        .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
+        .collect();
+    let interleaved = net.batch_forward_cycle_accurate(&xs, sched);
+    let mut sim = DatapathSim::new_scheduled(&net, sched.clone());
+    for (x, r) in xs.iter().zip(&interleaved.results) {
+        assert_eq!(
+            *r,
+            sim.run_image(x),
+            "interleaved batch diverged from the per-image FSM on {topo}"
+        );
+    }
+    let per_image_name = format!("cycle_batch/per_image_{topo}");
+    let interleaved_name = format!("cycle_batch/interleaved_{topo}");
+    {
+        let mut sim = DatapathSim::new_scheduled(&net, sched.clone());
+        b.throughput(batch as u64).bench(&per_image_name, || {
+            for x in &xs {
+                std::hint::black_box(sim.run_image(x));
+            }
+        });
+    }
+    b.throughput(batch as u64).bench(&interleaved_name, || {
+        std::hint::black_box(net.batch_forward_cycle_accurate(&xs, sched));
+    });
+    b.report_speedup(&per_image_name, &interleaved_name);
+    interleaved
 }

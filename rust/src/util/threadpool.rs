@@ -179,7 +179,12 @@ impl ThreadPool {
                     .name(format!("ecmac-worker-{i}"))
                     .spawn(move || {
                         while let Some(job) = jobs.recv() {
-                            job();
+                            // contain job panics: a dead worker would
+                            // silently shrink the pool and leak
+                            // in_flight, hanging every later scatter
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(job),
+                            );
                             in_flight.fetch_sub(1, Ordering::Release);
                         }
                     })
@@ -212,6 +217,51 @@ impl ThreadPool {
         while self.in_flight.load(Ordering::Acquire) != 0 {
             std::thread::yield_now();
         }
+    }
+
+    /// Run `jobs` on the pool and block until every one completed,
+    /// returning results in job order.  This is the coordinator's
+    /// sub-batch primitive: a worker scatters one logical batch's
+    /// shards, the pool threads execute them cooperatively, and the
+    /// caller folds the shard results back into a single batch.
+    ///
+    /// Unlike [`scope_map`] the jobs are owned closures, so shards can
+    /// carry their own data across threads without borrowing from the
+    /// caller's stack.
+    pub fn scatter<R, F>(&self, jobs: Vec<F>) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
+        /// Closes the results channel if the job unwinds, so the
+        /// collector sees the loss (recv -> None -> panic with a clear
+        /// message) instead of blocking forever on a result that will
+        /// never arrive.
+        struct PanicGuard<T>(Option<Channel<T>>);
+        impl<T> Drop for PanicGuard<T> {
+            fn drop(&mut self) {
+                if let Some(ch) = self.0.take() {
+                    ch.close();
+                }
+            }
+        }
+        let n = jobs.len();
+        let done: Channel<(usize, R)> = Channel::new(0);
+        for (i, job) in jobs.into_iter().enumerate() {
+            let done = done.clone();
+            self.execute(move || {
+                let mut guard = PanicGuard(Some(done));
+                let r = job();
+                let ch = guard.0.take().expect("guard holds the channel until the send");
+                let _ = ch.send((i, r));
+            });
+        }
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = done.recv().expect("scatter job panicked before reporting");
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.expect("scatter result missing")).collect()
     }
 }
 
@@ -306,6 +356,41 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn scatter_returns_results_in_job_order() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<_> = (0..32u64)
+            .map(|i| {
+                move || {
+                    if i % 3 == 0 {
+                        std::thread::yield_now();
+                    }
+                    i * i
+                }
+            })
+            .collect();
+        let out = pool.scatter(jobs);
+        assert_eq!(out, (0..32u64).map(|i| i * i).collect::<Vec<_>>());
+        // the pool stays usable afterwards
+        assert_eq!(pool.scatter(vec![|| 7u64]), vec![7]);
+        assert!(pool.scatter(Vec::<fn() -> u64>::new()).is_empty());
+    }
+
+    #[test]
+    fn scatter_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scatter(vec![
+                Box::new(|| 1u64) as Box<dyn FnOnce() -> u64 + Send>,
+                Box::new(|| panic!("injected job panic")),
+            ])
+        }));
+        assert!(r.is_err(), "lost job must surface as a panic, not a hang");
+        // the pool threads survived: a fresh scatter still completes
+        assert_eq!(pool.scatter(vec![|| 5u64]), vec![5]);
+        pool.wait_idle();
     }
 
     #[test]

@@ -196,6 +196,51 @@ impl Topology {
         self.layer_cycles(l) as f64 / self.cycles_per_image() as f64
     }
 
+    /// Units computed in layer `l`'s partial pass (0 when the width is
+    /// a multiple of `N_PHYSICAL` and every pass fills the array).
+    pub fn partial_pass_width(&self, l: usize) -> usize {
+        self.layer_out(l) % N_PHYSICAL
+    }
+
+    /// Whether any layer leaves lanes idle in its last pass — the
+    /// precondition for the interleaved batch schedule to beat `batch`
+    /// sequential images.
+    pub fn has_partial_pass(&self) -> bool {
+        (0..self.n_layers()).any(|l| self.partial_pass_width(l) > 0)
+    }
+
+    /// Pass-groups layer `l` needs for an interleaved batch of `batch`
+    /// images (`datapath::controller::batch_pass_groups`): every full
+    /// pass runs once per image, and the partial passes are packed
+    /// image-major onto the idle lanes —
+    /// `ceil(batch * partial_width / N_PHYSICAL)` shared groups instead
+    /// of `batch`.  This is the information-theoretic minimum
+    /// `ceil(batch * width / N_PHYSICAL)` pass count for the layer.
+    pub fn batch_layer_passes(&self, l: usize, batch: u64) -> u64 {
+        let r = self.partial_pass_width(l) as u64;
+        let p = self.passes(l) as u64;
+        if r == 0 {
+            batch * p
+        } else {
+            batch * (p - 1) + (batch * r).div_ceil(N_PHYSICAL as u64)
+        }
+    }
+
+    /// Cycles the interleaved batch schedule spends on layer `l` for
+    /// `batch` images: each pass-group streams the fan-in plus one
+    /// epilogue cycle, exactly like the per-image FSM's passes.
+    pub fn batch_layer_cycles(&self, l: usize, batch: u64) -> u64 {
+        self.batch_layer_passes(l, batch) * (self.layer_in(l) as u64 + 1)
+    }
+
+    /// Total cycles to classify `batch` images under the interleaved
+    /// batch schedule.  Equals `batch * cycles_per_image()` when no
+    /// layer has a partial pass (the seed 62-30-10 network), and is
+    /// strictly smaller once a partial pass is shared between images.
+    pub fn batch_cycles(&self, batch: u64) -> u64 {
+        (0..self.n_layers()).map(|l| self.batch_layer_cycles(l, batch)).sum()
+    }
+
     /// Whether this is the paper's seed 62-30-10 network.
     pub fn is_seed(&self) -> bool {
         self.sizes == [N_INPUTS, N_HIDDEN, N_OUTPUTS]
@@ -501,6 +546,28 @@ mod tests {
         let iris = Topology::parse("4,4,3").unwrap();
         assert_eq!(iris.cycles_per_image(), 10);
         assert_eq!(iris.passes(0), 1);
+    }
+
+    #[test]
+    fn batch_cycle_accounting() {
+        let seed = Topology::seed();
+        // no partial pass: interleaving cannot beat sequential
+        assert!(!seed.has_partial_pass());
+        assert_eq!(seed.batch_cycles(16), 16 * seed.cycles_per_image());
+
+        let t = Topology::parse("8,23,5").unwrap();
+        assert!(t.has_partial_pass());
+        assert_eq!(t.partial_pass_width(0), 3);
+        assert_eq!(t.partial_pass_width(1), 5);
+        // layer 0, batch 12: two full passes per image plus
+        // ceil(12 * 3 / 10) shared partial pass-groups
+        assert_eq!(t.batch_layer_passes(0, 12), 24 + 4);
+        assert_eq!(t.batch_layer_passes(1, 12), 6);
+        assert_eq!(t.batch_cycles(12), 28 * 9 + 6 * 24);
+        assert!(t.batch_cycles(12) < 12 * t.cycles_per_image());
+        // a batch of one is exactly the per-image FSM
+        assert_eq!(t.batch_cycles(1), t.cycles_per_image());
+        assert_eq!(t.batch_cycles(0), 0);
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! Property tests for the interleaved cycle-accurate batch path: on
+//! random topologies, schedules and batch sizes the batch schedule must
+//! be bit-exact with the per-image FSM (same results, same per-image
+//! MAC tallies) and its cycle count must never exceed — and, given a
+//! partial pass and a deep enough batch, strictly beat — running the
+//! images sequentially.
+
+use ecmac::amul::{Config, ConfigSchedule};
+use ecmac::datapath::{DatapathSim, Network};
+use ecmac::testkit::prop::*;
+use ecmac::util::rng::Pcg32;
+use ecmac::weights::{QuantWeights, Topology};
+
+/// ((inputs, outputs), (hidden widths, (batch, seed)))
+type Case = ((i64, i64), (Vec<i64>, (i64, i64)));
+
+fn gen_case() -> Gen<Case> {
+    gen_tuple2(
+        gen_tuple2(gen_i64(1, 24), gen_i64(1, 23)),
+        gen_tuple2(
+            gen_vec(gen_i64(1, 23), 2),
+            gen_tuple2(gen_i64(0, 12), gen_i64(0, 1 << 30)),
+        ),
+    )
+}
+
+fn build_case(case: &Case) -> (Topology, Network, ConfigSchedule, Vec<Vec<u8>>) {
+    let ((n_in, n_out), (hidden, (batch, seed))) = case;
+    let mut sizes = vec![*n_in as usize];
+    sizes.extend(hidden.iter().map(|&h| h as usize));
+    sizes.push(*n_out as usize);
+    let topo = Topology::new(sizes).expect("generated topology is valid");
+    let net = Network::new(QuantWeights::random(&topo, *seed as u64));
+    let mut rng = Pcg32::new((*seed as u64).wrapping_add(0x5EED));
+    let sched = ConfigSchedule::per_layer(
+        (0..topo.n_layers())
+            .map(|_| Config::new(rng.below(33)).unwrap())
+            .collect(),
+    );
+    let xs: Vec<Vec<u8>> = (0..*batch as usize)
+        .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
+        .collect();
+    (topo, net, sched, xs)
+}
+
+#[test]
+fn prop_interleaved_batch_bit_exact_with_per_image_fsm() {
+    check("interleaved batch == per-image FSM", 20, gen_case(), |case| {
+        let (_, net, sched, xs) = build_case(case);
+        let batch = net.batch_forward_cycle_accurate(&xs, &sched);
+        if batch.results.len() != xs.len() {
+            return false;
+        }
+        let mut total_macs = 0u64;
+        for (i, x) in xs.iter().enumerate() {
+            let mut sim = DatapathSim::new_scheduled(&net, sched.clone());
+            let per_image = sim.run_image(x);
+            if batch.results[i] != per_image {
+                return false;
+            }
+            if batch.per_image_mac_ops[i] != sim.stats.mac_ops {
+                return false;
+            }
+            total_macs += sim.stats.mac_ops;
+        }
+        // tallies are conserved: total == sum over images == sum over cfgs
+        batch.mac_ops == total_macs
+            && batch.mac_ops_per_cfg.iter().sum::<u64>() == total_macs
+    });
+}
+
+#[test]
+fn prop_batch_cycles_bounded_by_sequential() {
+    check("batch cycles <= sequential cycles", 30, gen_case(), |case| {
+        let (topo, net, sched, xs) = build_case(case);
+        let b = xs.len() as u64;
+        let batch = net.batch_forward_cycle_accurate(&xs, &sched);
+        let sequential = b * topo.cycles_per_image();
+        // the simulated count must match the closed-form cycle model...
+        if batch.cycles != topo.batch_cycles(b) {
+            return false;
+        }
+        // ...never exceed running the images one at a time...
+        if batch.cycles > sequential {
+            return false;
+        }
+        // ...degenerate to the per-image FSM for a batch of one...
+        if b == 1 && batch.cycles != topo.cycles_per_image() {
+            return false;
+        }
+        // ...and strictly win once a partial pass is shared: any batch
+        // of >= N_PHYSICAL images shares every partial pass
+        if topo.has_partial_pass() && b >= 10 && batch.cycles >= sequential {
+            return false;
+        }
+        // without a partial pass there is nothing to interleave
+        if !topo.has_partial_pass() && batch.cycles != sequential {
+            return false;
+        }
+        true
+    });
+}
+
+#[test]
+fn interleave_strictly_beats_sequential_on_partial_pass_topologies() {
+    for spec in ["4,4,3", "8,23,5", "62,33,10", "7,19,13,3"] {
+        let topo = Topology::parse(spec).unwrap();
+        assert!(topo.has_partial_pass(), "{spec}");
+        let net = Network::new(QuantWeights::random(&topo, 0xC0FFEE));
+        let mut rng = Pcg32::new(17);
+        let xs: Vec<Vec<u8>> = (0..16)
+            .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
+            .collect();
+        let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
+        let batch = net.batch_forward_cycle_accurate(&xs, &sched);
+        let sequential = 16 * topo.cycles_per_image();
+        assert!(
+            batch.cycles < sequential,
+            "{spec}: {} !< {sequential}",
+            batch.cycles
+        );
+        assert!(batch.extra_wsel_asserts > 0, "{spec} must interleave");
+        // the seed topology, by contrast, has nothing to share
+        let seed = Topology::seed();
+        assert_eq!(seed.batch_cycles(16), 16 * seed.cycles_per_image());
+    }
+}

@@ -149,6 +149,7 @@ fn backend_failure_closes_reply_channels_instead_of_hanging() {
             max_wait: Duration::from_micros(50),
             queue_capacity: 64,
             workers: 1,
+            shards: 2,
         },
         Arc::new(FailingBackend {
             topo: ecmac::weights::Topology::seed(),

@@ -131,6 +131,7 @@ fn coordinator_end_to_end_with_real_model() {
             max_wait: Duration::from_micros(200),
             queue_capacity: 2048,
             workers: 2,
+            shards: 2,
         },
         Arc::new(NativeBackend { network: net }) as Arc<dyn Backend>,
         gov,
@@ -168,7 +169,7 @@ fn energy_budget_governor_switches_configs_under_load() {
     // budget: exactly accurate-mode energy for half the horizon ->
     // governor must degrade along the way
     let horizon = 2000u64;
-    let e_acc = pm.energy_per_image_nj(Config::ACCURATE) * 1e-6; // mJ
+    let e_acc = pm.energy_per_image_nj(net.topology(), Config::ACCURATE) * 1e-6; // mJ
     let budget_mj = e_acc * (horizon as f64) * 0.92;
     let gov = Governor::new(
         Policy::EnergyBudget {
@@ -184,6 +185,7 @@ fn energy_budget_governor_switches_configs_under_load() {
             max_wait: Duration::from_micros(100),
             queue_capacity: 4096,
             workers: 1,
+            shards: 2,
         },
         Arc::new(NativeBackend { network: net }) as Arc<dyn Backend>,
         gov,

@@ -218,6 +218,7 @@ fn prop_coordinator_answers_every_accepted_request_once() {
                     max_wait: Duration::from_micros(100),
                     queue_capacity: 4096,
                     workers: 2,
+                    shards: 2,
                 },
                 Arc::new(NativeBackend { network: net }) as Arc<dyn Backend>,
                 gov,

@@ -60,6 +60,7 @@ fn coordinator_serves_deep_topology_natively() {
             max_wait: Duration::from_micros(100),
             queue_capacity: 256,
             workers: 2,
+            shards: 2,
         },
         backend.clone() as Arc<dyn Backend>,
         gov,
