@@ -7,6 +7,8 @@
 //!                   behind Figures 5, 6 and 7)
 //!   l1/*          — multiplier hot path (bit-level vs table-driven)
 //!   datapath/*    — functional + cycle-accurate image classification
+//!   forward/*     — signed-table GEMM + scratch arena vs the reference
+//!   sweep/*       — prefix-cached vs full-pass sensitivity sweep
 //!   runtime/*     — PJRT AOT executable throughput per batch size
 //!   coordinator/* — end-to-end serving throughput under the governor
 //!
@@ -39,6 +41,7 @@ fn main() {
     bench_netlist(&mut b);
     bench_l1(&mut b);
     bench_datapath(&mut b);
+    bench_forward(&mut b);
     bench_cycle_batch(&mut b);
     bench_frontier(&mut b);
     bench_runtime(&mut b);
@@ -194,6 +197,21 @@ fn bench_datapath(b: &mut Bencher) {
     b.throughput(64).bench("datapath/forward_batch_b64_deep_62_20_20_10", || {
         black_box(deep.forward_batch(&xs, &uni));
     });
+}
+
+/// Signed-table GEMM + scratch arena vs the pre-signed-table reference
+/// batched path, and the prefix-cached sweep engine vs the full-pass
+/// one.  Registration is shared with `ecmac bench --forward`, so the CI
+/// `BENCH_forward.json` artifact and this suite measure the same thing.
+fn bench_forward(b: &mut Bencher) {
+    let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
+    for spec in ["62,30,10", "62,20,20,10"] {
+        let topo = ecmac::weights::Topology::parse(spec).unwrap();
+        ecmac::testkit::bench_forward_suite(b, &topo, 64, &sched);
+    }
+    // the sweep-engine win grows with depth: bench the 3-layer stack
+    let deep = ecmac::weights::Topology::parse("62,20,20,10").unwrap();
+    ecmac::testkit::bench_sweep_pair(b, &deep, 48);
 }
 
 /// Interleaved cycle-accurate batch vs the per-image FSM: the batch

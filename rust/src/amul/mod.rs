@@ -363,9 +363,58 @@ impl MulRow<'_> {
     }
 }
 
-/// All 33 tables, built once (~540 KiB).
+/// Per-configuration *signed* product table indexed directly by the two
+/// raw sign-magnitude bytes: `row(x)[w] == mul8_sm_approx(x, w, cfg)`.
+///
+/// This is the functional hot path's kernel (DESIGN.md §Perf): one
+/// `i16` gather per MAC, no sign decode, no fixup — the sign XOR is
+/// baked into the table at build time, so it is bit-exact with
+/// [`mul8_sm_approx`] by construction.  256 rows of 256 `i16`
+/// (128 KiB per configuration, ~4 MiB if all 33 ever materialize —
+/// they are built lazily per config by [`MulTables::signed`]).  The
+/// row type is `[i16; 256]` so indexing with a `u8` operand needs no
+/// bounds check.
+pub struct SignedMulTable {
+    pub cfg: Config,
+    rows: Vec<[i16; 256]>,
+}
+
+impl SignedMulTable {
+    /// Build from the configuration's magnitude table (the 64Ki entries
+    /// are four sign-quadrant images of the 128x128 magnitude table).
+    pub fn build(mag: &MulTable) -> SignedMulTable {
+        let mut rows = vec![[0i16; 256]; 256];
+        for (x, row) in rows.iter_mut().enumerate() {
+            for (w, out) in row.iter_mut().enumerate() {
+                let m = mag.mul7(x as u32 & 0x7F, w as u32 & 0x7F) as i32;
+                // max |product| is 127*127 = 16129, well inside i16
+                *out = sm::apply_sign(m, x as u8, w as u8) as i16;
+            }
+        }
+        SignedMulTable { cfg: mag.cfg, rows }
+    }
+
+    /// The 256-entry signed product row for left operand byte `x`;
+    /// index it with the raw weight byte.
+    #[inline(always)]
+    pub fn row(&self, x: u8) -> &[i16; 256] {
+        &self.rows[x as usize]
+    }
+
+    /// Signed multiply of two raw sign-magnitude bytes.
+    #[inline(always)]
+    pub fn mul8_sm(&self, x: u8, w: u8) -> i32 {
+        self.rows[x as usize][w as usize] as i32
+    }
+}
+
+/// Lazy per-configuration table store: magnitude tables (16 KiB each)
+/// and signed tables (128 KiB each) materialize on first use, so
+/// uniform-schedule serving and CLI startup only ever build the
+/// configurations they actually run.
 pub struct MulTables {
-    tables: Vec<MulTable>,
+    mag: [std::sync::OnceLock<MulTable>; N_CONFIGS],
+    signed: [std::sync::OnceLock<SignedMulTable>; N_CONFIGS],
 }
 
 impl Default for MulTables {
@@ -375,14 +424,29 @@ impl Default for MulTables {
 }
 
 impl MulTables {
+    /// The lazy store (nothing is computed here; the name is kept from
+    /// the eager era for caller compatibility).
     pub fn build() -> MulTables {
         MulTables {
-            tables: Config::all().map(MulTable::build).collect(),
+            mag: std::array::from_fn(|_| std::sync::OnceLock::new()),
+            signed: std::array::from_fn(|_| std::sync::OnceLock::new()),
         }
     }
 
+    /// The configuration's magnitude table, built on first use.
     pub fn get(&self, cfg: Config) -> &MulTable {
-        &self.tables[cfg.index()]
+        self.mag[cfg.index()].get_or_init(|| MulTable::build(cfg))
+    }
+
+    /// The configuration's signed table, built on first use.
+    pub fn signed(&self, cfg: Config) -> &SignedMulTable {
+        self.signed[cfg.index()].get_or_init(|| SignedMulTable::build(self.get(cfg)))
+    }
+
+    /// Number of magnitude tables materialized so far (observability +
+    /// laziness tests).
+    pub fn built(&self) -> usize {
+        self.mag.iter().filter(|c| c.get().is_some()).count()
     }
 }
 
@@ -599,5 +663,57 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn signed_table_exhaustive_parity_key_configs() {
+        // every (x, w) byte pair, including negative zeros, for the
+        // exact config, a mid config and the worst config — the signed
+        // table must reproduce mul8_sm_approx bit for bit
+        let tabs = MulTables::build();
+        for cfg in [Config::ACCURATE, Config::new(7).unwrap(), Config::MAX_APPROX] {
+            let st = tabs.signed(cfg);
+            assert_eq!(st.cfg, cfg);
+            for x in 0..=255u8 {
+                let row = st.row(x);
+                for w in 0..=255u8 {
+                    let want = mul8_sm_approx(x, w, cfg);
+                    assert_eq!(st.mul8_sm(x, w), want, "{cfg} x={x:#04x} w={w:#04x}");
+                    assert_eq!(row[w as usize] as i32, want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn signed_table_zero_magnitude_rows_are_all_zero() {
+        // the hot loop skips zero-magnitude activations; that is only
+        // bit-exact if 0 and -0 rows (and columns) are identically zero
+        // — for every configuration the skip can run under
+        for cfg in Config::all() {
+            let st = SignedMulTable::build(&MulTable::build(cfg));
+            for w in 0..=255u8 {
+                assert_eq!(st.mul8_sm(0x00, w), 0, "{cfg}");
+                assert_eq!(st.mul8_sm(0x80, w), 0, "{cfg}");
+                assert_eq!(st.mul8_sm(w, 0x00), 0, "{cfg}");
+                assert_eq!(st.mul8_sm(w, 0x80), 0, "{cfg}");
+            }
+        }
+    }
+
+    #[test]
+    fn tables_build_lazily_per_config() {
+        let tabs = MulTables::build();
+        assert_eq!(tabs.built(), 0, "construction must not materialize tables");
+        let c9 = Config::new(9).unwrap();
+        let t1 = tabs.get(c9) as *const MulTable;
+        assert_eq!(tabs.built(), 1);
+        // repeated lookups return the same materialized table
+        let t2 = tabs.get(c9) as *const MulTable;
+        assert_eq!(t1, t2);
+        // the signed table reuses the magnitude table of its config
+        let _ = tabs.signed(Config::MAX_APPROX);
+        assert_eq!(tabs.built(), 2);
+        assert_eq!(tabs.built(), 2);
     }
 }

@@ -33,5 +33,5 @@ pub mod server;
 pub use frontier::{SchedulePoint, ScheduleFrontier};
 pub use governor::{Governor, Policy};
 pub use request::{ClassifyRequest, ClassifyResponse, MetricsSnapshot};
-pub use sensitivity::SensitivityModel;
+pub use sensitivity::{SensitivityModel, SweepProgress};
 pub use server::{Backend, Coordinator, CoordinatorConfig, NativeBackend, PjrtBackend};

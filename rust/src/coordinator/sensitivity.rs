@@ -45,6 +45,22 @@ pub const SWEEP_SCHEMA: &str = "ecmac-schedule-sweep";
 /// Schema version this build reads and writes.
 pub const SWEEP_SCHEMA_VERSION: i64 = 1;
 
+/// Progress of one completed sweep job, reported to
+/// [`SensitivityModel::measure_with_progress`] callbacks.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepProgress {
+    /// Jobs completed so far (including this one).
+    pub done: usize,
+    /// Total jobs in the sweep (`32 · L`).
+    pub total: usize,
+    /// Layer the job pinned.
+    pub layer: usize,
+    /// Configuration the job pinned it to.
+    pub cfg: Config,
+    /// Wall time of this job, milliseconds.
+    pub job_ms: f64,
+}
+
 /// Measured per-layer accuracy-degradation deltas for one topology.
 #[derive(Debug, Clone)]
 pub struct SensitivityModel {
@@ -106,23 +122,63 @@ impl SensitivityModel {
     /// evaluation set, one `(layer, config)` point at a time, through
     /// the bit-exact batched forward pass.  Measurements run in
     /// parallel across the `(layer, config)` grid.
+    ///
+    /// Prefix-cached: every job pins layer `l` and keeps layers `< l`
+    /// accurate, so the accurate prefix is computed once for the whole
+    /// sweep ([`Network::checkpoint_accurate`], which also yields the
+    /// baseline) and each job resumes from boundary `l` — one accurate
+    /// pass plus `32·L` *suffix* passes instead of `32·L + 1` full
+    /// passes.  The win grows with depth because the early (widest)
+    /// layers drop out of every later layer's jobs (DESIGN.md §Perf).
     pub fn measure<X: AsRef<[u8]> + Sync>(
         net: &Network,
         features: &[X],
         labels: &[u8],
     ) -> SensitivityModel {
+        Self::measure_with_progress(net, features, labels, None)
+    }
+
+    /// [`SensitivityModel::measure`] with a per-job progress callback
+    /// (invoked from the sweep's worker threads as each `(layer,
+    /// config)` job completes).
+    pub fn measure_with_progress<X: AsRef<[u8]> + Sync>(
+        net: &Network,
+        features: &[X],
+        labels: &[u8],
+        progress: Option<&(dyn Fn(SweepProgress) + Sync)>,
+    ) -> SensitivityModel {
         assert_eq!(features.len(), labels.len());
         assert!(!features.is_empty(), "sensitivity sweep needs images");
         let topo = net.topology();
         let n_layers = topo.n_layers();
-        let baseline = net.accuracy(features, labels, Config::ACCURATE);
+        let ckpt = net.checkpoint_accurate(features);
+        let baseline = ckpt
+            .preds()
+            .iter()
+            .zip(labels)
+            .filter(|(p, y)| p == y)
+            .count() as f64
+            / labels.len() as f64;
         let jobs: Vec<(usize, Config)> = (0..n_layers)
             .flat_map(|l| Config::approximate().map(move |c| (l, c)))
             .collect();
+        let total = jobs.len();
+        let done = std::sync::atomic::AtomicUsize::new(0);
         let accs = crate::util::threadpool::par_map(&jobs, |_, &(l, cfg)| {
+            let t0 = std::time::Instant::now();
             let mut cfgs = vec![Config::ACCURATE; n_layers];
             cfgs[l] = cfg;
-            net.accuracy_sched(features, labels, &ConfigSchedule::per_layer(cfgs))
+            let acc = net.accuracy_resume(&ckpt, l, &ConfigSchedule::per_layer(cfgs), labels);
+            if let Some(report) = progress {
+                report(SweepProgress {
+                    done: done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1,
+                    total,
+                    layer: l,
+                    cfg,
+                    job_ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
+            }
+            acc
         });
         let mut drop = vec![vec![0.0; N_CONFIGS]; n_layers];
         for (&(l, cfg), acc) in jobs.iter().zip(accs) {
@@ -339,6 +395,53 @@ mod tests {
             let measured = net.accuracy_sched(&xs, &labels, &sched);
             assert!((s.predict(&sched) - measured).abs() < 1e-12, "layer {l} cfg {cfg_i}");
         }
+    }
+
+    #[test]
+    fn prefix_cached_measure_matches_full_pass_harness() {
+        // the pre-refactor harness: one full batched pass per (l, cfg)
+        // job — kept verbatim as the regression oracle for the
+        // checkpoint/resume rewrite, on a deeper (3-weight-layer) stack
+        let topo = Topology::parse("30,14,9,5").unwrap();
+        let net = Network::new(crate::weights::QuantWeights::random(&topo, 0xFACE));
+        let (xs, labels) = crate::testkit::accurate_labeled_set(&net, 96, 41);
+        let fast = SensitivityModel::measure(&net, &xs, &labels);
+        let baseline = net.accuracy(&xs, &labels, Config::ACCURATE);
+        assert_eq!(fast.baseline(), baseline);
+        for l in 0..topo.n_layers() {
+            for cfg in Config::approximate() {
+                let mut cfgs = vec![Config::ACCURATE; topo.n_layers()];
+                cfgs[l] = cfg;
+                let slow = net.accuracy_sched(&xs, &labels, &ConfigSchedule::per_layer(cfgs));
+                assert_eq!(
+                    fast.drop(l, cfg),
+                    baseline - slow,
+                    "layer {l} {cfg}: prefix-cached sweep diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn progress_callback_sees_every_job() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let topo = Topology::parse("10,7,4").unwrap();
+        let net = Network::new(crate::weights::QuantWeights::random(&topo, 2));
+        let (xs, labels) = crate::testkit::accurate_labeled_set(&net, 16, 3);
+        let calls = AtomicUsize::new(0);
+        let max_done = AtomicUsize::new(0);
+        let cb = |p: super::SweepProgress| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            max_done.fetch_max(p.done, Ordering::Relaxed);
+            assert_eq!(p.total, 64);
+            assert!(p.layer < 2);
+            assert!(!p.cfg.is_accurate());
+            assert!(p.job_ms >= 0.0);
+        };
+        let s = SensitivityModel::measure_with_progress(&net, &xs, &labels, Some(&cb));
+        assert_eq!(calls.load(Ordering::Relaxed), 64);
+        assert_eq!(max_done.load(Ordering::Relaxed), 64);
+        assert_eq!(s.n_layers(), 2);
     }
 
     #[test]

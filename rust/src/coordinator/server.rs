@@ -57,12 +57,9 @@ impl Backend for NativeBackend {
         xs: &[[u8; N_FEATURES]],
         sched: &ConfigSchedule,
     ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
-        Ok(self
-            .network
-            .forward_batch(xs, sched)
-            .into_iter()
-            .map(|r| (r.logits, r.pred))
-            .collect())
+        // logits + pred straight off the per-thread arena: the serving
+        // path never materializes hidden activations it would discard
+        Ok(self.network.classify_batch(xs, sched))
     }
 
     fn name(&self) -> &'static str {
@@ -157,12 +154,7 @@ impl Backend for PjrtBackend {
         let Some(cfg) = sched.as_uniform() else {
             // per-layer schedule: the AOT executable only takes a
             // uniform cfg scalar — serve bit-exactly from the native twin
-            return Ok(self
-                .fallback_net()
-                .forward_batch(xs, sched)
-                .into_iter()
-                .map(|r| (r.logits, r.pred))
-                .collect());
+            return Ok(self.fallback_net().classify_batch(xs, sched));
         };
         let reply = Channel::new(1);
         self.tx
@@ -341,14 +333,18 @@ impl Coordinator {
     }
 
     /// Execute one logical batch, split into up to `shards` sub-batches
-    /// running cooperatively on the shard pool.  Shard results fold
-    /// back in submission order; the first shard error fails the whole
-    /// batch.
+    /// running cooperatively on the shard pool.  Every shard borrows a
+    /// range of the same `Arc`'d feature buffer — the batch's inputs
+    /// are materialized once, not copied per shard — and the native
+    /// backend's scratch arenas live per pool thread, so the shard hot
+    /// path allocates nothing per batch beyond the results.  Shard
+    /// results fold back in submission order; the first shard error
+    /// fails the whole batch.
     fn execute_sharded(
         backend: &Arc<dyn Backend>,
         pool: Option<&ThreadPool>,
         shards: usize,
-        xs: &[[u8; N_FEATURES]],
+        xs: &Arc<Vec<[u8; N_FEATURES]>>,
         sched: &ConfigSchedule,
     ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
         let n = xs.len();
@@ -360,10 +356,11 @@ impl Coordinator {
             return backend.execute(xs, sched);
         }
         let chunk = n.div_ceil(n_shards);
-        let jobs: Vec<_> = xs
-            .chunks(chunk)
-            .map(|shard| {
-                let shard = shard.to_vec();
+        let jobs: Vec<_> = (0..n)
+            .step_by(chunk)
+            .map(|start| {
+                let range = start..(start + chunk).min(n);
+                let xs = Arc::clone(xs);
                 let backend = Arc::clone(backend);
                 let sched = sched.clone();
                 move || {
@@ -372,13 +369,13 @@ impl Coordinator {
                     // not unwind through the scatter collector and
                     // strand the batch's requesters
                     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        backend.execute(&shard, &sched)
+                        backend.execute(&xs[range.clone()], &sched)
                     }))
                     .unwrap_or_else(|_| {
                         Err(anyhow::anyhow!(
                             "backend '{}' panicked on a {}-image shard",
                             backend.name(),
-                            shard.len()
+                            range.len()
                         ))
                     })
                 }
@@ -401,7 +398,9 @@ impl Coordinator {
         power: &PowerModel,
     ) {
         let sched = governor.lock().unwrap().current();
-        let xs: Vec<[u8; N_FEATURES]> = batch.requests.iter().map(|r| r.features).collect();
+        // one shared buffer for the whole batch; shards slice into it
+        let xs: Arc<Vec<[u8; N_FEATURES]>> =
+            Arc::new(batch.requests.iter().map(|r| r.features).collect());
         let n = batch.requests.len();
         let t0 = Instant::now();
         let results = Self::execute_sharded(backend, pool, shards, &xs, &sched);
@@ -842,7 +841,7 @@ mod tests {
             topo: Topology::seed(),
         });
         let pool = ThreadPool::new(2);
-        let xs = [[0u8; N_FEATURES]; 4];
+        let xs = Arc::new(vec![[0u8; N_FEATURES]; 4]);
         let sched = ConfigSchedule::uniform(Config::ACCURATE);
         let err = Coordinator::execute_sharded(&backend, Some(&pool), 2, &xs, &sched)
             .expect_err("panicking shard must surface as an error, not unwind");

@@ -10,9 +10,12 @@
 //!   and the accuracy sweeps.
 //! * [`Network::forward_batch`] — the batched layer-major variant: the
 //!   whole batch advances one layer at a time, so each weight row and
-//!   the layer's product table stay hot across the batch and the
-//!   accumulator buffers are allocated once per layer instead of once
-//!   per image.  Bit-identical to `forward`.
+//!   the layer's *signed* product table stay hot across the batch, and
+//!   every buffer lives in a reusable [`BatchScratch`] arena.
+//!   Bit-identical to `forward`.  [`Network::forward_batch_resume`]
+//!   restarts the same path from an [`ActivationCheckpoint`] boundary,
+//!   which is what makes the per-layer sensitivity sweep pay for each
+//!   layer suffix only once (DESIGN.md §Perf).
 //! * [`DatapathSim`] — the cycle-accurate path: a [`Controller`] walks
 //!   the generalized FSM (ceil(width/10) passes per layer over the 10
 //!   physical [`Neuron`]s), activations land in the per-layer 8-bit
@@ -29,6 +32,11 @@ use crate::amul::{sm, Config, ConfigSchedule, MulTable, MulTables};
 use crate::weights::{Activation, QuantWeights, Topology, N_PHYSICAL};
 use controller::{Controller, State};
 use neuron::{argmax, Neuron};
+use std::cell::RefCell;
+
+/// Images per internal batch chunk: keeps the activation/accumulator
+/// working set inside L2 for large evaluation sets.
+const BATCH_CHUNK: usize = 128;
 
 /// Result of classifying one image.
 #[derive(Debug, Clone, PartialEq)]
@@ -88,6 +96,108 @@ impl BatchCycleResult {
     }
 }
 
+/// Reusable scratch arena for the batched functional path: all the flat
+/// buffers one batch needs, sized once and reused across calls, so the
+/// hot loop allocates nothing (DESIGN.md §Perf).
+///
+/// Ownership rules: a `BatchScratch` belongs to exactly one caller at a
+/// time (the borrow checker enforces it — every entry point takes
+/// `&mut`); reusing one arena across batches of *different* sizes and
+/// even different networks is safe and bit-exact, because every buffer
+/// is re-extended from cleared state per call.  Callers that do not
+/// want to manage an arena get a per-thread one implicitly
+/// ([`Network::forward_batch`] and the accuracy/sweep paths all route
+/// through it), which is what makes the serve shards and the sweep
+/// workers allocation-free without plumbing.
+#[derive(Default)]
+pub struct BatchScratch {
+    /// Current activations, `b x layer_in(l)` flat (image-major).
+    cur: Vec<u8>,
+    /// Next layer's activations (swapped into `cur` per layer).
+    next: Vec<u8>,
+    /// Accumulators, `b x layer_out(l)` flat.
+    acc: Vec<i32>,
+    /// Suffix hidden activations, layer-major: one `b x width` block per
+    /// hidden layer the run computed.
+    hidden: Vec<u8>,
+    /// Output logits, `b x outputs` flat.
+    logits: Vec<i32>,
+    /// Predicted labels, one per image.
+    preds: Vec<u8>,
+}
+
+impl BatchScratch {
+    pub fn new() -> BatchScratch {
+        BatchScratch::default()
+    }
+
+    /// Predicted labels of the last run (the sweep path reads these
+    /// without materializing [`ImageResult`]s).
+    pub fn preds(&self) -> &[u8] {
+        &self.preds
+    }
+
+    /// Logits of the last run, `b x outputs` flat.
+    pub fn logits(&self) -> &[i32] {
+        &self.logits
+    }
+}
+
+thread_local! {
+    /// Per-thread arena backing the implicit-scratch entry points: each
+    /// serve shard worker and each sweep thread reuses its own across
+    /// every batch it executes.
+    static THREAD_SCRATCH: RefCell<BatchScratch> = RefCell::new(BatchScratch::new());
+}
+
+/// Run `f` with the calling thread's scratch arena.
+fn with_thread_scratch<R>(f: impl FnOnce(&mut BatchScratch) -> R) -> R {
+    THREAD_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Activations of an evaluation set at every layer boundary of the
+/// all-accurate pass, plus the accurate predictions — computed once per
+/// set by [`Network::checkpoint_accurate`] and resumed from any boundary
+/// by [`Network::forward_batch_resume`] / [`Network::accuracy_resume`].
+///
+/// This is what turns the sensitivity sweep's `32·L` full passes (plus
+/// baseline) into one accurate pass plus `32·L` suffix passes: every
+/// sweep job pins layer `l` and keeps layers `< l` accurate, so its
+/// prefix is byte-identical to the checkpointed one and never re-runs
+/// (DESIGN.md §Perf).
+pub struct ActivationCheckpoint {
+    /// `boundaries[l]`: flat activations entering weight layer `l`
+    /// (`images x layer_in(l)`, image-major), all prefix layers
+    /// accurate.  `boundaries[0]` is the input features themselves; the
+    /// vector holds `depth + 1` entries.
+    boundaries: Vec<Vec<u8>>,
+    /// Accurate-mode predictions (empty for depth-limited checkpoints).
+    preds: Vec<u8>,
+    images: usize,
+}
+
+impl ActivationCheckpoint {
+    /// Images checkpointed.
+    pub fn images(&self) -> usize {
+        self.images
+    }
+
+    /// Deepest boundary available (resume layers `0..=depth`).
+    pub fn depth(&self) -> usize {
+        self.boundaries.len() - 1
+    }
+
+    /// Accurate-mode predictions (full-depth checkpoints only).
+    pub fn preds(&self) -> &[u8] {
+        &self.preds
+    }
+
+    /// Flat activations entering weight layer `l`.
+    pub fn boundary(&self, l: usize) -> &[u8] {
+        &self.boundaries[l]
+    }
+}
+
 /// The trained network bound to the multiplier tables.
 pub struct Network {
     pub weights: QuantWeights,
@@ -117,9 +227,11 @@ impl Network {
     ///
     /// Hot-path layout (see DESIGN.md §Perf): within each layer the
     /// input index is the outer loop so weight-matrix reads are
-    /// contiguous (row-major `w[i * n_out + j]`), and the left operand's
-    /// table row is hoisted out of the inner loop (`MulTable::row`),
-    /// amortizing the sign/magnitude decode over the whole weight row.
+    /// contiguous (row-major `w[i * n_out + j]`), and the inner loop is
+    /// a pure gather-accumulate over the left operand's *signed* table
+    /// row ([`crate::amul::SignedMulTable::row`]) — no per-element sign
+    /// decode or fixup.  Zero-magnitude activations (whose product rows
+    /// are identically zero) skip the row entirely.
     pub fn forward_sched(&self, x: &[u8], sched: &ConfigSchedule) -> ImageResult {
         let topo = &self.weights.topology;
         assert_eq!(x.len(), topo.inputs(), "input width mismatch for topology {topo}");
@@ -127,12 +239,15 @@ impl Network {
         let mut cur: Vec<u8> = x.to_vec();
         let mut logits: Vec<i32> = Vec::new();
         for (l, lw) in self.weights.layers.iter().enumerate() {
-            let t = self.tables.get(sched.layer(l));
+            let t = self.tables.signed(sched.layer(l));
             let mut acc = vec![0i32; lw.n_out];
             for (i, &xi) in cur.iter().enumerate() {
+                if xi & 0x7F == 0 {
+                    continue; // zero magnitude: the whole product row is 0
+                }
                 let row = t.row(xi);
                 for (a, &wv) in acc.iter_mut().zip(lw.w_row(i)) {
-                    *a += row.mul8_sm(wv);
+                    *a += row[wv as usize] as i32;
                 }
             }
             for (a, &bv) in acc.iter_mut().zip(&lw.b) {
@@ -156,76 +271,351 @@ impl Network {
     /// Batched layer-major forward pass: every image in `xs` advances
     /// one layer at a time.  The weight row of each input index is
     /// loaded once per layer and reused across the whole batch, the
-    /// layer's product table stays hot, and accumulators live in one
-    /// flat buffer per layer.  Bit-identical to [`Network::forward_sched`]
-    /// image by image.
+    /// layer's signed product table stays hot, and every buffer lives in
+    /// a per-thread [`BatchScratch`] arena (no per-call allocation
+    /// beyond the returned results).  Bit-identical to
+    /// [`Network::forward_sched`] image by image.
     pub fn forward_batch<X: AsRef<[u8]>>(
         &self,
         xs: &[X],
         sched: &ConfigSchedule,
     ) -> Vec<ImageResult> {
-        let topo = &self.weights.topology;
+        with_thread_scratch(|s| self.forward_batch_with(xs, sched, s))
+    }
+
+    /// [`Network::forward_batch`] with an explicit scratch arena, for
+    /// callers that manage buffer reuse themselves (benches, tests, the
+    /// sweep engine).  The arena may be reused across differing batch
+    /// sizes and networks.
+    pub fn forward_batch_with<X: AsRef<[u8]>>(
+        &self,
+        xs: &[X],
+        sched: &ConfigSchedule,
+        s: &mut BatchScratch,
+    ) -> Vec<ImageResult> {
         let b = xs.len();
         if b == 0 {
             return Vec::new();
         }
-        let n_in0 = topo.inputs();
-        let mut cur: Vec<u8> = Vec::with_capacity(b * n_in0);
+        self.load_inputs(xs, s);
+        self.run_layers(0, b, sched, s);
+        self.collect_results(0, None, b, s)
+    }
+
+    /// Classify a batch, returning only `(logits, pred)` per image —
+    /// the serving backends' entry point.  Unlike
+    /// [`Network::forward_batch`] no per-image hidden vector is ever
+    /// materialized (the coordinator discards hidden activations), so
+    /// the only allocations are the returned logits.
+    pub fn classify_batch<X: AsRef<[u8]>>(
+        &self,
+        xs: &[X],
+        sched: &ConfigSchedule,
+    ) -> Vec<(Vec<i32>, u8)> {
+        let b = xs.len();
+        if b == 0 {
+            return Vec::new();
+        }
+        with_thread_scratch(|s| {
+            self.load_inputs(xs, s);
+            self.run_layers(0, b, sched, s);
+            let n_out = self.weights.topology.outputs();
+            (0..b)
+                .map(|img| (s.logits[img * n_out..(img + 1) * n_out].to_vec(), s.preds[img]))
+                .collect()
+        })
+    }
+
+    /// Fill `s.cur` with the batch's input activations (image-major).
+    fn load_inputs<X: AsRef<[u8]>>(&self, xs: &[X], s: &mut BatchScratch) {
+        let topo = &self.weights.topology;
+        let n_in = topo.inputs();
+        s.cur.clear();
+        s.cur.reserve(xs.len() * n_in);
         for x in xs {
             let x = x.as_ref();
-            assert_eq!(x.len(), n_in0, "input width mismatch for topology {topo}");
-            cur.extend_from_slice(x);
+            assert_eq!(x.len(), n_in, "input width mismatch for topology {topo}");
+            s.cur.extend_from_slice(x);
         }
-        let mut hidden: Vec<Vec<u8>> =
-            (0..b).map(|_| Vec::with_capacity(topo.hidden_units())).collect();
-        let mut logits: Vec<Vec<i32>> = Vec::new();
-        for (l, lw) in self.weights.layers.iter().enumerate() {
-            let t = self.tables.get(sched.layer(l));
-            let (n_in, n_out) = (lw.n_in, lw.n_out);
-            let mut acc = vec![0i32; b * n_out];
-            for i in 0..n_in {
-                let wrow = lw.w_row(i);
+    }
+
+    /// Run weight layer `l` over the `b x layer_in(l)` activations in
+    /// `s.cur` under `cfg`.  Hidden layers leave their post-activation
+    /// outputs in `s.cur` (via swap with `s.next`); the final layer
+    /// fills `s.logits`.
+    ///
+    /// This is the GEMM hot loop: input index outer (contiguous weight
+    /// rows), image middle, and a pure gather-accumulate inner loop over
+    /// the signed table row (`[i16; 256]`, so the `u8` weight index
+    /// needs no bounds check).  Zero-magnitude activations skip their
+    /// all-zero product row.
+    fn run_layer(&self, l: usize, b: usize, cfg: Config, s: &mut BatchScratch) {
+        let topo = &self.weights.topology;
+        let lw = &self.weights.layers[l];
+        let t = self.tables.signed(cfg);
+        let (n_in, n_out) = (lw.n_in, lw.n_out);
+        debug_assert_eq!(s.cur.len(), b * n_in);
+        s.acc.clear();
+        s.acc.resize(b * n_out, 0);
+        for i in 0..n_in {
+            let wrow = lw.w_row(i);
+            for img in 0..b {
+                let xi = s.cur[img * n_in + i];
+                if xi & 0x7F == 0 {
+                    continue; // zero magnitude: the whole product row is 0
+                }
+                let row = t.row(xi);
+                let dst = &mut s.acc[img * n_out..(img + 1) * n_out];
+                for (a, &wv) in dst.iter_mut().zip(wrow) {
+                    *a += row[wv as usize] as i32;
+                }
+            }
+        }
+        match topo.activation(l) {
+            Activation::Identity => {
+                s.logits.clear();
+                s.logits.reserve(b * n_out);
                 for img in 0..b {
-                    let row = t.row(cur[img * n_in + i]);
-                    let dst = &mut acc[img * n_out..(img + 1) * n_out];
-                    for (a, &wv) in dst.iter_mut().zip(wrow) {
-                        *a += row.mul8_sm(wv);
+                    for j in 0..n_out {
+                        s.logits.push(s.acc[img * n_out + j] + (sm::decode(lw.b[j]) << 7));
                     }
                 }
             }
-            match topo.activation(l) {
-                Activation::Identity => {
-                    logits = (0..b)
-                        .map(|img| {
-                            let mut v = acc[img * n_out..(img + 1) * n_out].to_vec();
-                            for (a, &bv) in v.iter_mut().zip(&lw.b) {
-                                *a += sm::decode(bv) << 7;
-                            }
-                            v
-                        })
-                        .collect();
-                }
-                Activation::ReluSat => {
-                    let mut next = vec![0u8; b * n_out];
-                    for img in 0..b {
-                        for j in 0..n_out {
-                            let a = acc[img * n_out + j] + (sm::decode(lw.b[j]) << 7);
-                            next[img * n_out + j] = neuron::saturate_activation(a);
-                        }
-                        hidden[img].extend_from_slice(&next[img * n_out..(img + 1) * n_out]);
+            Activation::ReluSat => {
+                s.next.clear();
+                s.next.reserve(b * n_out);
+                for img in 0..b {
+                    for j in 0..n_out {
+                        let a = s.acc[img * n_out + j] + (sm::decode(lw.b[j]) << 7);
+                        s.next.push(neuron::saturate_activation(a));
                     }
-                    cur = next;
                 }
+                std::mem::swap(&mut s.cur, &mut s.next);
             }
         }
-        hidden
-            .into_iter()
-            .zip(logits)
-            .map(|(h, lg)| ImageResult {
-                pred: argmax(&lg) as u8,
-                logits: lg,
-                hidden: h,
+    }
+
+    /// Run weight layers `from..` over the activations in `s.cur`
+    /// (`b x layer_in(from)`), filling `s.hidden` (layer-major blocks
+    /// for the suffix's hidden layers), `s.logits` and `s.preds`.
+    fn run_layers(&self, from: usize, b: usize, sched: &ConfigSchedule, s: &mut BatchScratch) {
+        let topo = &self.weights.topology;
+        let n_layers = topo.n_layers();
+        s.hidden.clear();
+        for l in from..n_layers {
+            self.run_layer(l, b, sched.layer(l), s);
+            if l + 1 < n_layers {
+                s.hidden.extend_from_slice(&s.cur);
+            }
+        }
+        let n_out = topo.outputs();
+        s.preds.clear();
+        s.preds.reserve(b);
+        for img in 0..b {
+            s.preds.push(argmax(&s.logits[img * n_out..(img + 1) * n_out]) as u8);
+        }
+    }
+
+    /// Assemble [`ImageResult`]s from a finished [`Self::run_layers`]
+    /// call that started at layer `from`; hidden activations of layers
+    /// before `from` come from `prefix` (the checkpoint that supplied
+    /// the resume point).
+    fn collect_results(
+        &self,
+        from: usize,
+        prefix: Option<&ActivationCheckpoint>,
+        b: usize,
+        s: &BatchScratch,
+    ) -> Vec<ImageResult> {
+        let topo = &self.weights.topology;
+        let n_layers = topo.n_layers();
+        let n_out = topo.outputs();
+        (0..b)
+            .map(|img| {
+                let mut hidden = Vec::with_capacity(topo.hidden_units());
+                for l in 1..=from.min(n_layers - 1) {
+                    let ckpt = prefix.expect("resume from > 0 requires a checkpoint");
+                    let w = topo.layer_in(l);
+                    hidden.extend_from_slice(&ckpt.boundaries[l][img * w..(img + 1) * w]);
+                }
+                let mut off = 0;
+                for l in from..n_layers - 1 {
+                    let w = topo.layer_out(l);
+                    hidden.extend_from_slice(&s.hidden[off + img * w..off + (img + 1) * w]);
+                    off += b * w;
+                }
+                ImageResult {
+                    pred: s.preds[img],
+                    logits: s.logits[img * n_out..(img + 1) * n_out].to_vec(),
+                    hidden,
+                }
             })
+            .collect()
+    }
+
+    /// Run the all-accurate pass over `xs`, checkpointing every layer
+    /// boundary and the accurate predictions.  One call per evaluation
+    /// set; the sweep engine then resumes from any boundary.
+    pub fn checkpoint_accurate<X: AsRef<[u8]>>(&self, xs: &[X]) -> ActivationCheckpoint {
+        self.checkpoint_to(xs, self.weights.topology.n_layers() - 1, true)
+    }
+
+    /// Depth-limited checkpoint: boundaries `0..=depth` only — the
+    /// suffix layers never run and no predictions are recorded.  Used
+    /// when only a shallow accurate prefix is ever resumed from.
+    pub fn checkpoint_accurate_to(
+        &self,
+        xs: &[impl AsRef<[u8]>],
+        depth: usize,
+    ) -> ActivationCheckpoint {
+        self.checkpoint_to(xs, depth, false)
+    }
+
+    fn checkpoint_to(
+        &self,
+        xs: &[impl AsRef<[u8]>],
+        depth: usize,
+        full: bool,
+    ) -> ActivationCheckpoint {
+        let topo = &self.weights.topology;
+        let n_layers = topo.n_layers();
+        assert!(
+            depth < n_layers,
+            "checkpoint depth {depth} out of range for a {n_layers}-layer network"
+        );
+        let mut boundaries: Vec<Vec<u8>> = (0..=depth)
+            .map(|l| Vec::with_capacity(xs.len() * topo.layer_in(l)))
+            .collect();
+        let mut preds: Vec<u8> = Vec::with_capacity(if full { xs.len() } else { 0 });
+        with_thread_scratch(|s| {
+            for chunk in xs.chunks(BATCH_CHUNK) {
+                let b = chunk.len();
+                self.load_inputs(chunk, s);
+                boundaries[0].extend_from_slice(&s.cur);
+                for l in 0..depth {
+                    self.run_layer(l, b, Config::ACCURATE, s);
+                    boundaries[l + 1].extend_from_slice(&s.cur);
+                }
+                if full {
+                    for l in depth..n_layers {
+                        self.run_layer(l, b, Config::ACCURATE, s);
+                    }
+                    let n_out = topo.outputs();
+                    for img in 0..b {
+                        preds.push(argmax(&s.logits[img * n_out..(img + 1) * n_out]) as u8);
+                    }
+                }
+            }
+        });
+        ActivationCheckpoint {
+            boundaries,
+            preds,
+            images: xs.len(),
+        }
+    }
+
+    /// Resume the batched pass from checkpoint boundary `from`: layers
+    /// `from..` run under `sched`, layers before `from` are the
+    /// checkpoint's accurate prefix.  Bit-exact with
+    /// [`Network::forward_batch`] from scratch whenever `sched` is
+    /// accurate on every layer below `from` (locked by the
+    /// `fast_paths` property tests).
+    pub fn forward_batch_resume(
+        &self,
+        ckpt: &ActivationCheckpoint,
+        from: usize,
+        sched: &ConfigSchedule,
+    ) -> Vec<ImageResult> {
+        let topo = &self.weights.topology;
+        assert!(
+            from < topo.n_layers(),
+            "resume layer {from} out of range for topology {topo}"
+        );
+        assert!(
+            from <= ckpt.depth(),
+            "checkpoint holds boundaries 0..={} but resume asked for layer {from}",
+            ckpt.depth()
+        );
+        let b = ckpt.images;
+        if b == 0 {
+            return Vec::new();
+        }
+        with_thread_scratch(|s| {
+            s.cur.clear();
+            s.cur.extend_from_slice(&ckpt.boundaries[from]);
+            self.run_layers(from, b, sched, s);
+            self.collect_results(from, Some(ckpt), b, s)
+        })
+    }
+
+    /// Accuracy of `sched` over the checkpointed set, resuming from
+    /// boundary `from` — the sweep engine's inner loop.  Chunked and
+    /// allocation-free; only predictions are materialized.
+    pub fn accuracy_resume(
+        &self,
+        ckpt: &ActivationCheckpoint,
+        from: usize,
+        sched: &ConfigSchedule,
+        labels: &[u8],
+    ) -> f64 {
+        let topo = &self.weights.topology;
+        assert!(from < topo.n_layers() && from <= ckpt.depth());
+        assert_eq!(labels.len(), ckpt.images);
+        assert!(ckpt.images > 0, "empty checkpoint");
+        let w = topo.layer_in(from);
+        let boundary = &ckpt.boundaries[from];
+        let mut correct = 0usize;
+        with_thread_scratch(|s| {
+            let mut start = 0usize;
+            while start < ckpt.images {
+                let b = BATCH_CHUNK.min(ckpt.images - start);
+                s.cur.clear();
+                s.cur.extend_from_slice(&boundary[start * w..(start + b) * w]);
+                self.run_layers(from, b, sched, s);
+                correct += s
+                    .preds
+                    .iter()
+                    .zip(&labels[start..start + b])
+                    .filter(|(p, y)| p == y)
+                    .count();
+                start += b;
+            }
+        });
+        correct as f64 / ckpt.images as f64
+    }
+
+    /// Measure several schedules over one evaluation set, sharing the
+    /// accurate prefix: one depth-limited checkpoint pass covers the
+    /// longest all-accurate prefix among the schedules, and each
+    /// schedule resumes from its own prefix.  Falls back to plain
+    /// batched evaluation when no schedule has an accurate prefix.
+    pub fn accuracy_sched_many<X: AsRef<[u8]>>(
+        &self,
+        features: &[X],
+        labels: &[u8],
+        scheds: &[ConfigSchedule],
+    ) -> Vec<f64> {
+        assert_eq!(features.len(), labels.len());
+        let n_layers = self.weights.topology.n_layers();
+        // resume point of a schedule: its leading accurate layers,
+        // capped at the last checkpointable boundary
+        let prefix = |sched: &ConfigSchedule| {
+            (0..n_layers)
+                .take_while(|&l| sched.layer(l).is_accurate())
+                .count()
+                .min(n_layers - 1)
+        };
+        let max_p = scheds.iter().map(prefix).max().unwrap_or(0);
+        if max_p == 0 || features.is_empty() {
+            return scheds
+                .iter()
+                .map(|sched| self.accuracy_sched(features, labels, sched))
+                .collect();
+        }
+        let ckpt = self.checkpoint_accurate_to(features, max_p);
+        scheds
+            .iter()
+            .map(|sched| self.accuracy_resume(&ckpt, prefix(sched), sched, labels))
             .collect()
     }
 
@@ -389,7 +779,9 @@ impl Network {
         self.accuracy_sched(features, labels, &ConfigSchedule::Uniform(cfg))
     }
 
-    /// `accuracy` under a per-layer schedule.
+    /// `accuracy` under a per-layer schedule.  Runs the batched signed
+    /// hot path and reads predictions straight off the scratch arena —
+    /// no [`ImageResult`] is ever materialized.
     pub fn accuracy_sched<X: AsRef<[u8]>>(
         &self,
         features: &[X],
@@ -398,10 +790,13 @@ impl Network {
     ) -> f64 {
         assert_eq!(features.len(), labels.len());
         let mut correct = 0usize;
-        for (xs, ys) in features.chunks(128).zip(labels.chunks(128)) {
-            let rs = self.forward_batch(xs, sched);
-            correct += rs.iter().zip(ys).filter(|(r, &y)| r.pred == y).count();
-        }
+        with_thread_scratch(|s| {
+            for (xs, ys) in features.chunks(BATCH_CHUNK).zip(labels.chunks(BATCH_CHUNK)) {
+                self.load_inputs(xs, s);
+                self.run_layers(0, xs.len(), sched, s);
+                correct += s.preds.iter().zip(ys).filter(|(p, y)| p == y).count();
+            }
+        });
         correct as f64 / labels.len() as f64
     }
 }
@@ -963,6 +1358,125 @@ mod tests {
             }
         }
         assert!(differs, "hetero assignment should be a distinct operating point");
+    }
+
+    #[test]
+    fn checkpoint_resume_matches_from_scratch() {
+        for spec in ["62,30,10", "62,20,20,10", "8,23,5,4"] {
+            let topo = Topology::parse(spec).unwrap();
+            let net = Network::new(QuantWeights::random(&topo, 0xC4E));
+            let mut rng = Pcg32::new(2);
+            let xs = random_inputs_for(&topo, &mut rng, 9);
+            let ckpt = net.checkpoint_accurate(&xs);
+            assert_eq!(ckpt.images(), 9);
+            assert_eq!(ckpt.depth(), topo.n_layers() - 1);
+            // the checkpoint's own predictions are the accurate pass
+            let acc_results = net.forward_batch(&xs, &ConfigSchedule::uniform(Config::ACCURATE));
+            for (r, &p) in acc_results.iter().zip(ckpt.preds()) {
+                assert_eq!(r.pred, p, "{spec}");
+            }
+            for from in 0..topo.n_layers() {
+                // schedule accurate below `from`, random at and above
+                let cfgs: Vec<Config> = (0..topo.n_layers())
+                    .map(|l| {
+                        if l < from {
+                            Config::ACCURATE
+                        } else {
+                            Config::new(rng.below(33)).unwrap()
+                        }
+                    })
+                    .collect();
+                let sched = ConfigSchedule::per_layer(cfgs);
+                let scratch_run = net.forward_batch(&xs, &sched);
+                let resumed = net.forward_batch_resume(&ckpt, from, &sched);
+                assert_eq!(resumed, scratch_run, "{spec} from layer {from}");
+            }
+        }
+    }
+
+    #[test]
+    fn accuracy_resume_counts_like_accuracy_sched() {
+        let topo = Topology::parse("62,20,20,10").unwrap();
+        let net = Network::new(QuantWeights::random(&topo, 77));
+        let mut rng = Pcg32::new(5);
+        let xs = random_inputs_for(&topo, &mut rng, 200); // spans two chunks
+        let labels: Vec<u8> = xs.iter().map(|x| net.forward(x, Config::ACCURATE).pred).collect();
+        let ckpt = net.checkpoint_accurate(&xs);
+        for from in 0..topo.n_layers() {
+            let mut cfgs = vec![Config::ACCURATE; topo.n_layers()];
+            cfgs[from] = Config::MAX_APPROX;
+            let sched = ConfigSchedule::per_layer(cfgs);
+            let want = net.accuracy_sched(&xs, &labels, &sched);
+            let got = net.accuracy_resume(&ckpt, from, &sched, &labels);
+            assert_eq!(got, want, "from layer {from}");
+        }
+    }
+
+    #[test]
+    fn accuracy_sched_many_shares_the_accurate_prefix() {
+        let topo = Topology::parse("62,20,20,10").unwrap();
+        let net = Network::new(QuantWeights::random(&topo, 31));
+        let mut rng = Pcg32::new(9);
+        let xs = random_inputs_for(&topo, &mut rng, 60);
+        let labels: Vec<u8> = xs.iter().map(|x| net.forward(x, Config::ACCURATE).pred).collect();
+        let c9 = Config::new(9).unwrap();
+        let scheds = vec![
+            // no accurate prefix
+            ConfigSchedule::per_layer(vec![Config::MAX_APPROX, Config::ACCURATE, c9]),
+            // prefix 1
+            ConfigSchedule::per_layer(vec![Config::ACCURATE, Config::MAX_APPROX, c9]),
+            // prefix 2
+            ConfigSchedule::per_layer(vec![Config::ACCURATE, Config::ACCURATE, c9]),
+            // fully accurate (prefix capped at n_layers - 1)
+            ConfigSchedule::uniform(Config::ACCURATE),
+        ];
+        let accs = net.accuracy_sched_many(&xs, &labels, &scheds);
+        for (sched, acc) in scheds.iter().zip(&accs) {
+            assert_eq!(*acc, net.accuracy_sched(&xs, &labels, sched), "{sched}");
+        }
+        assert_eq!(accs[3], 1.0, "accurate schedule on self-labels");
+    }
+
+    #[test]
+    fn classify_batch_matches_forward_batch() {
+        let net = test_network();
+        let mut rng = Pcg32::new(61);
+        let sched = ConfigSchedule::per_layer(vec![Config::new(11).unwrap(), Config::ACCURATE]);
+        let xs: Vec<[u8; N_FEATURES]> = (0..17).map(|_| random_input(&mut rng)).collect();
+        let lean = net.classify_batch(&xs, &sched);
+        let full = net.forward_batch(&xs, &sched);
+        assert_eq!(lean.len(), full.len());
+        for ((logits, pred), r) in lean.iter().zip(&full) {
+            assert_eq!(*logits, r.logits);
+            assert_eq!(*pred, r.pred);
+        }
+        assert!(net.classify_batch(&[] as &[[u8; N_FEATURES]], &sched).is_empty());
+    }
+
+    #[test]
+    fn explicit_scratch_reuse_across_batch_sizes_is_bit_exact() {
+        let net = test_network();
+        let mut rng = Pcg32::new(55);
+        let mut scratch = BatchScratch::new();
+        let sched =
+            ConfigSchedule::per_layer(vec![Config::new(21).unwrap(), Config::new(3).unwrap()]);
+        for &b in &[7usize, 1, 33, 12, 0, 5] {
+            let xs: Vec<[u8; N_FEATURES]> = (0..b).map(|_| random_input(&mut rng)).collect();
+            let got = net.forward_batch_with(&xs, &sched, &mut scratch);
+            assert_eq!(got.len(), b);
+            for (x, r) in xs.iter().zip(&got) {
+                assert_eq!(*r, net.forward_sched(x, &sched), "batch {b}");
+            }
+        }
+        // and the same arena serves a different topology afterwards
+        let topo = Topology::parse("8,23,5").unwrap();
+        let other = Network::new(QuantWeights::random(&topo, 4));
+        let xs = random_inputs_for(&topo, &mut rng, 6);
+        let sched = ConfigSchedule::uniform(Config::new(30).unwrap());
+        let got = other.forward_batch_with(&xs, &sched, &mut scratch);
+        for (x, r) in xs.iter().zip(&got) {
+            assert_eq!(*r, other.forward_sched(x, &sched));
+        }
     }
 
     #[test]

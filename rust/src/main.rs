@@ -11,7 +11,8 @@
 //!   sweep      native accuracy sweep: uniform configs or per-layer sensitivity
 //!   frontier   per-layer schedule frontier from the sensitivity model
 //!   topo       topology-parametric demo: arbitrary MLP + per-layer schedule
-//!   bench      in-process benchmarks (--cycle-batch writes BENCH_cycle_batch.json)
+//!   bench      in-process benchmarks (--cycle-batch -> BENCH_cycle_batch.json,
+//!              --forward -> BENCH_forward.json before/after comparison)
 
 use anyhow::{Context, Result};
 use ecmac::amul::{metrics, Config, ConfigSchedule};
@@ -81,7 +82,8 @@ fn print_global_usage() {
          \x20 sweep      native accuracy sweep (uniform, or --per-layer sensitivity)\n\
          \x20 frontier   per-layer schedule frontier (Pareto energy vs accuracy)\n\
          \x20 topo       arbitrary-topology demo with a per-layer schedule\n\
-         \x20 bench      in-process benchmarks (--cycle-batch: per-image vs interleaved)\n\
+         \x20 bench      in-process benchmarks (--cycle-batch: per-image vs interleaved;\n\
+         \x20            --forward: signed-table GEMM + prefix-cached sweep before/after)\n\
          \x20 ablation   heterogeneous per-neuron configuration study\n\
          \x20 verilog    export the EC multiplier as synthesizable Verilog\n"
     );
@@ -263,8 +265,9 @@ fn cmd_accuracy(argv: &[String]) -> Result<()> {
     });
     spec.push(OptSpec {
         name: "schedule",
-        help: "measure one per-layer schedule instead (e.g. '32,0'); prints the \
-               sensitivity model's prediction when schedule_sweep.json exists",
+        help: "measure per-layer schedules instead (';'-separated, e.g. '32,0;0,32'); \
+               schedules share one accurate-prefix checkpoint, and the sensitivity \
+               model's prediction is printed when schedule_sweep.json exists",
         takes_value: true,
         default: None,
     });
@@ -274,31 +277,51 @@ fn cmd_accuracy(argv: &[String]) -> Result<()> {
     let limit: usize = args.get_or("limit", 0)?;
     let n = if limit == 0 { ds.len() } else { limit.min(ds.len()) };
     if let Some(s) = args.get("schedule") {
-        let sched = ConfigSchedule::parse(s)?;
+        let scheds: Vec<ConfigSchedule> = s
+            .split(';')
+            .filter(|t| !t.is_empty())
+            .map(ConfigSchedule::parse)
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(!scheds.is_empty(), "empty --schedule list");
         let net = Network::new(QuantWeights::load_artifacts(&dir)?);
-        sched.validate(net.topology().n_layers())?;
-        let acc = net.accuracy_sched(&ds.features[..n], &ds.labels[..n], &sched);
-        println!(
-            "schedule {sched} on {n} test images: measured accuracy {:.2}%",
-            acc * 100.0
-        );
+        for sched in &scheds {
+            sched.validate(net.topology().n_layers())?;
+        }
+        // all schedules measured off one accurate-prefix checkpoint
+        let accs = net.accuracy_sched_many(&ds.features[..n], &ds.labels[..n], &scheds);
         let sweep = dir.join("schedule_sweep.json");
-        if sweep.exists() {
+        let sens = if sweep.exists() {
             match SensitivityModel::load(&sweep) {
-                Ok(sens) if sens.matches(net.topology()) => println!(
-                    "predicted (additive sensitivity model): {:.2}%  (delta {:+.3} pp)",
-                    sens.predict(&sched) * 100.0,
-                    (sens.predict(&sched) - acc) * 100.0
-                ),
-                Ok(sens) => println!(
-                    "(schedule_sweep.json covers topology {:?}, not this network — \
-                     re-run `ecmac sweep --per-layer`)",
-                    sens.sizes()
-                ),
-                Err(e) => eprintln!("warning: cannot read {}: {e:#}", sweep.display()),
+                Ok(sens) if sens.matches(net.topology()) => Some(sens),
+                Ok(sens) => {
+                    println!(
+                        "(schedule_sweep.json covers topology {:?}, not this network — \
+                         re-run `ecmac sweep --per-layer`)",
+                        sens.sizes()
+                    );
+                    None
+                }
+                Err(e) => {
+                    eprintln!("warning: cannot read {}: {e:#}", sweep.display());
+                    None
+                }
             }
         } else {
-            println!("(no schedule_sweep.json for a prediction)");
+            println!("(no schedule_sweep.json for predictions)");
+            None
+        };
+        for (sched, &acc) in scheds.iter().zip(&accs) {
+            println!(
+                "schedule {sched} on {n} test images: measured accuracy {:.2}%",
+                acc * 100.0
+            );
+            if let Some(sens) = &sens {
+                println!(
+                    "  predicted (additive sensitivity model): {:.2}%  (delta {:+.3} pp)",
+                    sens.predict(sched) * 100.0,
+                    (sens.predict(sched) - acc) * 100.0
+                );
+            }
         }
         return Ok(());
     }
@@ -681,7 +704,25 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     let features = &ds.features[..n];
     let labels = &ds.labels[..n];
     if args.flag("per-layer") {
-        let sens = SensitivityModel::measure(&net, features, labels);
+        // per-job progress on stderr: long sweeps on big evaluation
+        // sets (32·L suffix passes) stay observable
+        let jobs_total = 32 * net.topology().n_layers();
+        eprintln!(
+            "per-layer sweep: {jobs_total} jobs over {n} images \
+             (accurate prefix checkpointed once)"
+        );
+        let t0 = std::time::Instant::now();
+        let progress = |p: ecmac::coordinator::SweepProgress| {
+            eprintln!(
+                "  job {:>3}/{}: layer {} {} in {:.1} ms",
+                p.done, p.total, p.layer, p.cfg, p.job_ms
+            );
+        };
+        let sens = SensitivityModel::measure_with_progress(&net, features, labels, Some(&progress));
+        eprintln!(
+            "sweep finished: {jobs_total} jobs in {:.2} s",
+            t0.elapsed().as_secs_f64()
+        );
         let out = args
             .get("out")
             .map(PathBuf::from)
@@ -730,7 +771,8 @@ fn cmd_frontier(argv: &[String]) -> Result<()> {
     });
     spec.push(OptSpec {
         name: "limit",
-        help: "images for an on-the-fly sensitivity sweep (0 = all)",
+        help: "images for an on-the-fly sensitivity sweep and for \
+               --validate measurements (0 = all)",
         takes_value: true,
         default: Some("2000"),
     });
@@ -759,6 +801,14 @@ fn cmd_frontier(argv: &[String]) -> Result<()> {
         takes_value: true,
         default: None,
     });
+    spec.push(OptSpec {
+        name: "validate",
+        help: "measure the K most accurate frontier points on the test set \
+               (accurate prefixes share one checkpoint) and print measured \
+               vs predicted accuracy — the additive-assumption check",
+        takes_value: true,
+        default: Some("0"),
+    });
     let args = Args::parse(argv, &spec)?;
     let dir = artifacts_dir(&args);
     let weights = QuantWeights::load_artifacts(&dir)?;
@@ -774,6 +824,8 @@ fn cmd_frontier(argv: &[String]) -> Result<()> {
     let sweep_path = explicit
         .clone()
         .unwrap_or_else(|| dir.join("schedule_sweep.json"));
+    // loaded at most once, shared by the on-the-fly sweep and --validate
+    let mut dataset: Option<Dataset> = None;
     let sens = if explicit.is_some() || (!forced_measure && sweep_path.exists()) {
         let s = SensitivityModel::load(&sweep_path)?;
         println!(
@@ -783,7 +835,7 @@ fn cmd_frontier(argv: &[String]) -> Result<()> {
         );
         s
     } else {
-        let ds = Dataset::load_test(&dir)?;
+        let ds = dataset.get_or_insert(Dataset::load_test(&dir)?);
         let limit: usize = args.get_or("limit", 2000)?;
         let n = if limit == 0 { ds.len() } else { limit.min(ds.len()) };
         println!(
@@ -870,6 +922,35 @@ fn cmd_frontier(argv: &[String]) -> Result<()> {
             }
             None => println!("accuracy floor {floor} -> unreachable on this frontier"),
         }
+    }
+    let validate: usize = args.get_or("validate", 0)?;
+    if validate > 0 {
+        let ds = match dataset.take() {
+            Some(ds) => ds,
+            None => Dataset::load_test(&dir)?,
+        };
+        let limit: usize = args.get_or("limit", 2000)?;
+        let n = if limit == 0 { ds.len() } else { limit.min(ds.len()) };
+        let points: Vec<&ecmac::coordinator::SchedulePoint> =
+            frontier.points().iter().rev().take(validate).collect();
+        let scheds: Vec<ConfigSchedule> = points.iter().map(|p| p.sched.clone()).collect();
+        let net = Network::new(weights.clone());
+        let measured = net.accuracy_sched_many(&ds.features[..n], &ds.labels[..n], &scheds);
+        println!(
+            "\nfrontier validation: {} most accurate points measured on {n} test images",
+            points.len()
+        );
+        println!("{}", report::frontier_validation_table(&points, &measured));
+        let worst = points
+            .iter()
+            .zip(&measured)
+            .map(|(p, &m)| (p.accuracy - m).abs())
+            .fold(0.0, f64::max);
+        println!(
+            "largest |measured - predicted| gap: {:.3} pp \
+             (additive-degradation assumption check)",
+            worst * 100.0
+        );
     }
     Ok(())
 }
@@ -959,15 +1040,22 @@ fn cmd_topo(argv: &[String]) -> Result<()> {
 
 /// In-process benchmark driver.  `--cycle-batch` compares the per-image
 /// cycle-accurate FSM against the interleaved batch schedule across a
-/// set of topologies — verifying bit-exactness, then measuring wall
-/// throughput and the modeled cycle counts — and writes the
-/// `BENCH_cycle_batch.json` artifact CI records for the perf
-/// trajectory.
+/// set of topologies and writes `BENCH_cycle_batch.json`; `--forward`
+/// compares the signed-table GEMM + scratch-arena functional path (and
+/// the prefix-cached sweep engine) against the pre-PR reference paths
+/// and writes `BENCH_forward.json`.  Both verify bit-exactness before
+/// timing; CI records the artifacts for the perf trajectory.
 fn cmd_bench(argv: &[String]) -> Result<()> {
     let spec = vec![
         OptSpec {
             name: "cycle-batch",
             help: "per-image vs interleaved cycle-accurate batch comparison",
+            takes_value: false,
+            default: None,
+        },
+        OptSpec {
+            name: "forward",
+            help: "signed-table batch GEMM + prefix-cached sweep vs the reference paths",
             takes_value: false,
             default: None,
         },
@@ -979,9 +1067,16 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
         },
         OptSpec {
             name: "topologies",
-            help: "semicolon-separated topology specs to compare",
+            help: "semicolon-separated topology specs to compare \
+                   (default: mode-specific set)",
             takes_value: true,
-            default: Some("62,30,10;8,23,5;4,4,3;62,33,10"),
+            default: None,
+        },
+        OptSpec {
+            name: "sweep-images",
+            help: "evaluation-set size for the --forward sweep comparison",
+            takes_value: true,
+            default: Some("64"),
         },
         OptSpec {
             name: "json",
@@ -998,17 +1093,12 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     ];
     let args = Args::parse(argv, &spec)?;
     anyhow::ensure!(
-        args.flag("cycle-batch"),
-        "nothing to run: pass --cycle-batch (the full suite lives in `cargo bench`)"
+        args.flag("cycle-batch") != args.flag("forward"),
+        "pass exactly one of --cycle-batch / --forward \
+         (the full suite lives in `cargo bench`)"
     );
     let batch: usize = args.get_or("batch", 64)?;
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
-    let specs: Vec<&str> = args
-        .get("topologies")
-        .expect("topologies has a spec default")
-        .split(';')
-        .filter(|s| !s.is_empty())
-        .collect();
 
     use ecmac::testkit::bench::{BenchConfig, Bencher};
     let quick = args.flag("quick");
@@ -1019,6 +1109,15 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
         filter: None,
         json_out: None,
     };
+    if args.flag("forward") {
+        return bench_forward(&args, bench_cfg, batch);
+    }
+    let specs: Vec<&str> = args
+        .get("topologies")
+        .unwrap_or("62,30,10;8,23,5;4,4,3;62,33,10")
+        .split(';')
+        .filter(|s| !s.is_empty())
+        .collect();
     let mut b = Bencher::new(bench_cfg);
     let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
     let mut rows: Vec<ecmac::util::json::Json> = Vec::new();
@@ -1084,6 +1183,95 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
             "schema_version" => 1usize,
             "bench" => "cycle_batch",
             "batch" => batch,
+            "rows" => rows,
+            "harness" => harness_rows,
+        };
+        std::fs::write(path, doc.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `ecmac bench --forward`: the signed-table batched GEMM and the
+/// prefix-cached sweep engine against the pre-PR reference paths
+/// (verbatim copies in `testkit`), per topology.  Writes the
+/// `BENCH_forward.json` before/after artifact.
+fn bench_forward(
+    args: &ecmac::util::cli::Args,
+    bench_cfg: ecmac::testkit::bench::BenchConfig,
+    batch: usize,
+) -> Result<()> {
+    use ecmac::testkit::bench::Bencher;
+    let specs: Vec<&str> = args
+        .get("topologies")
+        .unwrap_or("62,30,10;62,20,20,10")
+        .split(';')
+        .filter(|s| !s.is_empty())
+        .collect();
+    let sweep_images: usize = args.get_or("sweep-images", 64)?;
+    anyhow::ensure!(sweep_images >= 1, "--sweep-images must be at least 1");
+    let mut b = Bencher::new(bench_cfg);
+    let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
+    let mut rows: Vec<ecmac::util::json::Json> = Vec::new();
+    let mut table_rows: Vec<report::ForwardBenchRow> = Vec::new();
+    for spec_s in &specs {
+        let topo = Topology::parse(spec_s)?;
+        // registers the timed trios and asserts bit-exactness first:
+        // the comparison is meaningless otherwise
+        ecmac::testkit::bench_forward_suite(&mut b, &topo, batch, &sched);
+        ecmac::testkit::bench_sweep_pair(&mut b, &topo, sweep_images);
+        let thrpt = |name: &str| {
+            b.result(name)
+                .and_then(|r| r.throughput_per_sec())
+                .unwrap_or(-1.0)
+        };
+        let mean_ms = |name: &str| b.result(name).map(|r| r.mean_ns / 1e6).unwrap_or(-1.0);
+        let row = report::ForwardBenchRow {
+            topology: topo.to_string(),
+            batch: batch as u64,
+            per_image_per_sec: thrpt(&format!("forward/per_image_{topo}")),
+            batch_reference_per_sec: thrpt(&format!("forward/batch_reference_{topo}")),
+            batch_per_sec: thrpt(&format!("forward/batch_{topo}")),
+            sweep_jobs: 32 * topo.n_layers() as u64,
+            sweep_full_ms: mean_ms(&format!("sweep/full_pass_{topo}")),
+            sweep_cached_ms: mean_ms(&format!("sweep/prefix_cached_{topo}")),
+        };
+        rows.push(ecmac::json_obj! {
+            "topology" => row.topology.clone(),
+            "per_image_per_sec" => row.per_image_per_sec,
+            "batch_reference_per_sec" => row.batch_reference_per_sec,
+            "batch_per_sec" => row.batch_per_sec,
+            "batch_speedup" => row.batch_per_sec / row.batch_reference_per_sec.max(1e-9),
+            "sweep_jobs" => row.sweep_jobs as f64,
+            "sweep_reference_ms" => row.sweep_full_ms,
+            "sweep_cached_ms" => row.sweep_cached_ms,
+            "sweep_speedup" => row.sweep_full_ms / row.sweep_cached_ms.max(1e-9),
+            "bit_exact" => true,
+        });
+        table_rows.push(row);
+    }
+    let harness_rows: Vec<ecmac::util::json::Json> = b
+        .results()
+        .iter()
+        .map(|r| {
+            ecmac::json_obj! {
+                "name" => r.name.clone(),
+                "mean_ns" => r.mean_ns,
+                "median_ns" => r.median_ns,
+                "p95_ns" => r.p95_ns,
+                "throughput_per_sec" => r.throughput_per_sec().unwrap_or(-1.0),
+            }
+        })
+        .collect();
+    b.finish();
+    println!("\nforward hot path + sweep engine (before -> after):");
+    println!("{}", report::forward_bench_table(&table_rows));
+    if let Some(path) = args.get("json") {
+        let doc = ecmac::json_obj! {
+            "schema_version" => 1usize,
+            "bench" => "forward",
+            "batch" => batch,
+            "sweep_images" => sweep_images,
             "rows" => rows,
             "harness" => harness_rows,
         };

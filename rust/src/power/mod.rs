@@ -320,14 +320,44 @@ impl PowerModel {
             .sum()
     }
 
+    /// Power one extra asserted weight-bank select line draws while its
+    /// pass-group streams, in mW: a fixed share of the uncore budget
+    /// (the muxes live in the uncore).  Small by construction — the
+    /// interleaving win is whole pass-groups of full network power, so
+    /// the muxing cost can dent it but never erase it.
+    pub fn wsel_line_mw(&self) -> f64 {
+        const WSEL_LINE_FRACTION_OF_UNCORE: f64 = 0.002;
+        self.p_uncore_mw * WSEL_LINE_FRACTION_OF_UNCORE
+    }
+
+    /// Energy the interleaved batch spends on extra weight-bank muxing,
+    /// nJ: each assert ([`crate::weights::Topology::batch_layer_extra_wsel`])
+    /// keeps one additional select line driven for its pass-group's
+    /// `fan_in + 1` cycles.  Zero whenever no layer has a partial pass.
+    pub fn batch_wsel_energy_nj(&self, topo: &crate::weights::Topology, batch: u64) -> f64 {
+        (0..topo.n_layers())
+            .map(|l| {
+                topo.batch_layer_extra_wsel(l, batch) as f64
+                    * self.wsel_line_mw()
+                    * 1e-3
+                    * (topo.layer_in(l) as f64 + 1.0)
+                    / anchors::FREQ_HZ
+                    * 1e9
+            })
+            .sum()
+    }
+
     /// Energy in nJ to classify `batch` images under the *interleaved*
     /// cycle-accurate batch schedule: layer `l` draws its
     /// configuration's power for
     /// [`crate::weights::Topology::batch_layer_cycles`] cycles — the
     /// actual active-lane pass-groups, with partial passes shared
-    /// between images.  Equals `batch x energy_per_image_nj_sched` when
-    /// no layer has a partial pass, and is strictly cheaper once
-    /// interleaving shares one.
+    /// between images — plus the extra weight-bank muxing the sharing
+    /// costs ([`Self::batch_wsel_energy_nj`]; an earlier revision left
+    /// it a bare counter, undercounting every interleaved batch).
+    /// Equals `batch x energy_per_image_nj_sched` when no layer has a
+    /// partial pass, and is strictly cheaper once interleaving shares
+    /// one.
     pub fn batch_energy_nj(
         &self,
         topo: &crate::weights::Topology,
@@ -341,7 +371,8 @@ impl PowerModel {
                     / anchors::FREQ_HZ
                     * 1e9
             })
-            .sum()
+            .sum::<f64>()
+            + self.batch_wsel_energy_nj(topo, batch)
     }
 
     /// Time-weighted average network power (mW) of a per-layer schedule.
@@ -465,19 +496,64 @@ mod tests {
         use crate::weights::Topology;
         let m = model();
         let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
-        // seed: no partial pass, batch energy is exactly linear
+        // seed: no partial pass, no muxing, batch energy exactly linear
         let seed = Topology::seed();
         let per_image = m.energy_per_image_nj_sched(&seed, &sched);
+        assert_eq!(m.batch_wsel_energy_nj(&seed, 16), 0.0);
         assert!((m.batch_energy_nj(&seed, &sched, 16) - 16.0 * per_image).abs() < 1e-9);
-        // partial passes shared: the batch is strictly cheaper
+        // partial passes shared: the batch is strictly cheaper even
+        // after paying for the extra weight-bank muxing
         let t = Topology::parse("8,23,5").unwrap();
         let e_batch = m.batch_energy_nj(&t, &sched, 12);
         let e_seq = 12.0 * m.energy_per_image_nj_sched(&t, &sched);
         assert!(e_batch < e_seq, "{e_batch} vs {e_seq}");
-        // and consistent with the cycle model
-        let ratio = e_batch / e_seq;
-        let cycle_ratio = t.batch_cycles(12) as f64 / (12 * t.cycles_per_image()) as f64;
-        assert!((ratio - cycle_ratio).abs() < 1e-9, "{ratio} vs {cycle_ratio}");
+        // the total decomposes exactly into cycle energy + muxing energy
+        let cycle_only: f64 = (0..t.n_layers())
+            .map(|l| {
+                m.breakdown(sched.layer(l)).total_mw * 1e-3
+                    * t.batch_layer_cycles(l, 12) as f64
+                    / anchors::FREQ_HZ
+                    * 1e9
+            })
+            .sum();
+        let wsel = m.batch_wsel_energy_nj(&t, 12);
+        assert!(wsel > 0.0, "interleaved partial passes must charge muxing");
+        assert!((e_batch - cycle_only - wsel).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extra_wsel_energy_regression_interleaved_no_longer_undercounts() {
+        // PR-3 follow-up: the extra_wsel tally used to be a bare
+        // counter; the interleaved batch energy must now be >= the old
+        // cycles-only figure on any partial-pass topology, while the
+        // muxing term stays small enough to keep interleaving a win
+        use crate::amul::ConfigSchedule;
+        use crate::weights::Topology;
+        let m = model();
+        for spec in ["4,4,3", "8,23,5", "62,33,10", "7,19,13,3"] {
+            let t = Topology::parse(spec).unwrap();
+            for cfg in [Config::ACCURATE, Config::new(9).unwrap(), Config::MAX_APPROX] {
+                let sched = ConfigSchedule::uniform(cfg);
+                for b in [2u64, 10, 16] {
+                    let old_undercounted: f64 = (0..t.n_layers())
+                        .map(|l| {
+                            m.breakdown(cfg).total_mw * 1e-3
+                                * t.batch_layer_cycles(l, b) as f64
+                                / anchors::FREQ_HZ
+                                * 1e9
+                        })
+                        .sum();
+                    let charged = m.batch_energy_nj(&t, &sched, b);
+                    assert!(
+                        charged > old_undercounted,
+                        "{spec} {cfg} b={b}: {charged} vs undercounted {old_undercounted}"
+                    );
+                    // ...but never by enough to erase the interleave win
+                    let sequential = b as f64 * m.energy_per_image_nj_sched(&t, &sched);
+                    assert!(charged < sequential, "{spec} {cfg} b={b}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -415,6 +415,85 @@ pub fn cycle_batch_table(rows: &[CycleBatchRow]) -> String {
     t.render()
 }
 
+/// One topology's before/after forward-path and sweep-engine comparison
+/// (the rows behind `ecmac bench --forward` and its
+/// `BENCH_forward.json` artifact).
+#[derive(Debug, Clone)]
+pub struct ForwardBenchRow {
+    pub topology: String,
+    pub batch: u64,
+    /// Per-image functional path, images/s.
+    pub per_image_per_sec: f64,
+    /// Pre-PR batched path (unsigned table + per-call Vecs), images/s.
+    pub batch_reference_per_sec: f64,
+    /// Signed-table + scratch-arena batched path, images/s.
+    pub batch_per_sec: f64,
+    /// Sensitivity-sweep jobs timed (32 x weight layers).
+    pub sweep_jobs: u64,
+    /// Full-pass (pre-PR) sweep engine, ms per sweep.
+    pub sweep_full_ms: f64,
+    /// Prefix-cached sweep engine, ms per sweep.
+    pub sweep_cached_ms: f64,
+}
+
+/// Render the before/after throughput comparison for the signed-table
+/// GEMM and the prefix-cached sweep engine.
+pub fn forward_bench_table(rows: &[ForwardBenchRow]) -> String {
+    let mut t = TextTable::new(&[
+        "topology",
+        "batch",
+        "per-img img/s",
+        "batch before img/s",
+        "batch after img/s",
+        "speedup",
+        "sweep before ms",
+        "sweep after ms",
+        "speedup",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.topology.clone(),
+            r.batch.to_string(),
+            format!("{:.0}", r.per_image_per_sec),
+            format!("{:.0}", r.batch_reference_per_sec),
+            format!("{:.0}", r.batch_per_sec),
+            format!(
+                "{:.2}x",
+                r.batch_per_sec / r.batch_reference_per_sec.max(1e-9)
+            ),
+            format!("{:.2}", r.sweep_full_ms),
+            format!("{:.2}", r.sweep_cached_ms),
+            format!("{:.2}x", r.sweep_full_ms / r.sweep_cached_ms.max(1e-9)),
+        ]);
+    }
+    t.render()
+}
+
+/// Measured-vs-predicted table for frontier validation
+/// (`ecmac frontier --validate K`).
+pub fn frontier_validation_table(
+    points: &[&crate::coordinator::frontier::SchedulePoint],
+    measured: &[f64],
+) -> String {
+    let mut t = TextTable::new(&[
+        "schedule",
+        "energy nJ/img",
+        "pred acc %",
+        "measured acc %",
+        "delta pp",
+    ]);
+    for (p, &m) in points.iter().zip(measured) {
+        t.row(vec![
+            p.sched.to_string(),
+            format!("{:.3}", p.energy_nj),
+            format!("{:.2}", p.accuracy * 100.0),
+            format!("{:.2}", m * 100.0),
+            format!("{:+.3}", (p.accuracy - m) * 100.0),
+        ]);
+    }
+    t.render()
+}
+
 /// CSV for the power/accuracy sweep (the data behind Figs 5-7).
 pub fn sweep_csv(sweep: &[PowerBreakdown], accuracy: &[f64], model: &PowerModel) -> String {
     let mut t = TextTable::new(&[

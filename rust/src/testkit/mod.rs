@@ -10,14 +10,18 @@
 //! * [`bench_cycle_batch_pair`] — the shared per-image-FSM vs
 //!   interleaved-batch comparison registration, so `cargo bench` and
 //!   `ecmac bench --cycle-batch` measure the same thing.
+//! * [`forward_batch_reference`] / [`bench_forward_suite`] /
+//!   [`bench_sweep_pair`] — the pre-signed-table / pre-prefix-cache
+//!   code paths kept verbatim as perf baselines and parity oracles for
+//!   `ecmac bench --forward` and the `forward/*`, `sweep/*` benches.
 
 pub mod bench;
 pub mod prop;
 
-use crate::amul::{Config, ConfigSchedule};
-use crate::datapath::{BatchCycleResult, DatapathSim, Network};
+use crate::amul::{sm, Config, ConfigSchedule};
+use crate::datapath::{neuron, BatchCycleResult, BatchScratch, DatapathSim, ImageResult, Network};
 use crate::util::rng::Pcg32;
-use crate::weights::{QuantWeights, Topology};
+use crate::weights::{Activation, QuantWeights, Topology};
 
 /// Random evaluation set labeled with the network's own accurate-mode
 /// predictions, so "accuracy" measures agreement with the exact
@@ -80,4 +84,192 @@ pub fn bench_cycle_batch_pair(
     });
     b.report_speedup(&per_image_name, &interleaved_name);
     interleaved
+}
+
+/// The pre-signed-table batched forward pass, kept verbatim as the perf
+/// baseline for `ecmac bench --forward` and as a bit-parity oracle: the
+/// unsigned magnitude table with a per-MAC sign fixup, and fresh `Vec`s
+/// for every buffer on every call.  Any change to the live
+/// [`Network::forward_batch`] must stay bit-identical to this.
+pub fn forward_batch_reference<X: AsRef<[u8]>>(
+    net: &Network,
+    xs: &[X],
+    sched: &ConfigSchedule,
+) -> Vec<ImageResult> {
+    let topo = net.topology();
+    let b = xs.len();
+    if b == 0 {
+        return Vec::new();
+    }
+    let n_in0 = topo.inputs();
+    let mut cur: Vec<u8> = Vec::with_capacity(b * n_in0);
+    for x in xs {
+        let x = x.as_ref();
+        assert_eq!(x.len(), n_in0, "input width mismatch for topology {topo}");
+        cur.extend_from_slice(x);
+    }
+    let mut hidden: Vec<Vec<u8>> =
+        (0..b).map(|_| Vec::with_capacity(topo.hidden_units())).collect();
+    let mut logits: Vec<Vec<i32>> = Vec::new();
+    for (l, lw) in net.weights.layers.iter().enumerate() {
+        let t = net.tables.get(sched.layer(l));
+        let (n_in, n_out) = (lw.n_in, lw.n_out);
+        let mut acc = vec![0i32; b * n_out];
+        for i in 0..n_in {
+            let wrow = lw.w_row(i);
+            for img in 0..b {
+                let row = t.row(cur[img * n_in + i]);
+                let dst = &mut acc[img * n_out..(img + 1) * n_out];
+                for (a, &wv) in dst.iter_mut().zip(wrow) {
+                    *a += row.mul8_sm(wv);
+                }
+            }
+        }
+        match topo.activation(l) {
+            Activation::Identity => {
+                logits = (0..b)
+                    .map(|img| {
+                        let mut v = acc[img * n_out..(img + 1) * n_out].to_vec();
+                        for (a, &bv) in v.iter_mut().zip(&lw.b) {
+                            *a += sm::decode(bv) << 7;
+                        }
+                        v
+                    })
+                    .collect();
+            }
+            Activation::ReluSat => {
+                let mut next = vec![0u8; b * n_out];
+                for img in 0..b {
+                    for j in 0..n_out {
+                        let a = acc[img * n_out + j] + (sm::decode(lw.b[j]) << 7);
+                        next[img * n_out + j] = neuron::saturate_activation(a);
+                    }
+                    hidden[img].extend_from_slice(&next[img * n_out..(img + 1) * n_out]);
+                }
+                cur = next;
+            }
+        }
+    }
+    hidden
+        .into_iter()
+        .zip(logits)
+        .map(|(h, lg)| ImageResult {
+            pred: neuron::argmax(&lg) as u8,
+            logits: lg,
+            hidden: h,
+        })
+        .collect()
+}
+
+/// Accuracy through [`forward_batch_reference`] — the pre-PR evaluation
+/// path the sweep baseline runs on.
+pub fn accuracy_sched_reference<X: AsRef<[u8]>>(
+    net: &Network,
+    features: &[X],
+    labels: &[u8],
+    sched: &ConfigSchedule,
+) -> f64 {
+    assert_eq!(features.len(), labels.len());
+    let mut correct = 0usize;
+    for (xs, ys) in features.chunks(128).zip(labels.chunks(128)) {
+        let rs = forward_batch_reference(net, xs, sched);
+        correct += rs.iter().zip(ys).filter(|(r, &y)| r.pred == y).count();
+    }
+    correct as f64 / labels.len() as f64
+}
+
+/// Register the forward-path throughput trio for one topology —
+/// `forward/per_image_<topo>`, `forward/batch_reference_<topo>` (the
+/// pre-PR path) and `forward/batch_<topo>` (signed tables + scratch
+/// arena) — asserting three-way bit-exactness first.  One definition
+/// serves both `cargo bench` and `ecmac bench --forward`, so the CI
+/// artifact and the bench suite can never measure different things.
+pub fn bench_forward_suite(
+    b: &mut bench::Bencher,
+    topo: &Topology,
+    batch: usize,
+    sched: &ConfigSchedule,
+) {
+    let net = Network::new(QuantWeights::random(topo, 7));
+    let mut rng = Pcg32::new(0xF0A4D);
+    let xs: Vec<Vec<u8>> = (0..batch)
+        .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
+        .collect();
+    let fast = net.forward_batch(&xs, sched);
+    let reference = forward_batch_reference(&net, &xs, sched);
+    assert_eq!(fast, reference, "signed-table batch diverged from the reference on {topo}");
+    for (x, r) in xs.iter().zip(&fast) {
+        assert_eq!(*r, net.forward_sched(x, sched), "batch diverged from per-image on {topo}");
+    }
+    b.throughput(batch as u64)
+        .bench(&format!("forward/per_image_{topo}"), || {
+            for x in &xs {
+                std::hint::black_box(net.forward_sched(x, sched));
+            }
+        });
+    b.throughput(batch as u64)
+        .bench(&format!("forward/batch_reference_{topo}"), || {
+            std::hint::black_box(forward_batch_reference(&net, &xs, sched));
+        });
+    let mut scratch = BatchScratch::new();
+    b.throughput(batch as u64)
+        .bench(&format!("forward/batch_{topo}"), || {
+            std::hint::black_box(net.forward_batch_with(&xs, sched, &mut scratch));
+        });
+    b.report_speedup(
+        &format!("forward/batch_reference_{topo}"),
+        &format!("forward/batch_{topo}"),
+    );
+}
+
+/// Register the sensitivity-sweep pair for one topology:
+/// `sweep/full_pass_<topo>` runs the pre-PR engine (one full
+/// reference-path evaluation per `(layer, config)` job) and
+/// `sweep/prefix_cached_<topo>` the checkpoint/resume engine, both
+/// serial so the comparison measures the algorithms rather than the
+/// thread pool.  Asserts the two engines agree on every drop first.
+pub fn bench_sweep_pair(b: &mut bench::Bencher, topo: &Topology, images: usize) {
+    let net = Network::new(QuantWeights::random(topo, 3));
+    let (xs, labels) = accurate_labeled_set(&net, images, 17);
+    let n_layers = topo.n_layers();
+    let jobs: Vec<(usize, Config)> = (0..n_layers)
+        .flat_map(|l| Config::approximate().map(move |c| (l, c)))
+        .collect();
+    let full_pass = |xs: &[Vec<u8>], labels: &[u8]| -> Vec<f64> {
+        jobs.iter()
+            .map(|&(l, cfg)| {
+                let mut cfgs = vec![Config::ACCURATE; n_layers];
+                cfgs[l] = cfg;
+                accuracy_sched_reference(&net, xs, labels, &ConfigSchedule::per_layer(cfgs))
+            })
+            .collect()
+    };
+    let prefix_cached = |xs: &[Vec<u8>], labels: &[u8]| -> Vec<f64> {
+        let ckpt = net.checkpoint_accurate(xs);
+        jobs.iter()
+            .map(|&(l, cfg)| {
+                let mut cfgs = vec![Config::ACCURATE; n_layers];
+                cfgs[l] = cfg;
+                net.accuracy_resume(&ckpt, l, &ConfigSchedule::per_layer(cfgs), labels)
+            })
+            .collect()
+    };
+    assert_eq!(
+        full_pass(&xs, &labels),
+        prefix_cached(&xs, &labels),
+        "prefix-cached sweep diverged from the full-pass engine on {topo}"
+    );
+    let per_iter = (jobs.len() * images) as u64;
+    b.throughput(per_iter)
+        .bench(&format!("sweep/full_pass_{topo}"), || {
+            std::hint::black_box(full_pass(&xs, &labels));
+        });
+    b.throughput(per_iter)
+        .bench(&format!("sweep/prefix_cached_{topo}"), || {
+            std::hint::black_box(prefix_cached(&xs, &labels));
+        });
+    b.report_speedup(
+        &format!("sweep/full_pass_{topo}"),
+        &format!("sweep/prefix_cached_{topo}"),
+    );
 }

@@ -233,6 +233,42 @@ impl Topology {
         self.batch_layer_passes(l, batch) * (self.layer_in(l) as u64 + 1)
     }
 
+    /// Extra weight-bank mux lines layer `l` asserts over an interleaved
+    /// batch of `batch` images — the closed form of the per-group
+    /// `extra_wsel` tally in
+    /// [`crate::datapath::controller::batch_pass_groups`].
+    ///
+    /// The partial-pass slots are packed image-major (`r` slots per
+    /// image) into groups of [`N_PHYSICAL`]; each image boundary inside
+    /// a group asserts one extra line.  Of the `batch - 1` image
+    /// boundaries, the ones landing exactly on a group boundary
+    /// (`m·r ≡ 0 mod N_PHYSICAL`, i.e. every `N_PHYSICAL / gcd(r,
+    /// N_PHYSICAL)`-th image) are free:
+    ///
+    /// ```text
+    /// extra(l, b) = (b-1) - floor((b-1) / (N_PHYSICAL / gcd(r, N_PHYSICAL)))
+    /// ```
+    pub fn batch_layer_extra_wsel(&self, l: usize, batch: u64) -> u64 {
+        let r = self.partial_pass_width(l) as u64;
+        if r == 0 || batch <= 1 {
+            return 0;
+        }
+        let n = N_PHYSICAL as u64;
+        let period = n / gcd(r, n);
+        (batch - 1) - (batch - 1) / period
+    }
+
+    /// Total extra weight-bank mux lines an interleaved batch asserts,
+    /// across all layers — matches
+    /// [`crate::datapath::BatchCycleResult::extra_wsel_asserts`] exactly
+    /// (locked by the `batch_interleave` property suite), so the power
+    /// model can charge the muxing cost without running the simulator.
+    pub fn batch_extra_wsel(&self, batch: u64) -> u64 {
+        (0..self.n_layers())
+            .map(|l| self.batch_layer_extra_wsel(l, batch))
+            .sum()
+    }
+
     /// Total cycles to classify `batch` images under the interleaved
     /// batch schedule.  Equals `batch * cycles_per_image()` when no
     /// layer has a partial pass (the seed 62-30-10 network), and is
@@ -245,6 +281,13 @@ impl Topology {
     pub fn is_seed(&self) -> bool {
         self.sizes == [N_INPUTS, N_HIDDEN, N_OUTPUTS]
     }
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
 }
 
 impl std::fmt::Display for Topology {
@@ -568,6 +611,33 @@ mod tests {
         // a batch of one is exactly the per-image FSM
         assert_eq!(t.batch_cycles(1), t.cycles_per_image());
         assert_eq!(t.batch_cycles(0), 0);
+    }
+
+    #[test]
+    fn batch_extra_wsel_closed_form_matches_pass_group_packing() {
+        use crate::datapath::controller::batch_pass_groups;
+        for spec in ["62,30,10", "8,23,5", "4,4,3", "7,19,13,3", "62,33,10"] {
+            let topo = Topology::parse(spec).unwrap();
+            for b in [0u64, 1, 2, 5, 7, 10, 12, 16, 31] {
+                let groups = batch_pass_groups(&topo, b as u32);
+                for l in 0..topo.n_layers() {
+                    let sim: u64 = groups
+                        .iter()
+                        .filter(|g| g.layer as usize == l)
+                        .map(|g| g.extra_wsel as u64)
+                        .sum();
+                    assert_eq!(
+                        topo.batch_layer_extra_wsel(l, b),
+                        sim,
+                        "{spec} layer {l} batch {b}"
+                    );
+                }
+                let total: u64 = groups.iter().map(|g| g.extra_wsel as u64).sum();
+                assert_eq!(topo.batch_extra_wsel(b), total, "{spec} batch {b}");
+            }
+        }
+        // no partial pass -> nothing to mux, at any depth
+        assert_eq!(Topology::seed().batch_extra_wsel(64), 0);
     }
 
     #[test]

@@ -102,6 +102,22 @@ fn prop_batch_cycles_bounded_by_sequential() {
 }
 
 #[test]
+fn prop_extra_wsel_closed_form_matches_simulation() {
+    // the power model charges muxing from Topology::batch_extra_wsel;
+    // it must equal the simulator's per-group tally on any topology
+    check("closed-form extra_wsel == simulated", 25, gen_case(), |case| {
+        let (topo, net, sched, xs) = build_case(case);
+        let b = xs.len() as u64;
+        let batch = net.batch_forward_cycle_accurate(&xs, &sched);
+        let per_layer_sum: u64 = (0..topo.n_layers())
+            .map(|l| topo.batch_layer_extra_wsel(l, b))
+            .sum();
+        topo.batch_extra_wsel(b) == batch.extra_wsel_asserts
+            && per_layer_sum == batch.extra_wsel_asserts
+    });
+}
+
+#[test]
 fn interleave_strictly_beats_sequential_on_partial_pass_topologies() {
     for spec in ["4,4,3", "8,23,5", "62,33,10", "7,19,13,3"] {
         let topo = Topology::parse(spec).unwrap();

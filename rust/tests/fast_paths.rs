@@ -1,0 +1,168 @@
+//! Property tests for the signed-table GEMM hot path, the scratch
+//! arenas and the prefix-cached resume engine: every fast path must be
+//! bit-exact with its slow oracle on random topologies, schedules and
+//! operand streams.
+
+use ecmac::amul::{mul8_sm_approx, Config, ConfigSchedule, MulTables};
+use ecmac::datapath::{BatchScratch, Network};
+use ecmac::testkit::prop::*;
+use ecmac::testkit::{accuracy_sched_reference, forward_batch_reference};
+use ecmac::util::rng::Pcg32;
+use ecmac::weights::{QuantWeights, Topology};
+
+#[test]
+fn prop_signed_table_bit_exact_all_33_configs() {
+    // random operand byte pairs (including negative zeros and sign
+    // combinations) through the signed table of every configuration
+    let tables = MulTables::build();
+    check(
+        "signed table == mul8_sm_approx",
+        60,
+        gen_tuple2(gen_i64(0, 255), gen_i64(0, 255)),
+        |&(x, w)| {
+            let (x, w) = (x as u8, w as u8);
+            Config::all().all(|cfg| {
+                let st = tables.signed(cfg);
+                st.mul8_sm(x, w) == mul8_sm_approx(x, w, cfg)
+                    && st.row(x)[w as usize] as i32 == mul8_sm_approx(x, w, cfg)
+            })
+        },
+    );
+}
+
+/// ((inputs, outputs), (hidden widths, (batch, seed)))
+type Case = ((i64, i64), (Vec<i64>, (i64, i64)));
+
+fn gen_case() -> Gen<Case> {
+    gen_tuple2(
+        gen_tuple2(gen_i64(1, 24), gen_i64(1, 23)),
+        gen_tuple2(
+            gen_vec(gen_i64(1, 23), 2),
+            gen_tuple2(gen_i64(1, 12), gen_i64(0, 1 << 30)),
+        ),
+    )
+}
+
+fn build_case(case: &Case) -> (Topology, Network, Vec<Vec<u8>>, Pcg32) {
+    let ((n_in, n_out), (hidden, (batch, seed))) = case;
+    let mut sizes = vec![*n_in as usize];
+    sizes.extend(hidden.iter().map(|&h| h as usize));
+    sizes.push(*n_out as usize);
+    let topo = Topology::new(sizes).expect("generated topology is valid");
+    let net = Network::new(QuantWeights::random(&topo, *seed as u64));
+    let mut rng = Pcg32::new((*seed as u64).wrapping_add(0xFA57));
+    let xs: Vec<Vec<u8>> = (0..*batch as usize)
+        .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
+        .collect();
+    (topo, net, xs, rng)
+}
+
+#[test]
+fn prop_batch_matches_reference_and_per_image() {
+    // the live signed-table + scratch path against the verbatim pre-PR
+    // reference and the per-image functional path
+    check("forward_batch == reference == per-image", 25, gen_case(), |case| {
+        let (topo, net, xs, mut rng) = build_case(case);
+        let sched = ConfigSchedule::per_layer(
+            (0..topo.n_layers())
+                .map(|_| Config::new(rng.below(33)).unwrap())
+                .collect(),
+        );
+        let fast = net.forward_batch(&xs, &sched);
+        if fast != forward_batch_reference(&net, &xs, &sched) {
+            return false;
+        }
+        xs.iter()
+            .zip(&fast)
+            .all(|(x, r)| *r == net.forward_sched(x, &sched))
+    });
+}
+
+#[test]
+fn prop_resume_from_any_boundary_bit_exact() {
+    // a schedule accurate below a random boundary: resuming from the
+    // checkpoint must reproduce the from-scratch batch bit for bit
+    check("forward_batch_resume == forward_batch", 25, gen_case(), |case| {
+        let (topo, net, xs, mut rng) = build_case(case);
+        let n_layers = topo.n_layers();
+        let from = rng.below(n_layers as u32) as usize;
+        let cfgs: Vec<Config> = (0..n_layers)
+            .map(|l| {
+                if l < from {
+                    Config::ACCURATE
+                } else {
+                    Config::new(rng.below(33)).unwrap()
+                }
+            })
+            .collect();
+        let sched = ConfigSchedule::per_layer(cfgs);
+        let ckpt = net.checkpoint_accurate(&xs);
+        let resumed = net.forward_batch_resume(&ckpt, from, &sched);
+        if resumed != net.forward_batch(&xs, &sched) {
+            return false;
+        }
+        // the accuracy-only resume path agrees with the full evaluator
+        let labels: Vec<u8> = resumed.iter().map(|r| r.pred).collect();
+        net.accuracy_resume(&ckpt, from, &sched, &labels) == 1.0
+            && net.accuracy_sched(&xs, &labels, &sched) == 1.0
+    });
+}
+
+#[test]
+fn prop_scratch_reuse_across_batch_sizes_bit_exact() {
+    // one arena reused for several differently-sized batches (and
+    // schedules) of the same case must match fresh per-image runs
+    check("scratch arena reuse", 20, gen_case(), |case| {
+        let (topo, net, xs, mut rng) = build_case(case);
+        let mut scratch = BatchScratch::new();
+        for take in [xs.len(), xs.len().min(1), xs.len() / 2] {
+            let sub = &xs[..take];
+            let sched = ConfigSchedule::per_layer(
+                (0..topo.n_layers())
+                    .map(|_| Config::new(rng.below(33)).unwrap())
+                    .collect(),
+            );
+            let got = net.forward_batch_with(sub, &sched, &mut scratch);
+            if got.len() != sub.len() {
+                return false;
+            }
+            if !sub
+                .iter()
+                .zip(&got)
+                .all(|(x, r)| *r == net.forward_sched(x, &sched))
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_prefix_cached_sweep_equals_full_pass_sweep() {
+    // the sensitivity engine's core identity on random topologies: for
+    // every (layer, config) job, resume-from-checkpoint accuracy equals
+    // the pre-PR full evaluation through the reference path
+    check("prefix-cached sweep == full-pass sweep", 12, gen_case(), |case| {
+        let (topo, net, xs, mut rng) = build_case(case);
+        let labels: Vec<u8> = xs
+            .iter()
+            .map(|x| net.forward(x, Config::ACCURATE).pred)
+            .collect();
+        let ckpt = net.checkpoint_accurate(&xs);
+        // spot-check a random sample of the 32·L grid per case
+        for _ in 0..6 {
+            let l = rng.below(topo.n_layers() as u32) as usize;
+            let cfg = Config::new(1 + rng.below(32)).unwrap();
+            let mut cfgs = vec![Config::ACCURATE; topo.n_layers()];
+            cfgs[l] = cfg;
+            let sched = ConfigSchedule::per_layer(cfgs);
+            let fast = net.accuracy_resume(&ckpt, l, &sched, &labels);
+            let slow = accuracy_sched_reference(&net, &xs, &labels, &sched);
+            if fast != slow {
+                return false;
+            }
+        }
+        true
+    });
+}
