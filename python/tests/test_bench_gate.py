@@ -1,0 +1,119 @@
+"""The CI bench-regression gate over BENCH_forward.json artifacts."""
+
+import json
+
+from tools import bench_gate
+
+
+def artifact(kernel_speedup=2.5, batch_speedup=4.0, sweep_speedup=2.0, **extra):
+    doc = {
+        "schema_version": 2,
+        "bench": "forward",
+        "rows": [
+            {
+                "topology": "62-30-10",
+                "kernel_speedup": kernel_speedup,
+                "batch_speedup": batch_speedup,
+                "sweep_speedup": sweep_speedup,
+                "batch_per_sec": 1e6 * kernel_speedup,
+                "batch_signed_per_sec": 1e6,
+                "per_image_per_sec": 5e5,
+            }
+        ],
+    }
+    doc.update(extra)
+    return doc
+
+
+def write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+class TestInRunInvariants:
+    def test_healthy_artifact_passes(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", artifact())
+        assert bench_gate.run([fresh]) == 0
+
+    def test_kernel_regression_fails(self, tmp_path):
+        # tiled kernels slower than the PR-4 path beyond tolerance
+        fresh = write(tmp_path, "fresh.json", artifact(kernel_speedup=0.7))
+        assert bench_gate.run([fresh]) == 1
+
+    def test_sweep_regression_fails(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", artifact(sweep_speedup=0.5))
+        assert bench_gate.run([fresh]) == 1
+
+    def test_tolerance_allows_noise(self, tmp_path):
+        # 5% under 1.0x is inside the default 10% tolerance
+        fresh = write(tmp_path, "fresh.json", artifact(kernel_speedup=0.95))
+        assert bench_gate.run([fresh]) == 0
+
+    def test_wrong_artifact_kind_rejected(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", {"bench": "cycle_batch"})
+        assert bench_gate.run([fresh]) == 2
+
+
+class TestBaselineComparison:
+    def test_drop_beyond_tolerance_fails(self, tmp_path):
+        base = write(tmp_path, "base.json", artifact(kernel_speedup=3.0))
+        fresh = write(tmp_path, "fresh.json", artifact(kernel_speedup=2.0))
+        assert bench_gate.run([fresh, "--baseline", base]) == 1
+
+    def test_within_tolerance_passes(self, tmp_path):
+        base = write(tmp_path, "base.json", artifact(kernel_speedup=2.5))
+        fresh = write(tmp_path, "fresh.json", artifact(kernel_speedup=2.3))
+        assert bench_gate.run([fresh, "--baseline", base]) == 0
+
+    def test_improvement_passes(self, tmp_path):
+        base = write(tmp_path, "base.json", artifact(batch_speedup=3.0))
+        fresh = write(tmp_path, "fresh.json", artifact(batch_speedup=9.0))
+        assert bench_gate.run([fresh, "--baseline", base]) == 0
+
+    def test_pending_baseline_skips_comparison(self, tmp_path):
+        base = write(
+            tmp_path, "base.json", artifact(pending_measurement=True, rows=[])
+        )
+        # fresh would fail the comparison if it ran; the stub skips it
+        fresh = write(tmp_path, "fresh.json", artifact())
+        assert bench_gate.run([fresh, "--baseline", base]) == 0
+
+    def test_shrunken_coverage_fails(self, tmp_path):
+        # a topology in the baseline with no fresh measurement must not
+        # pass silently
+        base_doc = artifact()
+        base_doc["rows"].append(dict(base_doc["rows"][0], topology="62-20-20-10"))
+        base = write(tmp_path, "base.json", base_doc)
+        fresh = write(tmp_path, "fresh.json", artifact())
+        assert bench_gate.run([fresh, "--baseline", base]) == 1
+
+    def test_missing_baseline_is_not_fatal(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", artifact())
+        missing = str(tmp_path / "nope.json")
+        assert bench_gate.run([fresh, "--baseline", missing]) == 0
+
+    def test_absolute_mode_compares_throughput(self, tmp_path):
+        base = write(tmp_path, "base.json", artifact())
+        doc = artifact()
+        doc["rows"][0]["batch_per_sec"] = 1e5  # 25x drop, ratios unchanged
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh, "--baseline", base]) == 0
+        assert bench_gate.run([fresh, "--baseline", base, "--absolute"]) == 1
+
+    def test_write_baseline_round_trip(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", artifact())
+        target = str(tmp_path / "baseline.json")
+        assert bench_gate.run([fresh, "--write-baseline", target]) == 0
+        assert bench_gate.run([fresh, "--baseline", target]) == 0
+
+    def test_committed_stub_is_valid_for_the_gate(self, tmp_path):
+        # the repository-root baseline must parse and behave as pending
+        import pathlib
+
+        root = pathlib.Path(__file__).resolve().parents[2]
+        committed = root / "BENCH_forward.json"
+        doc = json.loads(committed.read_text())
+        assert doc["bench"] == "forward"
+        fresh = write(tmp_path, "fresh.json", artifact())
+        assert bench_gate.run([fresh, "--baseline", str(committed)]) == 0

@@ -1,0 +1,185 @@
+"""CI bench-regression gate over `BENCH_forward.json`.
+
+Compares a fresh `ecmac bench --forward --json` artifact against the
+committed baseline at the repository root and fails (exit 1) when
+throughput regressed by more than the tolerance (default 10%).
+
+Two classes of check:
+
+* **In-run invariants** (always enforced): within one artifact, the
+  tiled-kernel path must not be slower than the in-process PR-4
+  signed-gather baseline beyond tolerance, and the prefix-cached sweep
+  must not be slower than the full-pass engine.  These are
+  machine-matched (both sides measured in the same process seconds
+  apart), so they are meaningful even on noisy shared CI runners.
+* **Baseline comparison** (when the committed baseline holds real
+  measurements): per-topology *relative* columns — `kernel_speedup`,
+  `batch_speedup`, `sweep_speedup` — are compared fresh-vs-baseline.
+  Ratios of two same-machine measurements transfer across machines;
+  absolute img/s numbers do not, so they are only compared under
+  `--absolute` (off in CI).
+
+The committed baseline may be a pending stub (`"pending_measurement":
+true`) on machines that cannot run the bench; the gate then skips the
+baseline comparison, still enforces the in-run invariants, and prints
+the refresh command.  Refresh with::
+
+    cd rust && cargo run --release -- bench --forward --json fresh.json
+    python3 ../python/tools/bench_gate.py fresh.json --write-baseline ../BENCH_forward.json
+
+Override: maintainers can skip the gate on a PR by adding the
+``bench-override`` label (the CI step is conditioned on it); use it for
+changes that intentionally trade forward throughput for something else,
+and refresh the baseline in the same PR.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+# Relative (machine-transferable) columns compared against the baseline.
+RATIO_COLUMNS = ("kernel_speedup", "batch_speedup", "sweep_speedup")
+# Absolute columns, compared only under --absolute.
+ABSOLUTE_COLUMNS = ("batch_per_sec", "batch_signed_per_sec", "per_image_per_sec")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_by_topology(doc):
+    return {r["topology"]: r for r in doc.get("rows", [])}
+
+
+def in_run_invariants(fresh, tolerance):
+    """Same-process before/after invariants; returns a list of failures."""
+    failures = []
+    for topo, row in rows_by_topology(fresh).items():
+        kernel = row.get("kernel_speedup")
+        if kernel is not None and kernel < 1.0 - tolerance:
+            failures.append(
+                f"{topo}: tiled kernels are {kernel:.2f}x the PR-4 signed-gather "
+                f"path (floor {1.0 - tolerance:.2f}x) — the rewrite regressed"
+            )
+        sweep = row.get("sweep_speedup")
+        if sweep is not None and sweep < 1.0 - tolerance:
+            failures.append(
+                f"{topo}: prefix-cached sweep is {sweep:.2f}x the full-pass "
+                f"engine (floor {1.0 - tolerance:.2f}x)"
+            )
+    return failures
+
+
+def baseline_comparison(fresh, baseline, tolerance, absolute):
+    """Fresh-vs-committed comparison; returns (failures, notes)."""
+    failures, notes = [], []
+    base_rows = rows_by_topology(baseline)
+    fresh_rows = rows_by_topology(fresh)
+    # shrinking coverage must not pass silently: a baseline topology
+    # with no fresh measurement could hide an arbitrary regression
+    for topo in base_rows:
+        if topo not in fresh_rows:
+            failures.append(
+                f"{topo}: in the baseline but missing from the fresh artifact "
+                f"— bench coverage shrank (refresh the baseline if intentional)"
+            )
+    columns = RATIO_COLUMNS + (ABSOLUTE_COLUMNS if absolute else ())
+    for topo, row in fresh_rows.items():
+        base = base_rows.get(topo)
+        if base is None:
+            notes.append(f"{topo}: not in the baseline — skipped")
+            continue
+        for col in columns:
+            b, f = base.get(col), row.get(col)
+            if b is None or f is None or b <= 0:
+                continue
+            drop = 1.0 - f / b
+            if drop > tolerance:
+                failures.append(
+                    f"{topo}.{col}: {f:.2f} vs baseline {b:.2f} "
+                    f"({drop * 100.0:.1f}% drop > {tolerance * 100.0:.0f}%)"
+                )
+            else:
+                notes.append(f"{topo}.{col}: {f:.2f} vs baseline {b:.2f} ok")
+    return failures, notes
+
+
+def run(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="fresh BENCH_forward.json from this run")
+    ap.add_argument(
+        "--baseline",
+        default=None,
+        help="committed baseline (skipped when absent or pending)",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.10,
+        help="allowed fractional throughput drop (default 0.10)",
+    )
+    ap.add_argument(
+        "--absolute",
+        action="store_true",
+        help="also compare absolute img/s columns (same-machine baselines only)",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        metavar="PATH",
+        help="copy the fresh artifact over the baseline and exit",
+    )
+    args = ap.parse_args(argv)
+
+    fresh = load(args.fresh)
+    if fresh.get("bench") != "forward":
+        print(f"error: {args.fresh} is not a forward bench artifact")
+        return 2
+
+    if args.write_baseline:
+        shutil.copyfile(args.fresh, args.write_baseline)
+        print(f"baseline refreshed: {args.write_baseline}")
+        return 0
+
+    failures = in_run_invariants(fresh, args.tolerance)
+
+    if args.baseline:
+        try:
+            baseline = load(args.baseline)
+        except FileNotFoundError:
+            print(f"note: no baseline at {args.baseline}; in-run invariants only")
+            baseline = None
+        if baseline is not None and baseline.get("pending_measurement"):
+            print(
+                "note: committed baseline is a pending stub — refresh it with\n"
+                "  cd rust && cargo run --release -- bench --forward --json fresh.json\n"
+                "  python3 ../python/tools/bench_gate.py fresh.json "
+                "--write-baseline ../BENCH_forward.json"
+            )
+        elif baseline is not None:
+            more, notes = baseline_comparison(
+                fresh, baseline, args.tolerance, args.absolute
+            )
+            failures.extend(more)
+            for n in notes:
+                print(n)
+
+    if failures:
+        print("\nbench-regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        print(
+            "\noverride: add the 'bench-override' label to the PR to skip this "
+            "gate (and refresh the committed BENCH_forward.json baseline in the "
+            "same PR if the trade-off is intentional)."
+        )
+        return 1
+    print("bench-regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(run())

@@ -199,15 +199,18 @@ fn bench_datapath(b: &mut Bencher) {
     });
 }
 
-/// Signed-table GEMM + scratch arena vs the pre-signed-table reference
-/// batched path, and the prefix-cached sweep engine vs the full-pass
-/// one.  Registration is shared with `ecmac bench --forward`, so the CI
-/// `BENCH_forward.json` artifact and this suite measure the same thing.
+/// Tiled-kernel GEMM (runtime-dispatched SIMD + scalar tiles) vs the
+/// kept-verbatim PR-3/PR-4 reference paths, the per-kernel
+/// micro-benches, the multi-core row-partitioned batch, and the
+/// prefix-cached sweep engine vs the full-pass one.  Registration is
+/// shared with `ecmac bench --forward`, so the CI `BENCH_forward.json`
+/// artifact and this suite measure the same thing.
 fn bench_forward(b: &mut Bencher) {
     let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
     for spec in ["62,30,10", "62,20,20,10"] {
         let topo = ecmac::weights::Topology::parse(spec).unwrap();
         ecmac::testkit::bench_forward_suite(b, &topo, 64, &sched);
+        ecmac::testkit::bench_forward_par(b, &topo, 512, &sched);
     }
     // the sweep-engine win grows with depth: bench the 3-layer stack
     let deep = ecmac::weights::Topology::parse("62,20,20,10").unwrap();

@@ -374,8 +374,16 @@ impl MulRow<'_> {
 /// they are built lazily per config by [`MulTables::signed`]).  The
 /// row type is `[i16; 256]` so indexing with a `u8` operand needs no
 /// bounds check.
+///
+/// The storage carries one trailing all-zero *padding row*: the AVX2
+/// tile kernel ([`crate::datapath::gemm`]) gathers 32-bit lanes at
+/// `&row[w]` and sign-extends the low 16 bits, so a gather at the last
+/// index of the last real row reads 2 bytes past that row's end —
+/// [`SignedMulTable::row_ptr`] guarantees those bytes stay inside the
+/// allocation.
 pub struct SignedMulTable {
     pub cfg: Config,
+    /// 256 real rows + 1 zero padding row (see the type-level docs).
     rows: Vec<[i16; 256]>,
 }
 
@@ -383,8 +391,8 @@ impl SignedMulTable {
     /// Build from the configuration's magnitude table (the 64Ki entries
     /// are four sign-quadrant images of the 128x128 magnitude table).
     pub fn build(mag: &MulTable) -> SignedMulTable {
-        let mut rows = vec![[0i16; 256]; 256];
-        for (x, row) in rows.iter_mut().enumerate() {
+        let mut rows = vec![[0i16; 256]; 257];
+        for (x, row) in rows.iter_mut().take(256).enumerate() {
             for (w, out) in row.iter_mut().enumerate() {
                 let m = mag.mul7(x as u32 & 0x7F, w as u32 & 0x7F) as i32;
                 // max |product| is 127*127 = 16129, well inside i16
@@ -399,6 +407,18 @@ impl SignedMulTable {
     #[inline(always)]
     pub fn row(&self, x: u8) -> &[i16; 256] {
         &self.rows[x as usize]
+    }
+
+    /// Raw pointer to the product row of `x`, derived from the whole
+    /// table allocation, with a guarantee the SIMD kernels rely on:
+    /// at least 2 readable bytes follow every row's end (the next row,
+    /// or the trailing zero padding row after row 255), so a 32-bit
+    /// gather at any in-row `i16` stays inside the allocation.
+    #[inline(always)]
+    pub fn row_ptr(&self, x: u8) -> *const i16 {
+        debug_assert_eq!(self.rows.len(), 257, "padding row missing");
+        // in-bounds: x * 256 < 257 * 256 elements
+        unsafe { (self.rows.as_ptr() as *const i16).add(x as usize * 256) }
     }
 
     /// Signed multiply of two raw sign-magnitude bytes.
@@ -448,6 +468,29 @@ impl MulTables {
     pub fn built(&self) -> usize {
         self.mag.iter().filter(|c| c.get().is_some()).count()
     }
+
+    /// Materialize the signed (and, transitively, magnitude) tables of
+    /// every configuration `sched` runs.  Lazy `OnceLock` init is the
+    /// right default for CLI one-shots, but it puts the table build
+    /// (~ms per configuration) on the first request that needs it —
+    /// `serve` startup and every timed bench region call this first so
+    /// no request or measured iteration pays it.
+    pub fn prewarm(&self, sched: &ConfigSchedule) {
+        match sched {
+            ConfigSchedule::Uniform(c) => {
+                self.signed(*c);
+            }
+            ConfigSchedule::PerLayer(v) => {
+                let mut seen = [false; N_CONFIGS];
+                for &c in v {
+                    if !std::mem::replace(&mut seen[c.index()], true) {
+                        self.signed(c);
+                    }
+                }
+            }
+        }
+    }
+
 }
 
 #[cfg(test)]
@@ -699,6 +742,39 @@ mod tests {
                 assert_eq!(st.mul8_sm(w, 0x80), 0, "{cfg}");
             }
         }
+    }
+
+    #[test]
+    fn signed_table_row_ptr_matches_row_and_padding_is_zero() {
+        let st = SignedMulTable::build(&MulTable::build(Config::new(11).unwrap()));
+        for x in [0u8, 1, 0x7F, 0x80, 0xFE, 0xFF] {
+            let row = st.row(x);
+            let p = st.row_ptr(x);
+            for w in 0..256usize {
+                assert_eq!(unsafe { *p.add(w) }, row[w], "x={x:#04x} w={w}");
+            }
+            // the 2 bytes past the row's end are inside the allocation:
+            // row 255 is followed by the all-zero padding row
+            if x == 0xFF {
+                assert_eq!(unsafe { *p.add(256) }, 0, "padding row must be zero");
+            }
+        }
+    }
+
+    #[test]
+    fn prewarm_builds_exactly_the_schedule_configs() {
+        let tabs = MulTables::build();
+        assert_eq!(tabs.built(), 0);
+        let c9 = Config::new(9).unwrap();
+        let c17 = Config::new(17).unwrap();
+        // duplicates collapse; distinct configs each materialize once
+        tabs.prewarm(&ConfigSchedule::per_layer(vec![c9, c17, c9]));
+        assert_eq!(tabs.built(), 2);
+        tabs.prewarm(&ConfigSchedule::uniform(Config::ACCURATE));
+        assert_eq!(tabs.built(), 3);
+        // idempotent
+        tabs.prewarm(&ConfigSchedule::uniform(c9));
+        assert_eq!(tabs.built(), 3);
     }
 
     #[test]

@@ -267,6 +267,14 @@ impl Governor {
         self.schedule_frontier.as_ref()
     }
 
+    /// Whether the policy can change schedules at runtime (the
+    /// budget/floor/energy feedback policies), as opposed to a pinned
+    /// configuration — i.e. whether serving should prewarm every
+    /// schedule the governor might select, not just the current one.
+    pub fn is_dynamic(&self) -> bool {
+        !matches!(self.policy, Policy::Fixed(_) | Policy::FixedSchedule(_))
+    }
+
     /// The schedule the next batch runs under.
     pub fn current(&self) -> ConfigSchedule {
         self.current.clone()

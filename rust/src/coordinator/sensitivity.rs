@@ -141,6 +141,12 @@ impl SensitivityModel {
     /// [`SensitivityModel::measure`] with a per-job progress callback
     /// (invoked from the sweep's worker threads as each `(layer,
     /// config)` job completes).
+    ///
+    /// The `32·L` suffix jobs scatter across the shared
+    /// [`crate::util::threadpool::ThreadPool`] — the same workers the
+    /// batched forward pass row-partitions onto — each borrowing the
+    /// one read-only [`crate::datapath::ActivationCheckpoint`] and
+    /// running its resume pass on that worker's scratch arena.
     pub fn measure_with_progress<X: AsRef<[u8]> + Sync>(
         net: &Network,
         features: &[X],
@@ -164,22 +170,32 @@ impl SensitivityModel {
             .collect();
         let total = jobs.len();
         let done = std::sync::atomic::AtomicUsize::new(0);
-        let accs = crate::util::threadpool::par_map(&jobs, |_, &(l, cfg)| {
-            let t0 = std::time::Instant::now();
-            let mut cfgs = vec![Config::ACCURATE; n_layers];
-            cfgs[l] = cfg;
-            let acc = net.accuracy_resume(&ckpt, l, &ConfigSchedule::per_layer(cfgs), labels);
-            if let Some(report) = progress {
-                report(SweepProgress {
-                    done: done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1,
-                    total,
-                    layer: l,
-                    cfg,
-                    job_ms: t0.elapsed().as_secs_f64() * 1e3,
-                });
-            }
-            acc
-        });
+        let (ckpt_ref, done_ref) = (&ckpt, &done);
+        let accs = crate::util::threadpool::shared_pool().scatter_scoped(
+            jobs.iter()
+                .map(|&(l, cfg)| {
+                    move || {
+                        let t0 = std::time::Instant::now();
+                        let mut cfgs = vec![Config::ACCURATE; n_layers];
+                        cfgs[l] = cfg;
+                        let sched = ConfigSchedule::per_layer(cfgs);
+                        let acc = net.accuracy_resume(ckpt_ref, l, &sched, labels);
+                        if let Some(report) = progress {
+                            report(SweepProgress {
+                                done: done_ref
+                                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+                                    + 1,
+                                total,
+                                layer: l,
+                                cfg,
+                                job_ms: t0.elapsed().as_secs_f64() * 1e3,
+                            });
+                        }
+                        acc
+                    }
+                })
+                .collect(),
+        );
         let mut drop = vec![vec![0.0; N_CONFIGS]; n_layers];
         for (&(l, cfg), acc) in jobs.iter().zip(accs) {
             drop[l][cfg.index()] = baseline - acc;

@@ -43,6 +43,13 @@ pub trait Backend: Send + Sync {
     /// Topology of the model this backend serves (drives the per-layer
     /// energy accounting).
     fn topology(&self) -> &Topology;
+
+    /// Warm whatever lazily-initialized state serving `sched` needs
+    /// (the native model's product tables build on first use, ~ms per
+    /// configuration), so the first request never pays it.  Called by
+    /// [`Coordinator::start`] with the governor's initial schedule.
+    /// Default: no-op.
+    fn prewarm(&self, _sched: &ConfigSchedule) {}
 }
 
 /// Functional bit-exact backend (table-driven rust model, batched
@@ -68,6 +75,10 @@ impl Backend for NativeBackend {
 
     fn topology(&self) -> &Topology {
         self.network.topology()
+    }
+
+    fn prewarm(&self, sched: &ConfigSchedule) {
+        self.network.tables.prewarm(sched);
     }
 }
 
@@ -176,6 +187,15 @@ impl Backend for PjrtBackend {
     fn topology(&self) -> &Topology {
         &self.weights.topology
     }
+
+    fn prewarm(&self, sched: &ConfigSchedule) {
+        // only per-layer schedules touch the lazily-built native twin;
+        // uniform serving runs on the AOT executable, which has no
+        // lazy table state
+        if sched.as_uniform().is_none() {
+            self.fallback_net().tables.prewarm(sched);
+        }
+    }
 }
 
 /// Coordinator tuning knobs.
@@ -242,6 +262,26 @@ impl Coordinator {
             backend.name(),
             backend.topology().inputs(),
         );
+        // first-request latency: build the lazy state the initial
+        // schedule needs now, not on the first batch — and for dynamic
+        // policies, every schedule the governor could switch to, so a
+        // mid-serve schedule change never builds tables inside the
+        // request path
+        backend.prewarm(&governor.current());
+        if governor.is_dynamic() {
+            match governor.schedule_frontier() {
+                Some(f) => {
+                    for p in f.points() {
+                        backend.prewarm(&p.sched);
+                    }
+                }
+                None => {
+                    for p in governor.frontier() {
+                        backend.prewarm(&ConfigSchedule::Uniform(p.cfg));
+                    }
+                }
+            }
+        }
         let queue: Channel<ClassifyRequest> = Channel::new(cfg.queue_capacity);
         let batch_queue: Channel<Batch> = Channel::new(cfg.workers * 2);
         let metrics = Arc::new(Mutex::new(Metrics::default()));
@@ -673,6 +713,24 @@ mod tests {
     }
 
     #[test]
+    fn startup_prewarms_the_initial_schedule_tables() {
+        let backend = test_backend();
+        assert_eq!(backend.network.tables.built(), 0, "tables must start lazy");
+        let sched =
+            ConfigSchedule::per_layer(vec![Config::new(3).unwrap(), Config::new(21).unwrap()]);
+        let (gov, pm) = test_governor(Policy::FixedSchedule(sched));
+        let coord = Coordinator::start(
+            CoordinatorConfig::default(),
+            backend.clone() as Arc<dyn Backend>,
+            gov,
+            pm,
+        );
+        // both configs were built before any request arrived
+        assert_eq!(backend.network.tables.built(), 2);
+        drop(coord.shutdown());
+    }
+
+    #[test]
     fn batches_group_under_load() {
         let (coord, _) = start(
             Policy::Fixed(Config::ACCURATE),
@@ -792,7 +850,7 @@ mod tests {
         let inner = test_backend();
         let backend = Arc::new(TruncatingBackend {
             inner: NativeBackend {
-                network: crate::datapath::Network::new(inner.network.weights.clone()),
+                network: crate::datapath::Network::new(inner.network.weights().clone()),
             },
         });
         let (gov, pm) = test_governor(Policy::Fixed(Config::ACCURATE));

@@ -6,16 +6,18 @@
 //!
 //! * [`Network::forward`] / [`Network::forward_sched`] — the fast
 //!   functional path (table-driven MACs, no cycle bookkeeping), a loop
-//!   over weight layers.  Used by the coordinator's software fallback
-//!   and the accuracy sweeps.
+//!   over weight layers through the tiled [`gemm`] kernels.  Used by
+//!   the coordinator's software fallback and the accuracy sweeps.
 //! * [`Network::forward_batch`] — the batched layer-major variant: the
-//!   whole batch advances one layer at a time, so each weight row and
-//!   the layer's *signed* product table stay hot across the batch, and
-//!   every buffer lives in a reusable [`BatchScratch`] arena.
-//!   Bit-identical to `forward`.  [`Network::forward_batch_resume`]
-//!   restarts the same path from an [`ActivationCheckpoint`] boundary,
-//!   which is what makes the per-layer sensitivity sweep pay for each
-//!   layer suffix only once (DESIGN.md §Perf).
+//!   whole batch advances one layer at a time, each layer one
+//!   weight-stationary [`gemm`] tile run (AVX2 gathers under runtime
+//!   dispatch, scalar tiles otherwise), every buffer in a reusable
+//!   [`BatchScratch`] arena, and large batches row-partitioned across
+//!   the shared thread pool.  Bit-identical to `forward`.
+//!   [`Network::forward_batch_resume`] restarts the same path from an
+//!   [`ActivationCheckpoint`] boundary, which is what makes the
+//!   per-layer sensitivity sweep pay for each layer suffix only once
+//!   (DESIGN.md §Perf).
 //! * [`DatapathSim`] — the cycle-accurate path: a [`Controller`] walks
 //!   the generalized FSM (ceil(width/10) passes per layer over the 10
 //!   physical [`Neuron`]s), activations land in the per-layer 8-bit
@@ -26,9 +28,11 @@
 //!   62-30-10 network).
 
 pub mod controller;
+pub mod gemm;
 pub mod neuron;
 
 use crate::amul::{sm, Config, ConfigSchedule, MulTable, MulTables};
+use crate::util::threadpool::{self, ThreadPool};
 use crate::weights::{Activation, QuantWeights, Topology, N_PHYSICAL};
 use controller::{Controller, State};
 use neuron::{argmax, Neuron};
@@ -37,6 +41,12 @@ use std::cell::RefCell;
 /// Images per internal batch chunk: keeps the activation/accumulator
 /// working set inside L2 for large evaluation sets.
 const BATCH_CHUNK: usize = 128;
+
+/// Images at or above which [`Network::forward_batch`] row-partitions
+/// the batch across the shared [`ThreadPool`]: below this, the scatter
+/// overhead outweighs the multi-core win (serving batches are far
+/// smaller and stay on the caller's thread).
+const PAR_BATCH: usize = 128;
 
 /// Result of classifying one image.
 #[derive(Debug, Clone, PartialEq)]
@@ -200,21 +210,42 @@ impl ActivationCheckpoint {
 
 /// The trained network bound to the multiplier tables.
 pub struct Network {
-    pub weights: QuantWeights,
+    /// Quantized parameters — private so they cannot drift from the
+    /// packed tile panels derived from them at construction (readers
+    /// go through [`Network::weights`]; to change weights, build a new
+    /// `Network`).
+    weights: QuantWeights,
     pub tables: MulTables,
+    /// Weight-major packed tile panels, one per layer — the
+    /// [`gemm`] kernels' layout, built once at construction.
+    packed: Vec<gemm::PackedLayer>,
 }
 
 impl Network {
     pub fn new(weights: QuantWeights) -> Network {
+        let packed = weights.layers.iter().map(gemm::PackedLayer::pack).collect();
         Network {
             weights,
             tables: MulTables::build(),
+            packed,
         }
+    }
+
+    /// The quantized parameters (read-only: the packed tile panels are
+    /// derived from them once at construction).
+    pub fn weights(&self) -> &QuantWeights {
+        &self.weights
     }
 
     /// The network's topology.
     pub fn topology(&self) -> &Topology {
         &self.weights.topology
+    }
+
+    /// Packed tile panel of weight layer `l` (kernel tests and
+    /// micro-benches drive the [`gemm`] entry points with this).
+    pub fn packed_layer(&self, l: usize) -> &gemm::PackedLayer {
+        &self.packed[l]
     }
 
     /// Functional forward pass with a uniform configuration (bit-exact,
@@ -225,13 +256,12 @@ impl Network {
 
     /// Functional forward pass under a per-layer schedule.
     ///
-    /// Hot-path layout (see DESIGN.md §Perf): within each layer the
-    /// input index is the outer loop so weight-matrix reads are
-    /// contiguous (row-major `w[i * n_out + j]`), and the inner loop is
-    /// a pure gather-accumulate over the left operand's *signed* table
-    /// row ([`crate::amul::SignedMulTable::row`]) — no per-element sign
-    /// decode or fixup.  Zero-magnitude activations (whose product rows
-    /// are identically zero) skip the row entirely.
+    /// Hot-path layout (see DESIGN.md §Perf): each layer runs through
+    /// the tiled, weight-stationary [`gemm`] kernels — SIMD gathers
+    /// over the layer's *signed* product table where the CPU supports
+    /// them, the tuned scalar tile kernel otherwise, runtime-dispatched
+    /// and bit-exact either way.  Zero-magnitude activations (whose
+    /// product rows are identically zero) skip their row entirely.
     pub fn forward_sched(&self, x: &[u8], sched: &ConfigSchedule) -> ImageResult {
         let topo = &self.weights.topology;
         assert_eq!(x.len(), topo.inputs(), "input width mismatch for topology {topo}");
@@ -241,15 +271,7 @@ impl Network {
         for (l, lw) in self.weights.layers.iter().enumerate() {
             let t = self.tables.signed(sched.layer(l));
             let mut acc = vec![0i32; lw.n_out];
-            for (i, &xi) in cur.iter().enumerate() {
-                if xi & 0x7F == 0 {
-                    continue; // zero magnitude: the whole product row is 0
-                }
-                let row = t.row(xi);
-                for (a, &wv) in acc.iter_mut().zip(lw.w_row(i)) {
-                    *a += row[wv as usize] as i32;
-                }
-            }
+            gemm::layer_image(&self.packed[l], t, &cur, &mut acc);
             for (a, &bv) in acc.iter_mut().zip(&lw.b) {
                 *a += sm::decode(bv) << 7;
             }
@@ -269,24 +291,44 @@ impl Network {
     }
 
     /// Batched layer-major forward pass: every image in `xs` advances
-    /// one layer at a time.  The weight row of each input index is
-    /// loaded once per layer and reused across the whole batch, the
-    /// layer's signed product table stays hot, and every buffer lives in
-    /// a per-thread [`BatchScratch`] arena (no per-call allocation
-    /// beyond the returned results).  Bit-identical to
-    /// [`Network::forward_sched`] image by image.
-    pub fn forward_batch<X: AsRef<[u8]>>(
+    /// one layer at a time.  Each layer is one tiled weight-stationary
+    /// [`gemm`] run (the packed weight panel stays hot across the whole
+    /// batch), and every buffer lives in a per-thread [`BatchScratch`]
+    /// arena (no per-call allocation beyond the returned results).
+    /// Bit-identical to [`Network::forward_sched`] image by image.
+    ///
+    /// Batches of [`PAR_BATCH`] images or more are row-partitioned
+    /// across the shared [`ThreadPool`] — one call saturates all cores
+    /// (each worker runs its rows on its own arena; results fold back
+    /// in submission order, so the output is identical to the serial
+    /// path).  Calls already running on a pool worker stay serial on
+    /// that worker, as do calls through
+    /// [`Network::forward_batch_with`] (an explicit arena pins the
+    /// work to the calling thread — that is what the single-thread
+    /// benches measure).
+    pub fn forward_batch<X: AsRef<[u8]> + Sync>(
         &self,
         xs: &[X],
         sched: &ConfigSchedule,
     ) -> Vec<ImageResult> {
+        if xs.len() >= PAR_BATCH && !ThreadPool::on_worker_thread() {
+            let pool = threadpool::shared_pool();
+            let chunk = xs.len().div_ceil(pool.workers()).max(PAR_BATCH / 4);
+            let jobs: Vec<_> = xs
+                .chunks(chunk)
+                .map(|rows| {
+                    move || with_thread_scratch(|s| self.forward_batch_with(rows, sched, s))
+                })
+                .collect();
+            return pool.scatter_scoped(jobs).into_iter().flatten().collect();
+        }
         with_thread_scratch(|s| self.forward_batch_with(xs, sched, s))
     }
 
     /// [`Network::forward_batch`] with an explicit scratch arena, for
     /// callers that manage buffer reuse themselves (benches, tests, the
     /// sweep engine).  The arena may be reused across differing batch
-    /// sizes and networks.
+    /// sizes and networks.  Always executes on the calling thread.
     pub fn forward_batch_with<X: AsRef<[u8]>>(
         &self,
         xs: &[X],
@@ -344,33 +386,20 @@ impl Network {
     /// outputs in `s.cur` (via swap with `s.next`); the final layer
     /// fills `s.logits`.
     ///
-    /// This is the GEMM hot loop: input index outer (contiguous weight
-    /// rows), image middle, and a pure gather-accumulate inner loop over
-    /// the signed table row (`[i16; 256]`, so the `u8` weight index
-    /// needs no bounds check).  Zero-magnitude activations skip their
-    /// all-zero product row.
+    /// The GEMM itself is the tiled [`gemm`] kernel run (SIMD gathers
+    /// over the signed table under runtime dispatch, scalar tiles
+    /// otherwise); this wrapper owns the arena staging and the
+    /// bias/activation epilogue.
     fn run_layer(&self, l: usize, b: usize, cfg: Config, s: &mut BatchScratch) {
         let topo = &self.weights.topology;
         let lw = &self.weights.layers[l];
         let t = self.tables.signed(cfg);
         let (n_in, n_out) = (lw.n_in, lw.n_out);
         debug_assert_eq!(s.cur.len(), b * n_in);
-        s.acc.clear();
+        // size-only resize: the kernel writes every accumulator element
+        // (poison-tested), so no zero-fill of the reused arena is needed
         s.acc.resize(b * n_out, 0);
-        for i in 0..n_in {
-            let wrow = lw.w_row(i);
-            for img in 0..b {
-                let xi = s.cur[img * n_in + i];
-                if xi & 0x7F == 0 {
-                    continue; // zero magnitude: the whole product row is 0
-                }
-                let row = t.row(xi);
-                let dst = &mut s.acc[img * n_out..(img + 1) * n_out];
-                for (a, &wv) in dst.iter_mut().zip(wrow) {
-                    *a += row[wv as usize] as i32;
-                }
-            }
-        }
+        gemm::layer_batch(&self.packed[l], t, &s.cur, b, &mut s.acc);
         match topo.activation(l) {
             Activation::Identity => {
                 s.logits.clear();
@@ -1101,6 +1130,24 @@ mod tests {
             }
         }
         assert!(net.forward_batch(&[] as &[[u8; N_FEATURES]], &ConfigSchedule::uniform(Config::ACCURATE)).is_empty());
+    }
+
+    #[test]
+    fn parallel_forward_batch_matches_serial_bit_for_bit() {
+        // above PAR_BATCH the batch is row-partitioned across the
+        // shared pool; order and bits must match the serial arena path
+        let topo = Topology::parse("8,23,5").unwrap();
+        let net = Network::new(QuantWeights::random(&topo, 0xFA11));
+        let mut rng = Pcg32::new(99);
+        let xs = random_inputs_for(&topo, &mut rng, PAR_BATCH * 2 + 17);
+        let sched = random_schedule(&topo, &mut rng);
+        let par = net.forward_batch(&xs, &sched);
+        let mut scratch = BatchScratch::new();
+        let serial = net.forward_batch_with(&xs, &sched, &mut scratch);
+        assert_eq!(par, serial);
+        for (x, r) in xs.iter().zip(&par).step_by(37) {
+            assert_eq!(*r, net.forward_sched(x, &sched));
+        }
     }
 
     #[test]

@@ -83,7 +83,7 @@ fn print_global_usage() {
          \x20 frontier   per-layer schedule frontier (Pareto energy vs accuracy)\n\
          \x20 topo       arbitrary-topology demo with a per-layer schedule\n\
          \x20 bench      in-process benchmarks (--cycle-batch: per-image vs interleaved;\n\
-         \x20            --forward: signed-table GEMM + prefix-cached sweep before/after)\n\
+         \x20            --forward: tiled SIMD GEMM + prefix-cached sweep before/after)\n\
          \x20 ablation   heterogeneous per-neuron configuration study\n\
          \x20 verilog    export the EC multiplier as synthesizable Verilog\n"
     );
@@ -1015,7 +1015,9 @@ fn cmd_topo(argv: &[String]) -> Result<()> {
     println!("functional / batched / cycle-accurate parity on {check_n} images: {parity}");
     anyhow::ensure!(parity, "execution paths diverged");
 
-    // per-image vs batched layer-major throughput
+    // per-image vs batched layer-major throughput (tables prewarmed so
+    // the timed region never pays lazy init)
+    net.tables.prewarm(&sched);
     let t0 = std::time::Instant::now();
     for x in &xs {
         std::hint::black_box(net.forward_sched(x, &sched));
@@ -1041,7 +1043,7 @@ fn cmd_topo(argv: &[String]) -> Result<()> {
 /// In-process benchmark driver.  `--cycle-batch` compares the per-image
 /// cycle-accurate FSM against the interleaved batch schedule across a
 /// set of topologies and writes `BENCH_cycle_batch.json`; `--forward`
-/// compares the signed-table GEMM + scratch-arena functional path (and
+/// compares the tiled-kernel GEMM functional path (and
 /// the prefix-cached sweep engine) against the pre-PR reference paths
 /// and writes `BENCH_forward.json`.  Both verify bit-exactness before
 /// timing; CI records the artifacts for the perf trajectory.
@@ -1055,7 +1057,7 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
         },
         OptSpec {
             name: "forward",
-            help: "signed-table batch GEMM + prefix-cached sweep vs the reference paths",
+            help: "tiled SIMD GEMM + prefix-cached sweep vs the reference paths",
             takes_value: false,
             default: None,
         },
@@ -1077,6 +1079,20 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
             help: "evaluation-set size for the --forward sweep comparison",
             takes_value: true,
             default: Some("64"),
+        },
+        OptSpec {
+            name: "kernel",
+            help: "pin the --forward GEMM kernel: auto | scalar | avx2 \
+                   (default: runtime dispatch)",
+            takes_value: true,
+            default: Some("auto"),
+        },
+        OptSpec {
+            name: "par-batch",
+            help: "images for the --forward multi-core row-partitioned bench \
+                   (0 disables it)",
+            takes_value: true,
+            default: Some("512"),
         },
         OptSpec {
             name: "json",
@@ -1192,15 +1208,18 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// `ecmac bench --forward`: the signed-table batched GEMM and the
-/// prefix-cached sweep engine against the pre-PR reference paths
-/// (verbatim copies in `testkit`), per topology.  Writes the
-/// `BENCH_forward.json` before/after artifact.
+/// `ecmac bench --forward`: the tiled-kernel batched GEMM and the
+/// prefix-cached sweep engine against the kept-verbatim PR-3 and PR-4
+/// reference paths (`testkit`), per topology, plus per-kernel
+/// micro-benches and the multi-core row-partitioned batch.  Writes the
+/// `BENCH_forward.json` before/after artifact the CI bench-regression
+/// gate compares against the committed baseline.
 fn bench_forward(
     args: &ecmac::util::cli::Args,
     bench_cfg: ecmac::testkit::bench::BenchConfig,
     batch: usize,
 ) -> Result<()> {
+    use ecmac::datapath::gemm;
     use ecmac::testkit::bench::Bencher;
     let specs: Vec<&str> = args
         .get("topologies")
@@ -1210,15 +1229,27 @@ fn bench_forward(
         .collect();
     let sweep_images: usize = args.get_or("sweep-images", 64)?;
     anyhow::ensure!(sweep_images >= 1, "--sweep-images must be at least 1");
+    let par_batch: usize = args.get_or("par-batch", 512)?;
+    gemm::set_kernel_override(gemm::Kernel::parse(args.get("kernel").unwrap_or("auto"))?)?;
+    println!(
+        "gemm kernel: {} (detected: {}, {} pool workers)\n",
+        gemm::active_kernel(),
+        gemm::detected_kernel(),
+        ecmac::util::threadpool::shared_pool().workers(),
+    );
     let mut b = Bencher::new(bench_cfg);
     let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
     let mut rows: Vec<ecmac::util::json::Json> = Vec::new();
     let mut table_rows: Vec<report::ForwardBenchRow> = Vec::new();
     for spec_s in &specs {
         let topo = Topology::parse(spec_s)?;
-        // registers the timed trios and asserts bit-exactness first:
-        // the comparison is meaningless otherwise
+        // registers the timed suites and asserts bit-exactness first
+        // (every path and both kernels): the comparison is meaningless
+        // otherwise
         ecmac::testkit::bench_forward_suite(&mut b, &topo, batch, &sched);
+        if par_batch > 0 {
+            ecmac::testkit::bench_forward_par(&mut b, &topo, par_batch, &sched);
+        }
         ecmac::testkit::bench_sweep_pair(&mut b, &topo, sweep_images);
         let thrpt = |name: &str| {
             b.result(name)
@@ -1231,7 +1262,12 @@ fn bench_forward(
             batch: batch as u64,
             per_image_per_sec: thrpt(&format!("forward/per_image_{topo}")),
             batch_reference_per_sec: thrpt(&format!("forward/batch_reference_{topo}")),
+            batch_signed_per_sec: thrpt(&format!("forward/batch_signed_{topo}")),
             batch_per_sec: thrpt(&format!("forward/batch_{topo}")),
+            tile_scalar_per_sec: thrpt(&format!("forward/tile_scalar_{topo}")),
+            tile_avx2_per_sec: thrpt(&format!("forward/tile_avx2_{topo}")),
+            batch_par_per_sec: thrpt(&format!("forward/batch_par{par_batch}_{topo}")),
+            par_batch: par_batch as u64,
             sweep_jobs: 32 * topo.n_layers() as u64,
             sweep_full_ms: mean_ms(&format!("sweep/full_pass_{topo}")),
             sweep_cached_ms: mean_ms(&format!("sweep/prefix_cached_{topo}")),
@@ -1240,8 +1276,14 @@ fn bench_forward(
             "topology" => row.topology.clone(),
             "per_image_per_sec" => row.per_image_per_sec,
             "batch_reference_per_sec" => row.batch_reference_per_sec,
+            "batch_signed_per_sec" => row.batch_signed_per_sec,
             "batch_per_sec" => row.batch_per_sec,
+            "tile_scalar_per_sec" => row.tile_scalar_per_sec,
+            "tile_avx2_per_sec" => row.tile_avx2_per_sec,
+            "batch_par_per_sec" => row.batch_par_per_sec,
+            "par_batch" => row.par_batch as f64,
             "batch_speedup" => row.batch_per_sec / row.batch_reference_per_sec.max(1e-9),
+            "kernel_speedup" => row.batch_per_sec / row.batch_signed_per_sec.max(1e-9),
             "sweep_jobs" => row.sweep_jobs as f64,
             "sweep_reference_ms" => row.sweep_full_ms,
             "sweep_cached_ms" => row.sweep_cached_ms,
@@ -1268,10 +1310,12 @@ fn bench_forward(
     println!("{}", report::forward_bench_table(&table_rows));
     if let Some(path) = args.get("json") {
         let doc = ecmac::json_obj! {
-            "schema_version" => 1usize,
+            "schema_version" => 2usize,
             "bench" => "forward",
             "batch" => batch,
             "sweep_images" => sweep_images,
+            "kernel" => gemm::active_kernel().to_string(),
+            "detected_kernel" => gemm::detected_kernel().to_string(),
             "rows" => rows,
             "harness" => harness_rows,
         };

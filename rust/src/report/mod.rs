@@ -424,10 +424,21 @@ pub struct ForwardBenchRow {
     pub batch: u64,
     /// Per-image functional path, images/s.
     pub per_image_per_sec: f64,
-    /// Pre-PR batched path (unsigned table + per-call Vecs), images/s.
+    /// PR-3 batched path (unsigned table + per-call Vecs), images/s.
     pub batch_reference_per_sec: f64,
-    /// Signed-table + scratch-arena batched path, images/s.
+    /// PR-4 signed-gather batched path (the committed-baseline path),
+    /// images/s.
+    pub batch_signed_per_sec: f64,
+    /// Live tiled-kernel batched path (single thread), images/s.
     pub batch_per_sec: f64,
+    /// Scalar tile kernel pinned, images/s.
+    pub tile_scalar_per_sec: f64,
+    /// AVX2 tile kernel pinned, images/s (-1 when the CPU lacks AVX2).
+    pub tile_avx2_per_sec: f64,
+    /// Row-partitioned multi-core batch, images/s (-1 when not timed).
+    pub batch_par_per_sec: f64,
+    /// Images in the row-partitioned bench.
+    pub par_batch: u64,
     /// Sensitivity-sweep jobs timed (32 x weight layers).
     pub sweep_jobs: u64,
     /// Full-pass (pre-PR) sweep engine, ms per sweep.
@@ -436,16 +447,20 @@ pub struct ForwardBenchRow {
     pub sweep_cached_ms: f64,
 }
 
-/// Render the before/after throughput comparison for the signed-table
-/// GEMM and the prefix-cached sweep engine.
+/// Render the before/after throughput comparison for the tiled GEMM
+/// kernels and the prefix-cached sweep engine.  "PR3"/"PR4" are the
+/// two kept-verbatim baselines; "kernel x" is the acceptance metric
+/// (tiled single-thread vs the PR-4 signed-gather path).
 pub fn forward_bench_table(rows: &[ForwardBenchRow]) -> String {
     let mut t = TextTable::new(&[
         "topology",
         "batch",
         "per-img img/s",
-        "batch before img/s",
-        "batch after img/s",
-        "speedup",
+        "PR3 img/s",
+        "PR4 img/s",
+        "tiled img/s",
+        "kernel x",
+        "par img/s",
         "sweep before ms",
         "sweep after ms",
         "speedup",
@@ -456,11 +471,14 @@ pub fn forward_bench_table(rows: &[ForwardBenchRow]) -> String {
             r.batch.to_string(),
             format!("{:.0}", r.per_image_per_sec),
             format!("{:.0}", r.batch_reference_per_sec),
+            format!("{:.0}", r.batch_signed_per_sec),
             format!("{:.0}", r.batch_per_sec),
-            format!(
-                "{:.2}x",
-                r.batch_per_sec / r.batch_reference_per_sec.max(1e-9)
-            ),
+            format!("{:.2}x", r.batch_per_sec / r.batch_signed_per_sec.max(1e-9)),
+            if r.batch_par_per_sec > 0.0 {
+                format!("{:.0} (b{})", r.batch_par_per_sec, r.par_batch)
+            } else {
+                "-".into()
+            },
             format!("{:.2}", r.sweep_full_ms),
             format!("{:.2}", r.sweep_cached_ms),
             format!("{:.2}x", r.sweep_full_ms / r.sweep_cached_ms.max(1e-9)),

@@ -10,10 +10,14 @@
 //! * [`bench_cycle_batch_pair`] — the shared per-image-FSM vs
 //!   interleaved-batch comparison registration, so `cargo bench` and
 //!   `ecmac bench --cycle-batch` measure the same thing.
-//! * [`forward_batch_reference`] / [`bench_forward_suite`] /
-//!   [`bench_sweep_pair`] — the pre-signed-table / pre-prefix-cache
+//! * [`forward_batch_reference`] / [`forward_batch_signed_reference`]
+//!   / [`bench_forward_suite`] / [`bench_sweep_pair`] — the
+//!   pre-signed-table (PR 3), signed-gather (PR 4) and pre-prefix-cache
 //!   code paths kept verbatim as perf baselines and parity oracles for
 //!   `ecmac bench --forward` and the `forward/*`, `sweep/*` benches.
+//!   The PR-4 signed-gather baseline is what the committed
+//!   `BENCH_forward.json` at the repository root was measured on, so
+//!   the tile-kernel speedup is machine-matched in every fresh run.
 
 pub mod bench;
 pub mod prop;
@@ -111,7 +115,7 @@ pub fn forward_batch_reference<X: AsRef<[u8]>>(
     let mut hidden: Vec<Vec<u8>> =
         (0..b).map(|_| Vec::with_capacity(topo.hidden_units())).collect();
     let mut logits: Vec<Vec<i32>> = Vec::new();
-    for (l, lw) in net.weights.layers.iter().enumerate() {
+    for (l, lw) in net.weights().layers.iter().enumerate() {
         let t = net.tables.get(sched.layer(l));
         let (n_in, n_out) = (lw.n_in, lw.n_out);
         let mut acc = vec![0i32; b * n_out];
@@ -161,6 +165,93 @@ pub fn forward_batch_reference<X: AsRef<[u8]>>(
         .collect()
 }
 
+/// The PR-4 signed-table gather path, kept verbatim as the tile-kernel
+/// rewrite's perf baseline and parity oracle: fan-in index outer
+/// (contiguous weight rows), image middle, and a pure gather-accumulate
+/// inner loop over the left operand's signed product row, with the
+/// zero-magnitude skip.  This is the single-thread path the committed
+/// `BENCH_forward.json` baseline recorded; `forward/batch_signed_*`
+/// re-measures it in-process so the kernel speedup is machine-matched.
+/// (The PR-4 arena plumbing is elided — buffers are reused across the
+/// layers of one call, and the few per-call `Vec`s are noise next to
+/// the gather loop this baseline exists to time.)
+pub fn forward_batch_signed_reference<X: AsRef<[u8]>>(
+    net: &Network,
+    xs: &[X],
+    sched: &ConfigSchedule,
+) -> Vec<ImageResult> {
+    let topo = net.topology();
+    let b = xs.len();
+    if b == 0 {
+        return Vec::new();
+    }
+    let n_in0 = topo.inputs();
+    let mut cur: Vec<u8> = Vec::with_capacity(b * n_in0);
+    for x in xs {
+        let x = x.as_ref();
+        assert_eq!(x.len(), n_in0, "input width mismatch for topology {topo}");
+        cur.extend_from_slice(x);
+    }
+    let mut hidden: Vec<Vec<u8>> =
+        (0..b).map(|_| Vec::with_capacity(topo.hidden_units())).collect();
+    let mut logits: Vec<i32> = Vec::new();
+    let mut next: Vec<u8> = Vec::new();
+    for (l, lw) in net.weights().layers.iter().enumerate() {
+        let t = net.tables.signed(sched.layer(l));
+        let (n_in, n_out) = (lw.n_in, lw.n_out);
+        let mut acc = vec![0i32; b * n_out];
+        for i in 0..n_in {
+            let wrow = lw.w_row(i);
+            for img in 0..b {
+                let xi = cur[img * n_in + i];
+                if xi & 0x7F == 0 {
+                    continue; // zero magnitude: the whole product row is 0
+                }
+                let row = t.row(xi);
+                let dst = &mut acc[img * n_out..(img + 1) * n_out];
+                for (a, &wv) in dst.iter_mut().zip(wrow) {
+                    *a += row[wv as usize] as i32;
+                }
+            }
+        }
+        match topo.activation(l) {
+            Activation::Identity => {
+                logits = acc;
+                for img in 0..b {
+                    for (j, &bv) in lw.b.iter().enumerate() {
+                        logits[img * n_out + j] += sm::decode(bv) << 7;
+                    }
+                }
+            }
+            Activation::ReluSat => {
+                next.clear();
+                next.resize(b * n_out, 0);
+                for img in 0..b {
+                    for j in 0..n_out {
+                        let a = acc[img * n_out + j] + (sm::decode(lw.b[j]) << 7);
+                        next[img * n_out + j] = neuron::saturate_activation(a);
+                    }
+                    hidden[img].extend_from_slice(&next[img * n_out..(img + 1) * n_out]);
+                }
+                std::mem::swap(&mut cur, &mut next);
+            }
+        }
+    }
+    let n_out = topo.outputs();
+    hidden
+        .into_iter()
+        .enumerate()
+        .map(|(img, h)| {
+            let lg = logits[img * n_out..(img + 1) * n_out].to_vec();
+            ImageResult {
+                pred: neuron::argmax(&lg) as u8,
+                logits: lg,
+                hidden: h,
+            }
+        })
+        .collect()
+}
+
 /// Accuracy through [`forward_batch_reference`] — the pre-PR evaluation
 /// path the sweep baseline runs on.
 pub fn accuracy_sched_reference<X: AsRef<[u8]>>(
@@ -178,29 +269,51 @@ pub fn accuracy_sched_reference<X: AsRef<[u8]>>(
     correct as f64 / labels.len() as f64
 }
 
-/// Register the forward-path throughput trio for one topology —
+/// Register the forward-path throughput suite for one topology —
 /// `forward/per_image_<topo>`, `forward/batch_reference_<topo>` (the
-/// pre-PR path) and `forward/batch_<topo>` (signed tables + scratch
-/// arena) — asserting three-way bit-exactness first.  One definition
-/// serves both `cargo bench` and `ecmac bench --forward`, so the CI
-/// artifact and the bench suite can never measure different things.
+/// PR-3 unsigned-table path), `forward/batch_signed_<topo>` (the PR-4
+/// signed-gather path, i.e. the committed-baseline path) and
+/// `forward/batch_<topo>` (the live tiled-kernel path), plus
+/// per-kernel micro-benches `forward/tile_scalar_<topo>` and — when
+/// the CPU has it — `forward/tile_avx2_<topo>` — asserting full
+/// bit-exactness across every path and kernel first.  Tables are
+/// prewarmed before any timed region.  One definition serves both
+/// `cargo bench` and `ecmac bench --forward`, so the CI artifact and
+/// the bench suite can never measure different things.
 pub fn bench_forward_suite(
     b: &mut bench::Bencher,
     topo: &Topology,
     batch: usize,
     sched: &ConfigSchedule,
 ) {
+    use crate::datapath::gemm;
     let net = Network::new(QuantWeights::random(topo, 7));
+    net.tables.prewarm(sched);
     let mut rng = Pcg32::new(0xF0A4D);
     let xs: Vec<Vec<u8>> = (0..batch)
         .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
         .collect();
-    let fast = net.forward_batch(&xs, sched);
+    let mut scratch = BatchScratch::new();
+    let fast = net.forward_batch_with(&xs, sched, &mut scratch);
     let reference = forward_batch_reference(&net, &xs, sched);
-    assert_eq!(fast, reference, "signed-table batch diverged from the reference on {topo}");
+    assert_eq!(fast, reference, "tiled batch diverged from the PR-3 reference on {topo}");
+    let signed_ref = forward_batch_signed_reference(&net, &xs, sched);
+    assert_eq!(fast, signed_ref, "tiled batch diverged from the PR-4 signed path on {topo}");
     for (x, r) in xs.iter().zip(&fast) {
         assert_eq!(*r, net.forward_sched(x, sched), "batch diverged from per-image on {topo}");
     }
+    // both tile kernels must agree bit for bit before either is timed
+    let saved_kernel = gemm::kernel_override();
+    gemm::set_kernel_override(Some(gemm::Kernel::Scalar)).expect("scalar is always available");
+    let scalar = net.forward_batch_with(&xs, sched, &mut scratch);
+    assert_eq!(scalar, fast, "scalar tile kernel diverged on {topo}");
+    if gemm::detected_kernel() == gemm::Kernel::Avx2 {
+        gemm::set_kernel_override(Some(gemm::Kernel::Avx2)).expect("avx2 detected");
+        let simd = net.forward_batch_with(&xs, sched, &mut scratch);
+        assert_eq!(simd, fast, "avx2 tile kernel diverged on {topo}");
+    }
+    gemm::set_kernel_override(saved_kernel).expect("restore prior kernel selection");
+
     b.throughput(batch as u64)
         .bench(&format!("forward/per_image_{topo}"), || {
             for x in &xs {
@@ -211,15 +324,63 @@ pub fn bench_forward_suite(
         .bench(&format!("forward/batch_reference_{topo}"), || {
             std::hint::black_box(forward_batch_reference(&net, &xs, sched));
         });
-    let mut scratch = BatchScratch::new();
+    b.throughput(batch as u64)
+        .bench(&format!("forward/batch_signed_{topo}"), || {
+            std::hint::black_box(forward_batch_signed_reference(&net, &xs, sched));
+        });
     b.throughput(batch as u64)
         .bench(&format!("forward/batch_{topo}"), || {
             std::hint::black_box(net.forward_batch_with(&xs, sched, &mut scratch));
         });
+    // per-kernel micro-benches through the same entry point
+    gemm::set_kernel_override(Some(gemm::Kernel::Scalar)).expect("scalar is always available");
+    b.throughput(batch as u64)
+        .bench(&format!("forward/tile_scalar_{topo}"), || {
+            std::hint::black_box(net.forward_batch_with(&xs, sched, &mut scratch));
+        });
+    if gemm::detected_kernel() == gemm::Kernel::Avx2 {
+        gemm::set_kernel_override(Some(gemm::Kernel::Avx2)).expect("avx2 detected");
+        b.throughput(batch as u64)
+            .bench(&format!("forward/tile_avx2_{topo}"), || {
+                std::hint::black_box(net.forward_batch_with(&xs, sched, &mut scratch));
+            });
+    }
+    gemm::set_kernel_override(saved_kernel).expect("restore prior kernel selection");
     b.report_speedup(
         &format!("forward/batch_reference_{topo}"),
         &format!("forward/batch_{topo}"),
     );
+    b.report_speedup(
+        &format!("forward/batch_signed_{topo}"),
+        &format!("forward/batch_{topo}"),
+    );
+}
+
+/// Register the multi-core row-partitioned batch bench for one
+/// topology: `forward/batch_par<N>_<topo>` drives
+/// [`Network::forward_batch`] with a batch large enough to scatter
+/// across the shared thread pool, after asserting the partitioned run
+/// is bit-identical to the serial arena path.
+pub fn bench_forward_par(
+    b: &mut bench::Bencher,
+    topo: &Topology,
+    batch: usize,
+    sched: &ConfigSchedule,
+) {
+    let net = Network::new(QuantWeights::random(topo, 7));
+    net.tables.prewarm(sched);
+    let mut rng = Pcg32::new(0xF0A4E);
+    let xs: Vec<Vec<u8>> = (0..batch)
+        .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
+        .collect();
+    let par = net.forward_batch(&xs, sched);
+    let mut scratch = BatchScratch::new();
+    let serial = net.forward_batch_with(&xs, sched, &mut scratch);
+    assert_eq!(par, serial, "row-partitioned batch diverged from serial on {topo}");
+    b.throughput(batch as u64)
+        .bench(&format!("forward/batch_par{batch}_{topo}"), || {
+            std::hint::black_box(net.forward_batch(&xs, sched));
+        });
 }
 
 /// Register the sensitivity-sweep pair for one topology:

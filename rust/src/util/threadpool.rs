@@ -3,6 +3,14 @@
 //! The coordinator's event loop and the benchmark harness both run on
 //! this pool.  It provides:
 //!   * `ThreadPool::execute` — fire-and-forget jobs
+//!   * `ThreadPool::scatter` / `ThreadPool::scatter_scoped` — run a job
+//!     list to completion with results in job order; the scoped variant
+//!     accepts borrowing jobs, which is what lets the sensitivity sweep
+//!     and the batched forward pass fan work out over shared read-only
+//!     state without `Arc` plumbing
+//!   * `shared_pool` — the process-wide pool library-internal
+//!     parallelism (sweep scatter, `forward_batch` row partitioning)
+//!     runs on, created on first use
 //!   * `scope_map` — parallel map over a slice with result collection
 //!   * `Channel` — a small blocking MPMC queue with close semantics and
 //!     bounded capacity (the coordinator's backpressure primitive)
@@ -160,6 +168,13 @@ impl<T> Channel<T> {
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+thread_local! {
+    /// Whether the current thread is a [`ThreadPool`] worker — the
+    /// guard [`ThreadPool::scatter_scoped`] uses to run nested scatters
+    /// inline instead of deadlocking the pool on itself.
+    static IN_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
 /// Fixed-size worker pool.
 pub struct ThreadPool {
     jobs: Channel<Job>,
@@ -178,6 +193,7 @@ impl ThreadPool {
                 std::thread::Builder::new()
                     .name(format!("ecmac-worker-{i}"))
                     .spawn(move || {
+                        IN_POOL_WORKER.with(|f| f.set(true));
                         while let Some(job) = jobs.recv() {
                             // contain job panics: a dead worker would
                             // silently shrink the pool and leak
@@ -205,10 +221,27 @@ impl ThreadPool {
             .unwrap_or(4)
     }
 
+    /// Worker threads in this pool.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Whether the calling thread is a worker of *any* [`ThreadPool`].
+    /// Library code that fans out implicitly (`forward_batch` row
+    /// partitioning) checks this first: work already running on a pool
+    /// thread stays serial there instead of re-scattering.
+    pub fn on_worker_thread() -> bool {
+        IN_POOL_WORKER.with(|f| f.get())
+    }
+
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.execute_boxed(Box::new(f));
+    }
+
+    fn execute_boxed(&self, job: Job) {
         self.in_flight.fetch_add(1, Ordering::Acquire);
         self.jobs
-            .send(Box::new(f))
+            .send(job)
             .unwrap_or_else(|_| panic!("pool closed"));
     }
 
@@ -263,6 +296,129 @@ impl ThreadPool {
         }
         out.into_iter().map(|o| o.expect("scatter result missing")).collect()
     }
+
+    /// [`ThreadPool::scatter`] for *borrowing* jobs: run `jobs` on the
+    /// pool, block until every one finished, and return the results in
+    /// job order.  Jobs may capture references to the caller's stack
+    /// (the sweep's shared checkpoint, a batch's input slice), which is
+    /// what lets library hot paths fan out without `Arc`-wrapping their
+    /// inputs.
+    ///
+    /// Called from a pool worker thread, the jobs run inline on the
+    /// caller instead: a worker blocking on sub-jobs that need worker
+    /// slots would deadlock the pool against itself once every worker
+    /// nests.
+    ///
+    /// # Panics
+    ///
+    /// Re-raises the first failed job's own panic payload — but only
+    /// after *every* submitted job has finished, which is also what
+    /// makes the borrow erasure below sound.
+    pub fn scatter_scoped<'env, R, F>(&self, jobs: Vec<F>) -> Vec<R>
+    where
+        R: Send + 'env,
+        F: FnOnce() -> R + Send + 'env,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if Self::on_worker_thread() {
+            return jobs.into_iter().map(|j| j()).collect();
+        }
+        struct Latch {
+            done: Mutex<usize>,
+            cv: Condvar,
+        }
+        impl Latch {
+            fn wait_for(&self, n: usize) {
+                let mut d = self.done.lock().unwrap();
+                while *d < n {
+                    d = self.cv.wait(d).unwrap();
+                }
+            }
+        }
+        /// Counts a job as done when its closure is dropped — normal
+        /// return *and* unwind (the worker loop catches job panics), so
+        /// the submitter's wait below can never miss a job.
+        struct DoneGuard(Arc<Latch>);
+        impl Drop for DoneGuard {
+            fn drop(&mut self) {
+                *self.0.done.lock().unwrap() += 1;
+                self.0.cv.notify_all();
+            }
+        }
+        /// Blocks in drop until every *submitted* job finished: even if
+        /// submission itself unwinds, no borrowed job can outlive this
+        /// call's stack frame.
+        struct WaitGuard<'a> {
+            latch: &'a Latch,
+            submitted: usize,
+        }
+        impl Drop for WaitGuard<'_> {
+            fn drop(&mut self) {
+                self.latch.wait_for(self.submitted);
+            }
+        }
+        let latch = Arc::new(Latch {
+            done: Mutex::new(0),
+            cv: Condvar::new(),
+        });
+        // each slot holds the job's result or its panic payload, so a
+        // failing job's original message survives the pool hop
+        type Slot<R> = Mutex<Option<std::thread::Result<R>>>;
+        let slots: Vec<Slot<R>> = (0..n).map(|_| Mutex::new(None)).collect();
+        {
+            let mut wait = WaitGuard {
+                latch: &latch,
+                submitted: 0,
+            };
+            for (job, slot) in jobs.into_iter().zip(&slots) {
+                let done = DoneGuard(Arc::clone(&latch));
+                let boxed: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let _done = done;
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                    *slot.lock().unwrap() = Some(r);
+                });
+                // SAFETY: the closure borrows `slots` and `'env` data.
+                // `WaitGuard` (and its drop at the end of this block)
+                // blocks until every submitted closure has run and been
+                // dropped — on the success path and on any unwind — so
+                // no borrow escapes this call.
+                let boxed: Job = unsafe { erase_job_lifetime(boxed) };
+                self.execute_boxed(boxed);
+                wait.submitted += 1;
+            }
+            // WaitGuard drops here: blocks until all jobs completed
+        }
+        slots
+            .into_iter()
+            .map(|m| {
+                match m.into_inner().unwrap().expect("scatter_scoped job lost") {
+                    Ok(r) => r,
+                    // re-raise the job's own panic with its payload
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Erase a job closure's borrow lifetime so it can ride the pool's
+/// `'static` job channel.  Sound only under [`ThreadPool::scatter_scoped`]'s
+/// wait-for-completion discipline; never call this elsewhere.
+unsafe fn erase_job_lifetime(job: Box<dyn FnOnce() + Send + '_>) -> Job {
+    std::mem::transmute(job)
+}
+
+/// The process-wide shared pool library-internal parallelism runs on:
+/// the sensitivity sweep's suffix jobs and `forward_batch`'s row
+/// partitioning both scatter here, so one set of worker threads (sized
+/// to the logical CPU count) serves every caller instead of each call
+/// site spawning its own.  Created on first use; lives for the process.
+pub fn shared_pool() -> &'static ThreadPool {
+    static POOL: std::sync::OnceLock<ThreadPool> = std::sync::OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(ThreadPool::default_parallelism()))
 }
 
 impl Drop for ThreadPool {
@@ -391,6 +547,78 @@ mod tests {
         // the pool threads survived: a fresh scatter still completes
         assert_eq!(pool.scatter(vec![|| 5u64]), vec![5]);
         pool.wait_idle();
+    }
+
+    #[test]
+    fn scatter_scoped_borrows_caller_data_in_order() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..64).collect();
+        let jobs: Vec<_> = data
+            .chunks(7)
+            .map(|c| move || c.iter().sum::<u64>())
+            .collect();
+        let out = pool.scatter_scoped(jobs);
+        assert_eq!(out.iter().sum::<u64>(), data.iter().sum::<u64>());
+        // chunk order preserved
+        let want: Vec<u64> = data.chunks(7).map(|c| c.iter().sum()).collect();
+        assert_eq!(out, want);
+        assert!(pool.scatter_scoped(Vec::<fn() -> u64>::new()).is_empty());
+    }
+
+    #[test]
+    fn scatter_scoped_panics_only_after_all_jobs_finished() {
+        let pool = ThreadPool::new(2);
+        let ran = AtomicU64::new(0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scatter_scoped(vec![
+                Box::new(|| {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                    1u64
+                }) as Box<dyn FnOnce() -> u64 + Send + '_>,
+                Box::new(|| panic!("injected scoped job panic")),
+                Box::new(|| {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                    3u64
+                }),
+            ])
+        }));
+        assert!(r.is_err(), "a lost job must surface as a panic");
+        // the surviving jobs all completed before the panic propagated
+        assert_eq!(ran.load(Ordering::SeqCst), 2);
+        // the pool stays usable
+        assert_eq!(pool.scatter_scoped(vec![|| 9u64]), vec![9]);
+    }
+
+    #[test]
+    fn scatter_scoped_nested_on_worker_runs_inline() {
+        let pool = Arc::new(ThreadPool::new(2));
+        // saturate every worker with jobs that themselves scatter:
+        // without the inline fallback this deadlocks
+        let p2 = Arc::clone(&pool);
+        let jobs: Vec<_> = (0..4u64)
+            .map(|i| {
+                let pool = Arc::clone(&p2);
+                move || {
+                    assert!(ThreadPool::on_worker_thread());
+                    let sub: Vec<_> = (0..2u64).map(|k| move || i * 10 + k).collect();
+                    let inner = pool.scatter_scoped(sub);
+                    inner.iter().sum::<u64>()
+                }
+            })
+            .collect();
+        let out = pool.scatter_scoped(jobs);
+        assert_eq!(out, vec![1, 21, 41, 61]);
+        assert!(!ThreadPool::on_worker_thread());
+    }
+
+    #[test]
+    fn shared_pool_is_one_pool() {
+        let a = shared_pool() as *const ThreadPool;
+        let b = shared_pool() as *const ThreadPool;
+        assert_eq!(a, b);
+        assert!(shared_pool().workers() >= 1);
+        let jobs: Vec<_> = (2u32..4).map(|v| move || v).collect();
+        assert_eq!(shared_pool().scatter_scoped(jobs), vec![2, 3]);
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Differential property suite for the tiled GEMM kernel subsystem:
+//! the scalar and (where available) AVX2 tile paths must be bit-exact
+//! with the kept-verbatim reference forward passes across all 33
+//! configurations, random topologies, odd widths (tail lanes), and
+//! degenerate batches.  Also locks the parallel row-partitioned batch,
+//! the packed-tile layout, and the prewarm laziness contract.
+
+use ecmac::amul::{Config, ConfigSchedule, MulTables};
+use ecmac::datapath::gemm::{self, Kernel, PackedLayer, TILE};
+use ecmac::datapath::{BatchScratch, Network};
+use ecmac::testkit::prop::*;
+use ecmac::testkit::{forward_batch_reference, forward_batch_signed_reference};
+use ecmac::util::rng::Pcg32;
+use ecmac::weights::{LayerWeights, QuantWeights, Topology};
+
+/// Serializes tests that pin the process-wide kernel override, so
+/// concurrent tests cannot un-pin each other mid-assertion.
+static KERNEL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Run `f` under each kernel this machine can execute, restoring the
+/// dispatch override afterwards (even on panic, so one failing test
+/// cannot poison the others' dispatch).
+fn with_each_kernel(mut f: impl FnMut(Kernel)) {
+    let _serial = KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let _ = gemm::set_kernel_override(None);
+        }
+    }
+    let _restore = Restore;
+    gemm::set_kernel_override(Some(Kernel::Scalar)).expect("scalar always available");
+    f(Kernel::Scalar);
+    if gemm::detected_kernel() == Kernel::Avx2 {
+        gemm::set_kernel_override(Some(Kernel::Avx2)).expect("avx2 detected");
+        f(Kernel::Avx2);
+    }
+}
+
+fn random_inputs(topo: &Topology, rng: &mut Pcg32, n: usize) -> Vec<Vec<u8>> {
+    (0..n)
+        .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
+        .collect()
+}
+
+#[test]
+fn kernels_bit_exact_vs_references_all_33_configs_on_seed_shape() {
+    // every configuration through both kernels on the seed topology,
+    // against the PR-3 and PR-4 reference paths
+    let topo = Topology::seed();
+    let net = Network::new(QuantWeights::random(&topo, 0x5EED));
+    let mut rng = Pcg32::new(1);
+    let xs = random_inputs(&topo, &mut rng, 9);
+    for cfg in Config::all() {
+        let sched = ConfigSchedule::uniform(cfg);
+        let pr3 = forward_batch_reference(&net, &xs, &sched);
+        let pr4 = forward_batch_signed_reference(&net, &xs, &sched);
+        assert_eq!(pr3, pr4, "{cfg}: the two reference paths disagree");
+        with_each_kernel(|kernel| {
+            let mut scratch = BatchScratch::new();
+            let got = net.forward_batch_with(&xs, &sched, &mut scratch);
+            assert_eq!(got, pr3, "{cfg} via {kernel}");
+        });
+    }
+}
+
+/// ((inputs, outputs), (hidden widths, (batch, seed))) — biased to odd
+/// widths so tail lanes (n_out % TILE != 0) are the common case.
+type Case = ((i64, i64), (Vec<i64>, (i64, i64)));
+
+fn gen_case() -> Gen<Case> {
+    gen_tuple2(
+        gen_tuple2(gen_i64(1, 40), gen_i64(1, 37)),
+        gen_tuple2(
+            gen_vec(gen_i64(1, 35), 2),
+            gen_tuple2(gen_i64(0, 13), gen_i64(0, 1 << 30)),
+        ),
+    )
+}
+
+fn build_case(case: &Case) -> (Topology, Network, Vec<Vec<u8>>, Pcg32) {
+    let ((n_in, n_out), (hidden, (batch, seed))) = case;
+    let mut sizes = vec![*n_in as usize];
+    sizes.extend(hidden.iter().map(|&h| h as usize));
+    sizes.push(*n_out as usize);
+    let topo = Topology::new(sizes).expect("generated topology is valid");
+    let net = Network::new(QuantWeights::random(&topo, *seed as u64));
+    let mut rng = Pcg32::new((*seed as u64).wrapping_add(0x6E44));
+    let xs: Vec<Vec<u8>> = (0..*batch as usize)
+        .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
+        .collect();
+    (topo, net, xs, rng)
+}
+
+#[test]
+fn prop_kernels_match_references_on_random_topologies() {
+    // random topologies (incl. empty and 1-image batches), random
+    // per-layer schedules, both kernels vs both reference paths and
+    // the per-image path
+    check("tile kernels == references", 20, gen_case(), |case| {
+        let (topo, net, xs, mut rng) = build_case(case);
+        let sched = ConfigSchedule::per_layer(
+            (0..topo.n_layers())
+                .map(|_| Config::new(rng.below(33)).unwrap())
+                .collect(),
+        );
+        let pr3 = forward_batch_reference(&net, &xs, &sched);
+        let pr4 = forward_batch_signed_reference(&net, &xs, &sched);
+        if pr3 != pr4 {
+            return false;
+        }
+        let mut ok = true;
+        with_each_kernel(|_kernel| {
+            let mut scratch = BatchScratch::new();
+            let got = net.forward_batch_with(&xs, &sched, &mut scratch);
+            ok &= got == pr3;
+            ok &= xs
+                .iter()
+                .zip(&got)
+                .all(|(x, r)| *r == net.forward_sched(x, &sched));
+        });
+        ok
+    });
+}
+
+#[test]
+fn tail_lane_widths_are_exact_around_tile_boundaries() {
+    // widths straddling the TILE boundary: 1, TILE-1, TILE, TILE+1, 2*TILE+1
+    let widths = [1usize, TILE - 1, TILE, TILE + 1, 2 * TILE + 1];
+    for &w in &widths {
+        let topo = Topology::new(vec![7, w, 3]).unwrap();
+        let net = Network::new(QuantWeights::random(&topo, w as u64 + 99));
+        let mut rng = Pcg32::new(w as u64);
+        let xs = random_inputs(&topo, &mut rng, 5);
+        let sched = ConfigSchedule::per_layer(vec![
+            Config::new(30).unwrap(),
+            Config::new(2).unwrap(),
+        ]);
+        let want = forward_batch_signed_reference(&net, &xs, &sched);
+        with_each_kernel(|kernel| {
+            let mut scratch = BatchScratch::new();
+            let got = net.forward_batch_with(&xs, &sched, &mut scratch);
+            assert_eq!(got, want, "hidden width {w} via {kernel}");
+        });
+    }
+}
+
+#[test]
+fn packed_layout_agrees_with_direct_kernel_calls() {
+    // drive gemm::layer_batch_with directly (as the benches do) and
+    // check it against a naive signed-table accumulation
+    let tabs = MulTables::build();
+    let mut rng = Pcg32::new(77);
+    for cfg_i in [0u32, 13, 32] {
+        let cfg = Config::new(cfg_i).unwrap();
+        let table = tabs.signed(cfg);
+        for (n_in, n_out, b) in [(5usize, 21usize, 4usize), (16, 16, 1), (23, 7, 3)] {
+            let mut gen = |n: usize| -> Vec<u8> {
+                (0..n).map(|_| rng.below(256) as u8).collect()
+            };
+            let w = gen(n_in * n_out);
+            let xs = gen(b * n_in);
+            let lw = LayerWeights::new(n_in, n_out, w, vec![0u8; n_out]).unwrap();
+            let packed = PackedLayer::pack(&lw);
+            let mut want = vec![0i32; b * n_out];
+            for img in 0..b {
+                for i in 0..n_in {
+                    for j in 0..n_out {
+                        want[img * n_out + j] +=
+                            table.mul8_sm(xs[img * n_in + i], lw.w_at(i, j));
+                    }
+                }
+            }
+            let mut scalar = vec![0i32; b * n_out];
+            gemm::layer_batch_with(Kernel::Scalar, &packed, table, &xs, b, &mut scalar);
+            assert_eq!(scalar, want, "cfg {cfg_i} {n_in}x{n_out} b{b} scalar");
+            if gemm::detected_kernel() == Kernel::Avx2 {
+                let mut simd = vec![0i32; b * n_out];
+                gemm::layer_batch_with(Kernel::Avx2, &packed, table, &xs, b, &mut simd);
+                assert_eq!(simd, want, "cfg {cfg_i} {n_in}x{n_out} b{b} avx2");
+            }
+        }
+    }
+}
+
+#[test]
+fn network_cached_panels_match_fresh_packing() {
+    // the panels Network caches at construction must behave exactly
+    // like freshly-packed ones — if they ever drift (e.g. a future
+    // mutation path), this catches it at the kernel level
+    let topo = Topology::parse("9,18,5").unwrap();
+    let qw = QuantWeights::random(&topo, 21);
+    let net = Network::new(qw.clone());
+    let tabs = MulTables::build();
+    let table = tabs.signed(Config::new(6).unwrap());
+    let mut rng = Pcg32::new(8);
+    for l in 0..topo.n_layers() {
+        let lw = &qw.layers[l];
+        let fresh = PackedLayer::pack(lw);
+        let b = 3;
+        let xs: Vec<u8> = (0..b * lw.n_in).map(|_| rng.below(256) as u8).collect();
+        let mut acc_cached = vec![0i32; b * lw.n_out];
+        let mut acc_fresh = vec![0i32; b * lw.n_out];
+        let cached = net.packed_layer(l);
+        gemm::layer_batch_with(Kernel::Scalar, cached, table, &xs, b, &mut acc_cached);
+        gemm::layer_batch_with(Kernel::Scalar, &fresh, table, &xs, b, &mut acc_fresh);
+        assert_eq!(acc_cached, acc_fresh, "layer {l}");
+    }
+}
+
+#[test]
+fn parallel_row_partitioned_batch_is_bit_exact_and_ordered() {
+    // large enough to cross the parallel threshold on any core count
+    let topo = Topology::parse("30,14,9,5").unwrap();
+    let net = Network::new(QuantWeights::random(&topo, 0xBEE));
+    let mut rng = Pcg32::new(5);
+    let xs = random_inputs(&topo, &mut rng, 400);
+    let sched = ConfigSchedule::per_layer(vec![
+        Config::new(8).unwrap(),
+        Config::ACCURATE,
+        Config::MAX_APPROX,
+    ]);
+    let par = net.forward_batch(&xs, &sched);
+    let mut scratch = BatchScratch::new();
+    let serial = net.forward_batch_with(&xs, &sched, &mut scratch);
+    assert_eq!(par, serial);
+    // and the parallel path still honors a pinned kernel
+    with_each_kernel(|kernel| {
+        assert_eq!(net.forward_batch(&xs, &sched), serial, "{kernel}");
+    });
+}
+
+#[test]
+fn prewarm_materializes_lazily_and_only_what_is_needed() {
+    let topo = Topology::parse("6,5,4").unwrap();
+    let net = Network::new(QuantWeights::random(&topo, 3));
+    assert_eq!(net.tables.built(), 0, "construction must stay lazy");
+    let sched = ConfigSchedule::per_layer(vec![Config::new(4).unwrap(), Config::new(4).unwrap()]);
+    net.tables.prewarm(&sched);
+    assert_eq!(net.tables.built(), 1, "one distinct config, one table");
+    // a forward pass after prewarm builds nothing further
+    let x = vec![1u8; 6];
+    let _ = net.forward_sched(&x, &sched);
+    assert_eq!(net.tables.built(), 1);
+}
