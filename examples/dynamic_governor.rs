@@ -99,6 +99,7 @@ fn run(
             queue_capacity: 8192,
             workers: 2,
             shards: 2,
+            ..CoordinatorConfig::default()
         },
         Arc::new(NativeBackend { network: net }) as Arc<dyn Backend>,
         gov,

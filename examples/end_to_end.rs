@@ -167,6 +167,7 @@ fn main() -> anyhow::Result<()> {
             queue_capacity: 8192,
             workers: 2,
             shards: 2,
+            ..CoordinatorConfig::default()
         },
         Arc::new(NativeBackend {
             network: Network::new(QuantWeights::load_artifacts(&dir)?),

@@ -1,4 +1,4 @@
-"""The CI bench-regression gate over BENCH_forward.json artifacts."""
+"""The CI bench-regression gate over BENCH_forward.json / BENCH_serve.json."""
 
 import json
 
@@ -116,4 +116,115 @@ class TestBaselineComparison:
         doc = json.loads(committed.read_text())
         assert doc["bench"] == "forward"
         fresh = write(tmp_path, "fresh.json", artifact())
+        assert bench_gate.run([fresh, "--baseline", str(committed)]) == 0
+
+
+def serve_artifact(adaptive_speedup=2.0, answered=4000, **extra):
+    doc = {
+        "schema_version": 1,
+        "bench": "serve",
+        "requests": 4000,
+        "rows": [
+            {
+                "policy": "fixed:16",
+                "mode": "closed:8",
+                "offered_rps": 5e4,
+                "batch1_throughput_rps": 2e4,
+                "throughput_rps": 2e4 * adaptive_speedup,
+                "adaptive_speedup": adaptive_speedup,
+                "p50_us": 120.0,
+                "p95_us": 600.0,
+                "p99_us": 900.0,
+                "mean_batch": 7.5,
+                "energy_per_image_nj": 80.0,
+                "answered": answered,
+                "rejected": 0,
+                "errors": 0,
+            }
+        ],
+    }
+    doc.update(extra)
+    return doc
+
+
+class TestServeInRunInvariants:
+    def test_healthy_artifact_passes(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", serve_artifact())
+        assert bench_gate.run([fresh]) == 0
+
+    def test_adaptive_slower_than_batch1_fails(self, tmp_path):
+        # the acceptance invariant: adaptive batching must at least
+        # match the pinned batch=1 front-end at equal offered load
+        fresh = write(tmp_path, "fresh.json", serve_artifact(adaptive_speedup=0.7))
+        assert bench_gate.run([fresh]) == 1
+
+    def test_tolerance_allows_noise(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", serve_artifact(adaptive_speedup=0.95))
+        assert bench_gate.run([fresh]) == 0
+
+    def test_zero_answered_fails(self, tmp_path):
+        # a run that rejected/errored everything must not pass just
+        # because the speedup column looks fine
+        fresh = write(tmp_path, "fresh.json", serve_artifact(answered=0))
+        assert bench_gate.run([fresh]) == 1
+
+    def test_empty_rows_fail(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", serve_artifact(rows=[]))
+        assert bench_gate.run([fresh]) == 1
+
+
+class TestServeBaselineComparison:
+    def test_speedup_drop_beyond_tolerance_fails(self, tmp_path):
+        base = write(tmp_path, "base.json", serve_artifact(adaptive_speedup=3.0))
+        fresh = write(tmp_path, "fresh.json", serve_artifact(adaptive_speedup=2.0))
+        assert bench_gate.run([fresh, "--baseline", base]) == 1
+
+    def test_improvement_passes(self, tmp_path):
+        base = write(tmp_path, "base.json", serve_artifact(adaptive_speedup=2.0))
+        fresh = write(tmp_path, "fresh.json", serve_artifact(adaptive_speedup=4.0))
+        assert bench_gate.run([fresh, "--baseline", base]) == 0
+
+    def test_absolute_mode_compares_throughput(self, tmp_path):
+        base = write(tmp_path, "base.json", serve_artifact())
+        doc = serve_artifact()
+        doc["rows"][0]["throughput_rps"] = 1e3  # big drop, ratio unchanged
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh, "--baseline", base]) == 0
+        assert bench_gate.run([fresh, "--baseline", base, "--absolute"]) == 1
+
+    def test_shrunken_policy_coverage_fails(self, tmp_path):
+        base_doc = serve_artifact()
+        base_doc["rows"].append(dict(base_doc["rows"][0], policy="budget:5.0"))
+        base = write(tmp_path, "base.json", base_doc)
+        fresh = write(tmp_path, "fresh.json", serve_artifact())
+        assert bench_gate.run([fresh, "--baseline", base]) == 1
+
+    def test_kind_mismatch_fails(self, tmp_path):
+        # wiring the forward baseline into the serve gate is a CI bug,
+        # not a silent skip
+        base = write(tmp_path, "base.json", artifact())
+        fresh = write(tmp_path, "fresh.json", serve_artifact())
+        assert bench_gate.run([fresh, "--baseline", base]) == 1
+
+    def test_pending_baseline_skips_comparison(self, tmp_path):
+        base = write(
+            tmp_path, "base.json", serve_artifact(pending_measurement=True, rows=[])
+        )
+        fresh = write(tmp_path, "fresh.json", serve_artifact())
+        assert bench_gate.run([fresh, "--baseline", base]) == 0
+
+    def test_write_baseline_round_trip(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", serve_artifact())
+        target = str(tmp_path / "baseline.json")
+        assert bench_gate.run([fresh, "--write-baseline", target]) == 0
+        assert bench_gate.run([fresh, "--baseline", target]) == 0
+
+    def test_committed_stub_is_valid_for_the_gate(self, tmp_path):
+        import pathlib
+
+        root = pathlib.Path(__file__).resolve().parents[2]
+        committed = root / "BENCH_serve.json"
+        doc = json.loads(committed.read_text())
+        assert doc["bench"] == "serve"
+        fresh = write(tmp_path, "fresh.json", serve_artifact())
         assert bench_gate.run([fresh, "--baseline", str(committed)]) == 0

@@ -1,23 +1,31 @@
-"""CI bench-regression gate over `BENCH_forward.json`.
+"""CI bench-regression gate over BENCH_forward.json / BENCH_serve.json.
 
-Compares a fresh `ecmac bench --forward --json` artifact against the
-committed baseline at the repository root and fails (exit 1) when
-throughput regressed by more than the tolerance (default 10%).
+Compares a fresh bench artifact (`ecmac bench --forward --json` or
+`ecmac loadgen --json`) against the committed baseline at the
+repository root and fails (exit 1) when throughput regressed by more
+than the tolerance (default 10%).
 
-Two classes of check:
+Two classes of check, applied per artifact kind (the ``bench`` field):
 
-* **In-run invariants** (always enforced): within one artifact, the
-  tiled-kernel path must not be slower than the in-process PR-4
-  signed-gather baseline beyond tolerance, and the prefix-cached sweep
-  must not be slower than the full-pass engine.  These are
-  machine-matched (both sides measured in the same process seconds
-  apart), so they are meaningful even on noisy shared CI runners.
+* **In-run invariants** (always enforced): within one artifact, both
+  sides of each comparison were measured in the same process seconds
+  apart, so they are meaningful even on noisy shared CI runners.
+
+  - ``forward``: the tiled-kernel path must not be slower than the
+    in-process PR-4 signed-gather baseline beyond tolerance, and the
+    prefix-cached sweep must not be slower than the full-pass engine.
+  - ``serve``: per governor policy, the adaptive batching window must
+    not serve less throughput than the pinned batch=1 front-end at the
+    same offered load (``adaptive_speedup >= 1 - tolerance``), and the
+    run must actually have answered requests.
+
 * **Baseline comparison** (when the committed baseline holds real
-  measurements): per-topology *relative* columns — `kernel_speedup`,
-  `batch_speedup`, `sweep_speedup` — are compared fresh-vs-baseline.
-  Ratios of two same-machine measurements transfer across machines;
-  absolute img/s numbers do not, so they are only compared under
-  `--absolute` (off in CI).
+  measurements): relative columns — ``kernel_speedup`` /
+  ``batch_speedup`` / ``sweep_speedup`` per topology for ``forward``,
+  ``adaptive_speedup`` per policy for ``serve`` — are compared
+  fresh-vs-baseline.  Ratios of two same-machine measurements transfer
+  across machines; absolute img/s or req/s numbers do not, so they are
+  only compared under ``--absolute`` (off in CI).
 
 The committed baseline may be a pending stub (`"pending_measurement":
 true`) on machines that cannot run the bench; the gate then skips the
@@ -27,10 +35,13 @@ the refresh command.  Refresh with::
     cd rust && cargo run --release -- bench --forward --json fresh.json
     python3 ../python/tools/bench_gate.py fresh.json --write-baseline ../BENCH_forward.json
 
+    cd rust && cargo run --release -- loadgen --synthetic --json fresh_serve.json
+    python3 ../python/tools/bench_gate.py fresh_serve.json --write-baseline ../BENCH_serve.json
+
 Override: maintainers can skip the gate on a PR by adding the
 ``bench-override`` label (the CI step is conditioned on it); use it for
-changes that intentionally trade forward throughput for something else,
-and refresh the baseline in the same PR.
+changes that intentionally trade throughput for something else, and
+refresh the matching baseline in the same PR.
 """
 
 from __future__ import annotations
@@ -45,20 +56,23 @@ RATIO_COLUMNS = ("kernel_speedup", "batch_speedup", "sweep_speedup")
 # Absolute columns, compared only under --absolute.
 ABSOLUTE_COLUMNS = ("batch_per_sec", "batch_signed_per_sec", "per_image_per_sec")
 
+SERVE_RATIO_COLUMNS = ("adaptive_speedup",)
+SERVE_ABSOLUTE_COLUMNS = ("throughput_rps", "batch1_throughput_rps")
+
 
 def load(path):
     with open(path) as f:
         return json.load(f)
 
 
-def rows_by_topology(doc):
-    return {r["topology"]: r for r in doc.get("rows", [])}
+def rows_by_key(doc, key):
+    return {r[key]: r for r in doc.get("rows", [])}
 
 
 def in_run_invariants(fresh, tolerance):
-    """Same-process before/after invariants; returns a list of failures."""
+    """Forward-bench same-process invariants; returns a list of failures."""
     failures = []
-    for topo, row in rows_by_topology(fresh).items():
+    for topo, row in rows_by_key(fresh, "topology").items():
         kernel = row.get("kernel_speedup")
         if kernel is not None and kernel < 1.0 - tolerance:
             failures.append(
@@ -74,24 +88,80 @@ def in_run_invariants(fresh, tolerance):
     return failures
 
 
-def baseline_comparison(fresh, baseline, tolerance, absolute):
+def serve_in_run_invariants(fresh, tolerance):
+    """Serve-bench same-process invariants; returns a list of failures.
+
+    Both front-ends in a row faced the same offered load from the same
+    generator seconds apart, so adaptive-vs-batch=1 is machine-matched.
+    """
+    failures = []
+    rows = rows_by_key(fresh, "policy")
+    if not rows:
+        failures.append("serve artifact has no rows — the loadgen run produced nothing")
+    for policy, row in rows.items():
+        speedup = row.get("adaptive_speedup")
+        if speedup is not None and speedup < 1.0 - tolerance:
+            failures.append(
+                f"{policy}: adaptive batching is {speedup:.2f}x the batch=1 "
+                f"front-end at equal offered load (floor {1.0 - tolerance:.2f}x) "
+                f"— the adaptive window lost throughput"
+            )
+        answered = row.get("answered")
+        if answered is not None and answered <= 0:
+            failures.append(
+                f"{policy}: zero requests answered — the serve path is broken, "
+                f"not merely slow"
+            )
+    return failures
+
+
+# Per-artifact-kind gate configuration, selected by the "bench" field.
+KINDS = {
+    "forward": {
+        "key": "topology",
+        "ratio_columns": RATIO_COLUMNS,
+        "absolute_columns": ABSOLUTE_COLUMNS,
+        "invariants": in_run_invariants,
+        "refresh": (
+            "  cd rust && cargo run --release -- bench --forward --json fresh.json\n"
+            "  python3 ../python/tools/bench_gate.py fresh.json "
+            "--write-baseline ../BENCH_forward.json"
+        ),
+    },
+    "serve": {
+        "key": "policy",
+        "ratio_columns": SERVE_RATIO_COLUMNS,
+        "absolute_columns": SERVE_ABSOLUTE_COLUMNS,
+        "invariants": serve_in_run_invariants,
+        "refresh": (
+            "  cd rust && cargo run --release -- loadgen --synthetic "
+            "--json fresh_serve.json\n"
+            "  python3 ../python/tools/bench_gate.py fresh_serve.json "
+            "--write-baseline ../BENCH_serve.json"
+        ),
+    },
+}
+
+
+def baseline_comparison(fresh, baseline, tolerance, absolute, kind):
     """Fresh-vs-committed comparison; returns (failures, notes)."""
     failures, notes = [], []
-    base_rows = rows_by_topology(baseline)
-    fresh_rows = rows_by_topology(fresh)
-    # shrinking coverage must not pass silently: a baseline topology
-    # with no fresh measurement could hide an arbitrary regression
-    for topo in base_rows:
-        if topo not in fresh_rows:
+    key = kind["key"]
+    base_rows = rows_by_key(baseline, key)
+    fresh_rows = rows_by_key(fresh, key)
+    # shrinking coverage must not pass silently: a baseline row with no
+    # fresh measurement could hide an arbitrary regression
+    for name in base_rows:
+        if name not in fresh_rows:
             failures.append(
-                f"{topo}: in the baseline but missing from the fresh artifact "
+                f"{name}: in the baseline but missing from the fresh artifact "
                 f"— bench coverage shrank (refresh the baseline if intentional)"
             )
-    columns = RATIO_COLUMNS + (ABSOLUTE_COLUMNS if absolute else ())
-    for topo, row in fresh_rows.items():
-        base = base_rows.get(topo)
+    columns = kind["ratio_columns"] + (kind["absolute_columns"] if absolute else ())
+    for name, row in fresh_rows.items():
+        base = base_rows.get(name)
         if base is None:
-            notes.append(f"{topo}: not in the baseline — skipped")
+            notes.append(f"{name}: not in the baseline — skipped")
             continue
         for col in columns:
             b, f = base.get(col), row.get(col)
@@ -100,17 +170,17 @@ def baseline_comparison(fresh, baseline, tolerance, absolute):
             drop = 1.0 - f / b
             if drop > tolerance:
                 failures.append(
-                    f"{topo}.{col}: {f:.2f} vs baseline {b:.2f} "
+                    f"{name}.{col}: {f:.2f} vs baseline {b:.2f} "
                     f"({drop * 100.0:.1f}% drop > {tolerance * 100.0:.0f}%)"
                 )
             else:
-                notes.append(f"{topo}.{col}: {f:.2f} vs baseline {b:.2f} ok")
+                notes.append(f"{name}.{col}: {f:.2f} vs baseline {b:.2f} ok")
     return failures, notes
 
 
 def run(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("fresh", help="fresh BENCH_forward.json from this run")
+    ap.add_argument("fresh", help="fresh bench artifact from this run")
     ap.add_argument(
         "--baseline",
         default=None,
@@ -125,7 +195,7 @@ def run(argv=None):
     ap.add_argument(
         "--absolute",
         action="store_true",
-        help="also compare absolute img/s columns (same-machine baselines only)",
+        help="also compare absolute throughput columns (same-machine baselines only)",
     )
     ap.add_argument(
         "--write-baseline",
@@ -135,8 +205,12 @@ def run(argv=None):
     args = ap.parse_args(argv)
 
     fresh = load(args.fresh)
-    if fresh.get("bench") != "forward":
-        print(f"error: {args.fresh} is not a forward bench artifact")
+    kind = KINDS.get(fresh.get("bench"))
+    if kind is None:
+        print(
+            f"error: {args.fresh} is not a recognised bench artifact "
+            f"(bench={fresh.get('bench')!r}, expected one of {sorted(KINDS)})"
+        )
         return 2
 
     if args.write_baseline:
@@ -144,7 +218,7 @@ def run(argv=None):
         print(f"baseline refreshed: {args.write_baseline}")
         return 0
 
-    failures = in_run_invariants(fresh, args.tolerance)
+    failures = kind["invariants"](fresh, args.tolerance)
 
     if args.baseline:
         try:
@@ -152,16 +226,20 @@ def run(argv=None):
         except FileNotFoundError:
             print(f"note: no baseline at {args.baseline}; in-run invariants only")
             baseline = None
-        if baseline is not None and baseline.get("pending_measurement"):
+        if baseline is not None and baseline.get("bench") != fresh.get("bench"):
+            failures.append(
+                f"baseline {args.baseline} is a {baseline.get('bench')!r} "
+                f"artifact, fresh is {fresh.get('bench')!r} — wrong baseline "
+                f"wired up"
+            )
+        elif baseline is not None and baseline.get("pending_measurement"):
             print(
                 "note: committed baseline is a pending stub — refresh it with\n"
-                "  cd rust && cargo run --release -- bench --forward --json fresh.json\n"
-                "  python3 ../python/tools/bench_gate.py fresh.json "
-                "--write-baseline ../BENCH_forward.json"
+                + kind["refresh"]
             )
         elif baseline is not None:
             more, notes = baseline_comparison(
-                fresh, baseline, args.tolerance, args.absolute
+                fresh, baseline, args.tolerance, args.absolute, kind
             )
             failures.extend(more)
             for n in notes:
@@ -173,7 +251,7 @@ def run(argv=None):
             print(f"  - {f}")
         print(
             "\noverride: add the 'bench-override' label to the PR to skip this "
-            "gate (and refresh the committed BENCH_forward.json baseline in the "
+            "gate (and refresh the committed baseline at the repo root in the "
             "same PR if the trade-off is intentional)."
         )
         return 1

@@ -296,6 +296,10 @@ fn bench_coordinator(b: &mut Bencher) {
                 queue_capacity: 8192,
                 workers: 2,
                 shards: 2,
+                // the serve benches sweep *fixed* batch sizes; adaptive
+                // windowing would decouple the measured batch from the knob
+                adaptive: false,
+                ..CoordinatorConfig::default()
             },
             Arc::new(NativeBackend {
                 network: test_network(),

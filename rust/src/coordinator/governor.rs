@@ -116,6 +116,23 @@ pub enum Policy {
     },
 }
 
+impl std::fmt::Display for Policy {
+    /// Compact label used by the load harness and `BENCH_serve.json`
+    /// rows; round-trips through `ecmac`'s `--policy` syntax.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Policy::Fixed(cfg) => write!(f, "fixed:{}", cfg.index()),
+            Policy::FixedSchedule(s) => write!(f, "sched:{s}"),
+            Policy::PowerBudget { budget_mw } => write!(f, "budget:{budget_mw}"),
+            Policy::AccuracyFloor { min_accuracy } => write!(f, "floor:{min_accuracy}"),
+            Policy::EnergyBudget {
+                budget_mj,
+                horizon_images,
+            } => write!(f, "energy:{budget_mj}:{horizon_images}"),
+        }
+    }
+}
+
 /// A point on the accuracy/power frontier.
 #[derive(Debug, Clone, Copy)]
 pub struct FrontierPoint {
@@ -271,6 +288,11 @@ impl Governor {
     /// budget/floor/energy feedback policies), as opposed to a pinned
     /// configuration — i.e. whether serving should prewarm every
     /// schedule the governor might select, not just the current one.
+    /// The policy this governor runs.
+    pub fn policy(&self) -> &Policy {
+        &self.policy
+    }
+
     pub fn is_dynamic(&self) -> bool {
         !matches!(self.policy, Policy::Fixed(_) | Policy::FixedSchedule(_))
     }

@@ -1,0 +1,380 @@
+//! Non-blocking TCP intake: the network front-end of the serve path.
+//!
+//! A single hand-rolled poll loop over non-blocking sockets (no epoll
+//! crate in the toolchain image — at serve-bench request rates the
+//! readiness loop is nowhere near the bottleneck) translates framed
+//! requests into [`Coordinator`] submissions and streams framed
+//! responses back, *pipelined and strictly in request order* per
+//! connection.
+//!
+//! ## Wire protocol
+//!
+//! Request frame: exactly [`REQUEST_LEN`] = `N_FEATURES` bytes of
+//! sign-magnitude feature values.  Frames may be pipelined
+//! back-to-back on one connection.
+//!
+//! Response frame ([`RESPONSE_LEN`] bytes, little-endian):
+//!
+//! ```text
+//!  [0]     status: 0 = ok, 1 = retry (backpressure), 2 = error/closed
+//!  [1]     predicted class (ok only)
+//!  [2..10] request sojourn latency, µs (ok only)
+//! ```
+//!
+//! ## Backpressure contract
+//!
+//! The intake never buffers admitted work of its own: every complete
+//! request frame goes straight through [`Coordinator::submit`]'s
+//! admission control.  An over-budget or full coordinator answers with
+//! status `1` (*retry*) immediately — the wire-visible form of
+//! [`SubmitOutcome::Busy`] — so a remote client sees backpressure as an
+//! explicit signal instead of unbounded queueing, and a closed intake
+//! answers `2`.  Rejections keep their place in the response order.
+
+use super::request::ClassifyResponse;
+use super::server::{Coordinator, SubmitOutcome};
+use crate::dataset::N_FEATURES;
+use crate::util::threadpool::Channel;
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Request frame length: one feature vector.
+pub const REQUEST_LEN: usize = N_FEATURES;
+/// Response frame length: status + pred + latency.
+pub const RESPONSE_LEN: usize = 10;
+
+/// Response status: served.
+pub const STATUS_OK: u8 = 0;
+/// Response status: rejected by backpressure — retry later.
+pub const STATUS_RETRY: u8 = 1;
+/// Response status: backend failure or closed intake.
+pub const STATUS_ERROR: u8 = 2;
+
+/// Idle poll-loop sleep: long enough to stay off the CPU when quiet,
+/// short next to the serve path's own latencies.
+const IDLE_SLEEP: Duration = Duration::from_micros(200);
+
+/// Encode one response frame.
+pub fn encode_response(status: u8, pred: u8, latency_us: u64) -> [u8; RESPONSE_LEN] {
+    let mut f = [0u8; RESPONSE_LEN];
+    f[0] = status;
+    f[1] = pred;
+    f[2..].copy_from_slice(&latency_us.to_le_bytes());
+    f
+}
+
+/// Decode one response frame into `(status, pred, latency_us)`.
+pub fn decode_response(frame: &[u8; RESPONSE_LEN]) -> (u8, u8, u64) {
+    let latency = u64::from_le_bytes(frame[2..10].try_into().unwrap());
+    (frame[0], frame[1], latency)
+}
+
+/// A response slot in a connection's in-order reply queue: either an
+/// admitted request still executing, or an immediately-known status
+/// (retry/closed) holding its place in the pipeline order.
+enum Pending {
+    Waiting(Channel<ClassifyResponse>),
+    Ready([u8; RESPONSE_LEN]),
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Partial request frame bytes.
+    inbuf: Vec<u8>,
+    /// In-order reply queue (front = oldest request).
+    pending: VecDeque<Pending>,
+    /// Unwritten response bytes (socket send buffer was full).
+    out: Vec<u8>,
+    /// Peer closed its write side; finish pending replies, then drop.
+    eof: bool,
+    dead: bool,
+}
+
+impl Conn {
+    /// One poll round: read frames, submit, collect ready replies,
+    /// flush.  Returns `true` when any progress was made.
+    fn poll(&mut self, coord: &Coordinator) -> bool {
+        let mut progress = false;
+        // read whatever the socket has
+        let mut tmp = [0u8; 4096];
+        while !self.eof {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => self.eof = true,
+                Ok(n) => {
+                    self.inbuf.extend_from_slice(&tmp[..n]);
+                    progress = true;
+                    if n < tmp.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    self.dead = true;
+                    return progress;
+                }
+            }
+        }
+        // submit every complete frame, preserving pipeline order
+        while self.inbuf.len() >= REQUEST_LEN {
+            let mut features = [0u8; N_FEATURES];
+            features.copy_from_slice(&self.inbuf[..REQUEST_LEN]);
+            self.inbuf.drain(..REQUEST_LEN);
+            let slot = match coord.submit(features) {
+                SubmitOutcome::Admitted(reply) => Pending::Waiting(reply),
+                SubmitOutcome::Busy => Pending::Ready(encode_response(STATUS_RETRY, 0, 0)),
+                SubmitOutcome::Closed => Pending::Ready(encode_response(STATUS_ERROR, 0, 0)),
+            };
+            self.pending.push_back(slot);
+            progress = true;
+        }
+        // emit replies strictly in order; an unanswered front blocks
+        // the ones behind it (in-order pipelining, not multiplexing)
+        while let Some(front) = self.pending.front() {
+            let frame = match front {
+                Pending::Ready(f) => *f,
+                Pending::Waiting(reply) => match reply.try_recv() {
+                    Ok(Some(resp)) => encode_response(STATUS_OK, resp.pred, resp.latency_us),
+                    Ok(None) => break, // still executing
+                    // channel closed without a response: failed batch
+                    Err(()) => encode_response(STATUS_ERROR, 0, 0),
+                },
+            };
+            self.pending.pop_front();
+            self.out.extend_from_slice(&frame);
+            progress = true;
+        }
+        // flush as much as the socket accepts
+        while !self.out.is_empty() {
+            match self.stream.write(&self.out) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.out.drain(..n);
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Nothing left to read, execute, or write.
+    fn finished(&self) -> bool {
+        self.dead
+            || (self.eof
+                && self.pending.is_empty()
+                && self.out.is_empty()
+                && self.inbuf.len() < REQUEST_LEN)
+    }
+}
+
+/// The running TCP front-end: a listener plus its poll-loop thread.
+/// Stop it (or drop it) *before* shutting the coordinator down, so
+/// in-flight connections drain their replies first.
+pub struct TcpIntake {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpIntake {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port)
+    /// and start the poll loop feeding `coord`.
+    pub fn bind(addr: &str, coord: Arc<Coordinator>) -> anyhow::Result<TcpIntake> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("ecmac-intake".into())
+            .spawn(move || {
+                let mut conns: Vec<Conn> = Vec::new();
+                while !stop_flag.load(Ordering::Relaxed) {
+                    let mut progress = false;
+                    loop {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                if stream.set_nonblocking(true).is_err() {
+                                    continue;
+                                }
+                                conns.push(Conn {
+                                    stream,
+                                    inbuf: Vec::new(),
+                                    pending: VecDeque::new(),
+                                    out: Vec::new(),
+                                    eof: false,
+                                    dead: false,
+                                });
+                                progress = true;
+                            }
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                            Err(_) => break,
+                        }
+                    }
+                    for conn in conns.iter_mut() {
+                        progress |= conn.poll(&coord);
+                    }
+                    conns.retain(|c| !c.finished());
+                    if !progress {
+                        std::thread::sleep(IDLE_SLEEP);
+                    }
+                }
+                // dropping the connections closes the sockets; any
+                // still-executing requests finish inside the
+                // coordinator (their replies go nowhere, which is fine)
+            })
+            .expect("spawn intake");
+        Ok(TcpIntake {
+            local_addr,
+            stop,
+            thread: Some(thread),
+        })
+    }
+
+    /// The bound address (resolves the ephemeral port for tests).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop the poll loop and join its thread (idempotent).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for TcpIntake {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amul::Config;
+    use crate::coordinator::governor::{AccuracyTable, Governor, Policy};
+    use crate::coordinator::server::{Backend, CoordinatorConfig, NativeBackend};
+    use crate::power::{MultiplierEnergyProfile, PowerModel};
+    use crate::testkit::doubles::SlowBackend;
+    use crate::util::rng::Pcg32;
+    use crate::weights::QuantWeights;
+
+    fn native_backend() -> Arc<NativeBackend> {
+        let mut rng = Pcg32::new(41);
+        let mut gen = |n: usize| -> Vec<u8> {
+            (0..n).map(|_| rng.below(128) as u8).collect()
+        };
+        Arc::new(NativeBackend {
+            network: crate::datapath::Network::new(QuantWeights::two_layer(
+                gen(62 * 30),
+                gen(30),
+                gen(30 * 10),
+                gen(10),
+            )),
+        })
+    }
+
+    fn start(backend: Arc<dyn Backend>, cfg: CoordinatorConfig) -> Coordinator {
+        let pm =
+            PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(500, 3)).unwrap();
+        let acc = AccuracyTable::new(vec![0.9; crate::amul::N_CONFIGS]);
+        let gov = Governor::new(Policy::Fixed(Config::new(5).unwrap()), &pm, &acc);
+        Coordinator::start(cfg, backend, gov, pm)
+    }
+
+    fn read_frame(stream: &mut TcpStream) -> (u8, u8, u64) {
+        let mut frame = [0u8; RESPONSE_LEN];
+        stream.read_exact(&mut frame).expect("response frame");
+        decode_response(&frame)
+    }
+
+    #[test]
+    fn pipelined_requests_round_trip_in_order() {
+        let backend = native_backend();
+        let coord = Arc::new(start(
+            backend.clone() as Arc<dyn Backend>,
+            CoordinatorConfig::default(),
+        ));
+        let mut intake = TcpIntake::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let mut client = TcpStream::connect(intake.local_addr()).unwrap();
+
+        // pipeline three frames in one write
+        let mut wire = Vec::new();
+        let inputs: Vec<[u8; N_FEATURES]> = (0..3u8).map(|i| [i + 1; N_FEATURES]).collect();
+        for x in &inputs {
+            wire.extend_from_slice(x);
+        }
+        client.write_all(&wire).unwrap();
+        for x in &inputs {
+            let (status, pred, latency_us) = read_frame(&mut client);
+            assert_eq!(status, STATUS_OK);
+            let want = backend.network.forward(x, Config::new(5).unwrap());
+            assert_eq!(pred, want.pred, "wire pred must match the functional model");
+            assert!(latency_us > 0);
+        }
+        drop(client);
+        intake.stop();
+        let m = Arc::try_unwrap(coord)
+            .unwrap_or_else(|_| panic!("intake still holds the coordinator"))
+            .shutdown();
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.rejected, 0);
+    }
+
+    #[test]
+    fn backpressure_and_closure_surface_on_the_wire() {
+        // a slow backend with a one-slot budget: the second pipelined
+        // request must come back as an explicit retry, in order
+        let backend = Arc::new(SlowBackend::wrap(
+            native_backend(),
+            Duration::from_millis(40),
+        ));
+        let coord = Arc::new(start(
+            backend as Arc<dyn Backend>,
+            CoordinatorConfig {
+                inflight_budget: 1,
+                workers: 1,
+                shards: 1,
+                ..CoordinatorConfig::default()
+            },
+        ));
+        let mut intake = TcpIntake::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let mut client = TcpStream::connect(intake.local_addr()).unwrap();
+
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&[1u8; N_FEATURES]);
+        wire.extend_from_slice(&[2u8; N_FEATURES]);
+        client.write_all(&wire).unwrap();
+        let (s1, _, _) = read_frame(&mut client);
+        let (s2, _, _) = read_frame(&mut client);
+        assert_eq!(s1, STATUS_OK, "first request is admitted and served");
+        assert_eq!(s2, STATUS_RETRY, "over-budget request gets a retry signal");
+
+        coord.close_intake();
+        client.write_all(&[3u8; N_FEATURES]).unwrap();
+        let (s3, _, _) = read_frame(&mut client);
+        assert_eq!(s3, STATUS_ERROR, "closed intake answers error, not retry");
+
+        drop(client);
+        intake.stop();
+        let m = Arc::try_unwrap(coord)
+            .unwrap_or_else(|_| panic!("intake still holds the coordinator"))
+            .shutdown();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.rejected, 2);
+    }
+}

@@ -1,0 +1,393 @@
+//! Open-loop / closed-loop / bursty load harness for the serve path.
+//!
+//! Three canonical traffic shapes (the ones serving papers distinguish
+//! because they stress different failure modes):
+//!
+//! * [`LoadMode::Open`] — fixed-rate Poisson arrivals.  The arrival
+//!   clock never waits for responses, so queueing delay and
+//!   backpressure rejections become visible when the offered rate
+//!   exceeds capacity (the coordinated-omission-free shape).
+//! * [`LoadMode::Closed`] — `concurrency` clients, each submitting its
+//!   next request only after the previous answer.  Measures sustainable
+//!   throughput at a bounded concurrency; this is the shape the
+//!   adaptive-vs-batch=1 acceptance comparison runs under.
+//! * [`LoadMode::Burst`] — open-loop arrivals alternating between a
+//!   high and a low rate each period: exercises the adaptive window's
+//!   reaction to demand swings.
+//!
+//! Latency is recorded from [`ClassifyResponse::latency_us`] — the
+//! server-side request sojourn (queueing + batching + execution) —
+//! into a client-owned [`LatencyHistogram`], so a lagging collector
+//! thread can never inflate the percentiles.
+
+use super::request::ClassifyResponse;
+use super::server::Coordinator;
+use crate::dataset::N_FEATURES;
+use crate::util::rng::Pcg32;
+use crate::util::stats::LatencyHistogram;
+use crate::util::threadpool::Channel;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Reply collectors draining open-loop responses off the arrival clock.
+const COLLECTORS: usize = 4;
+
+/// Traffic shape.
+#[derive(Debug, Clone)]
+pub enum LoadMode {
+    /// Poisson arrivals at a fixed offered rate (requests/second).
+    Open { rate_rps: f64 },
+    /// Closed loop: this many clients, one outstanding request each.
+    Closed { concurrency: usize },
+    /// Open-loop arrivals alternating `high_rps`/`low_rps` each
+    /// `period`.
+    Burst {
+        high_rps: f64,
+        low_rps: f64,
+        period: Duration,
+    },
+}
+
+impl std::fmt::Display for LoadMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadMode::Open { rate_rps } => write!(f, "open:{rate_rps}rps"),
+            LoadMode::Closed { concurrency } => write!(f, "closed:{concurrency}"),
+            LoadMode::Burst {
+                high_rps,
+                low_rps,
+                period,
+            } => write!(f, "burst:{high_rps}/{low_rps}rps/{}ms", period.as_millis()),
+        }
+    }
+}
+
+/// One load run.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    pub mode: LoadMode,
+    /// Total requests to offer.
+    pub requests: usize,
+    /// Seed for the arrival process.
+    pub seed: u64,
+}
+
+/// Client-side view of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Traffic-shape label (`LoadMode`'s `Display`).
+    pub mode: String,
+    pub wall_s: f64,
+    /// Requests offered (submission attempts).
+    pub sent: u64,
+    /// Requests answered with a classification.
+    pub answered: u64,
+    /// Explicit backpressure rejections observed by the client.
+    pub rejected: u64,
+    /// Requests whose reply channel closed without an answer (failed
+    /// batch or shutdown race).
+    pub errors: u64,
+    /// Offered load actually achieved, `sent / wall_s`.
+    pub offered_rps: f64,
+    /// Goodput, `answered / wall_s`.
+    pub throughput_rps: f64,
+    /// Server-side sojourn latency of answered requests.
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    /// Peak intake depth / admitted-unanswered count sampled at
+    /// submission times (a bounded-queue witness, not an exact max).
+    pub max_queue_depth: usize,
+    pub max_inflight: usize,
+}
+
+/// Drive one load run against a live coordinator, cycling through
+/// `inputs`.  Blocks until every offered request is resolved.
+pub fn run_load(coord: &Coordinator, inputs: &[[u8; N_FEATURES]], spec: &LoadSpec) -> LoadReport {
+    assert!(!inputs.is_empty(), "loadgen needs at least one input");
+    match spec.mode {
+        LoadMode::Closed { concurrency } => run_closed(coord, inputs, spec, concurrency),
+        LoadMode::Open { rate_rps } => run_open(coord, inputs, spec, move |_| rate_rps),
+        LoadMode::Burst {
+            high_rps,
+            low_rps,
+            period,
+        } => run_open(coord, inputs, spec, move |at: Duration| {
+            let phase = (at.as_secs_f64() / period.as_secs_f64().max(1e-9)) as u64;
+            if phase % 2 == 0 {
+                high_rps
+            } else {
+                low_rps
+            }
+        }),
+    }
+}
+
+fn run_closed(
+    coord: &Coordinator,
+    inputs: &[[u8; N_FEATURES]],
+    spec: &LoadSpec,
+    concurrency: usize,
+) -> LoadReport {
+    let hist = Mutex::new(LatencyHistogram::new());
+    let answered = AtomicU64::new(0);
+    let errors = AtomicU64::new(0);
+    let next = AtomicUsize::new(0);
+    let max_depth = AtomicUsize::new(0);
+    let max_inflight = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..concurrency.max(1) {
+            s.spawn(|| {
+                let mut local = LatencyHistogram::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= spec.requests {
+                        break;
+                    }
+                    match coord.classify(inputs[i % inputs.len()]) {
+                        Some(resp) => {
+                            local.record_us(resp.latency_us.max(1));
+                            answered.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    max_depth.fetch_max(coord.queue_depth(), Ordering::Relaxed);
+                    max_inflight.fetch_max(coord.inflight(), Ordering::Relaxed);
+                }
+                hist.lock().unwrap().merge(&local);
+            });
+        }
+    });
+    finish(
+        spec.mode.to_string(),
+        t0.elapsed().as_secs_f64(),
+        spec.requests as u64,
+        answered.into_inner(),
+        0,
+        errors.into_inner(),
+        hist.into_inner().unwrap(),
+        max_depth.into_inner(),
+        max_inflight.into_inner(),
+    )
+}
+
+fn run_open(
+    coord: &Coordinator,
+    inputs: &[[u8; N_FEATURES]],
+    spec: &LoadSpec,
+    rate_at: impl Fn(Duration) -> f64,
+) -> LoadReport {
+    let hist = Mutex::new(LatencyHistogram::new());
+    let answered = AtomicU64::new(0);
+    let errors = AtomicU64::new(0);
+    // open-loop arrivals must not wait on responses: admitted replies
+    // are handed to collector threads and drained off the arrival clock
+    let jobs: Channel<Channel<ClassifyResponse>> = Channel::new(0);
+    let mut rng = Pcg32::new(spec.seed);
+    let mut rejected = 0u64;
+    let mut max_depth = 0usize;
+    let mut max_inflight = 0usize;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..COLLECTORS {
+            let jobs = jobs.clone();
+            let hist = &hist;
+            let answered = &answered;
+            let errors = &errors;
+            s.spawn(move || {
+                let mut local = LatencyHistogram::new();
+                while let Some(reply) = jobs.recv() {
+                    match reply.recv() {
+                        Some(resp) => {
+                            local.record_us(resp.latency_us.max(1));
+                            answered.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                hist.lock().unwrap().merge(&local);
+            });
+        }
+        // Poisson arrival clock on this thread
+        let mut next_at = Duration::ZERO;
+        for i in 0..spec.requests {
+            let elapsed = t0.elapsed();
+            if next_at > elapsed {
+                std::thread::sleep(next_at - elapsed);
+            }
+            let rate = rate_at(next_at).max(1e-3);
+            next_at += Duration::from_secs_f64(rng.exponential(rate));
+            match coord.try_submit(inputs[i % inputs.len()]) {
+                Some(reply) => {
+                    let _ = jobs.send(reply);
+                }
+                None => rejected += 1,
+            }
+            max_depth = max_depth.max(coord.queue_depth());
+            max_inflight = max_inflight.max(coord.inflight());
+        }
+        jobs.close();
+    });
+    finish(
+        spec.mode.to_string(),
+        t0.elapsed().as_secs_f64(),
+        spec.requests as u64,
+        answered.into_inner(),
+        rejected,
+        errors.into_inner(),
+        hist.into_inner().unwrap(),
+        max_depth,
+        max_inflight,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish(
+    mode: String,
+    wall_s: f64,
+    sent: u64,
+    answered: u64,
+    rejected: u64,
+    errors: u64,
+    hist: LatencyHistogram,
+    max_queue_depth: usize,
+    max_inflight: usize,
+) -> LoadReport {
+    let wall = wall_s.max(1e-9);
+    LoadReport {
+        mode,
+        wall_s,
+        sent,
+        answered,
+        rejected,
+        errors,
+        offered_rps: sent as f64 / wall,
+        throughput_rps: answered as f64 / wall,
+        mean_us: hist.mean_us(),
+        p50_us: hist.percentile_us(50.0),
+        p95_us: hist.percentile_us(95.0),
+        p99_us: hist.percentile_us(99.0),
+        max_queue_depth,
+        max_inflight,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amul::Config;
+    use crate::coordinator::governor::{AccuracyTable, Governor, Policy};
+    use crate::coordinator::server::{Backend, CoordinatorConfig, NativeBackend};
+    use crate::power::{MultiplierEnergyProfile, PowerModel};
+    use crate::weights::QuantWeights;
+    use std::sync::Arc;
+
+    fn start(cfg: CoordinatorConfig) -> Coordinator {
+        let mut rng = Pcg32::new(51);
+        let mut gen = |n: usize| -> Vec<u8> {
+            (0..n).map(|_| rng.below(128) as u8).collect()
+        };
+        let backend = Arc::new(NativeBackend {
+            network: crate::datapath::Network::new(QuantWeights::two_layer(
+                gen(62 * 30),
+                gen(30),
+                gen(30 * 10),
+                gen(10),
+            )),
+        });
+        let pm =
+            PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(500, 3)).unwrap();
+        let acc = AccuracyTable::new(vec![0.9; crate::amul::N_CONFIGS]);
+        let gov = Governor::new(Policy::Fixed(Config::ACCURATE), &pm, &acc);
+        Coordinator::start(cfg, backend as Arc<dyn Backend>, gov, pm)
+    }
+
+    fn inputs(n: usize) -> Vec<[u8; N_FEATURES]> {
+        let mut rng = Pcg32::new(7);
+        (0..n)
+            .map(|_| {
+                let mut x = [0u8; N_FEATURES];
+                for v in x.iter_mut() {
+                    *v = rng.below(128) as u8;
+                }
+                x
+            })
+            .collect()
+    }
+
+    #[test]
+    fn closed_loop_answers_every_request() {
+        let coord = start(CoordinatorConfig::default());
+        let xs = inputs(16);
+        let spec = LoadSpec {
+            mode: LoadMode::Closed { concurrency: 4 },
+            requests: 200,
+            seed: 1,
+        };
+        let r = run_load(&coord, &xs, &spec);
+        assert_eq!(r.sent, 200);
+        assert_eq!(r.answered, 200);
+        assert_eq!(r.rejected + r.errors, 0);
+        assert!(r.throughput_rps > 0.0);
+        assert!(r.p50_us >= 1 && r.p50_us <= r.p99_us);
+        let m = coord.shutdown();
+        assert_eq!(m.requests, 200);
+    }
+
+    #[test]
+    fn open_loop_overload_counts_rejections_and_stays_bounded() {
+        // a tiny budget under a fast open-loop burst must fast-reject,
+        // answer everything it admitted, and never exceed the budget
+        let coord = start(CoordinatorConfig {
+            max_batch: 2,
+            queue_capacity: 4,
+            workers: 1,
+            shards: 1,
+            inflight_budget: 6,
+            ..CoordinatorConfig::default()
+        });
+        let xs = inputs(8);
+        let spec = LoadSpec {
+            mode: LoadMode::Open {
+                rate_rps: 2_000_000.0, // far beyond capacity on purpose
+            },
+            requests: 500,
+            seed: 2,
+        };
+        let r = run_load(&coord, &xs, &spec);
+        assert_eq!(r.sent, 500);
+        assert_eq!(r.answered + r.rejected + r.errors, 500);
+        assert!(r.max_inflight <= coord.inflight_budget(), "budget is a hard bound");
+        let m = coord.shutdown();
+        assert_eq!(m.requests, r.answered, "every admitted request was served");
+        assert_eq!(m.rejected, r.rejected, "server and client agree on rejections");
+    }
+
+    #[test]
+    fn burst_mode_alternates_and_completes() {
+        let coord = start(CoordinatorConfig::default());
+        let xs = inputs(8);
+        let spec = LoadSpec {
+            mode: LoadMode::Burst {
+                high_rps: 20_000.0,
+                low_rps: 2_000.0,
+                period: Duration::from_millis(5),
+            },
+            requests: 300,
+            seed: 3,
+        };
+        let r = run_load(&coord, &xs, &spec);
+        assert_eq!(r.sent, 300);
+        assert_eq!(r.answered + r.rejected + r.errors, 300);
+        assert!(r.mode.starts_with("burst:"));
+        let m = coord.shutdown();
+        assert_eq!(m.requests + m.rejected, 300);
+    }
+}

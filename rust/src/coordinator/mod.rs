@@ -10,12 +10,20 @@
 //!   *schedule* (uniform, or per-layer since the topology-parametric
 //!   refactor), re-evaluated as conditions change (the DVFS-style
 //!   control loop).
-//! * [`server`] — the request router/batcher: classification requests
-//!   arrive on a bounded queue (backpressure), a batcher groups them
-//!   under a latency deadline, worker threads execute batches on a
-//!   pluggable [`server::Backend`] (PJRT AOT executable, native
+//! * [`server`] — the request router/batcher: submissions pass admission
+//!   control (inflight budget, fast `Busy` reject) into a bounded queue
+//!   (backpressure), an adaptive batching window groups them under a
+//!   size-target-or-deadline close rule, worker threads execute windows
+//!   on a pluggable [`server::Backend`] (PJRT AOT executable, native
 //!   functional model, or the cycle-accurate simulator), and the
-//!   governor's current schedule is applied per batch.
+//!   governor's current schedule is applied — and fed back — per window.
+//! * [`intake`] — the non-blocking TCP front-end: a hand-rolled poll
+//!   loop over non-blocking sockets translating framed requests into
+//!   coordinator submissions, surfacing backpressure as an explicit
+//!   retry status on the wire.
+//! * [`loadgen`] — the open-loop / closed-loop / bursty load harness
+//!   behind `ecmac loadgen`, producing throughput/latency/energy curves
+//!   per governor policy.
 //! * [`request`] — request/response types and the metrics the governor
 //!   feeds on (latency histograms, per-config energy accounting).
 //! * [`sensitivity`] — the per-layer accuracy sweep harness and the
@@ -26,12 +34,18 @@
 
 pub mod frontier;
 pub mod governor;
+pub mod intake;
+pub mod loadgen;
 pub mod request;
 pub mod sensitivity;
 pub mod server;
 
 pub use frontier::{SchedulePoint, ScheduleFrontier};
 pub use governor::{Governor, Policy};
+pub use intake::TcpIntake;
+pub use loadgen::{LoadMode, LoadReport, LoadSpec};
 pub use request::{ClassifyRequest, ClassifyResponse, MetricsSnapshot};
 pub use sensitivity::{SensitivityModel, SweepProgress};
-pub use server::{Backend, Coordinator, CoordinatorConfig, NativeBackend, PjrtBackend};
+pub use server::{
+    Backend, Coordinator, CoordinatorConfig, NativeBackend, PjrtBackend, SubmitOutcome,
+};

@@ -30,14 +30,22 @@ pub struct ClassifyResponse {
     pub batch_size: usize,
 }
 
+/// Batch sizes above this land in the distribution's last slot.
+pub const MAX_TRACKED_BATCH: usize = 128;
+
 /// Aggregated serving metrics.
+///
+/// Each worker thread owns one `Metrics` shard (no shared lock on the
+/// batch hot path); [`Metrics::merge`] folds the shards into one view
+/// at snapshot time.  Intake-side counters (rejections, window-close
+/// reasons) live in the coordinator's lock-free shared state and are
+/// stamped onto the [`MetricsSnapshot`] by the coordinator.
 #[derive(Debug, Clone)]
 pub struct Metrics {
     pub latency: LatencyHistogram,
     pub batch_latency: LatencyHistogram,
     pub requests: u64,
     pub batches: u64,
-    pub rejected: u64,
     /// Logical batches the backend failed to serve (execution error or
     /// a result-length mismatch); their requests saw channel closure.
     pub backend_errors: u64,
@@ -48,6 +56,9 @@ pub struct Metrics {
     /// Modeled accelerator energy consumed, mJ.
     pub energy_mj: f64,
     pub batch_size_sum: u64,
+    /// Exact per-window batch-size counts: `batch_sizes[n]` windows
+    /// closed at size `n` (sizes above [`MAX_TRACKED_BATCH`] clamp).
+    pub batch_sizes: Vec<u64>,
 }
 
 impl Default for Metrics {
@@ -57,14 +68,30 @@ impl Default for Metrics {
             batch_latency: LatencyHistogram::new(),
             requests: 0,
             batches: 0,
-            rejected: 0,
             backend_errors: 0,
             per_cfg: vec![0; crate::amul::N_CONFIGS],
             mixed: 0,
             energy_mj: 0.0,
             batch_size_sum: 0,
+            batch_sizes: vec![0; MAX_TRACKED_BATCH + 1],
         }
     }
+}
+
+/// Exact percentile over a size-indexed count vector.
+fn size_percentile(counts: &[u64], total: u64, p: f64) -> usize {
+    if total == 0 {
+        return 0;
+    }
+    let target = (p / 100.0 * total as f64).ceil().max(1.0) as u64;
+    let mut seen = 0u64;
+    for (size, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return size;
+        }
+    }
+    counts.len() - 1
 }
 
 /// A point-in-time copy handed to callers.
@@ -72,32 +99,87 @@ impl Default for Metrics {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
+    /// Failed submissions: inflight budget exhausted, queue full, or
+    /// closed intake.  Counted by the coordinator's admission control.
     pub rejected: u64,
     pub backend_errors: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: u64,
+    pub p95_latency_us: u64,
     pub p99_latency_us: u64,
+    pub max_latency_us: u64,
     pub mean_batch_size: f64,
+    /// Median / tail of the per-window batch-size distribution (exact).
+    pub batch_size_p50: usize,
+    pub batch_size_p95: usize,
+    /// Non-zero (size, windows) pairs of the batch-size distribution.
+    pub batch_size_dist: Vec<(usize, u64)>,
+    /// Windows closed by reaching the size target vs by the deadline.
+    pub windows_full: u64,
+    pub windows_deadline: u64,
+    /// The adaptive controller's window-size target at snapshot time.
+    pub batch_target: usize,
+    /// Instantaneous intake depth / admitted-unanswered count.
+    pub queue_depth: usize,
+    pub inflight: usize,
     pub per_cfg: Vec<u64>,
     pub mixed: u64,
     pub energy_mj: f64,
 }
 
 impl Metrics {
+    /// Fold `other` into `self` (shard merge at snapshot time).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latency.merge(&other.latency);
+        self.batch_latency.merge(&other.batch_latency);
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.backend_errors += other.backend_errors;
+        for (a, b) in self.per_cfg.iter_mut().zip(&other.per_cfg) {
+            *a += b;
+        }
+        self.mixed += other.mixed;
+        self.energy_mj += other.energy_mj;
+        self.batch_size_sum += other.batch_size_sum;
+        for (a, b) in self.batch_sizes.iter_mut().zip(&other.batch_sizes) {
+            *a += b;
+        }
+    }
+
+    /// Snapshot the worker-side counters.  Intake-side fields
+    /// (`rejected`, window counters, queue depth, inflight, target)
+    /// default to zero here; the coordinator stamps them from its
+    /// shared state.
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests: self.requests,
             batches: self.batches,
-            rejected: self.rejected,
+            rejected: 0,
             backend_errors: self.backend_errors,
             mean_latency_us: self.latency.mean_us(),
             p50_latency_us: self.latency.percentile_us(50.0),
+            p95_latency_us: self.latency.percentile_us(95.0),
             p99_latency_us: self.latency.percentile_us(99.0),
+            max_latency_us: self.latency.max_us(),
             mean_batch_size: if self.batches == 0 {
                 0.0
             } else {
                 self.batch_size_sum as f64 / self.batches as f64
             },
+            batch_size_p50: size_percentile(&self.batch_sizes, self.batches, 50.0),
+            batch_size_p95: size_percentile(&self.batch_sizes, self.batches, 95.0),
+            batch_size_dist: self
+                .batch_sizes
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(s, &c)| (s, c))
+                .collect(),
+            windows_full: 0,
+            windows_deadline: 0,
+            batch_target: 0,
+            queue_depth: 0,
+            inflight: 0,
             per_cfg: self.per_cfg.clone(),
             mixed: self.mixed,
             energy_mj: self.energy_mj,
@@ -122,5 +204,58 @@ mod tests {
         assert_eq!(s.mixed, 0);
         assert!((s.mean_batch_size - 2.5).abs() < 1e-9);
         assert!((s.mean_latency_us - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_size_distribution_is_exact() {
+        let mut m = Metrics::default();
+        // 3 windows of size 1, 1 window of size 8
+        m.batch_sizes[1] = 3;
+        m.batch_sizes[8] = 1;
+        m.batches = 4;
+        m.batch_size_sum = 11;
+        let s = m.snapshot();
+        assert_eq!(s.batch_size_p50, 1);
+        assert_eq!(s.batch_size_p95, 8);
+        assert_eq!(s.batch_size_dist, vec![(1, 3), (8, 1)]);
+    }
+
+    #[test]
+    fn merge_folds_shards() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.requests = 4;
+        a.batches = 2;
+        a.per_cfg[3] = 4;
+        a.batch_sizes[2] = 2;
+        a.energy_mj = 0.5;
+        a.latency.record_us(100);
+        b.requests = 6;
+        b.batches = 1;
+        b.per_cfg[3] = 2;
+        b.mixed = 4;
+        b.batch_sizes[6] = 1;
+        b.energy_mj = 0.25;
+        b.latency.record_us(300);
+        a.merge(&b);
+        let s = a.snapshot();
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.per_cfg[3], 6);
+        assert_eq!(s.mixed, 4);
+        assert!((s.energy_mj - 0.75).abs() < 1e-12);
+        assert!((s.mean_latency_us - 200.0).abs() < 1e-9);
+        assert_eq!(s.batch_size_dist, vec![(2, 2), (6, 1)]);
+    }
+
+    #[test]
+    fn oversize_batches_clamp_into_the_last_slot() {
+        let mut m = Metrics::default();
+        m.batch_sizes[MAX_TRACKED_BATCH] = 1;
+        m.batches = 1;
+        m.batch_size_sum = 4096;
+        let s = m.snapshot();
+        assert_eq!(s.batch_size_p50, MAX_TRACKED_BATCH);
+        assert!((s.mean_batch_size - 4096.0).abs() < 1e-9);
     }
 }

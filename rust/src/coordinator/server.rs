@@ -4,27 +4,45 @@
 //! Architecture (vLLM-router-like, scaled to this accelerator):
 //!
 //! ```text
-//!  submit() ──> bounded queue ──> batcher thread ──> batch queue ──> workers
-//!                (backpressure)    (deadline-based     (channel)      │
-//!                                   grouping)                         ▼
-//!                                                   governor ──> backend.execute(batch, sched)
-//!                                                      ▲              │
-//!                                                      └── energy ────┘ (feedback)
+//!  submit() ──> admission control ──> bounded queue ──> batcher ──> batch queue ──> workers
+//!               (inflight budget,      (backpressure)   (adaptive                    │
+//!                fast Busy reject)                       window)                     ▼
+//!                                                     governor ──> backend.execute(batch, sched)
+//!                                                        ▲              │
+//!                                                        └── energy ────┘ (feedback per window)
 //! ```
 //!
-//! The governor picks the configuration *schedule* per batch (uniform or
-//! per-layer); the energy model charges each batch layer-by-layer and
-//! feeds consumption back, closing the paper's dynamic-power-control
-//! loop.
+//! **Admission control.** Every submission first claims a slot in the
+//! *inflight budget* (admitted-but-unanswered requests).  Over budget —
+//! or with the queue full — the caller gets an explicit
+//! [`SubmitOutcome::Busy`] immediately instead of silent queue growth;
+//! a closed intake returns [`SubmitOutcome::Closed`].  Both are counted
+//! as rejections.
+//!
+//! **Adaptive batching window.** The batcher closes each window on
+//! whichever comes first: the controller's *size target* or the
+//! `max_wait` *deadline*.  The target itself is steered AIMD-style
+//! against the latency objective: it doubles (slow start) then grows by
+//! one while demand fills windows and the request-sojourn EWMA stays
+//! under `latency_slo_us`, and halves when the objective is breached —
+//! trading p99 latency against the interleaved-batch cycle win.  The
+//! governor sees one feedback call per window, never per request.
+//!
+//! **Metrics.** Each worker owns a private [`Metrics`] shard (one mutex
+//! acquisition per window, zero cross-worker contention); shards merge
+//! at snapshot time, and intake-side counters (rejections, window-close
+//! reasons, the live target) are lock-free atomics.
 
 use super::governor::Governor;
-use super::request::{ClassifyRequest, ClassifyResponse, Metrics, MetricsSnapshot};
+use super::request::{
+    ClassifyRequest, ClassifyResponse, Metrics, MetricsSnapshot, MAX_TRACKED_BATCH,
+};
 use crate::amul::{Config, ConfigSchedule};
 use crate::dataset::N_FEATURES;
 use crate::power::PowerModel;
-use crate::util::threadpool::{Channel, ThreadPool};
+use crate::util::threadpool::{Channel, SendError, ThreadPool};
 use crate::weights::Topology;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -201,9 +219,11 @@ impl Backend for PjrtBackend {
 /// Coordinator tuning knobs.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Maximum batch size handed to the backend.
+    /// Maximum batch size handed to the backend (the adaptive window's
+    /// target ceiling).
     pub max_batch: usize,
-    /// Maximum time the batcher waits to fill a batch.
+    /// Maximum time the batcher waits to fill a window — the deadline
+    /// half of the window-close rule.
     pub max_wait: Duration,
     /// Bounded request-queue capacity (backpressure).
     pub queue_capacity: usize,
@@ -215,6 +235,17 @@ pub struct CoordinatorConfig {
     /// shard results fold back into a single metrics + governor
     /// feedback per logical batch either way.
     pub shards: usize,
+    /// Adaptive batching window: steer the window-size target between 1
+    /// and `max_batch` against `latency_slo_us`.  `false` pins the
+    /// target at `max_batch` (the pre-adaptive fixed behavior).
+    pub adaptive: bool,
+    /// Latency objective (µs request sojourn) the adaptive controller
+    /// steers to; breaching it halves the window-size target.
+    pub latency_slo_us: u64,
+    /// Admitted-but-unanswered request budget for admission control;
+    /// `0` derives `queue_capacity + workers * max_batch` (the bound
+    /// the pre-adaptive pipeline implied).
+    pub inflight_budget: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -225,6 +256,89 @@ impl Default for CoordinatorConfig {
             queue_capacity: 1024,
             workers: 2,
             shards: 2,
+            adaptive: true,
+            latency_slo_us: 5_000,
+            inflight_budget: 0,
+        }
+    }
+}
+
+/// AIMD window-size controller (TCP-flavored): exponential growth while
+/// in slow start, additive afterwards, multiplicative decrease on an
+/// SLO breach.  Growth needs *demand* — a window that filled to its
+/// target with more requests already queued — so an idle or serial
+/// caller converges to single-request windows and never waits out the
+/// deadline for traffic that is not coming.
+struct WindowController {
+    target: usize,
+    max_batch: usize,
+    slo_us: u64,
+    slow_start: bool,
+    adaptive: bool,
+}
+
+impl WindowController {
+    fn new(cfg: &CoordinatorConfig) -> WindowController {
+        let max_batch = cfg.max_batch.max(1);
+        WindowController {
+            target: if cfg.adaptive { 1 } else { max_batch },
+            max_batch,
+            slo_us: cfg.latency_slo_us.max(1),
+            slow_start: true,
+            adaptive: cfg.adaptive,
+        }
+    }
+
+    fn target(&self) -> usize {
+        self.target
+    }
+
+    /// Steer after one window: `closed_full` — the window reached its
+    /// size target before the deadline; `backlog` — requests were still
+    /// queued at close; `ewma_us` — the workers' request-sojourn EWMA.
+    fn after_window(&mut self, closed_full: bool, backlog: bool, ewma_us: u64) {
+        if !self.adaptive {
+            return;
+        }
+        if ewma_us > self.slo_us {
+            self.slow_start = false;
+            self.target = (self.target / 2).max(1);
+        } else if closed_full && backlog {
+            self.target = if self.slow_start {
+                self.target * 2
+            } else {
+                self.target + 1
+            }
+            .min(self.max_batch);
+        }
+    }
+}
+
+/// Lock-free state shared between intake, batcher and workers.
+struct Shared {
+    /// Admitted-but-unanswered requests (the admission-control budget).
+    inflight: AtomicUsize,
+    /// Failed submissions: budget exhausted, queue full, or closed.
+    rejected: AtomicU64,
+    /// Windows closed by reaching the size target vs by the deadline.
+    windows_full: AtomicU64,
+    windows_deadline: AtomicU64,
+    /// Request-sojourn EWMA (µs), written by workers after each window,
+    /// read by the batcher's controller.
+    latency_ewma_us: AtomicU64,
+    /// The controller's live window-size target (observability).
+    batch_target: AtomicUsize,
+}
+
+impl Shared {
+    fn new() -> Shared {
+        Shared {
+            inflight: AtomicUsize::new(0),
+            rejected: AtomicU64::new(0),
+            windows_full: AtomicU64::new(0),
+            windows_deadline: AtomicU64::new(0),
+            latency_ewma_us: AtomicU64::new(0),
+            batch_target: AtomicUsize::new(1),
         }
     }
 }
@@ -233,11 +347,38 @@ struct Batch {
     requests: Vec<ClassifyRequest>,
 }
 
+/// Outcome of a non-blocking [`Coordinator::submit`].
+pub enum SubmitOutcome {
+    /// Admitted; await the response on the reply channel.
+    Admitted(Channel<ClassifyResponse>),
+    /// Explicit backpressure: the inflight budget or the queue is full.
+    /// Retry after responses drain; counted as a rejection.
+    Busy,
+    /// The intake is closed (graceful shutdown); counted as a rejection.
+    Closed,
+}
+
+/// Everything one executor worker needs; grouping it keeps the
+/// per-window call as one argument instead of eight.
+struct WorkerCtx {
+    backend: Arc<dyn Backend>,
+    pool: Option<Arc<ThreadPool>>,
+    shards: usize,
+    /// This worker's private metrics shard.
+    metrics: Arc<Vec<Mutex<Metrics>>>,
+    slot: usize,
+    governor: Arc<Mutex<Governor>>,
+    power: PowerModel,
+    shared: Arc<Shared>,
+}
+
 /// The running coordinator.
 pub struct Coordinator {
     queue: Channel<ClassifyRequest>,
-    metrics: Arc<Mutex<Metrics>>,
+    metrics: Arc<Vec<Mutex<Metrics>>>,
     governor: Arc<Mutex<Governor>>,
+    shared: Arc<Shared>,
+    inflight_budget: usize,
     next_id: AtomicU64,
     threads: Vec<std::thread::JoinHandle<()>>,
     batch_queue: Channel<Batch>,
@@ -282,44 +423,91 @@ impl Coordinator {
                 }
             }
         }
+        let n_workers = cfg.workers.max(1);
+        let inflight_budget = if cfg.inflight_budget == 0 {
+            cfg.queue_capacity + n_workers * cfg.max_batch.max(1)
+        } else {
+            cfg.inflight_budget
+        };
         let queue: Channel<ClassifyRequest> = Channel::new(cfg.queue_capacity);
-        let batch_queue: Channel<Batch> = Channel::new(cfg.workers * 2);
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let batch_queue: Channel<Batch> = Channel::new(n_workers * 2);
+        let metrics: Arc<Vec<Mutex<Metrics>>> =
+            Arc::new((0..n_workers).map(|_| Mutex::new(Metrics::default())).collect());
         let governor = Arc::new(Mutex::new(governor));
+        let shared = Arc::new(Shared::new());
+        let mut controller = WindowController::new(&cfg);
+        shared.batch_target.store(controller.target(), Ordering::Relaxed);
         let mut threads = Vec::new();
 
-        // batcher thread
+        // batcher thread: owns the adaptive window controller
         {
             let queue = queue.clone();
             let batch_queue = batch_queue.clone();
-            let max_batch = cfg.max_batch;
             let max_wait = cfg.max_wait;
+            let shared = Arc::clone(&shared);
             threads.push(
                 std::thread::Builder::new()
                     .name("ecmac-batcher".into())
                     .spawn(move || {
                         loop {
-                            // block for the first request
+                            // block for the window's first request
                             let Some(first) = queue.recv() else {
-                                break; // queue closed
+                                break; // queue closed and drained
                             };
                             let mut requests = vec![first];
+                            let target = controller.target();
                             let deadline = Instant::now() + max_wait;
-                            while requests.len() < max_batch {
+                            let mut deadline_hit = false;
+                            while requests.len() < target {
                                 let now = Instant::now();
                                 if now >= deadline {
+                                    deadline_hit = true;
                                     break;
                                 }
                                 match queue.recv_timeout(deadline - now) {
                                     Ok(Some(r)) => requests.push(r),
-                                    Ok(None) => break, // deadline
-                                    Err(()) => break,  // closed: flush what we have
+                                    Ok(None) => {
+                                        deadline_hit = true;
+                                        break;
+                                    }
+                                    Err(()) => break, // closed: flush what we have
                                 }
                             }
-                            if batch_queue.send(Batch { requests }).is_err() {
+                            let closed_full = !deadline_hit && requests.len() >= target;
+                            if closed_full {
+                                shared.windows_full.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                shared.windows_deadline.fetch_add(1, Ordering::Relaxed);
+                            }
+                            controller.after_window(
+                                closed_full,
+                                !queue.is_empty(),
+                                shared.latency_ewma_us.load(Ordering::Relaxed),
+                            );
+                            shared
+                                .batch_target
+                                .store(controller.target(), Ordering::Relaxed);
+                            if let Err(SendError::Closed(b)) =
+                                batch_queue.send(Batch { requests })
+                            {
+                                // the batch queue only closes after this
+                                // thread exits, so this is unreachable in
+                                // normal operation — but if it ever trips,
+                                // fail the admitted requests loudly
+                                // instead of dropping them silently
+                                shared
+                                    .inflight
+                                    .fetch_sub(b.requests.len(), Ordering::AcqRel);
+                                for req in b.requests {
+                                    req.reply.close();
+                                }
                                 break;
                             }
                         }
+                        // graceful-shutdown drain contract: the intake is
+                        // closed and fully drained into batches at this
+                        // point; closing the batch queue lets the workers
+                        // finish every admitted request, then exit
                         batch_queue.close();
                     })
                     .expect("spawn batcher"),
@@ -331,31 +519,27 @@ impl Coordinator {
         // shards from concurrent workers queue cooperatively.  The
         // workers hold the only references; the pool shuts down with
         // the last exiting worker.
-        let pool = (cfg.shards > 1).then(|| Arc::new(ThreadPool::new(cfg.workers.max(1))));
+        let pool = (cfg.shards > 1).then(|| Arc::new(ThreadPool::new(n_workers)));
 
-        // worker threads
-        for i in 0..cfg.workers.max(1) {
+        // worker threads, each with a private metrics shard
+        for i in 0..n_workers {
             let batch_queue = batch_queue.clone();
-            let backend = Arc::clone(&backend);
-            let metrics = Arc::clone(&metrics);
-            let governor = Arc::clone(&governor);
-            let power = power.clone();
-            let pool = pool.clone();
-            let shards = cfg.shards;
+            let ctx = WorkerCtx {
+                backend: Arc::clone(&backend),
+                pool: pool.clone(),
+                shards: cfg.shards,
+                metrics: Arc::clone(&metrics),
+                slot: i,
+                governor: Arc::clone(&governor),
+                power: power.clone(),
+                shared: Arc::clone(&shared),
+            };
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("ecmac-exec-{i}"))
                     .spawn(move || {
                         while let Some(batch) = batch_queue.recv() {
-                            Self::serve_batch(
-                                batch,
-                                &backend,
-                                pool.as_deref(),
-                                shards,
-                                &metrics,
-                                &governor,
-                                &power,
-                            );
+                            Self::serve_batch(&ctx, batch);
                         }
                     })
                     .expect("spawn worker"),
@@ -366,6 +550,8 @@ impl Coordinator {
             queue,
             metrics,
             governor,
+            shared,
+            inflight_budget,
             next_id: AtomicU64::new(1),
             threads,
             batch_queue,
@@ -389,11 +575,24 @@ impl Coordinator {
     ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
         let n = xs.len();
         let n_shards = shards.clamp(1, n.max(1));
+        // the inline path needs the same panic guard as the shard jobs:
+        // an unwinding backend must fail the batch (closing its reply
+        // channels), not kill the worker thread and strand the queue
+        let guarded = |backend: &Arc<dyn Backend>, xs: &[[u8; N_FEATURES]]| {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| backend.execute(xs, sched)))
+                .unwrap_or_else(|_| {
+                    Err(anyhow::anyhow!(
+                        "backend '{}' panicked on a {}-image batch",
+                        backend.name(),
+                        xs.len()
+                    ))
+                })
+        };
         let Some(pool) = pool else {
-            return backend.execute(xs, sched);
+            return guarded(backend, xs);
         };
         if n_shards <= 1 {
-            return backend.execute(xs, sched);
+            return guarded(backend, xs);
         }
         let chunk = n.div_ceil(n_shards);
         let jobs: Vec<_> = (0..n)
@@ -428,22 +627,15 @@ impl Coordinator {
         Ok(out)
     }
 
-    fn serve_batch(
-        batch: Batch,
-        backend: &Arc<dyn Backend>,
-        pool: Option<&ThreadPool>,
-        shards: usize,
-        metrics: &Mutex<Metrics>,
-        governor: &Mutex<Governor>,
-        power: &PowerModel,
-    ) {
-        let sched = governor.lock().unwrap().current();
+    fn serve_batch(ctx: &WorkerCtx, batch: Batch) {
+        let sched = ctx.governor.lock().unwrap().current();
         // one shared buffer for the whole batch; shards slice into it
         let xs: Arc<Vec<[u8; N_FEATURES]>> =
             Arc::new(batch.requests.iter().map(|r| r.features).collect());
         let n = batch.requests.len();
         let t0 = Instant::now();
-        let results = Self::execute_sharded(backend, pool, shards, &xs, &sched);
+        let results =
+            Self::execute_sharded(&ctx.backend, ctx.pool.as_deref(), ctx.shards, &xs, &sched);
         let exec_us = t0.elapsed().as_micros() as u64;
         // a short/long result would silently truncate the reply zip
         // below and leave requesters hanging on open channels — treat
@@ -452,22 +644,23 @@ impl Coordinator {
             anyhow::ensure!(
                 outs.len() == n,
                 "backend '{}' returned {} outputs for a batch of {n}",
-                backend.name(),
+                ctx.backend.name(),
                 outs.len()
             );
             Ok(outs)
         });
         // modeled accelerator energy for the *interleaved* batch (partial
         // passes shared between images), charged and fed back to the
-        // governor once per logical batch — never per shard, and never
-        // for a failed batch
+        // governor once per logical window — never per shard or request,
+        // and never for a failed batch
         let mut energy_mj = 0.0;
         if results.is_ok() {
-            energy_mj = power.batch_energy_nj(backend.topology(), &sched, n as u64) * 1e-6;
-            governor.lock().unwrap().feedback(n as u64, energy_mj);
+            energy_mj =
+                ctx.power.batch_energy_nj(ctx.backend.topology(), &sched, n as u64) * 1e-6;
+            ctx.governor.lock().unwrap().feedback(n as u64, energy_mj);
         }
-        // per-request latencies, measured before the single metrics
-        // lock below: one acquisition per batch, not one per request
+        // per-request sojourn latencies, measured before the single
+        // metrics lock below: one acquisition per window, not per request
         let latencies: Option<Vec<u64>> = results.is_ok().then(|| {
             batch
                 .requests
@@ -475,10 +668,19 @@ impl Coordinator {
                 .map(|r| (r.enqueued.elapsed().as_micros() as u64).max(1))
                 .collect()
         });
+        if let Some(ls) = &latencies {
+            // feed the window controller's latency signal (integer EWMA,
+            // alpha 1/4; racy read-modify-write is fine for a heuristic)
+            let mean = (ls.iter().sum::<u64>() / ls.len().max(1) as u64).max(1);
+            let prev = ctx.shared.latency_ewma_us.load(Ordering::Relaxed);
+            let next = if prev == 0 { mean } else { (3 * prev + mean) / 4 };
+            ctx.shared.latency_ewma_us.store(next, Ordering::Relaxed);
+        }
         {
-            let mut m = metrics.lock().unwrap();
+            let mut m = ctx.metrics[ctx.slot].lock().unwrap();
             m.batches += 1;
             m.batch_size_sum += n as u64;
+            m.batch_sizes[n.min(MAX_TRACKED_BATCH)] += 1;
             m.batch_latency.record_us(exec_us.max(1));
             // requests counts execution attempts (a failed batch's
             // requesters still saw their submission accepted)
@@ -513,19 +715,29 @@ impl Coordinator {
                 }
             }
             Err(e) => {
-                log::error!("backend {} failed: {e}", backend.name());
+                log::error!("backend {} failed: {e}", ctx.backend.name());
                 // drop the requests' reply channels: receivers see closure
                 for req in batch.requests {
                     req.reply.close();
                 }
             }
         }
+        // the window's requests are answered (or failed loudly): release
+        // their admission-control slots
+        ctx.shared.inflight.fetch_sub(n, Ordering::AcqRel);
     }
 
-    /// Submit a request; returns the reply channel, or `None` if the
-    /// queue is full (backpressure) or closed.  Every failed submission
-    /// — full *or* closed — is counted in [`MetricsSnapshot::rejected`].
-    pub fn try_submit(&self, features: [u8; N_FEATURES]) -> Option<Channel<ClassifyResponse>> {
+    /// Non-blocking submission with explicit backpressure.  Claims an
+    /// inflight-budget slot first (hard bound, fast [`SubmitOutcome::Busy`]
+    /// reject), then attempts the bounded queue.  Rejections of either
+    /// kind are counted in [`MetricsSnapshot::rejected`].
+    pub fn submit(&self, features: [u8; N_FEATURES]) -> SubmitOutcome {
+        let prev = self.shared.inflight.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.inflight_budget {
+            self.shared.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            return SubmitOutcome::Busy;
+        }
         let reply: Channel<ClassifyResponse> = Channel::new(1);
         let req = ClassifyRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -534,15 +746,34 @@ impl Coordinator {
             reply: reply.clone(),
         };
         match self.queue.try_send(req) {
-            Ok(true) => Some(reply),
-            Ok(false) | Err(_) => {
-                self.metrics.lock().unwrap().rejected += 1;
-                None
+            Ok(true) => SubmitOutcome::Admitted(reply),
+            Ok(false) => {
+                self.shared.inflight.fetch_sub(1, Ordering::AcqRel);
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                SubmitOutcome::Busy
+            }
+            Err(_) => {
+                self.shared.inflight.fetch_sub(1, Ordering::AcqRel);
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                SubmitOutcome::Closed
             }
         }
     }
 
-    /// Blocking submit + wait.  A submission into a closed intake is
+    /// Submit a request; returns the reply channel, or `None` if the
+    /// coordinator is over budget, full, or closed.  Every failed
+    /// submission is counted in [`MetricsSnapshot::rejected`].
+    pub fn try_submit(&self, features: [u8; N_FEATURES]) -> Option<Channel<ClassifyResponse>> {
+        match self.submit(features) {
+            SubmitOutcome::Admitted(reply) => Some(reply),
+            SubmitOutcome::Busy | SubmitOutcome::Closed => None,
+        }
+    }
+
+    /// Blocking submit + wait (the in-process closed-loop path).  Blocks
+    /// on queue backpressure instead of rejecting, so it bypasses the
+    /// inflight budget's fast reject — the bounded queue is its
+    /// admission control.  A submission into a closed intake is
     /// rejected (and counted) like any other failed submission.
     pub fn classify(&self, features: [u8; N_FEATURES]) -> Option<ClassifyResponse> {
         let reply: Channel<ClassifyResponse> = Channel::new(1);
@@ -552,22 +783,60 @@ impl Coordinator {
             enqueued: Instant::now(),
             reply: reply.clone(),
         };
+        self.shared.inflight.fetch_add(1, Ordering::AcqRel);
         if self.queue.send(req).is_err() {
-            self.metrics.lock().unwrap().rejected += 1;
+            self.shared.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
             return None;
         }
         reply.recv()
     }
 
     /// Stop accepting new requests (the graceful-shutdown first phase);
-    /// already-queued requests still drain through the workers.
-    /// Subsequent submissions are rejected and counted.
+    /// already-admitted requests still drain through the batcher and
+    /// workers.  Subsequent submissions are rejected and counted.
     pub fn close_intake(&self) {
         self.queue.close();
     }
 
+    /// Requests currently queued at the intake (instantaneous).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admitted-but-unanswered requests (instantaneous).
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight.load(Ordering::Relaxed)
+    }
+
+    /// The resolved admission-control budget.
+    pub fn inflight_budget(&self) -> usize {
+        self.inflight_budget
+    }
+
+    fn merged_metrics(&self) -> Metrics {
+        let mut all = Metrics::default();
+        for shard in self.metrics.iter() {
+            all.merge(&shard.lock().unwrap());
+        }
+        all
+    }
+
+    fn stamp_shared(&self, s: &mut MetricsSnapshot) {
+        s.rejected = self.shared.rejected.load(Ordering::Relaxed);
+        s.windows_full = self.shared.windows_full.load(Ordering::Relaxed);
+        s.windows_deadline = self.shared.windows_deadline.load(Ordering::Relaxed);
+        s.batch_target = self.shared.batch_target.load(Ordering::Relaxed);
+        s.queue_depth = self.queue.len();
+        s.inflight = self.shared.inflight.load(Ordering::Relaxed);
+    }
+
+    /// Merged snapshot: per-worker shards folded together, intake-side
+    /// counters stamped on top.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.lock().unwrap().snapshot()
+        let mut s = self.merged_metrics().snapshot();
+        self.stamp_shared(&mut s);
+        s
     }
 
     /// Current governor schedule.
@@ -580,15 +849,19 @@ impl Coordinator {
         self.governor.lock().unwrap().decisions.clone()
     }
 
-    /// Drain and stop. Pending requests are flushed first.
+    /// Drain and stop.  Admitted requests are flushed first: closing the
+    /// intake lets the batcher drain the queue into windows, the batcher
+    /// then closes the batch queue, and the workers serve every
+    /// remaining window before exiting — no admitted request is dropped.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.queue.close();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
         self.batch_queue.close();
-        let snap = self.metrics.lock().unwrap().snapshot();
-        snap
+        let mut s = self.merged_metrics().snapshot();
+        self.stamp_shared(&mut s);
+        s
     }
 }
 
@@ -597,6 +870,7 @@ mod tests {
     use super::*;
     use crate::coordinator::governor::{AccuracyTable, Policy};
     use crate::power::{MultiplierEnergyProfile, PowerModel};
+    use crate::testkit::doubles::{PanickingBackend, SlowBackend, TruncatingBackend};
     use crate::util::rng::Pcg32;
     use crate::weights::QuantWeights;
 
@@ -641,6 +915,50 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_controller_slow_starts_then_aimd() {
+        let cfg = CoordinatorConfig {
+            max_batch: 16,
+            latency_slo_us: 1000,
+            ..CoordinatorConfig::default()
+        };
+        let mut c = WindowController::new(&cfg);
+        assert_eq!(c.target(), 1, "adaptive windows start at one request");
+        c.after_window(true, true, 100); // demand + under SLO: double
+        assert_eq!(c.target(), 2);
+        c.after_window(true, true, 100);
+        assert_eq!(c.target(), 4);
+        c.after_window(false, true, 100); // deadline close: hold
+        assert_eq!(c.target(), 4);
+        c.after_window(true, false, 100); // no backlog: hold
+        assert_eq!(c.target(), 4);
+        c.after_window(true, true, 5_000); // SLO breach: halve
+        assert_eq!(c.target(), 2);
+        c.after_window(true, true, 100); // additive after the breach
+        assert_eq!(c.target(), 3);
+        for _ in 0..100 {
+            c.after_window(true, true, 100);
+        }
+        assert_eq!(c.target(), 16, "growth caps at max_batch");
+        for _ in 0..100 {
+            c.after_window(true, true, 1_000_000);
+        }
+        assert_eq!(c.target(), 1, "decrease floors at one");
+    }
+
+    #[test]
+    fn pinned_controller_keeps_max_batch() {
+        let cfg = CoordinatorConfig {
+            max_batch: 8,
+            adaptive: false,
+            ..CoordinatorConfig::default()
+        };
+        let mut c = WindowController::new(&cfg);
+        assert_eq!(c.target(), 8);
+        c.after_window(true, true, 1_000_000);
+        assert_eq!(c.target(), 8, "adaptive=false pins the target");
+    }
+
+    #[test]
     fn serves_requests_and_matches_functional() {
         let (coord, backend) = start(
             Policy::Fixed(Config::new(5).unwrap()),
@@ -663,6 +981,13 @@ mod tests {
         assert_eq!(m.requests, 40);
         assert!(m.batches >= 1);
         assert!(m.energy_mj > 0.0);
+        assert_eq!(
+            m.windows_full + m.windows_deadline,
+            m.batches,
+            "every window closes for exactly one counted reason"
+        );
+        assert!(m.p50_latency_us <= m.p95_latency_us);
+        assert!(m.p95_latency_us <= m.p99_latency_us);
     }
 
     #[test]
@@ -740,6 +1065,7 @@ mod tests {
                 queue_capacity: 256,
                 workers: 1,
                 shards: 2,
+                ..CoordinatorConfig::default()
             },
         );
         // submit a burst, then collect
@@ -758,6 +1084,9 @@ mod tests {
             "burst should batch: mean {}",
             m.mean_batch_size
         );
+        assert_eq!(m.windows_full + m.windows_deadline, m.batches);
+        let dist_total: u64 = m.batch_size_dist.iter().map(|&(_, c)| c).sum();
+        assert_eq!(dist_total, m.batches, "size distribution covers all windows");
     }
 
     #[test]
@@ -772,6 +1101,7 @@ mod tests {
                 queue_capacity: 2,
                 workers: 1,
                 shards: 1,
+                ..CoordinatorConfig::default()
             },
         );
         let mut accepted = 0;
@@ -798,6 +1128,81 @@ mod tests {
     }
 
     #[test]
+    fn submit_distinguishes_busy_from_closed() {
+        let backend = Arc::new(SlowBackend::wrap(
+            test_backend(),
+            Duration::from_millis(30),
+        ));
+        let (gov, pm) = test_governor(Policy::Fixed(Config::ACCURATE));
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                inflight_budget: 1,
+                workers: 1,
+                shards: 1,
+                ..CoordinatorConfig::default()
+            },
+            backend as Arc<dyn Backend>,
+            gov,
+            pm,
+        );
+        assert_eq!(coord.inflight_budget(), 1);
+        let first = match coord.submit([1; N_FEATURES]) {
+            SubmitOutcome::Admitted(r) => r,
+            _ => panic!("first submission within budget must be admitted"),
+        };
+        // the slow backend holds the first request inflight: over budget
+        assert!(
+            matches!(coord.submit([2; N_FEATURES]), SubmitOutcome::Busy),
+            "over-budget submission must fast-reject with Busy"
+        );
+        assert!(first.recv().is_some());
+        coord.close_intake();
+        assert!(
+            matches!(coord.submit([3; N_FEATURES]), SubmitOutcome::Closed),
+            "closed intake must report Closed, not Busy"
+        );
+        let m = coord.shutdown();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.rejected, 2);
+    }
+
+    #[test]
+    fn graceful_shutdown_drains_admitted_requests() {
+        // regression: close_intake followed by shutdown must serve every
+        // admitted request — none silently dropped while windows are
+        // still queued behind a slow backend
+        let backend = Arc::new(SlowBackend::wrap(test_backend(), Duration::from_millis(5)));
+        let (gov, pm) = test_governor(Policy::Fixed(Config::ACCURATE));
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+                queue_capacity: 64,
+                workers: 1,
+                shards: 1,
+                ..CoordinatorConfig::default()
+            },
+            backend as Arc<dyn Backend>,
+            gov,
+            pm,
+        );
+        let replies: Vec<_> = (0..12u8)
+            .map(|i| coord.try_submit([i; N_FEATURES]).expect("admitted"))
+            .collect();
+        coord.close_intake();
+        let m = coord.shutdown();
+        assert_eq!(m.requests, 12, "every admitted request was executed");
+        assert_eq!(m.backend_errors, 0);
+        assert_eq!(m.inflight, 0, "no admission slot leaked");
+        for (i, r) in replies.into_iter().enumerate() {
+            assert!(
+                r.recv().is_some(),
+                "admitted request {i} dropped on graceful shutdown"
+            );
+        }
+    }
+
+    #[test]
     fn shutdown_flushes_pending() {
         let (coord, _) = start(
             Policy::Fixed(Config::ACCURATE),
@@ -807,6 +1212,7 @@ mod tests {
                 queue_capacity: 512,
                 workers: 2,
                 shards: 3,
+                ..CoordinatorConfig::default()
             },
         );
         let replies: Vec<_> = (0..100u8)
@@ -819,40 +1225,9 @@ mod tests {
         }
     }
 
-    /// A backend that drops the last output of every batch — the
-    /// release-mode hazard the length-mismatch guard must catch.
-    struct TruncatingBackend {
-        inner: NativeBackend,
-    }
-
-    impl Backend for TruncatingBackend {
-        fn execute(
-            &self,
-            xs: &[[u8; N_FEATURES]],
-            sched: &ConfigSchedule,
-        ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
-            let mut outs = self.inner.execute(xs, sched)?;
-            outs.pop();
-            Ok(outs)
-        }
-
-        fn name(&self) -> &'static str {
-            "truncating"
-        }
-
-        fn topology(&self) -> &Topology {
-            self.inner.topology()
-        }
-    }
-
     #[test]
     fn short_backend_result_fails_the_batch_instead_of_hanging() {
-        let inner = test_backend();
-        let backend = Arc::new(TruncatingBackend {
-            inner: NativeBackend {
-                network: crate::datapath::Network::new(inner.network.weights().clone()),
-            },
-        });
+        let backend = Arc::new(TruncatingBackend::wrap(test_backend()));
         let (gov, pm) = test_governor(Policy::Fixed(Config::ACCURATE));
         let coord = Coordinator::start(
             CoordinatorConfig::default(),
@@ -873,28 +1248,11 @@ mod tests {
         assert_eq!(m.requests, 8, "attempts stay accounted");
         assert_eq!(m.energy_mj, 0.0, "failed batches draw no modeled energy");
         assert_eq!(m.per_cfg.iter().sum::<u64>(), 0, "nothing was served");
+        assert_eq!(m.inflight, 0, "failed batches release admission slots");
     }
 
     #[test]
     fn panicking_shard_becomes_a_backend_error() {
-        struct PanickingBackend {
-            topo: Topology,
-        }
-        impl Backend for PanickingBackend {
-            fn execute(
-                &self,
-                _: &[[u8; N_FEATURES]],
-                _: &ConfigSchedule,
-            ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
-                panic!("injected backend panic")
-            }
-            fn name(&self) -> &'static str {
-                "panicking"
-            }
-            fn topology(&self) -> &Topology {
-                &self.topo
-            }
-        }
         let backend: Arc<dyn Backend> = Arc::new(PanickingBackend {
             topo: Topology::seed(),
         });
@@ -933,6 +1291,7 @@ mod tests {
                 queue_capacity: 256,
                 workers: 1,
                 shards: 4,
+                ..CoordinatorConfig::default()
             },
         );
         let mut replies = Vec::new();

@@ -8,6 +8,8 @@
 //!   accuracy   test-set accuracy per configuration (native or PJRT)
 //!   classify   one image through native + cycle-accurate + PJRT backends
 //!   serve      synthetic-load serving demo with a governor policy
+//!   loadgen    open/closed/bursty load harness: adaptive vs batch=1
+//!              throughput/latency/energy per policy -> BENCH_serve.json
 //!   sweep      native accuracy sweep: uniform configs or per-layer sensitivity
 //!   frontier   per-layer schedule frontier from the sensitivity model
 //!   topo       topology-parametric demo: arbitrary MLP + per-layer schedule
@@ -17,9 +19,10 @@
 use anyhow::{Context, Result};
 use ecmac::amul::{metrics, Config, ConfigSchedule};
 use ecmac::coordinator::governor::{AccuracyTable, Policy};
+use ecmac::coordinator::loadgen::{run_load, LoadMode, LoadReport, LoadSpec};
 use ecmac::coordinator::{
-    Backend, Coordinator, CoordinatorConfig, Governor, NativeBackend, PjrtBackend,
-    ScheduleFrontier, SensitivityModel,
+    Backend, Coordinator, CoordinatorConfig, Governor, MetricsSnapshot, NativeBackend,
+    PjrtBackend, ScheduleFrontier, SensitivityModel, TcpIntake,
 };
 use ecmac::dataset::Dataset;
 use ecmac::datapath::{DatapathSim, Network};
@@ -46,6 +49,7 @@ fn main() {
         "accuracy" => cmd_accuracy(rest),
         "classify" => cmd_classify(rest),
         "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "sweep" => cmd_sweep(rest),
         "frontier" => cmd_frontier(rest),
         "topo" => cmd_topo(rest),
@@ -78,7 +82,9 @@ fn print_global_usage() {
          \x20 area       area roll-up\n\
          \x20 accuracy   per-configuration test accuracy\n\
          \x20 classify   one image through all backends\n\
-         \x20 serve      serving demo with a governor policy\n\
+         \x20 serve      serving demo with a governor policy (--listen for TCP intake)\n\
+         \x20 loadgen    load harness: adaptive vs batch=1 curves per policy\n\
+         \x20            (open/closed/burst modes -> BENCH_serve.json)\n\
          \x20 sweep      native accuracy sweep (uniform, or --per-layer sensitivity)\n\
          \x20 frontier   per-layer schedule frontier (Pareto energy vs accuracy)\n\
          \x20 topo       arbitrary-topology demo with a per-layer schedule\n\
@@ -508,6 +514,25 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         default: Some("2"),
     });
     spec.push(OptSpec {
+        name: "slo",
+        help: "latency objective for the adaptive batching window, us",
+        takes_value: true,
+        default: Some("5000"),
+    });
+    spec.push(OptSpec {
+        name: "fixed-batch",
+        help: "disable the adaptive window (pin the target at max-batch)",
+        takes_value: false,
+        default: None,
+    });
+    spec.push(OptSpec {
+        name: "listen",
+        help: "also serve framed requests over TCP on this address \
+               (e.g. 127.0.0.1:7878)",
+        takes_value: true,
+        default: None,
+    });
+    spec.push(OptSpec {
         name: "sweep",
         help: "schedule_sweep.json enabling the per-layer schedule frontier \
                (default: <artifacts>/schedule_sweep.json when present; 'none' disables)",
@@ -577,18 +602,30 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         None => uniform_governor(&policy),
     };
 
-    let coord = Coordinator::start(
+    let slo_us: u64 = args.get_or("slo", 5000)?;
+    let coord = Arc::new(Coordinator::start(
         CoordinatorConfig {
             max_batch,
             max_wait: Duration::from_micros(300),
             queue_capacity: 4096,
             workers: 2,
             shards,
+            adaptive: !args.flag("fixed-batch"),
+            latency_slo_us: slo_us,
+            ..CoordinatorConfig::default()
         },
         backend,
         governor,
         pm.clone(),
-    );
+    ));
+    let mut intake = match args.get("listen") {
+        Some(addr) => {
+            let intake = TcpIntake::bind(addr, Arc::clone(&coord))?;
+            println!("tcp intake listening on {}", intake.local_addr());
+            Some(intake)
+        }
+        None => None,
+    };
 
     let ds = Dataset::load_test(&dir)?;
     let mut rng = ecmac::util::rng::Pcg32::new(7);
@@ -625,7 +662,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     let wall = t0.elapsed();
     let decisions = coord.decisions();
-    let m = coord.shutdown();
+    if let Some(intake) = intake.as_mut() {
+        intake.stop();
+    }
+    drop(intake);
+    let m = Arc::try_unwrap(coord)
+        .map_err(|_| anyhow::anyhow!("intake still holds the coordinator"))?
+        .shutdown();
     println!("\n=== serving summary ===");
     println!("wall time          {:.3} s", wall.as_secs_f64());
     println!(
@@ -645,10 +688,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     );
     println!("latency mean       {:.0} us", m.mean_latency_us);
     println!(
-        "latency p50/p99    {} / {} us",
-        m.p50_latency_us, m.p99_latency_us
+        "latency p50/p95/p99  {} / {} / {} us (max {})",
+        m.p50_latency_us, m.p95_latency_us, m.p99_latency_us, m.max_latency_us
     );
-    println!("mean batch         {:.2}", m.mean_batch_size);
+    println!(
+        "mean batch         {:.2} (p50 {} / p95 {}, final target {})",
+        m.mean_batch_size, m.batch_size_p50, m.batch_size_p95, m.batch_target
+    );
+    println!("batch size dist    {:?}", m.batch_size_dist);
+    println!(
+        "windows            {} closed full / {} on deadline",
+        m.windows_full, m.windows_deadline
+    );
     println!("modeled energy     {:.3} mJ", m.energy_mj);
     let used: Vec<(usize, u64)> = m
         .per_cfg
@@ -666,6 +717,265 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .map(|(at, s)| format!("@{at}->{s}"))
         .collect();
     println!("governor decisions {decided:?}");
+    Ok(())
+}
+
+/// Closed-loop/open-loop/bursty load harness: for each governor policy,
+/// drive the same offered load through the adaptive-window front-end
+/// and through a pinned batch=1 front-end, and publish the
+/// throughput/latency/energy comparison (`BENCH_serve.json` with
+/// `--json`).  `--synthetic` swaps artifacts for a deterministic random
+/// network + synthetic calibration, so CI can smoke the serve path
+/// without the seed artifacts.
+fn cmd_loadgen(argv: &[String]) -> Result<()> {
+    let mut spec = common_opts();
+    spec.push(OptSpec {
+        name: "policies",
+        help: "comma-separated governor policies to sweep \
+               (fixed:<cfg> | sched:<cfg,..> | budget:<mw> | floor:<acc> | energy:<mj>:<images>)",
+        takes_value: true,
+        default: Some("fixed:0,fixed:16,budget:5.0"),
+    });
+    spec.push(OptSpec {
+        name: "mode",
+        help: "traffic shape: closed | open | burst",
+        takes_value: true,
+        default: Some("closed"),
+    });
+    spec.push(OptSpec {
+        name: "concurrency",
+        help: "closed-loop client count",
+        takes_value: true,
+        default: Some("8"),
+    });
+    spec.push(OptSpec {
+        name: "rate",
+        help: "open-loop offered rate (burst: the high rate), req/s",
+        takes_value: true,
+        default: Some("20000"),
+    });
+    spec.push(OptSpec {
+        name: "low-rate",
+        help: "burst mode low rate, req/s",
+        takes_value: true,
+        default: Some("2000"),
+    });
+    spec.push(OptSpec {
+        name: "period-ms",
+        help: "burst mode phase length, ms",
+        takes_value: true,
+        default: Some("20"),
+    });
+    spec.push(OptSpec {
+        name: "requests",
+        help: "requests offered per run",
+        takes_value: true,
+        default: Some("4000"),
+    });
+    spec.push(OptSpec {
+        name: "max-batch",
+        help: "adaptive window ceiling (the baseline run always pins 1)",
+        takes_value: true,
+        default: Some("64"),
+    });
+    spec.push(OptSpec {
+        name: "workers",
+        help: "executor worker threads",
+        takes_value: true,
+        default: Some("2"),
+    });
+    spec.push(OptSpec {
+        name: "shards",
+        help: "sub-batches per logical batch on the worker shard pool",
+        takes_value: true,
+        default: Some("2"),
+    });
+    spec.push(OptSpec {
+        name: "slo",
+        help: "adaptive window latency objective, us (high = maximize throughput)",
+        takes_value: true,
+        default: Some("50000"),
+    });
+    spec.push(OptSpec {
+        name: "seed",
+        help: "arrival-process / input-selection seed",
+        takes_value: true,
+        default: Some("42"),
+    });
+    spec.push(OptSpec {
+        name: "json",
+        help: "write the per-policy curve as a BENCH_serve.json artifact",
+        takes_value: true,
+        default: None,
+    });
+    spec.push(OptSpec {
+        name: "synthetic",
+        help: "use a deterministic random seed-topology network instead of artifacts",
+        takes_value: false,
+        default: None,
+    });
+    let args = Args::parse(argv, &spec)?;
+    let requests: usize = args.get_or("requests", 4000)?;
+    let max_batch: usize = args.get_or("max-batch", 64)?;
+    let workers: usize = args.get_or("workers", 2)?;
+    let shards: usize = args.get_or("shards", 2)?;
+    let slo_us: u64 = args.get_or("slo", 50000)?;
+    let seed: u64 = args.get_or("seed", 42)?;
+    let mode = match args.get("mode").unwrap_or("closed") {
+        "closed" => LoadMode::Closed {
+            concurrency: args.get_or("concurrency", 8)?,
+        },
+        "open" => LoadMode::Open {
+            rate_rps: args.get_or("rate", 20000.0)?,
+        },
+        "burst" => LoadMode::Burst {
+            high_rps: args.get_or("rate", 20000.0)?,
+            low_rps: args.get_or("low-rate", 2000.0)?,
+            period: Duration::from_millis(args.get_or("period-ms", 20)?),
+        },
+        other => anyhow::bail!("unknown mode '{other}' (closed | open | burst)"),
+    };
+
+    let (weights, acc_table, pm, inputs) = if args.flag("synthetic") {
+        let weights = QuantWeights::random(&Topology::seed(), 11);
+        let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(
+            2000, 0xD1E5E1,
+        ))?;
+        let acc_table = AccuracyTable::new(
+            // mildly decreasing so floor/budget policies have a real
+            // trade-off to walk, like the measured sweep does
+            (0..ecmac::amul::N_CONFIGS)
+                .map(|c| 0.95 - 0.002 * c as f64)
+                .collect(),
+        );
+        let mut rng = ecmac::util::rng::Pcg32::new(seed);
+        let inputs: Vec<[u8; 62]> = (0..256)
+            .map(|_| {
+                let mut x = [0u8; 62];
+                for v in x.iter_mut() {
+                    *v = rng.below(128) as u8;
+                }
+                x
+            })
+            .collect();
+        (weights, acc_table, pm, inputs)
+    } else {
+        let dir = artifacts_dir(&args);
+        let weights = QuantWeights::load_artifacts(&dir)?;
+        let pm = power_model(&dir, 32)?;
+        let acc_table = AccuracyTable::load(&dir.join("accuracy_sweep.json"))?;
+        let ds = Dataset::load_test(&dir)?;
+        let inputs: Vec<[u8; 62]> = ds.features.iter().take(1024).copied().collect();
+        (weights, acc_table, pm, inputs)
+    };
+
+    let policies_arg = args.get("policies").unwrap_or("fixed:0,fixed:16,budget:5.0");
+    let mut rows_json: Vec<ecmac::util::json::Json> = Vec::new();
+    let mut table_rows: Vec<report::ServeBenchRow> = Vec::new();
+    for pol_s in policies_arg.split(',') {
+        let policy = parse_policy(pol_s.trim())?;
+        // one fresh coordinator per (policy, front-end) run, same
+        // offered load: the only variable is the batching strategy
+        let run = |adaptive: bool, run_max_batch: usize| -> Result<(LoadReport, MetricsSnapshot)> {
+            let backend: Arc<dyn Backend> = Arc::new(NativeBackend {
+                network: Network::new(weights.clone()),
+            });
+            if let Policy::FixedSchedule(s) = &policy {
+                s.validate(backend.topology().n_layers())?;
+            }
+            let gov =
+                Governor::for_topology(policy.clone(), &pm, &acc_table, backend.topology());
+            let coord = Coordinator::start(
+                CoordinatorConfig {
+                    max_batch: run_max_batch,
+                    max_wait: Duration::from_micros(300),
+                    queue_capacity: 4096,
+                    workers,
+                    shards,
+                    adaptive,
+                    latency_slo_us: slo_us,
+                    ..CoordinatorConfig::default()
+                },
+                backend,
+                gov,
+                pm.clone(),
+            );
+            let spec = LoadSpec {
+                mode: mode.clone(),
+                requests,
+                seed,
+            };
+            let r = run_load(&coord, &inputs, &spec);
+            let m = coord.shutdown();
+            Ok((r, m))
+        };
+        let (base_r, base_m) = run(false, 1)?;
+        let (adap_r, adap_m) = run(true, max_batch)?;
+        let policy_label = policy.to_string();
+        println!(
+            "{policy_label} [{}]: batch1 {:.0} req/s -> adaptive {:.0} req/s ({:.2}x), \
+             p99 {} us, mean batch {:.2}",
+            adap_r.mode,
+            base_r.throughput_rps,
+            adap_r.throughput_rps,
+            adap_r.throughput_rps / base_r.throughput_rps.max(1e-9),
+            adap_r.p99_us,
+            adap_m.mean_batch_size,
+        );
+        let energy_nj = adap_m.energy_mj * 1e6 / adap_r.answered.max(1) as f64;
+        let base_energy_nj = base_m.energy_mj * 1e6 / base_r.answered.max(1) as f64;
+        rows_json.push(ecmac::json_obj! {
+            "policy" => policy_label.clone(),
+            "mode" => adap_r.mode.clone(),
+            "offered_rps" => adap_r.offered_rps,
+            "batch1_throughput_rps" => base_r.throughput_rps,
+            "throughput_rps" => adap_r.throughput_rps,
+            "adaptive_speedup" => adap_r.throughput_rps / base_r.throughput_rps.max(1e-9),
+            "p50_us" => adap_r.p50_us as f64,
+            "p95_us" => adap_r.p95_us as f64,
+            "p99_us" => adap_r.p99_us as f64,
+            "batch1_p99_us" => base_r.p99_us as f64,
+            "mean_batch" => adap_m.mean_batch_size,
+            "batch_target" => adap_m.batch_target,
+            "energy_per_image_nj" => energy_nj,
+            "batch1_energy_per_image_nj" => base_energy_nj,
+            "answered" => adap_r.answered as f64,
+            "rejected" => adap_r.rejected as f64,
+            "errors" => adap_r.errors as f64,
+            "windows_full" => adap_m.windows_full as f64,
+            "windows_deadline" => adap_m.windows_deadline as f64,
+        });
+        table_rows.push(report::ServeBenchRow {
+            policy: policy_label,
+            mode: adap_r.mode.clone(),
+            offered_rps: adap_r.offered_rps,
+            batch1_rps: base_r.throughput_rps,
+            adaptive_rps: adap_r.throughput_rps,
+            p50_us: adap_r.p50_us,
+            p95_us: adap_r.p95_us,
+            p99_us: adap_r.p99_us,
+            mean_batch: adap_m.mean_batch_size,
+            energy_nj_per_img: energy_nj,
+            rejected: adap_r.rejected,
+        });
+    }
+    println!("\nadaptive window vs fixed batch=1 at equal offered load:");
+    println!("{}", report::serve_bench_table(&table_rows));
+    if let Some(path) = args.get("json") {
+        let doc = ecmac::json_obj! {
+            "schema_version" => 1usize,
+            "bench" => "serve",
+            "requests" => requests,
+            "max_batch" => max_batch,
+            "workers" => workers,
+            "shards" => shards,
+            "slo_us" => slo_us as f64,
+            "synthetic" => args.flag("synthetic"),
+            "rows" => rows_json,
+        };
+        std::fs::write(path, doc.to_string())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -487,6 +487,65 @@ pub fn forward_bench_table(rows: &[ForwardBenchRow]) -> String {
     t.render()
 }
 
+/// One governor policy's adaptive-vs-batch=1 serving comparison at
+/// equal offered load (the rows behind `ecmac loadgen` and its
+/// `BENCH_serve.json` artifact).
+#[derive(Debug, Clone)]
+pub struct ServeBenchRow {
+    pub policy: String,
+    /// Traffic shape label (`open:…`, `closed:…`, `burst:…`).
+    pub mode: String,
+    /// Offered load actually achieved by the harness, req/s.
+    pub offered_rps: f64,
+    /// Goodput of the fixed batch=1 front-end, req/s.
+    pub batch1_rps: f64,
+    /// Goodput of the adaptive-window front-end, req/s.
+    pub adaptive_rps: f64,
+    /// Server-side sojourn percentiles of the adaptive run, µs.
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    /// Mean closed-window size of the adaptive run.
+    pub mean_batch: f64,
+    /// Modeled accelerator energy per answered image, adaptive run, nJ.
+    pub energy_nj_per_img: f64,
+    /// Backpressure rejections observed by the adaptive run's clients.
+    pub rejected: u64,
+}
+
+/// Render the per-policy serving curve: adaptive window vs the fixed
+/// batch=1 path at equal offered load.  "adaptive x" is the acceptance
+/// metric the serve bench gate enforces.
+pub fn serve_bench_table(rows: &[ServeBenchRow]) -> String {
+    let mut t = TextTable::new(&[
+        "policy",
+        "mode",
+        "offered req/s",
+        "batch1 req/s",
+        "adaptive req/s",
+        "adaptive x",
+        "p50/p95/p99 us",
+        "mean batch",
+        "nJ/img",
+        "rejected",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.policy.clone(),
+            r.mode.clone(),
+            format!("{:.0}", r.offered_rps),
+            format!("{:.0}", r.batch1_rps),
+            format!("{:.0}", r.adaptive_rps),
+            format!("{:.2}x", r.adaptive_rps / r.batch1_rps.max(1e-9)),
+            format!("{}/{}/{}", r.p50_us, r.p95_us, r.p99_us),
+            format!("{:.2}", r.mean_batch),
+            format!("{:.1}", r.energy_nj_per_img),
+            r.rejected.to_string(),
+        ]);
+    }
+    t.render()
+}
+
 /// Measured-vs-predicted table for frontier validation
 /// (`ecmac frontier --validate K`).
 pub fn frontier_validation_table(

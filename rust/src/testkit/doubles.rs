@@ -1,0 +1,111 @@
+//! Shared [`Backend`] test doubles for coordinator/serving tests and
+//! the load-harness integration suite: fault injection (truncation,
+//! panic) and a latency shim for exercising batching, backpressure and
+//! drain behavior deterministically.
+
+use crate::amul::ConfigSchedule;
+use crate::coordinator::Backend;
+use crate::dataset::N_FEATURES;
+use crate::weights::Topology;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Delays every batch by a fixed amount before delegating.  A constant
+/// *per-batch* cost makes batching wins deterministic (N requests in
+/// one window pay the delay once), which is what the adaptive-vs-
+/// batch=1 throughput tests lean on; it also holds requests inflight
+/// long enough to exercise admission control and graceful-shutdown
+/// drains without timing races.
+pub struct SlowBackend {
+    inner: Arc<dyn Backend>,
+    delay: Duration,
+}
+
+impl SlowBackend {
+    pub fn wrap(inner: Arc<dyn Backend>, delay: Duration) -> SlowBackend {
+        SlowBackend { inner, delay }
+    }
+}
+
+impl Backend for SlowBackend {
+    fn execute(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        std::thread::sleep(self.delay);
+        self.inner.execute(xs, sched)
+    }
+
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+
+    fn topology(&self) -> &Topology {
+        self.inner.topology()
+    }
+
+    fn prewarm(&self, sched: &ConfigSchedule) {
+        self.inner.prewarm(sched);
+    }
+}
+
+/// Returns one result fewer than requested (for batches of 2+): the
+/// contract-violation double behind the result-length guard — a
+/// truncated batch must fail whole, never silently drop the tail
+/// request.
+pub struct TruncatingBackend {
+    inner: Arc<dyn Backend>,
+}
+
+impl TruncatingBackend {
+    pub fn wrap(inner: Arc<dyn Backend>) -> TruncatingBackend {
+        TruncatingBackend { inner }
+    }
+}
+
+impl Backend for TruncatingBackend {
+    fn execute(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        let mut out = self.inner.execute(xs, sched)?;
+        if out.len() > 1 {
+            out.pop();
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "truncating"
+    }
+
+    fn topology(&self) -> &Topology {
+        self.inner.topology()
+    }
+}
+
+/// Panics on every batch: the crash double for shard-isolation and
+/// no-deadlock-under-failure tests.
+pub struct PanickingBackend {
+    pub topo: Topology,
+}
+
+impl Backend for PanickingBackend {
+    fn execute(
+        &self,
+        _xs: &[[u8; N_FEATURES]],
+        _sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        panic!("injected backend panic");
+    }
+
+    fn name(&self) -> &'static str {
+        "panicking"
+    }
+
+    fn topology(&self) -> &Topology {
+        &self.topo
+    }
+}

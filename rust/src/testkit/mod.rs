@@ -5,6 +5,9 @@
 //!   coordinator (routing, batching, state) and the arithmetic models.
 //! * [`bench`] — a criterion-style benchmark harness (warmup, adaptive
 //!   iteration count, mean/stddev/percentiles) driving `cargo bench`.
+//! * [`doubles`] — shared coordinator [`Backend`](crate::coordinator::Backend)
+//!   doubles (slow, truncating, panicking) for the serving, backpressure
+//!   and load-harness tests.
 //! * [`accurate_labeled_set`] — the shared synthetic-evaluation
 //!   scaffold for frontier/sensitivity tests and benches.
 //! * [`bench_cycle_batch_pair`] — the shared per-image-FSM vs
@@ -20,6 +23,7 @@
 //!   the tile-kernel speedup is machine-matched in every fresh run.
 
 pub mod bench;
+pub mod doubles;
 pub mod prop;
 
 use crate::amul::{sm, Config, ConfigSchedule};

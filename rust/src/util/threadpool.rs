@@ -111,6 +111,22 @@ impl<T> Channel<T> {
         }
     }
 
+    /// Non-blocking receive; `Ok(None)` when empty, `Err(())` when the
+    /// channel is closed *and* drained (mirrors [`Self::recv_timeout`]).
+    /// This is the poll primitive the TCP intake loop uses to check
+    /// reply channels without parking the readiness loop.
+    pub fn try_recv(&self) -> Result<Option<T>, ()> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if let Some(v) = st.items.pop_front() {
+            self.inner.not_full.notify_one();
+            return Ok(Some(v));
+        }
+        if st.closed {
+            return Err(());
+        }
+        Ok(None)
+    }
+
     /// Receive with a timeout; `Ok(None)` on timeout.
     pub fn recv_timeout(&self, dur: std::time::Duration) -> Result<Option<T>, ()> {
         let deadline = std::time::Instant::now() + dur;
@@ -662,6 +678,18 @@ mod tests {
         assert_eq!(ch.recv(), Some(1));
         t.join().unwrap();
         assert_eq!(ch.recv(), Some(2));
+    }
+
+    #[test]
+    fn try_recv_never_blocks() {
+        let ch: Channel<u32> = Channel::new(0);
+        assert_eq!(ch.try_recv(), Ok(None)); // empty, open
+        ch.send(7).unwrap();
+        assert_eq!(ch.try_recv(), Ok(Some(7)));
+        ch.send(8).unwrap();
+        ch.close();
+        assert_eq!(ch.try_recv(), Ok(Some(8))); // closed but not drained
+        assert_eq!(ch.try_recv(), Err(())); // closed and drained
     }
 
     #[test]

@@ -150,6 +150,7 @@ fn backend_failure_closes_reply_channels_instead_of_hanging() {
             queue_capacity: 64,
             workers: 1,
             shards: 2,
+            ..CoordinatorConfig::default()
         },
         Arc::new(FailingBackend {
             topo: ecmac::weights::Topology::seed(),

@@ -132,6 +132,7 @@ fn coordinator_end_to_end_with_real_model() {
             queue_capacity: 2048,
             workers: 2,
             shards: 2,
+            ..CoordinatorConfig::default()
         },
         Arc::new(NativeBackend { network: net }) as Arc<dyn Backend>,
         gov,
@@ -186,6 +187,7 @@ fn energy_budget_governor_switches_configs_under_load() {
             queue_capacity: 4096,
             workers: 1,
             shards: 2,
+            ..CoordinatorConfig::default()
         },
         Arc::new(NativeBackend { network: net }) as Arc<dyn Backend>,
         gov,

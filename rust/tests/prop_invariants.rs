@@ -219,6 +219,7 @@ fn prop_coordinator_answers_every_accepted_request_once() {
                     queue_capacity: 4096,
                     workers: 2,
                     shards: 2,
+                    ..CoordinatorConfig::default()
                 },
                 Arc::new(NativeBackend { network: net }) as Arc<dyn Backend>,
                 gov,

@@ -1,0 +1,219 @@
+//! Load-harness integration tests for the adaptive serve front-end:
+//! the adaptive-vs-batch=1 throughput invariant the bench gate
+//! enforces, plus backpressure/liveness under slow and panicking
+//! backends and graceful-shutdown drains under sustained load.
+
+use ecmac::amul::Config;
+use ecmac::coordinator::governor::AccuracyTable;
+use ecmac::coordinator::loadgen::{run_load, LoadMode, LoadSpec};
+use ecmac::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, Governor, NativeBackend, Policy,
+};
+use ecmac::datapath::Network;
+use ecmac::power::{MultiplierEnergyProfile, PowerModel};
+use ecmac::testkit::doubles::{PanickingBackend, SlowBackend};
+use ecmac::util::rng::Pcg32;
+use ecmac::weights::{QuantWeights, Topology};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn native_backend(seed: u64) -> Arc<NativeBackend> {
+    Arc::new(NativeBackend {
+        network: Network::new(QuantWeights::random(&Topology::seed(), seed)),
+    })
+}
+
+fn start(backend: Arc<dyn Backend>, cfg: CoordinatorConfig) -> Coordinator {
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(400, 5)).unwrap();
+    let acc = AccuracyTable::new(vec![0.9; ecmac::amul::N_CONFIGS]);
+    let gov = Governor::new(Policy::Fixed(Config::new(8).unwrap()), &pm, &acc);
+    Coordinator::start(cfg, backend, gov, pm)
+}
+
+fn inputs(n: usize, seed: u64) -> Vec<[u8; 62]> {
+    let mut rng = Pcg32::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut x = [0u8; 62];
+            for v in x.iter_mut() {
+                *v = rng.below(128) as u8;
+            }
+            x
+        })
+        .collect()
+}
+
+/// The acceptance-criterion invariant, made deterministic: with a fixed
+/// per-batch service cost, N requests per window pay that cost once, so
+/// the adaptive window must clearly out-serve the pinned batch=1 path
+/// at the same offered (closed-loop) load.
+#[test]
+fn adaptive_batching_beats_batch1_at_equal_offered_load() {
+    let delay = Duration::from_millis(2);
+    let spec = LoadSpec {
+        mode: LoadMode::Closed { concurrency: 8 },
+        requests: 120,
+        seed: 9,
+    };
+    let xs = inputs(16, 3);
+
+    let run = |adaptive: bool, max_batch: usize| {
+        let backend = Arc::new(SlowBackend::wrap(native_backend(21), delay));
+        let coord = start(
+            backend as Arc<dyn Backend>,
+            CoordinatorConfig {
+                max_batch,
+                max_wait: Duration::from_micros(500),
+                queue_capacity: 256,
+                workers: 2,
+                shards: 1,
+                adaptive,
+                // throughput-oriented SLO: never clamp the window on the
+                // slow double's deliberate latency
+                latency_slo_us: 1_000_000,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let r = run_load(&coord, &xs, &spec);
+        let m = coord.shutdown();
+        (r, m)
+    };
+
+    let (base, base_m) = run(false, 1);
+    let (adap, adap_m) = run(true, 16);
+    assert_eq!(base.answered, 120);
+    assert_eq!(adap.answered, 120);
+    assert!((base_m.mean_batch_size - 1.0).abs() < 1e-9, "baseline must serve batch=1");
+    assert!(
+        adap_m.mean_batch_size > 1.5,
+        "adaptive run failed to batch: mean {}",
+        adap_m.mean_batch_size
+    );
+    assert!(
+        adap.throughput_rps > 1.3 * base.throughput_rps,
+        "adaptive {} req/s should clearly beat batch=1 {} req/s",
+        adap.throughput_rps,
+        base.throughput_rps
+    );
+    assert!(adap.p50_us <= adap.p95_us && adap.p95_us <= adap.p99_us);
+}
+
+/// Sustained open-loop overload against a slow backend: the budget is a
+/// hard bound on admitted work, the queue stays bounded, rejections are
+/// counted consistently on both sides, and the run completes (no
+/// deadlock).
+#[test]
+fn sustained_overload_stays_bounded_and_live() {
+    let backend = Arc::new(SlowBackend::wrap(
+        native_backend(22),
+        Duration::from_micros(500),
+    ));
+    let coord = start(
+        backend as Arc<dyn Backend>,
+        CoordinatorConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            queue_capacity: 8,
+            workers: 1,
+            shards: 1,
+            inflight_budget: 12,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let xs = inputs(8, 4);
+    let spec = LoadSpec {
+        mode: LoadMode::Open {
+            rate_rps: 500_000.0, // far beyond the slow backend's capacity
+        },
+        requests: 800,
+        seed: 10,
+    };
+    let r = run_load(&coord, &xs, &spec);
+    assert_eq!(r.sent, 800);
+    assert_eq!(r.answered + r.rejected + r.errors, 800, "every request resolved");
+    assert!(r.rejected > 0, "overload must produce explicit rejections");
+    assert!(
+        r.max_inflight <= coord.inflight_budget(),
+        "inflight {} exceeded the budget {}",
+        r.max_inflight,
+        coord.inflight_budget()
+    );
+    assert!(
+        r.max_queue_depth <= 8,
+        "queue depth {} exceeded its capacity",
+        r.max_queue_depth
+    );
+    let m = coord.shutdown();
+    assert_eq!(m.requests, r.answered, "admitted requests all served");
+    assert_eq!(m.rejected, r.rejected, "server and client rejection counts agree");
+    assert_eq!(m.inflight, 0, "no admission slot leaked");
+}
+
+/// A backend that panics on every batch must fail requests loudly —
+/// closed reply channels, counted errors — while the serve loop and the
+/// load harness both stay live.
+#[test]
+fn panicking_backend_under_load_fails_loudly_without_deadlock() {
+    let backend: Arc<dyn Backend> = Arc::new(PanickingBackend {
+        topo: Topology::seed(),
+    });
+    let coord = start(
+        backend,
+        CoordinatorConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            queue_capacity: 64,
+            workers: 2,
+            shards: 2,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let xs = inputs(8, 5);
+    let spec = LoadSpec {
+        mode: LoadMode::Closed { concurrency: 4 },
+        requests: 60,
+        seed: 11,
+    };
+    let r = run_load(&coord, &xs, &spec);
+    assert_eq!(r.sent, 60);
+    assert_eq!(r.errors, 60, "every request must fail loudly, not hang");
+    assert_eq!(r.answered, 0);
+    let m = coord.shutdown();
+    assert!(m.backend_errors >= 1);
+    assert_eq!(m.inflight, 0, "failed batches must release admission slots");
+    assert_eq!(m.energy_mj, 0.0, "failed batches draw no modeled energy");
+}
+
+/// Graceful shutdown under a live burst: requests admitted before
+/// `close_intake` all drain; submissions after it are rejected and
+/// counted — none silently dropped.
+#[test]
+fn graceful_shutdown_drains_under_load() {
+    let backend = Arc::new(SlowBackend::wrap(
+        native_backend(23),
+        Duration::from_millis(1),
+    ));
+    let coord = start(
+        backend as Arc<dyn Backend>,
+        CoordinatorConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(300),
+            queue_capacity: 128,
+            workers: 2,
+            shards: 1,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let xs = inputs(8, 6);
+    let admitted: Vec<_> = (0..40)
+        .map(|i| coord.try_submit(xs[i % xs.len()]).expect("within budget"))
+        .collect();
+    coord.close_intake();
+    assert!(coord.try_submit(xs[0]).is_none(), "closed intake rejects");
+    let m = coord.shutdown();
+    assert_eq!(m.requests, 40, "every admitted request executed");
+    assert_eq!(m.rejected, 1);
+    for (i, r) in admitted.into_iter().enumerate() {
+        assert!(r.recv().is_some(), "admitted request {i} dropped at shutdown");
+    }
+}

@@ -61,6 +61,7 @@ fn coordinator_serves_deep_topology_natively() {
             queue_capacity: 256,
             workers: 2,
             shards: 2,
+            ..CoordinatorConfig::default()
         },
         backend.clone() as Arc<dyn Backend>,
         gov,
