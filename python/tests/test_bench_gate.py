@@ -1,4 +1,5 @@
-"""The CI bench-regression gate over BENCH_forward.json / BENCH_serve.json."""
+"""The CI bench-regression gate over BENCH_forward.json / BENCH_serve.json
+(and the BENCH_pipeline.json artifact of the same `forward` kind)."""
 
 import json
 
@@ -117,6 +118,73 @@ class TestBaselineComparison:
         assert doc["bench"] == "forward"
         fresh = write(tmp_path, "fresh.json", artifact())
         assert bench_gate.run([fresh, "--baseline", str(committed)]) == 0
+
+
+def pipeline_artifact(pipeline_speedup=1.4, fallback=False, **extra):
+    """`ecmac bench --pipeline` output: the same `forward` artifact kind,
+    rows keyed by topology with the pipeline comparison columns."""
+    doc = {
+        "schema_version": 2,
+        "bench": "forward",
+        "mode": "pipeline",
+        "rows": [
+            {
+                "topology": "784-128-64-10",
+                "batch": 512,
+                "batch_par_per_sec": 1e5,
+                "pipeline_per_sec": 1e5 * pipeline_speedup,
+                "pipeline_speedup": pipeline_speedup,
+                "plan": "[0..1]x7 | [1..3]x1 @ micro 16",
+                "stages": 2,
+                "workers": 8,
+                "pipeline_fallback": fallback,
+                "bit_exact": True,
+            }
+        ],
+    }
+    doc.update(extra)
+    return doc
+
+
+class TestPipelineInRunInvariants:
+    def test_pipeline_beats_row_partition_passes(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", pipeline_artifact(pipeline_speedup=1.4))
+        assert bench_gate.run([fresh]) == 0
+
+    def test_pipeline_slower_than_row_partition_fails(self, tmp_path):
+        # the acceptance invariant: where the planner engaged, the
+        # stage pipeline must at least match the row partition
+        fresh = write(tmp_path, "fresh.json", pipeline_artifact(pipeline_speedup=0.8))
+        assert bench_gate.run([fresh]) == 1
+
+    def test_fallback_rows_are_exempt(self, tmp_path):
+        # planner declined (shallow topology / too few cores): both
+        # sides ran the same code, the ratio is noise
+        fresh = write(
+            tmp_path,
+            "fresh.json",
+            pipeline_artifact(pipeline_speedup=0.5, fallback=True),
+        )
+        assert bench_gate.run([fresh]) == 0
+
+    def test_tolerance_allows_noise(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", pipeline_artifact(pipeline_speedup=0.95))
+        assert bench_gate.run([fresh]) == 0
+
+    def test_forward_rows_without_pipeline_columns_unaffected(self, tmp_path):
+        # plain --forward artifacts carry no pipeline_speedup; the new
+        # invariant must not fire on them
+        fresh = write(tmp_path, "fresh.json", artifact())
+        assert bench_gate.run([fresh]) == 0
+
+    def test_baseline_ratio_comparison_covers_pipeline_speedup(self, tmp_path):
+        base = write(tmp_path, "base.json", pipeline_artifact(pipeline_speedup=2.0))
+        fresh = write(tmp_path, "fresh.json", pipeline_artifact(pipeline_speedup=1.4))
+        assert bench_gate.run([fresh, "--baseline", base]) == 1
+        improved = write(
+            tmp_path, "improved.json", pipeline_artifact(pipeline_speedup=2.2)
+        )
+        assert bench_gate.run([improved, "--baseline", base]) == 0
 
 
 def serve_artifact(adaptive_speedup=2.0, answered=4000, **extra):

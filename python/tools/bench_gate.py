@@ -14,6 +14,15 @@ Two classes of check, applied per artifact kind (the ``bench`` field):
   - ``forward``: the tiled-kernel path must not be slower than the
     in-process PR-4 signed-gather baseline beyond tolerance, and the
     prefix-cached sweep must not be slower than the full-pass engine.
+    Rows carrying a ``pipeline_speedup`` (the ``ecmac bench --pipeline``
+    artifact, same ``forward`` kind) additionally require the
+    stage-pipelined executor to beat the row-partitioned path within
+    tolerance on topologies where the planner engaged; rows flagged
+    ``pipeline_fallback`` (shallow topology or too few cores — the
+    planner declined and both sides ran the same code) are exempt.
+    CI gates the ``BENCH_pipeline.json`` artifact on these in-run
+    invariants only (no ``--baseline``), since its topology set differs
+    from the committed forward baseline's.
   - ``serve``: per governor policy, the adaptive batching window must
     not serve less throughput than the pinned batch=1 front-end at the
     same offered load (``adaptive_speedup >= 1 - tolerance``), and the
@@ -52,9 +61,15 @@ import shutil
 import sys
 
 # Relative (machine-transferable) columns compared against the baseline.
-RATIO_COLUMNS = ("kernel_speedup", "batch_speedup", "sweep_speedup")
+RATIO_COLUMNS = ("kernel_speedup", "batch_speedup", "sweep_speedup", "pipeline_speedup")
 # Absolute columns, compared only under --absolute.
-ABSOLUTE_COLUMNS = ("batch_per_sec", "batch_signed_per_sec", "per_image_per_sec")
+ABSOLUTE_COLUMNS = (
+    "batch_per_sec",
+    "batch_signed_per_sec",
+    "per_image_per_sec",
+    "pipeline_per_sec",
+    "batch_par_per_sec",
+)
 
 SERVE_RATIO_COLUMNS = ("adaptive_speedup",)
 SERVE_ABSOLUTE_COLUMNS = ("throughput_rps", "batch1_throughput_rps")
@@ -84,6 +99,17 @@ def in_run_invariants(fresh, tolerance):
             failures.append(
                 f"{topo}: prefix-cached sweep is {sweep:.2f}x the full-pass "
                 f"engine (floor {1.0 - tolerance:.2f}x)"
+            )
+        pipeline = row.get("pipeline_speedup")
+        if (
+            pipeline is not None
+            and not row.get("pipeline_fallback")
+            and pipeline < 1.0 - tolerance
+        ):
+            failures.append(
+                f"{topo}: stage-pipelined executor is {pipeline:.2f}x the "
+                f"row-partitioned path (floor {1.0 - tolerance:.2f}x) on a "
+                f"topology where the planner engaged — pipelining lost"
             )
     return failures
 

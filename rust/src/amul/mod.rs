@@ -469,6 +469,13 @@ impl MulTables {
         self.mag.iter().filter(|c| c.get().is_some()).count()
     }
 
+    /// Number of signed tables materialized so far — what the prewarm
+    /// tests assert, since the hot paths (gemm tiles, the pipelined
+    /// stages) gather exclusively from the signed tables.
+    pub fn signed_built(&self) -> usize {
+        self.signed.iter().filter(|c| c.get().is_some()).count()
+    }
+
     /// Materialize the signed (and, transitively, magnitude) tables of
     /// every configuration `sched` runs.  Lazy `OnceLock` init is the
     /// right default for CLI one-shots, but it puts the table build

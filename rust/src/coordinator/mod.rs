@@ -47,5 +47,6 @@ pub use loadgen::{LoadMode, LoadReport, LoadSpec};
 pub use request::{ClassifyRequest, ClassifyResponse, MetricsSnapshot};
 pub use sensitivity::{SensitivityModel, SweepProgress};
 pub use server::{
-    Backend, Coordinator, CoordinatorConfig, NativeBackend, PjrtBackend, SubmitOutcome,
+    Backend, Coordinator, CoordinatorConfig, ExecutionMode, NativeBackend, PjrtBackend,
+    SubmitOutcome,
 };

@@ -68,6 +68,26 @@ pub trait Backend: Send + Sync {
     /// [`Coordinator::start`] with the governor's initial schedule.
     /// Default: no-op.
     fn prewarm(&self, _sched: &ConfigSchedule) {}
+
+    /// Execute a batch through the backend's layer-pipelined streaming
+    /// executor, when it has one.  The default delegates to
+    /// [`Backend::execute`], so mode-agnostic backends (and the test
+    /// doubles) serve [`ExecutionMode::Pipelined`] coordinators
+    /// unchanged — including their failure behavior.
+    fn execute_pipelined(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        self.execute(xs, sched)
+    }
+
+    /// Warm the additional state the *pipelined* execution path needs
+    /// (stage tables, the process-shared pool's worker threads) so the
+    /// first pipelined batch pays no build spike.  Called by
+    /// [`Coordinator::start`] alongside [`Backend::prewarm`] when the
+    /// coordinator runs [`ExecutionMode::Pipelined`].  Default: no-op.
+    fn prewarm_pipelined(&self, _sched: &ConfigSchedule) {}
 }
 
 /// Functional bit-exact backend (table-driven rust model, batched
@@ -97,6 +117,21 @@ impl Backend for NativeBackend {
 
     fn prewarm(&self, sched: &ConfigSchedule) {
         self.network.tables.prewarm(sched);
+    }
+
+    fn execute_pipelined(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        // the pipeline's plan falls back to classify_batch (same
+        // arithmetic) whenever its cost model says pipelining cannot
+        // win the batch, so this is always safe to route through
+        Ok(self.network.classify_batch_pipelined(xs, sched))
+    }
+
+    fn prewarm_pipelined(&self, sched: &ConfigSchedule) {
+        crate::datapath::pipeline::prewarm(&self.network, sched);
     }
 }
 
@@ -216,6 +251,22 @@ impl Backend for PjrtBackend {
     }
 }
 
+/// How one logical batch is spread over compute threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecutionMode {
+    /// Split the batch into row shards executed cooperatively on the
+    /// coordinator's shard pool (every shard runs all layers).
+    #[default]
+    RowSharded,
+    /// Route the whole batch through the backend's layer-pipelined
+    /// streaming executor ([`Backend::execute_pipelined`]): stages of
+    /// consecutive layers owned by dedicated workers, micro-batches
+    /// flowing through bounded queues.  Batches the pipeline's cost
+    /// model declines (small windows, shallow topologies) fall back to
+    /// the backend's plain path inside the backend itself.
+    Pipelined,
+}
+
 /// Coordinator tuning knobs.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -246,6 +297,9 @@ pub struct CoordinatorConfig {
     /// `0` derives `queue_capacity + workers * max_batch` (the bound
     /// the pre-adaptive pipeline implied).
     pub inflight_budget: usize,
+    /// How each logical batch is executed (row shards vs the
+    /// layer-pipelined streaming executor).
+    pub execution: ExecutionMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -259,6 +313,7 @@ impl Default for CoordinatorConfig {
             adaptive: true,
             latency_slo_us: 5_000,
             inflight_budget: 0,
+            execution: ExecutionMode::RowSharded,
         }
     }
 }
@@ -364,6 +419,7 @@ struct WorkerCtx {
     backend: Arc<dyn Backend>,
     pool: Option<Arc<ThreadPool>>,
     shards: usize,
+    execution: ExecutionMode,
     /// This worker's private metrics shard.
     metrics: Arc<Vec<Mutex<Metrics>>>,
     slot: usize,
@@ -407,18 +463,26 @@ impl Coordinator {
         // schedule needs now, not on the first batch — and for dynamic
         // policies, every schedule the governor could switch to, so a
         // mid-serve schedule change never builds tables inside the
-        // request path
-        backend.prewarm(&governor.current());
+        // request path.  A pipelined coordinator additionally warms the
+        // pipeline's state (stage tables, the shared pool's workers)
+        // for the same schedules.
+        let warm = |sched: &ConfigSchedule| {
+            backend.prewarm(sched);
+            if cfg.execution == ExecutionMode::Pipelined {
+                backend.prewarm_pipelined(sched);
+            }
+        };
+        warm(&governor.current());
         if governor.is_dynamic() {
             match governor.schedule_frontier() {
                 Some(f) => {
                     for p in f.points() {
-                        backend.prewarm(&p.sched);
+                        warm(&p.sched);
                     }
                 }
                 None => {
                     for p in governor.frontier() {
-                        backend.prewarm(&ConfigSchedule::Uniform(p.cfg));
+                        warm(&ConfigSchedule::Uniform(p.cfg));
                     }
                 }
             }
@@ -519,7 +583,8 @@ impl Coordinator {
         // shards from concurrent workers queue cooperatively.  The
         // workers hold the only references; the pool shuts down with
         // the last exiting worker.
-        let pool = (cfg.shards > 1).then(|| Arc::new(ThreadPool::new(n_workers)));
+        let pool = (cfg.shards > 1 && cfg.execution == ExecutionMode::RowSharded)
+            .then(|| Arc::new(ThreadPool::new(n_workers)));
 
         // worker threads, each with a private metrics shard
         for i in 0..n_workers {
@@ -528,6 +593,7 @@ impl Coordinator {
                 backend: Arc::clone(&backend),
                 pool: pool.clone(),
                 shards: cfg.shards,
+                execution: cfg.execution,
                 metrics: Arc::clone(&metrics),
                 slot: i,
                 governor: Arc::clone(&governor),
@@ -570,6 +636,7 @@ impl Coordinator {
         backend: &Arc<dyn Backend>,
         pool: Option<&ThreadPool>,
         shards: usize,
+        mode: ExecutionMode,
         xs: &Arc<Vec<[u8; N_FEATURES]>>,
         sched: &ConfigSchedule,
     ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
@@ -579,15 +646,25 @@ impl Coordinator {
         // an unwinding backend must fail the batch (closing its reply
         // channels), not kill the worker thread and strand the queue
         let guarded = |backend: &Arc<dyn Backend>, xs: &[[u8; N_FEATURES]]| {
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| backend.execute(xs, sched)))
-                .unwrap_or_else(|_| {
-                    Err(anyhow::anyhow!(
-                        "backend '{}' panicked on a {}-image batch",
-                        backend.name(),
-                        xs.len()
-                    ))
-                })
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match mode {
+                ExecutionMode::RowSharded => backend.execute(xs, sched),
+                ExecutionMode::Pipelined => backend.execute_pipelined(xs, sched),
+            }))
+            .unwrap_or_else(|_| {
+                Err(anyhow::anyhow!(
+                    "backend '{}' panicked on a {}-image batch",
+                    backend.name(),
+                    xs.len()
+                ))
+            })
         };
+        if mode == ExecutionMode::Pipelined {
+            // the pipeline spreads one batch's *layers* over the
+            // process-shared pool itself; splitting into row shards
+            // first would shrink each call below the pipeline's
+            // engagement threshold, so the whole batch goes in one call
+            return guarded(backend, xs);
+        }
         let Some(pool) = pool else {
             return guarded(backend, xs);
         };
@@ -634,8 +711,14 @@ impl Coordinator {
             Arc::new(batch.requests.iter().map(|r| r.features).collect());
         let n = batch.requests.len();
         let t0 = Instant::now();
-        let results =
-            Self::execute_sharded(&ctx.backend, ctx.pool.as_deref(), ctx.shards, &xs, &sched);
+        let results = Self::execute_sharded(
+            &ctx.backend,
+            ctx.pool.as_deref(),
+            ctx.shards,
+            ctx.execution,
+            &xs,
+            &sched,
+        );
         let exec_us = t0.elapsed().as_micros() as u64;
         // a short/long result would silently truncate the reply zip
         // below and leave requesters hanging on open channels — treat
@@ -1056,6 +1139,35 @@ mod tests {
     }
 
     #[test]
+    fn startup_prewarms_pipeline_stage_tables_too() {
+        // pipelined-mode startup must leave nothing lazy for the stage
+        // workers to build mid-request: the *signed* tables (what the
+        // gemm tiles and the pipeline stages gather from) of every
+        // scheduled config are materialized before the first batch
+        let backend = test_backend();
+        assert_eq!(backend.network.tables.signed_built(), 0, "lazy at rest");
+        let sched =
+            ConfigSchedule::per_layer(vec![Config::new(4).unwrap(), Config::new(19).unwrap()]);
+        let (gov, pm) = test_governor(Policy::FixedSchedule(sched));
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                execution: ExecutionMode::Pipelined,
+                ..CoordinatorConfig::default()
+            },
+            backend.clone() as Arc<dyn Backend>,
+            gov,
+            pm,
+        );
+        assert_eq!(backend.network.tables.built(), 2);
+        assert_eq!(
+            backend.network.tables.signed_built(),
+            2,
+            "pipeline stages must find their signed tables prebuilt"
+        );
+        drop(coord.shutdown());
+    }
+
+    #[test]
     fn batches_group_under_load() {
         let (coord, _) = start(
             Policy::Fixed(Config::ACCURATE),
@@ -1259,11 +1371,71 @@ mod tests {
         let pool = ThreadPool::new(2);
         let xs = Arc::new(vec![[0u8; N_FEATURES]; 4]);
         let sched = ConfigSchedule::uniform(Config::ACCURATE);
-        let err = Coordinator::execute_sharded(&backend, Some(&pool), 2, &xs, &sched)
-            .expect_err("panicking shard must surface as an error, not unwind");
+        let err = Coordinator::execute_sharded(
+            &backend,
+            Some(&pool),
+            2,
+            ExecutionMode::RowSharded,
+            &xs,
+            &sched,
+        )
+        .expect_err("panicking shard must surface as an error, not unwind");
         assert!(format!("{err:#}").contains("panicked"), "{err:#}");
         // the shard pool survives for the next batch
         assert_eq!(pool.scatter(vec![|| 1u32]), vec![1]);
+    }
+
+    #[test]
+    fn pipelined_panicking_backend_becomes_a_backend_error() {
+        // same unwind-safety contract on the pipelined route: the
+        // default execute_pipelined delegates to execute, so the
+        // injected panic unwinds out of the pipeline entry point and
+        // must still be caught into a batch error
+        let backend: Arc<dyn Backend> = Arc::new(PanickingBackend {
+            topo: Topology::seed(),
+        });
+        let xs = Arc::new(vec![[0u8; N_FEATURES]; 4]);
+        let sched = ConfigSchedule::uniform(Config::ACCURATE);
+        let err = Coordinator::execute_sharded(
+            &backend,
+            None,
+            2,
+            ExecutionMode::Pipelined,
+            &xs,
+            &sched,
+        )
+        .expect_err("panicking pipelined backend must fail the batch, not unwind");
+        assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+    }
+
+    #[test]
+    fn pipelined_mode_serves_bit_identically() {
+        // end-to-end through the coordinator: a Pipelined-mode run must
+        // answer exactly what the RowSharded default answers (the seed
+        // topology is shallow, so the pipeline's cost model falls back
+        // internally — the routing itself is what is under test here)
+        let sched = ConfigSchedule::per_layer(vec![Config::new(7).unwrap(), Config::ACCURATE]);
+        let (coord, backend) = start(
+            Policy::FixedSchedule(sched.clone()),
+            CoordinatorConfig {
+                execution: ExecutionMode::Pipelined,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let mut rng = Pcg32::new(17);
+        for _ in 0..20 {
+            let mut x = [0u8; N_FEATURES];
+            for v in x.iter_mut() {
+                *v = rng.below(128) as u8;
+            }
+            let resp = coord.classify(x).expect("response");
+            let want = backend.network.forward_sched(&x, &sched);
+            assert_eq!(resp.pred, want.pred);
+            assert_eq!(resp.logits, want.logits);
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.requests, 20);
+        assert_eq!(m.backend_errors, 0);
     }
 
     #[test]

@@ -18,6 +18,12 @@
 //!   [`ActivationCheckpoint`] boundary, which is what makes the
 //!   per-layer sensitivity sweep pay for each layer suffix only once
 //!   (DESIGN.md §Perf).
+//! * [`Network::forward_batch_pipelined`] — the layer-pipelined
+//!   streaming variant ([`pipeline`]): stages of consecutive layers run
+//!   on dedicated shared-pool workers (panels + signed tables stay
+//!   cache-hot per stage) with micro-batches flowing through bounded
+//!   queues; bit-identical to `forward_batch`, falling back to it
+//!   whenever the plan's cost model says pipelining cannot win.
 //! * [`DatapathSim`] — the cycle-accurate path: a [`Controller`] walks
 //!   the generalized FSM (ceil(width/10) passes per layer over the 10
 //!   physical [`Neuron`]s), activations land in the per-layer 8-bit
@@ -30,6 +36,7 @@
 pub mod controller;
 pub mod gemm;
 pub mod neuron;
+pub mod pipeline;
 
 use crate::amul::{sm, Config, ConfigSchedule, MulTable, MulTables};
 use crate::util::threadpool::{self, ThreadPool};

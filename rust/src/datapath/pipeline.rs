@@ -1,0 +1,705 @@
+//! Layer-pipelined streaming batch executor.
+//!
+//! [`Network::forward_batch`] parallelizes *across rows of one layer at
+//! a time*: every worker re-touches every layer's packed panel and every
+//! scheduled configuration's 128 KiB [`SignedMulTable`], so the per-core
+//! working set is the whole network.  This module pipelines *across
+//! layers* instead: a [`Plan`] partitions the weight layers into
+//! contiguous **stages**, each stage is owned by one or more shared-pool
+//! workers (replicas), and micro-batches of activations flow
+//! stage-to-stage through bounded [`Channel`] queues.  A stage's workers
+//! touch only that stage's panels and the signed tables of that stage's
+//! schedule entries — the cache-residency win the approximate-MAC
+//! literature attributes to keeping weights and the approximation
+//! config resident per compute unit.
+//!
+//! # Stage assignment cost model
+//!
+//! Layer `l` costs its MAC count `n_in * n_out`; a stage's cost is its
+//! layers' MACs plus [`TABLE_PENALTY`] for every *distinct* scheduled
+//! configuration beyond the first (each extra 128 KiB signed table the
+//! stage's workers must keep resident — this is how a layer's config
+//! weights the partition, and why stage boundaries prefer to align with
+//! schedule boundaries).  For every stage count `k` a DP finds the
+//! contiguous partition minimizing the max stage cost, spare workers go
+//! to the most-loaded stage (greedy on `cost/replicas`), and the `k`
+//! with the lowest modeled bottleneck wins.  When even the best plan's
+//! bottleneck exceeds the row-partition model `total/workers` by more
+//! than [`PIPELINE_SLACK`], pipelining cannot win and
+//! [`Plan::build`] declines (shallow topologies, tiny machines).
+//!
+//! # Queues and backpressure
+//!
+//! Each stage boundary is one bounded MPMC [`Channel`] sized
+//! `QUEUE_DEPTH_PER_CONSUMER ×` the consumer stage's replica count:
+//! deep enough that a transient stall never idles the producers, small
+//! enough that a lagging stage blocks upstream `send`s (backpressure)
+//! instead of piling the whole batch up in memory.  Stage 0 has no
+//! input queue — its replicas claim micro-batches off a shared atomic
+//! cursor over the input slice.
+//!
+//! # Bit-exactness
+//!
+//! Every stage runs the same [`gemm::layer_batch_with`] kernel run and
+//! the same bias/activation epilogue as [`Network::forward_batch`]'s
+//! `run_layer`, in the same layer order, and each image's arithmetic is
+//! independent of how the batch is chunked into micro-batches (the
+//! kernels compute per-image dot products).  Results are reassembled in
+//! micro-batch index order, so the output is bit-identical to the
+//! serial path for every topology and [`ConfigSchedule`] — the
+//! differential suite in `tests/pipeline.rs` asserts this across all 33
+//! configurations.
+//!
+//! # Unwind safety
+//!
+//! Every stage job holds a guard; when the *last* replica of a stage
+//! exits — normal completion or panic — the guard closes the stage's
+//! input and output queues.  Closure cascades both ways (`send` returns
+//! `Closed`, `recv` drains then returns `None`), so every stage job
+//! terminates, `scatter_scoped` re-raises the original panic payload,
+//! and no worker is left blocked on a queue that will never move.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::amul::{sm, Config, ConfigSchedule, N_CONFIGS};
+use crate::util::threadpool::{self, Channel, ThreadPool};
+use crate::weights::Activation;
+
+use super::gemm;
+use super::neuron::{argmax, saturate_activation};
+use super::{ImageResult, Network, PAR_BATCH};
+
+/// Minimum weight layers for pipelining: with fewer than 3 layers a
+/// stage partition is just the row-partition path with extra queue hops.
+pub const MIN_PIPELINE_LAYERS: usize = 3;
+
+/// Minimum batch size: below the row-partition threshold the scatter
+/// and queue overhead dominate (mirrors `PAR_BATCH`).
+pub const MIN_PIPELINE_BATCH: usize = PAR_BATCH;
+
+/// Stage-count search ceiling (queue hops are not free; deeper partitions
+/// than this never model out ahead on pool-sized machines).
+const MAX_STAGES: usize = 8;
+
+/// Modeled MAC-equivalents charged per extra distinct signed table
+/// (128 KiB) a stage must keep resident — the config weighting of the
+/// stage-assignment cost model.
+const TABLE_PENALTY: u64 = 1 << 16;
+
+/// A plan whose modeled bottleneck `max(cost/replicas)` exceeds the
+/// row-partition model `total/workers` by more than this factor falls
+/// back: the structural lower bound says pipelining cannot recover the
+/// imbalance, cache residency notwithstanding.
+const PIPELINE_SLACK: f64 = 1.10;
+
+/// Queue slots per consumer replica at each stage boundary — the
+/// backpressure rule (see module docs).
+const QUEUE_DEPTH_PER_CONSUMER: usize = 2;
+
+/// Micro-batch size bounds: small enough to keep the pipeline full and
+/// balanced, large enough that tile kernels amortize their setup.
+const MICRO_MIN: usize = 16;
+const MICRO_MAX: usize = 128;
+
+/// One process-wide pipeline at a time: two pipelines interleaving
+/// stage jobs on the shared pool could starve each other's downstream
+/// stages of workers while upstream stages block on full queues.  The
+/// loser of the race falls back to the row-partition path.
+static PIPELINE_ACTIVE: AtomicBool = AtomicBool::new(false);
+
+struct PipelineLease;
+
+impl PipelineLease {
+    fn acquire() -> Option<PipelineLease> {
+        PIPELINE_ACTIVE
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+            .then_some(PipelineLease)
+    }
+}
+
+impl Drop for PipelineLease {
+    fn drop(&mut self) {
+        PIPELINE_ACTIVE.store(false, Ordering::Release);
+    }
+}
+
+/// A stage partition + worker assignment for one pipelined run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Plan {
+    /// Contiguous layer ranges, one per stage, covering `0..n_layers`.
+    stages: Vec<Range<usize>>,
+    /// Workers owning each stage (all ≥ 1; sums to ≤ pool workers).
+    replicas: Vec<usize>,
+    /// Images per micro-batch flowing through the queues.
+    micro_batch: usize,
+}
+
+impl Plan {
+    /// Model-driven plan for `batch` images on `workers` pool workers,
+    /// or `None` when pipelining cannot win (shallow topology, small
+    /// batch, too few workers, or a bottleneck the slack rule rejects).
+    pub fn build(
+        net: &Network,
+        sched: &ConfigSchedule,
+        workers: usize,
+        batch: usize,
+    ) -> Option<Plan> {
+        let n_layers = net.topology().n_layers();
+        if n_layers < MIN_PIPELINE_LAYERS || batch < MIN_PIPELINE_BATCH || workers < 2 {
+            return None;
+        }
+        let k_max = n_layers.min(workers).min(MAX_STAGES);
+        let mut best: Option<(f64, Vec<Range<usize>>, Vec<usize>)> = None;
+        for k in 2..=k_max {
+            let stages = best_partition(net, sched, n_layers, k);
+            let costs: Vec<u64> = stages.iter().map(|r| stage_cost(net, sched, r)).collect();
+            let replicas = assign_replicas(&costs, workers);
+            let bottleneck = costs
+                .iter()
+                .zip(&replicas)
+                .map(|(&c, &r)| c as f64 / r as f64)
+                .fold(0.0, f64::max);
+            if best.as_ref().is_none_or(|(b, _, _)| bottleneck < *b) {
+                best = Some((bottleneck, stages, replicas));
+            }
+        }
+        let (bottleneck, stages, replicas) = best?;
+        let total: u64 = (0..n_layers).map(|l| layer_macs(net, l)).sum();
+        if bottleneck > total as f64 / workers as f64 * PIPELINE_SLACK {
+            return None;
+        }
+        Some(Plan {
+            stages,
+            replicas,
+            micro_batch: micro_batch_for(batch, workers),
+        })
+    }
+
+    /// Explicit plan for tests and the degenerate-case suite: `k` stages
+    /// (clamped to the layer count) partitioned by the same cost model,
+    /// one replica each, a fixed micro-batch size.  Never declines.
+    pub fn forced(net: &Network, sched: &ConfigSchedule, k: usize, micro_batch: usize) -> Plan {
+        let n_layers = net.topology().n_layers();
+        let k = k.clamp(1, n_layers);
+        Plan {
+            stages: best_partition(net, sched, n_layers, k),
+            replicas: vec![1; k],
+            micro_batch: micro_batch.max(1),
+        }
+    }
+
+    /// Contiguous layer range of each stage.
+    pub fn stages(&self) -> &[Range<usize>] {
+        &self.stages
+    }
+
+    /// Workers assigned to each stage.
+    pub fn replicas(&self) -> &[usize] {
+        &self.replicas
+    }
+
+    /// Images per micro-batch.
+    pub fn micro_batch(&self) -> usize {
+        self.micro_batch
+    }
+
+    /// Total pool workers the plan occupies.
+    pub fn total_workers(&self) -> usize {
+        self.replicas.iter().sum()
+    }
+
+    /// Compact human form, e.g. `"[0..1]x7 | [1..3]x1 @ micro 16"`.
+    pub fn describe(&self) -> String {
+        let stages: Vec<String> = self
+            .stages
+            .iter()
+            .zip(&self.replicas)
+            .map(|(s, r)| format!("[{}..{}]x{r}", s.start, s.end))
+            .collect();
+        format!("{} @ micro {}", stages.join(" | "), self.micro_batch)
+    }
+}
+
+/// Modeled cost of weight layer `l`: its MAC count (one table gather
+/// per MAC under every configuration).
+fn layer_macs(net: &Network, l: usize) -> u64 {
+    let lw = &net.weights.layers[l];
+    lw.n_in as u64 * lw.n_out as u64
+}
+
+/// Stage cost: MACs plus the table-residency charge for every distinct
+/// scheduled configuration beyond the first.
+fn stage_cost(net: &Network, sched: &ConfigSchedule, range: &Range<usize>) -> u64 {
+    let mut macs = 0u64;
+    let mut seen = [false; N_CONFIGS];
+    let mut tables = 0u64;
+    for l in range.clone() {
+        macs += layer_macs(net, l);
+        if !std::mem::replace(&mut seen[sched.layer(l).index()], true) {
+            tables += 1;
+        }
+    }
+    macs + TABLE_PENALTY * tables.saturating_sub(1)
+}
+
+/// Contiguous partition of `0..n_layers` into exactly `k` stages
+/// minimizing the maximum [`stage_cost`] (DP over prefixes; layer
+/// counts are tiny, so O(k·L²) is free).
+fn best_partition(
+    net: &Network,
+    sched: &ConfigSchedule,
+    n_layers: usize,
+    k: usize,
+) -> Vec<Range<usize>> {
+    debug_assert!((1..=n_layers).contains(&k));
+    let mut dp = vec![vec![u64::MAX; n_layers + 1]; k + 1];
+    let mut cut = vec![vec![0usize; n_layers + 1]; k + 1];
+    dp[0][0] = 0;
+    for j in 1..=k {
+        for i in j..=n_layers {
+            for t in (j - 1)..i {
+                if dp[j - 1][t] == u64::MAX {
+                    continue;
+                }
+                let c = dp[j - 1][t].max(stage_cost(net, sched, &(t..i)));
+                if c < dp[j][i] {
+                    dp[j][i] = c;
+                    cut[j][i] = t;
+                }
+            }
+        }
+    }
+    let mut stages = Vec::with_capacity(k);
+    let mut i = n_layers;
+    for j in (1..=k).rev() {
+        let t = cut[j][i];
+        stages.push(t..i);
+        i = t;
+    }
+    stages.reverse();
+    stages
+}
+
+/// One replica per stage, then every spare worker to the stage with the
+/// highest per-replica load.
+fn assign_replicas(costs: &[u64], workers: usize) -> Vec<usize> {
+    let mut replicas = vec![1usize; costs.len()];
+    for _ in 0..workers.saturating_sub(costs.len()) {
+        let (i, _) = replicas
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (i, costs[i] as f64 / r as f64))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("at least one stage");
+        replicas[i] += 1;
+    }
+    replicas
+}
+
+/// Micro-batch size: roughly four micro-batches in flight per worker so
+/// the pipeline fills and drains without tail imbalance.
+fn micro_batch_for(batch: usize, workers: usize) -> usize {
+    (batch / (4 * workers.max(1))).clamp(MICRO_MIN, MICRO_MAX).min(batch.max(1))
+}
+
+/// One micro-batch in flight: the activation/accumulator buffers travel
+/// with it from stage to stage (allocated once per micro-batch, reused
+/// across its layers).
+struct Micro {
+    /// Micro-batch index in submission order (reassembly key).
+    idx: usize,
+    /// Images in this micro-batch.
+    b: usize,
+    /// Current activations, image-major `b × layer_in`.
+    cur: Vec<u8>,
+    /// Next-layer staging (swapped with `cur` per hidden layer).
+    next: Vec<u8>,
+    /// Accumulators of the layer in flight.
+    acc: Vec<i32>,
+    /// Hidden activations, layer-major blocks of `b × layer_out`.
+    hidden: Vec<u8>,
+    /// Final-layer logits, image-major.
+    logits: Vec<i32>,
+}
+
+impl Micro {
+    fn load<X: AsRef<[u8]>>(net: &Network, xs: &[X], idx: usize) -> Micro {
+        let topo = net.topology();
+        let n_in = topo.inputs();
+        let mut cur = Vec::with_capacity(xs.len() * n_in);
+        for x in xs {
+            let x = x.as_ref();
+            assert_eq!(x.len(), n_in, "input width mismatch for topology {topo}");
+            cur.extend_from_slice(x);
+        }
+        Micro {
+            idx,
+            b: xs.len(),
+            cur,
+            next: Vec::new(),
+            acc: Vec::new(),
+            hidden: Vec::new(),
+            logits: Vec::new(),
+        }
+    }
+}
+
+/// Advance one micro-batch through weight layer `l` — the same kernel
+/// run and bias/activation epilogue as `Network::run_layer`, so the
+/// arithmetic (and its order) is identical to the serial path.
+fn run_layer_micro(net: &Network, kernel: gemm::Kernel, l: usize, cfg: Config, m: &mut Micro) {
+    let topo = net.topology();
+    let lw = &net.weights.layers[l];
+    let t = net.tables.signed(cfg);
+    let (n_in, n_out, b) = (lw.n_in, lw.n_out, m.b);
+    debug_assert_eq!(m.cur.len(), b * n_in);
+    // size-only resize: the kernel writes every accumulator element
+    m.acc.resize(b * n_out, 0);
+    gemm::layer_batch_with(kernel, net.packed_layer(l), t, &m.cur, b, &mut m.acc);
+    match topo.activation(l) {
+        Activation::Identity => {
+            m.logits.clear();
+            m.logits.reserve(b * n_out);
+            for img in 0..b {
+                for j in 0..n_out {
+                    m.logits.push(m.acc[img * n_out + j] + (sm::decode(lw.b[j]) << 7));
+                }
+            }
+        }
+        Activation::ReluSat => {
+            m.next.clear();
+            m.next.reserve(b * n_out);
+            for img in 0..b {
+                for j in 0..n_out {
+                    let a = m.acc[img * n_out + j] + (sm::decode(lw.b[j]) << 7);
+                    m.next.push(saturate_activation(a));
+                }
+            }
+            std::mem::swap(&mut m.cur, &mut m.next);
+            m.hidden.extend_from_slice(&m.cur);
+        }
+    }
+}
+
+/// Assemble a finished micro-batch's per-image results (same slicing as
+/// `Network::collect_results`).
+fn finish_micro(net: &Network, m: &Micro) -> Vec<ImageResult> {
+    let topo = net.topology();
+    let n_out = topo.outputs();
+    let n_layers = topo.n_layers();
+    (0..m.b)
+        .map(|img| {
+            let mut hidden = Vec::with_capacity(topo.hidden_units());
+            let mut off = 0;
+            for l in 0..n_layers - 1 {
+                let w = topo.layer_out(l);
+                hidden.extend_from_slice(&m.hidden[off + img * w..off + (img + 1) * w]);
+                off += m.b * w;
+            }
+            let logits = m.logits[img * n_out..(img + 1) * n_out].to_vec();
+            ImageResult {
+                pred: argmax(&logits) as u8,
+                logits,
+                hidden,
+            }
+        })
+        .collect()
+}
+
+/// Closes a stage's input and output queues when the stage's *last*
+/// replica exits — on normal completion and on unwind alike, which is
+/// what cascades shutdown through the pipeline instead of leaving
+/// neighbors blocked (see module docs).
+struct StageGuard<'a> {
+    stage: usize,
+    remaining: &'a [AtomicUsize],
+    queues: &'a [Channel<Micro>],
+}
+
+impl Drop for StageGuard<'_> {
+    fn drop(&mut self) {
+        if self.remaining[self.stage].fetch_sub(1, Ordering::AcqRel) == 1 {
+            if self.stage > 0 {
+                self.queues[self.stage - 1].close();
+            }
+            if self.stage < self.queues.len() {
+                self.queues[self.stage].close();
+            }
+        }
+    }
+}
+
+/// Execute `xs` through the pipeline under `plan`, bit-exact with
+/// [`Network::forward_batch`].  The threaded path needs the whole plan
+/// resident on the shared pool at once — every stage replica blocked on
+/// a bounded queue must leave a worker slot for its consumer — so the
+/// micro-batches stream through all stages on the calling thread
+/// instead (same code path per layer, still bit-exact) whenever that
+/// cannot be guaranteed: a single-worker plan, a plan wider than the
+/// pool, a caller already on a pool worker thread (a scatter would run
+/// inline and deadlock on the queues), or another pipeline holding the
+/// process-wide lease.
+pub fn run<X: AsRef<[u8]> + Sync>(
+    net: &Network,
+    xs: &[X],
+    sched: &ConfigSchedule,
+    plan: &Plan,
+) -> Vec<ImageResult> {
+    let b = xs.len();
+    if b == 0 {
+        return Vec::new();
+    }
+    let kernel = gemm::active_kernel();
+    let micro = plan.micro_batch.min(b);
+    let n_micros = b.div_ceil(micro);
+    let n_stages = plan.stages.len();
+    let lease = (plan.total_workers() > 1
+        && plan.total_workers() <= threadpool::shared_pool().workers()
+        && !ThreadPool::on_worker_thread())
+    .then(PipelineLease::acquire)
+    .flatten();
+    if lease.is_none() {
+        let mut out = Vec::with_capacity(b);
+        for i in 0..n_micros {
+            let mut m = Micro::load(net, &xs[i * micro..((i + 1) * micro).min(b)], i);
+            for l in 0..net.topology().n_layers() {
+                run_layer_micro(net, kernel, l, sched.layer(l), &mut m);
+            }
+            out.extend(finish_micro(net, &m));
+        }
+        return out;
+    }
+
+    let queues: Vec<Channel<Micro>> = (1..n_stages)
+        .map(|s| Channel::new(QUEUE_DEPTH_PER_CONSUMER * plan.replicas[s]))
+        .collect();
+    let remaining: Vec<AtomicUsize> =
+        plan.replicas.iter().map(|&r| AtomicUsize::new(r)).collect();
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Vec<ImageResult>>>> =
+        (0..n_micros).map(|_| Mutex::new(None)).collect();
+
+    let stage_of: Vec<usize> = plan
+        .replicas
+        .iter()
+        .enumerate()
+        .flat_map(|(s, &r)| std::iter::repeat_n(s, r))
+        .collect();
+    let jobs: Vec<_> = stage_of
+        .iter()
+        .map(|&s| {
+            let (queues, remaining, cursor, slots) = (&queues, &remaining, &cursor, &slots);
+            let range = plan.stages[s].clone();
+            move || {
+                let _guard = StageGuard {
+                    stage: s,
+                    remaining,
+                    queues,
+                };
+                let advance = |m: &mut Micro| {
+                    for l in range.clone() {
+                        run_layer_micro(net, kernel, l, sched.layer(l), m);
+                    }
+                };
+                let deliver = |m: Micro| -> bool {
+                    if s + 1 == n_stages {
+                        *slots[m.idx].lock().unwrap() = Some(finish_micro(net, &m));
+                        true
+                    } else {
+                        // blocking send = backpressure when the next
+                        // stage lags; Closed means it died — stop
+                        // producing so shutdown cascades
+                        queues[s].send(m).is_ok()
+                    }
+                };
+                if s == 0 {
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_micros {
+                            break;
+                        }
+                        let mut m = Micro::load(net, &xs[i * micro..((i + 1) * micro).min(b)], i);
+                        advance(&mut m);
+                        if !deliver(m) {
+                            break;
+                        }
+                    }
+                } else {
+                    while let Some(mut m) = queues[s - 1].recv() {
+                        advance(&mut m);
+                        if !deliver(m) {
+                            break;
+                        }
+                    }
+                }
+            }
+        })
+        .collect();
+    threadpool::shared_pool().scatter_scoped(jobs);
+
+    let mut out = Vec::with_capacity(b);
+    for slot in slots {
+        out.extend(
+            slot.into_inner()
+                .unwrap()
+                .expect("pipeline micro-batch result missing"),
+        );
+    }
+    out
+}
+
+/// Warm everything the first pipelined batch touches: the signed tables
+/// of every scheduled configuration (the packed panels were laid out at
+/// [`Network`] construction) and the shared pool's worker threads.
+/// `Coordinator::start` and the bench harness call this outside their
+/// timed/served regions so no request pays the build spike.
+pub fn prewarm(net: &Network, sched: &ConfigSchedule) {
+    net.tables.prewarm(sched);
+    let _ = threadpool::shared_pool();
+}
+
+impl Network {
+    /// [`Network::forward_batch`], routed through the layer-pipelined
+    /// streaming executor when the cost model says pipelining can win.
+    /// Falls back to the row-partition path for shallow topologies
+    /// (fewer than [`MIN_PIPELINE_LAYERS`] weight layers), small
+    /// batches, and single-worker pools; accepted plans that cannot
+    /// hold the whole pool (a caller already on a pool worker thread,
+    /// another pipeline holding the process-wide lease) stream their
+    /// micro-batches on the calling thread instead.  Bit-exact with
+    /// [`Network::forward_batch`] every way.
+    pub fn forward_batch_pipelined<X: AsRef<[u8]> + Sync>(
+        &self,
+        xs: &[X],
+        sched: &ConfigSchedule,
+    ) -> Vec<ImageResult> {
+        // `run` itself takes the process-wide lease (and streams
+        // sequentially when it loses the race), so plan rejection is
+        // the only fallback decided here
+        match self.pipeline_plan(xs.len(), sched) {
+            Some(plan) => run(self, xs, sched, &plan),
+            None => self.forward_batch(xs, sched),
+        }
+    }
+
+    /// [`Network::classify_batch`] through the pipelined executor —
+    /// the serving backends' pipelined entry point.  Unlike
+    /// `classify_batch` the hidden activations are materialized in the
+    /// in-flight micro-batches (they ride the stage queues anyway);
+    /// only the returned logits outlive the call.
+    pub fn classify_batch_pipelined<X: AsRef<[u8]> + Sync>(
+        &self,
+        xs: &[X],
+        sched: &ConfigSchedule,
+    ) -> Vec<(Vec<i32>, u8)> {
+        self.forward_batch_pipelined(xs, sched)
+            .into_iter()
+            .map(|r| (r.logits, r.pred))
+            .collect()
+    }
+
+    /// The plan [`Network::forward_batch_pipelined`] would run `batch`
+    /// images under, or `None` when it would fall back to the
+    /// row-partition path (bench reporting + tests).
+    pub fn pipeline_plan(&self, batch: usize, sched: &ConfigSchedule) -> Option<Plan> {
+        if ThreadPool::on_worker_thread() {
+            return None;
+        }
+        Plan::build(self, sched, threadpool::shared_pool().workers(), batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::weights::{QuantWeights, Topology};
+
+    fn deep_net() -> Network {
+        let topo = Topology::new(vec![32, 32, 32, 32, 32]).unwrap();
+        Network::new(QuantWeights::random(&topo, 3))
+    }
+
+    #[test]
+    fn partition_covers_all_layers_contiguously() {
+        let net = deep_net();
+        let sched = ConfigSchedule::uniform(Config::ACCURATE);
+        for k in 1..=4 {
+            let stages = best_partition(&net, &sched, 4, k);
+            assert_eq!(stages.len(), k);
+            assert_eq!(stages[0].start, 0);
+            assert_eq!(stages[k - 1].end, 4);
+            for w in stages.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn config_boundary_shifts_the_partition() {
+        // uniform layer MACs: the balanced 2-stage split is [0..2|2..4];
+        // a config change after layer 0 makes [0..2] pay TABLE_PENALTY,
+        // so the cost model moves the cut onto the schedule boundary
+        let net = deep_net();
+        let uniform = ConfigSchedule::uniform(Config::ACCURATE);
+        assert_eq!(best_partition(&net, &uniform, 4, 2), vec![0..2, 2..4]);
+        let mixed = ConfigSchedule::per_layer(vec![
+            Config::ACCURATE,
+            Config::MAX_APPROX,
+            Config::MAX_APPROX,
+            Config::MAX_APPROX,
+        ]);
+        assert_eq!(best_partition(&net, &mixed, 4, 2), vec![0..1, 1..4]);
+    }
+
+    #[test]
+    fn spare_workers_go_to_the_bottleneck_stage() {
+        assert_eq!(assign_replicas(&[100_352, 8_832], 8), vec![7, 1]);
+        assert_eq!(assign_replicas(&[100, 100, 100], 3), vec![1, 1, 1]);
+        assert_eq!(assign_replicas(&[10, 10], 1), vec![1, 1]); // clamped at 1 each
+    }
+
+    #[test]
+    fn build_declines_shallow_small_and_serial() {
+        let seed = Network::new(QuantWeights::random(&Topology::seed(), 1));
+        let sched = ConfigSchedule::uniform(Config::ACCURATE);
+        // 2 layers: shallow
+        assert!(Plan::build(&seed, &sched, 8, 4096).is_none());
+        let deep = deep_net();
+        // small batch
+        assert!(Plan::build(&deep, &sched, 8, MIN_PIPELINE_BATCH - 1).is_none());
+        // single worker
+        assert!(Plan::build(&deep, &sched, 1, 4096).is_none());
+    }
+
+    #[test]
+    fn build_on_the_mnist_shape_pins_workers_on_the_dominant_layer() {
+        let topo = Topology::new(vec![784, 128, 64, 10]).unwrap();
+        let net = Network::new(QuantWeights::random(&topo, 7));
+        let sched = ConfigSchedule::uniform(Config::ACCURATE);
+        let plan = Plan::build(&net, &sched, 8, 512).expect("deep shape must pipeline");
+        // layer 0 holds 100352 of 109184 MACs: it must own a stage with
+        // strictly more replicas than any other
+        let dominant = plan
+            .stages()
+            .iter()
+            .position(|s| s.contains(&0))
+            .expect("layer 0 staged");
+        for (i, &r) in plan.replicas().iter().enumerate() {
+            if i != dominant {
+                assert!(plan.replicas()[dominant] > r, "{}", plan.describe());
+            }
+        }
+        assert_eq!(plan.total_workers(), 8, "{}", plan.describe());
+    }
+
+    #[test]
+    fn lease_is_exclusive_and_released() {
+        let a = PipelineLease::acquire().expect("free");
+        assert!(PipelineLease::acquire().is_none(), "held");
+        drop(a);
+        assert!(PipelineLease::acquire().is_some(), "released on drop");
+    }
+}

@@ -14,15 +14,17 @@
 //!   frontier   per-layer schedule frontier from the sensitivity model
 //!   topo       topology-parametric demo: arbitrary MLP + per-layer schedule
 //!   bench      in-process benchmarks (--cycle-batch -> BENCH_cycle_batch.json,
-//!              --forward -> BENCH_forward.json before/after comparison)
+//!              --forward -> BENCH_forward.json before/after comparison,
+//!              --pipeline -> BENCH_pipeline.json stage-pipelined vs
+//!              row-partitioned)
 
 use anyhow::{Context, Result};
 use ecmac::amul::{metrics, Config, ConfigSchedule};
 use ecmac::coordinator::governor::{AccuracyTable, Policy};
 use ecmac::coordinator::loadgen::{run_load, LoadMode, LoadReport, LoadSpec};
 use ecmac::coordinator::{
-    Backend, Coordinator, CoordinatorConfig, Governor, MetricsSnapshot, NativeBackend,
-    PjrtBackend, ScheduleFrontier, SensitivityModel, TcpIntake,
+    Backend, Coordinator, CoordinatorConfig, ExecutionMode, Governor, MetricsSnapshot,
+    NativeBackend, PjrtBackend, ScheduleFrontier, SensitivityModel, TcpIntake,
 };
 use ecmac::dataset::Dataset;
 use ecmac::datapath::{DatapathSim, Network};
@@ -520,6 +522,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         default: Some("5000"),
     });
     spec.push(OptSpec {
+        name: "pipeline",
+        help: "execute large batches through the stage-pipelined datapath \
+               instead of the row-sharded pool",
+        takes_value: false,
+        default: None,
+    });
+    spec.push(OptSpec {
         name: "fixed-batch",
         help: "disable the adaptive window (pin the target at max-batch)",
         takes_value: false,
@@ -612,6 +621,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             shards,
             adaptive: !args.flag("fixed-batch"),
             latency_slo_us: slo_us,
+            execution: if args.flag("pipeline") {
+                ExecutionMode::Pipelined
+            } else {
+                ExecutionMode::RowSharded
+            },
             ..CoordinatorConfig::default()
         },
         backend,
@@ -814,6 +828,20 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         takes_value: false,
         default: None,
     });
+    spec.push(OptSpec {
+        name: "topology",
+        help: "synthetic network topology, e.g. 62x128x64x10 \
+               (requires --synthetic; first dim must be 62, the wire feature width)",
+        takes_value: true,
+        default: None,
+    });
+    spec.push(OptSpec {
+        name: "pipeline",
+        help: "execute large batches through the stage-pipelined datapath \
+               instead of the row-sharded pool",
+        takes_value: false,
+        default: None,
+    });
     let args = Args::parse(argv, &spec)?;
     let requests: usize = args.get_or("requests", 4000)?;
     let max_batch: usize = args.get_or("max-batch", 64)?;
@@ -836,8 +864,25 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         other => anyhow::bail!("unknown mode '{other}' (closed | open | burst)"),
     };
 
+    anyhow::ensure!(
+        args.get("topology").is_none() || args.flag("synthetic"),
+        "--topology only applies to --synthetic runs (artifact weights fix the topology)"
+    );
     let (weights, acc_table, pm, inputs) = if args.flag("synthetic") {
-        let weights = QuantWeights::random(&Topology::seed(), 11);
+        let topo = match args.get("topology") {
+            Some(spec) => {
+                let t = Topology::parse(spec)?;
+                anyhow::ensure!(
+                    t.inputs() == ecmac::dataset::N_FEATURES,
+                    "--topology must take {} inputs (the wire feature width), got {}",
+                    ecmac::dataset::N_FEATURES,
+                    t.inputs()
+                );
+                t
+            }
+            None => Topology::seed(),
+        };
+        let weights = QuantWeights::random(&topo, 11);
         let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(
             2000, 0xD1E5E1,
         ))?;
@@ -894,6 +939,11 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
                     shards,
                     adaptive,
                     latency_slo_us: slo_us,
+                    execution: if args.flag("pipeline") {
+                        ExecutionMode::Pipelined
+                    } else {
+                        ExecutionMode::RowSharded
+                    },
                     ..CoordinatorConfig::default()
                 },
                 backend,
@@ -971,6 +1021,8 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             "shards" => shards,
             "slo_us" => slo_us as f64,
             "synthetic" => args.flag("synthetic"),
+            "topology" => args.get("topology").unwrap_or("seed").to_string(),
+            "pipeline" => args.flag("pipeline"),
             "rows" => rows_json,
         };
         std::fs::write(path, doc.to_string())?;
@@ -1372,6 +1424,12 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
             default: None,
         },
         OptSpec {
+            name: "pipeline",
+            help: "stage-pipelined deep-topology batch vs the row-partitioned path",
+            takes_value: false,
+            default: None,
+        },
+        OptSpec {
             name: "batch",
             help: "images per batch",
             takes_value: true,
@@ -1400,7 +1458,7 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
         OptSpec {
             name: "par-batch",
             help: "images for the --forward multi-core row-partitioned bench \
-                   (0 disables it)",
+                   (0 disables it) and for the --pipeline comparison",
             takes_value: true,
             default: Some("512"),
         },
@@ -1418,9 +1476,10 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
         },
     ];
     let args = Args::parse(argv, &spec)?;
+    let modes = [args.flag("cycle-batch"), args.flag("forward"), args.flag("pipeline")];
     anyhow::ensure!(
-        args.flag("cycle-batch") != args.flag("forward"),
-        "pass exactly one of --cycle-batch / --forward \
+        modes.iter().filter(|&&f| f).count() == 1,
+        "pass exactly one of --cycle-batch / --forward / --pipeline \
          (the full suite lives in `cargo bench`)"
     );
     let batch: usize = args.get_or("batch", 64)?;
@@ -1437,6 +1496,9 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     };
     if args.flag("forward") {
         return bench_forward(&args, bench_cfg, batch);
+    }
+    if args.flag("pipeline") {
+        return bench_pipeline(&args, bench_cfg);
     }
     let specs: Vec<&str> = args
         .get("topologies")
@@ -1626,6 +1688,113 @@ fn bench_forward(
             "sweep_images" => sweep_images,
             "kernel" => gemm::active_kernel().to_string(),
             "detected_kernel" => gemm::detected_kernel().to_string(),
+            "rows" => rows,
+            "harness" => harness_rows,
+        };
+        std::fs::write(path, doc.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `ecmac bench --pipeline`: the stage-pipelined batch executor
+/// against the row-partitioned `forward_batch` on the same inputs, per
+/// topology, after asserting bit-exactness.  Deep synthetic topologies
+/// need no artifacts (`Topology::parse` accepts `784x128x64x10`); the
+/// default set includes the shallow seed shape so the artifact also
+/// records an honest planner-fallback row.  Uses `--par-batch` as the
+/// batch size (the pipeline only engages at row-partition scale) and a
+/// first-layer-approximate per-layer schedule so stage boundaries have
+/// a table-residency trade-off to respect.  Writes a
+/// `BENCH_pipeline.json` artifact in the `forward` family; CI gates it
+/// on in-run invariants only (`bench_gate.py` without `--baseline`).
+fn bench_pipeline(
+    args: &ecmac::util::cli::Args,
+    bench_cfg: ecmac::testkit::bench::BenchConfig,
+) -> Result<()> {
+    use ecmac::testkit::bench::Bencher;
+    let specs: Vec<&str> = args
+        .get("topologies")
+        .unwrap_or("784x128x64x10;62,30,10")
+        .split(';')
+        .filter(|s| !s.is_empty())
+        .collect();
+    let batch: usize = args.get_or("par-batch", 512)?;
+    anyhow::ensure!(batch >= 1, "--par-batch must be at least 1");
+    let pool_workers = ecmac::util::threadpool::shared_pool().workers();
+    println!("stage pipeline vs row partition ({pool_workers} pool workers)\n");
+    let mut b = Bencher::new(bench_cfg);
+    let mut rows: Vec<ecmac::util::json::Json> = Vec::new();
+    let mut table_rows: Vec<report::PipelineBenchRow> = Vec::new();
+    for spec_s in &specs {
+        let topo = Topology::parse(spec_s)?;
+        // first layer approximate, rest accurate: a schedule boundary
+        // the planner's table-residency penalty can align stages with
+        let cfgs: Vec<Config> = (0..topo.n_layers())
+            .map(|l| if l == 0 { Config::new(9).unwrap() } else { Config::ACCURATE })
+            .collect();
+        let sched = ConfigSchedule::per_layer(cfgs);
+        // registers the timed pair and asserts bit-exactness first: the
+        // comparison is meaningless otherwise
+        let plan = ecmac::testkit::bench_pipeline_pair(&mut b, &topo, batch, &sched);
+        let thrpt = |name: &str| {
+            b.result(name)
+                .and_then(|r| r.throughput_per_sec())
+                .unwrap_or(-1.0)
+        };
+        let par = thrpt(&format!("forward/batch_par{batch}_{topo}"));
+        let piped = thrpt(&format!("pipeline/batch{batch}_{topo}"));
+        let fallback = plan.is_none();
+        let row = report::PipelineBenchRow {
+            topology: topo.to_string(),
+            batch: batch as u64,
+            batch_par_per_sec: par,
+            pipeline_per_sec: piped,
+            plan: plan
+                .as_ref()
+                .map(|p| p.describe())
+                .unwrap_or_else(|| "row-partition fallback".to_string()),
+            stages: plan.as_ref().map(|p| p.stages().len() as u64).unwrap_or(0),
+            workers: plan.as_ref().map(|p| p.total_workers() as u64).unwrap_or(0),
+            fallback,
+        };
+        rows.push(ecmac::json_obj! {
+            "topology" => row.topology.clone(),
+            "batch" => batch,
+            "batch_par_per_sec" => row.batch_par_per_sec,
+            "pipeline_per_sec" => row.pipeline_per_sec,
+            "pipeline_speedup" => row.pipeline_per_sec / row.batch_par_per_sec.max(1e-9),
+            "plan" => row.plan.clone(),
+            "stages" => row.stages as f64,
+            "workers" => row.workers as f64,
+            "pipeline_fallback" => row.fallback,
+            "bit_exact" => true,
+        });
+        table_rows.push(row);
+    }
+    let harness_rows: Vec<ecmac::util::json::Json> = b
+        .results()
+        .iter()
+        .map(|r| {
+            ecmac::json_obj! {
+                "name" => r.name.clone(),
+                "mean_ns" => r.mean_ns,
+                "median_ns" => r.median_ns,
+                "p95_ns" => r.p95_ns,
+                "throughput_per_sec" => r.throughput_per_sec().unwrap_or(-1.0),
+            }
+        })
+        .collect();
+    b.finish();
+    println!("\nstage-pipelined vs row-partitioned batch (same inputs, bit-exact):");
+    println!("{}", report::pipeline_bench_table(&table_rows));
+    if let Some(path) = args.get("json") {
+        let doc = ecmac::json_obj! {
+            "schema_version" => 2usize,
+            "bench" => "forward",
+            "mode" => "pipeline",
+            "batch" => batch,
+            "pool_workers" => pool_workers as f64,
             "rows" => rows,
             "harness" => harness_rows,
         };

@@ -487,6 +487,61 @@ pub fn forward_bench_table(rows: &[ForwardBenchRow]) -> String {
     t.render()
 }
 
+/// One topology's pipelined-vs-row-partition comparison (the rows
+/// behind `ecmac bench --pipeline`, appended to the `BENCH_forward.json`
+/// schema as `"mode": "pipeline"` rows).
+#[derive(Debug, Clone)]
+pub struct PipelineBenchRow {
+    pub topology: String,
+    pub batch: u64,
+    /// Row-partitioned `forward_batch` across the shared pool, images/s.
+    pub batch_par_per_sec: f64,
+    /// Layer-pipelined streaming executor, images/s.
+    pub pipeline_per_sec: f64,
+    /// Stage partition + replica assignment, e.g. `"[0..1]x7 | [1..3]x1
+    /// @ micro 16"`; `"-"` when the plan fell back.
+    pub plan: String,
+    /// Pipeline stages (0 when the cost model declined and the run fell
+    /// back to the row-partition path).
+    pub stages: u64,
+    /// Pool workers the plan occupies.
+    pub workers: u64,
+    /// Whether `forward_batch_pipelined` fell back to the row-partition
+    /// path (shallow topology, small machine) — the bench gate exempts
+    /// such rows from the pipeline in-run invariant.
+    pub fallback: bool,
+}
+
+/// Render the pipelined-vs-row-partition comparison.  "pipeline x" is
+/// the in-run metric the bench gate enforces on non-fallback rows.
+pub fn pipeline_bench_table(rows: &[PipelineBenchRow]) -> String {
+    let mut t = TextTable::new(&[
+        "topology",
+        "batch",
+        "par img/s",
+        "pipeline img/s",
+        "pipeline x",
+        "plan",
+        "workers",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.topology.clone(),
+            r.batch.to_string(),
+            format!("{:.0}", r.batch_par_per_sec),
+            format!("{:.0}", r.pipeline_per_sec),
+            if r.fallback {
+                "- (fallback)".into()
+            } else {
+                format!("{:.2}x", r.pipeline_per_sec / r.batch_par_per_sec.max(1e-9))
+            },
+            r.plan.clone(),
+            r.workers.to_string(),
+        ]);
+    }
+    t.render()
+}
+
 /// One governor policy's adaptive-vs-batch=1 serving comparison at
 /// equal offered load (the rows behind `ecmac loadgen` and its
 /// `BENCH_serve.json` artifact).

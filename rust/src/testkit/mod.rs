@@ -387,6 +387,41 @@ pub fn bench_forward_par(
         });
 }
 
+/// Register the pipelined-vs-row-partitioned pair for one topology:
+/// `forward/batch_par<N>_<topo>` drives the row-partitioned
+/// [`Network::forward_batch`] and `pipeline/batch<N>_<topo>` the
+/// stage-pipelined [`Network::forward_batch_pipelined`], after
+/// asserting the two are bit-identical on the same inputs.  Returns
+/// the plan the pipeline would use (`None` when the planner declines
+/// and `forward_batch_pipelined` falls back to row partitioning — the
+/// pipeline bench is still registered so the artifact row records the
+/// fallback honestly).
+pub fn bench_pipeline_pair(
+    b: &mut bench::Bencher,
+    topo: &Topology,
+    batch: usize,
+    sched: &ConfigSchedule,
+) -> Option<crate::datapath::pipeline::Plan> {
+    let net = Network::new(QuantWeights::random(topo, 7));
+    crate::datapath::pipeline::prewarm(&net, sched);
+    let mut rng = Pcg32::new(0xF0A4E);
+    let xs: Vec<Vec<u8>> = (0..batch)
+        .map(|_| (0..topo.inputs()).map(|_| rng.below(128) as u8).collect())
+        .collect();
+    let par = net.forward_batch(&xs, sched);
+    let piped = net.forward_batch_pipelined(&xs, sched);
+    assert_eq!(piped, par, "pipelined batch diverged from row-partitioned on {topo}");
+    b.throughput(batch as u64)
+        .bench(&format!("forward/batch_par{batch}_{topo}"), || {
+            std::hint::black_box(net.forward_batch(&xs, sched));
+        });
+    b.throughput(batch as u64)
+        .bench(&format!("pipeline/batch{batch}_{topo}"), || {
+            std::hint::black_box(net.forward_batch_pipelined(&xs, sched));
+        });
+    net.pipeline_plan(batch, sched)
+}
+
 /// Register the sensitivity-sweep pair for one topology:
 /// `sweep/full_pass_<topo>` runs the pre-PR engine (one full
 /// reference-path evaluation per `(layer, config)` job) and

@@ -669,6 +669,23 @@ mod tests {
     }
 
     #[test]
+    fn close_wakes_a_sender_blocked_on_a_full_channel() {
+        // the pipeline's shutdown cascade depends on this: a producer
+        // stage blocked on a full inter-stage queue must observe
+        // close() and get its item back, not sleep forever
+        let ch = Channel::new(1);
+        ch.send(1).unwrap();
+        let ch2 = ch.clone();
+        let t = std::thread::spawn(move || ch2.send(2));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        ch.close();
+        assert_eq!(t.join().unwrap(), Err(SendError::Closed(2)));
+        // the queued item still drains after close
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
     fn bounded_send_blocks_until_recv() {
         let ch = Channel::new(1);
         ch.send(1).unwrap();

@@ -118,14 +118,33 @@ impl Topology {
         Topology::new(vec![N_INPUTS, N_HIDDEN, N_OUTPUTS]).expect("seed topology is valid")
     }
 
-    /// Parse a `--topology`-style spec: `"62,30,10"`.
+    /// A fully synthetic network from a `--topology`-style spec (e.g.
+    /// `"784x128x64x10"`): the parsed topology populated with
+    /// deterministic random sign-magnitude parameters
+    /// ([`QuantWeights::random`], Pcg32-seeded).  This is what lets the
+    /// deep-stack benches and the pipeline differential suite run
+    /// without trained artifacts — the arithmetic paths are
+    /// weight-agnostic, so bit-exactness and throughput results carry.
+    pub fn synthetic(spec: &str, seed: u64) -> Result<QuantWeights> {
+        Ok(QuantWeights::random(&Topology::parse(spec)?, seed))
+    }
+
+    /// Parse a `--topology`-style spec: `"62,30,10"`, `"784x128x64x10"`
+    /// or `"62-30-10"` (the [`std::fmt::Display`] form round-trips).
     pub fn parse(s: &str) -> Result<Topology> {
+        let sep: &[char] = if s.contains(',') {
+            &[',']
+        } else if s.contains('x') {
+            &['x']
+        } else {
+            &['-']
+        };
         let sizes: Vec<usize> = s
-            .split(',')
+            .split(sep)
             .map(|t| {
                 t.trim()
                     .parse::<usize>()
-                    .with_context(|| format!("bad layer size '{t}'"))
+                    .with_context(|| format!("bad layer size '{t}' in topology '{s}'"))
             })
             .collect::<Result<_>>()?;
         Topology::new(sizes)
@@ -501,6 +520,36 @@ mod tests {
             arr(N_HIDDEN * N_OUTPUTS),
             arr(N_OUTPUTS)
         )
+    }
+
+    #[test]
+    fn parse_accepts_comma_x_and_dash_separators() {
+        let want = Topology::new(vec![784, 128, 64, 10]).unwrap();
+        assert_eq!(Topology::parse("784,128,64,10").unwrap(), want);
+        assert_eq!(Topology::parse("784x128x64x10").unwrap(), want);
+        assert_eq!(Topology::parse("784-128-64-10").unwrap(), want);
+        // Display round-trips through parse
+        assert_eq!(Topology::parse(&want.to_string()).unwrap(), want);
+        assert!(Topology::parse("784x").is_err());
+        assert!(Topology::parse("10").is_err(), "needs input and output sizes");
+    }
+
+    #[test]
+    fn synthetic_is_deterministic_and_shape_checked() {
+        let a = Topology::synthetic("62x30x10", 11).unwrap();
+        let b = Topology::synthetic("62,30,10", 11).unwrap();
+        assert_eq!(a.topology, b.topology);
+        assert_eq!(a.layers[0].w, b.layers[0].w, "same seed, same weights");
+        assert_eq!(a.layers[1].b, b.layers[1].b);
+        let c = Topology::synthetic("62x30x10", 12).unwrap();
+        assert_ne!(a.layers[0].w, c.layers[0].w, "different seed, different weights");
+        // every value is a valid sign-magnitude encoding (no negative zero)
+        for lw in &a.layers {
+            for &v in lw.w.iter().chain(&lw.b) {
+                assert!(v != 0x80, "negative zero is not a valid encoding");
+            }
+        }
+        assert!(Topology::synthetic("not-a-topology", 1).is_err());
     }
 
     #[test]

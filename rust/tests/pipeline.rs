@@ -1,0 +1,205 @@
+//! Differential suite for the layer-pipelined streaming executor:
+//! `datapath::pipeline` must be bit-exact with `Network::forward_batch`
+//! for every configuration and schedule shape, across ragged/empty/
+//! single-image micro-batching, degenerate one-worker plans, the
+//! shallow-topology fallback, and under injected panics (wrong-width
+//! inputs inside a stage, a panicking serving backend in pipelined
+//! execution mode).
+
+use ecmac::amul::{Config, ConfigSchedule};
+use ecmac::coordinator::governor::AccuracyTable;
+use ecmac::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, ExecutionMode, Governor, Policy,
+};
+use ecmac::datapath::pipeline::{self, Plan};
+use ecmac::datapath::Network;
+use ecmac::power::{MultiplierEnergyProfile, PowerModel};
+use ecmac::testkit::doubles::PanickingBackend;
+use ecmac::util::rng::Pcg32;
+use ecmac::weights::{QuantWeights, Topology};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn cfg(c: u32) -> Config {
+    Config::new(c).unwrap()
+}
+
+/// Deep enough (4 weight layers) that the pipeline genuinely engages,
+/// small enough that the 33-config sweep stays fast.
+fn deep_net(seed: u64) -> Network {
+    let topo = Topology::parse("24x16x12x8x6").unwrap();
+    Network::new(QuantWeights::random(&topo, seed))
+}
+
+fn random_batch(net: &Network, b: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Pcg32::new(seed);
+    (0..b)
+        .map(|_| {
+            (0..net.topology().inputs())
+                .map(|_| rng.below(128) as u8)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn all_33_uniform_configs_bit_exact_through_forced_plans() {
+    let net = deep_net(3);
+    let xs = random_batch(&net, 24, 11);
+    for c in 0..ecmac::amul::N_CONFIGS as u32 {
+        let sched = ConfigSchedule::uniform(cfg(c));
+        let expected = net.forward_batch(&xs, &sched);
+        // micro 7 over 24 images: three full micro-batches + a ragged
+        // tail, through both a 2-stage and a 3-stage partition
+        for k in [2, 3] {
+            let plan = Plan::forced(&net, &sched, k, 7);
+            let got = pipeline::run(&net, &xs, &sched, &plan);
+            assert_eq!(got, expected, "config {c} diverged under {}", plan.describe());
+        }
+    }
+}
+
+#[test]
+fn non_uniform_per_layer_schedules_bit_exact() {
+    let net = deep_net(4);
+    let xs = random_batch(&net, 30, 13);
+    for seed in 0..10u64 {
+        let mut rng = Pcg32::new(100 + seed);
+        let cfgs: Vec<Config> = (0..net.topology().n_layers())
+            .map(|_| cfg(rng.below(ecmac::amul::N_CONFIGS as u32)))
+            .collect();
+        let sched = ConfigSchedule::per_layer(cfgs);
+        let expected = net.forward_batch(&xs, &sched);
+        let plan = Plan::forced(&net, &sched, 4, 5);
+        let got = pipeline::run(&net, &xs, &sched, &plan);
+        assert_eq!(got, expected, "schedule seed {seed} diverged");
+    }
+}
+
+#[test]
+fn ragged_empty_and_single_image_batches() {
+    let net = deep_net(5);
+    let sched = ConfigSchedule::per_layer(vec![cfg(7), cfg(0), cfg(19), cfg(32)]);
+    for b in [0usize, 1, 5, 31, 33] {
+        let xs = random_batch(&net, b, 17 + b as u64);
+        let expected = net.forward_batch(&xs, &sched);
+        for micro in [1usize, 7, 32] {
+            let plan = Plan::forced(&net, &sched, 2, micro);
+            let got = pipeline::run(&net, &xs, &sched, &plan);
+            assert_eq!(got, expected, "batch {b} diverged at micro {micro}");
+        }
+    }
+}
+
+#[test]
+fn single_worker_degenerate_plan_runs_inline_and_matches() {
+    let net = deep_net(6);
+    let sched = ConfigSchedule::uniform(cfg(12));
+    let xs = random_batch(&net, 19, 23);
+    let expected = net.forward_batch(&xs, &sched);
+    // k=1: one stage, one worker — the inline sequential path
+    let plan = Plan::forced(&net, &sched, 1, 8);
+    assert_eq!(plan.total_workers(), 1);
+    assert_eq!(pipeline::run(&net, &xs, &sched, &plan), expected);
+    // k beyond the layer count clamps to one stage per layer
+    let plan = Plan::forced(&net, &sched, 99, 3);
+    assert_eq!(plan.stages().len(), net.topology().n_layers());
+    assert_eq!(pipeline::run(&net, &xs, &sched, &plan), expected);
+}
+
+#[test]
+fn deep_synthetic_end_to_end_matches_row_partition() {
+    let net = Network::new(Topology::synthetic("784x128x64x10", 9).unwrap());
+    let sched = ConfigSchedule::per_layer(vec![cfg(9), cfg(0), cfg(0)]);
+    pipeline::prewarm(&net, &sched);
+    let xs = random_batch(&net, 160, 21);
+    // whether the planner engages (many-core) or declines (small CI
+    // runner), the public entry point must match the row partition
+    if let Some(plan) = net.pipeline_plan(xs.len(), &sched) {
+        assert_eq!(plan.stages().first().unwrap().start, 0);
+        assert_eq!(plan.stages().last().unwrap().end, 3);
+        assert!(plan.total_workers() <= ecmac::util::threadpool::shared_pool().workers());
+    }
+    assert_eq!(
+        net.forward_batch_pipelined(&xs, &sched),
+        net.forward_batch(&xs, &sched)
+    );
+}
+
+#[test]
+fn shallow_seed_topology_falls_back_and_matches() {
+    let net = Network::new(QuantWeights::random(&Topology::seed(), 4));
+    let sched = ConfigSchedule::uniform(cfg(16));
+    // 2 weight layers: below the pipeline floor on any machine
+    assert!(net.pipeline_plan(256, &sched).is_none());
+    let xs = random_batch(&net, 256, 31);
+    assert_eq!(
+        net.forward_batch_pipelined(&xs, &sched),
+        net.forward_batch(&xs, &sched)
+    );
+}
+
+#[test]
+fn stage_panic_unwinds_without_deadlock_and_pool_recovers() {
+    let net = deep_net(7);
+    let sched = ConfigSchedule::uniform(Config::ACCURATE);
+    let plan = Plan::forced(&net, &sched, 2, 4);
+    // wrong-width inputs panic inside a stage job; the scatter must
+    // re-raise on the caller after every stage unwound, not deadlock
+    // on the bounded queues
+    let bad: Vec<Vec<u8>> = (0..12).map(|_| vec![0u8; 3]).collect();
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pipeline::run(&net, &bad, &sched, &plan)
+    }));
+    assert!(r.is_err(), "wrong-width inputs must panic, not return results");
+    // the pool and the pipeline lease are fully released: the same
+    // plan immediately serves a healthy batch
+    let xs = random_batch(&net, 24, 41);
+    assert_eq!(
+        pipeline::run(&net, &xs, &sched, &plan),
+        net.forward_batch(&xs, &sched)
+    );
+}
+
+#[test]
+fn pipelined_coordinator_with_panicking_backend_fails_cleanly() {
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(200, 7)).unwrap();
+    let acc = AccuracyTable::new(vec![0.9; ecmac::amul::N_CONFIGS]);
+    let gov = Governor::new(Policy::Fixed(Config::ACCURATE), &pm, &acc);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(50),
+            queue_capacity: 64,
+            workers: 1,
+            execution: ExecutionMode::Pipelined,
+            ..CoordinatorConfig::default()
+        },
+        Arc::new(PanickingBackend {
+            topo: Topology::seed(),
+        }) as Arc<dyn Backend>,
+        gov,
+        pm,
+    );
+    let mut rng = Pcg32::new(5);
+    let mut replies = Vec::new();
+    for _ in 0..16 {
+        let mut x = [0u8; 62];
+        for v in x.iter_mut() {
+            *v = rng.below(128) as u8;
+        }
+        if let Some(r) = coord.try_submit(x) {
+            replies.push(r);
+        }
+    }
+    // every reply resolves (closed), never hangs
+    for r in replies {
+        assert!(
+            matches!(r.recv_timeout(Duration::from_secs(5)), Err(())),
+            "expected closed reply channel from the pipelined panicking backend"
+        );
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.requests, 16);
+    assert!(m.backend_errors > 0, "backend panics must be accounted");
+}
