@@ -241,6 +241,98 @@ class TestServeInRunInvariants:
         assert bench_gate.run([fresh]) == 1
 
 
+def check(name, verdict="proved", detail="bound holds"):
+    return {"name": name, "verdict": verdict, "detail": detail}
+
+
+def analyze_artifact(**extra):
+    """`ecmac analyze --json` output: rows keyed by id, each carrying
+    range checks plus nested per-plan liveness checks and a summary."""
+    range_checks = [
+        check("layer0.i32-acc"),
+        check("cfg0.gather-rows"),
+        check("energy-counters"),
+    ]
+    plan_checks = [check("plan.residency"), check("plan.model")]
+    doc = {
+        "schema_version": 1,
+        "bench": "analyze",
+        "max_workers": 8,
+        "batch": 512,
+        "rows": [
+            {
+                "id": "62-30-10@cfg0",
+                "topology": "62-30-10",
+                "schedule": "cfg0",
+                "checks": range_checks,
+                "layers": [],
+                "plans": [{"workers": 8, "batch": 512, "checks": plan_checks}],
+                "summary": {"proved": 5, "refuted": 0, "unknown": 0},
+            }
+        ],
+        "summary": {"proved": 5, "refuted": 0, "unknown": 0},
+    }
+    doc.update(extra)
+    return doc
+
+
+class TestAnalyzeInvariants:
+    def test_fully_proved_artifact_passes(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", analyze_artifact())
+        assert bench_gate.run([fresh]) == 0
+
+    def test_refuted_check_fails(self, tmp_path):
+        doc = analyze_artifact()
+        doc["rows"][0]["checks"][0] = check(
+            "layer0.i32-acc", "refuted", "violated bound: i32-acc"
+        )
+        doc["rows"][0]["summary"] = {"proved": 4, "refuted": 1, "unknown": 0}
+        doc["summary"] = {"proved": 4, "refuted": 1, "unknown": 0}
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_unknown_check_fails(self, tmp_path):
+        # an undecided analysis is a gate failure, not a skip
+        doc = analyze_artifact()
+        doc["rows"][0]["plans"][0]["checks"][1] = check(
+            "plan.model", "unknown", "state cap hit"
+        )
+        doc["rows"][0]["summary"] = {"proved": 4, "refuted": 0, "unknown": 1}
+        doc["summary"] = {"proved": 4, "refuted": 0, "unknown": 1}
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_nested_plan_refutation_fails(self, tmp_path):
+        # liveness failures live inside the plans array, not the
+        # top-level checks — the gate must walk both
+        doc = analyze_artifact()
+        doc["rows"][0]["plans"][0]["checks"][0] = check(
+            "stage2.residency", "refuted", "violated bound: residency"
+        )
+        doc["rows"][0]["summary"] = {"proved": 4, "refuted": 1, "unknown": 0}
+        doc["summary"] = {"proved": 4, "refuted": 1, "unknown": 0}
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_inconsistent_summary_fails(self, tmp_path):
+        # a summary claiming more proofs than its checks hold is a
+        # broken artifact, not a pass
+        doc = analyze_artifact()
+        doc["rows"][0]["summary"] = {"proved": 99, "refuted": 0, "unknown": 0}
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_empty_rows_fail(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", analyze_artifact(rows=[]))
+        assert bench_gate.run([fresh]) == 1
+
+    def test_grand_summary_refutations_fail_even_with_clean_rows(self, tmp_path):
+        doc = analyze_artifact()
+        doc["summary"] = {"proved": 5, "refuted": 1, "unknown": 0}
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+
 class TestServeBaselineComparison:
     def test_speedup_drop_beyond_tolerance_fails(self, tmp_path):
         base = write(tmp_path, "base.json", serve_artifact(adaptive_speedup=3.0))

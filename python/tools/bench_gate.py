@@ -27,6 +27,13 @@ Two classes of check, applied per artifact kind (the ``bench`` field):
     not serve less throughput than the pinned batch=1 front-end at the
     same offered load (``adaptive_speedup >= 1 - tolerance``), and the
     run must actually have answered requests.
+  - ``analyze``: the static-verification artifact (``ecmac analyze
+    --json``).  Not a throughput bench: the gate requires every check —
+    top-level range checks and the nested per-plan liveness checks —
+    to be ``proved`` (zero refuted **and** zero unknown; an undecided
+    analysis fails the gate), per-row and grand summaries to tally
+    consistently, and the row set to be non-empty.  There is no baseline
+    to compare against.
 
 * **Baseline comparison** (when the committed baseline holds real
   measurements): relative columns — ``kernel_speedup`` /
@@ -141,6 +148,58 @@ def serve_in_run_invariants(fresh, tolerance):
     return failures
 
 
+def _tally(checks):
+    """Count check verdicts -> (proved, refuted, unknown)."""
+    verdicts = [c.get("verdict") for c in checks]
+    return (
+        verdicts.count("proved"),
+        verdicts.count("refuted"),
+        verdicts.count("unknown"),
+    )
+
+
+def analyze_invariants(fresh, tolerance):
+    """Static-verification invariants: every check proved, zero unknown.
+
+    ``tolerance`` is accepted for interface uniformity but unused —
+    a proof either holds or it does not.
+    """
+    del tolerance
+    failures = []
+    rows = fresh.get("rows", [])
+    if not rows:
+        failures.append("analyze artifact has no rows — the analyzer verified nothing")
+    for row in rows:
+        rid = row.get("id", "<unnamed>")
+        checks = list(row.get("checks", []))
+        for plan in row.get("plans", []):
+            checks.extend(plan.get("checks", []))
+        for c in checks:
+            verdict = c.get("verdict")
+            if verdict != "proved":
+                failures.append(
+                    f"{rid}: {c.get('name')} is {verdict!r} — {c.get('detail')}"
+                )
+        proved, refuted, unknown = _tally(checks)
+        summary = row.get("summary", {})
+        if (
+            summary.get("proved") != proved
+            or summary.get("refuted") != refuted
+            or summary.get("unknown") != unknown
+        ):
+            failures.append(
+                f"{rid}: summary {summary} does not tally with its checks "
+                f"({proved} proved, {refuted} refuted, {unknown} unknown)"
+            )
+    grand = fresh.get("summary", {})
+    if grand.get("refuted", 0) != 0 or grand.get("unknown", 0) != 0:
+        failures.append(
+            f"grand summary reports {grand.get('refuted', 0)} refuted / "
+            f"{grand.get('unknown', 0)} unknown checks"
+        )
+    return failures
+
+
 # Per-artifact-kind gate configuration, selected by the "bench" field.
 KINDS = {
     "forward": {
@@ -164,6 +223,16 @@ KINDS = {
             "--json fresh_serve.json\n"
             "  python3 ../python/tools/bench_gate.py fresh_serve.json "
             "--write-baseline ../BENCH_serve.json"
+        ),
+    },
+    "analyze": {
+        "key": "id",
+        # proofs are pass/fail, not throughput: nothing to ratio-compare
+        "ratio_columns": (),
+        "absolute_columns": (),
+        "invariants": analyze_invariants,
+        "refresh": (
+            "  cd rust && cargo run --release -- analyze --json ANALYZE.json"
         ),
     },
 }

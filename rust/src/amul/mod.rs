@@ -426,6 +426,19 @@ impl SignedMulTable {
     pub fn mul8_sm(&self, x: u8, w: u8) -> i32 {
         self.rows[x as usize][w as usize] as i32
     }
+
+    /// Stored row count (256 real rows + the trailing padding row) —
+    /// the gather-bound invariant `row_ptr` relies on, re-verified per
+    /// configuration by the static analyzer (`analysis::range`).
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// The trailing padding row (must be identically zero so the AVX2
+    /// 2-byte row-end overread reads zeros).
+    pub fn padding_row(&self) -> &[i16; 256] {
+        &self.rows[256]
+    }
 }
 
 /// Lazy per-configuration table store: magnitude tables (16 KiB each)
@@ -765,6 +778,27 @@ mod tests {
             if x == 0xFF {
                 assert_eq!(unsafe { *p.add(256) }, 0, "padding row must be zero");
             }
+        }
+    }
+
+    #[test]
+    fn row_ptr_overread_stays_in_allocation() {
+        // The Stacked-Borrows claim the AVX2 gather depends on: row
+        // pointers derive from the *whole* 257-row allocation, so the
+        // 2-byte read past any row's end — the next row, or the zero
+        // padding row after row 255 — is in-bounds under the same
+        // provenance.  Run under Miri (the CI lane) this is a proof,
+        // not a smoke test: a per-row reborrow in `row_ptr` would fail
+        // here with an out-of-bounds/expired-tag error.
+        let st = SignedMulTable::build(&MulTable::build(Config::MAX_APPROX));
+        for x in [0u8, 1, 127, 128, 255] {
+            let p = st.row_ptr(x);
+            // last element of the row, then one element past its end
+            let last = unsafe { p.add(255).read_unaligned() };
+            assert_eq!(last as i32, st.mul8_sm(x, 255), "x={x}");
+            let over = unsafe { p.add(256).read_unaligned() };
+            let want = if x == 255 { 0 } else { st.mul8_sm(x + 1, 0) };
+            assert_eq!(over as i32, want, "x={x} overread");
         }
     }
 

@@ -1,0 +1,526 @@
+//! Static liveness verification of pipeline plans.
+//!
+//! `datapath::pipeline::run` executes a [`Plan`] as a stage graph on
+//! the shared pool, and its freedom from deadlock rests on one
+//! structural condition — **residency**: every stage replica must be
+//! able to occupy a pool worker *simultaneously*, because a replica
+//! blocked on a bounded queue holds its worker while it waits for a
+//! neighbor stage to make progress.  If the plan needs more workers
+//! than the pool owns, some stage never gets scheduled and its
+//! neighbors block forever; the runtime guards (the lease condition in
+//! `run`) refuse exactly that.  This module proves the condition — and
+//! the rest of the plan's structural invariants — *statically*, for a
+//! concrete plan ([`verify_plan`]) and for **every plan the planner can
+//! emit** over a topology ([`verify_planner_space`]), including the
+//! [`PIPELINE_SLACK`] fallback rule: whenever `Plan::build` declines,
+//! the checker re-derives which decline condition justified it.
+//!
+//! Structural checks alone don't rule out protocol-level deadlock
+//! (close/wake races, send-vs-recv ordering), so each verified plan is
+//! also handed to the exhaustive-interleaving model checker
+//! ([`super::model`]) on a bounded abstraction of its stage/queue
+//! graph: replica counts clamped to 2 (replicas of a stage are
+//! interchangeable; two expose every contention the protocol has) and
+//! a small micro-batch token count, with and without an injected
+//! replica failure per stage.
+
+use std::collections::HashMap;
+
+use super::model::{self, ModelParams};
+use super::{Check, Summary};
+use crate::amul::ConfigSchedule;
+use crate::datapath::pipeline::{
+    self, Plan, MAX_STAGES, MIN_PIPELINE_BATCH, MIN_PIPELINE_LAYERS, PIPELINE_SLACK,
+    QUEUE_DEPTH_PER_CONSUMER,
+};
+use crate::datapath::Network;
+use crate::util::json::Json;
+
+/// Replica clamp for the model-checked abstraction (see module docs).
+const MODEL_REPLICA_CLAMP: usize = 2;
+
+/// Micro-batch tokens fed to the model: enough that every queue can
+/// fill and drain at least once, small enough to keep the state space
+/// enumerable for 8-stage plans.
+const MODEL_MICROS: usize = 4;
+
+/// Liveness result for one (workers, batch) planner decision.
+pub struct PlanReport {
+    pub workers: usize,
+    pub batch: usize,
+    /// `Plan::describe()` when the planner emitted one, `None` on
+    /// fallback to the row-partition path.
+    pub plan: Option<String>,
+    pub checks: Vec<Check>,
+}
+
+impl PlanReport {
+    pub fn summary(&self) -> Summary {
+        Summary::count(&self.checks)
+    }
+
+    pub fn to_json(&self) -> Json {
+        crate::json_obj! {
+            "workers" => self.workers,
+            "batch" => self.batch,
+            "plan" => match &self.plan {
+                Some(p) => Json::from(p.clone()),
+                None => Json::from("fallback"),
+            },
+            "checks" => self.checks.iter().map(Check::to_json).collect::<Vec<_>>(),
+            "summary" => self.summary().to_json(),
+        }
+    }
+}
+
+/// Memoized model runs: plans across a planner space repeat the same
+/// clamped replica shape, and [`model::explore`] is the expensive part.
+type ModelCache = HashMap<Vec<usize>, Vec<Check>>;
+
+/// Verify one concrete plan against a pool of `pool_workers`: stage
+/// coverage, replica floor, queue capacities, the residency condition,
+/// and the exhaustive protocol model.  This accepts *any* plan —
+/// including `Plan::forced` ones the planner would never emit — so the
+/// seeded-violation suite can watch an oversubscribed plan get refuted
+/// with a per-stage diagnostic.
+pub fn verify_plan(net: &Network, plan: &Plan, pool_workers: usize) -> Vec<Check> {
+    let mut cache = ModelCache::new();
+    verify_plan_cached(net, plan, pool_workers, &mut cache)
+}
+
+fn verify_plan_cached(
+    net: &Network,
+    plan: &Plan,
+    pool_workers: usize,
+    cache: &mut ModelCache,
+) -> Vec<Check> {
+    let n_layers = net.topology().n_layers();
+    let stages = plan.stages();
+    let replicas = plan.replicas();
+    let mut checks = Vec::new();
+
+    // stage-cover: contiguous non-empty ranges covering 0..n_layers
+    let contiguous = !stages.is_empty()
+        && stages[0].start == 0
+        && stages[stages.len() - 1].end == n_layers
+        && stages.iter().all(|r| r.start < r.end)
+        && stages.windows(2).all(|w| w[0].end == w[1].start);
+    checks.push(if contiguous {
+        Check::proved(
+            "plan.stage-cover",
+            format!(
+                "{} stages partition layers 0..{n_layers} contiguously with no \
+                 gaps or overlaps",
+                stages.len()
+            ),
+        )
+    } else {
+        Check::refuted(
+            "plan.stage-cover",
+            format!(
+                "stages {stages:?} do not partition 0..{n_layers} — violated \
+                 bound: stage-cover (a skipped or doubled layer breaks \
+                 bit-exactness and the queue wiring)"
+            ),
+        )
+    });
+
+    // replicas: one vector entry per stage, every stage owned
+    let replicas_ok = replicas.len() == stages.len() && replicas.iter().all(|&r| r >= 1);
+    checks.push(if replicas_ok {
+        Check::proved(
+            "plan.replicas",
+            format!("every stage owns >= 1 replica: {replicas:?}"),
+        )
+    } else {
+        Check::refuted(
+            "plan.replicas",
+            format!(
+                "replica vector {replicas:?} for {} stages — violated bound: \
+                 replicas (an unowned stage never drains its input queue)",
+                stages.len()
+            ),
+        )
+    });
+
+    // queue-capacity: every boundary queue has room for at least one
+    // micro-batch per consumer replica (the backpressure rule can
+    // stall, never wedge)
+    let caps: Vec<usize> = (1..stages.len())
+        .map(|s| QUEUE_DEPTH_PER_CONSUMER * replicas.get(s).copied().unwrap_or(0))
+        .collect();
+    checks.push(if caps.iter().all(|&c| c >= 1) {
+        Check::proved(
+            "plan.queue-capacity",
+            format!(
+                "boundary queues sized {caps:?} ({QUEUE_DEPTH_PER_CONSUMER} per \
+                 consumer replica); every send eventually finds a slot or a close"
+            ),
+        )
+    } else {
+        Check::refuted(
+            "plan.queue-capacity",
+            format!(
+                "a boundary queue has capacity 0 in {caps:?} — violated bound: \
+                 queue-capacity (a zero-capacity queue blocks its producer forever)"
+            ),
+        )
+    });
+
+    checks.push(if plan.micro_batch() >= 1 {
+        Check::proved(
+            "plan.micro-batch",
+            format!("micro-batch {} >= 1", plan.micro_batch()),
+        )
+    } else {
+        Check::refuted(
+            "plan.micro-batch",
+            "micro-batch 0 — violated bound: micro-batch (no token ever enters \
+             the pipeline)"
+                .to_string(),
+        )
+    });
+
+    // residency: the threaded path needs the whole plan resident at
+    // once; name the first stage that cannot be scheduled
+    let total = plan.total_workers();
+    if total <= pool_workers {
+        checks.push(Check::proved(
+            "plan.residency",
+            format!(
+                "all {} stage replicas fit the {pool_workers}-worker pool \
+                 simultaneously; no replica waits for a worker held by a \
+                 blocked neighbor",
+                total
+            ),
+        ));
+    } else {
+        let mut cum = 0usize;
+        let mut first_over = stages.len().saturating_sub(1);
+        for (s, &r) in replicas.iter().enumerate() {
+            cum += r;
+            if cum > pool_workers {
+                first_over = s;
+                break;
+            }
+        }
+        checks.push(Check::refuted(
+            format!("stage{first_over}.residency"),
+            format!(
+                "stages 0..={first_over} already need {cum} resident workers but \
+                 the pool holds {pool_workers} (plan total {total}); stage \
+                 {first_over} would never be scheduled while upstream replicas \
+                 block on its full input queue — violated bound: residency \
+                 (total_workers <= pool workers)"
+            ),
+        ));
+    }
+
+    // protocol model: only meaningful once the structure is sound
+    if checks.iter().all(|c| c.verdict == super::Verdict::Proved) {
+        checks.extend(model_checks(replicas, cache));
+    }
+    checks
+}
+
+/// Exhaustive-interleaving checks for a plan's stage/queue graph on the
+/// clamped abstraction, failure-free and with one injected replica
+/// failure per stage.
+fn model_checks(replicas: &[usize], cache: &mut ModelCache) -> Vec<Check> {
+    let clamped: Vec<usize> = replicas
+        .iter()
+        .map(|&r| r.min(MODEL_REPLICA_CLAMP))
+        .collect();
+    if let Some(cached) = cache.get(&clamped) {
+        return cached.clone();
+    }
+    let caps: Vec<usize> = clamped[1..]
+        .iter()
+        .map(|&r| QUEUE_DEPTH_PER_CONSUMER * r)
+        .collect();
+    let shape = format!(
+        "replicas {clamped:?} (clamped to {MODEL_REPLICA_CLAMP}), queues {caps:?}, \
+         {MODEL_MICROS} micro-batch tokens"
+    );
+    let mut checks = Vec::new();
+
+    let base = ModelParams::new(clamped.clone(), caps.clone(), MODEL_MICROS);
+    let r = model::explore(&base);
+    checks.push(if r.capped {
+        Check::unknown(
+            "plan.model",
+            format!("state cap hit after {} states on {shape}", r.states),
+        )
+    } else if let Some(d) = &r.deadlock {
+        Check::refuted(
+            "plan.model",
+            format!("reachable deadlock on {shape}: {d} — violated bound: deadlock-freedom"),
+        )
+    } else if let Some(d) = &r.lost_delivery {
+        Check::refuted(
+            "plan.model",
+            format!("failure-free run lost a micro-batch on {shape}: {d} — violated bound: delivery"),
+        )
+    } else if let Some(d) = &r.unclosed_queue {
+        Check::refuted(
+            "plan.model",
+            format!("terminal state with open queue on {shape}: {d} — violated bound: cascade-shutdown"),
+        )
+    } else {
+        Check::proved(
+            "plan.model",
+            format!(
+                "all {} reachable interleavings terminate with every micro-batch \
+                 delivered and every queue closed ({shape})",
+                r.states
+            ),
+        )
+    });
+
+    let mut fail_states = 0usize;
+    let mut fail_bad: Option<(usize, String)> = None;
+    let mut fail_capped = false;
+    for s in 0..clamped.len() {
+        let p = ModelParams::new(clamped.clone(), caps.clone(), MODEL_MICROS).with_failure(s);
+        let r = model::explore(&p);
+        fail_states += r.states;
+        if r.capped {
+            fail_capped = true;
+        }
+        if let Some(d) = r.deadlock.as_ref().or(r.unclosed_queue.as_ref()) {
+            fail_bad = Some((s, d.clone()));
+            break;
+        }
+    }
+    checks.push(if let Some((s, d)) = fail_bad {
+        Check::refuted(
+            "plan.model-failure",
+            format!(
+                "a replica failure in stage {s} reaches a stuck state on {shape}: \
+                 {d} — violated bound: cascade-shutdown under panic"
+            ),
+        )
+    } else if fail_capped {
+        Check::unknown(
+            "plan.model-failure",
+            format!("state cap hit during failure injection on {shape}"),
+        )
+    } else {
+        Check::proved(
+            "plan.model-failure",
+            format!(
+                "with one injected replica failure in any of the {} stages, all \
+                 {fail_states} explored interleavings still terminate with every \
+                 queue closed ({shape})",
+                clamped.len()
+            ),
+        )
+    });
+
+    cache.insert(clamped, checks.clone());
+    checks
+}
+
+/// Re-derive the planner's own decision for (workers, batch) and verify
+/// it: an emitted plan must satisfy the slack rule it claims plus every
+/// [`verify_plan`] invariant; a declined one must be justified by one of
+/// the documented fallback conditions.
+fn verify_decision(
+    net: &Network,
+    sched: &ConfigSchedule,
+    workers: usize,
+    batch: usize,
+    cache: &mut ModelCache,
+) -> PlanReport {
+    let n_layers = net.topology().n_layers();
+    let total_macs: u64 = (0..n_layers).map(|l| pipeline::layer_macs(net, l)).sum();
+    // the planner's own bottleneck search, re-run independently
+    let best_bottleneck = (2..=n_layers.min(workers).min(MAX_STAGES).max(1))
+        .map(|k| {
+            let stages = pipeline::best_partition(net, sched, n_layers, k);
+            let costs: Vec<u64> = stages
+                .iter()
+                .map(|r| pipeline::stage_cost(net, sched, r))
+                .collect();
+            let replicas = pipeline::assign_replicas(&costs, workers);
+            costs
+                .iter()
+                .zip(&replicas)
+                .map(|(&c, &r)| c as f64 / r as f64)
+                .fold(0.0, f64::max)
+        })
+        .fold(f64::INFINITY, f64::min);
+    let slack_limit = total_macs as f64 / workers.max(1) as f64 * PIPELINE_SLACK;
+
+    match Plan::build(net, sched, workers, batch) {
+        Some(plan) => {
+            let mut checks = Vec::new();
+            // slack: the emitted plan's modeled bottleneck must beat the
+            // row-partition model within the documented slack
+            let bottleneck: f64 = plan
+                .stages()
+                .iter()
+                .zip(plan.replicas())
+                .map(|(r, &rep)| pipeline::stage_cost(net, sched, r) as f64 / rep as f64)
+                .fold(0.0, f64::max);
+            checks.push(if bottleneck <= slack_limit {
+                Check::proved(
+                    "plan.slack",
+                    format!(
+                        "modeled bottleneck {bottleneck:.0} <= total/workers x \
+                         {PIPELINE_SLACK} = {slack_limit:.0}"
+                    ),
+                )
+            } else {
+                Check::refuted(
+                    "plan.slack",
+                    format!(
+                        "emitted plan's bottleneck {bottleneck:.0} exceeds \
+                         {slack_limit:.0} — violated bound: slack (the planner \
+                         must decline such plans)"
+                    ),
+                )
+            });
+            checks.extend(verify_plan_cached(net, &plan, workers, cache));
+            PlanReport {
+                workers,
+                batch,
+                plan: Some(plan.describe()),
+                checks,
+            }
+        }
+        None => {
+            let justification = if n_layers < MIN_PIPELINE_LAYERS {
+                Some(format!(
+                    "{n_layers} weight layers < MIN_PIPELINE_LAYERS = {MIN_PIPELINE_LAYERS}"
+                ))
+            } else if batch < MIN_PIPELINE_BATCH {
+                Some(format!("batch {batch} < MIN_PIPELINE_BATCH = {MIN_PIPELINE_BATCH}"))
+            } else if workers < 2 {
+                Some(format!("{workers} pool workers < 2"))
+            } else if best_bottleneck > slack_limit {
+                Some(format!(
+                    "best modeled bottleneck {best_bottleneck:.0} > total/workers x \
+                     {PIPELINE_SLACK} = {slack_limit:.0} (slack fallback rule)"
+                ))
+            } else {
+                None
+            };
+            let checks = vec![match justification {
+                Some(j) => Check::proved(
+                    "plan.fallback",
+                    format!("planner declined, justified: {j}; the row-partition path runs instead"),
+                ),
+                None => Check::refuted(
+                    "plan.fallback",
+                    "planner declined with no documented condition holding — \
+                     violated bound: fallback-justification"
+                        .to_string(),
+                ),
+            }];
+            PlanReport {
+                workers,
+                batch,
+                plan: None,
+                checks,
+            }
+        }
+    }
+}
+
+/// Verify **every plan the planner can emit** for `net` under `sched`:
+/// all worker counts `1..=max_workers` crossed with `batches`.  Emitted
+/// plans get the full invariant + model treatment; declined ones get a
+/// fallback-justification check, so the planner's whole decision space
+/// is covered.
+pub fn verify_planner_space(
+    net: &Network,
+    sched: &ConfigSchedule,
+    max_workers: usize,
+    batches: &[usize],
+) -> Vec<PlanReport> {
+    let mut cache = ModelCache::new();
+    let mut out = Vec::new();
+    for workers in 1..=max_workers.max(1) {
+        for &batch in batches {
+            out.push(verify_decision(net, sched, workers, batch, &mut cache));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amul::Config;
+    use crate::weights::{QuantWeights, Topology};
+
+    fn deep_net() -> Network {
+        let topo = Topology::new(vec![784, 128, 64, 10]).unwrap();
+        Network::new(QuantWeights::random(&topo, 7))
+    }
+
+    #[test]
+    fn emitted_plan_proves_all_invariants() {
+        let net = deep_net();
+        let sched = ConfigSchedule::uniform(Config::ACCURATE);
+        let plan = Plan::build(&net, &sched, 8, 512).expect("deep shape pipelines");
+        let checks = verify_plan(&net, &plan, 8);
+        assert!(
+            checks.iter().all(|c| c.verdict == crate::analysis::Verdict::Proved),
+            "{:?}",
+            crate::analysis::failures(&checks)
+        );
+        assert!(checks.iter().any(|c| c.name == "plan.model"));
+        assert!(checks.iter().any(|c| c.name == "plan.model-failure"));
+    }
+
+    #[test]
+    fn oversubscribed_plan_is_refuted_naming_the_stage() {
+        let net = deep_net();
+        let sched = ConfigSchedule::uniform(Config::ACCURATE);
+        // 3 stages, one replica each, but a pool of 2: stage 2 can
+        // never be resident with its upstream neighbors
+        let plan = Plan::forced(&net, &sched, 3, 32);
+        let checks = verify_plan(&net, &plan, 2);
+        let f = checks
+            .iter()
+            .find(|c| c.verdict == crate::analysis::Verdict::Refuted)
+            .expect("must refute");
+        assert_eq!(f.name, "stage2.residency");
+        assert!(f.detail.contains("violated bound: residency"), "{}", f.detail);
+        // structure broken => the model stage is skipped, not trusted
+        assert!(!checks.iter().any(|c| c.name == "plan.model"));
+    }
+
+    #[test]
+    fn planner_space_covers_emits_and_fallbacks() {
+        let net = deep_net();
+        let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
+        let reports = verify_planner_space(&net, &sched, 4, &[16, 512]);
+        assert_eq!(reports.len(), 4 * 2);
+        let mut summary = Summary::default();
+        for r in &reports {
+            summary.merge(r.summary());
+        }
+        assert!(summary.all_proved(), "planner space must fully prove");
+        // batch 16 < MIN_PIPELINE_BATCH declines everywhere; batch 512
+        // with >= 2 workers emits on this deep shape
+        assert!(reports.iter().any(|r| r.plan.is_none()));
+        assert!(reports.iter().any(|r| r.plan.is_some()));
+        for r in reports.iter().filter(|r| r.plan.is_none()) {
+            assert_eq!(r.checks[0].name, "plan.fallback");
+        }
+    }
+
+    #[test]
+    fn shallow_seed_topology_always_falls_back_justified() {
+        let net = Network::new(QuantWeights::random(&Topology::seed(), 1));
+        let sched = ConfigSchedule::uniform(Config::ACCURATE);
+        let reports = verify_planner_space(&net, &sched, 8, &[4096]);
+        for r in &reports {
+            assert!(r.plan.is_none(), "2-layer seed must not pipeline");
+            assert!(r.summary().all_proved(), "fallback must be justified");
+        }
+    }
+}

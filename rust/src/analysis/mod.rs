@@ -1,0 +1,198 @@
+//! Static verification of the datapath and the pipelined executor.
+//!
+//! The paper's hardware claim rests on the MAC datapath being provably
+//! wide enough for every error-configurable multiplier mode, and the
+//! layer-pipelined executor's correctness rests on a no-deadlock
+//! residency argument.  Until this module both proofs lived as prose
+//! comments (`datapath/gemm.rs`, `weights.rs`) and runtime guards
+//! (`datapath/pipeline.rs`); `ecmac analyze` re-establishes them
+//! mechanically, per configuration and per topology, so the planned
+//! multi-family configuration space does not have to be re-proved by
+//! hand (DESIGN.md §Static analysis):
+//!
+//! * [`range`] — value-range abstract interpretation over the layer
+//!   loop: per-configuration product-magnitude envelopes measured from
+//!   the built tables (max |entry|, not the worst-case 127x127)
+//!   propagate through the stack to prove i32 accumulator
+//!   non-overflow, gather-index/padding-row bounds in the tiled
+//!   kernels, and energy-counter non-saturation.  `weights.rs` takes
+//!   its fan-in cap ([`range::MAX_FAN_IN_ANY_CONFIG`]) from here.
+//! * [`liveness`] — the pipeline-plan checker: structural invariants
+//!   (stage coverage, replica floor, queue capacities), the
+//!   pool-residency condition, and the planner's 1.10-slack fallback
+//!   rule, for every plan the planner can emit over a topology.
+//! * [`model`] — an exhaustive-interleaving model checker over the
+//!   stage/bounded-queue/replica graph a plan unrolls to: every
+//!   reachable interleaving of claim/recv/send/exit transitions is
+//!   enumerated (with and without an injected replica failure) and
+//!   checked for deadlock and lost micro-batches.
+//!
+//! Every result is a [`Check`]: a named bound with a three-valued
+//! [`Verdict`].  `Refuted` carries a diagnostic naming the violated
+//! bound; `Unknown` means the analyzer could not decide (treated as a
+//! failure by the CI gate — the analysis must stay complete for the
+//! shapes we ship).
+
+pub mod liveness;
+pub mod model;
+pub mod range;
+
+use crate::util::json::Json;
+
+/// Outcome of one static check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// The bound holds for every execution in the checked class.
+    Proved,
+    /// A concrete violation exists; the check's detail names it.
+    Refuted,
+    /// The analyzer could not decide (gate-failing, like `Refuted`).
+    Unknown,
+}
+
+impl Verdict {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Verdict::Proved => "proved",
+            Verdict::Refuted => "refuted",
+            Verdict::Unknown => "unknown",
+        }
+    }
+}
+
+impl std::fmt::Display for Verdict {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One named bound with its verdict and a human diagnostic.
+///
+/// `name` identifies the *bound* (`layer0.i32-acc`, `stage2.residency`,
+/// `cfg9.gather-rows`, ...); `detail` carries the numbers, and on
+/// refutation it names the violated bound and the violating value — the
+/// actionable part of the diagnostic.
+#[derive(Debug, Clone)]
+pub struct Check {
+    pub name: String,
+    pub verdict: Verdict,
+    pub detail: String,
+}
+
+impl Check {
+    pub fn proved(name: impl Into<String>, detail: impl Into<String>) -> Check {
+        Check {
+            name: name.into(),
+            verdict: Verdict::Proved,
+            detail: detail.into(),
+        }
+    }
+
+    pub fn refuted(name: impl Into<String>, detail: impl Into<String>) -> Check {
+        Check {
+            name: name.into(),
+            verdict: Verdict::Refuted,
+            detail: detail.into(),
+        }
+    }
+
+    pub fn unknown(name: impl Into<String>, detail: impl Into<String>) -> Check {
+        Check {
+            name: name.into(),
+            verdict: Verdict::Unknown,
+            detail: detail.into(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        crate::json_obj! {
+            "name" => self.name.clone(),
+            "verdict" => self.verdict.as_str(),
+            "detail" => self.detail.clone(),
+        }
+    }
+}
+
+/// Tally of verdicts over a check list (the artifact's `summary`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Summary {
+    pub proved: usize,
+    pub refuted: usize,
+    pub unknown: usize,
+}
+
+impl Summary {
+    pub fn count<'a>(checks: impl IntoIterator<Item = &'a Check>) -> Summary {
+        let mut s = Summary::default();
+        for c in checks {
+            s.add(c.verdict);
+        }
+        s
+    }
+
+    pub fn add(&mut self, v: Verdict) {
+        match v {
+            Verdict::Proved => self.proved += 1,
+            Verdict::Refuted => self.refuted += 1,
+            Verdict::Unknown => self.unknown += 1,
+        }
+    }
+
+    pub fn merge(&mut self, other: Summary) {
+        self.proved += other.proved;
+        self.refuted += other.refuted;
+        self.unknown += other.unknown;
+    }
+
+    /// Every check proved — what the CI gate requires.
+    pub fn all_proved(&self) -> bool {
+        self.refuted == 0 && self.unknown == 0
+    }
+
+    pub fn total(&self) -> usize {
+        self.proved + self.refuted + self.unknown
+    }
+
+    pub fn to_json(&self) -> Json {
+        crate::json_obj! {
+            "proved" => self.proved,
+            "refuted" => self.refuted,
+            "unknown" => self.unknown,
+        }
+    }
+}
+
+/// The checks of a list that did not prove, for diagnostics.
+pub fn failures(checks: &[Check]) -> Vec<&Check> {
+    checks.iter().filter(|c| c.verdict != Verdict::Proved).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_counts_and_gate_condition() {
+        let checks = vec![
+            Check::proved("a", ""),
+            Check::proved("b", ""),
+            Check::refuted("c", "violated"),
+            Check::unknown("d", "undecided"),
+        ];
+        let s = Summary::count(&checks);
+        assert_eq!((s.proved, s.refuted, s.unknown), (2, 1, 1));
+        assert_eq!(s.total(), 4);
+        assert!(!s.all_proved(), "refuted or unknown must fail the gate");
+        assert_eq!(failures(&checks).len(), 2);
+        let ok = Summary::count(&[Check::proved("x", "")]);
+        assert!(ok.all_proved());
+    }
+
+    #[test]
+    fn check_json_shape() {
+        let j = Check::refuted("layer0.i32-acc", "bound exceeded").to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("layer0.i32-acc"));
+        assert_eq!(j.get("verdict").unwrap().as_str(), Some("refuted"));
+        assert!(j.get("detail").unwrap().as_str().unwrap().contains("exceeded"));
+    }
+}

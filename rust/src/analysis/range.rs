@@ -1,0 +1,553 @@
+//! Value-range abstract interpretation over the quantized datapath.
+//!
+//! # Abstract domain
+//!
+//! The analyzer tracks one signed interval per weight layer: the range
+//! the i32 accumulator of any output unit can reach under the layer's
+//! scheduled configuration.  The transfer function is built from
+//! **product envelopes** measured off the configuration's built product
+//! table — for each weight magnitude `wm` the column maximum
+//! `col_max[wm] = max_a table[a][wm]` (and `max_abs`, the table-wide
+//! maximum).  This is the per-configuration envelope the issue asks
+//! for: approximate configurations compress partial-product columns,
+//! so their `max_abs` can sit well below the exact-mode 127x127 and
+//! never above it (`approx_never_exceeds_exact` in `amul`).
+//!
+//! Two transfer functions share the envelopes:
+//!
+//! * **weight-agnostic** (what the proofs use): every operand pair is
+//!   free, so layer `l`'s accumulator lies in
+//!   `[-n_in * max_abs, n_in * max_abs]`, plus the exact bias range
+//!   `±127 << 7`.  A bound proved here holds for *every* weight set of
+//!   the topology — this is what `Topology` validation and the CI gate
+//!   rely on.
+//! * **weight-aware** (diagnostics + the differential fuzz suite): the
+//!   actual weight bytes are known, so output `j` accumulates
+//!   `sum_i contrib(w[i][j])` where each contribution interval is
+//!   `[0, col_max]` or `[-col_max, 0]` by the weight's sign whenever
+//!   the layer's inputs are non-negative (every hidden layer: ReluSat
+//!   clamps activations to `0..=127`), and symmetric on the raw-byte
+//!   input layer.  The exact per-output bias is folded in.
+//!
+//! Saturation re-anchors the interval at every hidden layer
+//! (activations re-enter as `0..=127` bytes), so the per-layer
+//! intervals compose into a proof for the whole layer loop.
+
+use super::{Check, Verdict};
+use crate::amul::{sm, Config, ConfigSchedule, MulTables, MAG_MAX, N_CONFIGS};
+use crate::datapath::Network;
+use crate::util::json::Json;
+use crate::weights::{N_HIDDEN, N_INPUTS, N_OUTPUTS};
+
+/// Largest |bias term| the epilogue adds: `|decode(b)| << 7 = 127 * 128`.
+pub const BIAS_ABS_MAX: i64 = (MAG_MAX as i64) << 7;
+
+/// The exact-mode product envelope `127 * 127`.  Approximate
+/// configurations never exceed it, so it dominates every config.
+pub const PRODUCT_ABS_MAX: i64 = (MAG_MAX as i64) * (MAG_MAX as i64);
+
+/// Largest fan-in whose worst-case accumulator (plus bias) still fits
+/// an i32, for a configuration with the given product envelope.
+pub const fn max_safe_fan_in(max_abs_product: i64) -> usize {
+    ((i32::MAX as i64 - BIAS_ABS_MAX) / max_abs_product) as usize
+}
+
+/// Config-independent fan-in cap: [`max_safe_fan_in`] of the dominating
+/// exact-mode envelope (133_143).  `Topology` validation enforces this
+/// instead of the old hand-derived `65536` comment-proof; per-config
+/// caps reported by [`verify_raw_sizes`] can only be larger.
+pub const MAX_FAN_IN_ANY_CONFIG: usize = max_safe_fan_in(PRODUCT_ABS_MAX);
+
+/// Whether a `fan_in` x `max_abs_product` layer (plus worst-case bias)
+/// fits the i32 accumulator — the inequality the old prose proofs in
+/// `gemm.rs`/`weights.rs` stated for `65536 * 16129 + 16256`.
+pub const fn fits_i32(fan_in: usize, max_abs_product: i64) -> bool {
+    fan_in as i64 * max_abs_product + BIAS_ABS_MAX <= i32::MAX as i64
+}
+
+/// Product-magnitude envelope of one configuration, measured from its
+/// built magnitude table.
+pub struct ProductEnvelope {
+    pub cfg: Config,
+    /// Table-wide `max |product|` (16129 for cfg0, <= for approx).
+    pub max_abs: i64,
+    /// Per weight magnitude: `max_a table[a][wm]`.
+    col_max: Vec<i64>,
+}
+
+impl ProductEnvelope {
+    pub fn measure(tables: &MulTables, cfg: Config) -> ProductEnvelope {
+        let t = tables.get(cfg);
+        let col_max: Vec<i64> = (0..=MAG_MAX)
+            .map(|w| (0..=MAG_MAX).map(|a| t.mul7(a, w) as i64).max().unwrap())
+            .collect();
+        ProductEnvelope {
+            cfg,
+            max_abs: col_max.iter().copied().max().unwrap(),
+            col_max,
+        }
+    }
+
+    /// Largest |product| any activation can form with this weight byte.
+    #[inline]
+    pub fn weight_abs(&self, w: u8) -> i64 {
+        self.col_max[(w & 0x7F) as usize]
+    }
+}
+
+/// The accumulator interval of one weight layer (worst output unit).
+#[derive(Debug, Clone)]
+pub struct LayerRange {
+    pub layer: usize,
+    pub cfg: Config,
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Envelope the transfer function used.
+    pub max_abs_product: i64,
+    /// Pre-bias accumulator interval (what the GEMM kernel holds).
+    pub acc_lo: i64,
+    pub acc_hi: i64,
+    /// Post-bias interval (what the epilogue clamps or emits as logits).
+    pub post_lo: i64,
+    pub post_hi: i64,
+    /// Signed bits a hardware accumulator needs for the post-bias range.
+    pub acc_bits: u32,
+    /// `i32::MAX / max |post-bias value|`.
+    pub headroom: f64,
+}
+
+impl LayerRange {
+    fn new(
+        layer: usize,
+        cfg: Config,
+        n_in: usize,
+        n_out: usize,
+        max_abs_product: i64,
+        (acc_lo, acc_hi): (i64, i64),
+        (post_lo, post_hi): (i64, i64),
+    ) -> LayerRange {
+        let worst = post_hi.max(-post_lo).max(1);
+        LayerRange {
+            layer,
+            cfg,
+            n_in,
+            n_out,
+            max_abs_product,
+            acc_lo,
+            acc_hi,
+            post_lo,
+            post_hi,
+            acc_bits: signed_bits(post_lo, post_hi),
+            headroom: i32::MAX as f64 / worst as f64,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        crate::json_obj! {
+            "layer" => self.layer,
+            "cfg" => self.cfg.index(),
+            "n_in" => self.n_in,
+            "n_out" => self.n_out,
+            "max_abs_product" => self.max_abs_product,
+            "acc_lo" => self.acc_lo,
+            "acc_hi" => self.acc_hi,
+            "post_lo" => self.post_lo,
+            "post_hi" => self.post_hi,
+            "acc_bits" => self.acc_bits as usize,
+            "headroom" => self.headroom,
+        }
+    }
+}
+
+/// Smallest two's-complement width holding every value in `[lo, hi]`.
+fn signed_bits(lo: i64, hi: i64) -> u32 {
+    let mut n = 1;
+    while hi > (1i64 << (n - 1)) - 1 || lo < -(1i64 << (n - 1)) {
+        n += 1;
+    }
+    n
+}
+
+/// Range-analysis result for one (topology, schedule) pair.
+pub struct RangeReport {
+    pub subject: String,
+    pub layers: Vec<LayerRange>,
+    pub checks: Vec<Check>,
+}
+
+/// Weight-agnostic transfer function: any operand pair is reachable.
+fn layer_range_agnostic(l: usize, n_in: usize, n_out: usize, env: &ProductEnvelope) -> LayerRange {
+    let hi = n_in as i64 * env.max_abs;
+    LayerRange::new(
+        l,
+        env.cfg,
+        n_in,
+        n_out,
+        env.max_abs,
+        (-hi, hi),
+        (-hi - BIAS_ABS_MAX, hi + BIAS_ABS_MAX),
+    )
+}
+
+/// Weight-aware transfer function over the network's actual bytes.
+/// Hidden layers (`l > 0`) see non-negative inputs (ReluSat clamps to
+/// `0..=127`), so each weight contributes one-sidedly by its sign; the
+/// raw-byte input layer stays symmetric.  Per-output biases are exact.
+fn layer_range_weighted(net: &Network, l: usize, env: &ProductEnvelope) -> LayerRange {
+    let lw = net.weights().layer(l);
+    let inputs_nonneg = l > 0;
+    let mut acc = (0i64, 0i64);
+    let mut post = (i64::MAX, i64::MIN);
+    for j in 0..lw.n_out {
+        let (mut lo, mut hi) = (0i64, 0i64);
+        for i in 0..lw.n_in {
+            let w = lw.w_at(i, j);
+            let m = env.weight_abs(w);
+            if !inputs_nonneg {
+                lo -= m;
+                hi += m;
+            } else if w & 0x80 == 0 {
+                hi += m;
+            } else {
+                lo -= m;
+            }
+        }
+        let b = (sm::decode(lw.b[j]) as i64) << 7;
+        acc = (acc.0.min(lo), acc.1.max(hi));
+        post = (post.0.min(lo + b), post.1.max(hi + b));
+    }
+    LayerRange::new(l, env.cfg, lw.n_in, lw.n_out, env.max_abs, acc, post)
+}
+
+/// The i32 non-overflow check for one layer's interval.
+fn i32_acc_check(lr: &LayerRange) -> Check {
+    let name = format!("layer{}.i32-acc", lr.layer);
+    let worst = lr.post_hi.max(-lr.post_lo).max(lr.acc_hi).max(-lr.acc_lo);
+    let cap = max_safe_fan_in(lr.max_abs_product);
+    if worst <= i32::MAX as i64 {
+        Check::proved(
+            name,
+            format!(
+                "fan-in {} x max|product| {} ({}) + bias {} = {} fits i32 \
+                 (headroom {:.1}x; config-aware fan-in cap {})",
+                lr.n_in, lr.max_abs_product, lr.cfg, BIAS_ABS_MAX, worst, lr.headroom, cap
+            ),
+        )
+    } else {
+        Check::refuted(
+            name,
+            format!(
+                "fan-in {} x max|product| {} ({}) + bias {} = {} exceeds i32::MAX = {} \
+                 — violated bound: i32-acc (fan-in above max_safe_fan_in({}) = {})",
+                lr.n_in,
+                lr.max_abs_product,
+                lr.cfg,
+                BIAS_ABS_MAX,
+                worst,
+                i32::MAX,
+                lr.cfg,
+                cap
+            ),
+        )
+    }
+}
+
+/// Gather-index / padding-row / zero-annihilation checks for one
+/// configuration's signed table — the invariants the tiled kernels'
+/// unsafe paths (`row_ptr` gathers, tile-tail padding, zero-skip) rely
+/// on, re-verified against the *built* table rather than assumed.
+pub fn table_checks(tables: &MulTables, cfg: Config) -> Vec<Check> {
+    let st = tables.signed(cfg);
+    let mut out = Vec::new();
+
+    let rows_name = format!("cfg{}.gather-rows", cfg.index());
+    if st.n_rows() == 257 && st.padding_row().iter().all(|&v| v == 0) {
+        out.push(Check::proved(
+            rows_name,
+            "operand bytes (u8 <= 255) index 256 real rows; the trailing all-zero \
+             padding row keeps the AVX2 2-byte row-end overread (row_ptr) inside \
+             the allocation"
+                .to_string(),
+        ));
+    } else {
+        out.push(Check::refuted(
+            rows_name,
+            format!(
+                "signed table holds {} rows — violated bound: gather-rows \
+                 (row_ptr requires 256 real rows + 1 zero padding row)",
+                st.n_rows()
+            ),
+        ));
+    }
+
+    let zero_name = format!("cfg{}.zero-skip", cfg.index());
+    let zero_ok = [0x00u8, 0x80u8].iter().all(|&z| {
+        (0..=255u8).all(|v| st.mul8_sm(z, v) == 0 && st.mul8_sm(v, z) == 0)
+    });
+    if zero_ok {
+        out.push(Check::proved(
+            zero_name,
+            "+0 and -0 rows and columns are identically zero, so the packed \
+             tile-tail padding (weight byte 0x00) and the zero-magnitude \
+             activation skip contribute nothing"
+                .to_string(),
+        ));
+    } else {
+        out.push(Check::refuted(
+            zero_name,
+            "a zero-magnitude operand produced a non-zero product — violated \
+             bound: zero-skip (tile-tail padding would corrupt accumulators)"
+                .to_string(),
+        ));
+    }
+
+    let env = ProductEnvelope::measure(tables, cfg);
+    let env_name = format!("cfg{}.envelope", cfg.index());
+    if env.max_abs <= PRODUCT_ABS_MAX {
+        out.push(Check::proved(
+            env_name,
+            format!(
+                "measured max|product| {} <= exact-mode envelope {}",
+                env.max_abs, PRODUCT_ABS_MAX
+            ),
+        ));
+    } else {
+        out.push(Check::refuted(
+            env_name,
+            format!(
+                "measured max|product| {} exceeds the exact-mode envelope {} — \
+                 violated bound: envelope (approximation must never exceed exact)",
+                env.max_abs, PRODUCT_ABS_MAX
+            ),
+        ));
+    }
+    out
+}
+
+/// Worst-case hardware-counter growth per image — proves the u64
+/// energy/MAC counters (`power::Neuron`, cycle results) cannot saturate
+/// over any realistic horizon.
+fn energy_counter_check(sizes: &[usize]) -> Check {
+    let mac_ops: u64 = sizes.windows(2).map(|w| (w[0] * w[1]) as u64).sum();
+    // every MAC can toggle at most all 32 accumulator bits
+    let per_image = mac_ops.saturating_mul(32).max(1);
+    let horizon = u64::MAX / per_image;
+    if horizon >= 1 << 40 {
+        Check::proved(
+            "energy-counters",
+            format!(
+                "worst-case counter growth {per_image} per image; u64 counters \
+                 hold >= {horizon} images (>= 2^40) before saturation"
+            ),
+        )
+    } else {
+        Check::refuted(
+            "energy-counters",
+            format!(
+                "u64 counters saturate after {horizon} images (< 2^40) at \
+                 {per_image} worst-case increments per image — violated bound: \
+                 energy-counters"
+            ),
+        )
+    }
+}
+
+/// The paper's 21-bit hardware accumulator claim, pinned for the seed
+/// topology: `62 * 16129 + 16256 = 1_016_254 < 2^20` — the prose proof
+/// that lived in `datapath/neuron.rs`, now emitted per schedule.
+fn seed_hw_acc_check(layers: &[LayerRange]) -> Check {
+    let bits = layers.iter().map(|l| l.acc_bits).max().unwrap_or(0);
+    let worst = layers
+        .iter()
+        .map(|l| l.post_hi.max(-l.post_lo))
+        .max()
+        .unwrap_or(0);
+    if bits <= 21 {
+        Check::proved(
+            "seed.hw-acc-21bit",
+            format!(
+                "max |acc + bias| = {worst} < 2^20 — the seed 62-30-10 network \
+                 fits the 21-bit signed hardware accumulator in every layer"
+            ),
+        )
+    } else {
+        Check::refuted(
+            "seed.hw-acc-21bit",
+            format!(
+                "max |acc + bias| = {worst} needs {bits} signed bits — violated \
+                 bound: hw-acc-21bit"
+            ),
+        )
+    }
+}
+
+/// Weight-agnostic range verification of raw layer `sizes` under
+/// `sched`.  This is the entry the seeded-violation suite drives with
+/// topologies `Topology` itself refuses to construct.
+pub fn verify_raw_sizes(sizes: &[usize], sched: &ConfigSchedule, tables: &MulTables) -> RangeReport {
+    assert!(sizes.len() >= 2, "need at least input and output sizes");
+    let n_layers = sizes.len() - 1;
+    let mut envs: Vec<Option<ProductEnvelope>> = (0..N_CONFIGS).map(|_| None).collect();
+    let mut distinct: Vec<Config> = Vec::new();
+    let mut layers = Vec::new();
+    let mut checks = Vec::new();
+    for l in 0..n_layers {
+        let cfg = sched.layer(l);
+        if envs[cfg.index()].is_none() {
+            envs[cfg.index()] = Some(ProductEnvelope::measure(tables, cfg));
+            distinct.push(cfg);
+        }
+        let lr = layer_range_agnostic(l, sizes[l], sizes[l + 1], envs[cfg.index()].as_ref().unwrap());
+        checks.push(i32_acc_check(&lr));
+        layers.push(lr);
+    }
+    for cfg in &distinct {
+        checks.extend(table_checks(tables, *cfg));
+    }
+    checks.push(energy_counter_check(sizes));
+    if sizes == [N_INPUTS, N_HIDDEN, N_OUTPUTS].as_slice() {
+        checks.push(seed_hw_acc_check(&layers));
+    }
+    let subject = format!(
+        "{} @ {sched}",
+        sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("-")
+    );
+    RangeReport {
+        subject,
+        layers,
+        checks,
+    }
+}
+
+/// Range verification of a built network: the *checks* stay
+/// weight-agnostic (they prove the topology safe for every weight
+/// set), while the per-layer diagnostics switch to the weight-aware
+/// intervals — the tight bounds the differential fuzz suite holds the
+/// analyzer to.
+pub fn verify_network(net: &Network, sched: &ConfigSchedule) -> RangeReport {
+    let topo = net.topology();
+    let mut report = verify_raw_sizes(topo.sizes(), sched, &net.tables);
+    let mut envs: Vec<Option<ProductEnvelope>> = (0..N_CONFIGS).map(|_| None).collect();
+    report.layers = (0..topo.n_layers())
+        .map(|l| {
+            let cfg = sched.layer(l);
+            let env = envs[cfg.index()]
+                .get_or_insert_with(|| ProductEnvelope::measure(&net.tables, cfg));
+            layer_range_weighted(net, l, env)
+        })
+        .collect();
+    report
+}
+
+impl RangeReport {
+    pub fn summary(&self) -> super::Summary {
+        super::Summary::count(&self.checks)
+    }
+
+    pub fn all_proved(&self) -> bool {
+        self.summary().all_proved()
+    }
+
+    /// First refuted/unknown check, for error messages.
+    pub fn first_failure(&self) -> Option<&Check> {
+        self.checks.iter().find(|c| c.verdict != Verdict::Proved)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::weights::{QuantWeights, Topology};
+
+    #[test]
+    fn fan_in_cap_is_the_analyzer_bound() {
+        // 133_143 * 16129 + 16256 <= i32::MAX, one more overflows
+        assert_eq!(MAX_FAN_IN_ANY_CONFIG, 133_143);
+        assert!(fits_i32(MAX_FAN_IN_ANY_CONFIG, PRODUCT_ABS_MAX));
+        assert!(!fits_i32(MAX_FAN_IN_ANY_CONFIG + 1, PRODUCT_ABS_MAX));
+        // the old hand-derived cap was comfortably inside the real bound
+        assert!(fits_i32(65536, PRODUCT_ABS_MAX));
+    }
+
+    #[test]
+    fn envelopes_measure_the_tables() {
+        let tables = MulTables::build();
+        let exact = ProductEnvelope::measure(&tables, Config::ACCURATE);
+        assert_eq!(exact.max_abs, PRODUCT_ABS_MAX);
+        assert_eq!(exact.weight_abs(sm::encode(127)), 127 * 127);
+        assert_eq!(exact.weight_abs(sm::encode(-127)), 127 * 127);
+        assert_eq!(exact.weight_abs(0x00), 0);
+        assert_eq!(exact.weight_abs(0x80), 0);
+        // approximation never exceeds exact, column-wise
+        for cfg in [Config::new(9).unwrap(), Config::MAX_APPROX] {
+            let env = ProductEnvelope::measure(&tables, cfg);
+            assert!(env.max_abs <= exact.max_abs, "{cfg}");
+            for w in 0..=255u8 {
+                assert!(env.weight_abs(w) <= exact.weight_abs(w), "{cfg} w={w:#04x}");
+            }
+        }
+    }
+
+    #[test]
+    fn signed_bits_boundaries() {
+        assert_eq!(signed_bits(0, 0), 1);
+        assert_eq!(signed_bits(-1, 0), 1);
+        assert_eq!(signed_bits(0, 1), 2);
+        assert_eq!(signed_bits(-2, 1), 2);
+        assert_eq!(signed_bits(0, 1_016_254), 21);
+        assert_eq!(signed_bits(-(1 << 20), (1 << 20) - 1), 21);
+        assert_eq!(signed_bits(0, 1 << 20), 22);
+    }
+
+    #[test]
+    fn seed_topology_proves_with_hw_acc_pin() {
+        let tables = MulTables::build();
+        let sched = ConfigSchedule::uniform(Config::ACCURATE);
+        let r = verify_raw_sizes(&[62, 30, 10], &sched, &tables);
+        assert!(r.all_proved(), "{:?}", r.first_failure());
+        // the neuron.rs prose proof, now a pinned analyzer fact
+        assert_eq!(r.layers[0].post_hi, 62 * 16129 + 16256);
+        assert_eq!(r.layers[0].post_hi, 1_016_254);
+        assert_eq!(r.layers[0].acc_bits, 21);
+        let hw = r.checks.iter().find(|c| c.name == "seed.hw-acc-21bit");
+        assert_eq!(hw.unwrap().verdict, Verdict::Proved);
+    }
+
+    #[test]
+    fn oversized_fan_in_is_refuted_with_named_bound() {
+        let tables = MulTables::build();
+        let sched = ConfigSchedule::uniform(Config::ACCURATE);
+        let r = verify_raw_sizes(&[MAX_FAN_IN_ANY_CONFIG + 1, 10], &sched, &tables);
+        assert!(!r.all_proved());
+        let f = r.first_failure().unwrap();
+        assert_eq!(f.name, "layer0.i32-acc");
+        assert_eq!(f.verdict, Verdict::Refuted);
+        assert!(f.detail.contains("max_safe_fan_in"), "{}", f.detail);
+        assert!(f.detail.contains("133143"), "{}", f.detail);
+    }
+
+    #[test]
+    fn weighted_intervals_are_inside_agnostic_ones() {
+        let topo = Topology::new(vec![62, 30, 10]).unwrap();
+        let net = Network::new(QuantWeights::random(&topo, 5));
+        let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
+        let aware = verify_network(&net, &sched);
+        let agnostic = verify_raw_sizes(topo.sizes(), &sched, &net.tables);
+        for (a, b) in aware.layers.iter().zip(&agnostic.layers) {
+            assert!(a.acc_lo >= b.acc_lo && a.acc_hi <= b.acc_hi, "layer {}", a.layer);
+            assert!(a.post_lo >= b.post_lo && a.post_hi <= b.post_hi);
+            assert!(a.acc_bits <= b.acc_bits);
+        }
+        assert!(aware.all_proved());
+    }
+
+    #[test]
+    fn table_checks_prove_for_every_config() {
+        let tables = MulTables::build();
+        for cfg in [Config::ACCURATE, Config::new(17).unwrap(), Config::MAX_APPROX] {
+            let checks = table_checks(&tables, cfg);
+            assert_eq!(checks.len(), 3);
+            assert!(checks.iter().all(|c| c.verdict == Verdict::Proved), "{cfg}");
+        }
+    }
+}

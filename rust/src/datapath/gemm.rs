@@ -21,9 +21,14 @@
 //!   pre-tile hot loop.
 //! * **`i32` accumulators.**  `TILE` accumulators live in registers
 //!   across the whole fan-in.  No intermediate saturation: the i32
-//!   never overflows because `fan_in * 127 * 127 <= 65536 * 16129 <
-//!   2^31` (the topology validator caps sizes at 65536; the bias adds
-//!   at most `127 << 7` afterwards).
+//!   never overflows because the topology validator caps every fan-in
+//!   at [`analysis::range::MAX_FAN_IN_ANY_CONFIG`] = `max_safe_fan_in`
+//!   of the exact-mode product envelope (`fan_in * 16129 + (127 << 7)
+//!   <= i32::MAX`), and `ecmac analyze` re-proves the bound
+//!   per-configuration from the measured table envelopes
+//!   (`tests/analyze.rs` pins this proof).
+//!
+//!   [`analysis::range::MAX_FAN_IN_ANY_CONFIG`]: crate::analysis::range::MAX_FAN_IN_ANY_CONFIG
 //! * **Runtime dispatch.**  On x86_64 with AVX2 the tile body is a
 //!   `std::arch` 8-lane `vpgatherdd` over the row (two gathers per
 //!   tile step), selected once via `is_x86_feature_detected!`; every
@@ -407,6 +412,10 @@ mod tests {
     }
 
     #[test]
+    // Miri cannot execute AVX2 intrinsics; the padding-row overread it
+    // would exercise is checked under Miri by the pointer-level test in
+    // `amul` (`row_ptr_overread_stays_in_allocation`) instead.
+    #[cfg_attr(miri, ignore)]
     fn avx2_kernel_matches_scalar_bit_for_bit() {
         if detected_kernel() != Kernel::Avx2 {
             eprintln!("avx2_kernel_matches_scalar_bit_for_bit: skipped (no avx2)");

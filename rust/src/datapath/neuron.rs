@@ -182,8 +182,12 @@ mod tests {
     fn acc_stays_in_21_bits_for_worst_case() {
         // 62 products of +/-16129 plus bias: |acc| <= 62*16129 + 127*128
         // = 1_016_254 < 2^20, so a 21-bit signed accumulator never
-        // overflows — the paper's width claim, verified.
-        let max = 62 * 127 * 127 + 127 * 128;
+        // overflows — the paper's width claim, stated from the
+        // analyzer's constants and re-proved per schedule by the
+        // `seed.hw-acc-21bit` check in `analysis::range`.
+        use crate::analysis::range::{BIAS_ABS_MAX, PRODUCT_ABS_MAX};
+        let max = 62 * PRODUCT_ABS_MAX + BIAS_ABS_MAX;
+        assert_eq!(max, 1_016_254);
         assert!(max < (1 << 20), "max {max}");
     }
 }

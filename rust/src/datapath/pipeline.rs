@@ -60,8 +60,19 @@
 //! and no worker is left blocked on a queue that will never move.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
+
+// Under `--cfg loom` the stage-residency counters come from loom so the
+// `StageGuard` close cascade can be model-checked exhaustively
+// (`loom_tests` below).  `Ordering` stays std (loom re-exports it), and
+// the process-global `PIPELINE_ACTIVE` flag stays std too: loom atomics
+// cannot be const-constructed in a static, and the lease is not part of
+// the modeled shutdown protocol.
+#[cfg(loom)]
+use loom::sync::atomic::AtomicUsize;
+#[cfg(not(loom))]
+use std::sync::atomic::AtomicUsize;
 
 use crate::amul::{sm, Config, ConfigSchedule, N_CONFIGS};
 use crate::util::threadpool::{self, Channel, ThreadPool};
@@ -81,7 +92,7 @@ pub const MIN_PIPELINE_BATCH: usize = PAR_BATCH;
 
 /// Stage-count search ceiling (queue hops are not free; deeper partitions
 /// than this never model out ahead on pool-sized machines).
-const MAX_STAGES: usize = 8;
+pub(crate) const MAX_STAGES: usize = 8;
 
 /// Modeled MAC-equivalents charged per extra distinct signed table
 /// (128 KiB) a stage must keep resident — the config weighting of the
@@ -92,11 +103,11 @@ const TABLE_PENALTY: u64 = 1 << 16;
 /// row-partition model `total/workers` by more than this factor falls
 /// back: the structural lower bound says pipelining cannot recover the
 /// imbalance, cache residency notwithstanding.
-const PIPELINE_SLACK: f64 = 1.10;
+pub(crate) const PIPELINE_SLACK: f64 = 1.10;
 
 /// Queue slots per consumer replica at each stage boundary — the
 /// backpressure rule (see module docs).
-const QUEUE_DEPTH_PER_CONSUMER: usize = 2;
+pub(crate) const QUEUE_DEPTH_PER_CONSUMER: usize = 2;
 
 /// Micro-batch size bounds: small enough to keep the pipeline full and
 /// balanced, large enough that tile kernels amortize their setup.
@@ -225,14 +236,14 @@ impl Plan {
 
 /// Modeled cost of weight layer `l`: its MAC count (one table gather
 /// per MAC under every configuration).
-fn layer_macs(net: &Network, l: usize) -> u64 {
+pub(crate) fn layer_macs(net: &Network, l: usize) -> u64 {
     let lw = &net.weights.layers[l];
     lw.n_in as u64 * lw.n_out as u64
 }
 
 /// Stage cost: MACs plus the table-residency charge for every distinct
 /// scheduled configuration beyond the first.
-fn stage_cost(net: &Network, sched: &ConfigSchedule, range: &Range<usize>) -> u64 {
+pub(crate) fn stage_cost(net: &Network, sched: &ConfigSchedule, range: &Range<usize>) -> u64 {
     let mut macs = 0u64;
     let mut seen = [false; N_CONFIGS];
     let mut tables = 0u64;
@@ -248,7 +259,7 @@ fn stage_cost(net: &Network, sched: &ConfigSchedule, range: &Range<usize>) -> u6
 /// Contiguous partition of `0..n_layers` into exactly `k` stages
 /// minimizing the maximum [`stage_cost`] (DP over prefixes; layer
 /// counts are tiny, so O(k·L²) is free).
-fn best_partition(
+pub(crate) fn best_partition(
     net: &Network,
     sched: &ConfigSchedule,
     n_layers: usize,
@@ -285,7 +296,7 @@ fn best_partition(
 
 /// One replica per stage, then every spare worker to the stage with the
 /// highest per-replica load.
-fn assign_replicas(costs: &[u64], workers: usize) -> Vec<usize> {
+pub(crate) fn assign_replicas(costs: &[u64], workers: usize) -> Vec<usize> {
     let mut replicas = vec![1usize; costs.len()];
     for _ in 0..workers.saturating_sub(costs.len()) {
         let (i, _) = replicas
@@ -413,13 +424,13 @@ fn finish_micro(net: &Network, m: &Micro) -> Vec<ImageResult> {
 /// replica exits — on normal completion and on unwind alike, which is
 /// what cascades shutdown through the pipeline instead of leaving
 /// neighbors blocked (see module docs).
-struct StageGuard<'a> {
+struct StageGuard<'a, T> {
     stage: usize,
     remaining: &'a [AtomicUsize],
-    queues: &'a [Channel<Micro>],
+    queues: &'a [Channel<T>],
 }
 
-impl Drop for StageGuard<'_> {
+impl<T> Drop for StageGuard<'_, T> {
     fn drop(&mut self) {
         if self.remaining[self.stage].fetch_sub(1, Ordering::AcqRel) == 1 {
             if self.stage > 0 {
@@ -609,6 +620,95 @@ impl Network {
             return None;
         }
         Plan::build(self, sched, threadpool::shared_pool().workers(), batch)
+    }
+}
+
+/// Exhaustive-interleaving models of the [`StageGuard`] close cascade —
+/// the unwind-safety invariant the module docs argue in prose, checked
+/// by loom for every schedule.  The guard is generic over the payload
+/// precisely so these models can flow `u32`s instead of building full
+/// [`Micro`] batches.  Run via `RUSTFLAGS="--cfg loom" cargo test --lib
+/// loom` (see `ci.yml`).
+#[cfg(loom)]
+mod loom_tests {
+    use super::*;
+    use loom::sync::Arc;
+
+    type Shared = Arc<(Vec<AtomicUsize>, Vec<Channel<u32>>)>;
+
+    fn shared(replicas: &[usize], caps: &[usize]) -> Shared {
+        Arc::new((
+            replicas.iter().map(|&r| AtomicUsize::new(r)).collect(),
+            caps.iter().map(|&c| Channel::new(c)).collect(),
+        ))
+    }
+
+    #[test]
+    fn loom_stage_guard_cascade_two_stages() {
+        loom::model(|| {
+            let sh = shared(&[1, 1], &[2]);
+            let s0 = {
+                let sh = sh.clone();
+                loom::thread::spawn(move || {
+                    let _guard = StageGuard {
+                        stage: 0,
+                        remaining: &sh.0,
+                        queues: &sh.1,
+                    };
+                    sh.1[0].send(10u32).unwrap();
+                    sh.1[0].send(11u32).unwrap();
+                })
+            };
+            let s1 = {
+                let sh = sh.clone();
+                loom::thread::spawn(move || {
+                    let _guard = StageGuard {
+                        stage: 1,
+                        remaining: &sh.0,
+                        queues: &sh.1,
+                    };
+                    let mut got = Vec::new();
+                    while let Some(v) = sh.1[0].recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            };
+            s0.join().unwrap();
+            // however the producer's exit interleaves with the drain,
+            // the consumer must see every item and then terminate
+            assert_eq!(s1.join().unwrap(), vec![10, 11]);
+            // both guards dropped: the boundary queue must be closed
+            assert!(sh.1[0].send(99).is_err(), "cascade left the queue open");
+        });
+    }
+
+    #[test]
+    fn loom_stage_guard_last_replica_closes() {
+        loom::model(|| {
+            let sh = shared(&[2], &[2]);
+            let replicas: Vec<_> = (0..2u32)
+                .map(|i| {
+                    let sh = sh.clone();
+                    loom::thread::spawn(move || {
+                        let _guard = StageGuard {
+                            stage: 0,
+                            remaining: &sh.0,
+                            queues: &sh.1,
+                        };
+                        sh.1[0].send(i)
+                    })
+                })
+                .collect();
+            for h in replicas {
+                // the queue stays open until the *last* replica exits,
+                // so neither send may observe Closed
+                h.join().unwrap().unwrap();
+            }
+            let (a, b) = (sh.1[0].recv(), sh.1[0].recv());
+            assert_eq!(a.unwrap() + b.unwrap(), 1, "both items must drain");
+            assert_eq!(sh.1[0].recv(), None, "last exit must close the queue");
+        });
     }
 }
 

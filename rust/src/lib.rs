@@ -37,6 +37,7 @@
 //! paper-vs-measured notes.
 
 pub mod amul;
+pub mod analysis;
 pub mod coordinator;
 pub mod datapath;
 pub mod dataset;

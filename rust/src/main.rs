@@ -56,6 +56,7 @@ fn main() {
         "frontier" => cmd_frontier(rest),
         "topo" => cmd_topo(rest),
         "bench" => cmd_bench(rest),
+        "analyze" => cmd_analyze(rest),
         "ablation" => cmd_ablation(rest),
         "verilog" => cmd_verilog(rest),
         "--help" | "-h" | "help" => {
@@ -92,6 +93,8 @@ fn print_global_usage() {
          \x20 topo       arbitrary-topology demo with a per-layer schedule\n\
          \x20 bench      in-process benchmarks (--cycle-batch: per-image vs interleaved;\n\
          \x20            --forward: tiled SIMD GEMM + prefix-cached sweep before/after)\n\
+         \x20 analyze    static verification: datapath value ranges, pipeline-plan\n\
+         \x20            liveness, protocol model checking (-> ANALYZE.json)\n\
          \x20 ablation   heterogeneous per-neuron configuration study\n\
          \x20 verilog    export the EC multiplier as synthesizable Verilog\n"
     );
@@ -1801,6 +1804,229 @@ fn bench_pipeline(
         std::fs::write(path, doc.to_string())?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// `ecmac analyze`: the static-verification pass (DESIGN.md §Static
+/// analysis).  For every (topology, schedule) pair it proves the
+/// datapath value-range bounds from the measured per-configuration
+/// product envelopes (`analysis::range`) and the liveness of every
+/// plan the pipeline planner can emit (`analysis::liveness`, which
+/// model-checks each plan's stage/queue protocol exhaustively).  Any
+/// refuted or unknown check fails the command — the CI gate condition.
+/// `--seed-violations` instead runs the deliberately-unsafe cases and
+/// requires the analyzer to reject them with named-bound diagnostics.
+fn cmd_analyze(argv: &[String]) -> Result<()> {
+    use ecmac::analysis::{self, liveness, range, Summary};
+    let spec = vec![
+        OptSpec {
+            name: "topologies",
+            help: "';'-separated topology specs to verify",
+            takes_value: true,
+            default: Some("62,30,10;784x128x64x10"),
+        },
+        OptSpec {
+            name: "schedule",
+            help: "'all' = all 33 uniform configs + a mixed per-layer schedule, \
+                   or one schedule (e.g. '9' or '9,0,0')",
+            takes_value: true,
+            default: Some("all"),
+        },
+        OptSpec {
+            name: "workers",
+            help: "pool-worker ceiling for the planner-space sweep",
+            takes_value: true,
+            default: Some("8"),
+        },
+        OptSpec {
+            name: "batch",
+            help: "batch size the planner decisions are checked at",
+            takes_value: true,
+            default: Some("512"),
+        },
+        OptSpec {
+            name: "json",
+            help: "write the ANALYZE.json artifact here",
+            takes_value: true,
+            default: None,
+        },
+        OptSpec {
+            name: "seed-violations",
+            help: "run the deliberately-unsafe cases and require refutation",
+            takes_value: false,
+            default: None,
+        },
+    ];
+    let args = Args::parse(argv, &spec)?;
+    if args.flag("seed-violations") {
+        return analyze_seed_violations();
+    }
+    let specs: Vec<&str> = args
+        .get("topologies")
+        .unwrap_or("62,30,10;784x128x64x10")
+        .split(';')
+        .filter(|s| !s.is_empty())
+        .collect();
+    let max_workers: usize = args.get_or("workers", 8)?;
+    let batch: usize = args.get_or("batch", 512)?;
+    let sched_arg = args.get("schedule").unwrap_or("all");
+
+    let mut rows_json: Vec<ecmac::util::json::Json> = Vec::new();
+    let mut table_rows: Vec<report::AnalyzeRow> = Vec::new();
+    let mut grand = Summary::default();
+    let mut failures: Vec<(String, analysis::Check)> = Vec::new();
+    for spec_s in &specs {
+        let topo = Topology::parse(spec_s)?;
+        // weights only feed the weight-aware diagnostics and the cost
+        // model's MAC counts; every *verdict* is weight-agnostic
+        let net = Network::new(QuantWeights::random(&topo, 0xECAC));
+        let scheds: Vec<(String, ConfigSchedule)> = if sched_arg == "all" {
+            let mut s: Vec<(String, ConfigSchedule)> = Config::all()
+                .map(|c| (format!("cfg{}", c.index()), ConfigSchedule::uniform(c)))
+                .collect();
+            // a mixed schedule so stage boundaries carry a
+            // table-residency trade-off, like the pipeline bench
+            let cfgs: Vec<Config> = (0..topo.n_layers())
+                .map(|l| if l == 0 { Config::new(9).unwrap() } else { Config::ACCURATE })
+                .collect();
+            s.push(("mixed".to_string(), ConfigSchedule::per_layer(cfgs)));
+            s
+        } else {
+            let sched = ConfigSchedule::parse(sched_arg)?;
+            sched.validate(topo.n_layers())?;
+            vec![(sched_arg.to_string(), sched)]
+        };
+        for (label, sched) in scheds {
+            let rr = range::verify_network(&net, &sched);
+            let plans = liveness::verify_planner_space(&net, &sched, max_workers, &[batch]);
+            let range_sum = rr.summary();
+            let mut live_sum = Summary::default();
+            for p in &plans {
+                live_sum.merge(p.summary());
+            }
+            let mut combined = range_sum;
+            combined.merge(live_sum);
+            grand.merge(combined);
+            let id = format!("{topo}@{label}");
+            for c in analysis::failures(&rr.checks) {
+                failures.push((id.clone(), c.clone()));
+            }
+            for p in &plans {
+                for c in analysis::failures(&p.checks) {
+                    failures.push((format!("{id} w{} b{}", p.workers, p.batch), c.clone()));
+                }
+            }
+            table_rows.push(report::AnalyzeRow {
+                id: id.clone(),
+                topology: topo.to_string(),
+                schedule: sched.to_string(),
+                range: (range_sum.proved, range_sum.refuted, range_sum.unknown),
+                liveness: (live_sum.proved, live_sum.refuted, live_sum.unknown),
+                plans: (
+                    plans.iter().filter(|p| p.plan.is_some()).count(),
+                    plans.iter().filter(|p| p.plan.is_none()).count(),
+                ),
+                acc_bits: rr.layers.iter().map(|l| l.acc_bits).max().unwrap_or(0),
+                headroom: rr
+                    .layers
+                    .iter()
+                    .map(|l| l.headroom)
+                    .fold(f64::INFINITY, f64::min),
+            });
+            rows_json.push(ecmac::json_obj! {
+                "id" => id,
+                "topology" => topo.to_string(),
+                "schedule" => sched.to_string(),
+                "checks" => rr.checks.iter().map(analysis::Check::to_json).collect::<Vec<_>>(),
+                "layers" => rr.layers.iter().map(range::LayerRange::to_json).collect::<Vec<_>>(),
+                "plans" => plans.iter().map(liveness::PlanReport::to_json).collect::<Vec<_>>(),
+                "summary" => combined.to_json(),
+            });
+        }
+    }
+
+    println!(
+        "static verification: {} topologies x {} schedule(s), planner space \
+         workers 1..={max_workers} @ batch {batch}\n",
+        specs.len(),
+        if sched_arg == "all" { "34".to_string() } else { "1".to_string() },
+    );
+    println!("{}", report::analyze_table(&table_rows));
+    println!(
+        "checks: {} proved, {} refuted, {} unknown",
+        grand.proved, grand.refuted, grand.unknown
+    );
+    if let Some(path) = args.get("json") {
+        let doc = ecmac::json_obj! {
+            "schema_version" => 1usize,
+            "bench" => "analyze",
+            "max_workers" => max_workers,
+            "batch" => batch,
+            "rows" => rows_json,
+            "summary" => grand.to_json(),
+        };
+        std::fs::write(path, doc.to_string())?;
+        println!("wrote {path}");
+    }
+    if !failures.is_empty() {
+        eprintln!();
+        for (id, c) in &failures {
+            eprintln!("[{id}] {} {}: {}", c.verdict, c.name, c.detail);
+        }
+        anyhow::bail!(
+            "analyze: {} refuted and {} unknown check(s) — see diagnostics above",
+            grand.refuted,
+            grand.unknown
+        );
+    }
+    Ok(())
+}
+
+/// `ecmac analyze --seed-violations`: drive the analyzer with inputs
+/// constructed to be unsafe and require refutation with a diagnostic
+/// naming the violated bound — the negative half of the CI gate.
+fn analyze_seed_violations() -> Result<()> {
+    use ecmac::analysis::{liveness, range, Verdict};
+    use ecmac::datapath::pipeline::Plan;
+    let tables = ecmac::amul::MulTables::build();
+    let sched = ConfigSchedule::uniform(Config::ACCURATE);
+
+    // 1. a fan-in one past the analyzer's own cap (Topology::new
+    //    refuses to construct this — verify_raw_sizes takes raw sizes)
+    let sizes = [range::MAX_FAN_IN_ANY_CONFIG + 1, 32, 10];
+    let rr = range::verify_raw_sizes(&sizes, &sched, &tables);
+    let f = rr
+        .checks
+        .iter()
+        .find(|c| c.verdict == Verdict::Refuted)
+        .ok_or_else(|| anyhow::anyhow!("oversized fan-in was not refuted"))?;
+    anyhow::ensure!(
+        f.name == "layer0.i32-acc" && f.detail.contains("violated bound"),
+        "refutation must name the violated bound per layer, got {}: {}",
+        f.name,
+        f.detail
+    );
+    println!("seeded violation 1 (oversized fan-in) refuted as expected:");
+    println!("  [{}] {}\n", f.name, f.detail);
+
+    // 2. a forced pipeline plan wider than the pool it would run on
+    let topo = Topology::parse("784x128x64x10")?;
+    let net = Network::new(QuantWeights::random(&topo, 0xECAC));
+    let plan = Plan::forced(&net, &sched, 3, 32);
+    let checks = liveness::verify_plan(&net, &plan, 2);
+    let f = checks
+        .iter()
+        .find(|c| c.verdict == Verdict::Refuted)
+        .ok_or_else(|| anyhow::anyhow!("oversubscribed plan was not refuted"))?;
+    anyhow::ensure!(
+        f.name.ends_with(".residency") && f.detail.contains("violated bound"),
+        "refutation must name the violated bound per stage, got {}: {}",
+        f.name,
+        f.detail
+    );
+    println!("seeded violation 2 (oversubscribed plan) refuted as expected:");
+    println!("  [{}] {}", f.name, f.detail);
+    println!("\nboth seeded violations rejected with named-bound diagnostics");
     Ok(())
 }
 

@@ -542,6 +542,54 @@ pub fn pipeline_bench_table(rows: &[PipelineBenchRow]) -> String {
     t.render()
 }
 
+/// One (topology, schedule) verification row behind `ecmac analyze`
+/// and its `ANALYZE.json` artifact.
+#[derive(Debug, Clone)]
+pub struct AnalyzeRow {
+    /// Row key, e.g. `"62-30-10@cfg0"`.
+    pub id: String,
+    pub topology: String,
+    pub schedule: String,
+    /// Range/table/counter checks proved | refuted | unknown.
+    pub range: (usize, usize, usize),
+    /// Plan liveness checks proved | refuted | unknown.
+    pub liveness: (usize, usize, usize),
+    /// Planner decisions covered: (emitted plans, justified fallbacks).
+    pub plans: (usize, usize),
+    /// Worst per-layer accumulator width the range analysis derived.
+    pub acc_bits: u32,
+    /// Smallest i32 headroom factor across layers.
+    pub headroom: f64,
+}
+
+/// Render the `ecmac analyze` verification summary.  A row is green
+/// only when both refuted and unknown counts are zero — the same
+/// condition `bench_gate.py` enforces on the artifact.
+pub fn analyze_table(rows: &[AnalyzeRow]) -> String {
+    let mut t = TextTable::new(&[
+        "id",
+        "range p/r/u",
+        "liveness p/r/u",
+        "plans/fallbacks",
+        "acc bits",
+        "headroom",
+        "verdict",
+    ]);
+    for r in rows {
+        let ok = r.range.1 == 0 && r.range.2 == 0 && r.liveness.1 == 0 && r.liveness.2 == 0;
+        t.row(vec![
+            r.id.clone(),
+            format!("{}/{}/{}", r.range.0, r.range.1, r.range.2),
+            format!("{}/{}/{}", r.liveness.0, r.liveness.1, r.liveness.2),
+            format!("{}/{}", r.plans.0, r.plans.1),
+            r.acc_bits.to_string(),
+            format!("{:.1}x", r.headroom),
+            if ok { "proved".into() } else { "FAILED".to_string() },
+        ]);
+    }
+    t.render()
+}
+
 /// One governor policy's adaptive-vs-batch=1 serving comparison at
 /// equal offered load (the rows behind `ecmac loadgen` and its
 /// `BENCH_serve.json` artifact).

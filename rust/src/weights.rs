@@ -72,11 +72,18 @@ impl Topology {
             "topology sizes must be positive, got {:?}",
             sizes
         );
-        // i32 accumulator headroom: fan_in * 127 * 127 + bias << 7 must
-        // never overflow (65536 * 16129 + 16256 < 2^31).
+        // i32 accumulator headroom: every layer's fan-in must keep
+        // `fan_in * max|product| + (bias << 7)` inside i32 under every
+        // multiplier configuration.  The limit is the analyzer's
+        // (`analysis::range`), computed from the dominating exact-mode
+        // product envelope — not the old hand-derived 65536 margin —
+        // and `ecmac analyze` re-proves it per configuration.
+        let fan_in_cap = crate::analysis::range::MAX_FAN_IN_ANY_CONFIG;
         anyhow::ensure!(
-            sizes.iter().all(|&s| s <= 65536),
-            "layer sizes above 65536 overflow the i32 accumulator model, got {:?}",
+            sizes[..sizes.len() - 1].iter().all(|&s| s <= fan_in_cap),
+            "a layer fan-in exceeds {fan_in_cap} and can overflow the i32 \
+             accumulator model (max_safe_fan_in for the exact-mode product \
+             envelope); got {:?}",
             sizes
         );
         // The controller's pass counter and weight-bank select (wsel)
@@ -699,8 +706,14 @@ mod tests {
         // ...and the bound is on total passes across layers
         assert!(Topology::parse("62,1300,1300,10").is_err());
         assert!(Topology::parse("62,1280,1260,10").is_ok());
-        // accumulator headroom bound on any size (including inputs)
-        assert!(Topology::new(vec![70000, 10]).is_err());
+        // accumulator headroom bound on fan-in, at the analyzer's
+        // config-aware limit (133143 = max_safe_fan_in for the
+        // exact-mode envelope) rather than the old 65536 margin
+        let cap = crate::analysis::range::MAX_FAN_IN_ANY_CONFIG;
+        assert!(Topology::new(vec![cap + 1, 10]).is_err());
+        assert!(Topology::new(vec![cap, 10]).is_ok());
+        // shapes the old hardcoded margin rejected are provably safe
+        assert!(Topology::new(vec![70000, 10]).is_ok());
         assert!(Topology::new(vec![65536, 10]).is_ok());
         // identity activation on a hidden layer violates the 8-bit regs
         assert!(Topology::with_activations(

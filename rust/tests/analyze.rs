@@ -1,0 +1,283 @@
+//! Integration suite for the `analysis` subsystem — the contract the
+//! `ecmac analyze` CI gate relies on:
+//!
+//! * the gate topologies (seed 62-30-10 and the MNIST-shaped
+//!   784x128x64x10) prove range + liveness across all 33 configurations;
+//! * the old prose proofs (`weights.rs` 65536 comment, `neuron.rs`
+//!   21-bit claim) are pinned as analyzer facts;
+//! * seeded-unsafe cases (oversized fan-in, oversubscribed plan) are
+//!   refuted with diagnostics naming the violated bound;
+//! * differential fuzz: the static bounds stay conservative against the
+//!   *running* scalar datapath on random nets, and within the 4x
+//!   tightness budget on adversarial max-drive nets (exact equality
+//!   where the drive saturates the envelope).
+
+use ecmac::amul::{sm, Config, ConfigSchedule, MulTables};
+use ecmac::analysis::range::{self, fits_i32, MAX_FAN_IN_ANY_CONFIG, PRODUCT_ABS_MAX};
+use ecmac::analysis::{failures, liveness, Summary, Verdict};
+use ecmac::datapath::gemm::{self, Kernel};
+use ecmac::datapath::neuron::saturate_activation;
+use ecmac::datapath::pipeline::Plan;
+use ecmac::datapath::Network;
+use ecmac::util::rng::Pcg32;
+use ecmac::weights::{LayerWeights, QuantWeights, Topology};
+
+/// Per-layer extremes the *running* datapath actually reaches on
+/// `images`: `(acc_min, acc_max, post_min, post_max)` per weight layer,
+/// driving the same scalar kernel and epilogue as the product forward
+/// path.  This is the runtime side of the differential fuzz contract.
+fn runtime_extremes(
+    net: &Network,
+    sched: &ConfigSchedule,
+    images: &[Vec<u8>],
+) -> Vec<(i64, i64, i64, i64)> {
+    let topo = net.topology();
+    let b = images.len();
+    let mut cur: Vec<u8> = images.iter().flat_map(|x| x.iter().copied()).collect();
+    let mut out = Vec::new();
+    for l in 0..topo.n_layers() {
+        let lw = net.weights().layer(l);
+        let t = net.tables.signed(sched.layer(l));
+        let mut acc = vec![0i32; b * lw.n_out];
+        gemm::layer_batch_with(Kernel::Scalar, net.packed_layer(l), t, &cur, b, &mut acc);
+        let (mut lo, mut hi) = (i64::MAX, i64::MIN);
+        let (mut plo, mut phi) = (i64::MAX, i64::MIN);
+        let mut next = Vec::with_capacity(b * lw.n_out);
+        for img in 0..b {
+            for j in 0..lw.n_out {
+                let a = acc[img * lw.n_out + j] as i64;
+                let p = a + ((sm::decode(lw.b[j]) as i64) << 7);
+                lo = lo.min(a);
+                hi = hi.max(a);
+                plo = plo.min(p);
+                phi = phi.max(p);
+                next.push(saturate_activation(p as i32));
+            }
+        }
+        cur = next;
+        out.push((lo, hi, plo, phi));
+    }
+    out
+}
+
+/// Max-drive network: every weight and bias byte is +127.
+fn max_drive_net(sizes: &[usize]) -> Network {
+    let topo = Topology::new(sizes.to_vec()).unwrap();
+    let layers = sizes
+        .windows(2)
+        .map(|w| LayerWeights::new(w[0], w[1], vec![0x7F; w[0] * w[1]], vec![0x7F; w[1]]).unwrap())
+        .collect();
+    Network::new(QuantWeights::new(topo, layers).unwrap())
+}
+
+#[test]
+fn gate_topologies_prove_range_across_all_33_configs() {
+    for sizes in [vec![62, 30, 10], vec![784, 128, 64, 10]] {
+        let topo = Topology::new(sizes).unwrap();
+        let net = Network::new(QuantWeights::random(&topo, 0xECAC));
+        for cfg in Config::all() {
+            let sched = ConfigSchedule::uniform(cfg);
+            let r = range::verify_network(&net, &sched);
+            assert!(
+                r.all_proved(),
+                "{}: {:?}",
+                r.subject,
+                r.first_failure().map(|c| (&c.name, &c.detail))
+            );
+        }
+    }
+}
+
+#[test]
+fn planner_space_proves_liveness_for_the_gate_topologies() {
+    let seed = Network::new(QuantWeights::random(&Topology::seed(), 1));
+    let deep_topo = Topology::new(vec![784, 128, 64, 10]).unwrap();
+    let deep = Network::new(QuantWeights::random(&deep_topo, 2));
+    for (net, expect_emit) in [(&seed, false), (&deep, true)] {
+        for cfg in [Config::ACCURATE, Config::new(9).unwrap(), Config::MAX_APPROX] {
+            let sched = ConfigSchedule::uniform(cfg);
+            let reports = liveness::verify_planner_space(net, &sched, 8, &[512]);
+            assert_eq!(reports.len(), 8, "one report per worker count");
+            let mut total = Summary::default();
+            for r in &reports {
+                total.merge(r.summary());
+            }
+            assert!(
+                total.all_proved(),
+                "{cfg}: {:?}",
+                reports
+                    .iter()
+                    .flat_map(|r| failures(&r.checks))
+                    .map(|c| (&c.name, &c.detail))
+                    .collect::<Vec<_>>()
+            );
+            assert_eq!(
+                reports.iter().any(|r| r.plan.is_some()),
+                expect_emit,
+                "{cfg}: emit expectation for {}",
+                net.topology()
+            );
+        }
+    }
+}
+
+#[test]
+fn prose_proofs_are_pinned_analyzer_facts() {
+    // weights.rs / gemm.rs: the hand-derived 65536 cap was sound but
+    // loose; the analyzer's exact bound is 133143 and is now what
+    // `Topology` enforces
+    assert_eq!(MAX_FAN_IN_ANY_CONFIG, 133_143);
+    assert!(fits_i32(65_536, PRODUCT_ABS_MAX));
+    assert!(fits_i32(MAX_FAN_IN_ANY_CONFIG, PRODUCT_ABS_MAX));
+    assert!(!fits_i32(MAX_FAN_IN_ANY_CONFIG + 1, PRODUCT_ABS_MAX));
+
+    // neuron.rs: the seed network's 21-bit hardware accumulator claim
+    let tables = MulTables::build();
+    let sched = ConfigSchedule::uniform(Config::ACCURATE);
+    let r = range::verify_raw_sizes(&[62, 30, 10], &sched, &tables);
+    assert!(r.all_proved(), "{:?}", r.first_failure());
+    assert_eq!(r.layers[0].post_hi, 1_016_254);
+    assert_eq!(r.layers[0].acc_bits, 21);
+    let hw = r
+        .checks
+        .iter()
+        .find(|c| c.name == "seed.hw-acc-21bit")
+        .expect("seed pin emitted");
+    assert_eq!(hw.verdict, Verdict::Proved);
+}
+
+#[test]
+fn seeded_oversized_fan_in_is_refuted_with_actionable_diagnostic() {
+    let tables = MulTables::build();
+    let sched = ConfigSchedule::uniform(Config::ACCURATE);
+    let r = range::verify_raw_sizes(&[MAX_FAN_IN_ANY_CONFIG + 1, 32, 10], &sched, &tables);
+    assert!(!r.all_proved());
+    let f = r.first_failure().unwrap();
+    assert_eq!(f.name, "layer0.i32-acc", "diagnostic names the layer and bound");
+    assert_eq!(f.verdict, Verdict::Refuted);
+    assert!(f.detail.contains("violated bound: i32-acc"), "{}", f.detail);
+    assert!(f.detail.contains("max_safe_fan_in"), "{}", f.detail);
+
+    // the construction-time guard rejects the same topology with the
+    // same analyzer constant in its message
+    let err = Topology::new(vec![MAX_FAN_IN_ANY_CONFIG + 1, 10])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("133143"), "{err}");
+    assert!(Topology::new(vec![MAX_FAN_IN_ANY_CONFIG, 10]).is_ok());
+}
+
+#[test]
+fn seeded_oversubscribed_plan_is_refuted_naming_stage_and_bound() {
+    let topo = Topology::new(vec![784, 128, 64, 10]).unwrap();
+    let net = Network::new(QuantWeights::random(&topo, 3));
+    let sched = ConfigSchedule::uniform(Config::ACCURATE);
+    // 3 single-replica stages forced onto a 2-worker pool: stage 2 can
+    // never be resident alongside its upstream neighbors
+    let plan = Plan::forced(&net, &sched, 3, 32);
+    let checks = liveness::verify_plan(&net, &plan, 2);
+    let f = *failures(&checks).first().expect("must refute");
+    assert_eq!(f.name, "stage2.residency", "diagnostic names the stage");
+    assert_eq!(f.verdict, Verdict::Refuted);
+    assert!(f.detail.contains("violated bound: residency"), "{}", f.detail);
+    assert!(f.detail.contains("the pool holds 2"), "{}", f.detail);
+}
+
+#[test]
+fn static_bounds_are_conservative_for_random_nets_and_schedules() {
+    let mut rng = Pcg32::new(0xA11A);
+    let shapes: [&[usize]; 4] = [
+        &[62, 30, 10],
+        &[17, 23, 9, 5],
+        &[33, 64, 10],
+        &[100, 40, 20, 10],
+    ];
+    for (t, sizes) in shapes.iter().enumerate() {
+        let topo = Topology::new(sizes.to_vec()).unwrap();
+        let net = Network::new(QuantWeights::random(&topo, 77 + t as u64));
+        let mixed = ConfigSchedule::per_layer(
+            (0..topo.n_layers())
+                .map(|l| {
+                    if l % 2 == 0 {
+                        Config::new(9).unwrap()
+                    } else {
+                        Config::ACCURATE
+                    }
+                })
+                .collect(),
+        );
+        for sched in [
+            ConfigSchedule::uniform(Config::ACCURATE),
+            ConfigSchedule::uniform(Config::MAX_APPROX),
+            mixed,
+        ] {
+            let report = range::verify_network(&net, &sched);
+            assert!(report.all_proved(), "{}", report.subject);
+            // random full-range bytes plus the crafted extremes +127/-127
+            let mut images: Vec<Vec<u8>> = (0..6)
+                .map(|_| (0..topo.inputs()).map(|_| rng.below(256) as u8).collect())
+                .collect();
+            images.push(vec![0x7F; topo.inputs()]);
+            images.push(vec![0xFF; topo.inputs()]);
+            let rt = runtime_extremes(&net, &sched, &images);
+            for (l, ((lo, hi, plo, phi), lr)) in rt.iter().zip(&report.layers).enumerate() {
+                assert!(
+                    lr.acc_lo <= *lo && *hi <= lr.acc_hi,
+                    "layer {l} of {}: runtime acc [{lo}, {hi}] escapes static [{}, {}]",
+                    report.subject,
+                    lr.acc_lo,
+                    lr.acc_hi
+                );
+                assert!(
+                    lr.post_lo <= *plo && *phi <= lr.post_hi,
+                    "layer {l} of {}: runtime post [{plo}, {phi}] escapes static [{}, {}]",
+                    report.subject,
+                    lr.post_lo,
+                    lr.post_hi
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn adversarial_single_layer_net_pins_static_bounds_per_config() {
+    // all-+127 weights with inputs at each configuration's envelope
+    // argmax drive the accumulator to the static bound exactly: any
+    // future analyzer loosening (> 4x is the regression budget, == is
+    // what this net achieves) or table change shows up here
+    let net = max_drive_net(&[64, 10]);
+    for cfg in Config::all() {
+        let sched = ConfigSchedule::uniform(cfg);
+        let report = range::verify_network(&net, &sched);
+        assert!(report.all_proved(), "{cfg}");
+        let st = net.tables.signed(cfg);
+        let a_star = (0..=127u8).max_by_key(|&a| st.mul8_sm(a, 0x7F)).unwrap();
+        let rt = runtime_extremes(&net, &sched, &[vec![a_star; 64]]);
+        let (_, _, _, phi) = rt[0];
+        let lr = &report.layers[0];
+        assert!(phi <= lr.post_hi, "{cfg}: runtime exceeds static bound");
+        assert!(
+            lr.post_hi <= 4 * phi.max(1),
+            "{cfg}: tightness regression — static {} is > 4x runtime {phi}",
+            lr.post_hi
+        );
+        assert_eq!(lr.post_hi, phi, "{cfg}: max-drive must saturate the bound");
+    }
+}
+
+#[test]
+fn adversarial_deep_net_hits_the_static_bound_under_exact_mode() {
+    // hidden activations saturate to 127, so every layer of the
+    // max-drive net runs at its envelope — static == runtime layer by
+    // layer under the exact configuration
+    let net = max_drive_net(&[48, 16, 12, 10]);
+    let sched = ConfigSchedule::uniform(Config::ACCURATE);
+    let report = range::verify_network(&net, &sched);
+    assert!(report.all_proved());
+    let rt = runtime_extremes(&net, &sched, &[vec![0x7F; 48]]);
+    for (l, ((_, _, _, phi), lr)) in rt.iter().zip(&report.layers).enumerate() {
+        assert_eq!(*phi, lr.post_hi, "layer {l}");
+        assert!(lr.post_hi <= 4 * phi.max(1), "layer {l} tightness");
+    }
+}
