@@ -388,3 +388,103 @@ class TestServeBaselineComparison:
         assert doc["bench"] == "serve"
         fresh = write(tmp_path, "fresh.json", serve_artifact())
         assert bench_gate.run([fresh, "--baseline", str(committed)]) == 0
+
+
+def chaos_class(name="acc-transient", outcome="detected_degraded", **extra):
+    row = {
+        "class": name,
+        "fault": "bit-30 flip in one hidden-layer accumulator",
+        "outcome": outcome,
+        "detail": "envelope violations 1, next request served",
+        "replies": 2,
+        "unresolved": 0,
+    }
+    row.update(extra)
+    return row
+
+
+def chaos_artifact(**extra):
+    """`ecmac chaos --json` output: one entry per injected fault class
+    plus an outcome tally."""
+    classes = [
+        chaos_class("table-stuck-benign", "masked"),
+        chaos_class("acc-transient", "detected_degraded"),
+        chaos_class("stage-panic", "failed_fast"),
+    ]
+    doc = {
+        "bench": "chaos",
+        "seed": 20260807,
+        "classes": classes,
+        "summary": {
+            "masked": 1,
+            "detected_degraded": 1,
+            "failed_fast": 1,
+            "silent": 0,
+            "hung": 0,
+            "total": 3,
+        },
+    }
+    doc.update(extra)
+    return doc
+
+
+class TestChaosInvariants:
+    def test_contained_campaign_passes(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", chaos_artifact())
+        assert bench_gate.run([fresh]) == 0
+
+    def test_silent_class_fails(self, tmp_path):
+        doc = chaos_artifact()
+        doc["classes"][1]["outcome"] = "silent"
+        doc["summary"]["detected_degraded"] = 0
+        doc["summary"]["silent"] = 1
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_hung_class_fails(self, tmp_path):
+        doc = chaos_artifact()
+        doc["classes"][2]["outcome"] = "hung"
+        doc["summary"]["failed_fast"] = 0
+        doc["summary"]["hung"] = 1
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_unresolved_replies_fail_even_when_contained(self, tmp_path):
+        # a masked fault that left a caller hanging is still a hang
+        doc = chaos_artifact()
+        doc["classes"][0]["unresolved"] = 1
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_unknown_outcome_fails(self, tmp_path):
+        doc = chaos_artifact()
+        doc["classes"][0]["outcome"] = "mostly-fine"
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_inconsistent_summary_fails(self, tmp_path):
+        # a tally hiding a silent class behind clean counts is a broken
+        # artifact, not a pass
+        doc = chaos_artifact()
+        doc["summary"]["masked"] = 2
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_total_mismatch_fails(self, tmp_path):
+        doc = chaos_artifact()
+        doc["summary"]["total"] = 99
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_empty_campaign_fails(self, tmp_path):
+        doc = chaos_artifact(classes=[])
+        doc["summary"] = {
+            "masked": 0,
+            "detected_degraded": 0,
+            "failed_fast": 0,
+            "silent": 0,
+            "hung": 0,
+            "total": 0,
+        }
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1

@@ -34,6 +34,13 @@ Two classes of check, applied per artifact kind (the ``bench`` field):
     analysis fails the gate), per-row and grand summaries to tally
     consistently, and the row set to be non-empty.  There is no baseline
     to compare against.
+  - ``chaos``: the fault-injection campaign artifact (``ecmac chaos
+    --json``).  Containment is pass/fail: every injected fault class
+    must end ``masked``, ``detected_degraded``, or ``failed_fast`` —
+    never ``silent`` (corrupt output served as good) or ``hung`` (a
+    reply that never resolved) — with zero unresolved replies per
+    class, a non-empty class set, and a summary that tallies with the
+    classes.  There is no baseline to compare against.
 
 * **Baseline comparison** (when the committed baseline holds real
   measurements): relative columns — ``kernel_speedup`` /
@@ -200,6 +207,51 @@ def analyze_invariants(fresh, tolerance):
     return failures
 
 
+CHAOS_GOOD_OUTCOMES = ("masked", "detected_degraded", "failed_fast")
+CHAOS_BAD_OUTCOMES = ("silent", "hung")
+
+
+def chaos_invariants(fresh, tolerance):
+    """Fault-campaign invariants: every class contained, every reply resolved.
+
+    ``tolerance`` is accepted for interface uniformity but unused —
+    a fault is contained or it is not.
+    """
+    del tolerance
+    failures = []
+    classes = fresh.get("classes", [])
+    if not classes:
+        failures.append("chaos artifact has no classes — the campaign injected nothing")
+    tally = dict.fromkeys(CHAOS_GOOD_OUTCOMES + CHAOS_BAD_OUTCOMES, 0)
+    for c in classes:
+        name = c.get("class", "<unnamed>")
+        outcome = c.get("outcome")
+        if outcome not in tally:
+            failures.append(f"{name}: unknown outcome {outcome!r} — {c.get('detail')}")
+        else:
+            tally[outcome] += 1
+            if outcome in CHAOS_BAD_OUTCOMES:
+                failures.append(f"{name}: ended {outcome} — {c.get('detail')}")
+        unresolved = c.get("unresolved", 0)
+        if unresolved:
+            failures.append(
+                f"{name}: {unresolved} replies never resolved — the stack can "
+                f"leave callers hanging under this fault"
+            )
+    summary = fresh.get("summary", {})
+    for outcome, count in tally.items():
+        if summary.get(outcome) != count:
+            failures.append(
+                f"summary[{outcome}] = {summary.get(outcome)!r} does not tally "
+                f"with the classes ({count})"
+            )
+    if summary.get("total") != len(classes):
+        failures.append(
+            f"summary total {summary.get('total')!r} != {len(classes)} classes"
+        )
+    return failures
+
+
 # Per-artifact-kind gate configuration, selected by the "bench" field.
 KINDS = {
     "forward": {
@@ -233,6 +285,16 @@ KINDS = {
         "invariants": analyze_invariants,
         "refresh": (
             "  cd rust && cargo run --release -- analyze --json ANALYZE.json"
+        ),
+    },
+    "chaos": {
+        "key": "class",
+        # containment is pass/fail, not throughput: nothing to ratio-compare
+        "ratio_columns": (),
+        "absolute_columns": (),
+        "invariants": chaos_invariants,
+        "refresh": (
+            "  cd rust && cargo run --release -- chaos --json CHAOS.json"
         ),
     },
 }

@@ -399,6 +399,10 @@ impl SignedMulTable {
                 *out = sm::apply_sign(m, x as u8, w as u8) as i16;
             }
         }
+        if crate::chaos::enabled() {
+            // SEU model: the table SRAM holds the fault from load time
+            crate::chaos::on_table_build(mag.cfg, &mut rows);
+        }
         SignedMulTable { cfg: mag.cfg, rows }
     }
 

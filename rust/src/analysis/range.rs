@@ -65,6 +65,26 @@ pub const fn fits_i32(fan_in: usize, max_abs_product: i64) -> bool {
     fan_in as i64 * max_abs_product + BIAS_ABS_MAX <= i32::MAX as i64
 }
 
+/// Table-free product envelope of one configuration: `max |product|`
+/// computed straight from the bit-level multiplier model
+/// ([`crate::amul::mul7_approx`]), never touching a built table.  This
+/// is the envelope source the runtime guardbands (`chaos`) use — a
+/// corrupted [`SignedMulTable`] cannot corrupt the bound that is
+/// supposed to catch it.  Agrees with
+/// [`ProductEnvelope::measure`]`.max_abs` on clean tables by
+/// construction (the tables are built from the same bit-level model).
+///
+/// [`SignedMulTable`]: crate::amul::SignedMulTable
+pub fn clean_max_abs_product(cfg: Config) -> i64 {
+    let levels = crate::amul::column_levels(cfg);
+    (0..=MAG_MAX)
+        .flat_map(|a| {
+            (0..=MAG_MAX).map(move |b| crate::amul::mul7_approx_with_levels(a, b, &levels) as i64)
+        })
+        .max()
+        .unwrap()
+}
+
 /// Product-magnitude envelope of one configuration, measured from its
 /// built magnitude table.
 pub struct ProductEnvelope {
@@ -486,6 +506,21 @@ mod tests {
                 assert!(env.weight_abs(w) <= exact.weight_abs(w), "{cfg} w={w:#04x}");
             }
         }
+    }
+
+    #[test]
+    fn clean_envelope_matches_measured_tables() {
+        // the table-free guardband source must agree with the
+        // table-measured envelope on every clean table
+        let tables = MulTables::build();
+        for cfg in [Config::ACCURATE, Config::new(9).unwrap(), Config::MAX_APPROX] {
+            assert_eq!(
+                clean_max_abs_product(cfg),
+                ProductEnvelope::measure(&tables, cfg).max_abs,
+                "{cfg}"
+            );
+        }
+        assert_eq!(clean_max_abs_product(Config::ACCURATE), PRODUCT_ABS_MAX);
     }
 
     #[test]

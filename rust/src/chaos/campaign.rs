@@ -1,0 +1,729 @@
+//! The scripted fault campaign behind `ecmac chaos`.
+//!
+//! [`run_campaign`] injects one fault class at a time — table SRAM
+//! stuck-at/flip, accumulator SEU, pipeline stage stall/panic, flaky
+//! and stalling backends, a dropped intake connection — and records,
+//! per class, which of the three acceptable endings the stack reached:
+//! **masked** (bit-exact output despite the fault), **detected +
+//! degraded** (a guardband or health check caught it, every affected
+//! reply resolved, the stack stepped down its degradation ladder), or
+//! **failed fast** (a contained error with the pool reusable
+//! afterwards).  The two unacceptable endings — **silent** (corrupt
+//! output served as good) and **hung** (a reply that never resolved) —
+//! are what the `chaos` bench gate rejects.
+//!
+//! Every coordinate is derived from the campaign seed through
+//! [`Pcg32`], so a campaign is reproducible from its seed alone.
+//!
+//! The campaign mutates the process-global chaos state ([`install`],
+//! [`set_guardbands`], the fault clocks) and must not run concurrently
+//! with other chaos users; the `tests/chaos.rs` suite serializes it
+//! behind one lock, and the CLI runs it alone.
+
+use super::{
+    install, reset_counters, set_guardbands, AccFault, FaultPlan, StageFault, StageFaultKind,
+    TableFault,
+};
+use crate::amul::{Config, ConfigSchedule};
+use crate::analysis::Verdict;
+use crate::coordinator::governor::{AccuracyTable, Governor, Policy};
+use crate::coordinator::intake::{Client, ClientReply};
+use crate::coordinator::request::ReplyStatus;
+use crate::coordinator::server::{
+    Backend, Coordinator, CoordinatorConfig, ExecutionMode, NativeBackend,
+};
+use crate::coordinator::TcpIntake;
+use crate::datapath::{pipeline, Network};
+use crate::dataset::N_FEATURES;
+use crate::power::{MultiplierEnergyProfile, PowerModel};
+use crate::testkit::doubles::{FlakyBackend, StallingBackend};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::weights::QuantWeights;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How a fault class ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Output bit-exact despite the fault.
+    Masked,
+    /// A guardband/health check caught it; affected replies resolved
+    /// as errors or deadline, and the stack degraded.
+    DetectedDegraded,
+    /// Contained error, every in-flight reply resolved, pool reusable.
+    FailedFast,
+    /// Corrupted output served as good — a gate failure.
+    Silent,
+    /// A reply never resolved (or the run outlived its bound) — a gate
+    /// failure.
+    Hung,
+}
+
+impl Outcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Outcome::Masked => "masked",
+            Outcome::DetectedDegraded => "detected_degraded",
+            Outcome::FailedFast => "failed_fast",
+            Outcome::Silent => "silent",
+            Outcome::Hung => "hung",
+        }
+    }
+
+    /// Whether this ending is acceptable under the chaos gate.
+    pub fn contained(&self) -> bool {
+        !matches!(self, Outcome::Silent | Outcome::Hung)
+    }
+}
+
+/// One fault class's verdict.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    /// Stable class name (`table-stuck-benign`, `stage-stall`, ...).
+    pub class: String,
+    /// The injected fault, human-readable.
+    pub fault: String,
+    pub outcome: Outcome,
+    /// Evidence for the verdict.
+    pub detail: String,
+    /// Requests/replies this class issued.
+    pub replies: u64,
+    /// Replies that never resolved within the class bound (must be 0).
+    pub unresolved: u64,
+}
+
+/// The whole campaign.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub seed: u64,
+    pub classes: Vec<ClassReport>,
+}
+
+impl CampaignReport {
+    fn count(&self, o: Outcome) -> u64 {
+        self.classes.iter().filter(|c| c.outcome == o).count() as u64
+    }
+
+    /// Gate predicate: every class contained, every reply resolved.
+    pub fn all_contained(&self) -> bool {
+        self.classes
+            .iter()
+            .all(|c| c.outcome.contained() && c.unresolved == 0)
+    }
+
+    /// The `CHAOS.json` document.
+    pub fn to_json(&self) -> Json {
+        let classes: Vec<Json> = self
+            .classes
+            .iter()
+            .map(|c| {
+                crate::json_obj! {
+                    "class" => c.class.as_str(),
+                    "fault" => c.fault.as_str(),
+                    "outcome" => c.outcome.as_str(),
+                    "detail" => c.detail.as_str(),
+                    "replies" => c.replies as i64,
+                    "unresolved" => c.unresolved as i64,
+                }
+            })
+            .collect();
+        crate::json_obj! {
+            "bench" => "chaos",
+            "seed" => self.seed as i64,
+            "classes" => Json::Arr(classes),
+            "summary" => crate::json_obj! {
+                "masked" => self.count(Outcome::Masked) as i64,
+                "detected_degraded" => self.count(Outcome::DetectedDegraded) as i64,
+                "failed_fast" => self.count(Outcome::FailedFast) as i64,
+                "silent" => self.count(Outcome::Silent) as i64,
+                "hung" => self.count(Outcome::Hung) as i64,
+                "total" => self.classes.len() as i64,
+            },
+        }
+    }
+}
+
+/// Per-reply resolution bound: far above any injected latency, far
+/// below "forever".
+const REPLY_BOUND: Duration = Duration::from_secs(10);
+
+/// Deterministic synthetic network shared by every class.
+fn network(rng: &mut Pcg32) -> Network {
+    let mut gen = |n: usize| -> Vec<u8> { (0..n).map(|_| rng.below(128) as u8).collect() };
+    Network::new(QuantWeights::two_layer(
+        gen(62 * 30),
+        gen(30),
+        gen(30 * 10),
+        gen(10),
+    ))
+}
+
+fn inputs(rng: &mut Pcg32, n: usize) -> Vec<[u8; N_FEATURES]> {
+    (0..n)
+        .map(|_| {
+            let mut x = [0u8; N_FEATURES];
+            for v in x.iter_mut() {
+                *v = rng.below(128) as u8;
+            }
+            x
+        })
+        .collect()
+}
+
+fn governor(policy: Policy, pm: &PowerModel) -> Governor {
+    let acc = AccuracyTable::new(vec![0.9; crate::amul::N_CONFIGS]);
+    Governor::new(policy, pm, &acc)
+}
+
+/// Reset every piece of process-global chaos state to a clean slate.
+fn clean_slate() {
+    super::clear_plan();
+    set_guardbands(false);
+    pipeline::set_watchdog(None);
+    reset_counters();
+}
+
+/// Drive one request through a coordinator with a bounded wait.
+/// Returns `(reply, resolved)`: `reply` is `None` for a failed window
+/// (closed channel) *and* for an unresolved one — `resolved`
+/// distinguishes them.
+fn bounded_classify(
+    coord: &Coordinator,
+    x: [u8; N_FEATURES],
+) -> (Option<crate::coordinator::ClassifyResponse>, bool) {
+    match coord.try_submit(x) {
+        None => (None, true), // rejected: resolved immediately
+        Some(reply) => match reply.recv_timeout(REPLY_BOUND) {
+            Ok(Some(resp)) => (Some(resp), true),
+            Err(()) => (None, true), // closed: failed loudly
+            Ok(None) => (None, false), // still pending at the bound: hung
+        },
+    }
+}
+
+/// Run the scripted campaign.  Mutates process-global chaos state; the
+/// caller guarantees exclusivity.  Always returns with that state
+/// cleaned (no plan, guardbands off, watchdog disarmed).
+pub fn run_campaign(seed: u64) -> CampaignReport {
+    let mut rng = Pcg32::new(seed);
+    clean_slate();
+
+    // clean references, built before any plan exists (the faulty
+    // networks inside each class rebuild from the same weight seed)
+    let clean_net = network(&mut Pcg32::new(CAMPAIGN_NET_SEED));
+    let xs = inputs(&mut Pcg32::new(seed ^ 0x5eed), 16);
+    let cfg = Config::new(9).unwrap();
+    let sched = ConfigSchedule::uniform(cfg);
+    let clean_ref: Vec<_> = clean_net.forward_batch(&xs, &sched);
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(500, 3))
+        .expect("power model");
+
+    let mut classes = Vec::new();
+    classes.push(class_table_stuck_benign(&clean_net, &xs, cfg, &sched, &clean_ref));
+    clean_slate();
+    classes.push(class_table_flip_audited(&mut rng, &xs, cfg, &sched, &clean_ref));
+    clean_slate();
+    classes.push(class_acc_transient(&mut rng, &xs, &pm));
+    clean_slate();
+    classes.push(class_stage_stall(&mut rng, &xs, &sched, &clean_ref));
+    clean_slate();
+    classes.push(class_stage_panic(&mut rng, &xs, &sched, &clean_ref));
+    clean_slate();
+    classes.push(class_flaky_backend(&mut rng, &xs, &pm));
+    clean_slate();
+    classes.push(class_stalling_backend(&mut rng, &xs, &pm));
+    clean_slate();
+    classes.push(class_conn_drop(&mut rng, &xs, &pm, &clean_net, cfg));
+    clean_slate();
+
+    CampaignReport { seed, classes }
+}
+
+/// Class 1: a stuck-at cell whose stuck value matches what the clean
+/// table already holds — the canonical *benign* SEU.  Every output
+/// must be bit-exact.
+fn class_table_stuck_benign(
+    clean_net: &Network,
+    xs: &[[u8; N_FEATURES]],
+    cfg: Config,
+    sched: &ConfigSchedule,
+    clean_ref: &[crate::datapath::ImageResult],
+) -> ClassReport {
+    // stuck-at matching the clean bit: latched into the SRAM image but
+    // electrically invisible, whatever the config's approximation does
+    let stuck = clean_net.tables.signed(cfg).mul8_sm(0x01, 0x01) & 1 != 0;
+    install(FaultPlan {
+        table: Some(TableFault {
+            cfg: Some(cfg),
+            x: 0x01,
+            w: 0x01,
+            bit: 0,
+            stuck: Some(stuck),
+        }),
+        ..FaultPlan::default()
+    });
+    // fresh network: its tables build under the installed plan
+    let faulty_net = network(&mut Pcg32::new(CAMPAIGN_NET_SEED));
+    let out = faulty_net.forward_batch(xs, sched);
+    let exact = out
+        .iter()
+        .zip(clean_ref)
+        .all(|(a, b)| a.pred == b.pred && a.logits == b.logits);
+    ClassReport {
+        class: "table-stuck-benign".into(),
+        fault: format!(
+            "stuck-at-{}, bit 0 of signed-table entry (+1,+1), cfg {}",
+            stuck as u8,
+            cfg.index()
+        ),
+        outcome: if exact { Outcome::Masked } else { Outcome::Silent },
+        detail: format!(
+            "{} images bit-exact with the clean reference: {exact}",
+            xs.len()
+        ),
+        replies: xs.len() as u64,
+        unresolved: 0,
+    }
+}
+
+/// Class 2: a flipped bit in a zero row of the table SRAM.  The flip
+/// may never be *read* (the kernels skip zero operands — that skip is
+/// exactly what the entry corrupts), so the defense is the
+/// `analysis::range` table audit: it must refute the zero-skip
+/// invariant, and rebuilding the table restores a clean, verified
+/// datapath.
+fn class_table_flip_audited(
+    rng: &mut Pcg32,
+    xs: &[[u8; N_FEATURES]],
+    cfg: Config,
+    sched: &ConfigSchedule,
+    clean_ref: &[crate::datapath::ImageResult],
+) -> ClassReport {
+    let w = 1 + rng.below(127) as u8; // any non-zero weight column
+    let bit = 1 + rng.below(13) as u8;
+    install(FaultPlan {
+        table: Some(TableFault {
+            cfg: Some(cfg),
+            x: 0x80, // the -0 row: must be identically zero
+            w,
+            bit,
+            stuck: None,
+        }),
+        ..FaultPlan::default()
+    });
+    let faulty_net = network(&mut Pcg32::new(CAMPAIGN_NET_SEED));
+    let _ = faulty_net.forward_batch(xs, sched); // tables build under the plan
+    let audit = crate::analysis::range::table_checks(&faulty_net.tables, cfg);
+    let detected = audit.iter().any(|c| c.verdict == Verdict::Refuted);
+    // degrade: discard the corrupted tables, rebuild clean, re-audit
+    super::clear_plan();
+    let rebuilt = network(&mut Pcg32::new(CAMPAIGN_NET_SEED));
+    let out = rebuilt.forward_batch(xs, sched);
+    let recovered = crate::analysis::range::table_checks(&rebuilt.tables, cfg)
+        .iter()
+        .all(|c| c.verdict == Verdict::Proved)
+        && out
+            .iter()
+            .zip(clean_ref)
+            .all(|(a, b)| a.pred == b.pred && a.logits == b.logits);
+    ClassReport {
+        class: "table-flip-audit".into(),
+        fault: format!(
+            "bit flip, bit {bit} of signed-table entry (-0, w={w}), cfg {}",
+            cfg.index()
+        ),
+        outcome: match (detected, recovered) {
+            (true, true) => Outcome::DetectedDegraded,
+            (true, false) => Outcome::FailedFast,
+            (false, _) => Outcome::Silent,
+        },
+        detail: format!(
+            "table audit refuted a corrupted invariant: {detected}; rebuild \
+             restored a verified bit-exact datapath: {recovered}"
+        ),
+        replies: xs.len() as u64,
+        unresolved: 0,
+    }
+}
+
+/// Class 3: transient bit-30 flip in a layer accumulator under the
+/// serving stack with guardbands armed.  The poisoned window must
+/// resolve as a failure (never as an answer), the envelope counter
+/// must trip, the governor must step toward accurate — and the next
+/// request must be served.
+fn class_acc_transient(rng: &mut Pcg32, xs: &[[u8; N_FEATURES]], pm: &PowerModel) -> ClassReport {
+    let backend = Arc::new(NativeBackend {
+        network: network(&mut Pcg32::new(CAMPAIGN_NET_SEED)),
+    });
+    let gov = governor(Policy::Fixed(Config::new(12).unwrap()), pm);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            guardbands: true,
+            ..CoordinatorConfig::default()
+        },
+        backend as Arc<dyn Backend>,
+        gov,
+        pm.clone(),
+    );
+    install(FaultPlan {
+        acc: Some(AccFault {
+            at_call: 0,
+            elem: rng.below(30) as usize,
+            bit: 30, // ~1e9: outside every layer envelope by ~1000x
+        }),
+        ..FaultPlan::default()
+    });
+    reset_counters();
+    let (poisoned, r1) = bounded_classify(&coord, xs[0]);
+    super::clear_plan(); // one-shot transient: gone after firing
+    let (served, r2) = bounded_classify(&coord, xs[1]);
+    let violations = super::envelope_violations();
+    let m = coord.shutdown();
+    let detected = poisoned.is_none() && violations > 0 && m.degradations >= 1;
+    let recovered = served.is_some();
+    let unresolved = (!r1) as u64 + (!r2) as u64;
+    ClassReport {
+        class: "acc-transient".into(),
+        fault: "bit-30 flip in one hidden-layer accumulator, first hooked GEMM call".into(),
+        outcome: if unresolved > 0 {
+            Outcome::Hung
+        } else if detected && recovered {
+            Outcome::DetectedDegraded
+        } else if poisoned.is_some() {
+            Outcome::Silent // the corrupted window was answered
+        } else {
+            Outcome::FailedFast
+        },
+        detail: format!(
+            "envelope violations {violations}, degradations {}, poisoned window \
+             failed: {}, next request served: {recovered}",
+            m.degradations,
+            poisoned.is_none()
+        ),
+        replies: 2,
+        unresolved,
+    }
+}
+
+/// Class 4: a pipeline stage replica stalls mid-stream.  The armed
+/// watchdog must detect the missing end-to-end progress, close the
+/// stage queues, and fail the run with every in-flight micro-batch
+/// accounted — instead of deadlocking the pool.
+fn class_stage_stall(
+    _rng: &mut Pcg32,
+    xs: &[[u8; N_FEATURES]],
+    sched: &ConfigSchedule,
+    clean_ref: &[crate::datapath::ImageResult],
+) -> ClassReport {
+    let net = network(&mut Pcg32::new(CAMPAIGN_NET_SEED));
+    let plan = pipeline::Plan::forced(&net, sched, 2, 2);
+    pipeline::set_watchdog(Some(Duration::from_millis(150)));
+    install(FaultPlan {
+        stage: Some(StageFault {
+            stage: 1,
+            micro: 0,
+            kind: StageFaultKind::Stall(Duration::from_secs(3)),
+        }),
+        ..FaultPlan::default()
+    });
+    let t0 = Instant::now();
+    let result = pipeline::run_checked(&net, xs, sched, &plan);
+    let elapsed = t0.elapsed();
+    pipeline::set_watchdog(None);
+    super::clear_plan();
+    let trips = super::watchdog_trips();
+    // pool must be reusable after the contained failure
+    let after = net.forward_batch(xs, sched);
+    let pool_ok = after
+        .iter()
+        .zip(clean_ref)
+        .all(|(a, b)| a.pred == b.pred && a.logits == b.logits);
+    let (outcome, what) = match &result {
+        Err(e) if pool_ok => (Outcome::FailedFast, e.describe()),
+        Err(e) => (Outcome::Silent, format!("{} but pool corrupted", e.describe())),
+        Ok(out) => {
+            let exact = out
+                .iter()
+                .zip(clean_ref)
+                .all(|(a, b)| a.pred == b.pred && a.logits == b.logits);
+            if !exact {
+                (Outcome::Silent, "completed with corrupted output".into())
+            } else {
+                // a pool too small for the threaded path falls back to
+                // the inline executor, which has no watchdog but rides
+                // the (bounded) stall out with correct output
+                (Outcome::Masked, format!("completed bit-exact in {elapsed:?}"))
+            }
+        }
+    };
+    ClassReport {
+        class: "stage-stall".into(),
+        fault: "3s stall in pipeline stage 1, first micro-batch (watchdog 150ms)".into(),
+        outcome,
+        detail: format!("{what}; watchdog trips {trips}, elapsed {elapsed:?}, pool reusable: {pool_ok}"),
+        replies: xs.len() as u64,
+        unresolved: 0,
+    }
+}
+
+/// Class 5: a pipeline stage replica panics.  The stage-guard close
+/// cascade and the pool's unwind containment must convert it into a
+/// contained `StagePanic` error with the pool reusable.
+fn class_stage_panic(
+    _rng: &mut Pcg32,
+    xs: &[[u8; N_FEATURES]],
+    sched: &ConfigSchedule,
+    clean_ref: &[crate::datapath::ImageResult],
+) -> ClassReport {
+    let net = network(&mut Pcg32::new(CAMPAIGN_NET_SEED));
+    let plan = pipeline::Plan::forced(&net, sched, 2, 2);
+    install(FaultPlan {
+        stage: Some(StageFault {
+            stage: 1,
+            micro: 1,
+            kind: StageFaultKind::Panic,
+        }),
+        ..FaultPlan::default()
+    });
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pipeline::run_checked(&net, xs, sched, &plan)
+    }));
+    super::clear_plan();
+    let after = net.forward_batch(xs, sched);
+    let pool_ok = after
+        .iter()
+        .zip(clean_ref)
+        .all(|(a, b)| a.pred == b.pred && a.logits == b.logits);
+    let (outcome, what) = match result {
+        Ok(Err(e)) if pool_ok => (Outcome::FailedFast, e.describe()),
+        Ok(Err(e)) => (Outcome::Silent, format!("{} but pool corrupted", e.describe())),
+        // the inline fallback path re-raises the panic; catching it
+        // here still counts as contained if the pool survived
+        Err(_) if pool_ok => (Outcome::FailedFast, "panic propagated to caller".into()),
+        Err(_) => (Outcome::Silent, "panic propagated and pool corrupted".into()),
+        Ok(Ok(out)) => {
+            let exact = out
+                .iter()
+                .zip(clean_ref)
+                .all(|(a, b)| a.pred == b.pred && a.logits == b.logits);
+            if exact {
+                (Outcome::Silent, "injected panic never fired".into())
+            } else {
+                (Outcome::Silent, "completed with corrupted output".into())
+            }
+        }
+    };
+    ClassReport {
+        class: "stage-panic".into(),
+        fault: "panic in pipeline stage 1, second micro-batch".into(),
+        outcome,
+        detail: format!("{what}; pool reusable: {pool_ok}"),
+        replies: xs.len() as u64,
+        unresolved: 0,
+    }
+}
+
+/// Class 6: a backend that fails every window.  The coordinator's
+/// health scoring must climb the degradation ladder (mode fallback,
+/// then the schedule pinned accurate) while every reply resolves as a
+/// loud failure — no request may hang on an open channel.
+fn class_flaky_backend(_rng: &mut Pcg32, xs: &[[u8; N_FEATURES]], pm: &PowerModel) -> ClassReport {
+    let inner = Arc::new(NativeBackend {
+        network: network(&mut Pcg32::new(CAMPAIGN_NET_SEED)),
+    });
+    let backend = Arc::new(FlakyBackend::wrap(inner, 1));
+    let gov = governor(Policy::Fixed(Config::new(12).unwrap()), pm);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            execution: ExecutionMode::Pipelined,
+            ..CoordinatorConfig::default()
+        },
+        backend as Arc<dyn Backend>,
+        gov,
+        pm.clone(),
+    );
+    let mut resolved_failures = 0u64;
+    let mut answered = 0u64;
+    let mut unresolved = 0u64;
+    for &x in xs.iter().take(6) {
+        match bounded_classify(&coord, x) {
+            (None, true) => resolved_failures += 1,
+            (Some(_), true) => answered += 1,
+            (_, false) => unresolved += 1,
+        }
+    }
+    let rung = coord.degrade_level();
+    let m = coord.shutdown();
+    ClassReport {
+        class: "flaky-backend".into(),
+        fault: "backend fails every window (deterministic)".into(),
+        outcome: if unresolved > 0 {
+            Outcome::Hung
+        } else if answered > 0 {
+            Outcome::Silent // a failing backend's window must never answer
+        } else if rung >= 2 && m.degradations >= 2 {
+            Outcome::DetectedDegraded
+        } else {
+            Outcome::FailedFast
+        },
+        detail: format!(
+            "6 windows failed loudly ({resolved_failures} closed replies), \
+             degradation rung {rung}, degradations {}, backend errors {}",
+            m.degradations, m.backend_errors
+        ),
+        replies: 6,
+        unresolved,
+    }
+}
+
+/// Class 7: a backend alive but far past the SLO, with per-request
+/// deadlines armed.  Queued requests must age out as resolved
+/// `Deadline` replies instead of waiting on a wedged worker.
+fn class_stalling_backend(
+    _rng: &mut Pcg32,
+    xs: &[[u8; N_FEATURES]],
+    pm: &PowerModel,
+) -> ClassReport {
+    let inner = Arc::new(NativeBackend {
+        network: network(&mut Pcg32::new(CAMPAIGN_NET_SEED)),
+    });
+    let backend = Arc::new(StallingBackend::wrap(inner, Duration::from_millis(40)));
+    let gov = governor(Policy::Fixed(Config::ACCURATE), pm);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            deadline: Some(Duration::from_millis(15)),
+            ..CoordinatorConfig::default()
+        },
+        backend as Arc<dyn Backend>,
+        gov,
+        pm.clone(),
+    );
+    let replies: Vec<_> = xs
+        .iter()
+        .take(6)
+        .filter_map(|&x| coord.try_submit(x))
+        .collect();
+    let submitted = replies.len() as u64;
+    let mut served = 0u64;
+    let mut expired = 0u64;
+    let mut unresolved = 0u64;
+    for r in replies {
+        match r.recv_timeout(REPLY_BOUND) {
+            Ok(Some(resp)) if resp.status == ReplyStatus::Deadline => expired += 1,
+            Ok(Some(_)) => served += 1,
+            Err(()) => {} // failed loudly: resolved
+            Ok(None) => unresolved += 1,
+        }
+    }
+    let m = coord.shutdown();
+    ClassReport {
+        class: "stalling-backend".into(),
+        fault: "40ms stall per window against a 15ms request deadline".into(),
+        outcome: if unresolved > 0 {
+            Outcome::Hung
+        } else if expired > 0 && served >= 1 && m.deadline_expired == expired {
+            Outcome::DetectedDegraded
+        } else {
+            Outcome::FailedFast
+        },
+        detail: format!(
+            "{submitted} admitted: {served} served, {expired} aged out as resolved \
+             Deadline replies (metrics agree: {})",
+            m.deadline_expired
+        ),
+        replies: submitted,
+        unresolved,
+    }
+}
+
+/// Class 8: the first intake connection dies mid-request.  The
+/// retrying client must reconnect, resend, and land a bit-exact
+/// answer — the fault fully masked above the transport.
+fn class_conn_drop(
+    _rng: &mut Pcg32,
+    xs: &[[u8; N_FEATURES]],
+    pm: &PowerModel,
+    clean_net: &Network,
+    cfg: Config,
+) -> ClassReport {
+    let backend = Arc::new(NativeBackend {
+        network: network(&mut Pcg32::new(CAMPAIGN_NET_SEED)),
+    });
+    let gov = governor(Policy::Fixed(cfg), pm);
+    let coord = Arc::new(Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            ..CoordinatorConfig::default()
+        },
+        backend as Arc<dyn Backend>,
+        gov,
+        pm.clone(),
+    ));
+    install(FaultPlan {
+        drop_conn: Some(0),
+        ..FaultPlan::default()
+    });
+    reset_counters();
+    let intake = match TcpIntake::bind("127.0.0.1:0", Arc::clone(&coord)) {
+        Ok(i) => i,
+        Err(e) => {
+            super::clear_plan();
+            if let Ok(c) = Arc::try_unwrap(coord) {
+                c.shutdown();
+            }
+            return ClassReport {
+                class: "conn-drop".into(),
+                fault: "drop intake connection 0 mid-request".into(),
+                outcome: Outcome::Hung,
+                detail: format!("intake bind failed: {e}"),
+                replies: 0,
+                unresolved: 1,
+            };
+        }
+    };
+    let want = clean_net.forward(&xs[0], cfg).pred;
+    let verdict = Client::connect(intake.local_addr(), Duration::from_secs(2), 7)
+        .and_then(|mut c| c.classify(&xs[0]).map(|r| (r, c.reconnects())));
+    drop(intake); // stops the poll loop and releases its Arc
+    super::clear_plan();
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+    let (outcome, detail) = match verdict {
+        Ok((ClientReply::Served { pred, .. }, reconnects)) if pred == want => (
+            Outcome::Masked,
+            format!(
+                "connection 0 dropped with the request in flight; client \
+                 reconnected {reconnects}x and the resent answer is bit-exact"
+            ),
+        ),
+        Ok((ClientReply::Served { pred, .. }, _)) => (
+            Outcome::Silent,
+            format!("resent answer wrong: pred {pred}, want {want}"),
+        ),
+        Ok((ClientReply::Deadline, _)) => {
+            (Outcome::FailedFast, "resent request aged out (resolved)".into())
+        }
+        Err(e) => (Outcome::FailedFast, format!("client gave up loudly: {e}")),
+    };
+    ClassReport {
+        class: "conn-drop".into(),
+        fault: "drop intake connection 0 mid-request".into(),
+        outcome,
+        detail,
+        replies: 1,
+        unresolved: 0,
+    }
+}
+
+/// Seed for the campaign's deterministic network weights (matches the
+/// clean reference built in [`run_campaign`]).
+const CAMPAIGN_NET_SEED: u64 = 0xec3a05;

@@ -1,0 +1,377 @@
+//! Deterministic fault injection, envelope guardbands, and the fault
+//! counters behind graceful degradation — the resilience layer of
+//! `ecmac chaos`.
+//!
+//! The paper's premise is *controlled* error: the MAC units trade
+//! accuracy for power only inside knobs the designer chose.  This
+//! module is about the errors nobody chose — stuck-at bits and
+//! transient flips in the table SRAM and accumulators (SEU-style
+//! hardware faults), and stalled stages, dying workers, flaky backends
+//! and dropped connections on the system side.  Every such fault must
+//! end in exactly one of three outcomes, never silent corruption and
+//! never a hang:
+//!
+//! * **masked** — the output is bit-exact despite the fault,
+//! * **detected + degraded** — a guardband or health check caught it,
+//!   the affected replies resolved as errors/deadline, and the stack
+//!   stepped down a degradation ladder,
+//! * **failed fast** — the fault surfaced as a contained error with
+//!   every in-flight reply resolved and the pool reusable.
+//!
+//! # Hooks (zero-cost when disabled)
+//!
+//! Fault injection and guardband checking share one process-global
+//! `ACTIVE` flag.  Every hooked hot path — [`SignedMulTable::build`],
+//! the [`gemm`] layer kernels, the [`pipeline`] stage loops, the TCP
+//! intake — starts with a single relaxed load of that flag and falls
+//! straight through when it is clear, so the clean-path cost is one
+//! predictable branch per *layer call* (not per MAC).  With hooks
+//! compiled in but disabled, every path is bit-exact with the PR-5 /
+//! PR-7 references (`tests/chaos.rs` pins this).
+//!
+//! # Guardbands
+//!
+//! PR 8 proved the per-config accumulator envelopes statically; the
+//! guardband turns the same bound into a cheap online check.  After a
+//! layer GEMM, every accumulator must satisfy
+//! `|acc| <= n_in * clean_max_abs_product(cfg)` — the weight-agnostic
+//! bound of `analysis::range`, computed from the *bit-level* multiplier
+//! model so a corrupted product table cannot corrupt the bound meant to
+//! catch it.  A violation cannot occur on a fault-free run (the bound
+//! is sound — PR 8's proof), so the check never mutates data: it bumps
+//! [`envelope_violations`], the serving layer marks the window
+//! poisoned, resolves its replies as errors, and steps the governor's
+//! schedule back toward accurate mode (dynamic power control run in
+//! reverse, as an error-safety actuator).
+//!
+//! # Determinism
+//!
+//! A [`FaultPlan`] is data, not randomness at the hook sites: it names
+//! the exact table entry, the exact hooked layer call, the exact
+//! pipeline stage/micro-batch, the exact intake connection.  The
+//! campaign (`campaign`) derives those coordinates from one seed via
+//! [`crate::util::rng::Pcg32`], so a campaign is reproducible from its
+//! seed alone.
+//!
+//! [`SignedMulTable::build`]: crate::amul::SignedMulTable::build
+//! [`gemm`]: crate::datapath::gemm
+//! [`pipeline`]: crate::datapath::pipeline
+
+pub mod campaign;
+
+use crate::amul::{Config, N_CONFIGS};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+pub use campaign::{run_campaign, CampaignReport, ClassReport, Outcome};
+
+/// Hardware-style fault in one entry of a configuration's signed
+/// product table, applied at table build time (the SEU model: the
+/// table SRAM holds a wrong bit from the moment it is loaded).
+#[derive(Debug, Clone, Copy)]
+pub struct TableFault {
+    /// Restrict to one configuration's table (`None` = every table
+    /// built while the plan is installed).
+    pub cfg: Option<Config>,
+    /// Row byte (left operand) of the corrupted entry.
+    pub x: u8,
+    /// Column byte (weight operand) of the corrupted entry.
+    pub w: u8,
+    /// Bit of the `i16` entry to disturb (`0..=14`).
+    pub bit: u8,
+    /// `Some(true)` = stuck-at-1, `Some(false)` = stuck-at-0,
+    /// `None` = flip.
+    pub stuck: Option<bool>,
+}
+
+/// Transient single-event upset in a layer accumulator: flip `bit` of
+/// accumulator element `elem` on hooked layer call number `at_call`
+/// (calls are counted process-wide from the last [`reset_counters`]).
+#[derive(Debug, Clone, Copy)]
+pub struct AccFault {
+    pub at_call: u64,
+    pub elem: usize,
+    pub bit: u8,
+}
+
+/// What an injected pipeline-stage fault does when it fires.
+#[derive(Debug, Clone, Copy)]
+pub enum StageFaultKind {
+    /// Stall the stage replica for up to the duration (the stall polls
+    /// [`stall_aborted`] so a tripped watchdog cuts it short).
+    Stall(Duration),
+    /// Panic the stage replica (the StageGuard close cascade and the
+    /// pool's unwind containment must clean up).
+    Panic,
+}
+
+/// System-style fault in one `datapath::pipeline` stage: fires on the
+/// `micro`-th micro-batch the targeted stage processes.
+#[derive(Debug, Clone, Copy)]
+pub struct StageFault {
+    pub stage: usize,
+    pub micro: u64,
+    pub kind: StageFaultKind,
+}
+
+/// A deterministic script of faults to inject.  Install with
+/// [`install`]; every field is an exact coordinate, so two runs of the
+/// same plan inject identically.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub table: Option<TableFault>,
+    pub acc: Option<AccFault>,
+    pub stage: Option<StageFault>,
+    /// Drop the Nth accepted intake connection (0-based) once it has
+    /// at least one frame in flight.
+    pub drop_conn: Option<u64>,
+}
+
+/// One relaxed load on every hooked hot path: true when a plan is
+/// installed or guardbands are on.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+/// Online envelope checking (independent of fault injection — serving
+/// turns this on with no plan installed).
+static GUARDBANDS: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+
+/// Hooked layer-GEMM calls since the last [`reset_counters`] (the
+/// `AccFault::at_call` clock).
+static LAYER_CALLS: AtomicU64 = AtomicU64::new(0);
+/// Micro-batches the targeted pipeline stage processed (the
+/// `StageFault::micro` clock).
+static STAGE_CALLS: AtomicU64 = AtomicU64::new(0);
+/// Accepted intake connections (the `drop_conn` clock).
+static CONN_ACCEPTS: AtomicU64 = AtomicU64::new(0);
+
+static ENVELOPE_VIOLATIONS: AtomicU64 = AtomicU64::new(0);
+static WATCHDOG_TRIPS: AtomicU64 = AtomicU64::new(0);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+/// Set by a tripped pipeline watchdog so injected stalls (and any
+/// other abortable wait) cut themselves short instead of outliving
+/// the run that injected them.
+static STALL_ABORT: AtomicBool = AtomicBool::new(false);
+
+/// Whether any chaos machinery (plan or guardbands) is live — the one
+/// branch every hooked hot path pays.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+fn refresh_active() {
+    let plan_installed = PLAN.lock().unwrap().is_some();
+    ACTIVE.store(
+        plan_installed || GUARDBANDS.load(Ordering::Relaxed),
+        Ordering::Relaxed,
+    );
+}
+
+/// Install a fault plan (replacing any previous one) and arm the hooks.
+pub fn install(plan: FaultPlan) {
+    *PLAN.lock().unwrap() = Some(Arc::new(plan));
+    refresh_active();
+}
+
+/// Remove the installed plan.  Guardbands, if enabled, stay on.
+pub fn clear_plan() {
+    *PLAN.lock().unwrap() = None;
+    refresh_active();
+}
+
+/// The currently installed plan, if any.
+pub fn plan() -> Option<Arc<FaultPlan>> {
+    PLAN.lock().unwrap().clone()
+}
+
+/// Turn the online envelope guardbands on or off.
+pub fn set_guardbands(on: bool) {
+    GUARDBANDS.store(on, Ordering::Relaxed);
+    refresh_active();
+}
+
+/// Whether envelope guardbands are checking accumulators.
+pub fn guardbands_enabled() -> bool {
+    GUARDBANDS.load(Ordering::Relaxed)
+}
+
+/// Zero every fault clock and counter (campaign class boundaries).
+pub fn reset_counters() {
+    LAYER_CALLS.store(0, Ordering::Relaxed);
+    STAGE_CALLS.store(0, Ordering::Relaxed);
+    CONN_ACCEPTS.store(0, Ordering::Relaxed);
+    ENVELOPE_VIOLATIONS.store(0, Ordering::Relaxed);
+    WATCHDOG_TRIPS.store(0, Ordering::Relaxed);
+    INJECTED.store(0, Ordering::Relaxed);
+    STALL_ABORT.store(false, Ordering::Relaxed);
+}
+
+/// Accumulators seen outside their config's envelope since the last
+/// reset.
+pub fn envelope_violations() -> u64 {
+    ENVELOPE_VIOLATIONS.load(Ordering::Relaxed)
+}
+
+/// Pipeline watchdog trips since the last reset.
+pub fn watchdog_trips() -> u64 {
+    WATCHDOG_TRIPS.load(Ordering::Relaxed)
+}
+
+/// Faults the installed plan actually fired since the last reset.
+pub fn injected_faults() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Record a pipeline watchdog trip and abort any injected stalls so
+/// the stalled replica exits instead of holding its pool worker.
+pub fn note_watchdog_trip() {
+    WATCHDOG_TRIPS.fetch_add(1, Ordering::Relaxed);
+    STALL_ABORT.store(true, Ordering::Relaxed);
+}
+
+/// Whether injected stalls have been told to cut themselves short.
+pub fn stall_aborted() -> bool {
+    STALL_ABORT.load(Ordering::Relaxed)
+}
+
+/// Weight-agnostic pre-bias accumulator bound for a `fan_in`-wide layer
+/// under `cfg` — the guardband.  The per-config `max |product|` comes
+/// from the bit-level model ([`crate::analysis::range::clean_max_abs_product`]),
+/// computed once per configuration and cached, so a corrupted product
+/// table cannot loosen the bound meant to catch it.
+pub fn acc_bound(cfg: Config, fan_in: usize) -> i64 {
+    static MAX_ABS: [OnceLock<i64>; N_CONFIGS] = [const { OnceLock::new() }; N_CONFIGS];
+    let max_abs = *MAX_ABS[cfg.index()]
+        .get_or_init(|| crate::analysis::range::clean_max_abs_product(cfg));
+    fan_in as i64 * max_abs
+}
+
+/// Hook: a signed product table was just built.  Applies the plan's
+/// table fault (if its config filter matches) before the table is
+/// published.  Called by [`crate::amul::SignedMulTable::build`] only
+/// when [`enabled`].
+pub fn on_table_build(cfg: Config, rows: &mut [[i16; 256]]) {
+    let Some(plan) = plan() else { return };
+    let Some(f) = plan.table else { return };
+    if f.cfg.is_some_and(|c| c != cfg) {
+        return;
+    }
+    let entry = &mut rows[f.x as usize][f.w as usize];
+    let mask = 1i16 << (f.bit.min(14));
+    let new = match f.stuck {
+        Some(true) => *entry | mask,
+        Some(false) => *entry & !mask,
+        None => *entry ^ mask,
+    };
+    if new != *entry {
+        INJECTED.fetch_add(1, Ordering::Relaxed);
+    }
+    *entry = new;
+}
+
+/// Hook: a layer GEMM just filled `acc` (pre-bias) for a
+/// `fan_in`-wide layer under `cfg`.  Applies the plan's accumulator
+/// fault, then runs the envelope guardband.  Detection only: the
+/// check never mutates `acc`, so guardbands-on clean runs stay
+/// bit-exact.  Called by [`crate::datapath::gemm`] only when
+/// [`enabled`].
+pub fn on_layer_acc(cfg: Config, fan_in: usize, acc: &mut [i32]) {
+    let call = LAYER_CALLS.fetch_add(1, Ordering::Relaxed);
+    if let Some(plan) = plan() {
+        if let Some(f) = plan.acc {
+            if call == f.at_call && !acc.is_empty() {
+                acc[f.elem % acc.len()] ^= 1i32 << (f.bit.min(30));
+                INJECTED.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    if GUARDBANDS.load(Ordering::Relaxed) {
+        let bound = acc_bound(cfg, fan_in);
+        if acc.iter().any(|&a| (a as i64).abs() > bound) {
+            ENVELOPE_VIOLATIONS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Hook: a pipeline stage replica is about to process a micro-batch.
+/// Fires the plan's stage fault when the (stage, micro) coordinates
+/// match.  Called by [`crate::datapath::pipeline`] only when
+/// [`enabled`].
+pub fn on_stage_micro(stage: usize) {
+    let Some(plan) = plan() else { return };
+    let Some(f) = plan.stage else { return };
+    if f.stage != stage {
+        return;
+    }
+    let micro = STAGE_CALLS.fetch_add(1, Ordering::Relaxed);
+    if micro != f.micro {
+        return;
+    }
+    INJECTED.fetch_add(1, Ordering::Relaxed);
+    match f.kind {
+        StageFaultKind::Panic => panic!("chaos: injected stage panic (stage {stage})"),
+        StageFaultKind::Stall(dur) => {
+            let start = Instant::now();
+            while start.elapsed() < dur && !stall_aborted() {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+/// Hook: the intake accepted a connection.  Returns the connection's
+/// chaos index (for [`should_drop_conn`]).  Cheap enough to call
+/// unconditionally; only meaningful while a plan is installed.
+pub fn on_conn_accept() -> u64 {
+    CONN_ACCEPTS.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Hook: should the intake kill this connection now?  True when the
+/// plan targets connection `conn_idx` and it has frames in flight —
+/// the "server died mid-request" fault the retrying client must
+/// recover from.  Fires at most once per connection (the caller drops
+/// the connection on `true`).
+pub fn should_drop_conn(conn_idx: u64, frames_in_flight: usize) -> bool {
+    if !enabled() || frames_in_flight == 0 {
+        return false;
+    }
+    let Some(plan) = plan() else { return false };
+    if plan.drop_conn == Some(conn_idx) {
+        INJECTED.fetch_add(1, Ordering::Relaxed);
+        true
+    } else {
+        false
+    }
+}
+
+// NOTE: unit tests that install plans or toggle guardbands live in
+// `tests/chaos.rs`, not here — the lib-test binary runs every module's
+// tests in one process, and an installed table/accumulator fault (or a
+// guardband toggled mid-window) would corrupt whatever serving or
+// datapath test happens to be running concurrently.  The integration
+// binary serializes all chaos-state mutation behind one lock.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::range::PRODUCT_ABS_MAX;
+
+    #[test]
+    fn guardband_bound_is_the_analyzer_envelope() {
+        assert_eq!(acc_bound(Config::ACCURATE, 62), 62 * PRODUCT_ABS_MAX);
+        // approximate envelopes never exceed exact
+        for cfg in [Config::new(9).unwrap(), Config::MAX_APPROX] {
+            assert!(acc_bound(cfg, 10) <= acc_bound(Config::ACCURATE, 10));
+        }
+    }
+
+    #[test]
+    fn plan_coordinates_are_data() {
+        // a FaultPlan is inert data until installed; Default is empty
+        let plan = FaultPlan::default();
+        assert!(plan.table.is_none());
+        assert!(plan.acc.is_none());
+        assert!(plan.stage.is_none());
+        assert!(plan.drop_conn.is_none());
+    }
+}

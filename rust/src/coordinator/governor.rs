@@ -157,6 +157,10 @@ pub struct Governor {
     /// Per-layer schedule frontier; when present the budget/floor/energy
     /// policies walk it instead of the uniform frontier.
     schedule_frontier: Option<ScheduleFrontier>,
+    /// Approximation ceiling forced by the degradation ladder
+    /// ([`Governor::step_toward_accurate`]): no layer may run a
+    /// configuration index above it, whatever the policy decides.
+    cap: Option<u32>,
     /// Decision log: (images-at-decision, chosen schedule).
     pub decisions: Vec<(u64, ConfigSchedule)>,
     current: ConfigSchedule,
@@ -266,6 +270,7 @@ impl Governor {
             images: 0,
             cycles_per_image,
             schedule_frontier: None,
+            cap: None,
             decisions: Vec::new(),
             current: ConfigSchedule::Uniform(Config::ACCURATE),
         };
@@ -321,8 +326,62 @@ impl Governor {
         next
     }
 
-    /// Pure decision from current state.
+    /// Degradation actuator: halve the approximation ceiling toward
+    /// accurate mode (configuration 0) — dynamic power control run in
+    /// reverse, as an error-safety response.  Called by the serving
+    /// layer when a runtime guardband trips (an out-of-envelope
+    /// accumulator) or backend health degrades: less approximation
+    /// means more arithmetic margin and the bit-exact reference mode at
+    /// the ladder's bottom.  The ceiling clamps every future policy
+    /// decision until the governor is rebuilt; repeated steps converge
+    /// to fully accurate.  Returns the new ceiling, or `None` when
+    /// already fully accurate.
+    pub fn step_toward_accurate(&mut self) -> Option<Config> {
+        let cur_max = match &self.current {
+            ConfigSchedule::Uniform(c) => c.index(),
+            ConfigSchedule::PerLayer(v) => v.iter().map(|c| c.index()).max().unwrap_or(0),
+        };
+        let ceiling = self.cap.map_or(cur_max, |c| (c as usize).min(cur_max));
+        if ceiling == 0 {
+            self.cap = Some(0);
+            return None;
+        }
+        let new_cap = (ceiling / 2) as u32;
+        self.cap = Some(new_cap);
+        let clamped = self.clamp(self.current.clone());
+        if clamped != self.current {
+            self.current = clamped;
+            self.decisions.push((self.images, self.current.clone()));
+        }
+        Config::new(new_cap)
+    }
+
+    /// The degradation ladder's current approximation ceiling, if any.
+    pub fn cap(&self) -> Option<Config> {
+        self.cap.and_then(Config::new)
+    }
+
+    /// Clamp every layer of `sched` to the degradation ceiling.
+    fn clamp(&self, sched: ConfigSchedule) -> ConfigSchedule {
+        let Some(cap) = self.cap else { return sched };
+        let clamp_cfg = |c: Config| {
+            Config::new((c.index() as u32).min(cap)).expect("cap is a valid config index")
+        };
+        match sched {
+            ConfigSchedule::Uniform(c) => ConfigSchedule::Uniform(clamp_cfg(c)),
+            ConfigSchedule::PerLayer(v) => {
+                ConfigSchedule::PerLayer(v.into_iter().map(clamp_cfg).collect())
+            }
+        }
+    }
+
+    /// Pure decision from current state (policy choice, then the
+    /// degradation ceiling clamp).
     fn decide(&self) -> ConfigSchedule {
+        self.clamp(self.decide_raw())
+    }
+
+    fn decide_raw(&self) -> ConfigSchedule {
         let uniform = ConfigSchedule::Uniform;
         match &self.policy {
             Policy::Fixed(cfg) => uniform(*cfg),
@@ -617,6 +676,37 @@ mod tests {
             assert!(w[0].total_mw <= w[1].total_mw);
             assert!(w[0].accuracy < w[1].accuracy);
         }
+    }
+
+    #[test]
+    fn step_toward_accurate_halves_to_the_accurate_floor() {
+        let (pm, at) = setup();
+        let mut g = Governor::new(Policy::Fixed(Config::new(16).unwrap()), &pm, &at);
+        assert_eq!(g.step_toward_accurate(), Config::new(8));
+        assert_eq!(g.current_uniform(), Some(Config::new(8).unwrap()));
+        assert_eq!(g.step_toward_accurate(), Config::new(4));
+        assert_eq!(g.step_toward_accurate(), Config::new(2));
+        assert_eq!(g.step_toward_accurate(), Config::new(1));
+        assert_eq!(g.step_toward_accurate(), Config::new(0));
+        assert_eq!(g.current_uniform(), Some(Config::ACCURATE));
+        assert_eq!(g.step_toward_accurate(), None, "ladder floors at accurate");
+        // the ceiling clamps later policy decisions too
+        assert_eq!(g.feedback(10, 0.0).as_uniform(), Some(Config::ACCURATE));
+        assert_eq!(g.cap(), Some(Config::ACCURATE));
+    }
+
+    #[test]
+    fn degradation_cap_clamps_per_layer_schedules() {
+        let (pm, at) = setup();
+        let sched = ConfigSchedule::per_layer(vec![Config::MAX_APPROX, Config::new(3).unwrap()]);
+        let mut g = Governor::new(Policy::FixedSchedule(sched), &pm, &at);
+        // worst layer is 32: ceiling halves to 16, clamping only the
+        // layers above it
+        assert_eq!(g.step_toward_accurate(), Config::new(16));
+        assert_eq!(
+            g.current(),
+            ConfigSchedule::per_layer(vec![Config::new(16).unwrap(), Config::new(3).unwrap()])
+        );
     }
 
     #[test]

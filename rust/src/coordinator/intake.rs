@@ -16,9 +16,10 @@
 //! Response frame ([`RESPONSE_LEN`] bytes, little-endian):
 //!
 //! ```text
-//!  [0]     status: 0 = ok, 1 = retry (backpressure), 2 = error/closed
+//!  [0]     status: 0 = ok, 1 = retry (backpressure), 2 = error/closed,
+//!          3 = deadline expired (admitted but aged out unexecuted)
 //!  [1]     predicted class (ok only)
-//!  [2..10] request sojourn latency, µs (ok only)
+//!  [2..10] request sojourn latency, µs (ok and deadline)
 //! ```
 //!
 //! ## Backpressure contract
@@ -30,10 +31,21 @@
 //! [`SubmitOutcome::Busy`] — so a remote client sees backpressure as an
 //! explicit signal instead of unbounded queueing, and a closed intake
 //! answers `2`.  Rejections keep their place in the response order.
+//!
+//! ## Client
+//!
+//! [`Client`] is the matching synchronous wire client: one request in
+//! flight, per-connection read timeout (a dead server surfaces as an
+//! error instead of a hang), `retry` answered with bounded exponential
+//! backoff + seeded jitter, and io failures answered by reconnecting
+//! and resending — which is what makes an injected mid-request
+//! connection drop ([`crate::chaos::FaultPlan::drop_conn`]) a *masked*
+//! fault: classification is pure, so the resend is idempotent.
 
-use super::request::ClassifyResponse;
+use super::request::{ClassifyResponse, ReplyStatus};
 use super::server::{Coordinator, SubmitOutcome};
 use crate::dataset::N_FEATURES;
+use crate::util::rng::Pcg32;
 use crate::util::threadpool::Channel;
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
@@ -53,6 +65,9 @@ pub const STATUS_OK: u8 = 0;
 pub const STATUS_RETRY: u8 = 1;
 /// Response status: backend failure or closed intake.
 pub const STATUS_ERROR: u8 = 2;
+/// Response status: admitted, but the per-request deadline expired
+/// before the window executed — the features were never run.
+pub const STATUS_DEADLINE: u8 = 3;
 
 /// Idle poll-loop sleep: long enough to stay off the CPU when quiet,
 /// short next to the serve path's own latencies.
@@ -83,6 +98,8 @@ enum Pending {
 
 struct Conn {
     stream: TcpStream,
+    /// Accept-order index (the chaos conn-drop fault's addressing).
+    idx: u64,
     /// Partial request frame bytes.
     inbuf: Vec<u8>,
     /// In-order reply queue (front = oldest request).
@@ -137,7 +154,14 @@ impl Conn {
             let frame = match front {
                 Pending::Ready(f) => *f,
                 Pending::Waiting(reply) => match reply.try_recv() {
-                    Ok(Some(resp)) => encode_response(STATUS_OK, resp.pred, resp.latency_us),
+                    Ok(Some(resp)) => match resp.status {
+                        ReplyStatus::Ok => {
+                            encode_response(STATUS_OK, resp.pred, resp.latency_us)
+                        }
+                        ReplyStatus::Deadline => {
+                            encode_response(STATUS_DEADLINE, 0, resp.latency_us)
+                        }
+                    },
                     Ok(None) => break, // still executing
                     // channel closed without a response: failed batch
                     Err(()) => encode_response(STATUS_ERROR, 0, 0),
@@ -208,8 +232,14 @@ impl TcpIntake {
                                 if stream.set_nonblocking(true).is_err() {
                                     continue;
                                 }
+                                let idx = if crate::chaos::enabled() {
+                                    crate::chaos::on_conn_accept()
+                                } else {
+                                    0
+                                };
                                 conns.push(Conn {
                                     stream,
+                                    idx,
                                     inbuf: Vec::new(),
                                     pending: VecDeque::new(),
                                     out: Vec::new(),
@@ -224,6 +254,15 @@ impl TcpIntake {
                     }
                     for conn in conns.iter_mut() {
                         progress |= conn.poll(&coord);
+                        // injected fault: kill the targeted connection
+                        // while it has a reply owed — the peer sees a
+                        // reset mid-request and must reconnect/resend
+                        if crate::chaos::enabled()
+                            && crate::chaos::should_drop_conn(conn.idx, conn.pending.len())
+                        {
+                            conn.dead = true;
+                            progress = true;
+                        }
                     }
                     conns.retain(|c| !c.finished());
                     if !progress {
@@ -262,6 +301,132 @@ impl Drop for TcpIntake {
     }
 }
 
+/// Attempts per request ([`Client::classify`]) before giving up: the
+/// first send plus retry/reconnect resends.
+pub const CLIENT_MAX_ATTEMPTS: u32 = 10;
+/// First backoff step; doubles per attempt up to the cap.
+const CLIENT_BACKOFF_BASE: Duration = Duration::from_micros(500);
+/// Backoff ceiling, so ten attempts stay well under a second.
+const CLIENT_BACKOFF_CAP: Duration = Duration::from_millis(50);
+
+/// A resolved wire reply ([`Client::classify`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientReply {
+    /// Served: predicted class and server-side sojourn latency.
+    Served { pred: u8, latency_us: u64 },
+    /// Admitted but aged out before execution (server-side deadline).
+    Deadline,
+}
+
+/// Synchronous wire client with a survival kit: per-connection read
+/// timeout, `retry` statuses answered with bounded exponential backoff
+/// plus seeded jitter (deterministic under a fixed seed), and io
+/// failures answered by reconnecting and resending the request.  One
+/// request in flight at a time, so a resend after a dropped connection
+/// is always idempotent.
+pub struct Client {
+    addr: SocketAddr,
+    /// `None` between a failed exchange and the next (re)dial.
+    stream: Option<TcpStream>,
+    read_timeout: Duration,
+    rng: Pcg32,
+    retries: u64,
+    reconnects: u64,
+}
+
+impl Client {
+    /// Connect to a [`TcpIntake`].  `read_timeout` bounds every blocking
+    /// read, so a dead or wedged server becomes an error, not a hang;
+    /// `seed` drives the backoff jitter.
+    pub fn connect(
+        addr: SocketAddr,
+        read_timeout: Duration,
+        seed: u64,
+    ) -> anyhow::Result<Client> {
+        let mut client = Client {
+            addr,
+            stream: None,
+            read_timeout,
+            rng: Pcg32::new(seed),
+            retries: 0,
+            reconnects: 0,
+        };
+        client.stream = Some(client.dial()?);
+        Ok(client)
+    }
+
+    fn dial(&self) -> std::io::Result<TcpStream> {
+        let stream = TcpStream::connect(self.addr)?;
+        stream.set_read_timeout(Some(self.read_timeout))?;
+        stream.set_nodelay(true)?;
+        Ok(stream)
+    }
+
+    /// One request/response exchange on the current connection.
+    fn exchange(&mut self, features: &[u8; N_FEATURES]) -> std::io::Result<[u8; RESPONSE_LEN]> {
+        if self.stream.is_none() {
+            self.stream = Some(self.dial()?);
+        }
+        let stream = self.stream.as_mut().unwrap();
+        stream.write_all(features)?;
+        let mut frame = [0u8; RESPONSE_LEN];
+        stream.read_exact(&mut frame)?;
+        Ok(frame)
+    }
+
+    /// Equal-jitter exponential backoff: sleep uniformly in
+    /// `[ceil/2, ceil]` where `ceil = base * 2^attempt`, capped.
+    fn backoff(&mut self, attempt: u32) {
+        let ceil = CLIENT_BACKOFF_BASE
+            .saturating_mul(1u32 << attempt.min(10))
+            .min(CLIENT_BACKOFF_CAP);
+        let half = (ceil.as_micros() as u64 / 2).max(1);
+        let jitter = self.rng.below(half.min(u32::MAX as u64) as u32 + 1) as u64;
+        std::thread::sleep(Duration::from_micros(half + jitter));
+    }
+
+    /// Classify one feature vector, riding out backpressure and
+    /// connection loss.  Returns the first terminal reply; errors only
+    /// on a server-reported failure (`status 2`) or after
+    /// [`CLIENT_MAX_ATTEMPTS`] attempts.
+    pub fn classify(&mut self, features: &[u8; N_FEATURES]) -> anyhow::Result<ClientReply> {
+        for attempt in 0..CLIENT_MAX_ATTEMPTS {
+            if attempt > 0 {
+                self.retries += 1;
+                self.backoff(attempt - 1);
+            }
+            match self.exchange(features) {
+                Ok(frame) => {
+                    let (status, pred, latency_us) = decode_response(&frame);
+                    match status {
+                        STATUS_OK => return Ok(ClientReply::Served { pred, latency_us }),
+                        STATUS_DEADLINE => return Ok(ClientReply::Deadline),
+                        STATUS_RETRY => continue, // backpressure: back off, resend
+                        _ => anyhow::bail!("server answered terminal error (status {status})"),
+                    }
+                }
+                Err(_) => {
+                    // io failure (timeout, reset, mid-request drop):
+                    // the reply is lost — reconnect and resend
+                    self.stream = None;
+                    self.reconnects += 1;
+                }
+            }
+        }
+        anyhow::bail!("request unserved after {CLIENT_MAX_ATTEMPTS} attempts")
+    }
+
+    /// Resend attempts taken so far (backpressure + reconnect resends).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Connections re-established after io failures.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,7 +434,7 @@ mod tests {
     use crate::coordinator::governor::{AccuracyTable, Governor, Policy};
     use crate::coordinator::server::{Backend, CoordinatorConfig, NativeBackend};
     use crate::power::{MultiplierEnergyProfile, PowerModel};
-    use crate::testkit::doubles::SlowBackend;
+    use crate::testkit::doubles::{SlowBackend, StallingBackend};
     use crate::util::rng::Pcg32;
     use crate::weights::QuantWeights;
 
@@ -376,5 +541,93 @@ mod tests {
             .shutdown();
         assert_eq!(m.requests, 1);
         assert_eq!(m.rejected, 2);
+    }
+
+    #[test]
+    fn client_rides_out_backpressure_with_backoff() {
+        // one inflight slot, held by a direct submission into a slow
+        // backend: the wire client must see RETRY, back off, and land
+        // the request once the slot frees — not error out
+        let backend = Arc::new(SlowBackend::wrap(
+            native_backend(),
+            Duration::from_millis(30),
+        ));
+        let coord = Arc::new(start(
+            backend as Arc<dyn Backend>,
+            CoordinatorConfig {
+                inflight_budget: 1,
+                workers: 1,
+                shards: 1,
+                ..CoordinatorConfig::default()
+            },
+        ));
+        let mut intake = TcpIntake::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let held = coord.try_submit([1; N_FEATURES]).expect("slot taken");
+
+        let mut client =
+            Client::connect(intake.local_addr(), Duration::from_secs(2), 77).unwrap();
+        let reply = client.classify(&[2; N_FEATURES]).expect("served eventually");
+        assert!(matches!(reply, ClientReply::Served { .. }));
+        assert!(client.retries() >= 1, "the busy window forced a retry");
+        assert_eq!(client.reconnects(), 0, "no io failure in this scenario");
+
+        held.recv().expect("direct submission also served");
+        drop(client);
+        intake.stop();
+        let m = Arc::try_unwrap(coord)
+            .unwrap_or_else(|_| panic!("intake still holds the coordinator"))
+            .shutdown();
+        assert_eq!(m.requests, 2);
+        assert!(m.rejected >= 1, "the retries were counted as rejections");
+    }
+
+    #[test]
+    fn deadline_expiry_crosses_the_wire_as_its_own_status() {
+        // a stalling backend with a tight per-request deadline: the
+        // first window is served, the queued remainder ages out and
+        // must come back as STATUS_DEADLINE frames, in order
+        let backend = Arc::new(StallingBackend::wrap(
+            native_backend(),
+            Duration::from_millis(40),
+        ));
+        let coord = Arc::new(start(
+            backend as Arc<dyn Backend>,
+            CoordinatorConfig {
+                workers: 1,
+                shards: 1,
+                deadline: Some(Duration::from_millis(15)),
+                ..CoordinatorConfig::default()
+            },
+        ));
+        let mut intake = TcpIntake::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+        let mut client = TcpStream::connect(intake.local_addr()).unwrap();
+
+        let mut wire = Vec::new();
+        for i in 0..4u8 {
+            wire.extend_from_slice(&[i + 1; N_FEATURES]);
+        }
+        client.write_all(&wire).unwrap();
+        let mut served = 0;
+        let mut expired = 0;
+        for _ in 0..4 {
+            match read_frame(&mut client) {
+                (STATUS_OK, _, _) => served += 1,
+                (STATUS_DEADLINE, _, latency_us) => {
+                    expired += 1;
+                    assert!(latency_us > 0, "deadline frames carry the sojourn");
+                }
+                (status, _, _) => panic!("unexpected wire status {status}"),
+            }
+        }
+        assert!(served >= 1, "the first window beat its deadline");
+        assert!(expired >= 1, "queued requests aged out on the wire");
+
+        drop(client);
+        intake.stop();
+        let m = Arc::try_unwrap(coord)
+            .unwrap_or_else(|_| panic!("intake still holds the coordinator"))
+            .shutdown();
+        assert_eq!(m.deadline_expired, expired);
+        assert_eq!(m.requests, served);
     }
 }

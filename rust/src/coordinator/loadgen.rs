@@ -20,12 +20,14 @@
 //! into a client-owned [`LatencyHistogram`], so a lagging collector
 //! thread can never inflate the percentiles.
 
+use super::intake::{Client, ClientReply};
 use super::request::ClassifyResponse;
 use super::server::Coordinator;
 use crate::dataset::N_FEATURES;
 use crate::util::rng::Pcg32;
 use crate::util::stats::LatencyHistogram;
 use crate::util::threadpool::Channel;
+use std::net::SocketAddr;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -86,8 +88,15 @@ pub struct LoadReport {
     /// Explicit backpressure rejections observed by the client.
     pub rejected: u64,
     /// Requests whose reply channel closed without an answer (failed
-    /// batch or shutdown race).
+    /// batch or shutdown race), or — on the wire — answered with a
+    /// terminal error / still unserved after the client's retry budget.
     pub errors: u64,
+    /// Requests answered with a deadline-expired status (admitted but
+    /// aged out before execution; wire/deadline runs only).
+    pub deadline: u64,
+    /// Client resend attempts absorbed by backoff (wire runs only):
+    /// retry statuses plus reconnect-and-resend after io failures.
+    pub retries: u64,
     /// Offered load actually achieved, `sent / wall_s`.
     pub offered_rps: f64,
     /// Goodput, `answered / wall_s`.
@@ -248,6 +257,78 @@ fn run_open(
     )
 }
 
+/// Closed-loop load over the TCP wire: one retrying [`Client`] per
+/// concurrency slot, all driving a live [`super::TcpIntake`].  Unlike
+/// the in-process shapes, backpressure is absorbed by the clients'
+/// bounded backoff (so `rejected` stays 0 — retries are counted
+/// instead), deadline-expired answers are tallied separately, and the
+/// per-connection read timeout means a dead server ends the run with
+/// errors instead of hanging it.
+pub fn run_wire_closed(
+    addr: SocketAddr,
+    inputs: &[[u8; N_FEATURES]],
+    spec: &LoadSpec,
+    read_timeout: Duration,
+) -> anyhow::Result<LoadReport> {
+    assert!(!inputs.is_empty(), "loadgen needs at least one input");
+    let LoadMode::Closed { concurrency } = spec.mode else {
+        anyhow::bail!("wire load is closed-loop only (got {})", spec.mode);
+    };
+    let clients: Vec<Client> = (0..concurrency.max(1))
+        .map(|c| Client::connect(addr, read_timeout, spec.seed.wrapping_add(c as u64)))
+        .collect::<anyhow::Result<_>>()?;
+    let hist = Mutex::new(LatencyHistogram::new());
+    let answered = AtomicU64::new(0);
+    let deadline = AtomicU64::new(0);
+    let errors = AtomicU64::new(0);
+    let retries = AtomicU64::new(0);
+    let next = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for mut client in clients {
+            let (hist, answered, deadline) = (&hist, &answered, &deadline);
+            let (errors, retries, next) = (&errors, &retries, &next);
+            s.spawn(move || {
+                let mut local = LatencyHistogram::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= spec.requests {
+                        break;
+                    }
+                    match client.classify(&inputs[i % inputs.len()]) {
+                        Ok(ClientReply::Served { latency_us, .. }) => {
+                            local.record_us(latency_us.max(1));
+                            answered.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(ClientReply::Deadline) => {
+                            deadline.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                retries.fetch_add(client.retries(), Ordering::Relaxed);
+                hist.lock().unwrap().merge(&local);
+            });
+        }
+    });
+    let mut report = finish(
+        format!("wire-{}", spec.mode),
+        t0.elapsed().as_secs_f64(),
+        spec.requests as u64,
+        answered.into_inner(),
+        0,
+        errors.into_inner(),
+        hist.into_inner().unwrap(),
+        0,
+        0,
+    );
+    report.deadline = deadline.into_inner();
+    report.retries = retries.into_inner();
+    Ok(report)
+}
+
 #[allow(clippy::too_many_arguments)]
 fn finish(
     mode: String,
@@ -268,6 +349,8 @@ fn finish(
         answered,
         rejected,
         errors,
+        deadline: 0,
+        retries: 0,
         offered_rps: sent as f64 / wall,
         throughput_rps: answered as f64 / wall,
         mean_us: hist.mean_us(),
@@ -368,6 +451,64 @@ mod tests {
         let m = coord.shutdown();
         assert_eq!(m.requests, r.answered, "every admitted request was served");
         assert_eq!(m.rejected, r.rejected, "server and client agree on rejections");
+    }
+
+    #[test]
+    fn wire_closed_loop_survives_a_flaky_backend() {
+        // the loadgen-under-fault smoke: a backend failing every 4th
+        // window behind a real TCP intake.  The harness must complete
+        // with every request accounted for — answers, terminal errors,
+        // nothing hung — because the clients' read timeout and bounded
+        // retry budget convert every failure mode into a tally
+        let mut rng = Pcg32::new(51);
+        let mut gen = |n: usize| -> Vec<u8> {
+            (0..n).map(|_| rng.below(128) as u8).collect()
+        };
+        let inner = Arc::new(NativeBackend {
+            network: crate::datapath::Network::new(QuantWeights::two_layer(
+                gen(62 * 30),
+                gen(30),
+                gen(30 * 10),
+                gen(10),
+            )),
+        });
+        let backend = Arc::new(crate::testkit::doubles::FlakyBackend::wrap(inner, 4));
+        let pm =
+            PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(500, 3)).unwrap();
+        let acc = AccuracyTable::new(vec![0.9; crate::amul::N_CONFIGS]);
+        let gov = Governor::new(Policy::Fixed(Config::ACCURATE), &pm, &acc);
+        let coord = Arc::new(Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                shards: 1,
+                ..CoordinatorConfig::default()
+            },
+            backend as Arc<dyn Backend>,
+            gov,
+            pm,
+        ));
+        let mut intake =
+            crate::coordinator::TcpIntake::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+
+        let xs = inputs(8);
+        let spec = LoadSpec {
+            mode: LoadMode::Closed { concurrency: 2 },
+            requests: 60,
+            seed: 9,
+        };
+        let r = run_wire_closed(intake.local_addr(), &xs, &spec, Duration::from_secs(2))
+            .expect("wire run completes");
+        assert_eq!(r.sent, 60);
+        assert_eq!(r.answered + r.deadline + r.errors, 60, "no request unaccounted");
+        assert!(r.answered > 0, "healthy windows were served");
+        assert!(r.errors > 0, "every 4th window fails by construction");
+        assert_eq!(r.rejected, 0, "wire clients absorb backpressure as retries");
+
+        intake.stop();
+        let m = Arc::try_unwrap(coord)
+            .unwrap_or_else(|_| panic!("intake still holds the coordinator"))
+            .shutdown();
+        assert!(m.backend_errors > 0);
     }
 
     #[test]

@@ -42,9 +42,9 @@ pub mod server;
 
 pub use frontier::{SchedulePoint, ScheduleFrontier};
 pub use governor::{Governor, Policy};
-pub use intake::TcpIntake;
-pub use loadgen::{LoadMode, LoadReport, LoadSpec};
-pub use request::{ClassifyRequest, ClassifyResponse, MetricsSnapshot};
+pub use intake::{Client, ClientReply, TcpIntake};
+pub use loadgen::{run_wire_closed, LoadMode, LoadReport, LoadSpec};
+pub use request::{ClassifyRequest, ClassifyResponse, MetricsSnapshot, ReplyStatus};
 pub use sensitivity::{SensitivityModel, SweepProgress};
 pub use server::{
     Backend, Coordinator, CoordinatorConfig, ExecutionMode, NativeBackend, PjrtBackend,

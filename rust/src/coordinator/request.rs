@@ -15,10 +15,26 @@ pub struct ClassifyRequest {
     pub reply: Channel<ClassifyResponse>,
 }
 
+/// How a resolved reply should be interpreted.  Failed batches close
+/// the reply channel instead (the receiver sees `None`), so the only
+/// non-`Ok` *reply* today is a deadline expiry — the request was
+/// admitted but aged out before its window executed, and its features
+/// were never run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplyStatus {
+    /// Served; `pred`/`logits` are valid.
+    #[default]
+    Ok,
+    /// The request's deadline expired before execution; `pred`/`logits`
+    /// are zeroed placeholders and must not be used.
+    Deadline,
+}
+
 /// The response delivered to the requester.
 #[derive(Debug, Clone)]
 pub struct ClassifyResponse {
     pub id: u64,
+    pub status: ReplyStatus,
     pub pred: u8,
     /// Raw output logits (`topology.outputs()` long).
     pub logits: Vec<i32>,
@@ -125,6 +141,17 @@ pub struct MetricsSnapshot {
     pub per_cfg: Vec<u64>,
     pub mixed: u64,
     pub energy_mj: f64,
+    /// Fault/degradation counters (the resilience layer's ledger).
+    /// Admitted requests whose deadline expired before execution.
+    pub deadline_expired: u64,
+    /// Windows whose accumulators left their config's static envelope
+    /// (runtime guardband trips — poisoned, never served).
+    pub envelope_violations: u64,
+    /// Degradation-ladder steps taken (mode fallback or schedule
+    /// stepped toward accurate).
+    pub degradations: u64,
+    /// Pipeline watchdog trips (stalled stage detected and failed).
+    pub watchdog_trips: u64,
 }
 
 impl Metrics {
@@ -183,6 +210,10 @@ impl Metrics {
             per_cfg: self.per_cfg.clone(),
             mixed: self.mixed,
             energy_mj: self.energy_mj,
+            deadline_expired: 0,
+            envelope_violations: 0,
+            degradations: 0,
+            watchdog_trips: 0,
         }
     }
 }

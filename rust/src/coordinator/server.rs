@@ -35,7 +35,7 @@
 
 use super::governor::Governor;
 use super::request::{
-    ClassifyRequest, ClassifyResponse, Metrics, MetricsSnapshot, MAX_TRACKED_BATCH,
+    ClassifyRequest, ClassifyResponse, Metrics, MetricsSnapshot, ReplyStatus, MAX_TRACKED_BATCH,
 };
 use crate::amul::{Config, ConfigSchedule};
 use crate::dataset::N_FEATURES;
@@ -126,8 +126,13 @@ impl Backend for NativeBackend {
     ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
         // the pipeline's plan falls back to classify_batch (same
         // arithmetic) whenever its cost model says pipelining cannot
-        // win the batch, so this is always safe to route through
-        Ok(self.network.classify_batch_pipelined(xs, sched))
+        // win the batch, so this is always safe to route through; the
+        // checked entry point contains stage panics and watchdog-
+        // detected stalls as batch errors instead of unwinding the
+        // serving worker or deadlocking on a dead stage
+        self.network
+            .try_classify_batch_pipelined(xs, sched)
+            .map_err(|e| anyhow::anyhow!(e.describe()))
     }
 
     fn prewarm_pipelined(&self, sched: &ConfigSchedule) {
@@ -300,6 +305,18 @@ pub struct CoordinatorConfig {
     /// How each logical batch is executed (row shards vs the
     /// layer-pipelined streaming executor).
     pub execution: ExecutionMode,
+    /// Per-request deadline: an admitted request older than this when
+    /// its window reaches a worker gets a resolved
+    /// [`ReplyStatus::Deadline`] reply instead of occupying the batch.
+    /// `None` disables expiry (the default).
+    pub deadline: Option<Duration>,
+    /// Run the runtime envelope guardbands (`chaos` online checks over
+    /// every layer's accumulators): a window whose accumulators leave
+    /// their configuration's static envelope is poisoned — its
+    /// requests fail loudly, and the governor steps the schedule
+    /// toward accurate mode.  Detection only; with no fault present
+    /// outputs stay bit-exact.
+    pub guardbands: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -314,6 +331,8 @@ impl Default for CoordinatorConfig {
             latency_slo_us: 5_000,
             inflight_budget: 0,
             execution: ExecutionMode::RowSharded,
+            deadline: None,
+            guardbands: false,
         }
     }
 }
@@ -383,6 +402,22 @@ struct Shared {
     latency_ewma_us: AtomicU64,
     /// The controller's live window-size target (observability).
     batch_target: AtomicUsize,
+    /// Admitted requests that aged out before execution (resolved with
+    /// [`ReplyStatus::Deadline`], never served).
+    deadline_expired: AtomicU64,
+    /// Windows poisoned by the runtime envelope guardband.
+    envelope_violations: AtomicU64,
+    /// Degradation-ladder steps taken (mode fallback escalations and
+    /// guardband-triggered governor steps).
+    degradations: AtomicU64,
+    /// Consecutive failed windows (backend health streak; a success
+    /// resets it).
+    consec_failures: AtomicUsize,
+    /// Degradation-ladder rung: 0 = configured mode, 1 = execution
+    /// forced to `RowSharded`, 2 = + schedule pinned fully accurate.
+    /// Sticky for the coordinator's lifetime — a backend that needed
+    /// two escalations has forfeited the benefit of the doubt.
+    degrade_level: AtomicUsize,
 }
 
 impl Shared {
@@ -394,6 +429,11 @@ impl Shared {
             windows_deadline: AtomicU64::new(0),
             latency_ewma_us: AtomicU64::new(0),
             batch_target: AtomicUsize::new(1),
+            deadline_expired: AtomicU64::new(0),
+            envelope_violations: AtomicU64::new(0),
+            degradations: AtomicU64::new(0),
+            consec_failures: AtomicUsize::new(0),
+            degrade_level: AtomicUsize::new(0),
         }
     }
 }
@@ -420,6 +460,7 @@ struct WorkerCtx {
     pool: Option<Arc<ThreadPool>>,
     shards: usize,
     execution: ExecutionMode,
+    deadline: Option<Duration>,
     /// This worker's private metrics shard.
     metrics: Arc<Vec<Mutex<Metrics>>>,
     slot: usize,
@@ -486,6 +527,9 @@ impl Coordinator {
                     }
                 }
             }
+        }
+        if cfg.guardbands {
+            crate::chaos::set_guardbands(true);
         }
         let n_workers = cfg.workers.max(1);
         let inflight_budget = if cfg.inflight_budget == 0 {
@@ -594,6 +638,7 @@ impl Coordinator {
                 pool: pool.clone(),
                 shards: cfg.shards,
                 execution: cfg.execution,
+                deadline: cfg.deadline,
                 metrics: Arc::clone(&metrics),
                 slot: i,
                 governor: Arc::clone(&governor),
@@ -704,22 +749,100 @@ impl Coordinator {
         Ok(out)
     }
 
+    /// Consecutive failed windows that escalate the degradation ladder
+    /// one rung (the backend health threshold).
+    const DEGRADE_AFTER: usize = 2;
+
     fn serve_batch(ctx: &WorkerCtx, batch: Batch) {
         let sched = ctx.governor.lock().unwrap().current();
+        // per-request deadlines: requests that aged out between
+        // admission and execution get a resolved Deadline reply now —
+        // their features are never run, and the window shrinks to the
+        // still-live requests instead of spending backend time on
+        // answers nobody is waiting for
+        let requests = match ctx.deadline {
+            None => batch.requests,
+            Some(d) => {
+                let (live, expired): (Vec<_>, Vec<_>) = batch
+                    .requests
+                    .into_iter()
+                    .partition(|r| r.enqueued.elapsed() < d);
+                if !expired.is_empty() {
+                    ctx.shared
+                        .deadline_expired
+                        .fetch_add(expired.len() as u64, Ordering::Relaxed);
+                    ctx.shared
+                        .inflight
+                        .fetch_sub(expired.len(), Ordering::AcqRel);
+                    for req in expired {
+                        let _ = req.reply.send(ClassifyResponse {
+                            id: req.id,
+                            status: ReplyStatus::Deadline,
+                            pred: 0,
+                            logits: Vec::new(),
+                            sched: sched.clone(),
+                            latency_us: (req.enqueued.elapsed().as_micros() as u64).max(1),
+                            batch_size: 0,
+                        });
+                    }
+                }
+                live
+            }
+        };
+        if requests.is_empty() {
+            return;
+        }
+        let batch = Batch { requests };
+        // degradation ladder rung 1+: a backend that failed
+        // consecutive windows loses the pipelined route (row sharding
+        // has no cross-stage queues to stall); rung 2 additionally
+        // pinned the governor fully accurate at escalation time
+        let execution = if ctx.shared.degrade_level.load(Ordering::Relaxed) >= 1 {
+            ExecutionMode::RowSharded
+        } else {
+            ctx.execution
+        };
         // one shared buffer for the whole batch; shards slice into it
         let xs: Arc<Vec<[u8; N_FEATURES]>> =
             Arc::new(batch.requests.iter().map(|r| r.features).collect());
         let n = batch.requests.len();
+        let guard0 = crate::chaos::envelope_violations();
         let t0 = Instant::now();
         let results = Self::execute_sharded(
             &ctx.backend,
             ctx.pool.as_deref(),
             ctx.shards,
-            ctx.execution,
+            execution,
             &xs,
             &sched,
         );
         let exec_us = t0.elapsed().as_micros() as u64;
+        // runtime guardband: any accumulator outside its config's
+        // static envelope during this window poisons the whole window
+        // (the corrupted value's downstream effects cannot be
+        // localized), and the governor steps toward accurate mode —
+        // more arithmetic margin, bit-exact reference at the bottom
+        let results = if crate::chaos::guardbands_enabled() {
+            let delta = crate::chaos::envelope_violations().saturating_sub(guard0);
+            if delta > 0 {
+                ctx.shared
+                    .envelope_violations
+                    .fetch_add(delta, Ordering::Relaxed);
+                ctx.shared.degradations.fetch_add(1, Ordering::Relaxed);
+                let stepped = ctx.governor.lock().unwrap().step_toward_accurate();
+                log::warn!(
+                    "guardband: {delta} out-of-envelope accumulator window(s); \
+                     schedule capped at {stepped:?}"
+                );
+                results.and_then(|_| {
+                    anyhow::bail!("accumulator left its static envelope (window poisoned)")
+                })
+            } else {
+                results
+            }
+        } else {
+            results
+        };
         // a short/long result would silently truncate the reply zip
         // below and leave requesters hanging on open channels — treat
         // any length mismatch as a backend failure
@@ -732,6 +855,37 @@ impl Coordinator {
             );
             Ok(outs)
         });
+        // backend health scoring: a success clears the failure streak;
+        // DEGRADE_AFTER consecutive failures climb the degradation
+        // ladder one rung — Pipelined → RowSharded first, then the
+        // schedule is pinned fully accurate.  Rungs are sticky.
+        if results.is_ok() {
+            ctx.shared.consec_failures.store(0, Ordering::Relaxed);
+        } else {
+            let streak = ctx.shared.consec_failures.fetch_add(1, Ordering::Relaxed) + 1;
+            if streak >= Self::DEGRADE_AFTER {
+                ctx.shared.consec_failures.store(0, Ordering::Relaxed);
+                let rung = ctx.shared.degrade_level.load(Ordering::Relaxed);
+                if rung < 2 {
+                    ctx.shared.degrade_level.store(rung + 1, Ordering::Relaxed);
+                    ctx.shared.degradations.fetch_add(1, Ordering::Relaxed);
+                    let mut gov = ctx.governor.lock().unwrap();
+                    if rung + 1 == 2 {
+                        // bottom rung: run out the ladder so every
+                        // future decision is fully accurate
+                        while gov.step_toward_accurate().is_some() {}
+                    } else {
+                        gov.step_toward_accurate();
+                    }
+                    log::warn!(
+                        "backend '{}' unhealthy ({streak} consecutive failed windows): \
+                         degradation rung {}",
+                        ctx.backend.name(),
+                        rung + 1
+                    );
+                }
+            }
+        }
         // modeled accelerator energy for the *interleaved* batch (partial
         // passes shared between images), charged and fed back to the
         // governor once per logical window — never per shard or request,
@@ -789,6 +943,7 @@ impl Coordinator {
                 {
                     let _ = req.reply.send(ClassifyResponse {
                         id: req.id,
+                        status: ReplyStatus::Ok,
                         pred,
                         logits,
                         sched: sched.clone(),
@@ -912,6 +1067,17 @@ impl Coordinator {
         s.batch_target = self.shared.batch_target.load(Ordering::Relaxed);
         s.queue_depth = self.queue.len();
         s.inflight = self.shared.inflight.load(Ordering::Relaxed);
+        s.deadline_expired = self.shared.deadline_expired.load(Ordering::Relaxed);
+        s.envelope_violations = self.shared.envelope_violations.load(Ordering::Relaxed);
+        s.degradations = self.shared.degradations.load(Ordering::Relaxed);
+        s.watchdog_trips = crate::chaos::watchdog_trips();
+    }
+
+    /// The degradation ladder's current rung: 0 = configured mode,
+    /// 1 = execution forced to RowSharded, 2 = + schedule pinned
+    /// fully accurate.
+    pub fn degrade_level(&self) -> usize {
+        self.shared.degrade_level.load(Ordering::Relaxed)
     }
 
     /// Merged snapshot: per-worker shards folded together, intake-side
@@ -953,7 +1119,9 @@ mod tests {
     use super::*;
     use crate::coordinator::governor::{AccuracyTable, Policy};
     use crate::power::{MultiplierEnergyProfile, PowerModel};
-    use crate::testkit::doubles::{PanickingBackend, SlowBackend, TruncatingBackend};
+    use crate::testkit::doubles::{
+        FlakyBackend, PanickingBackend, SlowBackend, StallingBackend, TruncatingBackend,
+    };
     use crate::util::rng::Pcg32;
     use crate::weights::QuantWeights;
 
@@ -1484,6 +1652,116 @@ mod tests {
             "sharding must not split the logical batch metrics: {}",
             m.mean_batch_size
         );
+    }
+
+    #[test]
+    fn flaky_backend_climbs_the_degradation_ladder() {
+        // a backend failing every window must walk the coordinator down
+        // the ladder: rung 1 (forced RowSharded) after DEGRADE_AFTER
+        // consecutive failures, rung 2 (schedule pinned accurate) after
+        // another streak — and every requester sees a resolved failure
+        // (closed reply), never a hang
+        let backend = Arc::new(FlakyBackend::wrap(test_backend(), 1));
+        let (gov, pm) = test_governor(Policy::Fixed(Config::new(12).unwrap()));
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                shards: 1,
+                execution: ExecutionMode::Pipelined,
+                ..CoordinatorConfig::default()
+            },
+            backend.clone() as Arc<dyn Backend>,
+            gov,
+            pm,
+        );
+        assert_eq!(coord.degrade_level(), 0);
+        for i in 0..6u8 {
+            assert!(
+                coord.classify([i; N_FEATURES]).is_none(),
+                "failed window must close the reply, not answer"
+            );
+        }
+        assert_eq!(coord.degrade_level(), 2, "ladder must bottom out");
+        // rung 2 pinned the schedule fully accurate
+        assert_eq!(
+            coord.current_schedule(),
+            ConfigSchedule::uniform(Config::ACCURATE)
+        );
+        let m = coord.shutdown();
+        assert_eq!(m.backend_errors, 6);
+        assert!(m.degradations >= 2, "both escalations counted");
+        assert_eq!(m.inflight, 0, "failed windows release admission slots");
+    }
+
+    #[test]
+    fn flaky_backend_recovers_between_failures_without_degrading() {
+        // one failure between successes never reaches DEGRADE_AFTER:
+        // the streak resets, the ladder stays on rung 0
+        let backend = Arc::new(FlakyBackend::wrap(test_backend(), 2));
+        let (gov, pm) = test_governor(Policy::Fixed(Config::ACCURATE));
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                shards: 1,
+                ..CoordinatorConfig::default()
+            },
+            backend as Arc<dyn Backend>,
+            gov,
+            pm,
+        );
+        let mut served = 0;
+        let mut failed = 0;
+        for i in 0..8u8 {
+            match coord.classify([i; N_FEATURES]) {
+                Some(_) => served += 1,
+                None => failed += 1,
+            }
+        }
+        assert!(served > 0 && failed > 0, "period-2 flake alternates");
+        assert_eq!(coord.degrade_level(), 0, "no consecutive-failure streak");
+        let m = coord.shutdown();
+        assert_eq!(m.degradations, 0);
+    }
+
+    #[test]
+    fn stalling_backend_expires_deadlines_with_resolved_replies() {
+        // the first window occupies the lone worker well past the
+        // 15 ms deadline, so the queued requests age out: they must
+        // get resolved Deadline replies without ever executing
+        let backend = Arc::new(StallingBackend::wrap(
+            test_backend(),
+            Duration::from_millis(40),
+        ));
+        let (gov, pm) = test_governor(Policy::Fixed(Config::ACCURATE));
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                shards: 1,
+                deadline: Some(Duration::from_millis(15)),
+                ..CoordinatorConfig::default()
+            },
+            backend as Arc<dyn Backend>,
+            gov,
+            pm,
+        );
+        let replies: Vec<_> = (0..6u8)
+            .map(|i| coord.try_submit([i; N_FEATURES]).expect("admitted"))
+            .collect();
+        let mut ok = 0u64;
+        let mut expired = 0u64;
+        for r in replies {
+            let resp = r.recv().expect("every admitted request gets a reply");
+            match resp.status {
+                ReplyStatus::Ok => ok += 1,
+                ReplyStatus::Deadline => expired += 1,
+            }
+        }
+        assert!(ok >= 1, "the first window was within deadline");
+        assert!(expired >= 1, "queued requests must age out");
+        let m = coord.shutdown();
+        assert_eq!(m.deadline_expired, expired);
+        assert_eq!(m.requests, ok, "expired requests were never executed");
+        assert_eq!(m.inflight, 0, "expiry releases admission slots");
     }
 
     #[test]

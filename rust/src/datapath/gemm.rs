@@ -251,6 +251,11 @@ pub fn layer_batch_with(
             }
         }
     }
+    if crate::chaos::enabled() {
+        // fault injection + envelope guardband over the pre-bias
+        // accumulators; one relaxed load when chaos is off
+        crate::chaos::on_layer_acc(table.cfg, packed.n_in, acc);
+    }
 }
 
 /// Single-image layer GEMM (`x` is `n_in` bytes, `acc` is `n_out`).

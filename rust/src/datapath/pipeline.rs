@@ -60,8 +60,9 @@
 //! and no worker is left blocked on a queue that will never move.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 // Under `--cfg loom` the stage-residency counters come from loom so the
 // `StageGuard` close cascade can be model-checked exhaustively
@@ -443,6 +444,86 @@ impl<T> Drop for StageGuard<'_, T> {
     }
 }
 
+/// Watchdog timeout in milliseconds; 0 = disabled (the default — the
+/// clean hot path spawns no watchdog thread and pays nothing).
+static WATCHDOG_MS: AtomicU64 = AtomicU64::new(0);
+
+/// Arm (or disarm, with `None`) the pipeline watchdog: a checked run
+/// that makes no end-to-end progress — no micro-batch finishing its
+/// final stage — for this long is declared stalled, its queues are
+/// closed (cascading shutdown through every stage), and
+/// [`run_checked`] returns [`RunError::WatchdogStall`] with every
+/// in-flight micro-batch accounted for.  Serving arms this at
+/// coordinator startup; it stays off for plain batch calls.
+pub fn set_watchdog(timeout: Option<Duration>) {
+    let ms = timeout.map_or(0, |d| u64::try_from(d.as_millis()).unwrap_or(u64::MAX).max(1));
+    WATCHDOG_MS.store(ms, Ordering::Relaxed);
+}
+
+/// The currently armed watchdog timeout, if any.
+pub fn watchdog_timeout() -> Option<Duration> {
+    match WATCHDOG_MS.load(Ordering::Relaxed) {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    }
+}
+
+/// Why a checked pipelined run failed.  Both variants mean every stage
+/// job has terminated and the shared pool is reusable — the failure is
+/// contained, never a hang and never silently-wrong results.
+pub enum RunError {
+    /// A stage replica panicked; the [`StageGuard`] cascade shut the
+    /// other stages down.  Carries the original panic payload so
+    /// [`run`] can re-raise it unchanged.
+    StagePanic(Box<dyn std::any::Any + Send>),
+    /// The watchdog saw no end-to-end progress for its timeout and
+    /// closed the queues; `missing` micro-batches never finished.
+    WatchdogStall { missing: usize },
+}
+
+impl RunError {
+    /// Human-readable failure description (panic payloads stringified).
+    pub fn describe(&self) -> String {
+        match self {
+            RunError::StagePanic(p) => {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string payload".into());
+                format!("pipeline stage panicked: {msg}")
+            }
+            RunError::WatchdogStall { missing } => {
+                format!("pipeline watchdog tripped: {missing} micro-batch(es) never finished")
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.describe())
+    }
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.describe())
+    }
+}
+
+impl std::error::Error for RunError {}
+
+/// Sets the flag when dropped — even when the guarded region unwinds,
+/// which is exactly when the watchdog thread must still be released.
+struct SetOnDrop<'a>(&'a AtomicBool);
+
+impl Drop for SetOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.store(true, Ordering::Release);
+    }
+}
+
 /// Execute `xs` through the pipeline under `plan`, bit-exact with
 /// [`Network::forward_batch`].  The threaded path needs the whole plan
 /// resident on the shared pool at once — every stage replica blocked on
@@ -453,15 +534,38 @@ impl<T> Drop for StageGuard<'_, T> {
 /// pool, a caller already on a pool worker thread (a scatter would run
 /// inline and deadlock on the queues), or another pipeline holding the
 /// process-wide lease.
+///
+/// Stage panics re-raise their original payload; a watchdog stall
+/// (when armed via [`set_watchdog`]) panics with a description.  Use
+/// [`run_checked`] to receive both as errors instead.
 pub fn run<X: AsRef<[u8]> + Sync>(
     net: &Network,
     xs: &[X],
     sched: &ConfigSchedule,
     plan: &Plan,
 ) -> Vec<ImageResult> {
+    match run_checked(net, xs, sched, plan) {
+        Ok(out) => out,
+        Err(RunError::StagePanic(p)) => std::panic::resume_unwind(p),
+        Err(e) => panic!("{}", e.describe()),
+    }
+}
+
+/// [`run`] with contained failures: a stage panic or a watchdog-
+/// detected stall comes back as `Err(RunError)` — all stage jobs
+/// terminated, the pool reusable — instead of a propagated panic or a
+/// deadlock.  The serving backends route pipelined execution through
+/// this so one poisoned window degrades the request instead of killing
+/// the worker.
+pub fn run_checked<X: AsRef<[u8]> + Sync>(
+    net: &Network,
+    xs: &[X],
+    sched: &ConfigSchedule,
+    plan: &Plan,
+) -> Result<Vec<ImageResult>, RunError> {
     let b = xs.len();
     if b == 0 {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     let kernel = gemm::active_kernel();
     let micro = plan.micro_batch.min(b);
@@ -476,12 +580,17 @@ pub fn run<X: AsRef<[u8]> + Sync>(
         let mut out = Vec::with_capacity(b);
         for i in 0..n_micros {
             let mut m = Micro::load(net, &xs[i * micro..((i + 1) * micro).min(b)], i);
-            for l in 0..net.topology().n_layers() {
-                run_layer_micro(net, kernel, l, sched.layer(l), &mut m);
+            for (s, range) in plan.stages.iter().enumerate() {
+                if crate::chaos::enabled() {
+                    crate::chaos::on_stage_micro(s);
+                }
+                for l in range.clone() {
+                    run_layer_micro(net, kernel, l, sched.layer(l), &mut m);
+                }
             }
             out.extend(finish_micro(net, &m));
         }
-        return out;
+        return Ok(out);
     }
 
     let queues: Vec<Channel<Micro>> = (1..n_stages)
@@ -492,6 +601,9 @@ pub fn run<X: AsRef<[u8]> + Sync>(
     let cursor = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<Vec<ImageResult>>>> =
         (0..n_micros).map(|_| Mutex::new(None)).collect();
+    // end-to-end progress: micro-batches that finished their final
+    // stage — what the watchdog watches
+    let progress = AtomicU64::new(0);
 
     let stage_of: Vec<usize> = plan
         .replicas
@@ -503,6 +615,7 @@ pub fn run<X: AsRef<[u8]> + Sync>(
         .iter()
         .map(|&s| {
             let (queues, remaining, cursor, slots) = (&queues, &remaining, &cursor, &slots);
+            let progress = &progress;
             let range = plan.stages[s].clone();
             move || {
                 let _guard = StageGuard {
@@ -511,6 +624,9 @@ pub fn run<X: AsRef<[u8]> + Sync>(
                     queues,
                 };
                 let advance = |m: &mut Micro| {
+                    if crate::chaos::enabled() {
+                        crate::chaos::on_stage_micro(s);
+                    }
                     for l in range.clone() {
                         run_layer_micro(net, kernel, l, sched.layer(l), m);
                     }
@@ -518,6 +634,7 @@ pub fn run<X: AsRef<[u8]> + Sync>(
                 let deliver = |m: Micro| -> bool {
                     if s + 1 == n_stages {
                         *slots[m.idx].lock().unwrap() = Some(finish_micro(net, &m));
+                        progress.fetch_add(1, Ordering::Release);
                         true
                     } else {
                         // blocking send = backpressure when the next
@@ -549,17 +666,63 @@ pub fn run<X: AsRef<[u8]> + Sync>(
             }
         })
         .collect();
-    threadpool::shared_pool().scatter_scoped(jobs);
+
+    let done = AtomicBool::new(false);
+    let wd_ms = WATCHDOG_MS.load(Ordering::Relaxed);
+    let scatter_result = std::thread::scope(|scope| {
+        if wd_ms > 0 {
+            // a scoped OS thread, not a pool job: when every pool
+            // worker is occupied by a stalled stage a queued watchdog
+            // job would never run — the exact condition it must detect
+            scope.spawn(|| {
+                let timeout = Duration::from_millis(wd_ms);
+                let tick = Duration::from_millis((wd_ms / 10).clamp(1, 20));
+                let mut last = progress.load(Ordering::Acquire);
+                let mut stale_since = Instant::now();
+                while !done.load(Ordering::Acquire) {
+                    std::thread::sleep(tick);
+                    let now = progress.load(Ordering::Acquire);
+                    if now != last {
+                        last = now;
+                        stale_since = Instant::now();
+                    } else if stale_since.elapsed() >= timeout {
+                        // closing every boundary queue cascades
+                        // shutdown: blocked sends return Closed,
+                        // consumers drain then see None, stage guards
+                        // close the rest; injected stalls poll the
+                        // abort flag note_watchdog_trip raises
+                        crate::chaos::note_watchdog_trip();
+                        for q in &queues {
+                            q.close();
+                        }
+                        return;
+                    }
+                }
+            });
+        }
+        // released on unwind too, or a panicking scatter would leave
+        // the watchdog thread spinning and the scope joining forever
+        let _release = SetOnDrop(&done);
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            threadpool::shared_pool().scatter_scoped(jobs)
+        }))
+    });
+    if let Err(payload) = scatter_result {
+        return Err(RunError::StagePanic(payload));
+    }
 
     let mut out = Vec::with_capacity(b);
+    let mut missing = 0usize;
     for slot in slots {
-        out.extend(
-            slot.into_inner()
-                .unwrap()
-                .expect("pipeline micro-batch result missing"),
-        );
+        match slot.into_inner().unwrap() {
+            Some(rs) => out.extend(rs),
+            None => missing += 1,
+        }
     }
-    out
+    if missing > 0 {
+        return Err(RunError::WatchdogStall { missing });
+    }
+    Ok(out)
 }
 
 /// Warm everything the first pipelined batch touches: the signed tables
@@ -610,6 +773,36 @@ impl Network {
             .into_iter()
             .map(|r| (r.logits, r.pred))
             .collect()
+    }
+
+    /// [`Network::forward_batch_pipelined`] with contained failures:
+    /// a stage panic or watchdog-detected stall is `Err` instead of a
+    /// propagated panic/deadlock.  The row-partition fallback (plan
+    /// rejected) cannot fail this way and always comes back `Ok`.
+    pub fn try_forward_batch_pipelined<X: AsRef<[u8]> + Sync>(
+        &self,
+        xs: &[X],
+        sched: &ConfigSchedule,
+    ) -> Result<Vec<ImageResult>, RunError> {
+        match self.pipeline_plan(xs.len(), sched) {
+            Some(plan) => run_checked(self, xs, sched, &plan),
+            None => Ok(self.forward_batch(xs, sched)),
+        }
+    }
+
+    /// [`Network::classify_batch_pipelined`] with contained failures —
+    /// what the serving backend's pipelined path calls so one poisoned
+    /// window degrades instead of killing the batch worker.
+    pub fn try_classify_batch_pipelined<X: AsRef<[u8]> + Sync>(
+        &self,
+        xs: &[X],
+        sched: &ConfigSchedule,
+    ) -> Result<Vec<(Vec<i32>, u8)>, RunError> {
+        Ok(self
+            .try_forward_batch_pipelined(xs, sched)?
+            .into_iter()
+            .map(|r| (r.logits, r.pred))
+            .collect())
     }
 
     /// The plan [`Network::forward_batch_pipelined`] would run `batch`

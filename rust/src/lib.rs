@@ -38,6 +38,7 @@
 
 pub mod amul;
 pub mod analysis;
+pub mod chaos;
 pub mod coordinator;
 pub mod datapath;
 pub mod dataset;

@@ -17,6 +17,9 @@
 //!              --forward -> BENCH_forward.json before/after comparison,
 //!              --pipeline -> BENCH_pipeline.json stage-pipelined vs
 //!              row-partitioned)
+//!   chaos      deterministic fault-injection campaign across the serve
+//!              stack: every class must end masked, detected+degraded, or
+//!              failed-fast -> CHAOS.json
 
 use anyhow::{Context, Result};
 use ecmac::amul::{metrics, Config, ConfigSchedule};
@@ -57,6 +60,7 @@ fn main() {
         "topo" => cmd_topo(rest),
         "bench" => cmd_bench(rest),
         "analyze" => cmd_analyze(rest),
+        "chaos" => cmd_chaos(rest),
         "ablation" => cmd_ablation(rest),
         "verilog" => cmd_verilog(rest),
         "--help" | "-h" | "help" => {
@@ -95,6 +99,9 @@ fn print_global_usage() {
          \x20            --forward: tiled SIMD GEMM + prefix-cached sweep before/after)\n\
          \x20 analyze    static verification: datapath value ranges, pipeline-plan\n\
          \x20            liveness, protocol model checking (-> ANALYZE.json)\n\
+         \x20 chaos      deterministic fault-injection campaign: table/accumulator\n\
+         \x20            SEUs, stage stalls + panics, flaky backends, dropped\n\
+         \x20            connections -> CHAOS.json\n\
          \x20 ablation   heterogeneous per-neuron configuration study\n\
          \x20 verilog    export the EC multiplier as synthesizable Verilog\n"
     );
@@ -545,6 +552,28 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         default: None,
     });
     spec.push(OptSpec {
+        name: "deadline-ms",
+        help: "per-request deadline: admitted requests older than this get a \
+               resolved Deadline reply instead of occupying a batch (0 = off)",
+        takes_value: true,
+        default: Some("0"),
+    });
+    spec.push(OptSpec {
+        name: "guardbands",
+        help: "run the runtime envelope guardbands: windows whose accumulators \
+               leave the static envelope fail loudly and step the governor \
+               toward accurate",
+        takes_value: false,
+        default: None,
+    });
+    spec.push(OptSpec {
+        name: "watchdog-ms",
+        help: "pipeline watchdog: fail a stage-pipelined batch that makes no \
+               end-to-end progress for this long (0 = off)",
+        takes_value: true,
+        default: Some("0"),
+    });
+    spec.push(OptSpec {
         name: "sweep",
         help: "schedule_sweep.json enabling the per-layer schedule frontier \
                (default: <artifacts>/schedule_sweep.json when present; 'none' disables)",
@@ -615,6 +644,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
 
     let slo_us: u64 = args.get_or("slo", 5000)?;
+    let deadline_ms: u64 = args.get_or("deadline-ms", 0)?;
+    let watchdog_ms: u64 = args.get_or("watchdog-ms", 0)?;
+    if watchdog_ms > 0 {
+        ecmac::datapath::pipeline::set_watchdog(Some(Duration::from_millis(watchdog_ms)));
+    }
     let coord = Arc::new(Coordinator::start(
         CoordinatorConfig {
             max_batch,
@@ -629,6 +663,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             } else {
                 ExecutionMode::RowSharded
             },
+            deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+            guardbands: args.flag("guardbands"),
             ..CoordinatorConfig::default()
         },
         backend,
@@ -695,6 +731,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if m.backend_errors > 0 {
         println!("backend errors     {} batches", m.backend_errors);
     }
+    println!(
+        "resilience         {} deadline-expired / {} envelope violations / \
+         {} degradations / {} watchdog trips",
+        m.deadline_expired, m.envelope_violations, m.degradations, m.watchdog_trips
+    );
     println!(
         "accuracy           {:.2}%",
         correct as f64 / answered.max(1) as f64 * 100.0
@@ -845,6 +886,21 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         takes_value: false,
         default: None,
     });
+    spec.push(OptSpec {
+        name: "chaos-flaky",
+        help: "fault smoke: fail every nth backend window, exercising the \
+               degradation ladder under load (0 = off)",
+        takes_value: true,
+        default: Some("0"),
+    });
+    spec.push(OptSpec {
+        name: "wire",
+        help: "drive the closed loop through the TCP intake with retrying \
+               clients (closed mode only; counts RETRY backoffs and \
+               Deadline replies)",
+        takes_value: false,
+        default: None,
+    });
     let args = Args::parse(argv, &spec)?;
     let requests: usize = args.get_or("requests", 4000)?;
     let max_batch: usize = args.get_or("max-batch", 64)?;
@@ -866,6 +922,11 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         },
         other => anyhow::bail!("unknown mode '{other}' (closed | open | burst)"),
     };
+    let flaky_every: u64 = args.get_or("chaos-flaky", 0)?;
+    anyhow::ensure!(
+        !args.flag("wire") || matches!(mode, LoadMode::Closed { .. }),
+        "--wire drives closed-loop clients only (use --mode closed)"
+    );
 
     anyhow::ensure!(
         args.get("topology").is_none() || args.flag("synthetic"),
@@ -925,9 +986,17 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         // one fresh coordinator per (policy, front-end) run, same
         // offered load: the only variable is the batching strategy
         let run = |adaptive: bool, run_max_batch: usize| -> Result<(LoadReport, MetricsSnapshot)> {
-            let backend: Arc<dyn Backend> = Arc::new(NativeBackend {
+            let native: Arc<dyn Backend> = Arc::new(NativeBackend {
                 network: Network::new(weights.clone()),
             });
+            let backend: Arc<dyn Backend> = if flaky_every > 0 {
+                Arc::new(ecmac::testkit::doubles::FlakyBackend::wrap(
+                    native,
+                    flaky_every,
+                ))
+            } else {
+                native
+            };
             if let Policy::FixedSchedule(s) = &policy {
                 s.validate(backend.topology().n_layers())?;
             }
@@ -958,9 +1027,27 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
                 requests,
                 seed,
             };
-            let r = run_load(&coord, &inputs, &spec);
-            let m = coord.shutdown();
-            Ok((r, m))
+            if args.flag("wire") {
+                let coord = Arc::new(coord);
+                let mut intake =
+                    TcpIntake::bind("127.0.0.1:0", Arc::clone(&coord))?;
+                let r = ecmac::coordinator::run_wire_closed(
+                    intake.local_addr(),
+                    &inputs,
+                    &spec,
+                    Duration::from_secs(2),
+                )?;
+                intake.stop();
+                drop(intake);
+                let m = Arc::try_unwrap(coord)
+                    .map_err(|_| anyhow::anyhow!("intake still holds the coordinator"))?
+                    .shutdown();
+                Ok((r, m))
+            } else {
+                let r = run_load(&coord, &inputs, &spec);
+                let m = coord.shutdown();
+                Ok((r, m))
+            }
         };
         let (base_r, base_m) = run(false, 1)?;
         let (adap_r, adap_m) = run(true, max_batch)?;
@@ -975,6 +1062,17 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             adap_r.p99_us,
             adap_m.mean_batch_size,
         );
+        if flaky_every > 0 || args.flag("wire") {
+            println!(
+                "  resilience: {} errors / {} deadline / {} wire retries / \
+                 {} degradations / {} backend-error windows",
+                adap_r.errors,
+                adap_r.deadline,
+                adap_r.retries,
+                adap_m.degradations,
+                adap_m.backend_errors
+            );
+        }
         let energy_nj = adap_m.energy_mj * 1e6 / adap_r.answered.max(1) as f64;
         let base_energy_nj = base_m.energy_mj * 1e6 / base_r.answered.max(1) as f64;
         rows_json.push(ecmac::json_obj! {
@@ -995,6 +1093,9 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             "answered" => adap_r.answered as f64,
             "rejected" => adap_r.rejected as f64,
             "errors" => adap_r.errors as f64,
+            "deadline" => adap_r.deadline as f64,
+            "retries" => adap_r.retries as f64,
+            "degradations" => adap_m.degradations as f64,
             "windows_full" => adap_m.windows_full as f64,
             "windows_deadline" => adap_m.windows_deadline as f64,
         });
@@ -2052,6 +2153,52 @@ fn parse_policy(s: &str) -> Result<Policy> {
              energy:<mj>:<images>)"
         ),
     }
+}
+
+/// Scripted fault-injection campaign: inject one fault class at a time
+/// — table SRAM stuck-at/flip, accumulator SEU, pipeline stage
+/// stall/panic, flaky + stalling backends, a dropped intake connection
+/// — and verify each ends masked, detected+degraded, or failed-fast;
+/// never silent, never hung.  `--json CHAOS.json` feeds the CI gate.
+fn cmd_chaos(argv: &[String]) -> Result<()> {
+    let spec = vec![
+        OptSpec {
+            name: "seed",
+            help: "fault-coordinate / input seed (the campaign is \
+                   reproducible from it alone)",
+            takes_value: true,
+            default: Some("20260807"),
+        },
+        OptSpec {
+            name: "json",
+            help: "write the CHAOS.json artifact here",
+            takes_value: true,
+            default: None,
+        },
+    ];
+    let args = Args::parse(argv, &spec)?;
+    let seed: u64 = args.get_or("seed", 20260807)?;
+
+    println!("chaos campaign (seed {seed}): injecting one fault class at a time\n");
+    let report = ecmac::chaos::run_campaign(seed);
+    println!("{:<20} {:<19} detail", "class", "outcome");
+    for c in &report.classes {
+        println!("{:<20} {:<19} {}", c.class, c.outcome.as_str(), c.detail);
+    }
+    let contained = report.all_contained();
+    println!(
+        "\n{} classes, all contained: {contained}",
+        report.classes.len()
+    );
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().to_string())?;
+        println!("wrote {path}");
+    }
+    anyhow::ensure!(
+        contained,
+        "campaign left a fault class silent or hung (see table above)"
+    );
+    Ok(())
 }
 
 fn cmd_ablation(argv: &[String]) -> Result<()> {

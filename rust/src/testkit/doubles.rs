@@ -86,6 +86,98 @@ impl Backend for TruncatingBackend {
     }
 }
 
+/// Fails every `n`-th batch (1-based: `n = 1` fails every batch,
+/// `n = 3` fails batches 3, 6, 9, …) and delegates the rest.  The
+/// counter is a plain atomic, so a single-worker coordinator sees a
+/// fully deterministic failure pattern — what the backend health-
+/// scoring and degradation-ladder tests and the `ecmac chaos`
+/// flaky-backend campaign class drive.
+pub struct FlakyBackend {
+    inner: Arc<dyn Backend>,
+    n: u64,
+    calls: std::sync::atomic::AtomicU64,
+}
+
+impl FlakyBackend {
+    pub fn wrap(inner: Arc<dyn Backend>, every_nth: u64) -> FlakyBackend {
+        assert!(every_nth >= 1, "failure period must be at least 1");
+        FlakyBackend {
+            inner,
+            n: every_nth,
+            calls: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Batches attempted so far (failed and served).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl Backend for FlakyBackend {
+    fn execute(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        let call = self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+        if call % self.n == 0 {
+            anyhow::bail!("injected flaky-backend failure (batch {call})");
+        }
+        self.inner.execute(xs, sched)
+    }
+
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+
+    fn topology(&self) -> &Topology {
+        self.inner.topology()
+    }
+
+    fn prewarm(&self, sched: &ConfigSchedule) {
+        self.inner.prewarm(sched);
+    }
+}
+
+/// Sleeps well past the serving SLO on every batch before delegating —
+/// the "alive but too slow" double behind the per-request deadline
+/// tests (distinct from [`SlowBackend`], whose small fixed delay is
+/// tuned to make *batching wins* deterministic, not to blow deadlines).
+pub struct StallingBackend {
+    inner: Arc<dyn Backend>,
+    stall: Duration,
+}
+
+impl StallingBackend {
+    pub fn wrap(inner: Arc<dyn Backend>, stall: Duration) -> StallingBackend {
+        StallingBackend { inner, stall }
+    }
+}
+
+impl Backend for StallingBackend {
+    fn execute(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        std::thread::sleep(self.stall);
+        self.inner.execute(xs, sched)
+    }
+
+    fn name(&self) -> &'static str {
+        "stalling"
+    }
+
+    fn topology(&self) -> &Topology {
+        self.inner.topology()
+    }
+
+    fn prewarm(&self, sched: &ConfigSchedule) {
+        self.inner.prewarm(sched);
+    }
+}
+
 /// Panics on every batch: the crash double for shard-isolation and
 /// no-deadlock-under-failure tests.
 pub struct PanickingBackend {

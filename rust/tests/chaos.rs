@@ -1,0 +1,356 @@
+//! Integration suite for the `chaos` subsystem — deterministic fault
+//! injection, envelope guardbands, and the graceful-degradation
+//! contract the `ecmac chaos` CI gate relies on:
+//!
+//! * hook semantics: stuck-at vs flip table faults, the one-shot
+//!   accumulator fault clock, targeted connection drops;
+//! * guardbands detect out-of-envelope accumulators without mutating
+//!   them, and the bound is exactly the PR-8 static envelope;
+//! * the scripted campaign contains every fault class — nothing ends
+//!   silent or hung, and every reply resolves;
+//! * the clean-run regression: with every hook compiled in and chaos
+//!   disabled, all execution paths stay bit-exact with each other.
+//!
+//! Chaos state (the fault plan, the guardband switch, the fault
+//! clocks) is process-global, and integration tests in this binary run
+//! on parallel threads — so every test that touches that state
+//! serializes behind [`lock`] and restores a clean slate before
+//! releasing it.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use ecmac::amul::{Config, ConfigSchedule};
+use ecmac::analysis::range::PRODUCT_ABS_MAX;
+use ecmac::chaos::{self, AccFault, FaultPlan, Outcome, TableFault};
+use ecmac::datapath::Network;
+use ecmac::util::rng::Pcg32;
+use ecmac::util::threadpool::shared_pool;
+use ecmac::weights::QuantWeights;
+
+/// One lock for all chaos-state mutation in this binary.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Leave no chaos state behind for the next test.
+fn clean_slate() {
+    chaos::clear_plan();
+    chaos::set_guardbands(false);
+    ecmac::datapath::pipeline::set_watchdog(None);
+    chaos::reset_counters();
+}
+
+fn net(seed: u64) -> Network {
+    let mut rng = Pcg32::new(seed);
+    let mut gen = |n: usize| -> Vec<u8> { (0..n).map(|_| rng.below(128) as u8).collect() };
+    Network::new(QuantWeights::two_layer(
+        gen(62 * 30),
+        gen(30),
+        gen(30 * 10),
+        gen(10),
+    ))
+}
+
+fn images(seed: u64, n: usize) -> Vec<Vec<u8>> {
+    let mut rng = Pcg32::new(seed);
+    (0..n)
+        .map(|_| (0..62).map(|_| rng.below(128) as u8).collect())
+        .collect()
+}
+
+#[test]
+fn disabled_hooks_are_inert() {
+    let _g = lock();
+    clean_slate();
+    assert!(!chaos::enabled(), "no plan, no guardbands: chaos off");
+
+    let mut rows = vec![[7i16; 256]; 257];
+    chaos::on_table_build(Config::ACCURATE, &mut rows);
+    assert!(rows.iter().all(|r| r.iter().all(|&v| v == 7)));
+
+    let mut acc = vec![123i32, -456];
+    chaos::on_layer_acc(Config::ACCURATE, 4, &mut acc);
+    assert_eq!(acc, vec![123, -456]);
+
+    chaos::on_stage_micro(0);
+    assert!(!chaos::should_drop_conn(0, 5));
+    assert_eq!(chaos::injected_faults(), 0);
+    clean_slate();
+}
+
+#[test]
+fn guardband_detects_out_of_envelope_accumulator() {
+    let _g = lock();
+    clean_slate();
+    chaos::set_guardbands(true);
+    assert!(chaos::enabled(), "guardbands alone activate the hooks");
+
+    let bound = chaos::acc_bound(Config::ACCURATE, 4);
+    assert!(bound <= i32::MAX as i64);
+
+    // exactly on the envelope, both signs: no trip
+    let mut acc = vec![bound as i32, -(bound as i32)];
+    chaos::on_layer_acc(Config::ACCURATE, 4, &mut acc);
+    assert_eq!(chaos::envelope_violations(), 0);
+
+    // one element past the envelope: detected, never mutated
+    let mut acc = vec![0i32, bound as i32 + 1];
+    chaos::on_layer_acc(Config::ACCURATE, 4, &mut acc);
+    assert_eq!(chaos::envelope_violations(), 1);
+    assert_eq!(acc, vec![0, bound as i32 + 1], "detection only");
+    clean_slate();
+}
+
+#[test]
+fn guardband_bound_is_the_analyzer_envelope() {
+    // pure arithmetic, but acc_bound caches per-config — harmless to
+    // share, still serialized for uniformity
+    let _g = lock();
+    assert_eq!(
+        chaos::acc_bound(Config::ACCURATE, 62),
+        62 * PRODUCT_ABS_MAX,
+        "accurate envelope is fan_in * max |product|"
+    );
+    for idx in [1u32, 9, 32] {
+        let cfg = Config::new(idx).unwrap();
+        assert!(
+            chaos::acc_bound(cfg, 62) <= 62 * PRODUCT_ABS_MAX,
+            "approximation can only shrink magnitudes (cfg {idx})"
+        );
+    }
+}
+
+#[test]
+fn acc_fault_fires_on_the_exact_call() {
+    let _g = lock();
+    clean_slate();
+    chaos::install(FaultPlan {
+        acc: Some(AccFault {
+            at_call: 1,
+            elem: 0,
+            bit: 4,
+        }),
+        ..FaultPlan::default()
+    });
+    chaos::reset_counters();
+
+    let mut acc = vec![0i32; 2];
+    chaos::on_layer_acc(Config::ACCURATE, 4, &mut acc);
+    assert_eq!(acc, vec![0, 0], "call 0: before the fault's slot");
+    chaos::on_layer_acc(Config::ACCURATE, 4, &mut acc);
+    assert_eq!(acc, vec![16, 0], "call 1: bit 4 flipped in elem 0");
+    chaos::on_layer_acc(Config::ACCURATE, 4, &mut acc);
+    assert_eq!(acc, vec![16, 0], "call 2: the transient is one-shot");
+    assert_eq!(chaos::injected_faults(), 1);
+    clean_slate();
+}
+
+#[test]
+fn table_fault_stuck_and_flip_semantics() {
+    let _g = lock();
+    clean_slate();
+
+    // stuck-at-1 on a bit already set: latched but masked
+    chaos::install(FaultPlan {
+        table: Some(TableFault {
+            cfg: None,
+            x: 1,
+            w: 2,
+            bit: 3,
+            stuck: Some(true),
+        }),
+        ..FaultPlan::default()
+    });
+    chaos::reset_counters();
+    let mut rows = vec![[0i16; 256]; 257];
+    rows[1][2] = 0b1000;
+    chaos::on_table_build(Config::ACCURATE, &mut rows);
+    assert_eq!(rows[1][2], 0b1000);
+    assert_eq!(chaos::injected_faults(), 0, "stuck value already held");
+
+    // the same stuck-at on a cleared bit: injected
+    rows[1][2] = 0;
+    chaos::on_table_build(Config::ACCURATE, &mut rows);
+    assert_eq!(rows[1][2], 0b1000);
+    assert_eq!(chaos::injected_faults(), 1);
+
+    // the cfg filter scopes the fault to one configuration
+    chaos::install(FaultPlan {
+        table: Some(TableFault {
+            cfg: Some(Config::MAX_APPROX),
+            x: 0,
+            w: 0,
+            bit: 0,
+            stuck: None, // flip
+        }),
+        ..FaultPlan::default()
+    });
+    chaos::reset_counters();
+    let mut rows = vec![[0i16; 256]; 257];
+    chaos::on_table_build(Config::ACCURATE, &mut rows);
+    assert_eq!(rows[0][0], 0, "other configs untouched");
+    chaos::on_table_build(Config::MAX_APPROX, &mut rows);
+    assert_eq!(rows[0][0], 1, "targeted config flipped");
+    clean_slate();
+}
+
+#[test]
+fn conn_drop_targets_one_connection_with_frames() {
+    let _g = lock();
+    clean_slate();
+    chaos::install(FaultPlan {
+        drop_conn: Some(1),
+        ..FaultPlan::default()
+    });
+    chaos::reset_counters();
+
+    assert_eq!(chaos::on_conn_accept(), 0);
+    assert_eq!(chaos::on_conn_accept(), 1);
+    assert!(!chaos::should_drop_conn(0, 3), "wrong connection");
+    assert!(!chaos::should_drop_conn(1, 0), "no frame in flight yet");
+    assert!(chaos::should_drop_conn(1, 1), "targeted, mid-request");
+
+    chaos::clear_plan();
+    assert!(!chaos::should_drop_conn(1, 1), "plan gone, drop gone");
+    clean_slate();
+}
+
+#[test]
+fn clean_run_is_bit_exact_across_every_path() {
+    let _g = lock();
+    clean_slate();
+
+    let net = net(0xC1EA);
+    let xs = images(0xC1EB, 24);
+    let sched = ConfigSchedule::uniform(Config::new(9).unwrap());
+
+    let reference: Vec<_> = xs.iter().map(|x| net.forward(x, Config::new(9).unwrap())).collect();
+    let batch = net.forward_batch(&xs, &sched);
+    for (a, b) in batch.iter().zip(&reference) {
+        assert_eq!(a.pred, b.pred);
+        assert_eq!(a.logits, b.logits);
+    }
+
+    let piped = net
+        .try_forward_batch_pipelined(&xs, &sched)
+        .expect("no fault installed, nothing to fail");
+    for (a, b) in piped.iter().zip(&reference) {
+        assert_eq!(a.pred, b.pred);
+        assert_eq!(a.logits, b.logits);
+    }
+
+    // guardbands on, no fault: pure detection, still bit-exact and
+    // violation-free
+    chaos::set_guardbands(true);
+    let guarded = net.forward_batch(&xs, &sched);
+    for (a, b) in guarded.iter().zip(&reference) {
+        assert_eq!(a.pred, b.pred);
+        assert_eq!(a.logits, b.logits);
+    }
+    assert_eq!(chaos::envelope_violations(), 0);
+    clean_slate();
+}
+
+#[test]
+fn campaign_contains_every_fault_class() {
+    let _g = lock();
+    clean_slate();
+
+    let report = chaos::run_campaign(20260807);
+
+    assert_eq!(report.classes.len(), 8, "all scripted classes ran");
+    for c in &report.classes {
+        assert!(
+            c.outcome.contained(),
+            "class {} ended {:?}: {}",
+            c.class,
+            c.outcome,
+            c.detail
+        );
+        assert_eq!(c.unresolved, 0, "class {} left replies unresolved", c.class);
+    }
+    assert!(report.all_contained());
+
+    let by_name = |name: &str| {
+        report
+            .classes
+            .iter()
+            .find(|c| c.class == name)
+            .unwrap_or_else(|| panic!("class {name} missing"))
+    };
+    assert_eq!(by_name("table-stuck-benign").outcome, Outcome::Masked);
+    assert_eq!(by_name("table-flip-audit").outcome, Outcome::DetectedDegraded);
+    assert_eq!(by_name("acc-transient").outcome, Outcome::DetectedDegraded);
+    assert_eq!(by_name("flaky-backend").outcome, Outcome::DetectedDegraded);
+    assert_eq!(by_name("stalling-backend").outcome, Outcome::DetectedDegraded);
+    assert_eq!(by_name("conn-drop").outcome, Outcome::Masked);
+    assert_eq!(by_name("stage-panic").outcome, Outcome::FailedFast);
+    if shared_pool().workers() >= 2 {
+        assert_eq!(
+            by_name("stage-stall").outcome,
+            Outcome::FailedFast,
+            "threaded pipeline available: the watchdog must trip"
+        );
+    }
+
+    let doc = report.to_json().to_string();
+    assert!(doc.contains("\"bench\":\"chaos\""));
+    assert!(doc.contains("\"silent\":0"));
+    assert!(doc.contains("\"hung\":0"));
+    assert!(doc.contains("\"total\":8"));
+
+    // the campaign cleans up after itself
+    assert!(!chaos::enabled());
+    assert!(ecmac::datapath::pipeline::watchdog_timeout().is_none());
+    clean_slate();
+}
+
+/// The campaign must not leave the process poisoned for ordinary work:
+/// after a full run, a fresh network still matches a pre-campaign
+/// reference bit-for-bit *and* passes the static table audit.
+#[test]
+fn process_is_clean_after_a_campaign() {
+    let _g = lock();
+    clean_slate();
+
+    let cfg = Config::new(9).unwrap();
+    let sched = ConfigSchedule::uniform(cfg);
+    let xs = images(0xAF7E, 8);
+    let reference = net(0xAF7D).forward_batch(&xs, &sched);
+
+    let _ = chaos::run_campaign(7);
+
+    let after = net(0xAF7D);
+    let out = after.forward_batch(&xs, &sched);
+    for (a, b) in out.iter().zip(&reference) {
+        assert_eq!(a.pred, b.pred);
+        assert_eq!(a.logits, b.logits);
+    }
+    let audit = ecmac::analysis::range::table_checks(&after.tables, cfg);
+    assert!(
+        audit.iter().all(|c| c.verdict == ecmac::analysis::Verdict::Proved),
+        "post-campaign tables fail the audit"
+    );
+    clean_slate();
+}
+
+#[test]
+fn stalling_backend_stall_is_bounded() {
+    // a sanity pin on the double itself: the stall delegates afterwards
+    let _g = lock();
+    clean_slate();
+    use ecmac::coordinator::server::Backend;
+    use ecmac::testkit::doubles::StallingBackend;
+    use std::sync::Arc;
+
+    let inner = Arc::new(ecmac::coordinator::NativeBackend { network: net(3) });
+    let double = StallingBackend::wrap(inner.clone(), Duration::from_millis(5));
+    let xs = [[1u8; 62], [2u8; 62]];
+    let sched = ConfigSchedule::uniform(Config::ACCURATE);
+    let direct = inner.execute(&xs, &sched).expect("native path");
+    let stalled = double.execute(&xs, &sched).expect("delegates after stall");
+    assert_eq!(direct, stalled, "the stall changes timing, not results");
+    clean_slate();
+}
