@@ -488,3 +488,119 @@ class TestChaosInvariants:
         }
         fresh = write(tmp_path, "fresh.json", doc)
         assert bench_gate.run([fresh]) == 1
+
+
+def sentinel_class(name="drift-shadow", outcome="detected_recovered", **extra):
+    row = {
+        "class": name,
+        "scenario": "every 3rd prediction silently corrupted",
+        "outcome": outcome,
+        "detail": "breach after 42 shadow samples, schedule restored",
+        "replies": 60,
+        "unresolved": 0,
+    }
+    row.update(extra)
+    return row
+
+
+def sentinel_artifact(**extra):
+    """`ecmac sentinel --json` output: one entry per audit class plus an
+    outcome tally; the clean class carries the online-vs-offline
+    disagreement cross-check."""
+    classes = [
+        sentinel_class(
+            "clean-estimate",
+            "clean",
+            estimate={"observed": 0.104, "predicted": 0.083, "tolerance": 0.05},
+        ),
+        sentinel_class("drift-shadow", "detected_recovered"),
+        sentinel_class("table-scrub", "detected_recovered"),
+    ]
+    doc = {
+        "bench": "sentinel",
+        "seed": 20260807,
+        "classes": classes,
+        "summary": {
+            "clean": 1,
+            "detected_recovered": 2,
+            "unrecovered": 0,
+            "silent": 0,
+            "hung": 0,
+            "total": 3,
+        },
+    }
+    doc.update(extra)
+    return doc
+
+
+class TestSentinelInvariants:
+    def test_resolved_campaign_passes(self, tmp_path):
+        fresh = write(tmp_path, "fresh.json", sentinel_artifact())
+        assert bench_gate.run([fresh]) == 0
+
+    def test_each_bad_outcome_fails(self, tmp_path):
+        for i, bad in enumerate(("unrecovered", "silent", "hung")):
+            doc = sentinel_artifact()
+            doc["classes"][1]["outcome"] = bad
+            doc["summary"]["detected_recovered"] = 1
+            doc["summary"][bad] = 1
+            fresh = write(tmp_path, f"fresh{i}.json", doc)
+            assert bench_gate.run([fresh]) == 1, bad
+
+    def test_unresolved_replies_fail_even_when_recovered(self, tmp_path):
+        # a recovery that left a caller hanging is still a hang
+        doc = sentinel_artifact()
+        doc["classes"][2]["unresolved"] = 1
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_unknown_outcome_fails(self, tmp_path):
+        doc = sentinel_artifact()
+        doc["classes"][0]["outcome"] = "probably-fine"
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_estimate_outside_its_tolerance_fails(self, tmp_path):
+        # the class may report "clean", but a miscalibrated shadow
+        # estimate voids the accuracy cross-check the audit exists for
+        doc = sentinel_artifact()
+        doc["classes"][0]["estimate"]["observed"] = 0.30
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_estimate_missing_a_field_fails(self, tmp_path):
+        doc = sentinel_artifact()
+        del doc["classes"][0]["estimate"]["predicted"]
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_classes_without_estimates_are_exempt(self, tmp_path):
+        doc = sentinel_artifact()
+        del doc["classes"][0]["estimate"]
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 0
+
+    def test_inconsistent_summary_fails(self, tmp_path):
+        doc = sentinel_artifact()
+        doc["summary"]["clean"] = 2
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_total_mismatch_fails(self, tmp_path):
+        doc = sentinel_artifact()
+        doc["summary"]["total"] = 99
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1
+
+    def test_empty_campaign_fails(self, tmp_path):
+        doc = sentinel_artifact(classes=[])
+        doc["summary"] = {
+            "clean": 0,
+            "detected_recovered": 0,
+            "unrecovered": 0,
+            "silent": 0,
+            "hung": 0,
+            "total": 0,
+        }
+        fresh = write(tmp_path, "fresh.json", doc)
+        assert bench_gate.run([fresh]) == 1

@@ -41,6 +41,13 @@ Two classes of check, applied per artifact kind (the ``bench`` field):
     reply that never resolved) — with zero unresolved replies per
     class, a non-empty class set, and a summary that tallies with the
     classes.  There is no baseline to compare against.
+  - ``sentinel``: the accuracy-audit campaign artifact (``ecmac
+    sentinel --json``).  Detection-and-recovery is pass/fail: every
+    audit class must end ``clean`` or ``detected_recovered`` — never
+    ``unrecovered``, ``silent``, or ``hung`` — with zero unresolved
+    replies per class; classes carrying an online-vs-offline
+    ``estimate`` cross-check must land within their tolerance.  There
+    is no baseline to compare against.
 
 * **Baseline comparison** (when the committed baseline holds real
   measurements): relative columns — ``kernel_speedup`` /
@@ -252,6 +259,68 @@ def chaos_invariants(fresh, tolerance):
     return failures
 
 
+SENTINEL_GOOD_OUTCOMES = ("clean", "detected_recovered")
+SENTINEL_BAD_OUTCOMES = ("unrecovered", "silent", "hung")
+
+
+def sentinel_invariants(fresh, tolerance):
+    """Accuracy-audit invariants: every class detected-and-recovered or
+    clean, every reply resolved, every carried estimate within tolerance.
+
+    ``tolerance`` is accepted for interface uniformity but unused — each
+    estimate cross-check travels with its own tolerance, pinned by the
+    campaign when the offline reference was measured.
+    """
+    del tolerance
+    failures = []
+    classes = fresh.get("classes", [])
+    if not classes:
+        failures.append("sentinel artifact has no classes — the campaign audited nothing")
+    tally = dict.fromkeys(SENTINEL_GOOD_OUTCOMES + SENTINEL_BAD_OUTCOMES, 0)
+    for c in classes:
+        name = c.get("class", "<unnamed>")
+        outcome = c.get("outcome")
+        if outcome not in tally:
+            failures.append(f"{name}: unknown outcome {outcome!r} — {c.get('detail')}")
+        else:
+            tally[outcome] += 1
+            if outcome in SENTINEL_BAD_OUTCOMES:
+                failures.append(f"{name}: ended {outcome} — {c.get('detail')}")
+        unresolved = c.get("unresolved", 0)
+        if unresolved:
+            failures.append(
+                f"{name}: {unresolved} replies never resolved — the audit "
+                f"machinery can leave callers hanging"
+            )
+        estimate = c.get("estimate")
+        if estimate is not None:
+            observed = estimate.get("observed")
+            predicted = estimate.get("predicted")
+            allowed = estimate.get("tolerance")
+            if observed is None or predicted is None or allowed is None:
+                failures.append(
+                    f"{name}: estimate cross-check is missing a field ({estimate})"
+                )
+            elif abs(observed - predicted) > allowed:
+                failures.append(
+                    f"{name}: online disagreement estimate {observed:.4f} is "
+                    f"off the offline prediction {predicted:.4f} by more than "
+                    f"{allowed:.4f} — the shadow audit is miscalibrated"
+                )
+    summary = fresh.get("summary", {})
+    for outcome, count in tally.items():
+        if summary.get(outcome) != count:
+            failures.append(
+                f"summary[{outcome}] = {summary.get(outcome)!r} does not tally "
+                f"with the classes ({count})"
+            )
+    if summary.get("total") != len(classes):
+        failures.append(
+            f"summary total {summary.get('total')!r} != {len(classes)} classes"
+        )
+    return failures
+
+
 # Per-artifact-kind gate configuration, selected by the "bench" field.
 KINDS = {
     "forward": {
@@ -295,6 +364,16 @@ KINDS = {
         "invariants": chaos_invariants,
         "refresh": (
             "  cd rust && cargo run --release -- chaos --json CHAOS.json"
+        ),
+    },
+    "sentinel": {
+        "key": "class",
+        # detection-and-recovery is pass/fail, not throughput
+        "ratio_columns": (),
+        "absolute_columns": (),
+        "invariants": sentinel_invariants,
+        "refresh": (
+            "  cd rust && cargo run --release -- sentinel --json SENTINEL.json"
         ),
     },
 }

@@ -443,20 +443,79 @@ impl SignedMulTable {
     pub fn padding_row(&self) -> &[i16; 256] {
         &self.rows[256]
     }
+
+    /// FNV-1a 64 fingerprint over every stored row, padding included —
+    /// the sentinel scrubber's integrity digest.  Any single bit flip
+    /// anywhere in the modeled table SRAM changes the value, and the
+    /// walk is deterministic, so a digest recorded at build time can be
+    /// re-verified between batch windows.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for row in &self.rows {
+            for &v in row.iter() {
+                for b in (v as u16).to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x100_0000_01b3);
+                }
+            }
+        }
+        h
+    }
+
+    /// A copy with one product bit flipped at (`x`, `w`) — the
+    /// fault-injection primitive behind
+    /// [`crate::chaos::poison_resident_table`] and the sentinel drills.
+    pub fn corrupted_copy(&self, x: u8, w: u8, bit: u8) -> SignedMulTable {
+        let mut rows = self.rows.clone();
+        rows[x as usize][w as usize] ^= 1i16 << (bit & 15);
+        SignedMulTable { cfg: self.cfg, rows }
+    }
 }
 
 /// Lazy per-configuration table store: magnitude tables (16 KiB each)
 /// and signed tables (128 KiB each) materialize on first use, so
 /// uniform-schedule serving and CLI startup only ever build the
 /// configurations they actually run.
+///
+/// Signed tables sit behind per-slot atomic pointers rather than
+/// `OnceLock` so the sentinel scrubber can *swap a rebuilt table into a
+/// live store* ([`MulTables::replace_signed`]) while worker threads
+/// hold references from [`MulTables::signed`].  Displaced tables are
+/// retired, not freed: a returned reference borrows `self`, so retired
+/// tables only drop when the store does.  A scrub swap is rare (one per
+/// detected corruption), so the retired list stays tiny.
 pub struct MulTables {
     mag: [std::sync::OnceLock<MulTable>; N_CONFIGS],
-    signed: [std::sync::OnceLock<SignedMulTable>; N_CONFIGS],
+    signed: [std::sync::atomic::AtomicPtr<SignedMulTable>; N_CONFIGS],
+    retired: std::sync::Mutex<Vec<*mut SignedMulTable>>,
 }
+
+// Safety: every pointer in `signed`/`retired` is a private Box
+// allocation published with Release and read with Acquire, and
+// displaced tables are freed only in `drop(&mut self)` — after every
+// `&self`-lifetime borrow has ended.
+unsafe impl Send for MulTables {}
+unsafe impl Sync for MulTables {}
 
 impl Default for MulTables {
     fn default() -> Self {
         Self::build()
+    }
+}
+
+impl Drop for MulTables {
+    fn drop(&mut self) {
+        use std::sync::atomic::Ordering;
+        for slot in &self.signed {
+            let p = slot.swap(std::ptr::null_mut(), Ordering::AcqRel);
+            if !p.is_null() {
+                drop(unsafe { Box::from_raw(p) });
+            }
+        }
+        let retired = self.retired.get_mut().unwrap_or_else(|e| e.into_inner());
+        for p in retired.drain(..) {
+            drop(unsafe { Box::from_raw(p) });
+        }
     }
 }
 
@@ -466,7 +525,10 @@ impl MulTables {
     pub fn build() -> MulTables {
         MulTables {
             mag: std::array::from_fn(|_| std::sync::OnceLock::new()),
-            signed: std::array::from_fn(|_| std::sync::OnceLock::new()),
+            signed: std::array::from_fn(|_| {
+                std::sync::atomic::AtomicPtr::new(std::ptr::null_mut())
+            }),
+            retired: std::sync::Mutex::new(Vec::new()),
         }
     }
 
@@ -477,7 +539,66 @@ impl MulTables {
 
     /// The configuration's signed table, built on first use.
     pub fn signed(&self, cfg: Config) -> &SignedMulTable {
-        self.signed[cfg.index()].get_or_init(|| SignedMulTable::build(self.get(cfg)))
+        use std::sync::atomic::Ordering;
+        let slot = &self.signed[cfg.index()];
+        let p = slot.load(Ordering::Acquire);
+        if !p.is_null() {
+            return unsafe { &*p };
+        }
+        let fresh = Box::into_raw(Box::new(SignedMulTable::build(self.get(cfg))));
+        match slot.compare_exchange(
+            std::ptr::null_mut(),
+            fresh,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => unsafe { &*fresh },
+            Err(winner) => {
+                // another thread published first; ours was never shared
+                drop(unsafe { Box::from_raw(fresh) });
+                unsafe { &*winner }
+            }
+        }
+    }
+
+    /// The configuration's signed table only if already materialized —
+    /// the scrubber digests resident tables without forcing absent
+    /// ones into existence.
+    pub fn signed_if_built(&self, cfg: Config) -> Option<&SignedMulTable> {
+        let p = self.signed[cfg.index()].load(std::sync::atomic::Ordering::Acquire);
+        (!p.is_null()).then(|| unsafe { &*p })
+    }
+
+    /// Rebuild the configuration's signed table from its magnitude
+    /// table — the scrubber's "reload from ROM" step.  Nothing is
+    /// installed; pair with [`MulTables::replace_signed`] after the
+    /// rebuilt table re-validates against the `analysis::range`
+    /// envelopes.  (An active chaos fault plan still applies: a
+    /// persistent SRAM fault re-poisons the reload, which is exactly
+    /// what forces the pin-accurate branch.)
+    pub fn rebuild_signed(&self, cfg: Config) -> SignedMulTable {
+        SignedMulTable::build(self.get(cfg))
+    }
+
+    /// Swap a freshly built signed table into the live store.  The
+    /// displaced table (if any) is retired until the store drops, so
+    /// references already handed out by [`MulTables::signed`] stay
+    /// valid; new lookups see the replacement.  Returns whether a
+    /// resident table was displaced (false = the slot was empty and
+    /// the new table simply materialized it).
+    pub fn replace_signed(&self, table: SignedMulTable) -> bool {
+        use std::sync::atomic::Ordering;
+        let idx = table.cfg.index();
+        let fresh = Box::into_raw(Box::new(table));
+        let old = self.signed[idx].swap(fresh, Ordering::AcqRel);
+        if old.is_null() {
+            return false;
+        }
+        self.retired
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(old);
+        true
     }
 
     /// Number of magnitude tables materialized so far (observability +
@@ -490,7 +611,10 @@ impl MulTables {
     /// tests assert, since the hot paths (gemm tiles, the pipelined
     /// stages) gather exclusively from the signed tables.
     pub fn signed_built(&self) -> usize {
-        self.signed.iter().filter(|c| c.get().is_some()).count()
+        self.signed
+            .iter()
+            .filter(|s| !s.load(std::sync::atomic::Ordering::Acquire).is_null())
+            .count()
     }
 
     /// Materialize the signed (and, transitively, magnitude) tables of
@@ -836,5 +960,54 @@ mod tests {
         let _ = tabs.signed(Config::MAX_APPROX);
         assert_eq!(tabs.built(), 2);
         assert_eq!(tabs.built(), 2);
+    }
+
+    #[test]
+    fn signed_digest_detects_single_bit_flip() {
+        let tabs = MulTables::build();
+        let cfg = Config::new(9).unwrap();
+        let t = tabs.signed(cfg);
+        let clean = t.digest();
+        // digesting is a pure read: repeatable, no state
+        assert_eq!(clean, t.digest());
+        let poisoned = t.corrupted_copy(33, 77, 4);
+        assert_ne!(clean, poisoned.digest());
+        // the flip lands where asked and nowhere else
+        assert_ne!(t.mul8_sm(33, 77), poisoned.mul8_sm(33, 77));
+        assert_eq!(t.mul8_sm(12, 200), poisoned.mul8_sm(12, 200));
+        assert_eq!(t.mul8_sm(255, 255), poisoned.mul8_sm(255, 255));
+    }
+
+    #[test]
+    fn replace_signed_swaps_live_and_keeps_old_refs_valid() {
+        let tabs = MulTables::build();
+        let cfg = Config::new(3).unwrap();
+        let before = tabs.signed(cfg);
+        let v = before.mul8_sm(5, 7);
+        assert!(tabs.replace_signed(before.corrupted_copy(5, 7, 0)));
+        // the retired table is still readable through the old reference
+        assert_eq!(before.mul8_sm(5, 7), v);
+        // fresh lookups see the replacement
+        assert_ne!(tabs.signed(cfg).mul8_sm(5, 7), v);
+        // rebuild-from-ROM restores the clean bits end to end
+        let rebuilt = tabs.rebuild_signed(cfg);
+        assert!(tabs.replace_signed(rebuilt));
+        assert_eq!(tabs.signed(cfg).mul8_sm(5, 7), v);
+        assert_eq!(tabs.signed_built(), 1, "a swap is not a new slot");
+    }
+
+    #[test]
+    fn signed_if_built_does_not_materialize() {
+        let tabs = MulTables::build();
+        let cfg = Config::new(2).unwrap();
+        assert!(tabs.signed_if_built(cfg).is_none());
+        assert_eq!(tabs.signed_built(), 0);
+        tabs.signed(cfg);
+        assert!(tabs.signed_if_built(cfg).is_some());
+        assert_eq!(tabs.signed_built(), 1);
+        // replacing into an empty slot materializes without retiring
+        let other = MulTables::build();
+        assert!(!other.replace_signed(tabs.rebuild_signed(cfg)));
+        assert_eq!(other.signed_built(), 1);
     }
 }

@@ -344,6 +344,19 @@ pub fn table_checks(tables: &MulTables, cfg: Config) -> Vec<Check> {
     out
 }
 
+/// Scrubber verdict: every table check for `cfg` proves on the store's
+/// (resident or just-materialized) signed table.  The sentinel runs
+/// this after swapping a rebuilt table into a live store, as the
+/// semantic complement of its digest comparison — a rebuild that
+/// matches the reference digest must *also* still satisfy the kernel
+/// invariants (gather rows, zero-skip, product envelope) before the
+/// configuration is re-admitted.
+pub fn signed_table_proved(tables: &MulTables, cfg: Config) -> bool {
+    table_checks(tables, cfg)
+        .iter()
+        .all(|c| c.verdict == Verdict::Proved)
+}
+
 /// Worst-case hardware-counter growth per image — proves the u64
 /// energy/MAC counters (`power::Neuron`, cycle results) cannot saturate
 /// over any realistic horizon.

@@ -327,6 +327,31 @@ pub fn on_conn_accept() -> u64 {
     CONN_ACCEPTS.fetch_add(1, Ordering::Relaxed)
 }
 
+/// Direct fault injection into a *resident* signed table: swap in a
+/// copy with one bit flipped at (`x`, `w`).  Unlike [`TableFault`]
+/// (which poisons the SRAM at load time), this models an upset that
+/// strikes mid-serve, after the table was built and verified — the
+/// fault class only the sentinel's periodic scrubbing can catch.
+/// Needs no installed plan and leaves the global chaos state alone,
+/// so sentinel drills compose with (and don't serialize against) the
+/// plan-driven campaign.  Returns false when the config's table was
+/// never materialized (nothing to poison).
+pub fn poison_resident_table(
+    tables: &crate::amul::MulTables,
+    cfg: Config,
+    x: u8,
+    w: u8,
+    bit: u8,
+) -> bool {
+    let Some(resident) = tables.signed_if_built(cfg) else {
+        return false;
+    };
+    let poisoned = resident.corrupted_copy(x, w, bit);
+    tables.replace_signed(poisoned);
+    INJECTED.fetch_add(1, Ordering::Relaxed);
+    true
+}
+
 /// Hook: should the intake kill this connection now?  True when the
 /// plan targets connection `conn_idx` and it has frames in flight —
 /// the "server died mid-request" fault the retrying client must

@@ -356,6 +356,31 @@ impl Governor {
         Config::new(new_cap)
     }
 
+    /// Recovery actuator: double the approximation ceiling back toward
+    /// the policy's own choice — [`Governor::step_toward_accurate`]
+    /// run in reverse, driven by the sentinel's clean-window streaks.
+    /// The ceiling walks 0 → 1 → 2 → 4 → … and is released entirely
+    /// once it can no longer bind (at or above the top configuration),
+    /// at which point policy decisions are unconstrained again and the
+    /// power savings the degradation forfeited come back.  Returns the
+    /// new ceiling, or `None` once the cap is released (or was never
+    /// set).
+    pub fn step_toward_approximate(&mut self) -> Option<Config> {
+        let cap = self.cap?;
+        let doubled = if cap == 0 { 1 } else { cap.saturating_mul(2) };
+        if doubled as usize >= crate::amul::N_CONFIGS - 1 {
+            self.cap = None;
+        } else {
+            self.cap = Some(doubled);
+        }
+        let next = self.decide();
+        if next != self.current {
+            self.current = next.clone();
+            self.decisions.push((self.images, next));
+        }
+        self.cap.and_then(Config::new)
+    }
+
     /// The degradation ladder's current approximation ceiling, if any.
     pub fn cap(&self) -> Option<Config> {
         self.cap.and_then(Config::new)
@@ -693,6 +718,38 @@ mod tests {
         // the ceiling clamps later policy decisions too
         assert_eq!(g.feedback(10, 0.0).as_uniform(), Some(Config::ACCURATE));
         assert_eq!(g.cap(), Some(Config::ACCURATE));
+    }
+
+    #[test]
+    fn step_toward_approximate_releases_the_cap_and_restores_savings() {
+        // the satellite regression: a transient fault must not
+        // permanently forfeit the power savings the policy chose
+        let (pm, at) = setup();
+        let mut g = Governor::new(Policy::Fixed(Config::new(16).unwrap()), &pm, &at);
+        // no cap: nothing to recover
+        assert_eq!(g.step_toward_approximate(), None);
+        assert_eq!(g.current_uniform(), Some(Config::new(16).unwrap()));
+        // a guardband trip degrades to a ceiling of 8
+        assert_eq!(g.step_toward_accurate(), Config::new(8));
+        assert_eq!(g.current_uniform(), Some(Config::new(8).unwrap()));
+        // clean streaks walk back up: 16 binds exactly, then release
+        assert_eq!(g.step_toward_approximate(), Config::new(16));
+        assert_eq!(g.current_uniform(), Some(Config::new(16).unwrap()));
+        assert_eq!(g.step_toward_approximate(), None, "32 >= top: released");
+        assert_eq!(g.cap(), None);
+        assert_eq!(g.current_uniform(), Some(Config::new(16).unwrap()));
+        // and from the full pin, recovery climbs 0 -> 1 -> 2 -> ...
+        while g.step_toward_accurate().is_some() {}
+        assert_eq!(g.cap(), Some(Config::ACCURATE));
+        assert_eq!(g.step_toward_approximate(), Config::new(1));
+        assert_eq!(g.step_toward_approximate(), Config::new(2));
+        assert_eq!(g.step_toward_approximate(), Config::new(4));
+        assert_eq!(g.step_toward_approximate(), Config::new(8));
+        assert_eq!(g.step_toward_approximate(), Config::new(16));
+        assert_eq!(g.current_uniform(), Some(Config::new(16).unwrap()));
+        assert_eq!(g.step_toward_approximate(), None);
+        // the policy's own choice is fully restored
+        assert_eq!(g.feedback(10, 0.0).as_uniform(), Some(Config::new(16).unwrap()));
     }
 
     #[test]

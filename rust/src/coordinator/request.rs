@@ -152,6 +152,23 @@ pub struct MetricsSnapshot {
     pub degradations: u64,
     /// Pipeline watchdog trips (stalled stage detected and failed).
     pub watchdog_trips: u64,
+    /// Sentinel counters (the online accuracy-integrity ledger; all
+    /// zero when the sentinel is disabled).
+    /// Requests shadow re-executed in accurate mode.
+    pub shadow_samples: u64,
+    /// Shadow samples whose accurate-mode prediction disagreed with
+    /// the served one.
+    pub disagreements: u64,
+    /// Confident (Wilson lower bound) accuracy-SLO breaches acted on.
+    pub accuracy_breaches: u64,
+    /// Table-scrub passes over the resident signed tables.
+    pub scrubs: u64,
+    /// Configurations quarantined by a digest mismatch.
+    pub quarantines: u64,
+    /// Golden-vector recovery probes that failed (cooldown doubled).
+    pub probe_failures: u64,
+    /// Health-ladder rungs re-admitted after a passing probe.
+    pub repromotions: u64,
 }
 
 impl Metrics {
@@ -214,6 +231,13 @@ impl Metrics {
             envelope_violations: 0,
             degradations: 0,
             watchdog_trips: 0,
+            shadow_samples: 0,
+            disagreements: 0,
+            accuracy_breaches: 0,
+            scrubs: 0,
+            quarantines: 0,
+            probe_failures: 0,
+            repromotions: 0,
         }
     }
 }

@@ -88,6 +88,14 @@ pub trait Backend: Send + Sync {
     /// [`Coordinator::start`] alongside [`Backend::prewarm`] when the
     /// coordinator runs [`ExecutionMode::Pipelined`].  Default: no-op.
     fn prewarm_pipelined(&self, _sched: &ConfigSchedule) {}
+
+    /// The backend's resident product-table store, when it has one the
+    /// sentinel can scrub.  Backends without table state (or doubles
+    /// that do not wrap a native model) return `None` and are simply
+    /// not scrubbed.
+    fn tables(&self) -> Option<&crate::amul::MulTables> {
+        None
+    }
 }
 
 /// Functional bit-exact backend (table-driven rust model, batched
@@ -137,6 +145,10 @@ impl Backend for NativeBackend {
 
     fn prewarm_pipelined(&self, sched: &ConfigSchedule) {
         crate::datapath::pipeline::prewarm(&self.network, sched);
+    }
+
+    fn tables(&self) -> Option<&crate::amul::MulTables> {
+        Some(&self.network.tables)
     }
 }
 
@@ -317,6 +329,11 @@ pub struct CoordinatorConfig {
     /// toward accurate mode.  Detection only; with no fault present
     /// outputs stay bit-exact.
     pub guardbands: bool,
+    /// Online accuracy sentinel: shadow sampling, table scrubbing and
+    /// clean-streak recovery (see [`crate::sentinel`]).  `None`
+    /// disables the subsystem; the window path then pays a single
+    /// `Option` check and clean runs stay bit-exact either way.
+    pub sentinel: Option<crate::sentinel::SentinelConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -333,6 +350,7 @@ impl Default for CoordinatorConfig {
             execution: ExecutionMode::RowSharded,
             deadline: None,
             guardbands: false,
+            sentinel: None,
         }
     }
 }
@@ -467,6 +485,7 @@ struct WorkerCtx {
     governor: Arc<Mutex<Governor>>,
     power: PowerModel,
     shared: Arc<Shared>,
+    sentinel: Option<Arc<crate::sentinel::Sentinel>>,
 }
 
 /// The running coordinator.
@@ -475,6 +494,7 @@ pub struct Coordinator {
     metrics: Arc<Vec<Mutex<Metrics>>>,
     governor: Arc<Mutex<Governor>>,
     shared: Arc<Shared>,
+    sentinel: Option<Arc<crate::sentinel::Sentinel>>,
     inflight_budget: usize,
     next_id: AtomicU64,
     threads: Vec<std::thread::JoinHandle<()>>,
@@ -531,6 +551,10 @@ impl Coordinator {
         if cfg.guardbands {
             crate::chaos::set_guardbands(true);
         }
+        let sentinel = cfg
+            .sentinel
+            .clone()
+            .map(|sc| Arc::new(crate::sentinel::Sentinel::new(sc)));
         let n_workers = cfg.workers.max(1);
         let inflight_budget = if cfg.inflight_budget == 0 {
             cfg.queue_capacity + n_workers * cfg.max_batch.max(1)
@@ -644,6 +668,7 @@ impl Coordinator {
                 governor: Arc::clone(&governor),
                 power: power.clone(),
                 shared: Arc::clone(&shared),
+                sentinel: sentinel.clone(),
             };
             threads.push(
                 std::thread::Builder::new()
@@ -662,6 +687,7 @@ impl Coordinator {
             metrics,
             governor,
             shared,
+            sentinel,
             inflight_budget,
             next_id: AtomicU64::new(1),
             threads,
@@ -883,6 +909,11 @@ impl Coordinator {
                         ctx.backend.name(),
                         rung + 1
                     );
+                    if let Some(sent) = &ctx.sentinel {
+                        // a (re-)demotion is a recovery setback: the
+                        // next probe waits out a doubled cooldown
+                        sent.on_setback();
+                    }
                 }
             }
         }
@@ -935,12 +966,22 @@ impl Coordinator {
                 m.backend_errors += 1;
             }
         }
+        let window_ok = results.is_ok();
+        // shadow capture happens while replies go out (the selection
+        // hash is deterministic per request id); the re-execution and
+        // every other sentinel action run *after* the last reply below
+        let mut shadow: Vec<([u8; N_FEATURES], u8)> = Vec::new();
         match results {
             Ok(outs) => {
                 let latencies = latencies.unwrap_or_default();
                 for ((req, (logits, pred)), latency_us) in
                     batch.requests.into_iter().zip(outs).zip(latencies)
                 {
+                    if let Some(sent) = &ctx.sentinel {
+                        if sent.selects(req.id) {
+                            shadow.push((req.features, pred));
+                        }
+                    }
                     let _ = req.reply.send(ClassifyResponse {
                         id: req.id,
                         status: ReplyStatus::Ok,
@@ -963,6 +1004,130 @@ impl Coordinator {
         // the window's requests are answered (or failed loudly): release
         // their admission-control slots
         ctx.shared.inflight.fetch_sub(n, Ordering::AcqRel);
+        Self::sentinel_after_window(ctx, window_ok, shadow);
+    }
+
+    /// Everything the sentinel does for one served window: shadow
+    /// re-execution, scrub cadence, and clean-streak recovery.  Runs
+    /// strictly after the window's replies are resolved and its
+    /// admission slots released, so audit work never extends a
+    /// requester's latency.  With the sentinel disabled this is one
+    /// `Option` check.
+    fn sentinel_after_window(
+        ctx: &WorkerCtx,
+        window_ok: bool,
+        shadow: Vec<([u8; N_FEATURES], u8)>,
+    ) {
+        let Some(sent) = &ctx.sentinel else { return };
+        let accurate = ConfigSchedule::Uniform(Config::ACCURATE);
+        // 1. shadow re-execution: the sampled requests run again under
+        //    the uniform accurate schedule; prediction disagreement
+        //    feeds the streaming estimator, and a *confident* (Wilson
+        //    lower bound) SLO breach steps the schedule toward accurate
+        let mut disagreed = false;
+        if !shadow.is_empty() {
+            let xs: Vec<[u8; N_FEATURES]> = shadow.iter().map(|(x, _)| *x).collect();
+            match ctx.backend.execute(&xs, &accurate) {
+                Ok(outs) if outs.len() == xs.len() => {
+                    let pairs: Vec<(u16, u16)> = shadow
+                        .iter()
+                        .zip(&outs)
+                        .map(|((_, served), (_, acc))| (*served as u16, *acc as u16))
+                        .collect();
+                    let (any, breach) = sent.record_shadow(&pairs);
+                    disagreed = any;
+                    if breach {
+                        let stepped = ctx.governor.lock().unwrap().step_toward_accurate();
+                        log::warn!(
+                            "sentinel: confident accuracy-SLO breach; \
+                             schedule capped at {stepped:?}"
+                        );
+                    }
+                }
+                // a failed shadow pass dirties the window (the health
+                // ladder handles the serving-path consequences)
+                _ => disagreed = true,
+            }
+        }
+        // 2. window bookkeeping: scrub cadence + clean-streak recovery
+        let (scrub_due, probe_due) = sent.on_window(window_ok && !disagreed);
+        let mut scrub_eventful = false;
+        if scrub_due {
+            if let Some(tables) = ctx.backend.tables() {
+                let rep = sent.scrub(tables);
+                scrub_eventful = rep.eventful();
+                for cfg in &rep.readmitted {
+                    log::warn!(
+                        "sentinel: table {cfg:?} digest mismatch — rebuilt, \
+                         re-proved and re-admitted"
+                    );
+                }
+                if !rep.pinned.is_empty() {
+                    // a table that cannot be restored to its verified
+                    // bits must never be consulted again: run out the
+                    // ladder so every future decision is accurate
+                    ctx.shared.degradations.fetch_add(1, Ordering::Relaxed);
+                    let mut gov = ctx.governor.lock().unwrap();
+                    while gov.step_toward_accurate().is_some() {}
+                    log::error!(
+                        "sentinel: table(s) {:?} unrecoverable after rebuild; \
+                         schedule pinned fully accurate",
+                        rep.pinned
+                    );
+                }
+            }
+        }
+        // 3. recovery probe: a streak of clean windows earns one
+        //    upward step — a degraded rung re-admitted behind a passing
+        //    golden-vector probe, or a governor cap stepped back along
+        //    the frontier.  A scrub event this window vetoes it.
+        if probe_due && !scrub_eventful {
+            let rung = ctx.shared.degrade_level.load(Ordering::Relaxed);
+            if rung >= 1 {
+                let golden = [sent.golden_vector()];
+                let pass = if rung == 1 {
+                    // candidate rung 0 restores the configured
+                    // execution mode: probe it against the plain path
+                    // on the same golden vector — both must serve and
+                    // agree bit-exactly
+                    let reference = ctx.backend.execute(&golden, &accurate);
+                    let candidate = match ctx.execution {
+                        ExecutionMode::Pipelined => {
+                            ctx.backend.execute_pipelined(&golden, &accurate)
+                        }
+                        ExecutionMode::RowSharded => ctx.backend.execute(&golden, &accurate),
+                    };
+                    matches!((reference, candidate), (Ok(a), Ok(b)) if a.len() == 1 && a == b)
+                } else {
+                    // rung 2 → 1: is the backend serving sane answers
+                    // at all on the forced row-sharded path?
+                    matches!(ctx.backend.execute(&golden, &accurate), Ok(v) if v.len() == 1)
+                };
+                if pass {
+                    ctx.shared.degrade_level.store(rung - 1, Ordering::Relaxed);
+                    sent.probe_passed();
+                    log::warn!(
+                        "sentinel: golden probe passed after a clean streak; \
+                         degradation rung {rung} -> {}",
+                        rung - 1
+                    );
+                } else {
+                    sent.probe_failed();
+                }
+            } else {
+                // ladder healthy: release breach/guardband schedule
+                // caps one frontier step per earned streak
+                let mut gov = ctx.governor.lock().unwrap();
+                if gov.cap().is_some() {
+                    let stepped = gov.step_toward_approximate();
+                    drop(gov);
+                    sent.step_taken();
+                    log::info!(
+                        "sentinel: clean streak; schedule cap stepped back to {stepped:?}"
+                    );
+                }
+            }
+        }
     }
 
     /// Non-blocking submission with explicit backpressure.  Claims an
@@ -1071,6 +1236,22 @@ impl Coordinator {
         s.envelope_violations = self.shared.envelope_violations.load(Ordering::Relaxed);
         s.degradations = self.shared.degradations.load(Ordering::Relaxed);
         s.watchdog_trips = crate::chaos::watchdog_trips();
+        if let Some(sent) = &self.sentinel {
+            let c = &sent.counters;
+            s.shadow_samples = c.shadow_samples.load(Ordering::Relaxed);
+            s.disagreements = c.disagreements.load(Ordering::Relaxed);
+            s.accuracy_breaches = c.accuracy_breaches.load(Ordering::Relaxed);
+            s.scrubs = c.scrubs.load(Ordering::Relaxed);
+            s.quarantines = c.quarantines.load(Ordering::Relaxed);
+            s.probe_failures = c.probe_failures.load(Ordering::Relaxed);
+            s.repromotions = c.repromotions.load(Ordering::Relaxed);
+        }
+    }
+
+    /// The coordinator's sentinel, when one is configured (live
+    /// disagreement estimate + audit counters for reports and tests).
+    pub fn sentinel(&self) -> Option<&crate::sentinel::Sentinel> {
+        self.sentinel.as_deref()
     }
 
     /// The degradation ladder's current rung: 0 = configured mode,

@@ -46,6 +46,7 @@ pub mod netlist;
 pub mod power;
 pub mod report;
 pub mod runtime;
+pub mod sentinel;
 pub mod testkit;
 pub mod util;
 pub mod weights;

@@ -20,6 +20,8 @@
 //!   chaos      deterministic fault-injection campaign across the serve
 //!              stack: every class must end masked, detected+degraded, or
 //!              failed-fast -> CHAOS.json
+//!   sentinel   online accuracy-audit campaign: every class must end clean
+//!              or detected+recovered -> SENTINEL.json
 
 use anyhow::{Context, Result};
 use ecmac::amul::{metrics, Config, ConfigSchedule};
@@ -61,6 +63,7 @@ fn main() {
         "bench" => cmd_bench(rest),
         "analyze" => cmd_analyze(rest),
         "chaos" => cmd_chaos(rest),
+        "sentinel" => cmd_sentinel(rest),
         "ablation" => cmd_ablation(rest),
         "verilog" => cmd_verilog(rest),
         "--help" | "-h" | "help" => {
@@ -102,6 +105,9 @@ fn print_global_usage() {
          \x20 chaos      deterministic fault-injection campaign: table/accumulator\n\
          \x20            SEUs, stage stalls + panics, flaky backends, dropped\n\
          \x20            connections -> CHAOS.json\n\
+         \x20 sentinel   online accuracy-audit campaign: shadow-sampling estimate\n\
+         \x20            cross-check, silent drift, mid-serve table corruption,\n\
+         \x20            ladder re-promotion -> SENTINEL.json\n\
          \x20 ablation   heterogeneous per-neuron configuration study\n\
          \x20 verilog    export the EC multiplier as synthesizable Verilog\n"
     );
@@ -580,6 +586,28 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         takes_value: true,
         default: None,
     });
+    spec.push(OptSpec {
+        name: "shadow-rate",
+        help: "accuracy sentinel: shadow re-execute 1-in-N served requests in \
+               accurate mode off the hot path (0 = off); enables the sentinel",
+        takes_value: true,
+        default: Some("0"),
+    });
+    spec.push(OptSpec {
+        name: "accuracy-slo",
+        help: "tolerated approximate-vs-accurate disagreement rate; a confident \
+               (Wilson lower bound) breach of it steps the governor toward \
+               accurate; enables the sentinel",
+        takes_value: true,
+        default: None,
+    });
+    spec.push(OptSpec {
+        name: "scrub-every",
+        help: "sentinel table-scrub cadence in batch windows (default 32 when \
+               the sentinel is enabled); passing it enables the sentinel",
+        takes_value: true,
+        default: None,
+    });
     let args = Args::parse(argv, &spec)?;
     let dir = artifacts_dir(&args);
     let n_requests: usize = args.get_or("requests", 2000)?;
@@ -649,6 +677,36 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if watchdog_ms > 0 {
         ecmac::datapath::pipeline::set_watchdog(Some(Duration::from_millis(watchdog_ms)));
     }
+    let shadow_rate: u32 = args.get_or("shadow-rate", 0)?;
+    let accuracy_slo: Option<f64> = match args.get("accuracy-slo") {
+        Some(s) => Some(s.parse().context("parsing --accuracy-slo")?),
+        None => None,
+    };
+    let scrub_every: u64 = args.get_or("scrub-every", 32)?;
+    let sentinel_on =
+        shadow_rate > 0 || accuracy_slo.is_some() || args.get("scrub-every").is_some();
+    let sentinel = sentinel_on.then(|| {
+        // offline cross-check: the AccuracyTable's predicted
+        // disagreement for the starting schedule (accurate-mode
+        // accuracy minus schedule accuracy), when the schedule is
+        // uniform
+        let predicted = governor.current().as_uniform().map(|cfg| {
+            (acc_table.get(Config::ACCURATE) - acc_table.get(cfg)).max(0.0)
+        });
+        ecmac::sentinel::SentinelConfig {
+            shadow_rate,
+            accuracy_slo,
+            scrub_every,
+            predicted_disagreement: predicted,
+            ..ecmac::sentinel::SentinelConfig::default()
+        }
+    });
+    if let Some(sc) = &sentinel {
+        println!(
+            "accuracy sentinel: shadow 1-in-{} (slo {:?}), scrub every {} windows",
+            sc.shadow_rate, sc.accuracy_slo, sc.scrub_every
+        );
+    }
     let coord = Arc::new(Coordinator::start(
         CoordinatorConfig {
             max_batch,
@@ -665,6 +723,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             },
             deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
             guardbands: args.flag("guardbands"),
+            sentinel,
             ..CoordinatorConfig::default()
         },
         backend,
@@ -715,6 +774,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
     let wall = t0.elapsed();
     let decisions = coord.decisions();
+    let sentinel_est = coord.sentinel().map(|s| s.estimate());
     if let Some(intake) = intake.as_mut() {
         intake.stop();
     }
@@ -736,6 +796,30 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
          {} degradations / {} watchdog trips",
         m.deadline_expired, m.envelope_violations, m.degradations, m.watchdog_trips
     );
+    if let Some(est) = sentinel_est {
+        println!(
+            "sentinel           {} shadow samples / {} disagreements / {} breaches / \
+             {} scrubs / {} quarantines / {} probe failures / {} repromotions",
+            m.shadow_samples,
+            m.disagreements,
+            m.accuracy_breaches,
+            m.scrubs,
+            m.quarantines,
+            m.probe_failures,
+            m.repromotions
+        );
+        if est.samples > 0 {
+            let predicted = est
+                .predicted
+                .map(|p| format!("{p:.4}"))
+                .unwrap_or_else(|| "n/a".into());
+            println!(
+                "disagreement       observed {:.4} (Wilson [{:.4}, {:.4}], n={}) \
+                 vs offline predicted {predicted}",
+                est.rate, est.lower, est.upper, est.samples
+            );
+        }
+    }
     println!(
         "accuracy           {:.2}%",
         correct as f64 / answered.max(1) as f64 * 100.0
@@ -901,6 +985,13 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         takes_value: false,
         default: None,
     });
+    spec.push(OptSpec {
+        name: "shadow-rate",
+        help: "sentinel shadow-audit 1-in-N sampling under load (0 = off); \
+               measures the audit overhead on the serve curve",
+        takes_value: true,
+        default: Some("0"),
+    });
     let args = Args::parse(argv, &spec)?;
     let requests: usize = args.get_or("requests", 4000)?;
     let max_batch: usize = args.get_or("max-batch", 64)?;
@@ -923,6 +1014,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         other => anyhow::bail!("unknown mode '{other}' (closed | open | burst)"),
     };
     let flaky_every: u64 = args.get_or("chaos-flaky", 0)?;
+    let shadow_rate: u32 = args.get_or("shadow-rate", 0)?;
     anyhow::ensure!(
         !args.flag("wire") || matches!(mode, LoadMode::Closed { .. }),
         "--wire drives closed-loop clients only (use --mode closed)"
@@ -1016,6 +1108,10 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
                     } else {
                         ExecutionMode::RowSharded
                     },
+                    sentinel: (shadow_rate > 0).then(|| ecmac::sentinel::SentinelConfig {
+                        shadow_rate,
+                        ..ecmac::sentinel::SentinelConfig::default()
+                    }),
                     ..CoordinatorConfig::default()
                 },
                 backend,
@@ -1071,6 +1167,12 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
                 adap_r.retries,
                 adap_m.degradations,
                 adap_m.backend_errors
+            );
+        }
+        if shadow_rate > 0 {
+            println!(
+                "  sentinel: {} shadow samples / {} disagreements",
+                adap_m.shadow_samples, adap_m.disagreements
             );
         }
         let energy_nj = adap_m.energy_mj * 1e6 / adap_r.answered.max(1) as f64;
@@ -2197,6 +2299,47 @@ fn cmd_chaos(argv: &[String]) -> Result<()> {
     anyhow::ensure!(
         contained,
         "campaign left a fault class silent or hung (see table above)"
+    );
+    Ok(())
+}
+
+fn cmd_sentinel(argv: &[String]) -> Result<()> {
+    let spec = vec![
+        OptSpec {
+            name: "seed",
+            help: "input / anomaly-coordinate seed (the campaign is \
+                   reproducible from it alone)",
+            takes_value: true,
+            default: Some("20260807"),
+        },
+        OptSpec {
+            name: "json",
+            help: "write the SENTINEL.json artifact here",
+            takes_value: true,
+            default: None,
+        },
+    ];
+    let args = Args::parse(argv, &spec)?;
+    let seed: u64 = args.get_or("seed", 20260807)?;
+
+    println!("sentinel audit campaign (seed {seed}): one quiet anomaly class at a time\n");
+    let report = ecmac::sentinel::campaign::run_campaign(seed);
+    println!("{:<18} {:<20} detail", "class", "outcome");
+    for c in &report.classes {
+        println!("{:<18} {:<20} {}", c.class, c.outcome.as_str(), c.detail);
+    }
+    let resolved = report.all_resolved();
+    println!(
+        "\n{} classes, all detected-and-recovered or clean: {resolved}",
+        report.classes.len()
+    );
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().to_string())?;
+        println!("wrote {path}");
+    }
+    anyhow::ensure!(
+        resolved,
+        "audit campaign left a class silent, unrecovered or hung (see table above)"
     );
     Ok(())
 }

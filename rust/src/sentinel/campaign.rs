@@ -1,0 +1,763 @@
+//! The scripted accuracy-audit campaign behind `ecmac sentinel`.
+//!
+//! Where `ecmac chaos` proves the stack *contains* loud faults, this
+//! campaign proves the sentinel *catches and heals* the quiet ones —
+//! failures that never close a reply channel and are invisible to the
+//! PR-9 machinery:
+//!
+//! - **clean-estimate**: a healthy approximate serve run; the online
+//!   shadow-sampling disagreement estimate must land within tolerance
+//!   of the offline-measured approximate-vs-accurate disagreement on
+//!   the same input pool, with zero breaches declared.
+//! - **drift-shadow**: a backend that silently corrupts every Nth
+//!   prediction; the shadow stream must declare a confident SLO breach
+//!   within a pinned sample budget and step the governor toward
+//!   accurate — then, once the drift episode clears, clean-window
+//!   streaks must walk the schedule cap back out and restore the
+//!   original operating point (no permanently forfeited power savings).
+//! - **table-scrub**: a resident signed product table corrupted
+//!   mid-serve; the periodic digest scrub must quarantine, rebuild and
+//!   re-admit it with **zero failed replies** and a bit-exact datapath
+//!   afterwards.
+//! - **ladder-repromote**: a transiently failing backend demoted down
+//!   the PR-9 health ladder; after the configured clean streak a
+//!   passing golden-vector probe must re-admit the rung.
+//!
+//! Unlike the chaos campaign this one needs no process-global fault
+//! state (the one mutation, [`crate::chaos::poison_resident_table`],
+//! targets a specific coordinator's resident store), so it composes
+//! with other suites without a global lock.
+
+use super::SentinelConfig;
+use crate::amul::{Config, ConfigSchedule};
+use crate::coordinator::governor::{AccuracyTable, Governor, Policy};
+use crate::coordinator::request::ReplyStatus;
+use crate::coordinator::server::{
+    Backend, Coordinator, CoordinatorConfig, ExecutionMode, NativeBackend,
+};
+use crate::datapath::Network;
+use crate::dataset::N_FEATURES;
+use crate::power::{MultiplierEnergyProfile, PowerModel};
+use crate::testkit::doubles::DriftingBackend;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::weights::QuantWeights;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How one audit class ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AuditOutcome {
+    /// Nothing was wrong and the sentinel correctly said so (estimate
+    /// cross-check passed, no false alarms).
+    Clean,
+    /// The injected anomaly was detected by the sentinel *and* the
+    /// stack healed back to its target operating point.
+    DetectedRecovered,
+    /// Detected, but the stack never healed within the class budget —
+    /// a gate failure.
+    Unrecovered,
+    /// The anomaly was never detected (corrupt answers audited as
+    /// good) — a gate failure.
+    Silent,
+    /// A reply never resolved within the class bound — a gate failure.
+    Hung,
+}
+
+impl AuditOutcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AuditOutcome::Clean => "clean",
+            AuditOutcome::DetectedRecovered => "detected_recovered",
+            AuditOutcome::Unrecovered => "unrecovered",
+            AuditOutcome::Silent => "silent",
+            AuditOutcome::Hung => "hung",
+        }
+    }
+
+    /// Whether this ending is acceptable under the sentinel gate.
+    pub fn resolved(&self) -> bool {
+        matches!(self, AuditOutcome::Clean | AuditOutcome::DetectedRecovered)
+    }
+}
+
+/// Online-vs-offline disagreement cross-check for one class.
+#[derive(Debug, Clone, Copy)]
+pub struct EstimateCheck {
+    /// The sentinel's streaming point estimate at audit end.
+    pub observed: f64,
+    /// The offline-measured disagreement on the same input pool.
+    pub predicted: f64,
+    /// Allowed |observed - predicted|.
+    pub tolerance: f64,
+}
+
+impl EstimateCheck {
+    pub fn within(&self) -> bool {
+        (self.observed - self.predicted).abs() <= self.tolerance
+    }
+}
+
+/// One audit class's verdict.
+#[derive(Debug, Clone)]
+pub struct AuditReport {
+    /// Stable class name (`clean-estimate`, `drift-shadow`, ...).
+    pub class: String,
+    /// The injected anomaly (or its absence), human-readable.
+    pub scenario: String,
+    pub outcome: AuditOutcome,
+    /// Evidence for the verdict.
+    pub detail: String,
+    /// Requests this class issued.
+    pub replies: u64,
+    /// Replies that never resolved within the class bound (must be 0).
+    pub unresolved: u64,
+    /// Present for classes that cross-check the online estimate.
+    pub estimate: Option<EstimateCheck>,
+}
+
+/// The whole campaign.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub seed: u64,
+    pub classes: Vec<AuditReport>,
+}
+
+impl CampaignReport {
+    fn count(&self, o: AuditOutcome) -> u64 {
+        self.classes.iter().filter(|c| c.outcome == o).count() as u64
+    }
+
+    /// Gate predicate: every class resolved, every reply accounted,
+    /// every carried estimate within tolerance.
+    pub fn all_resolved(&self) -> bool {
+        self.classes.iter().all(|c| {
+            c.outcome.resolved()
+                && c.unresolved == 0
+                && c.estimate.as_ref().map_or(true, EstimateCheck::within)
+        })
+    }
+
+    /// The `SENTINEL.json` document.
+    pub fn to_json(&self) -> Json {
+        let classes: Vec<Json> = self
+            .classes
+            .iter()
+            .map(|c| {
+                let mut j = crate::json_obj! {
+                    "class" => c.class.as_str(),
+                    "scenario" => c.scenario.as_str(),
+                    "outcome" => c.outcome.as_str(),
+                    "detail" => c.detail.as_str(),
+                    "replies" => c.replies as i64,
+                    "unresolved" => c.unresolved as i64,
+                };
+                if let (Some(e), Json::Obj(m)) = (&c.estimate, &mut j) {
+                    m.insert(
+                        "estimate".to_string(),
+                        crate::json_obj! {
+                            "observed" => e.observed,
+                            "predicted" => e.predicted,
+                            "tolerance" => e.tolerance,
+                        },
+                    );
+                }
+                j
+            })
+            .collect();
+        crate::json_obj! {
+            "bench" => "sentinel",
+            "seed" => self.seed as i64,
+            "classes" => Json::Arr(classes),
+            "summary" => crate::json_obj! {
+                "clean" => self.count(AuditOutcome::Clean) as i64,
+                "detected_recovered" => self.count(AuditOutcome::DetectedRecovered) as i64,
+                "unrecovered" => self.count(AuditOutcome::Unrecovered) as i64,
+                "silent" => self.count(AuditOutcome::Silent) as i64,
+                "hung" => self.count(AuditOutcome::Hung) as i64,
+                "total" => self.classes.len() as i64,
+            },
+        }
+    }
+}
+
+/// Per-reply resolution bound: far above any honest latency, far below
+/// "forever".
+const REPLY_BOUND: Duration = Duration::from_secs(10);
+
+/// Seed for the campaign's deterministic network weights.
+const SENTINEL_NET_SEED: u64 = 0x5e27_1e1;
+
+/// Deterministic synthetic network shared by every class.
+fn network(rng: &mut Pcg32) -> Network {
+    let mut gen = |n: usize| -> Vec<u8> { (0..n).map(|_| rng.below(128) as u8).collect() };
+    Network::new(QuantWeights::two_layer(
+        gen(62 * 30),
+        gen(30),
+        gen(30 * 10),
+        gen(10),
+    ))
+}
+
+fn inputs(rng: &mut Pcg32, n: usize) -> Vec<[u8; N_FEATURES]> {
+    (0..n)
+        .map(|_| {
+            let mut x = [0u8; N_FEATURES];
+            for v in x.iter_mut() {
+                *v = rng.below(128) as u8;
+            }
+            x
+        })
+        .collect()
+}
+
+fn governor(policy: Policy, pm: &PowerModel) -> Governor {
+    let acc = AccuracyTable::new(vec![0.9; crate::amul::N_CONFIGS]);
+    Governor::new(policy, pm, &acc)
+}
+
+/// Offline approximate-vs-accurate prediction disagreement of `net`
+/// over `xs` under `sched` — the reference the online estimate is
+/// cross-checked against.
+fn offline_disagreement(net: &Network, xs: &[[u8; N_FEATURES]], sched: &ConfigSchedule) -> f64 {
+    let approx = net.forward_batch(xs, sched);
+    let accurate = net.forward_batch(xs, &ConfigSchedule::uniform(Config::ACCURATE));
+    let disagree = approx
+        .iter()
+        .zip(&accurate)
+        .filter(|(a, b)| a.pred != b.pred)
+        .count();
+    disagree as f64 / xs.len().max(1) as f64
+}
+
+/// Drive one request through a coordinator with a bounded wait.
+/// Returns `(reply, resolved)`: `reply` is `None` for a failed window
+/// (closed channel) *and* for an unresolved one — `resolved`
+/// distinguishes them.
+fn bounded_classify(
+    coord: &Coordinator,
+    x: [u8; N_FEATURES],
+) -> (Option<crate::coordinator::ClassifyResponse>, bool) {
+    match coord.try_submit(x) {
+        None => (None, true), // rejected: resolved immediately
+        Some(reply) => match reply.recv_timeout(REPLY_BOUND) {
+            Ok(Some(resp)) => (Some(resp), true),
+            Err(()) => (None, true), // closed: failed loudly
+            Ok(None) => (None, false), // still pending at the bound: hung
+        },
+    }
+}
+
+/// Run the scripted audit campaign.  Deterministic per seed; touches
+/// no process-global fault state.
+pub fn run_campaign(seed: u64) -> CampaignReport {
+    let mut rng = Pcg32::new(seed);
+    let clean_net = network(&mut Pcg32::new(SENTINEL_NET_SEED));
+    let xs = inputs(&mut Pcg32::new(seed ^ 0x5eed), 48);
+    let pm = PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(500, 3))
+        .expect("power model");
+
+    let classes = vec![
+        class_clean_estimate(seed, &clean_net, &xs, &pm),
+        class_drift_shadow(seed, &clean_net, &xs, &pm),
+        class_table_scrub(&mut rng, &clean_net, &xs, &pm),
+        class_ladder_repromote(seed, &xs, &pm),
+    ];
+    CampaignReport { seed, classes }
+}
+
+/// Class 1: healthy approximate serving.  Every request is shadowed
+/// (rate 1); the streaming estimate must match the offline-measured
+/// disagreement on the same pool, and no breach may be declared.
+fn class_clean_estimate(
+    seed: u64,
+    clean_net: &Network,
+    xs: &[[u8; N_FEATURES]],
+    pm: &PowerModel,
+) -> AuditReport {
+    let cfg = Config::new(9).unwrap();
+    let sched = ConfigSchedule::uniform(cfg);
+    let predicted = offline_disagreement(clean_net, xs, &sched);
+    let tolerance = 0.05;
+    let backend = Arc::new(NativeBackend {
+        network: network(&mut Pcg32::new(SENTINEL_NET_SEED)),
+    });
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            sentinel: Some(SentinelConfig {
+                seed,
+                shadow_rate: 1,
+                accuracy_slo: None, // estimate only: a clean run must not act
+                scrub_every: 0,
+                predicted_disagreement: Some(predicted),
+                ..SentinelConfig::default()
+            }),
+            ..CoordinatorConfig::default()
+        },
+        backend as Arc<dyn Backend>,
+        governor(Policy::Fixed(cfg), pm),
+        pm.clone(),
+    );
+    let mut served = 0u64;
+    let mut unresolved = 0u64;
+    for &x in xs {
+        match bounded_classify(&coord, x) {
+            (Some(_), true) => served += 1,
+            (None, true) => {}
+            (_, false) => unresolved += 1,
+        }
+    }
+    let est = coord.sentinel().expect("sentinel configured").estimate();
+    let breaches = coord
+        .sentinel()
+        .unwrap()
+        .counters
+        .accuracy_breaches
+        .load(Ordering::Relaxed);
+    coord.shutdown();
+    let check = EstimateCheck {
+        observed: est.rate,
+        predicted,
+        tolerance,
+    };
+    let healthy = unresolved == 0
+        && served == xs.len() as u64
+        && est.samples == served
+        && breaches == 0
+        && check.within();
+    AuditReport {
+        class: "clean-estimate".into(),
+        scenario: format!("no fault; uniform cfg {} serving, shadow rate 1", cfg.index()),
+        outcome: if unresolved > 0 {
+            AuditOutcome::Hung
+        } else if healthy {
+            AuditOutcome::Clean
+        } else {
+            AuditOutcome::Unrecovered
+        },
+        detail: format!(
+            "{served}/{} served, {} shadow samples, online rate {:.4} \
+             (Wilson [{:.4}, {:.4}]) vs offline {predicted:.4}, breaches {breaches}",
+            xs.len(),
+            est.samples,
+            est.rate,
+            est.lower,
+            est.upper
+        ),
+        replies: xs.len() as u64,
+        unresolved,
+        estimate: Some(check),
+    }
+}
+
+/// Class 2: silent prediction drift.  A backend corrupting every 3rd
+/// prediction must be caught by the shadow stream within a pinned
+/// sample budget; once the episode clears, clean streaks must walk the
+/// governor cap back out and restore the original schedule.
+fn class_drift_shadow(
+    seed: u64,
+    clean_net: &Network,
+    xs: &[[u8; N_FEATURES]],
+    pm: &PowerModel,
+) -> AuditReport {
+    const SAMPLE_BUDGET: u64 = 160;
+    let cfg = Config::new(12).unwrap();
+    let sched = ConfigSchedule::uniform(cfg);
+    // the SLO sits above the *approximation's* own disagreement (so a
+    // healthy run never breaches) and far below the drifted rate
+    let approx_rate = offline_disagreement(clean_net, xs, &sched);
+    let slo = approx_rate + 0.10;
+    let inner = Arc::new(NativeBackend {
+        network: network(&mut Pcg32::new(SENTINEL_NET_SEED)),
+    });
+    let drift = Arc::new(DriftingBackend::wrap(inner, 3));
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            sentinel: Some(SentinelConfig {
+                seed,
+                shadow_rate: 1,
+                accuracy_slo: Some(slo),
+                scrub_every: 0,
+                repromote_after: 2,
+                predicted_disagreement: Some(approx_rate),
+                ..SentinelConfig::default()
+            }),
+            ..CoordinatorConfig::default()
+        },
+        Arc::clone(&drift) as Arc<dyn Backend>,
+        governor(Policy::Fixed(cfg), pm),
+        pm.clone(),
+    );
+    let sent = coord.sentinel().unwrap();
+    let mut replies = 0u64;
+    let mut unresolved = 0u64;
+    // phase 1: serve under drift until the shadow stream breaches
+    let mut pool = xs.iter().cycle();
+    let mut samples_at_detect = 0;
+    // the sample budget is the audit contract; the reply cap is just a
+    // backstop so a wedged stack cannot loop this class forever
+    while sent.counters.shadow_samples.load(Ordering::Relaxed) < SAMPLE_BUDGET
+        && replies < 4 * SAMPLE_BUDGET
+    {
+        let (_, resolved) = bounded_classify(&coord, *pool.next().unwrap());
+        replies += 1;
+        unresolved += u64::from(!resolved);
+        if sent.counters.accuracy_breaches.load(Ordering::Relaxed) >= 1 {
+            samples_at_detect = sent.counters.shadow_samples.load(Ordering::Relaxed);
+            break;
+        }
+    }
+    let detected = samples_at_detect > 0;
+    // phase 2: the drift episode clears; clean streaks must restore
+    // the original operating point (cap stepped back out)
+    drift.set_period(0);
+    let mut healed = false;
+    let mut last_pred = None;
+    if detected {
+        for &x in xs.iter().cycle().take(60) {
+            let (resp, resolved) = bounded_classify(&coord, x);
+            replies += 1;
+            unresolved += u64::from(!resolved);
+            last_pred = resp.map(|r| (x, r.pred));
+            if coord.current_schedule() == sched {
+                healed = true;
+                break;
+            }
+        }
+    }
+    // the restored schedule must serve bit-exactly again
+    let exact_after = last_pred
+        .map(|(x, pred)| pred == clean_net.forward(&x, cfg).pred)
+        .unwrap_or(false);
+    let breaches = sent.counters.accuracy_breaches.load(Ordering::Relaxed);
+    let m = coord.shutdown();
+    AuditReport {
+        class: "drift-shadow".into(),
+        scenario: format!(
+            "every 3rd prediction silently corrupted; slo {slo:.3} \
+             (approx base {approx_rate:.3}), sample budget {SAMPLE_BUDGET}"
+        ),
+        outcome: if unresolved > 0 {
+            AuditOutcome::Hung
+        } else if !detected {
+            AuditOutcome::Silent
+        } else if healed && exact_after {
+            AuditOutcome::DetectedRecovered
+        } else {
+            AuditOutcome::Unrecovered
+        },
+        detail: format!(
+            "breach after {samples_at_detect} shadow samples (budget {SAMPLE_BUDGET}), \
+             breaches {breaches}, schedule restored to cfg {}: {healed}, \
+             post-recovery reply bit-exact: {exact_after}, snapshot breaches {}",
+            cfg.index(),
+            m.accuracy_breaches
+        ),
+        replies,
+        unresolved,
+        estimate: None,
+    }
+}
+
+/// Class 3: mid-serve table corruption.  A bit flipped in a resident
+/// signed product table must be caught by the periodic digest scrub,
+/// rebuilt and re-admitted — with zero failed replies throughout.
+fn class_table_scrub(
+    rng: &mut Pcg32,
+    clean_net: &Network,
+    xs: &[[u8; N_FEATURES]],
+    pm: &PowerModel,
+) -> AuditReport {
+    let cfg = Config::new(9).unwrap();
+    let backend = Arc::new(NativeBackend {
+        network: network(&mut Pcg32::new(SENTINEL_NET_SEED)),
+    });
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            sentinel: Some(SentinelConfig {
+                shadow_rate: 0,
+                scrub_every: 2, // every other window: tight audit cadence
+                ..SentinelConfig::default()
+            }),
+            ..CoordinatorConfig::default()
+        },
+        Arc::clone(&backend) as Arc<dyn Backend>,
+        governor(Policy::Fixed(cfg), pm),
+        pm.clone(),
+    );
+    let mut served = 0u64;
+    let mut failed = 0u64;
+    let mut unresolved = 0u64;
+    let mut drive = |coord: &Coordinator, x: [u8; N_FEATURES]| match bounded_classify(coord, x) {
+        (Some(r), true) if r.status == ReplyStatus::Ok => {
+            served += 1;
+            Some(r.pred)
+        }
+        (_, true) => {
+            failed += 1;
+            None
+        }
+        (_, false) => {
+            unresolved += 1;
+            None
+        }
+    };
+    // healthy windows first, so the scrubber fingerprints the clean
+    // resident tables as its trusted reference
+    for &x in xs.iter().take(4) {
+        drive(&coord, x);
+    }
+    // mid-serve upset: one bit flips in the resident signed table
+    let (x, w, bit) = (
+        1 + rng.below(255) as u8,
+        1 + rng.below(255) as u8,
+        rng.below(14) as u8,
+    );
+    let injected = crate::chaos::poison_resident_table(&backend.network.tables, cfg, x, w, bit);
+    for &x in xs.iter().take(8).skip(4) {
+        drive(&coord, x);
+    }
+    let sent = coord.sentinel().unwrap();
+    let quarantines = sent.counters.quarantines.load(Ordering::Relaxed);
+    let scrubs = sent.counters.scrubs.load(Ordering::Relaxed);
+    // post-recovery: the datapath must be bit-exact again
+    let probe = xs[8];
+    let pred = drive(&coord, probe);
+    let exact_after = pred == Some(clean_net.forward(&probe, cfg).pred);
+    let m = coord.shutdown();
+    AuditReport {
+        class: "table-scrub".into(),
+        scenario: format!(
+            "bit {bit} of resident signed-table entry ({x}, {w}) flipped \
+             mid-serve, cfg {} (scrub every 2 windows)",
+            cfg.index()
+        ),
+        outcome: if unresolved > 0 {
+            AuditOutcome::Hung
+        } else if !injected || quarantines == 0 {
+            AuditOutcome::Silent
+        } else if failed == 0 && m.backend_errors == 0 && exact_after {
+            AuditOutcome::DetectedRecovered
+        } else {
+            AuditOutcome::Unrecovered
+        },
+        detail: format!(
+            "injected: {injected}; {scrubs} scrub passes, {quarantines} quarantined, \
+             {served} served / {failed} failed replies (backend errors {}), \
+             post-recovery reply bit-exact: {exact_after}",
+            m.backend_errors
+        ),
+        replies: 9,
+        unresolved,
+        estimate: None,
+    }
+}
+
+/// Serves faithfully after failing its first `fail_first` windows —
+/// the transient-outage double for ladder re-promotion.
+struct FailNBackend {
+    inner: Arc<dyn Backend>,
+    fail_first: u64,
+    calls: AtomicU64,
+}
+
+impl Backend for FailNBackend {
+    fn execute(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        let call = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        if call <= self.fail_first {
+            anyhow::bail!("injected transient backend outage (window {call})");
+        }
+        self.inner.execute(xs, sched)
+    }
+
+    fn name(&self) -> &'static str {
+        "fail-n"
+    }
+
+    fn topology(&self) -> &crate::weights::Topology {
+        self.inner.topology()
+    }
+
+    fn prewarm(&self, sched: &ConfigSchedule) {
+        self.inner.prewarm(sched);
+    }
+}
+
+/// Class 4: transient outage, then recovery.  Two failed windows demote
+/// the health ladder to rung 1 (pipelined route lost); after the
+/// post-setback cooldown and a clean streak, a passing golden-vector
+/// probe must re-admit the rung — degradation is no longer one-way.
+fn class_ladder_repromote(seed: u64, xs: &[[u8; N_FEATURES]], pm: &PowerModel) -> AuditReport {
+    let inner = Arc::new(NativeBackend {
+        network: network(&mut Pcg32::new(SENTINEL_NET_SEED)),
+    });
+    let backend = Arc::new(FailNBackend {
+        inner,
+        fail_first: 2,
+        calls: AtomicU64::new(0),
+    });
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            execution: ExecutionMode::Pipelined,
+            sentinel: Some(SentinelConfig {
+                seed,
+                shadow_rate: 0,
+                scrub_every: 0,
+                repromote_after: 2,
+                ..SentinelConfig::default()
+            }),
+            ..CoordinatorConfig::default()
+        },
+        backend as Arc<dyn Backend>,
+        governor(Policy::Fixed(Config::new(9).unwrap()), pm),
+        pm.clone(),
+    );
+    let mut served = 0u64;
+    let mut failed = 0u64;
+    let mut unresolved = 0u64;
+    let mut demoted = false;
+    let mut repromoted = false;
+    // 2 failing windows -> rung 1, then: cooldown (2 windows, imposed
+    // by the demotion setback), streak (2 windows), probe.  12 windows
+    // is comfortably past that schedule.
+    for &x in xs.iter().cycle().take(12) {
+        match bounded_classify(&coord, x) {
+            (Some(_), true) => served += 1,
+            (None, true) => failed += 1,
+            (_, false) => unresolved += 1,
+        }
+        demoted |= coord.degrade_level() >= 1;
+        repromoted |= demoted && coord.degrade_level() == 0;
+        if repromoted {
+            break;
+        }
+    }
+    let sent = coord.sentinel().unwrap();
+    let repromotions = sent.counters.repromotions.load(Ordering::Relaxed);
+    let probe_failures = sent.counters.probe_failures.load(Ordering::Relaxed);
+    let rung = coord.degrade_level();
+    let m = coord.shutdown();
+    AuditReport {
+        class: "ladder-repromote".into(),
+        scenario: "backend fails its first 2 windows (rung 1 demotion), then \
+                   serves faithfully; repromote_after 2"
+            .into(),
+        outcome: if unresolved > 0 {
+            AuditOutcome::Hung
+        } else if !demoted {
+            AuditOutcome::Silent // the outage never even registered
+        } else if repromoted && rung == 0 && repromotions >= 1 {
+            AuditOutcome::DetectedRecovered
+        } else {
+            AuditOutcome::Unrecovered
+        },
+        detail: format!(
+            "demoted: {demoted}, final rung {rung}, repromotions {repromotions}, \
+             probe failures {probe_failures}, degradations {}, \
+             {served} served / {failed} failed-loudly replies",
+            m.degradations
+        ),
+        replies: served + failed + unresolved,
+        unresolved,
+        estimate: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(outcome: AuditOutcome, estimate: Option<EstimateCheck>) -> AuditReport {
+        AuditReport {
+            class: "t".into(),
+            scenario: "s".into(),
+            outcome,
+            detail: "d".into(),
+            replies: 1,
+            unresolved: 0,
+            estimate,
+        }
+    }
+
+    #[test]
+    fn outcome_vocabulary() {
+        assert!(AuditOutcome::Clean.resolved());
+        assert!(AuditOutcome::DetectedRecovered.resolved());
+        for bad in [
+            AuditOutcome::Unrecovered,
+            AuditOutcome::Silent,
+            AuditOutcome::Hung,
+        ] {
+            assert!(!bad.resolved(), "{} must fail the gate", bad.as_str());
+        }
+    }
+
+    #[test]
+    fn gate_predicate_checks_outcome_unresolved_and_estimate() {
+        let ok = CampaignReport {
+            seed: 1,
+            classes: vec![
+                report(AuditOutcome::Clean, None),
+                report(AuditOutcome::DetectedRecovered, None),
+            ],
+        };
+        assert!(ok.all_resolved());
+        let mut hung = ok.clone();
+        hung.classes[0].unresolved = 1;
+        assert!(!hung.all_resolved(), "unresolved replies fail the gate");
+        let bad_estimate = CampaignReport {
+            seed: 1,
+            classes: vec![report(
+                AuditOutcome::Clean,
+                Some(EstimateCheck {
+                    observed: 0.4,
+                    predicted: 0.1,
+                    tolerance: 0.05,
+                }),
+            )],
+        };
+        assert!(!bad_estimate.all_resolved(), "estimate drift fails the gate");
+    }
+
+    #[test]
+    fn json_document_shape() {
+        let rep = CampaignReport {
+            seed: 42,
+            classes: vec![
+                report(
+                    AuditOutcome::Clean,
+                    Some(EstimateCheck {
+                        observed: 0.10,
+                        predicted: 0.12,
+                        tolerance: 0.05,
+                    }),
+                ),
+                report(AuditOutcome::DetectedRecovered, None),
+            ],
+        };
+        let j = rep.to_json();
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("sentinel"));
+        let classes = j.get("classes").and_then(Json::as_arr).unwrap();
+        assert_eq!(classes.len(), 2);
+        let est = classes[0].get("estimate").expect("estimate present");
+        assert_eq!(est.get("observed").and_then(Json::as_f64), Some(0.10));
+        assert!(classes[1].get("estimate").is_none(), "no estimate field");
+        let summary = j.get("summary").and_then(Json::as_obj).unwrap();
+        assert_eq!(summary["clean"].as_i64(), Some(1));
+        assert_eq!(summary["detected_recovered"].as_i64(), Some(1));
+        assert_eq!(summary["total"].as_i64(), Some(2));
+    }
+}

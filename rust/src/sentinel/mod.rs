@@ -1,0 +1,731 @@
+//! Online accuracy-integrity sentinel for the serve stack.
+//!
+//! The offline `AccuracyTable` / sensitivity sweep promises an accuracy
+//! cost for every schedule, but nothing at runtime *measures* the error
+//! the approximate MACs actually introduce — a corrupted signed table
+//! or an out-of-distribution traffic mix silently voids the accuracy
+//! side of the power trade.  This module closes that loop with three
+//! cooperating mechanisms, all off the request hot path:
+//!
+//! 1. **Shadow sampling** ([`shadow_selects`], [`DisagreeEstimator`]):
+//!    a seeded splitmix64 hash deterministically picks 1-in-N admitted
+//!    requests; after their replies are sent, the worker re-executes
+//!    them under the uniform accurate schedule and feeds
+//!    approximate-vs-accurate prediction disagreement into a streaming
+//!    estimator.  A Wilson score interval (z = 1.96) turns the raw
+//!    rate into a confidence statement, so a breach of the accuracy
+//!    SLO is only declared when the *lower* bound clears it — one
+//!    unlucky sample cannot trip the governor.
+//!
+//! 2. **Table scrubbing** ([`TableScrubber`]): every resident
+//!    [`SignedMulTable`](crate::amul::SignedMulTable) is fingerprinted
+//!    (FNV-1a 64) at first sight and re-verified between batch windows.
+//!    A mismatch quarantines the configuration, rebuilds the table from
+//!    its magnitude source, and re-admits it only when the rebuild
+//!    matches the reference digest *and* re-proves the
+//!    `analysis::range` kernel invariants; otherwise the governor is
+//!    pinned accurate so the poisoned configuration is never consulted
+//!    again.  Replies keep flowing throughout — the swap uses
+//!    [`MulTables::replace_signed`], which retires (never frees) the
+//!    displaced table under live references.
+//!
+//! 3. **Recovery** ([`Repromoter`]): clean-window streaks drive the
+//!    *upward* direction the PR-9 resilience machinery lacked.  After K
+//!    consecutive clean windows the caller is told a golden-vector
+//!    probe is due; a passing probe re-promotes a degraded health-ladder
+//!    rung (or steps a guardband-capped governor back along the
+//!    frontier), a failing probe doubles the cooldown before the next
+//!    attempt.  Degradation stops being one-way.
+//!
+//! The sentinel is per-coordinator state (no process globals — drills
+//! compose with the chaos campaign), and a disabled sentinel costs the
+//! serve path a single `Option` check per window.  Clean runs are
+//! bit-exact with the sentinel off: sampling, digesting and probing
+//! only ever *read* the serving state, and the one mutating action
+//! (table replacement) is reachable only after a digest mismatch.
+
+pub mod campaign;
+
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::amul::{Config, MulTables, N_CONFIGS};
+
+/// splitmix64 finalizer: the sampling hash.  Statistically uniform on
+/// consecutive ids and fully determined by (seed, id), so the sampled
+/// subset is independent of worker interleaving and identical across
+/// replayed runs.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic 1-in-`rate` shadow selection for an admitted request.
+/// `rate == 0` disables sampling; `rate == 1` shadows everything.
+pub fn shadow_selects(seed: u64, rate: u32, request_id: u64) -> bool {
+    rate > 0 && mix64(seed ^ request_id) % rate as u64 == 0
+}
+
+/// Streaming approximate-vs-accurate disagreement estimate with a
+/// Wilson score interval.
+///
+/// The Wilson interval is the right tool for a small-sample streaming
+/// proportion: unlike the normal approximation it never leaves [0, 1]
+/// and stays calibrated at p near 0 — exactly where a healthy serve
+/// run lives.
+#[derive(Debug, Clone, Default)]
+pub struct DisagreeEstimator {
+    samples: u64,
+    disagreements: u64,
+}
+
+impl DisagreeEstimator {
+    /// 95% two-sided confidence (the interval the breach test uses).
+    pub const Z: f64 = 1.96;
+
+    pub fn new() -> DisagreeEstimator {
+        DisagreeEstimator::default()
+    }
+
+    /// Feed one shadow comparison.
+    pub fn record(&mut self, disagreed: bool) {
+        self.samples += 1;
+        self.disagreements += u64::from(disagreed);
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    pub fn disagreements(&self) -> u64 {
+        self.disagreements
+    }
+
+    /// Point estimate of the disagreement rate (0 before any sample).
+    pub fn rate(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.disagreements as f64 / self.samples as f64
+        }
+    }
+
+    /// Wilson score interval (lower, upper) at [`Self::Z`].  With no
+    /// samples the estimate is vacuous: (0, 1).
+    pub fn wilson(&self) -> (f64, f64) {
+        if self.samples == 0 {
+            return (0.0, 1.0);
+        }
+        let n = self.samples as f64;
+        let p = self.rate();
+        let z2 = Self::Z * Self::Z;
+        let denom = 1.0 + z2 / n;
+        let center = p + z2 / (2.0 * n);
+        let half = Self::Z * ((p * (1.0 - p) + z2 / (4.0 * n)) / n).sqrt();
+        (
+            ((center - half) / denom).max(0.0),
+            ((center + half) / denom).min(1.0),
+        )
+    }
+
+    /// A *confident* SLO breach: the Wilson lower bound clears the
+    /// tolerated disagreement rate.  Conservative by construction — a
+    /// run of unlucky samples widens the interval instead of tripping
+    /// the governor.
+    pub fn confident_breach(&self, slo: f64) -> bool {
+        self.samples > 0 && self.wilson().0 > slo
+    }
+
+    /// Forget the stream (after a breach was acted on, or after the
+    /// schedule changed and old samples describe a different trade).
+    pub fn reset(&mut self) {
+        *self = DisagreeEstimator::default();
+    }
+}
+
+/// What the scrubber did with one configuration on one pass.
+#[derive(Debug, Default)]
+pub struct ScrubReport {
+    /// Resident tables whose digest matched (or were fingerprinted for
+    /// the first time).
+    pub verified: usize,
+    /// Configurations whose resident digest mismatched this pass.
+    pub quarantined: Vec<Config>,
+    /// Quarantined configurations whose rebuild matched the reference
+    /// digest and re-proved the kernel invariants — swapped back in.
+    pub readmitted: Vec<Config>,
+    /// Quarantined configurations whose rebuild came back *different*
+    /// from the verified reference (the fault environment persists) or
+    /// failed re-validation — the caller must pin the governor
+    /// accurate.
+    pub pinned: Vec<Config>,
+}
+
+impl ScrubReport {
+    /// Anything beyond routine verification happened.
+    pub fn eventful(&self) -> bool {
+        !self.quarantined.is_empty()
+    }
+}
+
+/// Digest bookkeeping + quarantine/rebuild/re-admit state for the
+/// resident signed tables of one store.
+#[derive(Debug)]
+pub struct TableScrubber {
+    reference: [Option<u64>; N_CONFIGS],
+    quarantined: [bool; N_CONFIGS],
+}
+
+impl Default for TableScrubber {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TableScrubber {
+    pub fn new() -> TableScrubber {
+        TableScrubber {
+            reference: [None; N_CONFIGS],
+            quarantined: [false; N_CONFIGS],
+        }
+    }
+
+    /// One scrub pass: fingerprint newly resident tables, re-verify
+    /// known ones, and run the quarantine → rebuild → re-validate →
+    /// re-admit-or-pin protocol on any mismatch.  Never fails a reply:
+    /// everything here happens between batch windows, and the swap
+    /// keeps outstanding references valid.
+    pub fn scrub(&mut self, tables: &MulTables) -> ScrubReport {
+        let mut rep = ScrubReport::default();
+        for cfg in Config::all() {
+            let Some(resident) = tables.signed_if_built(cfg) else {
+                continue;
+            };
+            let digest = resident.digest();
+            match self.reference[cfg.index()] {
+                None => {
+                    // first sight: this build is the trusted reference
+                    self.reference[cfg.index()] = Some(digest);
+                    rep.verified += 1;
+                }
+                Some(reference) if reference == digest => {
+                    rep.verified += 1;
+                }
+                Some(reference) => {
+                    self.quarantined[cfg.index()] = true;
+                    rep.quarantined.push(cfg);
+                    let rebuilt = tables.rebuild_signed(cfg);
+                    if rebuilt.digest() == reference {
+                        tables.replace_signed(rebuilt);
+                        if crate::analysis::range::signed_table_proved(tables, cfg) {
+                            self.quarantined[cfg.index()] = false;
+                            rep.readmitted.push(cfg);
+                        } else {
+                            rep.pinned.push(cfg);
+                        }
+                    } else {
+                        // reloading "from ROM" did not reproduce the
+                        // verified bits: the fault environment is
+                        // persistent, not a one-shot upset
+                        rep.pinned.push(cfg);
+                    }
+                }
+            }
+        }
+        rep
+    }
+
+    /// Any configuration currently quarantined (blocks re-promotion).
+    pub fn any_quarantined(&self) -> bool {
+        self.quarantined.iter().any(|&q| q)
+    }
+}
+
+/// Clean-window-streak recovery state machine: decides when a
+/// golden-vector probe (or a governor step back toward approximate) is
+/// due, with a cooldown that doubles on every setback so a flapping
+/// fault cannot oscillate the ladder.
+#[derive(Debug)]
+pub struct Repromoter {
+    /// Clean windows required before a probe.
+    required: u64,
+    /// Extra clean windows imposed after a setback; doubles each time.
+    cooldown: u64,
+    /// Remaining cooldown windows before the streak may grow again.
+    wait: u64,
+    streak: u64,
+}
+
+impl Repromoter {
+    pub fn new(required: u64) -> Repromoter {
+        let required = required.max(1);
+        Repromoter {
+            required,
+            cooldown: required,
+            wait: 0,
+            streak: 0,
+        }
+    }
+
+    /// A clean window passed.  Returns true when the streak has
+    /// reached the threshold and a recovery probe is due.
+    pub fn on_clean_window(&mut self) -> bool {
+        if self.wait > 0 {
+            self.wait -= 1;
+            return false;
+        }
+        self.streak += 1;
+        self.streak >= self.required
+    }
+
+    /// A dirty window (failed execute, shadow disagreement, or a scrub
+    /// quarantine): the streak restarts.
+    pub fn on_dirty_window(&mut self) {
+        self.streak = 0;
+    }
+
+    /// A probe passed and a recovery step was taken; earn the next one
+    /// from scratch.
+    pub fn on_recovered(&mut self) {
+        self.streak = 0;
+    }
+
+    /// A probe failed, or a re-promoted rung was demoted again: back
+    /// off for the current cooldown, then double it.
+    pub fn on_setback(&mut self) {
+        self.streak = 0;
+        self.wait = self.cooldown;
+        self.cooldown = self.cooldown.saturating_mul(2);
+    }
+
+    /// The cooldown the *next* setback would impose (observability +
+    /// tests).
+    pub fn cooldown(&self) -> u64 {
+        self.cooldown
+    }
+
+    pub fn streak(&self) -> u64 {
+        self.streak
+    }
+}
+
+/// Per-coordinator sentinel configuration.  `CoordinatorConfig` holds
+/// an `Option<SentinelConfig>`; `None` keeps every hook compiled out
+/// of the window path except one pointer-is-none check.
+#[derive(Debug, Clone)]
+pub struct SentinelConfig {
+    /// Sampling-hash seed (also seeds the golden probe vector).
+    pub seed: u64,
+    /// Shadow 1-in-N sampling rate; 0 disables shadow sampling.
+    pub shadow_rate: u32,
+    /// Tolerated disagreement rate; a confident (Wilson lower bound)
+    /// breach steps the governor toward accurate.  `None` = estimate
+    /// only, never act.
+    pub accuracy_slo: Option<f64>,
+    /// Scrub the resident tables every this many batch windows; 0
+    /// disables scrubbing.
+    pub scrub_every: u64,
+    /// Clean windows required before a recovery probe (K).
+    pub repromote_after: u64,
+    /// The offline `AccuracyTable` disagreement prediction for the
+    /// active schedule (accurate-mode accuracy minus schedule
+    /// accuracy), cross-checked against the online estimate in the
+    /// shutdown report and the audit campaign.
+    pub predicted_disagreement: Option<f64>,
+}
+
+impl Default for SentinelConfig {
+    fn default() -> Self {
+        SentinelConfig {
+            seed: 0xACC0_11AD,
+            shadow_rate: 0,
+            accuracy_slo: None,
+            scrub_every: 32,
+            repromote_after: 8,
+            predicted_disagreement: None,
+        }
+    }
+}
+
+/// Monotonic audit counters, surfaced through `MetricsSnapshot` and
+/// the serve shutdown report.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub shadow_samples: AtomicU64,
+    pub disagreements: AtomicU64,
+    pub accuracy_breaches: AtomicU64,
+    pub scrubs: AtomicU64,
+    pub quarantines: AtomicU64,
+    pub probe_failures: AtomicU64,
+    pub repromotions: AtomicU64,
+}
+
+/// A point-in-time view of the disagreement estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct Estimate {
+    pub samples: u64,
+    pub disagreements: u64,
+    pub rate: f64,
+    pub lower: f64,
+    pub upper: f64,
+    pub predicted: Option<f64>,
+}
+
+struct Inner {
+    estimator: DisagreeEstimator,
+    scrubber: TableScrubber,
+    repromoter: Repromoter,
+    windows: u64,
+}
+
+/// The per-coordinator sentinel: shared by the worker threads, locked
+/// only at window boundaries (never per request).
+pub struct Sentinel {
+    cfg: SentinelConfig,
+    pub counters: Counters,
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for Sentinel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Sentinel").field("cfg", &self.cfg).finish()
+    }
+}
+
+impl Sentinel {
+    /// Samples required before a confident breach may be declared.
+    /// The Wilson lower bound of a single disagreeing sample is
+    /// already ~0.21, which would trip any production-tight SLO off
+    /// one observation; the floor makes "confident" mean both a
+    /// cleared interval *and* a minimally informative stream.
+    pub const MIN_BREACH_SAMPLES: u64 = 16;
+
+    pub fn new(cfg: SentinelConfig) -> Sentinel {
+        let repromote_after = cfg.repromote_after;
+        Sentinel {
+            cfg,
+            counters: Counters::default(),
+            inner: Mutex::new(Inner {
+                estimator: DisagreeEstimator::new(),
+                scrubber: TableScrubber::new(),
+                repromoter: Repromoter::new(repromote_after),
+                windows: 0,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &SentinelConfig {
+        &self.cfg
+    }
+
+    fn inner(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Should this admitted request be shadow re-executed?
+    pub fn selects(&self, request_id: u64) -> bool {
+        shadow_selects(self.cfg.seed, self.cfg.shadow_rate, request_id)
+    }
+
+    /// Feed one window's shadow comparisons (served prediction vs
+    /// accurate-mode re-execution).  Returns `(disagreed_any, breach)`;
+    /// on a confident SLO breach the estimator resets so the samples
+    /// that triggered the action are not counted against the *next*
+    /// (more accurate) schedule.
+    pub fn record_shadow(&self, comparisons: &[(u16, u16)]) -> (bool, bool) {
+        if comparisons.is_empty() {
+            return (false, false);
+        }
+        let mut inner = self.inner();
+        let mut any = false;
+        for &(served, accurate) in comparisons {
+            let disagreed = served != accurate;
+            any |= disagreed;
+            inner.estimator.record(disagreed);
+            self.counters.shadow_samples.fetch_add(1, Ordering::Relaxed);
+            if disagreed {
+                self.counters.disagreements.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let breach = self.cfg.accuracy_slo.is_some_and(|slo| {
+            inner.estimator.samples() >= Self::MIN_BREACH_SAMPLES
+                && inner.estimator.confident_breach(slo)
+        });
+        if breach {
+            self.counters
+                .accuracy_breaches
+                .fetch_add(1, Ordering::Relaxed);
+            inner.estimator.reset();
+        }
+        (any, breach)
+    }
+
+    /// Window-boundary bookkeeping.  Call once per served window with
+    /// its cleanliness verdict; returns `(scrub_due, probe_due)`.
+    pub fn on_window(&self, clean: bool) -> (bool, bool) {
+        let mut inner = self.inner();
+        inner.windows += 1;
+        let scrub_due =
+            self.cfg.scrub_every > 0 && inner.windows % self.cfg.scrub_every == 0;
+        let probe_due = if clean {
+            let due = inner.repromoter.on_clean_window();
+            due && !inner.scrubber.any_quarantined()
+        } else {
+            inner.repromoter.on_dirty_window();
+            false
+        };
+        (scrub_due, probe_due)
+    }
+
+    /// Run one scrub pass over the store (between windows, off the
+    /// reply path).  Counter updates happen here so callers only have
+    /// to act on the report.
+    pub fn scrub(&self, tables: &MulTables) -> ScrubReport {
+        let mut inner = self.inner();
+        let rep = inner.scrubber.scrub(tables);
+        self.counters.scrubs.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .quarantines
+            .fetch_add(rep.quarantined.len() as u64, Ordering::Relaxed);
+        if rep.eventful() {
+            // corrupted bits may have leaked into recent shadow
+            // comparisons; start the estimate over on clean tables
+            inner.estimator.reset();
+            inner.repromoter.on_dirty_window();
+        }
+        rep
+    }
+
+    /// A recovery probe passed and the step was taken.
+    pub fn probe_passed(&self) {
+        self.counters.repromotions.fetch_add(1, Ordering::Relaxed);
+        self.inner().repromoter.on_recovered();
+    }
+
+    /// A recovery step that needs no probe was taken (a governor cap
+    /// stepped back along the frontier): the next step must be earned
+    /// from a fresh streak, but no rung was re-admitted so the
+    /// repromotion counter does not move.
+    pub fn step_taken(&self) {
+        self.inner().repromoter.on_recovered();
+    }
+
+    /// A recovery probe failed: back off with a doubled cooldown.
+    pub fn probe_failed(&self) {
+        self.counters.probe_failures.fetch_add(1, Ordering::Relaxed);
+        self.inner().repromoter.on_setback();
+    }
+
+    /// The serve stack demoted a rung (or re-tripped a guardband)
+    /// while the sentinel was watching: treat it as a setback so
+    /// repeated re-demotions double the cooldown.
+    pub fn on_setback(&self) {
+        self.inner().repromoter.on_setback();
+    }
+
+    /// Snapshot of the disagreement estimate (plus the offline
+    /// prediction it is cross-checked against).
+    pub fn estimate(&self) -> Estimate {
+        let inner = self.inner();
+        let (lower, upper) = inner.estimator.wilson();
+        Estimate {
+            samples: inner.estimator.samples(),
+            disagreements: inner.estimator.disagreements(),
+            rate: inner.estimator.rate(),
+            lower,
+            upper,
+            predicted: self.cfg.predicted_disagreement,
+        }
+    }
+
+    /// The golden probe input vector: fixed per sentinel seed so probe
+    /// outcomes are reproducible.
+    pub fn golden_vector(&self) -> [u8; crate::dataset::N_FEATURES] {
+        let mut rng = crate::util::rng::Pcg32::new(self.cfg.seed ^ 0x601d);
+        let mut x = [0u8; crate::dataset::N_FEATURES];
+        for v in x.iter_mut() {
+            *v = rng.below(128) as u8;
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_is_deterministic_and_near_rate() {
+        let picks = |seed: u64| -> Vec<u64> {
+            (0..100_000u64)
+                .filter(|&id| shadow_selects(seed, 16, id))
+                .collect()
+        };
+        let a = picks(7);
+        assert_eq!(a, picks(7), "same seed, same subset");
+        assert_ne!(a, picks(8), "different seed, different subset");
+        // 1-in-16 over 100k ids: expectation 6250, generous noise band
+        assert!((5500..7100).contains(&a.len()), "picked {}", a.len());
+        // rate 0 disables, rate 1 shadows everything
+        assert!(!shadow_selects(7, 0, 42));
+        assert!((0..100).all(|id| shadow_selects(7, 1, id)));
+    }
+
+    #[test]
+    fn wilson_interval_math() {
+        let mut e = DisagreeEstimator::new();
+        assert_eq!(e.wilson(), (0.0, 1.0), "no samples: vacuous interval");
+        assert!(!e.confident_breach(0.0));
+        for _ in 0..50 {
+            e.record(false);
+        }
+        let (lo, hi) = e.wilson();
+        assert_eq!(lo, 0.0, "zero observed disagreement pins the lower bound");
+        assert!(hi > 0.0 && hi < 0.12, "upper bound {hi}");
+        // 5/50 disagreement: interval brackets the point estimate
+        for _ in 0..45 {
+            e.record(false);
+        }
+        for _ in 0..5 {
+            e.record(true);
+        }
+        assert_eq!(e.samples(), 100);
+        assert!((e.rate() - 0.05).abs() < 1e-12);
+        let (lo, hi) = e.wilson();
+        assert!(lo > 0.0 && lo < 0.05, "lower {lo}");
+        assert!(hi > 0.05 && hi < 0.15, "upper {hi}");
+    }
+
+    #[test]
+    fn breach_needs_confidence_not_one_sample() {
+        let mut e = DisagreeEstimator::new();
+        e.record(true);
+        // one disagreeing sample: rate 1.0 but the interval is wide
+        assert!(!e.confident_breach(0.30), "n=1 must not be confident");
+        for _ in 0..9 {
+            e.record(true);
+        }
+        assert!(e.confident_breach(0.30), "10/10 disagreement is confident");
+        // a clean stream never breaches any non-negative slo
+        let mut clean = DisagreeEstimator::new();
+        for _ in 0..10_000 {
+            clean.record(false);
+        }
+        assert!(!clean.confident_breach(0.0));
+    }
+
+    #[test]
+    fn scrubber_detects_and_readmits_a_poisoned_table() {
+        let tables = MulTables::build();
+        let cfg = Config::new(9).unwrap();
+        tables.signed(cfg);
+        let mut s = TableScrubber::new();
+        let rep = s.scrub(&tables);
+        assert_eq!(rep.verified, 1);
+        assert!(!rep.eventful());
+        // clean re-scrub: still nothing
+        assert!(!s.scrub(&tables).eventful());
+        // mid-life upset: one bit flips in the resident table
+        assert!(crate::chaos::poison_resident_table(&tables, cfg, 33, 77, 4));
+        let rep = s.scrub(&tables);
+        assert_eq!(rep.quarantined, vec![cfg]);
+        assert_eq!(rep.readmitted, vec![cfg], "clean rebuild re-admits");
+        assert!(rep.pinned.is_empty());
+        assert!(!s.any_quarantined());
+        // the resident table is clean again
+        assert!(!s.scrub(&tables).eventful());
+        let clean = MulTables::build();
+        assert_eq!(
+            tables.signed(cfg).digest(),
+            clean.signed(cfg).digest(),
+            "recovered table is bit-identical to a clean build"
+        );
+    }
+
+    #[test]
+    fn scrubber_pins_when_the_reload_cannot_match_the_reference() {
+        // simulate a persistent fault environment with no global chaos
+        // state: fingerprint a *poisoned* resident table as the
+        // reference, then swap in a clean build — the "mismatch" scrub
+        // rebuild now reproduces clean bits, which differ from the
+        // reference, so the config must be pinned, not re-admitted.
+        let tables = MulTables::build();
+        let cfg = Config::new(5).unwrap();
+        tables.signed(cfg);
+        assert!(crate::chaos::poison_resident_table(&tables, cfg, 1, 2, 3));
+        let mut s = TableScrubber::new();
+        s.scrub(&tables); // reference = poisoned digest
+        tables.replace_signed(tables.rebuild_signed(cfg));
+        let rep = s.scrub(&tables);
+        assert_eq!(rep.quarantined, vec![cfg]);
+        assert!(rep.readmitted.is_empty());
+        assert_eq!(rep.pinned, vec![cfg]);
+        assert!(s.any_quarantined(), "a pinned config stays quarantined");
+    }
+
+    #[test]
+    fn repromoter_cooldown_doubles_on_setbacks() {
+        let mut r = Repromoter::new(3);
+        assert!(!r.on_clean_window());
+        assert!(!r.on_clean_window());
+        assert!(r.on_clean_window(), "K=3 clean windows earn a probe");
+        r.on_recovered();
+        assert_eq!(r.streak(), 0);
+        // first setback: wait 3 windows, next cooldown 6
+        r.on_setback();
+        assert_eq!(r.cooldown(), 6);
+        for _ in 0..3 {
+            assert!(!r.on_clean_window(), "cooldown windows do not count");
+        }
+        assert_eq!(r.streak(), 0);
+        let probes: Vec<bool> = (0..3).map(|_| r.on_clean_window()).collect();
+        assert_eq!(probes, vec![false, false, true]);
+        // second setback doubles again and a dirty window resets streaks
+        r.on_setback();
+        assert_eq!(r.cooldown(), 12);
+        for _ in 0..6 {
+            r.on_clean_window();
+        }
+        r.on_dirty_window();
+        assert_eq!(r.streak(), 0);
+    }
+
+    #[test]
+    fn sentinel_window_flow_and_counters() {
+        let s = Sentinel::new(SentinelConfig {
+            shadow_rate: 4,
+            accuracy_slo: Some(0.05),
+            scrub_every: 2,
+            repromote_after: 2,
+            ..SentinelConfig::default()
+        });
+        // shadow comparisons: disagreements accumulate to a breach
+        let (any, breach) = s.record_shadow(&[(1, 1), (2, 2)]);
+        assert!(!any && !breach);
+        let mut breached = false;
+        for _ in 0..16 {
+            let (_, b) = s.record_shadow(&[(3, 7)]);
+            if b {
+                breached = true;
+                break;
+            }
+        }
+        assert!(breached, "persistent disagreement must breach the slo");
+        assert_eq!(s.counters.accuracy_breaches.load(Ordering::Relaxed), 1);
+        assert!(s.counters.shadow_samples.load(Ordering::Relaxed) >= 3);
+        // estimator reset after the breach
+        assert_eq!(s.estimate().samples, 0);
+        // window cadence: scrub every 2, probe after 2 clean windows
+        let (scrub1, probe1) = s.on_window(true);
+        assert!(!scrub1 && !probe1);
+        let (scrub2, probe2) = s.on_window(true);
+        assert!(scrub2, "second window is a scrub boundary");
+        assert!(probe2, "second clean window earns a probe");
+        s.probe_failed();
+        assert_eq!(s.counters.probe_failures.load(Ordering::Relaxed), 1);
+        // golden vector is stable per seed
+        assert_eq!(s.golden_vector(), s.golden_vector());
+    }
+}

@@ -178,6 +178,91 @@ impl Backend for StallingBackend {
     }
 }
 
+/// Serves every batch successfully but *corrupts* every `n`-th
+/// prediction (1-based over the cumulative prediction stream): the
+/// silent-accuracy-drift double behind the sentinel's shadow-sampling
+/// tests and the `ecmac sentinel` drift audit class.  Unlike
+/// [`FlakyBackend`] nothing fails loudly — the replies look healthy,
+/// and only an accurate-mode re-execution can tell them apart.  The
+/// drifted prediction is rotated by one class (`(pred + 1) % outputs`),
+/// so it is always a *valid* but wrong label; logits are left alone.
+/// Accurate-schedule batches are served faithfully so the same double
+/// can also answer the sentinel's shadow/probe re-executions.
+pub struct DriftingBackend {
+    inner: Arc<dyn Backend>,
+    n: std::sync::atomic::AtomicU64,
+    served: std::sync::atomic::AtomicU64,
+}
+
+impl DriftingBackend {
+    pub fn wrap(inner: Arc<dyn Backend>, every_nth: u64) -> DriftingBackend {
+        assert!(every_nth >= 1, "drift period must be at least 1");
+        DriftingBackend {
+            inner,
+            n: std::sync::atomic::AtomicU64::new(every_nth),
+            served: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Change the drift period mid-run; `0` stops drifting entirely —
+    /// how the sentinel campaign models a *transient* accuracy episode
+    /// that later clears.
+    pub fn set_period(&self, every_nth: u64) {
+        self.n.store(every_nth, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Predictions served so far (drifted and faithful).
+    pub fn served(&self) -> u64 {
+        self.served.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl Backend for DriftingBackend {
+    fn execute(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        let mut out = self.inner.execute(xs, sched)?;
+        if sched.as_uniform() == Some(crate::amul::Config::ACCURATE) {
+            // the accurate path is the sentinel's reference; a double
+            // that drifted it too would hide the very disagreement the
+            // shadow audit exists to measure
+            return Ok(out);
+        }
+        let outputs = self.inner.topology().outputs().max(1) as u8;
+        let first = self
+            .served
+            .fetch_add(out.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        let n = self.n.load(std::sync::atomic::Ordering::Relaxed);
+        if n == 0 {
+            return Ok(out);
+        }
+        for (i, (_, pred)) in out.iter_mut().enumerate() {
+            if (first + i as u64 + 1) % n == 0 {
+                *pred = (*pred + 1) % outputs;
+            }
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "drifting"
+    }
+
+    fn topology(&self) -> &Topology {
+        self.inner.topology()
+    }
+
+    fn prewarm(&self, sched: &ConfigSchedule) {
+        self.inner.prewarm(sched);
+    }
+
+    fn tables(&self) -> Option<&crate::amul::MulTables> {
+        self.inner.tables()
+    }
+}
+
 /// Panics on every batch: the crash double for shard-isolation and
 /// no-deadlock-under-failure tests.
 pub struct PanickingBackend {

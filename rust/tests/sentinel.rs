@@ -1,0 +1,425 @@
+//! Integration suite for the online accuracy sentinel — the contracts
+//! the `ecmac sentinel` CI gate and the serve stack rely on:
+//!
+//! * silent prediction drift is caught by shadow sampling within a
+//!   pinned sample budget, and once the episode clears the governor
+//!   cap steps back out (a transient fault does not permanently
+//!   forfeit the power savings);
+//! * a resident signed table poisoned mid-serve is quarantined,
+//!   rebuilt and re-admitted by the periodic scrub with **zero**
+//!   failed replies;
+//! * the health ladder re-promotes a demoted rung after a clean
+//!   streak and a passing golden-vector probe, and the recovery
+//!   cooldown doubles on repeated setbacks;
+//! * a clean sentinel-enabled run is bit-exact with a
+//!   sentinel-disabled run on both the row-sharded and pipelined
+//!   execution paths;
+//! * the scripted audit campaign resolves every class.
+//!
+//! Unlike the chaos suite nothing here mutates process-global fault
+//! state (the one injection targets a specific coordinator's resident
+//! store), so the tests run in parallel without a binary-wide lock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ecmac::amul::{Config, ConfigSchedule};
+use ecmac::coordinator::governor::{AccuracyTable, Governor, Policy};
+use ecmac::coordinator::server::{
+    Backend, Coordinator, CoordinatorConfig, ExecutionMode, NativeBackend,
+};
+use ecmac::coordinator::{ClassifyResponse, ReplyStatus};
+use ecmac::datapath::Network;
+use ecmac::dataset::N_FEATURES;
+use ecmac::power::{MultiplierEnergyProfile, PowerModel};
+use ecmac::sentinel::{self, Repromoter, SentinelConfig};
+use ecmac::testkit::doubles::DriftingBackend;
+use ecmac::util::rng::Pcg32;
+use ecmac::weights::QuantWeights;
+
+fn net(seed: u64) -> Network {
+    let mut rng = Pcg32::new(seed);
+    let mut gen = |n: usize| -> Vec<u8> { (0..n).map(|_| rng.below(128) as u8).collect() };
+    Network::new(QuantWeights::two_layer(
+        gen(62 * 30),
+        gen(30),
+        gen(30 * 10),
+        gen(10),
+    ))
+}
+
+fn images(seed: u64, n: usize) -> Vec<[u8; N_FEATURES]> {
+    let mut rng = Pcg32::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut x = [0u8; N_FEATURES];
+            for v in x.iter_mut() {
+                *v = rng.below(128) as u8;
+            }
+            x
+        })
+        .collect()
+}
+
+fn power_model() -> PowerModel {
+    PowerModel::calibrate(MultiplierEnergyProfile::measure_synthetic(500, 3))
+        .expect("synthetic power model")
+}
+
+fn governor(policy: Policy, pm: &PowerModel) -> Governor {
+    let acc = AccuracyTable::new(vec![0.9; ecmac::amul::N_CONFIGS]);
+    Governor::new(policy, pm, &acc)
+}
+
+/// One request, bounded wait; panics on a hung reply (every test here
+/// requires full resolution).
+fn classify(coord: &Coordinator, x: [u8; N_FEATURES]) -> Option<ClassifyResponse> {
+    let reply = coord.try_submit(x).expect("intake open, queue empty");
+    match reply.recv_timeout(Duration::from_secs(10)) {
+        Ok(Some(resp)) => Some(resp),
+        Err(()) => None,
+        Ok(None) => panic!("reply did not resolve within the bound"),
+    }
+}
+
+#[test]
+fn drift_is_caught_within_the_sample_budget_and_savings_recover() {
+    const SAMPLE_BUDGET: u64 = 160;
+    let cfg = Config::new(12).unwrap();
+    let sched = ConfigSchedule::uniform(cfg);
+    let pm = power_model();
+    let inner = Arc::new(NativeBackend { network: net(0x5e27) });
+    let drift = Arc::new(DriftingBackend::wrap(inner, 3));
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            sentinel: Some(SentinelConfig {
+                shadow_rate: 1,
+                // slo far below the ~1/3 drifted disagreement, above
+                // the approximation's own (clean-run) disagreement
+                accuracy_slo: Some(0.15),
+                scrub_every: 0,
+                repromote_after: 2,
+                ..SentinelConfig::default()
+            }),
+            ..CoordinatorConfig::default()
+        },
+        Arc::clone(&drift) as Arc<dyn Backend>,
+        governor(Policy::Fixed(cfg), &pm),
+        pm.clone(),
+    );
+    let xs = images(0xD21F7, 32);
+
+    // phase 1: every 3rd prediction silently corrupted; the shadow
+    // stream must declare a confident breach within the budget
+    let mut samples_at_detect = 0u64;
+    let mut pool = xs.iter().cycle();
+    loop {
+        let sent = coord.sentinel().unwrap();
+        let samples = sent.counters.shadow_samples.load(Ordering::Relaxed);
+        if sent.counters.accuracy_breaches.load(Ordering::Relaxed) >= 1 {
+            samples_at_detect = samples;
+            break;
+        }
+        assert!(
+            samples < SAMPLE_BUDGET,
+            "no breach after {samples} shadow samples (budget {SAMPLE_BUDGET})"
+        );
+        classify(&coord, *pool.next().unwrap());
+    }
+    assert!(samples_at_detect >= sentinel::Sentinel::MIN_BREACH_SAMPLES);
+    assert_ne!(
+        coord.current_schedule(),
+        sched,
+        "the breach must step the governor toward accurate"
+    );
+
+    // phase 2: the episode clears; clean-window streaks must walk the
+    // cap back out and restore the original operating point, so the
+    // transient fault does not permanently forfeit the power savings
+    drift.set_period(0);
+    let mut healed = false;
+    for &x in xs.iter().cycle().take(80) {
+        classify(&coord, x);
+        if coord.current_schedule() == sched {
+            healed = true;
+            break;
+        }
+    }
+    assert!(healed, "governor cap never stepped back to cfg {}", cfg.index());
+
+    let m = coord.shutdown();
+    assert!(m.accuracy_breaches >= 1);
+    assert!(m.shadow_samples <= SAMPLE_BUDGET + 80);
+    assert_eq!(m.backend_errors, 0, "drift never fails loudly");
+}
+
+#[test]
+fn poisoned_table_is_scrubbed_with_zero_failed_replies() {
+    let cfg = Config::new(9).unwrap();
+    let pm = power_model();
+    let backend = Arc::new(NativeBackend { network: net(0x7AB1E) });
+    let clean = net(0x7AB1E);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            sentinel: Some(SentinelConfig {
+                shadow_rate: 0,
+                scrub_every: 2,
+                ..SentinelConfig::default()
+            }),
+            ..CoordinatorConfig::default()
+        },
+        Arc::clone(&backend) as Arc<dyn Backend>,
+        governor(Policy::Fixed(cfg), &pm),
+        pm.clone(),
+    );
+    let xs = images(0x7AB1F, 12);
+
+    // clean windows fingerprint the resident tables as the reference
+    for &x in xs.iter().take(4) {
+        let r = classify(&coord, x).expect("healthy serve");
+        assert_eq!(r.status, ReplyStatus::Ok);
+    }
+    assert!(
+        ecmac::chaos::poison_resident_table(&backend.network.tables, cfg, 33, 77, 4),
+        "the serving table must be resident by now"
+    );
+    // replies keep flowing; a scrub boundary lands within these windows
+    for &x in xs.iter().take(10).skip(4) {
+        let r = classify(&coord, x).expect("scrub never fails a reply");
+        assert_eq!(r.status, ReplyStatus::Ok);
+    }
+    {
+        let sent = coord.sentinel().unwrap();
+        assert!(
+            sent.counters.quarantines.load(Ordering::Relaxed) >= 1,
+            "the flipped bit must be caught by the digest scrub"
+        );
+        assert!(sent.counters.scrubs.load(Ordering::Relaxed) >= 1);
+    }
+    // post-recovery: bit-exact with a never-poisoned network
+    for &x in xs.iter().take(12).skip(10) {
+        let r = classify(&coord, x).expect("recovered serve");
+        let reference = clean.forward(&x, cfg);
+        assert_eq!(r.pred, reference.pred);
+        assert_eq!(r.logits, reference.logits);
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.backend_errors, 0, "zero failed windows throughout");
+    assert!(m.quarantines >= 1);
+    assert_eq!(
+        backend.network.tables.signed(cfg).digest(),
+        clean.tables.signed(cfg).digest(),
+        "the re-admitted table is bit-identical to a clean build"
+    );
+}
+
+/// Fails its first `fail_first` windows, then serves faithfully — the
+/// transient-outage double for ladder re-promotion.
+struct FailFirstBackend {
+    inner: Arc<dyn Backend>,
+    fail_first: u64,
+    calls: AtomicU64,
+}
+
+impl Backend for FailFirstBackend {
+    fn execute(
+        &self,
+        xs: &[[u8; N_FEATURES]],
+        sched: &ConfigSchedule,
+    ) -> anyhow::Result<Vec<(Vec<i32>, u8)>> {
+        let call = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        if call <= self.fail_first {
+            anyhow::bail!("injected transient outage (window {call})");
+        }
+        self.inner.execute(xs, sched)
+    }
+
+    fn name(&self) -> &'static str {
+        "fail-first"
+    }
+
+    fn topology(&self) -> &ecmac::weights::Topology {
+        self.inner.topology()
+    }
+
+    fn prewarm(&self, sched: &ConfigSchedule) {
+        self.inner.prewarm(sched);
+    }
+}
+
+#[test]
+fn health_ladder_repromotes_after_a_clean_streak() {
+    let pm = power_model();
+    let inner = Arc::new(NativeBackend { network: net(0x1ADD) });
+    let backend = Arc::new(FailFirstBackend {
+        inner,
+        fail_first: 2,
+        calls: AtomicU64::new(0),
+    });
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            shards: 1,
+            execution: ExecutionMode::Pipelined,
+            sentinel: Some(SentinelConfig {
+                shadow_rate: 0,
+                scrub_every: 0,
+                repromote_after: 2,
+                ..SentinelConfig::default()
+            }),
+            ..CoordinatorConfig::default()
+        },
+        backend as Arc<dyn Backend>,
+        governor(Policy::Fixed(Config::new(9).unwrap()), &pm),
+        pm.clone(),
+    );
+    let xs = images(0x1ADE, 8);
+
+    let mut demoted = false;
+    let mut repromoted = false;
+    // 2 failing windows -> rung 1 + setback cooldown (2 windows), then
+    // a 2-window clean streak earns the golden probe: 12 is comfortable
+    for &x in xs.iter().cycle().take(12) {
+        let _ = classify(&coord, x);
+        demoted |= coord.degrade_level() >= 1;
+        repromoted |= demoted && coord.degrade_level() == 0;
+        if repromoted {
+            break;
+        }
+    }
+    assert!(demoted, "two failed windows must demote the ladder");
+    assert!(repromoted, "a clean streak + passing probe must re-admit the rung");
+    let repromotions = {
+        let sent = coord.sentinel().unwrap();
+        sent.counters.repromotions.load(Ordering::Relaxed)
+    };
+    assert!(repromotions >= 1, "the re-admission is counted");
+    let m = coord.shutdown();
+    assert!(m.degradations >= 1);
+    assert_eq!(m.repromotions, repromotions, "snapshot carries the counter");
+}
+
+#[test]
+fn setback_cooldown_doubles_on_repeated_redemotion() {
+    // the recovery state machine itself: each setback doubles the
+    // cooldown the next recovery attempt must sit out
+    let mut r = Repromoter::new(2);
+    assert_eq!(r.cooldown(), 2);
+    r.on_setback();
+    assert_eq!(r.cooldown(), 4, "first setback: next wait doubles");
+    // the imposed wait (2 windows) must elapse before the streak grows
+    assert!(!r.on_clean_window());
+    assert!(!r.on_clean_window());
+    assert!(!r.on_clean_window(), "streak 1 of 2");
+    assert!(r.on_clean_window(), "streak 2 of 2: probe due");
+    r.on_setback();
+    assert_eq!(r.cooldown(), 8, "repeated re-demotion keeps doubling");
+    // now 4 cooldown windows + 2 streak windows before the next probe
+    let due: Vec<bool> = (0..6).map(|_| r.on_clean_window()).collect();
+    assert_eq!(due, vec![false, false, false, false, false, true]);
+}
+
+#[test]
+fn clean_run_is_bit_exact_with_the_sentinel_disabled() {
+    let cfg = Config::new(9).unwrap();
+    let pm = power_model();
+    let xs = images(0xB17E, 24);
+    for execution in [ExecutionMode::RowSharded, ExecutionMode::Pipelined] {
+        let run = |sentinel: Option<SentinelConfig>| -> Vec<(u8, Vec<i32>)> {
+            let coord = Coordinator::start(
+                CoordinatorConfig {
+                    workers: 1,
+                    shards: 1,
+                    execution,
+                    sentinel,
+                    ..CoordinatorConfig::default()
+                },
+                Arc::new(NativeBackend { network: net(0xB17D) }) as Arc<dyn Backend>,
+                governor(Policy::Fixed(cfg), &pm),
+                pm.clone(),
+            );
+            let out: Vec<(u8, Vec<i32>)> = xs
+                .iter()
+                .map(|&x| {
+                    let r = classify(&coord, x).expect("clean serve");
+                    assert_eq!(r.status, ReplyStatus::Ok);
+                    (r.pred, r.logits)
+                })
+                .collect();
+            let m = coord.shutdown();
+            assert_eq!(m.backend_errors, 0);
+            assert_eq!(m.accuracy_breaches, 0, "a clean run must not breach");
+            assert_eq!(m.quarantines, 0, "a clean run must not quarantine");
+            out
+        };
+        // every hook armed: shadow everything, scrub every window,
+        // estimate-only slo cross-check
+        let audited = run(Some(SentinelConfig {
+            shadow_rate: 1,
+            accuracy_slo: Some(0.5),
+            scrub_every: 1,
+            repromote_after: 2,
+            ..SentinelConfig::default()
+        }));
+        let plain = run(None);
+        assert_eq!(audited, plain, "sentinel hooks must not perturb replies");
+        let reference = net(0xB17D);
+        for (x, (pred, logits)) in xs.iter().zip(&audited) {
+            let r = reference.forward(x, cfg);
+            assert_eq!(*pred, r.pred);
+            assert_eq!(*logits, r.logits);
+        }
+    }
+}
+
+#[test]
+fn campaign_resolves_every_audit_class() {
+    let report = sentinel::campaign::run_campaign(20260807);
+    assert_eq!(report.classes.len(), 4, "all scripted classes ran");
+    for c in &report.classes {
+        assert!(
+            c.outcome.resolved(),
+            "class {} ended {:?}: {}",
+            c.class,
+            c.outcome,
+            c.detail
+        );
+        assert_eq!(c.unresolved, 0, "class {} left replies unresolved", c.class);
+    }
+    assert!(report.all_resolved());
+
+    let by_name = |name: &str| {
+        report
+            .classes
+            .iter()
+            .find(|c| c.class == name)
+            .unwrap_or_else(|| panic!("class {name} missing"))
+    };
+    use ecmac::sentinel::campaign::AuditOutcome;
+    assert_eq!(by_name("clean-estimate").outcome, AuditOutcome::Clean);
+    assert!(
+        by_name("clean-estimate")
+            .estimate
+            .as_ref()
+            .expect("cross-check carried")
+            .within()
+    );
+    assert_eq!(by_name("drift-shadow").outcome, AuditOutcome::DetectedRecovered);
+    assert_eq!(by_name("table-scrub").outcome, AuditOutcome::DetectedRecovered);
+    assert_eq!(
+        by_name("ladder-repromote").outcome,
+        AuditOutcome::DetectedRecovered
+    );
+
+    let doc = report.to_json().to_string();
+    assert!(doc.contains("\"bench\":\"sentinel\""));
+    assert!(doc.contains("\"silent\":0"));
+    assert!(doc.contains("\"hung\":0"));
+    assert!(doc.contains("\"unrecovered\":0"));
+    assert!(doc.contains("\"total\":4"));
+}
